@@ -1,0 +1,117 @@
+//! Bench: Figure 1 — sMNIST robustness, EFLA vs DeltaNet.
+//!
+//! Trains the d=64 linear-attention classifier for both mixers at two
+//! learning rates (1e-4, 3e-3 — the paper's bottom/top rows), then sweeps
+//! the three corruption grids (dropout p, intensity scale, additive noise
+//! sigma) on held-out data and prints accuracy-vs-interference series.
+//!
+//! Expected shape (paper Fig. 1): EFLA degrades slower than DeltaNet on all
+//! three sweeps, most dramatically on intensity scaling, and the gap widens
+//! at the larger learning rate.
+//!
+//! Env knobs: EFLA_F1_STEPS (default 60), EFLA_F1_EVAL (default 2 batches
+//! of 32 per point).
+
+use efla::coordinator::experiments::{robustness_run, RobustnessResult};
+use efla::runtime::Runtime;
+use efla::util::bench::Table;
+use efla::util::json::{self, Json};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn result_json(r: &RobustnessResult) -> Json {
+    Json::obj(vec![
+        ("mixer", Json::Str(r.mixer.clone())),
+        ("lr", Json::Num(r.lr)),
+        ("clean_acc", Json::Num(r.clean_acc)),
+        (
+            "sweeps",
+            Json::Arr(
+                r.sweeps
+                    .iter()
+                    .map(|(k, x, a)| {
+                        Json::obj(vec![
+                            ("sweep", Json::Str(k.clone())),
+                            ("x", Json::Num(*x)),
+                            ("acc", Json::Num(*a)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "train_curve",
+            Json::Arr(
+                r.train_curve
+                    .iter()
+                    .map(|&(s, l)| Json::arr_f64(&[s as f64, l as f64]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn main() {
+    efla::util::logging::init();
+    let steps = env_u64("EFLA_F1_STEPS", 24);
+    let eval_batches = env_u64("EFLA_F1_EVAL", 2) as usize;
+    let rt = Runtime::open(std::path::Path::new("artifacts")).expect("open artifacts");
+    for m in ["efla", "deltanet"] {
+        if !rt.has(&format!("clf_{m}_step")) {
+            eprintln!("missing clf_{m}_* artifacts — run `make artifacts` (core set)");
+            std::process::exit(1);
+        }
+    }
+
+    let lrs = [1e-4f64, 3e-3];
+    let mut results = Vec::new();
+    for &lr in &lrs {
+        for mixer in ["deltanet", "efla"] {
+            log::info!("training clf_{mixer} at lr={lr:.0e} for {steps} steps");
+            let r = robustness_run(&rt, mixer, lr, steps, eval_batches, 42).expect("run");
+            results.push(r);
+        }
+    }
+
+    for &lr in &lrs {
+        println!("\n## Figure 1 row (scaled): lr = {lr:.0e}, {steps} steps\n");
+        let subset: Vec<&RobustnessResult> =
+            results.iter().filter(|r| r.lr == lr).collect();
+        for sweep in ["dropout", "scale", "noise"] {
+            let xs: Vec<f64> = subset[0]
+                .sweeps
+                .iter()
+                .filter(|(k, _, _)| k == sweep)
+                .map(|(_, x, _)| *x)
+                .collect();
+            let mut t = Table::new(
+                &std::iter::once("model".to_string())
+                    .chain(xs.iter().map(|x| format!("{sweep}={x}")))
+                    .map(|s| Box::leak(s.into_boxed_str()) as &str)
+                    .collect::<Vec<&str>>(),
+            );
+            for r in &subset {
+                let mut row = vec![r.mixer.clone()];
+                for (_, _, acc) in r.sweeps.iter().filter(|(k, _, _)| k == sweep) {
+                    row.push(format!("{acc:.3}"));
+                }
+                t.row(&row);
+            }
+            println!("{}", t.render());
+        }
+    }
+    println!("paper Fig. 1 shape check: efla rows decay slower than deltanet, esp. scale.");
+
+    std::fs::create_dir_all("bench_results").ok();
+    json::write_file(
+        std::path::Path::new("bench_results/fig1_robustness.json"),
+        &Json::obj(vec![
+            ("steps", Json::Num(steps as f64)),
+            ("results", Json::Arr(results.iter().map(result_json).collect())),
+        ]),
+    )
+    .unwrap();
+    println!("json: bench_results/fig1_robustness.json");
+}

@@ -1,0 +1,102 @@
+//! Bench: Figure 2 — EFLA robustness vs learning rate (Appendix C).
+//!
+//! The saturation story: EFLA's exact gate alpha = (1-e^{-beta*lambda})/lambda
+//! is sub-linear in input energy, so EFLA needs a LARGER learning rate to
+//! stay responsive; with a conservative lr it underfits and loses
+//! robustness. Trains EFLA classifiers at lr in {1e-4, 1e-3, 3e-3} and
+//! sweeps the same three corruption grids as Fig. 1.
+//!
+//! Expected shape (paper Fig. 2): accuracy under interference increases
+//! with lr across the grid.
+//!
+//! Env knobs: EFLA_F2_STEPS (default 60), EFLA_F2_EVAL (default 2).
+
+use efla::coordinator::experiments::robustness_run;
+use efla::runtime::Runtime;
+use efla::util::bench::Table;
+use efla::util::json::{self, Json};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    efla::util::logging::init();
+    let steps = env_u64("EFLA_F2_STEPS", 24);
+    let eval_batches = env_u64("EFLA_F2_EVAL", 2) as usize;
+    let rt = Runtime::open(std::path::Path::new("artifacts")).expect("open artifacts");
+    if !rt.has("clf_efla_step") {
+        eprintln!("missing clf_efla_* artifacts — run `make artifacts` (core set)");
+        std::process::exit(1);
+    }
+
+    let lrs = [1e-4f64, 1e-3, 3e-3];
+    let mut results = Vec::new();
+    for &lr in &lrs {
+        log::info!("training clf_efla at lr={lr:.0e} for {steps} steps");
+        results.push(robustness_run(&rt, "efla", lr, steps, eval_batches, 42).expect("run"));
+    }
+
+    println!("\n## Figure 2 (scaled): EFLA, lr sweep, {steps} steps\n");
+    for sweep in ["scale", "noise", "dropout"] {
+        let xs: Vec<f64> = results[0]
+            .sweeps
+            .iter()
+            .filter(|(k, _, _)| k == sweep)
+            .map(|(_, x, _)| *x)
+            .collect();
+        let headers: Vec<&str> = std::iter::once("lr".to_string())
+            .chain(xs.iter().map(|x| format!("{sweep}={x}")))
+            .map(|s| Box::leak(s.into_boxed_str()) as &str)
+            .collect();
+        let mut t = Table::new(&headers);
+        for r in &results {
+            let mut row = vec![format!("{:.0e}", r.lr)];
+            for (_, _, acc) in r.sweeps.iter().filter(|(k, _, _)| k == sweep) {
+                row.push(format!("{acc:.3}"));
+            }
+            t.row(&row);
+        }
+        println!("{}", t.render());
+    }
+    println!("paper Fig. 2 shape check: robustness improves with larger lr (saturation effect).");
+
+    std::fs::create_dir_all("bench_results").ok();
+    json::write_file(
+        std::path::Path::new("bench_results/fig2_lr_scaling.json"),
+        &Json::obj(vec![
+            ("steps", Json::Num(steps as f64)),
+            (
+                "results",
+                Json::Arr(
+                    results
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("lr", Json::Num(r.lr)),
+                                ("clean_acc", Json::Num(r.clean_acc)),
+                                (
+                                    "sweeps",
+                                    Json::Arr(
+                                        r.sweeps
+                                            .iter()
+                                            .map(|(k, x, a)| {
+                                                Json::obj(vec![
+                                                    ("sweep", Json::Str(k.clone())),
+                                                    ("x", Json::Num(*x)),
+                                                    ("acc", Json::Num(*a)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    )
+    .unwrap();
+    println!("json: bench_results/fig2_lr_scaling.json");
+}

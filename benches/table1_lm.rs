@@ -1,0 +1,99 @@
+//! Bench: Table 1 — language modeling, DeltaNet vs EFLA (+ variants).
+//!
+//! Trains all four token-mixer variants of the `small` preset on the same
+//! synthetic corpus with the same budget and prints the Table-1 row set:
+//! held-out perplexity (Wiki./LMB. stand-in) and downstream probe accuracies
+//! (LAMBADA/PIQA/BoolQ stand-ins; see DESIGN.md §5 for the substitutions).
+//!
+//! Expected shape (paper Table 1): EFLA ppl <= DeltaNet ppl at equal budget;
+//! EFLA avg probe accuracy >= DeltaNet.
+//!
+//! Env knobs (single-core CPU defaults are deliberately small):
+//!   EFLA_T1_STEPS   training steps per variant   (default 30)
+//!   EFLA_T1_PRESET  artifact preset              (default "mini")
+//!   EFLA_T1_EVAL    eval batches                 (default 4)
+//!   EFLA_T1_LR      peak learning rate           (default 1e-3; paper
+//!                   Appendix C: EFLA needs a larger lr than DeltaNet's
+//!                   3e-4 default — both get the same budget here)
+
+use efla::coordinator::experiments::lm_run;
+use efla::runtime::Runtime;
+use efla::util::bench::Table;
+use efla::util::json::{self, Json};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    efla::util::logging::init();
+    let steps = env_u64("EFLA_T1_STEPS", 30);
+    let preset = std::env::var("EFLA_T1_PRESET").unwrap_or_else(|_| "mini".into());
+    let eval_batches = env_u64("EFLA_T1_EVAL", 4) as usize;
+    let peak_lr: f64 = std::env::var("EFLA_T1_LR")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1e-3);
+    let rt = Runtime::open(std::path::Path::new("artifacts")).expect("open artifacts");
+
+    let mixers: Vec<&str> = ["deltanet", "efla", "efla_adaptive", "efla_loose"]
+        .into_iter()
+        .filter(|m| rt.has(&format!("lm_{preset}_{m}_step")))
+        .collect();
+    if mixers.is_empty() {
+        eprintln!("no lm_{preset}_* artifacts — run `make artifacts` (core set)");
+        std::process::exit(1);
+    }
+
+    println!(
+        "## Table 1 (scaled): preset={preset}, {steps} steps, peak_lr={peak_lr}, shared corpus\n"
+    );
+    let mut rows = Vec::new();
+    let mut t = Table::new(&[
+        "model", "train loss", "ppl (down)", "final_word", "multi_choice", "bool_query", "avg acc (up)", "secs",
+    ]);
+    for mixer in &mixers {
+        let row = lm_run(&rt, &preset, mixer, steps, eval_batches, 42, peak_lr).expect("lm_run");
+        let acc: Vec<f64> = row.probe_acc.iter().map(|(_, a)| *a).collect();
+        let avg = acc.iter().sum::<f64>() / acc.len().max(1) as f64;
+        t.row(&[
+            mixer.to_string(),
+            format!("{:.4}", row.train_loss),
+            format!("{:.2}", row.ppl),
+            format!("{:.3}", acc.first().copied().unwrap_or(f64::NAN)),
+            format!("{:.3}", acc.get(1).copied().unwrap_or(f64::NAN)),
+            format!("{:.3}", acc.get(2).copied().unwrap_or(f64::NAN)),
+            format!("{:.3}", avg),
+            format!("{:.0}", row.wall_secs),
+        ]);
+        rows.push(Json::obj(vec![
+            ("mixer", Json::Str(mixer.to_string())),
+            ("train_loss", Json::Num(row.train_loss as f64)),
+            ("ppl", Json::Num(row.ppl)),
+            ("avg_acc", Json::Num(avg)),
+            (
+                "probes",
+                Json::Arr(
+                    row.probe_acc
+                        .iter()
+                        .map(|(n, a)| Json::obj(vec![("name", Json::Str(n.clone())), ("acc", Json::Num(*a))]))
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    println!("{}", t.render());
+    println!("paper Table 1 shape check: EFLA row should beat DeltaNet on ppl and avg acc.");
+
+    std::fs::create_dir_all("bench_results").ok();
+    json::write_file(
+        std::path::Path::new("bench_results/table1_lm.json"),
+        &Json::obj(vec![
+            ("preset", Json::Str(preset)),
+            ("steps", Json::Num(steps as f64)),
+            ("rows", Json::Arr(rows)),
+        ]),
+    )
+    .unwrap();
+    println!("json: bench_results/table1_lm.json");
+}

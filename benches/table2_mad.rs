@@ -1,0 +1,70 @@
+//! Bench: Table 2 — the MAD synthetic benchmark, DeltaNet vs EFLA.
+//!
+//! Six token-manipulation tasks (compress, fuzzy recall, in-context recall,
+//! memorize, noisy recall, selective copy), one small model trained per
+//! (task, mixer) with identical budgets; reports masked answer accuracy.
+//!
+//! Expected shape (paper Table 2): EFLA >= DeltaNet on most tasks, clearest
+//! on memorize / noisy recall.
+//!
+//! Env knobs: EFLA_T2_STEPS (default 30), EFLA_T2_EVAL (default 4).
+
+use efla::coordinator::experiments::mad_run;
+use efla::data::mad::MadTask;
+use efla::runtime::Runtime;
+use efla::util::bench::Table;
+use efla::util::json::{self, Json};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    efla::util::logging::init();
+    let steps = env_u64("EFLA_T2_STEPS", 16);
+    let eval_batches = env_u64("EFLA_T2_EVAL", 4) as usize;
+    let rt = Runtime::open(std::path::Path::new("artifacts")).expect("open artifacts");
+    for m in ["efla", "deltanet"] {
+        if !rt.has(&format!("lm_mad_{m}_step")) {
+            eprintln!("missing lm_mad_{m}_* artifacts — run `make artifacts` (core set)");
+            std::process::exit(1);
+        }
+    }
+
+    println!("## Table 2 (scaled): MAD suite, {steps} steps per (task, mixer)\n");
+    let mut t = Table::new(&[
+        "model", "compress", "fuzzy", "in-ctx", "memorize", "noisy", "sel-copy", "avg",
+    ]);
+    let mut out_rows = Vec::new();
+    for mixer in ["deltanet", "efla"] {
+        let mut accs = Vec::new();
+        for task in MadTask::all() {
+            let acc = mad_run(&rt, mixer, task, steps, eval_batches, 42).expect("mad_run");
+            accs.push(acc);
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        let mut row = vec![mixer.to_string()];
+        row.extend(accs.iter().map(|a| format!("{:.3}", a)));
+        row.push(format!("{avg:.3}"));
+        t.row(&row);
+        out_rows.push(Json::obj(vec![
+            ("mixer", Json::Str(mixer.to_string())),
+            ("acc", Json::arr_f64(&accs)),
+            ("avg", Json::Num(avg)),
+        ]));
+    }
+    println!("{}", t.render());
+    println!("paper Table 2 shape check: EFLA avg >= DeltaNet avg.");
+
+    std::fs::create_dir_all("bench_results").ok();
+    json::write_file(
+        std::path::Path::new("bench_results/table2_mad.json"),
+        &Json::obj(vec![
+            ("steps", Json::Num(steps as f64)),
+            ("tasks", Json::arr_str(&MadTask::all().map(|t| t.name().to_string()))),
+            ("rows", Json::Arr(out_rows)),
+        ]),
+    )
+    .unwrap();
+    println!("json: bench_results/table2_mad.json");
+}

@@ -1,0 +1,60 @@
+//! Table-2 scenario as a runnable example: train small models on each MAD
+//! task for both mixers and print per-task accuracy.
+//!
+//! Run: cargo run --release --example mad_suite -- --steps 40 --tasks in_context_recall,memorize
+
+use anyhow::Result;
+use efla::coordinator::experiments::mad_run;
+use efla::data::mad::MadTask;
+use efla::runtime::Runtime;
+use efla::util::bench::Table;
+use efla::util::cli::Args;
+
+fn parse_tasks(spec: &str) -> Vec<MadTask> {
+    if spec == "all" {
+        return MadTask::all().to_vec();
+    }
+    spec.split(',')
+        .filter_map(|name| MadTask::all().into_iter().find(|t| t.name() == name.trim()))
+        .collect()
+}
+
+fn main() -> Result<()> {
+    efla::util::logging::init();
+    let p = Args::new("mad_suite", "MAD synthetic benchmark (paper Table 2)")
+        .opt("steps", "40", "training steps per (task, mixer)")
+        .opt("eval-batches", "4", "eval batches per accuracy")
+        .opt("tasks", "all", "comma list or 'all'")
+        .opt("seed", "42", "seed")
+        .parse();
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    for m in ["efla", "deltanet"] {
+        if !rt.has(&format!("lm_mad_{m}_step")) {
+            anyhow::bail!("MAD artifacts missing — run `make artifacts` (core set)");
+        }
+    }
+    let tasks = parse_tasks(p.get("tasks"));
+    if tasks.is_empty() {
+        anyhow::bail!("no valid tasks in --tasks {:?}", p.get("tasks"));
+    }
+
+    let steps = p.u64("steps");
+    let eval_batches = p.usize("eval-batches");
+    let seed = p.u64("seed");
+
+    let mut t = Table::new(&["task", "deltanet", "efla", "gap"]);
+    for task in &tasks {
+        let a_d = mad_run(&rt, "deltanet", *task, steps, eval_batches, seed)?;
+        let a_e = mad_run(&rt, "efla", *task, steps, eval_batches, seed)?;
+        t.row(&[
+            task.name().to_string(),
+            format!("{a_d:.3}"),
+            format!("{a_e:.3}"),
+            format!("{:+.3}", a_e - a_d),
+        ]);
+        log::info!("{}: deltanet {a_d:.3} efla {a_e:.3}", task.name());
+    }
+    println!("\n{}", t.render());
+    println!("expected shape (paper Table 2): efla >= deltanet on most tasks.");
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! End-to-end LM training driver (EXPERIMENTS.md §end-to-end).
+//!
+//! Trains a transformer LM with the EFLA token mixer on the synthetic
+//! corpus, logging the loss curve, evaluating held-out perplexity, running
+//! the downstream probe suite, and checkpointing — the full system
+//! composing: L1 Pallas kernel -> L2 fused train-step graph -> L3 data
+//! pipeline, scheduler, metrics, checkpoints.
+//!
+//! Presets (single-core CPU budgets):
+//!   --preset tiny   0.15M params, seconds        (default smoke)
+//!   --preset small   11M params, ~minutes
+//!   --preset 100m   ~96M params — the "~100M for a few hundred steps"
+//!                   end-to-end run; needs `make artifacts-full` and hours
+//!                   of CPU. batch 2 x seq 512 per step.
+//!
+//! Run: cargo run --release --example train_lm -- --preset small --steps 120
+
+use anyhow::Result;
+use efla::coordinator::config::{RunConfig, Task};
+use efla::coordinator::evaluator;
+use efla::coordinator::schedule::Schedule;
+use efla::coordinator::session::Session;
+use efla::coordinator::trainer;
+use efla::runtime::Runtime;
+use efla::util::cli::Args;
+use efla::util::json::{self, Json};
+
+fn main() -> Result<()> {
+    efla::util::logging::init();
+    let p = Args::new("train_lm", "end-to-end LM training on synthetic corpus")
+        .opt("preset", "small", "tiny | small | 100m")
+        .opt("mixer", "efla", "efla | deltanet | efla_adaptive | efla_loose")
+        .opt("steps", "120", "training steps")
+        .opt("seed", "42", "seed")
+        .opt("peak-lr", "0.0008", "peak learning rate")
+        .opt("corpus-bytes", "3000000", "synthetic corpus size")
+        .opt("eval-batches", "6", "held-out eval batches")
+        .opt("out", "runs/train_lm", "output dir for curve + checkpoint")
+        .flag("probes", "run the downstream probe suite after training")
+        .parse();
+
+    let cfg = RunConfig {
+        task: Task::Lm,
+        preset: p.get("preset").into(),
+        mixer: p.get("mixer").into(),
+        steps: p.u64("steps"),
+        seed: p.u64("seed"),
+        peak_lr: p.f64("peak-lr"),
+        corpus_bytes: p.usize("corpus-bytes"),
+        eval_batches: p.usize("eval-batches"),
+        out_dir: p.get("out").into(),
+        ..Default::default()
+    };
+
+    let rt = Runtime::open(&cfg.artifact_dir)?;
+    let family = cfg.family();
+    if !rt.has(&format!("{family}_step")) {
+        anyhow::bail!(
+            "artifact {family}_step missing — run `make artifacts`{}",
+            if cfg.preset == "100m" { " and `make artifacts-full`" } else { "" }
+        );
+    }
+
+    let mut session = Session::init(&rt, &family, cfg.seed as u32)?;
+    log::info!(
+        "{} | {:.1}M params | batch {} x seq {} = {} tok/step",
+        family,
+        session.param_elems() as f64 / 1e6,
+        session.batch,
+        session.seq,
+        session.batch * session.seq
+    );
+
+    let (data, bpe) = trainer::lm_data(&cfg, session.batch, session.seq)?;
+    let schedule = Schedule::paper_default(cfg.peak_lr, cfg.steps);
+    let mut curve_points: Vec<Json> = Vec::new();
+    let hist = trainer::train_lm(
+        &mut session,
+        schedule,
+        cfg.steps,
+        || data.next(),
+        |pt| {
+            curve_points.push(Json::arr_f64(&[pt.step as f64, pt.loss as f64]));
+        },
+    )?;
+
+    // Held-out perplexity (disjoint corpus seed).
+    let eval_cfg = RunConfig { seed: cfg.seed + 10_000, ..cfg.clone() };
+    let (eval_data, _) = trainer::lm_data(&eval_cfg, session.batch, session.seq)?;
+    let stats = evaluator::eval_batches(&session, cfg.eval_batches, || eval_data.next())?;
+    log::info!(
+        "held-out: ppl {:.2} | token acc {:.3} | {} tokens",
+        stats.ppl(),
+        stats.accuracy(),
+        stats.tokens as u64
+    );
+
+    let mut probe_json = Vec::new();
+    if p.bool("probes") {
+        for (name, acc) in evaluator::probe_suite(&session, &bpe, cfg.seed + 77, 24)? {
+            log::info!("probe {name}: {acc:.3}");
+            probe_json.push(Json::obj(vec![
+                ("name", Json::Str(name)),
+                ("acc", Json::Num(acc)),
+            ]));
+        }
+    }
+
+    // Persist everything.
+    let out = cfg.out_dir.join(&family);
+    std::fs::create_dir_all(&out)?;
+    let tensors = session.export_state()?;
+    efla::coordinator::checkpoint::save(&out.join("final.ckpt"), session.steps_done(), &tensors)?;
+    json::write_file(
+        &out.join("result.json"),
+        &Json::obj(vec![
+            ("config", cfg.to_json()),
+            ("loss_curve", Json::Arr(curve_points)),
+            ("final_loss", Json::Num(hist.tail_loss(10) as f64)),
+            ("ppl", Json::Num(stats.ppl())),
+            ("token_acc", Json::Num(stats.accuracy())),
+            ("probes", Json::Arr(probe_json)),
+            ("wall_secs", Json::Num(hist.wall_secs)),
+            (
+                "tokens_per_sec",
+                Json::Num(
+                    cfg.steps as f64 * hist.tokens_per_step as f64 / hist.wall_secs.max(1e-9),
+                ),
+            ),
+        ]),
+    )?;
+    log::info!("wrote {}", out.join("result.json").display());
+    Ok(())
+}

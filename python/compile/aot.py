@@ -1,0 +1,391 @@
+"""AOT lowering driver: every L2 graph -> artifacts/<name>.hlo.txt + manifest.
+
+Interchange format is HLO *text* (NOT ``lowered.compile().serialize()``): the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction
+ids, while the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).  The Rust runtime loads each file with
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+
+Emitted per artifact:
+  * ``<name>.hlo.txt``    — the lowered module (entry returns ONE tuple).
+  * a manifest entry      — input/output names, shapes, dtypes, in the flat
+                            deterministic order both sides agree on.
+
+Also emits ``golden.json``: small fixed-seed input/output vectors from the
+L1 kernels, used by the Rust unit tests to pin the cross-language numerics.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--set core|full|tiny]
+"""
+
+import argparse
+import json
+import os
+import time
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import classifier as clf
+from . import model as mdl
+from . import train as trn
+from .kernels import chunkwise_delta, alpha_efla
+from .kernels.gates import alpha_rk
+
+DTYPE_NAMES = {
+    jnp.float32.dtype: "f32",
+    jnp.int32.dtype: "s32",
+    jnp.uint32.dtype: "u32",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _iospec(avals, names):
+    out = []
+    for name, a in zip(names, avals):
+        out.append(
+            {
+                "name": name,
+                "shape": [int(s) for s in a.shape],
+                "dtype": DTYPE_NAMES[jnp.dtype(a.dtype)],
+            }
+        )
+    return out
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"version": 1, "artifacts": OrderedDict()}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, in_specs, in_names, out_names, meta):
+        """Lower ``fn(*in_specs)`` and write ``<name>.hlo.txt`` + manifest."""
+        t0 = time.time()
+        # keep_unused: parameters not touched by a graph (e.g. `adecay` in
+        # non-adaptive mixers) must STAY inputs, or the compiled program's
+        # arity would diverge from the manifest the Rust runtime trusts.
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *in_specs)
+        flat_out, _ = jax.tree_util.tree_flatten(out_avals)
+        flat_in, _ = jax.tree_util.tree_flatten(in_specs)
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _iospec(flat_in, in_names),
+            "outputs": _iospec(flat_out, out_names),
+        }
+        entry.update(meta)
+        self.manifest["artifacts"][name] = entry
+        print(f"  [{time.time()-t0:6.1f}s] {name}: {len(text)/1e6:.2f} MB, "
+              f"{len(flat_in)} in / {len(flat_out)} out")
+
+    def save_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"manifest: {path} ({len(self.manifest['artifacts'])} artifacts)")
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+# --------------------------------------------------------------------------
+# LM artifacts
+# --------------------------------------------------------------------------
+
+
+def emit_lm(em: Emitter, preset: str, mixer: str, batch: int, seq: int,
+            graphs=("init", "step", "eval"), decode_batch: int = 4,
+            prefill_len: int = 128):
+    cfg = mdl.preset_with_mixer(preset, mixer)
+    abstract = mdl.init_params(jax.random.PRNGKey(0), cfg, abstract=True)
+    pnames = list(abstract.keys())
+    pspecs = [abstract[k] for k in pnames]
+    base = f"lm_{preset}_{mixer}"
+    meta_common = {
+        "task": "lm",
+        "preset": preset,
+        "mixer": mixer,
+        "param_names": pnames,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "head_dim": cfg.head_dim, "chunk": cfg.chunk,
+            "mlp_mult": cfg.mlp_mult,
+        },
+        "batch": batch,
+        "seq": seq,
+    }
+
+    def pack(d):
+        return list(d.values())
+
+    if "init" in graphs:
+        def init_fn(seed):
+            key = jax.random.PRNGKey(seed)
+            return tuple(pack(mdl.init_params(key, cfg)))
+
+        em.emit(f"{base}_init", init_fn, (u32(()),), ["seed"],
+                pnames, dict(meta_common, graph="init"))
+
+    if "step" in graphs:
+        def step_fn(*args):
+            n = len(pnames)
+            params = OrderedDict(zip(pnames, args[:n]))
+            m = OrderedDict(zip(pnames, args[n:2 * n]))
+            v = OrderedDict(zip(pnames, args[2 * n:3 * n]))
+            step, tokens, targets, lr = args[3 * n:]
+            new_p, new_m, new_v, loss, gnorm = trn.train_step(
+                cfg, params, m, v, step, tokens, targets, lr)
+            return tuple(pack(new_p)) + tuple(pack(new_m)) + tuple(pack(new_v)) + (loss, gnorm)
+
+        in_specs = tuple(pspecs) * 3 + (f32(()), i32((batch, seq)), i32((batch, seq)), f32(()))
+        in_names = ([f"p.{k}" for k in pnames] + [f"m.{k}" for k in pnames]
+                    + [f"v.{k}" for k in pnames] + ["step", "tokens", "targets", "lr"])
+        out_names = ([f"p.{k}" for k in pnames] + [f"m.{k}" for k in pnames]
+                     + [f"v.{k}" for k in pnames] + ["loss", "gnorm"])
+        em.emit(f"{base}_step", step_fn, in_specs, in_names, out_names,
+                dict(meta_common, graph="step"))
+
+    if "eval" in graphs:
+        def eval_fn(*args):
+            params = OrderedDict(zip(pnames, args[:len(pnames)]))
+            tokens, targets = args[len(pnames):]
+            return trn.eval_step(cfg, params, tokens, targets)
+
+        em.emit(f"{base}_eval", eval_fn,
+                tuple(pspecs) + (i32((batch, seq)), i32((batch, seq))),
+                [f"p.{k}" for k in pnames] + ["tokens", "targets"],
+                ["loss_sum", "count", "correct"],
+                dict(meta_common, graph="eval"))
+
+    if "logits_last" in graphs:
+        def logits_fn(*args):
+            params = OrderedDict(zip(pnames, args[:len(pnames)]))
+            (tokens,) = args[len(pnames):]
+            return (trn.logits_last(cfg, params, tokens),)
+
+        em.emit(f"{base}_logits_last", logits_fn,
+                tuple(pspecs) + (i32((batch, seq)),),
+                [f"p.{k}" for k in pnames] + ["tokens"],
+                ["logits"],
+                dict(meta_common, graph="logits_last"))
+
+    if "decode" in graphs:
+        st = mdl.zero_decode_state(cfg, decode_batch)
+        snames = list(st.keys())
+        sspecs = [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in st.values()]
+
+        def decode_fn(*args):
+            params = OrderedDict(zip(pnames, args[:len(pnames)]))
+            state = OrderedDict(zip(snames, args[len(pnames):-1]))
+            token = args[-1]
+            logits, new_state = mdl.decode_step(cfg, params, state, token)
+            return (logits,) + tuple(new_state.values())
+
+        em.emit(f"{base}_decode", decode_fn,
+                tuple(pspecs) + tuple(sspecs) + (i32((decode_batch,)),),
+                [f"p.{k}" for k in pnames] + [f"s.{k}" for k in snames] + ["token"],
+                ["logits"] + [f"s.{k}" for k in snames],
+                dict(meta_common, graph="decode", decode_batch=decode_batch,
+                     state_names=snames))
+
+    if "prefill" in graphs:
+        st = mdl.zero_decode_state(cfg, decode_batch)
+        snames = list(st.keys())
+
+        def prefill_fn(*args):
+            params = OrderedDict(zip(pnames, args[:len(pnames)]))
+            (tokens,) = args[len(pnames):]
+            logits, state = mdl.prefill(cfg, params, tokens)
+            return (logits,) + tuple(state.values())
+
+        em.emit(f"{base}_prefill", prefill_fn,
+                tuple(pspecs) + (i32((decode_batch, prefill_len)),),
+                [f"p.{k}" for k in pnames] + ["tokens"],
+                ["logits"] + [f"s.{k}" for k in snames],
+                dict(meta_common, graph="prefill", decode_batch=decode_batch,
+                     prefill_len=prefill_len, state_names=snames))
+
+
+# --------------------------------------------------------------------------
+# Classifier artifacts (Fig. 1 / Fig. 2)
+# --------------------------------------------------------------------------
+
+
+def emit_classifier(em: Emitter, mixer: str, batch: int):
+    cfg = clf.ClassifierConfig(mixer=mixer)
+    abstract = clf.init_params(jax.random.PRNGKey(0), cfg, abstract=True)
+    pnames = list(abstract.keys())
+    pspecs = [abstract[k] for k in pnames]
+    base = f"clf_{mixer}"
+    meta_common = {
+        "task": "classifier",
+        "mixer": mixer,
+        "param_names": pnames,
+        "config": {
+            "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "head_dim": cfg.head_dim, "chunk": cfg.chunk,
+        },
+        "batch": batch,
+        "seq": clf.SEQ_LEN,
+    }
+
+    def init_fn(seed):
+        return tuple(clf.init_params(jax.random.PRNGKey(seed), cfg).values())
+
+    em.emit(f"{base}_init", init_fn, (u32(()),), ["seed"], pnames,
+            dict(meta_common, graph="init"))
+
+    def step_fn(*args):
+        n = len(pnames)
+        params = OrderedDict(zip(pnames, args[:n]))
+        m = OrderedDict(zip(pnames, args[n:2 * n]))
+        v = OrderedDict(zip(pnames, args[2 * n:3 * n]))
+        step, pixels, labels, lr = args[3 * n:]
+        new_p, new_m, new_v, loss, gnorm = clf.train_step(
+            cfg, params, m, v, step, pixels, labels, lr)
+        return tuple(new_p.values()) + tuple(new_m.values()) + tuple(new_v.values()) + (loss, gnorm)
+
+    em.emit(f"{base}_step", step_fn,
+            tuple(pspecs) * 3 + (f32(()), f32((batch, clf.SEQ_LEN)), i32((batch,)), f32(())),
+            [f"p.{k}" for k in pnames] + [f"m.{k}" for k in pnames]
+            + [f"v.{k}" for k in pnames] + ["step", "pixels", "labels", "lr"],
+            [f"p.{k}" for k in pnames] + [f"m.{k}" for k in pnames]
+            + [f"v.{k}" for k in pnames] + ["loss", "gnorm"],
+            dict(meta_common, graph="step"))
+
+    def eval_fn(*args):
+        params = OrderedDict(zip(pnames, args[:len(pnames)]))
+        pixels, labels = args[len(pnames):]
+        return clf.eval_step(cfg, params, pixels, labels)
+
+    em.emit(f"{base}_eval", eval_fn,
+            tuple(pspecs) + (f32((batch, clf.SEQ_LEN)), i32((batch,))),
+            [f"p.{k}" for k in pnames] + ["pixels", "labels"],
+            ["loss_sum", "correct"],
+            dict(meta_common, graph="eval"))
+
+
+# --------------------------------------------------------------------------
+# Golden vectors for the Rust cross-checks
+# --------------------------------------------------------------------------
+
+
+def emit_golden(out_dir: str):
+    key = jax.random.PRNGKey(12345)
+    ks = jax.random.split(key, 4)
+    b, h, l, d = 1, 2, 12, 4
+    q = jax.random.normal(ks[0], (b, h, l, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, l, d), jnp.float32) * 0.7
+    v = jax.random.normal(ks[2], (b, h, l, d), jnp.float32)
+    beta = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, l), jnp.float32))
+    lam = jnp.sum(k * k, axis=-1)
+    alpha = alpha_efla(beta, lam)
+    out, s = chunkwise_delta(q, k, v, alpha, chunk=4)
+
+    xs = np.linspace(0.0, 8.0, 33)
+    gates = {
+        f"rk{n}": np.asarray(alpha_rk(jnp.asarray(xs), jnp.ones_like(jnp.asarray(xs)), n)).tolist()
+        for n in (1, 2, 3, 4, 6)
+    }
+    gates["efla"] = np.asarray(alpha_efla(jnp.asarray(xs), jnp.ones_like(jnp.asarray(xs)))).tolist()
+
+    golden = {
+        "chunkwise": {
+            "shape": [b, h, l, d],
+            "chunk": 4,
+            "q": np.asarray(q).ravel().tolist(),
+            "k": np.asarray(k).ravel().tolist(),
+            "v": np.asarray(v).ravel().tolist(),
+            "beta": np.asarray(beta).ravel().tolist(),
+            "alpha": np.asarray(alpha).ravel().tolist(),
+            "out": np.asarray(out).ravel().tolist(),
+            "state": np.asarray(s).ravel().tolist(),
+        },
+        "gates": {"x": xs.tolist(), **gates},
+    }
+    path = os.path.join(out_dir, "golden.json")
+    with open(path, "w") as f:
+        json.dump(golden, f)
+    print(f"golden vectors: {path}")
+
+
+# --------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", dest="which", default="core",
+                    choices=["tiny", "core", "full"])
+    args = ap.parse_args()
+
+    em = Emitter(args.out_dir)
+    t0 = time.time()
+
+    # tiny LM: integration tests + quickstart (all graphs incl. serving path)
+    for mixer in ("efla", "deltanet"):
+        emit_lm(em, "tiny", mixer, batch=4, seq=64,
+                graphs=("init", "step", "eval", "logits_last", "decode", "prefill"),
+                decode_batch=4, prefill_len=32)
+
+    if args.which in ("core", "full"):
+        # mini LM: Table-1 bench rows (all four variants)
+        for mixer in ("efla", "deltanet", "efla_adaptive", "efla_loose"):
+            emit_lm(em, "mini", mixer, batch=8, seq=128,
+                    graphs=("init", "step", "eval", "logits_last"))
+        # small LM: deeper example runs + serving artifacts
+        for mixer in ("efla", "deltanet"):
+            emit_lm(em, "small", mixer, batch=4, seq=256,
+                    graphs=("init", "step", "eval"))
+        emit_lm(em, "small", "efla", batch=4, seq=256,
+                graphs=("decode", "prefill"), decode_batch=8, prefill_len=128)
+        # classifier: Fig-1/Fig-2 (paper bs=128 scaled to the 1-core testbed)
+        for mixer in ("efla", "deltanet"):
+            emit_classifier(em, mixer, batch=16)
+        # MAD: tiny vocab-64 models, seq 128 (Table 2)
+        for mixer in ("efla", "deltanet"):
+            emit_lm(em, "mad", mixer, batch=16, seq=128,
+                    graphs=("init", "step", "eval"))
+
+    if args.which == "full":
+        # ~100M end-to-end model (examples/train_lm.rs --preset 100m)
+        for mixer in ("efla",):
+            emit_lm(em, "100m", mixer, batch=2, seq=512,
+                    graphs=("init", "step", "eval"))
+
+    emit_golden(em.out_dir)
+    em.save_manifest()
+    print(f"total {time.time()-t0:.1f}s")
+
+
+# "mad" preset registered here to keep model.PRESETS purely architectural
+mdl.PRESETS.setdefault(
+    "mad",
+    mdl.ModelConfig(vocab=64, d_model=128, n_layers=2, n_heads=2, head_dim=64, chunk=32),
+)
+
+if __name__ == "__main__":
+    main()

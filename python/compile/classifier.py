@@ -1,0 +1,138 @@
+"""Fig-1/Fig-2 substrate: the sMNIST Linear Attention Classifier (paper §5.1).
+
+Pixel-level sequential MNIST: 28x28 images flattened to L=784 scalar pixels,
+a linear projection into d=64, ``n_layers`` mixer blocks (EFLA or DeltaNet —
+same blocks as the LM, minus vocabulary), mean pooling, 10-way head.
+
+The corruption operators (dropout / intensity scaling / additive Gaussian
+noise) are applied by the Rust data pipeline *to the raw pixel sequences*, so
+these graphs are corruption-agnostic.
+"""
+
+import dataclasses
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from .model import (
+    CONV_K,
+    ModelConfig,
+    causal_conv,
+    mixer_forward,
+    mlp_forward,
+    rms_norm,
+)
+from .train import adamw_update
+
+N_CLASSES = 10
+SEQ_LEN = 784
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifierConfig:
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    head_dim: int = 32
+    mlp_mult: int = 4
+    chunk: int = 56  # 784 = 14 * 56; avoids padding the full sequence
+    mixer: str = "efla"
+    norm_eps: float = 1e-6
+
+    def to_model_config(self) -> ModelConfig:
+        return ModelConfig(
+            vocab=1,  # unused; classifier embeds pixels linearly
+            d_model=self.d_model,
+            n_layers=self.n_layers,
+            n_heads=self.n_heads,
+            head_dim=self.head_dim,
+            mlp_mult=self.mlp_mult,
+            chunk=self.chunk,
+            mixer=self.mixer,
+            norm_eps=self.norm_eps,
+        )
+
+
+def _param_specs(cfg: ClassifierConfig):
+    d, inner, h = cfg.d_model, cfg.n_heads * cfg.head_dim, cfg.n_heads
+    yield "pix_w", (1, d), "normal"
+    yield "pix_b", (d,), "zeros"
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        yield p + "norm_attn", (d,), "ones"
+        yield p + "wq", (d, inner), "normal"
+        yield p + "wk", (d, inner), "normal"
+        yield p + "wv", (d, inner), "normal"
+        yield p + "conv_q", (CONV_K, inner), "conv"
+        yield p + "conv_k", (CONV_K, inner), "conv"
+        yield p + "conv_v", (CONV_K, inner), "conv"
+        yield p + "w_beta", (d, h), "normal"
+        yield p + "adecay", (h,), "zeros"
+        yield p + "norm_out", (cfg.head_dim,), "ones"
+        yield p + "wo", (inner, d), "normal"
+        yield p + "norm_mlp", (d,), "ones"
+        yield p + "w_gate", (d, cfg.mlp_mult * d), "normal"
+        yield p + "w_up", (d, cfg.mlp_mult * d), "normal"
+        yield p + "w_down", (cfg.mlp_mult * d, d), "normal"
+    yield "norm_f", (d,), "ones"
+    yield "head_w", (d, N_CLASSES), "normal"
+    yield "head_b", (N_CLASSES,), "zeros"
+
+
+def init_params(key, cfg: ClassifierConfig, abstract: bool = False):
+    params = OrderedDict()
+    specs = list(_param_specs(cfg))
+    keys = jax.random.split(key, len(specs))
+    for (name, shape, kind), k in zip(specs, keys):
+        if abstract:
+            params[name] = jax.ShapeDtypeStruct(shape, jnp.float32)
+            continue
+        if kind == "normal":
+            params[name] = jax.random.normal(k, shape, jnp.float32) * (shape[0] ** -0.5)
+        elif kind == "conv":
+            w = jax.random.normal(k, shape, jnp.float32) * 0.02
+            params[name] = w.at[-1].add(1.0)
+        elif kind == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+def forward(cfg: ClassifierConfig, params, pixels):
+    """pixels: (B, 784) float32 -> logits (B, 10)."""
+    mcfg = cfg.to_model_config()
+    x = pixels[..., None] @ params["pix_w"] + params["pix_b"]  # (B, L, D)
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rms_norm(x, params[p + "norm_attn"], cfg.norm_eps)
+        mixed, _ = mixer_forward(mcfg, params, p, h)
+        x = x + mixed
+        h = rms_norm(x, params[p + "norm_mlp"], cfg.norm_eps)
+        x = x + mlp_forward(mcfg, params, p, h)
+    x = rms_norm(jnp.mean(x, axis=1), params["norm_f"], cfg.norm_eps)
+    return x @ params["head_w"] + params["head_b"]
+
+
+def loss_fn(cfg: ClassifierConfig, params, pixels, labels):
+    logits = forward(cfg, params, pixels)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return nll.mean()
+
+
+def train_step(cfg: ClassifierConfig, params, m, v, step, pixels, labels, lr):
+    """Returns (params', m', v', loss, gnorm). pixels (B,784) f32, labels (B,) i32."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, pixels, labels))(params)
+    new_p, new_m, new_v, gnorm = adamw_update(params, grads, m, v, step, lr)
+    return new_p, new_m, new_v, loss, gnorm
+
+
+def eval_step(cfg: ClassifierConfig, params, pixels, labels):
+    """Returns (loss_sum, correct_count) over the batch."""
+    logits = forward(cfg, params, pixels)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return nll.sum(), correct.sum()

@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernels for Error-Free Linear Attention (EFLA).
+
+The whole integrator family of the paper — Euler (DeltaNet), RK-2, RK-4 and
+the exact RK-inf solution (EFLA) — collapses onto ONE generalized delta-rule
+recurrence
+
+    S_t = (I - alpha_t k_t k_t^T) S_{t-1} + alpha_t k_t v_t^T
+
+with a per-token scalar gate ``alpha_t`` that depends on the integrator order
+(see ``gates.py``).  ``chunkwise.py`` implements that recurrence as a single
+hardware-efficient chunkwise-parallel Pallas kernel (WY representation + UT
+transform, paper Eqs. 21-32); ``efla.py`` / ``deltanet.py`` are the public
+entry points; ``ref.py`` holds the pure-jnp oracles every kernel is tested
+against; ``rk.py`` holds the literal multi-stage Runge-Kutta integrators used
+to validate the collapsed-gate algebra and to reproduce the error analysis.
+"""
+
+from .gates import (
+    EPS_LAMBDA,
+    alpha_efla,
+    alpha_euler,
+    alpha_rk,
+    gate_series,
+)
+from .chunkwise import chunkwise_delta, chunkwise_delta_reference
+from .efla import efla_attention, efla_recurrent_step
+from .deltanet import deltanet_attention, l2_normalize
+from .ref import (
+    sequential_delta,
+    sequential_delta_with_state,
+    naive_quadratic_delta,
+)
+from .rk import rk_integrate, rk_stage_integrate, exact_integrate
+
+__all__ = [
+    "EPS_LAMBDA",
+    "alpha_efla",
+    "alpha_euler",
+    "alpha_rk",
+    "gate_series",
+    "chunkwise_delta",
+    "chunkwise_delta_reference",
+    "efla_attention",
+    "efla_recurrent_step",
+    "deltanet_attention",
+    "l2_normalize",
+    "sequential_delta",
+    "sequential_delta_with_state",
+    "naive_quadratic_delta",
+    "rk_integrate",
+    "rk_stage_integrate",
+    "exact_integrate",
+]

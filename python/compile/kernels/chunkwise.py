@@ -1,0 +1,293 @@
+"""Chunkwise-parallel generalized delta rule as a Pallas kernel (Eqs. 21-32).
+
+One kernel serves DeltaNet, RK-N and EFLA: the integrator order is entirely
+absorbed into the per-token scalar gate ``alpha`` computed upstream (see
+``gates.py``).  The kernel implements the WY representation + UT transform of
+Yang et al. 2024b, which the paper shows carries over to EFLA unchanged:
+
+    per chunk of size C, with A = strict_tril(diag(alpha) K K^T):
+      T  = (I + A)^{-1} diag(alpha)          (UT transform, Eq. 31)
+      W  = T K,   U = T V                    (Eq. 32)
+      O  = Q S + (tril(Q K^T)) (U - W S)     (Eq. 30)
+      S' = S + K^T (U - W S)                 (Eq. 29)
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation):
+  * grid = (B*H, L/C); the chunk axis is the sequential ("arbitrary") grid
+    dimension and the running state S (Dk x Dv, f32) lives in a VMEM scratch
+    accumulator across chunk steps — the Triton original round-trips S through
+    HBM between thread-block launches.
+  * the (I + A)^{-1} forward-substitution of the Triton kernel is replaced by
+    an exact *nilpotent doubling* product — A is strictly lower triangular so
+    A^C = 0 and (I+A)^{-1} = prod_{i<m} (I + (-A)^{2^i}) with 2^m >= C: that
+    is ceil(log2 C) dense CxC matmuls, which map onto the MXU instead of a
+    C-step scalar-dependency chain.
+  * all matmuls accumulate in float32 via ``preferred_element_type`` —
+    bf16-safe inputs, f32 state, matching the paper's training setup.
+
+Pallas runs with interpret=True everywhere in this repo: the CPU PJRT client
+cannot execute Mosaic custom-calls, and correctness (not wallclock) is what
+the interpret path certifies.  BlockSpecs are still written exactly as a real
+TPU lowering would want them.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _inv_unit_lower_batched(a_strict, c):
+    """Exact inverse of (I + A), A strictly lower triangular (nilpotent),
+    via the doubling product (I+A)^{-1} = prod_i (I + G^{2^i}), G = -A.
+
+    ceil(log2 C) dense matmuls (MXU-shaped, differentiable, no LAPACK
+    custom-call — the AOT runtime cannot execute those). Only safe for
+    SMALL C: see ``_solve_unit_lower`` for why and for the blocked form
+    used on full chunks. Accepts any (..., C, C) batching."""
+    eye = jnp.eye(c, dtype=a_strict.dtype)
+    g = -a_strict
+    p = eye + g
+    steps = max(1, math.ceil(math.log2(c))) if c > 1 else 0
+    for _ in range(1, steps):
+        g = g @ g
+        p = p @ (eye + g)
+    return p
+
+
+SOLVE_BLOCK = 8
+
+
+def _solve_unit_lower(a_strict, rhs, c, block=SOLVE_BLOCK):
+    """Solve (I + A) X = rhs, A strictly lower triangular; (..., C, C) @ (..., C, N).
+
+    Numerical-stability note (this bit is load-bearing): the whole-chunk
+    doubling inverse materializes A^{2^i}, whose norms grow like
+    ``entry_bound^C`` — with unnormalized, positively-correlated keys (silu
+    activations; exactly EFLA's regime) that overflows f32 for C >= ~48 even
+    though the true solution W/U is benign (the WY recurrence Eq. 25 is
+    contractive).  Block forward substitution fixes it: diagonal blocks are
+    inverted exactly by doubling at block size (powers stay bounded), and
+    the off-diagonal coupling is dense (block x block) matmuls — still
+    MXU-shaped work, with a C/block-step dependency chain instead of C.
+    """
+    if c <= block:
+        return _inv_unit_lower_batched(a_strict, c) @ rhs
+    n_blocks = math.ceil(c / block)
+    xs = []
+    for i in range(n_blocks):
+        lo, hi = i * block, min(c, (i + 1) * block)
+        r = rhs[..., lo:hi, :]
+        for j in range(i):
+            jlo, jhi = j * block, min(c, (j + 1) * block)
+            r = r - a_strict[..., lo:hi, jlo:jhi] @ xs[j]
+        inv_ii = _inv_unit_lower_batched(a_strict[..., lo:hi, lo:hi], hi - lo)
+        xs.append(inv_ii @ r)
+    return jnp.concatenate(xs, axis=-2)
+
+
+def _chunk_kernel(q_ref, k_ref, v_ref, a_ref, s0_ref, o_ref, sout_ref, s_ref, *, nc, c):
+    """One (head, chunk) grid step. s_ref: (Dk, Dv) f32 VMEM accumulator."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)  # (C, Dk)
+    k = k_ref[0].astype(jnp.float32)  # (C, Dk)
+    v = v_ref[0].astype(jnp.float32)  # (C, Dv)
+    a = a_ref[0].astype(jnp.float32)  # (C,)
+    s = s_ref[...]  # (Dk, Dv)
+
+    # Strictly-lower-triangular masked  diag(a) K K^T  (Eq. 31).
+    kk = jnp.dot(k, k.T, preferred_element_type=jnp.float32)  # (C, C)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    strict = (cols < rows).astype(jnp.float32)
+    a_mat = strict * (a[:, None] * kk)
+
+    # W = T K, U = T V with T = (I+A)^{-1} diag(a): fold diag(a) into the
+    # right-hand sides and solve both in one blocked forward substitution.
+    dk = k.shape[-1]
+    rhs = jnp.concatenate([a[:, None] * k, a[:, None] * v], axis=-1)
+    wu = _solve_unit_lower(a_mat, rhs, c)
+    w, u = wu[:, :dk], wu[:, dk:]
+
+    delta = u - jnp.dot(w, s, preferred_element_type=jnp.float32)  # (C, Dv)
+
+    qk = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    incl = (cols <= rows).astype(jnp.float32)  # causal, diagonal inclusive
+    o = jnp.dot(q, s, preferred_element_type=jnp.float32) + jnp.dot(
+        qk * incl, delta, preferred_element_type=jnp.float32
+    )
+
+    s_new = s + jnp.dot(k.T, delta, preferred_element_type=jnp.float32)
+    s_ref[...] = s_new
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    @pl.when(j == nc - 1)
+    def _fin():
+        sout_ref[0] = s_new.astype(sout_ref.dtype)
+
+
+def _chunkwise_pallas(q, k, v, alpha, s0, chunk: int):
+    """Forward pass via the Pallas kernel (not differentiable on its own)."""
+    b, h, l, dk = q.shape
+    dv = v.shape[-1]
+    c = int(chunk)
+    pad = (-l) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        alpha = jnp.pad(alpha, ((0, 0), (0, 0), (0, pad)))
+    lp = l + pad
+    nc = lp // c
+    bh = b * h
+
+    qf = q.reshape(bh, lp, dk)
+    kf = k.reshape(bh, lp, dk)
+    vf = v.reshape(bh, lp, dv)
+    af = alpha.reshape(bh, lp)
+    sf = s0.reshape(bh, dk, dv).astype(jnp.float32)
+
+    out, s_final = pl.pallas_call(
+        functools.partial(_chunk_kernel, nc=nc, c=c),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, c, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, c, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, c), lambda i, j: (i, j)),
+            pl.BlockSpec((1, dk, dv), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, lp, dv), q.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=True,
+    )(qf, kf, vf, af, sf)
+
+    out = out.reshape(b, h, lp, dv)[:, :, :l]
+    return out, s_final.reshape(b, h, dk, dv)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _chunkwise_vjp(chunk, q, k, v, alpha, s0):
+    return _chunkwise_pallas(q, k, v, alpha, s0, chunk)
+
+
+def _chunkwise_vjp_fwd(chunk, q, k, v, alpha, s0):
+    out = _chunkwise_pallas(q, k, v, alpha, s0, chunk)
+    return out, (q, k, v, alpha, s0)
+
+
+def _chunkwise_vjp_bwd(chunk, res, cotangents):
+    """Backward via jax.vjp of the (differentiable) jnp chunkwise reference.
+
+    Forward stays on the Pallas kernel; the backward recomputes the forward
+    with the identical-math jnp formulation and lets XLA fuse its transpose.
+    EXPERIMENTS.md §Perf tracks the cost of this recompute-in-backward
+    choice; a dedicated backward kernel is the documented next optimization.
+    """
+    q, k, v, alpha, s0 = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_, a_, s_: chunkwise_delta_reference(q_, k_, v_, a_, s0=s_, chunk=chunk),
+        q, k, v, alpha, s0,
+    )
+    return vjp(cotangents)
+
+
+_chunkwise_vjp.defvjp(_chunkwise_vjp_fwd, _chunkwise_vjp_bwd)
+
+
+def chunkwise_delta(q, k, v, alpha, s0=None, chunk: int = DEFAULT_CHUNK):
+    """Generalized delta-rule attention, chunkwise-parallel Pallas kernel.
+
+    Args:
+      q, k:  (B, H, L, Dk);  v: (B, H, L, Dv);  alpha: (B, H, L) scalar gate.
+      s0:    optional initial state (B, H, Dk, Dv) — segment continuation /
+             recurrent serving prefill.
+      chunk: chunk size C; L is zero-padded to a multiple of C (padding uses
+             alpha = 0, which is an exact no-op update).
+
+    Differentiable: forward runs the Pallas kernel, backward goes through a
+    custom VJP over the jnp reference (identical math).
+
+    Returns ``(out, final_state)`` with ``out: (B, H, L, Dv)`` in the dtype of
+    ``q`` and ``final_state: (B, H, Dk, Dv)`` float32.
+    """
+    b, h, _, dk = q.shape
+    dv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    return _chunkwise_vjp(int(chunk), q, k, v, alpha, s0)
+
+
+def chunkwise_delta_reference(q, k, v, alpha, s0=None, chunk: int = DEFAULT_CHUNK):
+    """Pure-jnp chunkwise form (same math, no Pallas) — a second oracle that
+    isolates the WY/UT algebra from the Pallas machinery, and the direct
+    template for the Rust mirror in ``rust/src/attention/chunkwise.rs``."""
+    b, h, l, dk = q.shape
+    dv = v.shape[-1]
+    c = int(chunk)
+    pad = (-l) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        alpha = jnp.pad(alpha, ((0, 0), (0, 0), (0, pad)))
+    lp = l + pad
+    nc = lp // c
+
+    qf = q.astype(jnp.float32).reshape(b, h, nc, c, dk)
+    kf = k.astype(jnp.float32).reshape(b, h, nc, c, dk)
+    vf = v.astype(jnp.float32).reshape(b, h, nc, c, dv)
+    af = alpha.astype(jnp.float32).reshape(b, h, nc, c)
+
+    eye = jnp.eye(c, dtype=jnp.float32)
+    strict = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+    incl = jnp.tril(jnp.ones((c, c), jnp.float32))
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def chunk_step(s, inp):
+        qc, kc, vc, ac = inp  # (B,H,C,*)
+        kk = jnp.einsum("bhik,bhjk->bhij", kc, kc)
+        a_mat = strict * (ac[..., :, None] * kk)
+        rhs = jnp.concatenate(
+            [ac[..., :, None] * kc, ac[..., :, None] * vc], axis=-1
+        )
+        wu = _solve_unit_lower(a_mat, rhs, c)
+        w, u = wu[..., :dk], wu[..., dk:]
+        delta = u - jnp.einsum("bhik,bhkv->bhiv", w, s)
+        qk = jnp.einsum("bhik,bhjk->bhij", qc, kc) * incl
+        o = jnp.einsum("bhik,bhkv->bhiv", qc, s) + jnp.einsum(
+            "bhij,bhjv->bhiv", qk, delta
+        )
+        s = s + jnp.einsum("bhik,bhiv->bhkv", kc, delta)
+        return s, o
+
+    xs = (
+        jnp.moveaxis(qf, 2, 0),
+        jnp.moveaxis(kf, 2, 0),
+        jnp.moveaxis(vf, 2, 0),
+        jnp.moveaxis(af, 2, 0),
+    )
+    s_final, outs = jax.lax.scan(chunk_step, s0, xs)
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, lp, dv)[:, :, :l]
+    return out.astype(q.dtype), s_final

@@ -1,0 +1,52 @@
+"""DeltaNet baseline (Schlag et al. 2021; Yang et al. 2024b), paper Eq. 5.
+
+DeltaNet is the order-1 (explicit Euler) member of the integrator family:
+alpha_t = beta_t, with L2-normalized keys (||k_t|| = 1) — normalization is
+what keeps the Euler transition I - beta k k^T contractive for beta in (0, 2).
+Reuses the exact same chunkwise kernel as EFLA; only the gate differs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .chunkwise import DEFAULT_CHUNK, chunkwise_delta
+
+
+def l2_normalize(x, axis=-1, eps=1e-6):
+    """x * rsqrt(max(||x||^2, eps^2)) along ``axis``.
+
+    Written via rsqrt-of-clamped-square so the gradient at x == 0 is exactly
+    0 — the sqrt-then-clamp form has d(sqrt)/dx = inf at 0, and 0 * inf = NaN
+    poisons training whenever a token's key is exactly zero (e.g. dark sMNIST
+    rows through zero-initialized biases)."""
+    xf = x.astype(jnp.float32)
+    ss = jnp.sum(jnp.square(xf), axis=axis, keepdims=True)
+    return (xf * jax.lax.rsqrt(jnp.maximum(ss, eps * eps))).astype(x.dtype)
+
+
+def deltanet_attention(q, k, v, beta, s0=None, chunk: int = DEFAULT_CHUNK, normalize: bool = True):
+    """DeltaNet attention over a full sequence.
+
+    Args mirror ``efla_attention``; ``normalize=True`` applies the paper's
+    L2 normalization to q and k (DeltaNet discards the key norm — exactly the
+    degree of freedom EFLA keeps).
+    """
+    if normalize:
+        q = l2_normalize(q)
+        k = l2_normalize(k)
+    alpha = beta.astype(jnp.float32)
+    return chunkwise_delta(q, k, v, alpha, s0=s0, chunk=chunk)
+
+
+def deltanet_recurrent_step(s, q, k, v, beta, normalize: bool = True):
+    """Single-token DeltaNet decode step (Euler gate), for serving parity."""
+    if normalize:
+        q = l2_normalize(q)
+        k = l2_normalize(k)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    alpha = beta.astype(jnp.float32)
+    stk = jnp.einsum("bhkv,bhk->bhv", s, kf)
+    s_new = s + alpha[..., None, None] * jnp.einsum("bhk,bhv->bhkv", kf, vf - stk)
+    o = jnp.einsum("bhkv,bhk->bhv", s_new, q.astype(jnp.float32))
+    return o.astype(q.dtype), s_new

@@ -1,0 +1,54 @@
+"""Public EFLA attention entry points (paper Eq. 20 + §4).
+
+EFLA = the generalized delta-rule chunkwise kernel driven by the *exact* gate
+alpha_t = (1 - e^{-beta_t ||k_t||^2}) / ||k_t||^2.  Keys are NOT normalized:
+the key norm acts as the dynamic spectral gate (paper §6) and retaining it is
+the extra degree of freedom the paper credits for EFLA's edge (§8).
+"""
+
+import jax.numpy as jnp
+
+from .chunkwise import DEFAULT_CHUNK, chunkwise_delta
+from .gates import EPS_LAMBDA, alpha_efla
+
+
+def efla_attention(q, k, v, beta, s0=None, chunk: int = DEFAULT_CHUNK):
+    """Error-Free Linear Attention over a full sequence.
+
+    Args:
+      q, k: (B, H, L, Dk) — unnormalized keys (the norm is the gate input).
+      v:    (B, H, L, Dv)
+      beta: (B, H, L) per-token step size (sigmoid- or softplus-activated
+            upstream; this function is activation-agnostic).
+      s0:   optional initial state (B, H, Dk, Dv).
+      chunk: chunkwise parallel block size C.
+
+    Returns (out, final_state).
+    """
+    lam = jnp.sum(jnp.square(k.astype(jnp.float32)), axis=-1)  # (B,H,L)
+    alpha = alpha_efla(beta.astype(jnp.float32), lam)
+    return chunkwise_delta(q, k, v, alpha, s0=s0, chunk=chunk)
+
+
+def efla_recurrent_step(s, q, k, v, beta):
+    """Single-token decode step, O(Dk*Dv) — the serving hot path's L2 graph.
+
+        lambda = ||k||^2,  alpha = (1 - e^{-beta lambda}) / lambda
+        S' = S + alpha k (v - S^T k)^T,   o = S'^T q
+
+    Args:
+      s: (B, H, Dk, Dv) float32 running state.
+      q, k: (B, H, Dk);  v: (B, H, Dv);  beta: (B, H).
+
+    Returns (o, s') with o: (B, H, Dv).
+    """
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    bf = beta.astype(jnp.float32)
+    lam = jnp.maximum(jnp.sum(kf * kf, axis=-1), EPS_LAMBDA)  # (B,H)
+    alpha = -jnp.expm1(-bf * lam) / lam
+    stk = jnp.einsum("bhkv,bhk->bhv", s, kf)
+    s_new = s + alpha[..., None, None] * jnp.einsum("bhk,bhv->bhkv", kf, vf - stk)
+    o = jnp.einsum("bhkv,bhk->bhv", s_new, qf)
+    return o.astype(q.dtype), s_new

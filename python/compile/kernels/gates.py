@@ -1,0 +1,90 @@
+"""Scalar gates unifying the integrator family (paper §3, Appendix F).
+
+The delta-rule ODE is  dS/dt = -A_t S + b_t  with A_t = k_t k_t^T (rank-1,
+eigenvalue lambda_t = ||k_t||^2) and b_t = k_t v_t^T.  Because
+A_t^n = lambda_t^{n-1} A_t  (n >= 1, Appendix D) and A_t b_t = lambda_t b_t,
+the order-N Runge-Kutta update (paper Eq. 13)
+
+    S_t = [sum_{n=0}^{N} (-beta A)^n / n!] S_{t-1}
+        + beta [sum_{n=0}^{N-1} (-beta A)^n / (n+1)!] b_t
+
+collapses to the generalized delta rule
+
+    S_t = (I - alpha_N k k^T) S_{t-1} + alpha_N k v^T,
+
+where, writing x = beta * lambda and  g_N(x) = sum_{m=1}^{N} (-x)^m / m!,
+
+    alpha_N = -g_N(x) / lambda.
+
+Checks:  N=1  -> alpha = beta                       (Euler / DeltaNet)
+         N=2  -> alpha = beta (1 - x/2)             (RK-2, Eq. 11)
+         N=4  -> alpha = beta (1 - x/2 + x^2/6 - x^3/24)   (RK-4, Eq. 12)
+         N=inf-> alpha = (1 - e^{-x}) / lambda      (EFLA, Eq. 20)
+
+So the ONLY difference between DeltaNet, RK-N and EFLA is this scalar gate;
+one chunkwise kernel serves the whole family.  EFLA computes the numerator
+with expm1 for precision at small x and clips lambda at EPS_LAMBDA to avoid
+division by zero (paper Appendix A).
+"""
+
+import math
+
+import jax.numpy as jnp
+
+# Paper Appendix A: lower bound on ||k||^2 to prevent division by zero.
+EPS_LAMBDA = 1e-12
+
+
+def gate_series(x, order: int):
+    """g_N(x) = sum_{m=1}^{N} (-x)^m / m!  — truncated Taylor series of e^{-x}-1.
+
+    Evaluated with Horner's scheme for numerical stability; ``x`` is
+    beta*lambda elementwise.  ``order`` is the integrator order N >= 1.
+    """
+    if order < 1:
+        raise ValueError(f"integrator order must be >= 1, got {order}")
+    # Horner: g = -x(1/1! - x(1/2! - x(1/3! - ...)))  i.e.
+    # g = sum_{m=1}^N (-x)^m/m!  ==  acc_1 where acc_m = (-x)/m * (1 + acc_{m+1})
+    acc = jnp.zeros_like(x)
+    for m in range(order, 0, -1):
+        acc = (-x) / m * (1.0 + acc)
+    return acc
+
+
+def alpha_rk(beta, lam, order: int):
+    """Order-N Runge-Kutta gate  alpha_N = -g_N(beta*lambda) / lambda."""
+    lam = jnp.maximum(lam, EPS_LAMBDA)
+    x = beta * lam
+    return -gate_series(x, order) / lam
+
+
+def alpha_euler(beta, lam=None):
+    """Order-1 (explicit Euler) gate: DeltaNet's alpha is just beta."""
+    del lam
+    return beta
+
+
+def alpha_efla(beta, lam):
+    """Exact (RK-inf) gate  alpha = (1 - e^{-beta*lambda}) / lambda  (Eq. 20).
+
+    Uses ``-expm1(-x)`` so the numerator keeps full precision as
+    beta*lambda -> 0, where alpha -> beta (the delta-rule limit, paper §6).
+    """
+    lam = jnp.maximum(lam, EPS_LAMBDA)
+    return -jnp.expm1(-beta * lam) / lam
+
+
+def alpha_named(beta, lam, kind: str, order: int = 4):
+    """Dispatch helper used by the model layer: kind in {efla, euler, rk}."""
+    if kind == "efla":
+        return alpha_efla(beta, lam)
+    if kind == "euler":
+        return alpha_euler(beta, lam)
+    if kind == "rk":
+        return alpha_rk(beta, lam, order)
+    raise ValueError(f"unknown gate kind {kind!r}")
+
+
+def factorial_coeffs(order: int):
+    """[1/1!, 1/2!, ..., 1/order!] — exposed for the rust-side mirrors' tests."""
+    return [1.0 / math.factorial(m) for m in range(1, order + 1)]

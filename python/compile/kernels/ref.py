@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for the generalized delta-rule recurrence.
+
+These are the CORE correctness signal: every Pallas kernel and every chunkwise
+formulation is pytest-checked against ``sequential_delta`` (a literal
+token-by-token ``lax.scan`` of paper Eq. 20/21), and the Rust reference
+implementation mirrors the same math and is cross-checked through golden
+vectors emitted by ``aot.py``.
+
+Shapes follow the (B, H, L, D) convention used throughout the repo:
+  q, k : (B, H, L, Dk)     v : (B, H, L, Dv)     alpha : (B, H, L)
+  out  : (B, H, L, Dv)     state : (B, H, Dk, Dv)
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def sequential_delta_with_state(q, k, v, alpha, s0=None):
+    """Token-by-token generalized delta rule (paper Eq. 20).
+
+        S_t = (I - alpha_t k_t k_t^T) S_{t-1} + alpha_t k_t v_t^T
+            = S_{t-1} + alpha_t k_t (v_t - S_{t-1}^T k_t)^T
+        o_t = S_t^T q_t
+
+    Returns ``(out, final_state)``.  Computation is in float32 regardless of
+    input dtype (state accumulation in low precision is exactly the error
+    source the paper is about).
+    """
+    b, h, l, dk = q.shape
+    dv = v.shape[-1]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    af = alpha.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    else:
+        s0 = s0.astype(jnp.float32)
+
+    def step(s, inp):
+        qt, kt, vt, at = inp  # (B,H,Dk), (B,H,Dk), (B,H,Dv), (B,H)
+        # S^T k : (B,H,Dv)
+        stk = jnp.einsum("bhkv,bhk->bhv", s, kt)
+        s = s + at[..., None, None] * jnp.einsum("bhk,bhv->bhkv", kt, vt - stk)
+        o = jnp.einsum("bhkv,bhk->bhv", s, qt)
+        return s, o
+
+    xs = (
+        jnp.moveaxis(qf, 2, 0),
+        jnp.moveaxis(kf, 2, 0),
+        jnp.moveaxis(vf, 2, 0),
+        jnp.moveaxis(af, 2, 0),
+    )
+    s_final, outs = jax.lax.scan(step, s0, xs)
+    out = jnp.moveaxis(outs, 0, 2).astype(q.dtype)
+    return out, s_final
+
+
+def sequential_delta(q, k, v, alpha, s0=None):
+    """Outputs only — see ``sequential_delta_with_state``."""
+    out, _ = sequential_delta_with_state(q, k, v, alpha, s0)
+    return out
+
+
+def naive_quadratic_delta(q, k, v, alpha):
+    """O(L^2) unrolled form of the same recurrence (paper Eq. 21).
+
+    Materializes every per-token Householder-like factor explicitly:
+
+        S_t = sum_i (prod_{j=i+1..t} (I - a_j k_j k_j^T)) a_i k_i v_i^T
+
+    Deliberately brute force (python loop over L, product over matrices) —
+    only usable for tiny shapes, exists purely as an independent oracle for
+    the oracle.
+    """
+    b, h, l, dk = q.shape
+    dv = v.shape[-1]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    af = alpha.astype(jnp.float32)
+    eye = jnp.eye(dk, dtype=jnp.float32)
+    outs = []
+    s = jnp.zeros((b, h, dk, dv), jnp.float32)
+    for t in range(l):
+        kt = kf[:, :, t]  # (B,H,Dk)
+        vt = vf[:, :, t]
+        at = af[:, :, t]
+        house = eye - at[..., None, None] * jnp.einsum("bhi,bhj->bhij", kt, kt)
+        s = jnp.einsum("bhij,bhjv->bhiv", house, s) + at[..., None, None] * jnp.einsum(
+            "bhk,bhv->bhkv", kt, vt
+        )
+        outs.append(jnp.einsum("bhkv,bhk->bhv", s, qf[:, :, t]))
+    return jnp.stack(outs, axis=2).astype(q.dtype)

@@ -1,0 +1,98 @@
+"""Literal Runge-Kutta integrators of the delta-rule ODE (Appendix F).
+
+Two redundant implementations on purpose:
+
+  * ``rk_integrate``       — the collapsed scalar-gate form (alpha_N from
+                             ``gates.py``) run through the sequential oracle;
+  * ``rk_stage_integrate`` — the *textbook multi-stage* RK scheme computing
+                             slope matrices k_1..k_s on full (Dk, Dv) states.
+
+Their agreement (pytest ``test_rk_stage_equivalence``) validates the algebra
+that lets one chunkwise kernel serve the whole family; their disagreement
+with ``exact_integrate`` as order decreases reproduces the paper's
+error-accumulation analysis (bench ``kernel_throughput`` error sweep).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .gates import alpha_rk, alpha_efla
+from .ref import sequential_delta_with_state
+
+# Butcher tableaus (explicit): (a_lower_rows, b_weights, c_nodes)
+_TABLEAUS = {
+    1: ([], [1.0], [0.0]),
+    2: ([[0.5]], [0.0, 1.0], [0.0, 0.5]),  # midpoint, matches Appendix F RK-2
+    4: (
+        [[0.5], [0.0, 0.5], [0.0, 0.0, 1.0]],
+        [1.0 / 6, 1.0 / 3, 1.0 / 3, 1.0 / 6],
+        [0.0, 0.5, 0.5, 1.0],
+    ),
+}
+
+
+def rk_integrate(q, k, v, beta, order: int, s0=None):
+    """Order-N RK via the collapsed gate alpha_N (paper Eq. 13 + Appendix D)."""
+    lam = jnp.sum(jnp.square(k.astype(jnp.float32)), axis=-1)
+    alpha = alpha_rk(beta.astype(jnp.float32), lam, order)
+    return sequential_delta_with_state(q, k, v, alpha, s0)
+
+
+def exact_integrate(q, k, v, beta, s0=None):
+    """RK-inf / exact ODE solution == EFLA, via the sequential oracle."""
+    lam = jnp.sum(jnp.square(k.astype(jnp.float32)), axis=-1)
+    alpha = alpha_efla(beta.astype(jnp.float32), lam)
+    return sequential_delta_with_state(q, k, v, alpha, s0)
+
+
+def rk_stage_integrate(q, k, v, beta, order: int, s0=None):
+    """Textbook multi-stage explicit RK on  dS/dt = -k k^T S + k v^T.
+
+    Stage slopes are full (B, H, Dk, Dv) matrices:
+        f(S) = -k (k^T S) + k v^T          (ZOH: k, v frozen within the step)
+        g_i  = f(S + beta * sum_j a_ij g_j)
+        S'   = S + beta * sum_i b_i g_i
+        o_t  = S'^T q_t
+    """
+    if order not in _TABLEAUS:
+        raise ValueError(f"no tableau for order {order}; have {sorted(_TABLEAUS)}")
+    a_rows, b_w, _ = _TABLEAUS[order]
+
+    bsz, h, l, dk = q.shape
+    dv = v.shape[-1]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    bf = beta.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, dk, dv), jnp.float32)
+
+    def f(s, kt, vt):
+        stk = jnp.einsum("bhkv,bhk->bhv", s, kt)
+        return jnp.einsum("bhk,bhv->bhkv", kt, vt - stk)
+
+    def step(s, inp):
+        qt, kt, vt, bt = inp
+        bt_ = bt[..., None, None]
+        slopes = []
+        for i in range(order):
+            si = s
+            for j, aij in enumerate(a_rows[i - 1] if i > 0 else []):
+                if aij != 0.0:
+                    si = si + bt_ * aij * slopes[j]
+            slopes.append(f(si, kt, vt))
+        s_new = s
+        for bi, gi in zip(b_w, slopes):
+            if bi != 0.0:
+                s_new = s_new + bt_ * bi * gi
+        o = jnp.einsum("bhkv,bhk->bhv", s_new, qt)
+        return s_new, o
+
+    xs = (
+        jnp.moveaxis(qf, 2, 0),
+        jnp.moveaxis(kf, 2, 0),
+        jnp.moveaxis(vf, 2, 0),
+        jnp.moveaxis(bf, 2, 0),
+    )
+    s_final, outs = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(outs, 0, 2).astype(q.dtype), s_final

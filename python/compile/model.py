@@ -1,0 +1,358 @@
+"""Layer-2 JAX model: transformer LM with EFLA/DeltaNet token mixers.
+
+Architecture follows Yang et al. 2024b (the paper adopts it verbatim, §5.2):
+each block is {RMSNorm -> token mixer -> residual; RMSNorm -> SwiGLU MLP ->
+residual}; the token mixer projects q/k/v, applies a short depthwise causal
+conv (kernel size 4, paper Appendix A) + SiLU to each, computes a per-head
+step size beta, and runs the chunkwise delta-rule kernel with the
+variant-specific gate:
+
+  deltanet       : L2-normalized q/k, alpha = beta = sigmoid(w_b x)
+  efla           : unnormalized keys, alpha = (1 - e^{-beta lam}) / lam
+  efla_adaptive  : beta~ = softplus(a) * beta (learnable per-head scalar a,
+                   "EFLA + Adaptive Decay", §5.2)
+  efla_loose     : beta = softplus(w_b x)  ("EFLA + Loose beta", §5.2)
+
+Params live in a FLAT OrderedDict[str, jnp.ndarray] so the AOT manifest and
+the Rust runtime agree on ordering without a pytree protocol.
+
+Everything here is build-time Python: `aot.py` lowers init / train-step /
+eval / prefill / decode graphs to HLO text once, and the Rust coordinator is
+the only thing that ever executes them.
+"""
+
+import dataclasses
+import math
+from collections import OrderedDict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import chunkwise_delta, l2_normalize
+from .kernels.gates import EPS_LAMBDA, alpha_efla
+
+CONV_K = 4  # short-conv kernel size (paper Appendix A)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyperparameters (baked into each artifact)."""
+
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    head_dim: int = 32  # Dk = Dv per head
+    mlp_mult: int = 4  # SwiGLU hidden = mlp_mult * d_model
+    chunk: int = 64
+    mixer: str = "efla"  # efla | deltanet | efla_adaptive | efla_loose
+    norm_eps: float = 1e-6
+
+    @property
+    def inner(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def param_count(self) -> int:
+        shapes = init_params(jax.random.PRNGKey(0), self, abstract=True)
+        return sum(int(math.prod(s.shape)) for s in shapes.values())
+
+
+PRESETS = {
+    "tiny": ModelConfig(vocab=256, d_model=64, n_layers=2, n_heads=2, head_dim=32, chunk=32),
+    # "mini" is the Table-1 bench workhorse: big enough that the token-mixer
+    # contrast shows, small enough that 4 variants train in minutes on the
+    # single-core CPU testbed (DESIGN.md §5 scale substitution).
+    "mini": ModelConfig(vocab=1024, d_model=192, n_layers=4, n_heads=3, head_dim=64, chunk=32),
+    "small": ModelConfig(vocab=2048, d_model=320, n_layers=6, n_heads=5, head_dim=64),
+    "medium": ModelConfig(vocab=4096, d_model=512, n_layers=8, n_heads=8, head_dim=64),
+    "100m": ModelConfig(vocab=8192, d_model=768, n_layers=10, n_heads=6, head_dim=128),
+}
+
+
+def preset_with_mixer(name: str, mixer: str) -> ModelConfig:
+    return dataclasses.replace(PRESETS[name], mixer=mixer)
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+
+def _param_specs(cfg: ModelConfig):
+    """Yield (name, shape, init_kind). init_kind: normal | zeros | ones."""
+    d, inner, h = cfg.d_model, cfg.inner, cfg.n_heads
+    yield "embed", (cfg.vocab, d), "normal"
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        yield p + "norm_attn", (d,), "ones"
+        yield p + "wq", (d, inner), "normal"
+        yield p + "wk", (d, inner), "normal"
+        yield p + "wv", (d, inner), "normal"
+        yield p + "conv_q", (CONV_K, inner), "conv"
+        yield p + "conv_k", (CONV_K, inner), "conv"
+        yield p + "conv_v", (CONV_K, inner), "conv"
+        yield p + "w_beta", (d, h), "normal"
+        yield p + "adecay", (h,), "zeros"  # softplus(0)=log 2; only used by efla_adaptive
+        yield p + "norm_out", (cfg.head_dim,), "ones"
+        yield p + "wo", (inner, d), "normal"
+        yield p + "norm_mlp", (d,), "ones"
+        yield p + "w_gate", (d, cfg.mlp_mult * d), "normal"
+        yield p + "w_up", (d, cfg.mlp_mult * d), "normal"
+        yield p + "w_down", (cfg.mlp_mult * d, d), "normal"
+    yield "norm_f", (d,), "ones"
+
+
+def init_params(key, cfg: ModelConfig, abstract: bool = False) -> "OrderedDict[str, jnp.ndarray]":
+    """Flat, deterministically-ordered parameter dict.
+
+    With ``abstract=True`` returns ShapeDtypeStructs (no RNG) — used for
+    manifests and param counting.
+    """
+    params = OrderedDict()
+    specs = list(_param_specs(cfg))
+    keys = jax.random.split(key, len(specs))
+    for (name, shape, kind), k in zip(specs, keys):
+        if abstract:
+            params[name] = jax.ShapeDtypeStruct(shape, jnp.float32)
+            continue
+        if kind == "normal":
+            fan_in = shape[0]
+            params[name] = jax.random.normal(k, shape, jnp.float32) * (fan_in**-0.5)
+        elif kind == "conv":
+            # near-identity causal conv: last tap ~ 1, others small
+            w = jax.random.normal(k, shape, jnp.float32) * 0.02
+            params[name] = w.at[-1].add(1.0)
+        elif kind == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, gain, eps):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def causal_conv(x, w):
+    """Depthwise causal conv along the sequence axis.
+
+    x: (B, L, C);  w: (K, C).  out[t] = sum_j w[j] * x[t - (K-1) + j].
+    """
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + xp[:, j : j + x.shape[1]] * w[j]
+    return out
+
+
+def conv_step(cache, x_t, w):
+    """Single-token causal conv. cache: (B, K-1, C) previous inputs.
+
+    Returns (out_t, new_cache)."""
+    k = w.shape[0]
+    window = jnp.concatenate([cache, x_t[:, None]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window, w)
+    return out, window[:, 1:]
+
+
+def _split_heads(x, h, dh):
+    b, l, _ = x.shape
+    return x.reshape(b, l, h, dh).transpose(0, 2, 1, 3)  # (B,H,L,Dh)
+
+
+def _merge_heads(x):
+    b, h, l, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, h * dh)
+
+
+def _gate_alpha(cfg: ModelConfig, params, prefix, x, k_heads):
+    """Per-token scalar gate alpha (B,H,L) + the possibly-normalized q/k flag."""
+    b_logits = jnp.einsum("bld,dh->blh", x, params[prefix + "w_beta"])  # (B,L,H)
+    if cfg.mixer == "efla_loose":
+        beta = jax.nn.softplus(b_logits)
+    else:
+        beta = jax.nn.sigmoid(b_logits)
+    if cfg.mixer == "efla_adaptive":
+        beta = beta * jax.nn.softplus(params[prefix + "adecay"])[None, None, :]
+    beta = beta.transpose(0, 2, 1)  # (B,H,L)
+    if cfg.mixer == "deltanet":
+        return beta  # alpha = beta (Euler gate); keys normalized by caller
+    lam = jnp.sum(jnp.square(k_heads), axis=-1)  # (B,H,L)
+    return alpha_efla(beta, lam)
+
+
+def mixer_forward(cfg: ModelConfig, params, prefix, x, s0=None):
+    """Token mixer over a full sequence. x: (B, L, D). Returns (out, s_final)."""
+    q = causal_conv(jnp.einsum("bld,de->ble", x, params[prefix + "wq"]), params[prefix + "conv_q"])
+    k = causal_conv(jnp.einsum("bld,de->ble", x, params[prefix + "wk"]), params[prefix + "conv_k"])
+    v = causal_conv(jnp.einsum("bld,de->ble", x, params[prefix + "wv"]), params[prefix + "conv_v"])
+    q, k, v = jax.nn.silu(q), jax.nn.silu(k), jax.nn.silu(v)
+
+    q = _split_heads(q, cfg.n_heads, cfg.head_dim)
+    k = _split_heads(k, cfg.n_heads, cfg.head_dim)
+    v = _split_heads(v, cfg.n_heads, cfg.head_dim)
+
+    if cfg.mixer == "deltanet":
+        q, k = l2_normalize(q), l2_normalize(k)
+    alpha = _gate_alpha(cfg, params, prefix, x, k)
+
+    o, s_final = chunkwise_delta(q, k, v, alpha, s0=s0, chunk=cfg.chunk)
+    o = rms_norm(o, params[prefix + "norm_out"], cfg.norm_eps)  # per-head norm
+    return jnp.einsum("ble,ed->bld", _merge_heads(o), params[prefix + "wo"]), s_final
+
+
+def mlp_forward(cfg: ModelConfig, params, prefix, x):
+    g = jax.nn.silu(jnp.einsum("bld,df->blf", x, params[prefix + "w_gate"]))
+    u = jnp.einsum("bld,df->blf", x, params[prefix + "w_up"])
+    return jnp.einsum("blf,fd->bld", g * u, params[prefix + "w_down"])
+
+
+def forward(cfg: ModelConfig, params, tokens, s0_list=None, return_states: bool = False):
+    """Full LM forward. tokens: (B, L) int32 -> logits (B, L, vocab)."""
+    x = params["embed"][tokens]  # (B, L, D)
+    states = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rms_norm(x, params[p + "norm_attn"], cfg.norm_eps)
+        s0 = None if s0_list is None else s0_list[i]
+        mixed, s_f = mixer_forward(cfg, params, p, h, s0=s0)
+        x = x + mixed
+        h = rms_norm(x, params[p + "norm_mlp"], cfg.norm_eps)
+        x = x + mlp_forward(cfg, params, p, h)
+        states.append(s_f)
+    x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bld,vd->blv", x, params["embed"])  # tied head
+    if return_states:
+        return logits, states
+    return logits
+
+
+def cross_entropy(logits, targets):
+    """Masked CE. targets: (B, L) int32, -1 = ignore.
+
+    Returns (loss_mean, loss_sum, count, correct)."""
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0] * mask
+    correct = (jnp.argmax(logits, axis=-1) == tgt).astype(jnp.float32) * mask
+    count = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / count, nll.sum(), mask.sum(), correct.sum()
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets):
+    logits = forward(cfg, params, tokens)
+    loss, _, _, _ = cross_entropy(logits, targets)
+    return loss
+
+
+# --------------------------------------------------------------------------
+# Recurrent (serving) path: O(1) per-token state
+# --------------------------------------------------------------------------
+
+
+def zero_decode_state(cfg: ModelConfig, batch: int):
+    """Flat OrderedDict of per-layer recurrent state (served by Rust).
+
+    Per layer: conv caches for q/k/v projections ((B, K-1, inner) each) and
+    the attention state S ((B, H, Dk, Dv))."""
+    st = OrderedDict()
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        for nm in ("cache_q", "cache_k", "cache_v"):
+            st[p + nm] = jnp.zeros((batch, CONV_K - 1, cfg.inner), jnp.float32)
+        st[p + "s"] = jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32)
+    return st
+
+
+def decode_step(cfg: ModelConfig, params, state, token):
+    """One-token decode: token (B,) int32 -> (logits (B, vocab), new_state).
+
+    This is the constant-memory inference path linear attention buys: no KV
+    cache, just (conv caches + S) per layer."""
+    x = params["embed"][token]  # (B, D)
+    new_state = OrderedDict()
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rms_norm(x, params[p + "norm_attn"], cfg.norm_eps)
+        q_t = h @ params[p + "wq"]
+        k_t = h @ params[p + "wk"]
+        v_t = h @ params[p + "wv"]
+        q_t, cq = conv_step(state[p + "cache_q"], q_t, params[p + "conv_q"])
+        k_t, ck = conv_step(state[p + "cache_k"], k_t, params[p + "conv_k"])
+        v_t, cv = conv_step(state[p + "cache_v"], v_t, params[p + "conv_v"])
+        q_t, k_t, v_t = jax.nn.silu(q_t), jax.nn.silu(k_t), jax.nn.silu(v_t)
+
+        b, inner = q_t.shape
+        hh, dh = cfg.n_heads, cfg.head_dim
+        qh = q_t.reshape(b, hh, dh)
+        kh = k_t.reshape(b, hh, dh)
+        vh = v_t.reshape(b, hh, dh)
+
+        b_logits = h @ params[p + "w_beta"]  # (B, H)
+        if cfg.mixer == "efla_loose":
+            beta = jax.nn.softplus(b_logits)
+        else:
+            beta = jax.nn.sigmoid(b_logits)
+        if cfg.mixer == "efla_adaptive":
+            beta = beta * jax.nn.softplus(params[p + "adecay"])[None, :]
+
+        if cfg.mixer == "deltanet":
+            qh, kh = l2_normalize(qh), l2_normalize(kh)
+            alpha = beta
+        else:
+            lam = jnp.maximum(jnp.sum(kh * kh, axis=-1), EPS_LAMBDA)
+            alpha = -jnp.expm1(-beta * lam) / lam
+
+        s = state[p + "s"]
+        stk = jnp.einsum("bhkv,bhk->bhv", s, kh)
+        s_new = s + alpha[..., None, None] * jnp.einsum("bhk,bhv->bhkv", kh, vh - stk)
+        o = jnp.einsum("bhkv,bhk->bhv", s_new, qh)  # (B, H, Dv)
+        o = rms_norm(o, params[p + "norm_out"], cfg.norm_eps)
+        x = x + o.reshape(b, inner) @ params[p + "wo"]
+
+        hm = rms_norm(x, params[p + "norm_mlp"], cfg.norm_eps)
+        g = jax.nn.silu(hm @ params[p + "w_gate"])
+        u = hm @ params[p + "w_up"]
+        x = x + (g * u) @ params[p + "w_down"]
+
+        new_state[p + "cache_q"] = cq
+        new_state[p + "cache_k"] = ck
+        new_state[p + "cache_v"] = cv
+        new_state[p + "s"] = s_new
+    x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return logits, new_state
+
+
+def prefill(cfg: ModelConfig, params, tokens):
+    """Chunkwise prefill: returns (last-token logits, decode state).
+
+    Conv caches are rebuilt from the last K-1 *projected pre-conv* inputs, so
+    prefill -> decode_step continuation is exact."""
+    b, l = tokens.shape
+    x = params["embed"][tokens]
+    state = OrderedDict()
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rms_norm(x, params[p + "norm_attn"], cfg.norm_eps)
+        for nm, w in (("cache_q", "wq"), ("cache_k", "wk"), ("cache_v", "wv")):
+            proj = jnp.einsum("bld,de->ble", h, params[p + w])
+            pad = jnp.pad(proj, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+            state[p + nm] = pad[:, l : l + CONV_K - 1]  # last K-1 pre-conv inputs
+        mixed, s_f = mixer_forward(cfg, params, p, h)
+        x = x + mixed
+        hm = rms_norm(x, params[p + "norm_mlp"], cfg.norm_eps)
+        x = x + mlp_forward(cfg, params, p, hm)
+        state[p + "s"] = s_f
+    x = rms_norm(x[:, -1], params["norm_f"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return logits, state

@@ -1,0 +1,93 @@
+"""Build-time training graphs: AdamW + grad-clip fwd/bwd as one jitted step.
+
+The entire optimizer lives inside the HLO artifact: the Rust coordinator only
+threads (params, m, v) buffers through the step executable and supplies the
+scalar learning rate (L3 owns the schedule).  All state is float32.
+"""
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from .model import ModelConfig, cross_entropy, forward, loss_fn
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.1  # paper Appendix A
+GRAD_CLIP = 1.0  # paper Appendix A
+
+
+def _decay_mask(name: str, p) -> bool:
+    """Weight decay on matrices only; norms/biases/scalars exempt."""
+    return p.ndim >= 2
+
+
+def zero_opt_state(params):
+    m = OrderedDict((k, jnp.zeros_like(v)) for k, v in params.items())
+    v = OrderedDict((k, jnp.zeros_like(vv)) for k, vv in params.items())
+    return m, v
+
+
+def global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads.values()))
+
+
+def adamw_update(params, grads, m, v, step, lr):
+    """AdamW with bias correction + decoupled weight decay + global-norm clip.
+
+    ``step`` is the 1-based float32 step counter (provided by L3).
+    Returns (params', m', v', gnorm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, GRAD_CLIP / jnp.maximum(gnorm, 1e-12))
+    bc1 = 1.0 - ADAM_B1**step
+    bc2 = 1.0 - ADAM_B2**step
+    new_p, new_m, new_v = OrderedDict(), OrderedDict(), OrderedDict()
+    for k in params:
+        g = grads[k] * scale
+        mk = ADAM_B1 * m[k] + (1.0 - ADAM_B1) * g
+        vk = ADAM_B2 * v[k] + (1.0 - ADAM_B2) * jnp.square(g)
+        update = (mk / bc1) / (jnp.sqrt(vk / bc2) + ADAM_EPS)
+        if _decay_mask(k, params[k]):
+            update = update + WEIGHT_DECAY * params[k]
+        new_p[k] = params[k] - lr * update
+        new_m[k] = mk
+        new_v[k] = vk
+    return new_p, new_m, new_v, gnorm
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, tokens, targets, lr):
+    """One fused fwd+bwd+AdamW step.
+
+    tokens/targets: (B, L) int32, targets use -1 for ignored positions.
+    Returns (params', m', v', loss, gnorm)."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(params)
+    new_p, new_m, new_v, gnorm = adamw_update(params, grads, m, v, step, lr)
+    return new_p, new_m, new_v, loss, gnorm
+
+
+def eval_step(cfg: ModelConfig, params, tokens, targets):
+    """Eval statistics for perplexity/accuracy aggregation on the Rust side.
+
+    Returns (loss_sum, token_count, correct_count)."""
+    logits = forward(cfg, params, tokens)
+    _, loss_sum, count, correct = cross_entropy(logits, targets)
+    return loss_sum, count, correct
+
+
+def logits_last(cfg: ModelConfig, params, tokens):
+    """Logits at the final position only — used by downstream probes."""
+    logits = forward(cfg, params, tokens)
+    return logits[:, -1]
+
+
+def cosine_lr(step: float, peak: float, warmup: float, total: float, floor: float) -> float:
+    """Host-side schedule mirror (the authoritative copy lives in Rust;
+    this one exists so python tests can cross-check the Rust mirror)."""
+    import math
+
+    if step < warmup:
+        return peak * step / max(warmup, 1.0)
+    t = min(1.0, (step - warmup) / max(total - warmup, 1.0))
+    return floor + 0.5 * (peak - floor) * (1.0 + math.cos(math.pi * t))

@@ -1,0 +1,182 @@
+"""L2 model graphs: shapes, variants, training dynamics, serving parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import classifier as clf
+from compile import model as mdl
+from compile import train as trn
+
+CFG = mdl.preset_with_mixer("tiny", "efla")
+
+
+def params_for(cfg, seed=0):
+    return mdl.init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def tokens_for(cfg, b=2, l=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (b, l), 0, cfg.vocab)
+    tgts = jnp.concatenate([toks[:, 1:], -jnp.ones((b, 1), jnp.int32)], axis=1)
+    return toks, tgts
+
+
+class TestForward:
+    @pytest.mark.parametrize("mixer", ["efla", "deltanet", "efla_adaptive", "efla_loose"])
+    def test_variants_forward_shapes(self, mixer):
+        cfg = mdl.preset_with_mixer("tiny", mixer)
+        params = params_for(cfg)
+        toks, _ = tokens_for(cfg)
+        logits = mdl.forward(cfg, params, toks)
+        assert logits.shape == (2, 32, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_variants_differ_numerically(self):
+        outs = {}
+        for mixer in ["efla", "deltanet", "efla_loose"]:
+            cfg = mdl.preset_with_mixer("tiny", mixer)
+            params = params_for(cfg, seed=0)
+            toks, _ = tokens_for(cfg)
+            outs[mixer] = mdl.forward(cfg, params, toks)
+        assert float(jnp.abs(outs["efla"] - outs["deltanet"]).max()) > 1e-3
+        assert float(jnp.abs(outs["efla"] - outs["efla_loose"]).max()) > 1e-3
+
+    def test_causality(self):
+        # changing a future token must not change past logits
+        params = params_for(CFG)
+        toks, _ = tokens_for(CFG)
+        logits1 = mdl.forward(CFG, params, toks)
+        toks2 = toks.at[:, 20].set((toks[:, 20] + 1) % CFG.vocab)
+        logits2 = mdl.forward(CFG, params, toks2)
+        np.testing.assert_allclose(logits1[:, :20], logits2[:, :20], atol=1e-5)
+        assert float(jnp.abs(logits1[:, 20:] - logits2[:, 20:]).max()) > 1e-4
+
+    def test_param_count_matches_spec(self):
+        # tiny: embed 256*64 + per-layer + final norm; just pin the number so
+        # architecture drift is caught.
+        assert CFG.param_count() == 149_636
+
+    def test_100m_preset_is_about_100m(self):
+        n = mdl.PRESETS["100m"].param_count()
+        assert 80e6 < n < 130e6, n
+
+
+class TestTraining:
+    def test_loss_decreases_overfitting(self):
+        params = params_for(CFG)
+        m, v = trn.zero_opt_state(params)
+        toks, tgts = tokens_for(CFG)
+        step_fn = jax.jit(lambda p, m, v, s, lr: trn.train_step(CFG, p, m, v, s, toks, tgts, lr))
+        losses = []
+        p = params
+        for s in range(1, 21):
+            p, m, v, loss, gnorm = step_fn(p, m, v, float(s), 2e-3)
+            losses.append(float(loss))
+            assert np.isfinite(float(gnorm))
+        assert losses[-1] < losses[0] - 1.0, losses[::5]
+
+    def test_grad_clip_bounds_update(self):
+        params = params_for(CFG)
+        grads = {k: jnp.ones_like(v) * 100.0 for k, v in params.items()}
+        m, v = trn.zero_opt_state(params)
+        _, _, _, gnorm = trn.adamw_update(params, grads, m, v, 1.0, 1e-3)
+        assert float(gnorm) > trn.GRAD_CLIP  # reported pre-clip norm
+
+    def test_masked_positions_do_not_contribute(self):
+        params = params_for(CFG)
+        toks, tgts = tokens_for(CFG)
+        all_masked = -jnp.ones_like(tgts)
+        loss = mdl.loss_fn(CFG, params, toks, all_masked)
+        assert float(loss) == 0.0
+
+    def test_eval_step_consistency(self):
+        params = params_for(CFG)
+        toks, tgts = tokens_for(CFG)
+        loss_sum, count, correct = trn.eval_step(CFG, params, toks, tgts)
+        assert float(count) == 2 * 31  # one masked position per row
+        assert 0 <= float(correct) <= float(count)
+        loss = mdl.loss_fn(CFG, params, toks, tgts)
+        np.testing.assert_allclose(float(loss_sum) / float(count), float(loss), rtol=1e-5)
+
+    def test_cosine_lr_mirror(self):
+        # python mirror == rust mirror semantics (sanity of the contract)
+        lr0 = trn.cosine_lr(0.0, 3e-4, 100.0, 1000.0, 3e-5)
+        lr_peak = trn.cosine_lr(100.0, 3e-4, 100.0, 1000.0, 3e-5)
+        lr_end = trn.cosine_lr(1000.0, 3e-4, 100.0, 1000.0, 3e-5)
+        assert lr0 == 0.0
+        assert abs(lr_peak - 3e-4) < 1e-9
+        assert abs(lr_end - 3e-5) < 1e-9
+
+
+class TestServingParity:
+    def test_prefill_then_decode_equals_forward(self):
+        params = params_for(CFG, seed=3)
+        toks, _ = tokens_for(CFG, b=4, l=33, seed=5)
+        # prefill on the first 32, decode token 32
+        logits_pf, state = mdl.prefill(CFG, params, toks[:, :32])
+        full32 = mdl.forward(CFG, params, toks[:, :32])[:, -1]
+        np.testing.assert_allclose(logits_pf, full32, atol=1e-4)
+        logits_dec, state = mdl.decode_step(CFG, params, state, toks[:, 32])
+        full33 = mdl.forward(CFG, params, toks[:, :33])[:, -1]
+        np.testing.assert_allclose(logits_dec, full33, atol=1e-4)
+
+    def test_pure_decode_from_zero_state_matches_forward(self):
+        params = params_for(CFG, seed=4)
+        toks, _ = tokens_for(CFG, b=2, l=8, seed=6)
+        state = mdl.zero_decode_state(CFG, 2)
+        for t in range(8):
+            logits, state = mdl.decode_step(CFG, params, state, toks[:, t])
+        full = mdl.forward(CFG, params, toks)[:, -1]
+        np.testing.assert_allclose(logits, full, atol=1e-4)
+
+    def test_decode_state_shapes_stable(self):
+        params = params_for(CFG)
+        state = mdl.zero_decode_state(CFG, 2)
+        shapes0 = {k: v.shape for k, v in state.items()}
+        tok = jnp.zeros((2,), jnp.int32)
+        _, state = mdl.decode_step(CFG, params, state, tok)
+        assert {k: v.shape for k, v in state.items()} == shapes0
+
+
+class TestClassifier:
+    def test_forward_and_train(self):
+        cfg = clf.ClassifierConfig(n_layers=1)
+        params = clf.init_params(jax.random.PRNGKey(0), cfg)
+        key = jax.random.PRNGKey(1)
+        px = jax.random.uniform(key, (4, clf.SEQ_LEN))
+        labels = jnp.array([0, 3, 7, 9], jnp.int32)
+        logits = clf.forward(cfg, params, px)
+        assert logits.shape == (4, 10)
+        m, v = trn.zero_opt_state(params)
+        step_fn = jax.jit(
+            lambda p, m, v, s: clf.train_step(cfg, p, m, v, s, px, labels, 3e-3)
+        )
+        losses = []
+        p = params
+        for s in range(1, 16):
+            p, m, v, loss, _ = step_fn(p, m, v, float(s))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+
+    def test_deltanet_zero_pixel_rows_have_finite_grads(self):
+        # Regression: dark pixel runs (common in sMNIST) make some tokens'
+        # keys exactly zero; l2_normalize must not produce 0 * inf = NaN in
+        # the backward pass (sqrt-then-clamp did; rsqrt-of-clamped doesn't).
+        cfg = clf.ClassifierConfig(n_layers=1, mixer="deltanet")
+        params = clf.init_params(jax.random.PRNGKey(0), cfg)
+        px = jnp.zeros((2, clf.SEQ_LEN))  # all-dark images: worst case
+        labels = jnp.array([0, 1], jnp.int32)
+        g = jax.grad(lambda p: clf.loss_fn(cfg, p, px, labels))(params)
+        for k, v in g.items():
+            assert bool(jnp.all(jnp.isfinite(v))), f"non-finite grad in {k}"
+
+    def test_eval_step_counts(self):
+        cfg = clf.ClassifierConfig(n_layers=1)
+        params = clf.init_params(jax.random.PRNGKey(0), cfg)
+        px = jnp.zeros((4, clf.SEQ_LEN))
+        labels = jnp.array([1, 2, 3, 4], jnp.int32)
+        loss_sum, correct = clf.eval_step(cfg, params, px, labels)
+        assert float(loss_sum) > 0
+        assert 0 <= float(correct) <= 4

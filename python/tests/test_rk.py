@@ -1,0 +1,82 @@
+"""Runge-Kutta family: stage-form == gate-form, order convergence, and the
+error-accumulation analysis behind paper §3/§6."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.rk import exact_integrate, rk_integrate, rk_stage_integrate
+from compile.kernels.ref import sequential_delta_with_state
+from compile.kernels.gates import alpha_efla
+
+
+def make(seed, l=48, d=8, k_scale=0.25):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (1, 2, l, d), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, l, d), jnp.float32) * k_scale
+    v = jax.random.normal(ks[2], (1, 2, l, d), jnp.float32)
+    beta = jax.nn.sigmoid(jax.random.normal(ks[3], (1, 2, l), jnp.float32))
+    return q, k, v, beta
+
+
+class TestStageGateEquivalence:
+    """The collapsed scalar gate (Appendix D) is EXACTLY the multi-stage RK
+    update for the rank-1 linear ODE — per order."""
+
+    @pytest.mark.parametrize("order", [1, 2, 4])
+    def test_stage_equals_gate(self, order):
+        q, k, v, beta = make(order)
+        o_gate, s_gate = rk_integrate(q, k, v, beta, order)
+        o_stage, s_stage = rk_stage_integrate(q, k, v, beta, order)
+        np.testing.assert_allclose(o_gate, o_stage, atol=1e-4)
+        np.testing.assert_allclose(s_gate, s_stage, atol=1e-4)
+
+    def test_unsupported_order_raises(self):
+        q, k, v, beta = make(0, l=4)
+        with pytest.raises(ValueError):
+            rk_stage_integrate(q, k, v, beta, 3)
+
+
+class TestOrderConvergence:
+    def test_error_vs_exact_decreases_with_order(self):
+        q, k, v, beta = make(7, l=64, d=8, k_scale=0.35)
+        o_exact, _ = exact_integrate(q, k, v, beta)
+        errs = []
+        for order in (1, 2, 4):
+            o_n, _ = rk_integrate(q, k, v, beta, order)
+            errs.append(float(jnp.abs(o_n - o_exact).max()))
+        assert errs[0] > errs[1] > errs[2], errs
+        # absolute error accumulates over L=64 tokens (occasional stiff
+        # tokens dominate the max); order-4 must still clearly beat Euler
+        assert errs[2] < errs[0] / 3.0, errs
+
+    def test_exact_equals_efla_gate(self):
+        q, k, v, beta = make(9)
+        o1, s1 = exact_integrate(q, k, v, beta)
+        lam = jnp.sum(k * k, -1)
+        o2, s2 = sequential_delta_with_state(q, k, v, alpha_efla(beta, lam))
+        np.testing.assert_allclose(o1, o2, atol=1e-6)
+        np.testing.assert_allclose(s1, s2, atol=1e-6)
+
+    def test_euler_error_grows_with_sequence_length(self):
+        # error ACCUMULATION: Euler drifts further from exact as L grows.
+        q, k, v, beta = make(11, l=128, d=8, k_scale=0.4)
+        o_exact, _ = exact_integrate(q, k, v, beta)
+        o_euler, _ = rk_integrate(q, k, v, beta, 1)
+        err = jnp.abs(o_euler - o_exact).max(axis=(0, 1, 3))  # per position
+        # compare mean error in the first vs last quarter
+        first = float(err[:32].mean())
+        last = float(err[-32:].mean())
+        assert last > first, (first, last)
+
+
+class TestStabilityRegimes:
+    def test_euler_unstable_efla_stable_at_high_stiffness(self):
+        q, k, v, beta = make(13, l=96, d=8, k_scale=3.0)  # beta*lambda >> 2
+        _, s_euler = rk_integrate(q, k, v, beta, 1)
+        _, s_exact = exact_integrate(q, k, v, beta)
+        euler_norm = float(jnp.abs(s_euler).max())
+        exact_norm = float(jnp.abs(s_exact).max())
+        assert euler_norm > 1e4 or not np.isfinite(euler_norm)
+        assert exact_norm < 1e3

@@ -1,0 +1,211 @@
+//! Chunkwise-parallel WY/UT form — Rust mirror of the Pallas kernel.
+//!
+//! Direct transcription of `python/compile/kernels/chunkwise.py` (paper
+//! Eqs. 21-32): per chunk of size C,
+//!
+//! ```text
+//! A    = strict_tril(diag(alpha) K K^T)
+//! T    = (I + A)^{-1} diag(alpha)          — forward substitution here
+//! W    = T K ;  U = T V
+//! O    = Q S + tril(Q K^T) (U - W S)
+//! S'   = S + K^T (U - W S)
+//! ```
+//!
+//! The unit-lower-triangular inverse is computed by forward substitution
+//! (O(C^2) dot products) instead of the kernel's MXU-friendly nilpotent
+//! doubling — on a scalar CPU the substitution is cheaper. Equality of the
+//! two is exactly what the golden-vector test pins.
+
+use crate::tensor::{matmul, matmul_nt, Tensor};
+
+use super::gates::{Gate, EPS_LAMBDA};
+
+/// Chunkwise generalized delta rule, single head.
+///
+/// q, k: (L, Dk); v: (L, Dv); beta: len L; returns (out (L, Dv), S (Dk, Dv)).
+/// `l` need not divide `chunk`; the tail chunk is handled exactly.
+pub fn chunkwise_delta(
+    gate: Gate,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    beta: &[f32],
+    chunk: usize,
+) -> (Tensor, Tensor) {
+    assert!(chunk >= 1);
+    let l = q.shape()[0];
+    let dk = q.shape()[1];
+    let dv = v.shape()[1];
+    assert_eq!(k.shape(), &[l, dk]);
+    assert_eq!(v.shape(), &[l, dv]);
+    assert_eq!(beta.len(), l);
+
+    // Precompute per-token alpha.
+    let alpha: Vec<f32> = (0..l)
+        .map(|t| {
+            let lam: f32 = k.row(t).iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
+            gate.alpha(beta[t], lam)
+        })
+        .collect();
+
+    let mut s = Tensor::zeros(&[dk, dv]);
+    let mut out = vec![0.0f32; l * dv];
+
+    let mut c0 = 0;
+    while c0 < l {
+        let c = chunk.min(l - c0);
+        // Chunk views.
+        let qc = slice_rows(q, c0, c);
+        let kc = slice_rows(k, c0, c);
+        let vc = slice_rows(v, c0, c);
+        let ac = &alpha[c0..c0 + c];
+
+        // A = strict_tril(diag(a) K K^T)
+        let kk = matmul_nt(&kc, &kc); // (C, C)
+
+        // Solve (I + A) X = diag(a) [K | V] by forward substitution, rows
+        // in order: X[r] = a_r*rhs[r] - sum_{i<r} A[r,i] X[i].
+        let mut w = Tensor::zeros(&[c, dk]);
+        let mut u = Tensor::zeros(&[c, dv]);
+        for r in 0..c {
+            let ar = ac[r];
+            // start with a_r * k_r / a_r * v_r
+            for j in 0..dk {
+                w.set(&[r, j], ar * kc.get(&[r, j]));
+            }
+            for j in 0..dv {
+                u.set(&[r, j], ar * vc.get(&[r, j]));
+            }
+            for i in 0..r {
+                let aij = ar * kk.get(&[r, i]); // diag(a) row-scales KK^T
+                if aij == 0.0 {
+                    continue;
+                }
+                for j in 0..dk {
+                    let val = w.get(&[r, j]) - aij * w.get(&[i, j]);
+                    w.set(&[r, j], val);
+                }
+                for j in 0..dv {
+                    let val = u.get(&[r, j]) - aij * u.get(&[i, j]);
+                    u.set(&[r, j], val);
+                }
+            }
+        }
+
+        // delta = U - W S  (C, Dv)
+        let ws = matmul(&w, &s);
+        let mut delta = u.clone();
+        for (d, w_) in delta.data_mut().iter_mut().zip(ws.data().iter()) {
+            *d -= w_;
+        }
+
+        // O = Q S + tril(Q K^T) delta
+        let qs = matmul(&qc, &s); // (C, Dv)
+        let qk = matmul_nt(&qc, &kc); // (C, C)
+        for r in 0..c {
+            let orow = &mut out[(c0 + r) * dv..(c0 + r + 1) * dv];
+            for j in 0..dv {
+                orow[j] = qs.get(&[r, j]);
+            }
+            for i in 0..=r {
+                let g = qk.get(&[r, i]);
+                if g == 0.0 {
+                    continue;
+                }
+                for j in 0..dv {
+                    orow[j] += g * delta.get(&[i, j]);
+                }
+            }
+        }
+
+        // S' = S + K^T delta
+        for i in 0..c {
+            for a_ in 0..dk {
+                let kia = kc.get(&[i, a_]);
+                if kia == 0.0 {
+                    continue;
+                }
+                for j in 0..dv {
+                    let val = s.get(&[a_, j]) + kia * delta.get(&[i, j]);
+                    s.set(&[a_, j], val);
+                }
+            }
+        }
+
+        c0 += c;
+    }
+
+    (Tensor::from_vec(&[l, dv], out), s)
+}
+
+fn slice_rows(t: &Tensor, start: usize, n: usize) -> Tensor {
+    let cols = t.shape()[1];
+    Tensor::from_vec(&[n, cols], t.data()[start * cols..(start + n) * cols].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::sequential::sequential_delta;
+    use crate::util::rng::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: &[usize], sigma: f32) -> Tensor {
+        Tensor::from_vec(shape, rng.normal_vec(shape.iter().product(), 0.0, sigma))
+    }
+
+    fn check_matches_sequential(gate: Gate, l: usize, d: usize, chunk: usize, seed: u64) {
+        // Key scale keeps beta*lambda inside every gate's stability region:
+        // for unstable settings trajectories diverge and float noise makes
+        // exact comparison meaningless (that instability is itself covered
+        // by sequential::tests::euler_diverges_efla_saturates_on_high_energy).
+        let sigma = if gate == Gate::Efla { 0.8 } else { 0.3 };
+        let mut rng = Rng::new(seed);
+        let q = rand_t(&mut rng, &[l, d], 1.0);
+        let k = rand_t(&mut rng, &[l, d], sigma);
+        let v = rand_t(&mut rng, &[l, d], 1.0);
+        let beta: Vec<f32> = (0..l).map(|_| rng.f32()).collect();
+        let (o1, s1) = sequential_delta(gate, &q, &k, &v, &beta);
+        let (o2, s2) = chunkwise_delta(gate, &q, &k, &v, &beta, chunk);
+        let od = o1.max_abs_diff(&o2);
+        let sd = s1.max_abs_diff(&s2);
+        assert!(od < 2e-4, "out diff {od} (gate {gate:?} l={l} c={chunk})");
+        assert!(sd < 2e-4, "state diff {sd}");
+    }
+
+    #[test]
+    fn matches_sequential_efla() {
+        check_matches_sequential(Gate::Efla, 48, 8, 16, 10);
+    }
+
+    #[test]
+    fn matches_sequential_euler() {
+        check_matches_sequential(Gate::Euler, 48, 8, 16, 11);
+    }
+
+    #[test]
+    fn matches_sequential_rk2() {
+        check_matches_sequential(Gate::Rk(2), 48, 8, 16, 12);
+    }
+
+    #[test]
+    fn ragged_tail_chunk() {
+        check_matches_sequential(Gate::Efla, 50, 8, 16, 13); // 50 = 3*16 + 2
+        check_matches_sequential(Gate::Efla, 7, 4, 16, 14); // single short chunk
+    }
+
+    #[test]
+    fn chunk_size_invariance() {
+        let mut rng = Rng::new(15);
+        let (l, d) = (40, 6);
+        let q = rand_t(&mut rng, &[l, d], 1.0);
+        let k = rand_t(&mut rng, &[l, d], 0.7);
+        let v = rand_t(&mut rng, &[l, d], 1.0);
+        let beta: Vec<f32> = (0..l).map(|_| rng.f32()).collect();
+        let (o1, s1) = chunkwise_delta(Gate::Efla, &q, &k, &v, &beta, 1);
+        for c in [2, 5, 8, 40, 64] {
+            let (o2, s2) = chunkwise_delta(Gate::Efla, &q, &k, &v, &beta, c);
+            assert!(o1.max_abs_diff(&o2) < 2e-4, "chunk {c}");
+            assert!(s1.max_abs_diff(&s2) < 2e-4, "chunk {c}");
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Integrator gates (Rust mirror of `python/compile/kernels/gates.py`).
+//!
+//! Every integrator of the delta-rule ODE collapses to the generalized
+//! update `S' = (I - alpha k k^T) S + alpha k v^T` with a scalar gate:
+//!
+//!   Euler / DeltaNet : alpha = beta
+//!   RK-N             : alpha = -g_N(beta*lambda) / lambda,
+//!                      g_N(x) = sum_{m=1..N} (-x)^m / m!
+//!   EFLA (exact)     : alpha = (1 - e^{-beta*lambda}) / lambda
+//!
+//! lambda = ||k||^2, clipped at EPS_LAMBDA (paper Appendix A); the EFLA
+//! numerator uses `exp_m1` to keep precision at small beta*lambda.
+
+/// Paper Appendix A epsilon for the lambda clip.
+pub const EPS_LAMBDA: f32 = 1e-12;
+
+/// Which member of the integrator family to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gate {
+    /// Explicit Euler (DeltaNet): alpha = beta.
+    Euler,
+    /// Order-N Runge-Kutta truncation.
+    Rk(u32),
+    /// Exact solution (EFLA).
+    Efla,
+}
+
+impl Gate {
+    /// Gate value for one token.
+    pub fn alpha(self, beta: f32, lambda: f32) -> f32 {
+        match self {
+            Gate::Euler => alpha_euler(beta),
+            Gate::Rk(n) => alpha_rk(beta, lambda, n),
+            Gate::Efla => alpha_efla(beta, lambda),
+        }
+    }
+
+    /// Human-readable name (bench tables).
+    pub fn name(self) -> String {
+        match self {
+            Gate::Euler => "euler(deltanet)".to_string(),
+            Gate::Rk(n) => format!("rk{n}"),
+            Gate::Efla => "efla(exact)".to_string(),
+        }
+    }
+}
+
+/// g_N(x) = sum_{m=1..N} (-x)^m / m!, Horner evaluation (order >= 1).
+pub fn gate_series(x: f64, order: u32) -> f64 {
+    assert!(order >= 1);
+    let mut acc = 0.0f64;
+    for m in (1..=order).rev() {
+        acc = (-x) / m as f64 * (1.0 + acc);
+    }
+    acc
+}
+
+/// Euler gate: alpha = beta (lambda-independent — DeltaNet).
+pub fn alpha_euler(beta: f32) -> f32 {
+    beta
+}
+
+/// Order-N RK gate.
+pub fn alpha_rk(beta: f32, lambda: f32, order: u32) -> f32 {
+    let lam = lambda.max(EPS_LAMBDA) as f64;
+    let x = beta as f64 * lam;
+    (-gate_series(x, order) / lam) as f32
+}
+
+/// Exact EFLA gate with expm1 precision (paper Eq. 20 + Appendix A).
+pub fn alpha_efla(beta: f32, lambda: f32) -> f32 {
+    let lam = lambda.max(EPS_LAMBDA) as f64;
+    let x = beta as f64 * lam;
+    (-(-x).exp_m1() / lam) as f32
+}
+
+/// Transition eigenvalue along k: 1 - alpha*lambda. For EFLA this equals
+/// e^{-beta*lambda} exactly (paper §6: spectral gate / memory dominance).
+pub fn transition_eigenvalue(gate: Gate, beta: f32, lambda: f32) -> f32 {
+    1.0 - gate.alpha(beta, lambda) * lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rk1_is_euler() {
+        for beta in [0.0f32, 0.3, 0.9, 1.0] {
+            for lam in [1e-9f32, 0.5, 4.0, 100.0] {
+                let a = alpha_rk(beta, lam, 1);
+                assert!((a - beta).abs() < 1e-6, "beta={beta} lam={lam} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn rk2_matches_closed_form() {
+        // alpha_2 = beta (1 - beta*lambda/2)   (paper Eq. 11)
+        for (beta, lam) in [(0.5f32, 0.8f32), (0.9, 2.0), (0.1, 10.0)] {
+            let expect = beta * (1.0 - beta * lam / 2.0);
+            assert!((alpha_rk(beta, lam, 2) - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn efla_is_rk_limit() {
+        let (beta, lam) = (0.7f32, 3.0f32);
+        let exact = alpha_efla(beta, lam);
+        let mut last_err = f32::INFINITY;
+        for n in [1u32, 2, 4, 8, 16] {
+            let err = (alpha_rk(beta, lam, n) - exact).abs();
+            assert!(err <= last_err + 1e-7, "order {n}: {err} > {last_err}");
+            last_err = err;
+        }
+        assert!(last_err < 1e-6);
+    }
+
+    #[test]
+    fn efla_delta_rule_limit_small_lambda() {
+        // lambda -> 0  =>  alpha -> beta (paper §6 asymptotic connection)
+        let beta = 0.83f32;
+        for lam in [1e-10f32, 1e-8, 1e-6] {
+            let a = alpha_efla(beta, lam);
+            assert!((a - beta).abs() < 1e-4, "lam={lam} a={a}");
+        }
+    }
+
+    #[test]
+    fn efla_eigenvalue_in_unit_interval() {
+        // 1 - alpha*lambda = e^{-beta*lambda} in (0, 1]
+        for beta in [0.0f32, 0.2, 1.0, 5.0] {
+            for lam in [1e-6f32, 0.5, 8.0, 1000.0] {
+                let ev = transition_eigenvalue(Gate::Efla, beta, lam);
+                // exact arithmetic gives ev = e^{-beta*lam} in (0, 1]; in f32
+                // the 1 - alpha*lam form can round to exactly 0 at extreme
+                // stiffness, hence >= 0 here.
+                assert!(ev >= 0.0 && ev <= 1.0 + 1e-6, "beta={beta} lam={lam} ev={ev}");
+                let expect = (-(beta as f64) * lam as f64).exp() as f32;
+                assert!((ev - expect).abs() < 2e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn euler_eigenvalue_escapes_unit_interval() {
+        // the instability EFLA fixes: |1 - beta*lambda| > 1 for beta*lambda > 2
+        let ev = transition_eigenvalue(Gate::Euler, 1.0, 3.0);
+        assert!(ev < -1.0);
+    }
+
+    #[test]
+    fn gate_series_is_expm1_limit() {
+        for x in [0.0f64, 0.1, 1.0, 4.0] {
+            let g = gate_series(x, 30);
+            let expect = (-x).exp_m1();
+            assert!((g - expect).abs() < 1e-12, "x={x}");
+        }
+    }
+}

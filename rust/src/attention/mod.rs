@@ -1,0 +1,20 @@
+//! Pure-Rust mirror of the L1 attention kernels.
+//!
+//! Three roles:
+//!  1. *property-test anchor*: proptest invariants (chunkwise == sequential,
+//!     transition eigenvalues in (0,1], delta-rule limit, order convergence)
+//!     run against this implementation, and golden vectors emitted by
+//!     `python/compile/aot.py` pin it to the Pallas kernel bit-for-bit-ish;
+//!  2. *error-analysis substrate*: the integrator sweep behind the paper's
+//!     §3/§6 claims (bench `kernel_throughput`) runs here, where we control
+//!     every flop;
+//!  3. *CPU serving fallback*: the server can decode through
+//!     [`sequential::DeltaState`] when no PJRT executable is loaded.
+
+pub mod chunkwise;
+pub mod gates;
+pub mod sequential;
+
+pub use chunkwise::chunkwise_delta;
+pub use gates::{alpha_efla, alpha_euler, alpha_rk, gate_series, Gate};
+pub use sequential::{sequential_delta, DeltaState};

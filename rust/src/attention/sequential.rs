@@ -1,0 +1,213 @@
+//! Sequential (token-by-token) generalized delta rule — single head.
+//!
+//! The O(L * Dk * Dv) recurrence of paper Eq. 20:
+//!
+//! ```text
+//! S_t = S_{t-1} + alpha_t k_t (v_t - S_{t-1}^T k_t)^T
+//! o_t = S_t^T q_t
+//! ```
+//!
+//! [`DeltaState`] is the allocation-free streaming form used by the CPU
+//! serving fallback and the error-analysis bench; [`sequential_delta`] is
+//! the batch convenience wrapper the tests use.
+
+use crate::tensor::Tensor;
+
+use super::gates::{Gate, EPS_LAMBDA};
+
+/// Streaming per-head delta-rule state (Dk x Dv, f32, row-major).
+#[derive(Clone, Debug)]
+pub struct DeltaState {
+    dk: usize,
+    dv: usize,
+    /// S stored row-major: s[i*dv + j] = S[i][j]
+    s: Vec<f32>,
+    /// scratch: S^T k (length dv)
+    stk: Vec<f32>,
+}
+
+impl DeltaState {
+    pub fn new(dk: usize, dv: usize) -> Self {
+        DeltaState { dk, dv, s: vec![0.0; dk * dv], stk: vec![0.0; dv] }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.dk, self.dv)
+    }
+
+    pub fn state(&self) -> &[f32] {
+        &self.s
+    }
+
+    pub fn state_mut(&mut self) -> &mut [f32] {
+        &mut self.s
+    }
+
+    pub fn reset(&mut self) {
+        self.s.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Advance one token and write o = S'^T q into `out` (len dv).
+    /// Allocation-free.
+    pub fn step(&mut self, gate: Gate, q: &[f32], k: &[f32], v: &[f32], beta: f32, out: &mut [f32]) {
+        debug_assert_eq!(q.len(), self.dk);
+        debug_assert_eq!(k.len(), self.dk);
+        debug_assert_eq!(v.len(), self.dv);
+        debug_assert_eq!(out.len(), self.dv);
+        let lambda: f32 = k.iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
+        let alpha = gate.alpha(beta, lambda);
+
+        // stk = S^T k
+        self.stk.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..self.dk {
+            let ki = k[i];
+            if ki == 0.0 {
+                continue;
+            }
+            let row = &self.s[i * self.dv..(i + 1) * self.dv];
+            for j in 0..self.dv {
+                self.stk[j] += ki * row[j];
+            }
+        }
+        // S += alpha * k (v - stk)^T
+        for i in 0..self.dk {
+            let aki = alpha * k[i];
+            if aki == 0.0 {
+                continue;
+            }
+            let row = &mut self.s[i * self.dv..(i + 1) * self.dv];
+            for j in 0..self.dv {
+                row[j] += aki * (v[j] - self.stk[j]);
+            }
+        }
+        // o = S'^T q
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..self.dk {
+            let qi = q[i];
+            if qi == 0.0 {
+                continue;
+            }
+            let row = &self.s[i * self.dv..(i + 1) * self.dv];
+            for j in 0..self.dv {
+                out[j] += qi * row[j];
+            }
+        }
+    }
+
+    /// Frobenius norm of the state (used by the stability experiments).
+    pub fn norm(&self) -> f32 {
+        self.s.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+/// Batch single-head run. q,k: (L, Dk); v: (L, Dv); beta: len L.
+/// Returns (out (L, Dv), final state (Dk, Dv)).
+pub fn sequential_delta(
+    gate: Gate,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    beta: &[f32],
+) -> (Tensor, Tensor) {
+    assert_eq!(q.ndim(), 2);
+    let l = q.shape()[0];
+    let dk = q.shape()[1];
+    let dv = v.shape()[1];
+    assert_eq!(k.shape(), &[l, dk]);
+    assert_eq!(v.shape(), &[l, dv]);
+    assert_eq!(beta.len(), l);
+
+    let mut st = DeltaState::new(dk, dv);
+    let mut out = vec![0.0f32; l * dv];
+    for t in 0..l {
+        let (qr, kr, vr) = (q.row(t), k.row(t), v.row(t));
+        st.step(gate, qr, kr, vr, beta[t], &mut out[t * dv..(t + 1) * dv]);
+    }
+    (
+        Tensor::from_vec(&[l, dv], out),
+        Tensor::from_vec(&[dk, dv], st.state().to_vec()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: &[usize], sigma: f32) -> Tensor {
+        Tensor::from_vec(shape, rng.normal_vec(shape.iter().product(), 0.0, sigma))
+    }
+
+    #[test]
+    fn first_token_matches_closed_form() {
+        // S_1 = alpha k v^T, o_1 = S_1^T q
+        let mut rng = Rng::new(1);
+        let (dk, dv) = (6, 5);
+        let q = rand_t(&mut rng, &[1, dk], 1.0);
+        let k = rand_t(&mut rng, &[1, dk], 1.0);
+        let v = rand_t(&mut rng, &[1, dv], 1.0);
+        let beta = [0.7f32];
+        let (out, s) = sequential_delta(Gate::Efla, &q, &k, &v, &beta);
+        let lam: f32 = k.data().iter().map(|x| x * x).sum();
+        let alpha = super::super::gates::alpha_efla(0.7, lam);
+        for i in 0..dk {
+            for j in 0..dv {
+                let expect = alpha * k.get(&[0, i]) * v.get(&[0, j]);
+                assert!((s.get(&[i, j]) - expect).abs() < 1e-5);
+            }
+        }
+        for j in 0..dv {
+            let expect: f32 = (0..dk).map(|i| s.get(&[i, j]) * q.get(&[0, i])).sum();
+            assert!((out.get(&[0, j]) - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn repeated_key_is_idempotent_memory_write() {
+        // Writing (k, v) twice with EFLA must still map k -> approx v
+        // direction: the second write corrects toward v, never overshoots.
+        let dk = 4;
+        let k: Vec<f32> = vec![1.0, 0.5, -0.3, 0.2];
+        let v: Vec<f32> = vec![0.9, -0.4, 0.1, 0.3];
+        let mut st = DeltaState::new(dk, dk);
+        let mut out = vec![0.0; dk];
+        for _ in 0..50 {
+            st.step(Gate::Efla, &k, &k, &v, 1.0, &mut out);
+        }
+        // After many writes, S^T k ~= v * (k.k) scaled readout via q=k:
+        // o = S^T k should approach v (reconstruction objective fixed point).
+        for j in 0..dk {
+            assert!((out[j] - v[j]).abs() < 1e-3, "j={j} out={} v={}", out[j], v[j]);
+        }
+    }
+
+    #[test]
+    fn euler_diverges_efla_saturates_on_high_energy() {
+        // The paper's stability claim at the recurrence level: scale keys up
+        // and Euler's state norm explodes while EFLA's stays bounded.
+        let mut rng = Rng::new(2);
+        let (l, d) = (64, 8);
+        let q = rand_t(&mut rng, &[l, d], 1.0);
+        let k = rand_t(&mut rng, &[l, d], 4.0); // lambda ~ d*16 >> 2
+        let v = rand_t(&mut rng, &[l, d], 1.0);
+        let beta = vec![0.9f32; l];
+        let (_, s_euler) = sequential_delta(Gate::Euler, &q, &k, &v, &beta);
+        let (_, s_efla) = sequential_delta(Gate::Efla, &q, &k, &v, &beta);
+        let en = s_euler.norm();
+        assert!(en.is_nan() || en > 1e6, "euler norm {en}");
+        assert!(s_efla.norm() < 1e3, "efla norm {}", s_efla.norm());
+    }
+
+    #[test]
+    fn zero_beta_is_identity() {
+        let mut rng = Rng::new(3);
+        let (l, d) = (10, 4);
+        let q = rand_t(&mut rng, &[l, d], 1.0);
+        let k = rand_t(&mut rng, &[l, d], 1.0);
+        let v = rand_t(&mut rng, &[l, d], 1.0);
+        let beta = vec![0.0f32; l];
+        let (out, s) = sequential_delta(Gate::Efla, &q, &k, &v, &beta);
+        assert!(s.norm() < 1e-7);
+        assert!(out.norm() < 1e-7);
+    }
+}

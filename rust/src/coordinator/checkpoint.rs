@@ -1,0 +1,124 @@
+//! Binary checkpoints: JSON header + raw little-endian f32 payload.
+//!
+//! Format:
+//!   [u32 magic "EFLA"] [u32 header_len] [header JSON bytes] [f32 data...]
+//! Header: {"step": N, "tensors": [{"shape": [...]}, ...]} — tensor order is
+//! the session's export order (params, m, v).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+
+const MAGIC: u32 = 0x45464C41; // "EFLA"
+
+/// Write a checkpoint.
+pub fn save(path: &Path, step: u64, tensors: &[Tensor]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let header = Json::obj(vec![
+        ("step", Json::Num(step as f64)),
+        (
+            "tensors",
+            Json::Arr(
+                tensors
+                    .iter()
+                    .map(|t| Json::obj(vec![("shape", Json::arr_usize(t.shape()))]))
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string();
+
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&MAGIC.to_le_bytes())?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for t in tensors {
+        for x in t.data() {
+            f.write_all(&x.to_le_bytes())?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Read a checkpoint; returns (step, tensors).
+pub fn load(path: &Path) -> Result<(u64, Vec<Tensor>)> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).map_err(|e| anyhow!("open {}: {e}", path.display()))?,
+    );
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    if u32::from_le_bytes(u32buf) != MAGIC {
+        bail!("{}: not an EFLA checkpoint (bad magic)", path.display());
+    }
+    f.read_exact(&mut u32buf)?;
+    let hlen = u32::from_le_bytes(u32buf) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = json::parse(std::str::from_utf8(&hbuf)?)
+        .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+    let step = header.usize_field("step")? as u64;
+    let specs = header
+        .get("tensors")
+        .as_arr()
+        .ok_or_else(|| anyhow!("checkpoint header missing tensors"))?;
+
+    let mut tensors = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let shape = spec.get("shape").usize_array()?;
+        let n: usize = shape.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        tensors.push(Tensor::from_vec(&shape, data));
+    }
+    // Must be at EOF.
+    let mut extra = [0u8; 1];
+    if f.read(&mut extra)? != 0 {
+        bail!("{}: trailing bytes after tensors", path.display());
+    }
+    Ok((step, tensors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("efla_ckpt_test_{}", std::process::id()));
+        let path = dir.join("test.ckpt");
+        let tensors = vec![
+            Tensor::from_vec(&[2, 3], vec![1., -2., 3.5, 0., 1e-9, 7.]),
+            Tensor::scalar(42.0),
+            Tensor::zeros(&[4]),
+        ];
+        save(&path, 123, &tensors).unwrap();
+        let (step, back) = load(&path).unwrap();
+        assert_eq!(step, 123);
+        assert_eq!(back.len(), 3);
+        for (a, b) in tensors.iter().zip(back.iter()) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("efla_ckpt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

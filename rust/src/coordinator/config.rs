@@ -1,0 +1,177 @@
+//! Run configuration: JSON file + programmatic construction.
+//!
+//! A [`RunConfig`] fully determines a run (model family, data seed, steps,
+//! optimizer schedule, output locations), making every experiment in
+//! EXPERIMENTS.md a one-liner to reproduce.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{self, Json};
+
+/// Which task family a run trains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Lm,
+    Classifier,
+    Mad,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Result<Task> {
+        Ok(match s {
+            "lm" => Task::Lm,
+            "classifier" | "clf" => Task::Classifier,
+            "mad" => Task::Mad,
+            other => bail!("unknown task '{other}' (lm|classifier|mad)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Lm => "lm",
+            Task::Classifier => "classifier",
+            Task::Mad => "mad",
+        }
+    }
+}
+
+/// Full run description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub task: Task,
+    /// Artifact preset ("tiny", "small", "mad", "100m"; classifier ignores).
+    pub preset: String,
+    /// Token mixer variant ("efla", "deltanet", "efla_adaptive", "efla_loose").
+    pub mixer: String,
+    pub steps: u64,
+    pub seed: u64,
+    pub peak_lr: f64,
+    /// Eval every N steps (0 = only at the end).
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    /// Corpus bytes to synthesize for LM runs.
+    pub corpus_bytes: usize,
+    pub artifact_dir: PathBuf,
+    pub out_dir: PathBuf,
+    /// Optional checkpoint interval (0 = none).
+    pub ckpt_every: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            task: Task::Lm,
+            preset: "tiny".into(),
+            mixer: "efla".into(),
+            steps: 100,
+            seed: 42,
+            peak_lr: 3e-4,
+            eval_every: 0,
+            eval_batches: 8,
+            corpus_bytes: 2_000_000,
+            artifact_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("runs"),
+            ckpt_every: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Artifact base name, e.g. `lm_small_efla`.
+    pub fn family(&self) -> String {
+        match self.task {
+            Task::Classifier => format!("clf_{}", self.mixer),
+            Task::Mad => format!("lm_mad_{}", self.mixer),
+            Task::Lm => format!("lm_{}_{}", self.preset, self.mixer),
+        }
+    }
+
+    pub fn artifact(&self, graph: &str) -> String {
+        format!("{}_{}", self.family(), graph)
+    }
+
+    /// Load from a JSON file, falling back to defaults per missing field.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let j = json::read_file(path)?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = RunConfig::default();
+        Ok(RunConfig {
+            task: Task::parse(j.get("task").as_str().unwrap_or("lm"))?,
+            preset: j.get("preset").as_str().unwrap_or(&d.preset).to_string(),
+            mixer: j.get("mixer").as_str().unwrap_or(&d.mixer).to_string(),
+            steps: j.get("steps").as_usize().unwrap_or(d.steps as usize) as u64,
+            seed: j.get("seed").as_usize().unwrap_or(d.seed as usize) as u64,
+            peak_lr: j.get("peak_lr").as_f64().unwrap_or(d.peak_lr),
+            eval_every: j.get("eval_every").as_usize().unwrap_or(0) as u64,
+            eval_batches: j.get("eval_batches").as_usize().unwrap_or(d.eval_batches),
+            corpus_bytes: j.get("corpus_bytes").as_usize().unwrap_or(d.corpus_bytes),
+            artifact_dir: PathBuf::from(
+                j.get("artifact_dir").as_str().unwrap_or("artifacts"),
+            ),
+            out_dir: PathBuf::from(j.get("out_dir").as_str().unwrap_or("runs")),
+            ckpt_every: j.get("ckpt_every").as_usize().unwrap_or(0) as u64,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task", Json::Str(self.task.name().into())),
+            ("preset", Json::Str(self.preset.clone())),
+            ("mixer", Json::Str(self.mixer.clone())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("peak_lr", Json::Num(self.peak_lr)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("eval_batches", Json::Num(self.eval_batches as f64)),
+            ("corpus_bytes", Json::Num(self.corpus_bytes as f64)),
+            (
+                "artifact_dir",
+                Json::Str(self.artifact_dir.to_string_lossy().into_owned()),
+            ),
+            ("out_dir", Json::Str(self.out_dir.to_string_lossy().into_owned())),
+            ("ckpt_every", Json::Num(self.ckpt_every as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_names() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.family(), "lm_tiny_efla");
+        assert_eq!(c.artifact("step"), "lm_tiny_efla_step");
+        c.task = Task::Classifier;
+        c.mixer = "deltanet".into();
+        assert_eq!(c.family(), "clf_deltanet");
+        c.task = Task::Mad;
+        assert_eq!(c.family(), "lm_mad_deltanet");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = RunConfig::default();
+        c.steps = 777;
+        c.mixer = "efla_loose".into();
+        c.peak_lr = 1e-3;
+        let j = c.to_json();
+        let c2 = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c2.steps, 777);
+        assert_eq!(c2.mixer, "efla_loose");
+        assert!((c2.peak_lr - 1e-3).abs() < 1e-12);
+        assert_eq!(c2.task, Task::Lm);
+    }
+
+    #[test]
+    fn bad_task_rejected() {
+        let j = json::parse(r#"{"task": "diffusion"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Evaluation harness: perplexity, masked accuracy, multi-choice probes.
+//!
+//! All evals reuse the `<family>_eval` artifact (loss_sum / token count /
+//! argmax-correct over targets >= 0), so adding a probe costs no new graphs.
+
+use anyhow::Result;
+
+use crate::coordinator::session::Session;
+use crate::data::probes::{ProbeItem, ProbeKind, Probes};
+use crate::data::tokenizer::Bpe;
+use crate::runtime::HostValue;
+
+/// Aggregate eval statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalStats {
+    pub loss_sum: f64,
+    pub tokens: f64,
+    pub correct: f64,
+}
+
+impl EvalStats {
+    pub fn add_lm(&mut self, outs: &[f32]) {
+        self.loss_sum += outs[0] as f64;
+        self.tokens += outs[1] as f64;
+        self.correct += outs[2] as f64;
+    }
+
+    pub fn ppl(&self) -> f64 {
+        (self.loss_sum / self.tokens.max(1.0)).exp()
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_sum / self.tokens.max(1.0)
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        self.correct / self.tokens.max(1.0)
+    }
+}
+
+/// Perplexity + masked accuracy over `n_batches` from a batch source.
+pub fn eval_batches<F>(session: &Session, n_batches: usize, mut next: F) -> Result<EvalStats>
+where
+    F: FnMut() -> (HostValue, HostValue),
+{
+    let mut stats = EvalStats::default();
+    for _ in 0..n_batches {
+        let (t, y) = next();
+        let outs = session.eval([t.to_literal()?, y.to_literal()?])?;
+        stats.add_lm(&outs);
+    }
+    Ok(stats)
+}
+
+/// Pack probe items into fixed-size eval batches (padding rows have all
+/// targets masked so they contribute nothing).
+fn pack_items(items: &[ProbeItem], batch: usize, seq: usize) -> Vec<(HostValue, HostValue)> {
+    let mut out = Vec::new();
+    for chunk in items.chunks(batch) {
+        let mut toks = Vec::with_capacity(batch * seq);
+        let mut tgts = Vec::with_capacity(batch * seq);
+        for item in chunk {
+            toks.extend_from_slice(&item.tokens);
+            tgts.extend_from_slice(&item.targets);
+        }
+        for _ in chunk.len()..batch {
+            toks.extend(std::iter::repeat(0).take(seq));
+            tgts.extend(std::iter::repeat(-1).take(seq));
+        }
+        out.push((
+            HostValue::i32(&[batch, seq], toks),
+            HostValue::i32(&[batch, seq], tgts),
+        ));
+    }
+    out
+}
+
+/// Accuracy on argmax-scored probes (FinalWord, BoolQuery) — token-level
+/// accuracy restricted to scored positions.
+pub fn probe_accuracy(session: &Session, items: &[ProbeItem]) -> Result<EvalStats> {
+    let mut stats = EvalStats::default();
+    for (t, y) in pack_items(items, session.batch, session.seq) {
+        let outs = session.eval([t.to_literal()?, y.to_literal()?])?;
+        stats.add_lm(&outs);
+    }
+    Ok(stats)
+}
+
+/// Multi-choice accuracy: per-group, the candidate with the lower mean
+/// masked loss wins; accuracy = fraction of groups won by the correct one.
+///
+/// Per-item losses need isolated eval calls (the eval graph sums over the
+/// batch); items are scored one per batch with the remaining rows masked.
+pub fn multichoice_accuracy(session: &Session, items: &[ProbeItem]) -> Result<f64> {
+    let (batch, seq) = (session.batch, session.seq);
+    let mut scored: Vec<(usize, bool, f64)> = Vec::with_capacity(items.len());
+    for item in items {
+        let mut toks = item.tokens.clone();
+        let mut tgts = item.targets.clone();
+        toks.resize(batch * seq, 0);
+        tgts.resize(batch * seq, -1);
+        let outs = session.eval([
+            HostValue::i32(&[batch, seq], toks).to_literal()?,
+            HostValue::i32(&[batch, seq], tgts).to_literal()?,
+        ])?;
+        let mean_loss = outs[0] as f64 / (outs[1] as f64).max(1.0);
+        scored.push((item.group, item.is_correct, mean_loss));
+    }
+    let groups: std::collections::BTreeSet<usize> = scored.iter().map(|s| s.0).collect();
+    let mut wins = 0usize;
+    let mut total = 0usize;
+    for g in groups {
+        let members: Vec<_> = scored.iter().filter(|s| s.0 == g).collect();
+        if members.len() < 2 {
+            continue;
+        }
+        total += 1;
+        let best = members
+            .iter()
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap();
+        if best.1 {
+            wins += 1;
+        }
+    }
+    Ok(wins as f64 / total.max(1) as f64)
+}
+
+/// Run the full downstream probe suite (Table 1 accuracy stand-ins).
+/// Returns (probe name, accuracy in [0,1]).
+pub fn probe_suite(
+    session: &Session,
+    bpe: &Bpe,
+    seed: u64,
+    n_items: usize,
+) -> Result<Vec<(String, f64)>> {
+    let mut results = Vec::new();
+    for kind in ProbeKind::all() {
+        let mut probes = Probes::new(seed, session.seq);
+        let items = probes.build(kind, bpe, n_items);
+        let acc = match kind {
+            ProbeKind::MultiChoice => multichoice_accuracy(session, &items)?,
+            _ => probe_accuracy(session, &items)?.accuracy(),
+        };
+        results.push((kind.name().to_string(), acc));
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_stats_math() {
+        let mut s = EvalStats::default();
+        s.add_lm(&[20.0, 10.0, 5.0]);
+        s.add_lm(&[10.0, 10.0, 7.0]);
+        assert!((s.mean_loss() - 1.5).abs() < 1e-9);
+        assert!((s.ppl() - 1.5f64.exp()).abs() < 1e-9);
+        assert!((s.accuracy() - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pack_items_pads_with_masked_rows() {
+        let items = vec![ProbeItem {
+            tokens: vec![1; 8],
+            targets: vec![-1, 2, -1, -1, -1, -1, -1, -1],
+            group: 0,
+            is_correct: true,
+        }];
+        let packed = pack_items(&items, 4, 8);
+        assert_eq!(packed.len(), 1);
+        let (t, y) = &packed[0];
+        assert_eq!(t.shape(), &[4, 8]);
+        match y {
+            HostValue::I32(_, data) => {
+                assert_eq!(data.iter().filter(|&&x| x >= 0).count(), 1);
+            }
+            _ => panic!("targets must be i32"),
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Experiment registry: every paper table/figure as a runnable plan.
+//!
+//! | id     | paper artifact | bench target |
+//! |--------|----------------|--------------|
+//! | fig1   | sMNIST robustness curves (EFLA vs DeltaNet)  | benches/fig1_robustness.rs |
+//! | fig2   | EFLA robustness vs learning rate             | benches/fig2_lr_scaling.rs |
+//! | table1 | LM ppl + downstream accuracy (4 variants)    | benches/table1_lm.rs |
+//! | table2 | MAD suite (6 tasks x 2 mixers)               | benches/table2_mad.rs |
+//! | §3/§6  | integrator error / spectral analysis         | benches/kernel_throughput.rs |
+//!
+//! Step counts are scaled to this CPU testbed; the *shape* of the paper's
+//! results (who wins, how gaps move with interference) is the reproduction
+//! target, not absolute numbers (DESIGN.md §4).
+
+use anyhow::Result;
+
+use crate::attention::{chunkwise_delta, sequential_delta, Gate};
+use crate::coordinator::config::{RunConfig, Task};
+use crate::coordinator::evaluator::{self, EvalStats};
+use crate::coordinator::schedule::Schedule;
+use crate::coordinator::session::Session;
+use crate::coordinator::trainer::{self, clf_data, lm_data, mad_data};
+use crate::data::mad::MadTask;
+use crate::data::mnist::{Corruption, Smnist, SEQ};
+use crate::runtime::{HostValue, Runtime};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+// ------------------------------------------------------------------
+// Fig. 1 / Fig. 2 — classifier robustness
+// ------------------------------------------------------------------
+
+/// Accuracy of a trained classifier session under a corruption.
+pub fn clf_accuracy_under(
+    session: &Session,
+    corruption: Corruption,
+    n_batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut gen = Smnist::new(seed);
+    let mut rng = Rng::new(seed ^ 0xE7A1);
+    let batch = session.batch;
+    let mut correct = 0f64;
+    let mut total = 0f64;
+    for _ in 0..n_batches {
+        let (mut px, ls) = gen.batch(batch);
+        for row in px.chunks_mut(SEQ) {
+            corruption.apply(row, &mut rng);
+        }
+        let outs = session.eval([
+            HostValue::F32(Tensor::from_vec(&[batch, SEQ], px)).to_literal()?,
+            HostValue::i32(&[batch], ls).to_literal()?,
+        ])?;
+        correct += outs[1] as f64;
+        total += batch as f64;
+    }
+    Ok(correct / total.max(1.0))
+}
+
+/// One trained classifier + its robustness curves.
+#[derive(Clone, Debug)]
+pub struct RobustnessResult {
+    pub mixer: String,
+    pub lr: f64,
+    pub train_curve: Vec<(u64, f32)>,
+    pub clean_acc: f64,
+    /// (sweep label, parameter value, accuracy)
+    pub sweeps: Vec<(String, f64, f64)>,
+}
+
+/// The corruption grids of Fig. 1 / Fig. 2.
+pub fn corruption_grid() -> Vec<(&'static str, Vec<Corruption>)> {
+    vec![
+        (
+            "dropout",
+            [0.0, 0.1, 0.2, 0.3, 0.4, 0.5]
+                .iter()
+                .map(|&p| Corruption::Dropout(p))
+                .collect(),
+        ),
+        (
+            "scale",
+            [1.0, 2.0, 4.0, 8.0, 16.0, 32.0]
+                .iter()
+                .map(|&f| Corruption::Scale(f))
+                .collect(),
+        ),
+        (
+            "noise",
+            [0.0, 0.2, 0.4, 0.6, 0.8, 1.0]
+                .iter()
+                .map(|&s| Corruption::Noise(s))
+                .collect(),
+        ),
+    ]
+}
+
+fn corruption_param(c: Corruption) -> f64 {
+    match c {
+        Corruption::None => 0.0,
+        Corruption::Dropout(p) => p,
+        Corruption::Scale(f) => f as f64,
+        Corruption::Noise(s) => s as f64,
+    }
+}
+
+/// Train one classifier and sweep all corruptions (one Fig-1 cell row).
+pub fn robustness_run(
+    rt: &Runtime,
+    mixer: &str,
+    lr: f64,
+    steps: u64,
+    eval_batches: usize,
+    seed: u64,
+) -> Result<RobustnessResult> {
+    let family = format!("clf_{mixer}");
+    let mut session = Session::init(rt, &family, seed as u32)?;
+    let pf = clf_data(session.batch, seed, Corruption::None);
+    let mut curve = Vec::new();
+    trainer::train_lm(
+        &mut session,
+        Schedule::Constant { lr },
+        steps,
+        || pf.next(),
+        |p| {
+            if p.step % 10 == 0 {
+                curve.push((p.step, p.loss));
+            }
+        },
+    )?;
+    let clean_acc = clf_accuracy_under(&session, Corruption::None, eval_batches, seed + 999)?;
+    let mut sweeps = Vec::new();
+    for (label, grid) in corruption_grid() {
+        for c in grid {
+            let acc = clf_accuracy_under(&session, c, eval_batches, seed + 999)?;
+            sweeps.push((label.to_string(), corruption_param(c), acc));
+        }
+    }
+    Ok(RobustnessResult { mixer: mixer.to_string(), lr, train_curve: curve, clean_acc, sweeps })
+}
+
+// ------------------------------------------------------------------
+// Table 1 — language modeling
+// ------------------------------------------------------------------
+
+/// One Table-1 row.
+#[derive(Clone, Debug)]
+pub struct LmRow {
+    pub mixer: String,
+    pub train_loss: f32,
+    pub ppl: f64,
+    pub probe_acc: Vec<(String, f64)>,
+    pub steps: u64,
+    pub wall_secs: f64,
+}
+
+/// Train one LM variant and evaluate ppl + probes (one Table-1 row).
+#[allow(clippy::too_many_arguments)]
+pub fn lm_run(
+    rt: &Runtime,
+    preset: &str,
+    mixer: &str,
+    steps: u64,
+    eval_batches: usize,
+    seed: u64,
+    peak_lr: f64,
+) -> Result<LmRow> {
+    let cfg = RunConfig {
+        task: Task::Lm,
+        preset: preset.into(),
+        mixer: mixer.into(),
+        steps,
+        seed,
+        peak_lr,
+        ..RunConfig::default()
+    };
+    let family = cfg.family();
+    let mut session = Session::init(rt, &family, seed as u32)?;
+    let (pf, bpe) = lm_data(&cfg, session.batch, session.seq)?;
+    let schedule = Schedule::paper_default(cfg.peak_lr, steps);
+    let hist = trainer::train_lm(&mut session, schedule, steps, || pf.next(), |_| {})?;
+
+    // Held-out ppl: same corpus distribution, different seed.
+    let eval_cfg = RunConfig { seed: seed + 10_000, ..cfg.clone() };
+    let (eval_pf, _) = lm_data(&eval_cfg, session.batch, session.seq)?;
+    let stats: EvalStats =
+        evaluator::eval_batches(&session, eval_batches, || eval_pf.next())?;
+
+    let probe_acc = evaluator::probe_suite(&session, &bpe, seed + 77, 16)?;
+    Ok(LmRow {
+        mixer: mixer.to_string(),
+        train_loss: hist.tail_loss(10),
+        ppl: stats.ppl(),
+        probe_acc,
+        steps,
+        wall_secs: hist.wall_secs,
+    })
+}
+
+// ------------------------------------------------------------------
+// Table 2 — MAD suite
+// ------------------------------------------------------------------
+
+/// Accuracy per MAD task for one mixer.
+pub fn mad_run(
+    rt: &Runtime,
+    mixer: &str,
+    task: MadTask,
+    steps: u64,
+    eval_batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let family = format!("lm_mad_{mixer}");
+    let mut session = Session::init(rt, &family, seed as u32)?;
+    let pf = mad_data(task, session.batch, session.seq, seed);
+    trainer::train_lm(
+        &mut session,
+        Schedule::Constant { lr: 1e-3 },
+        steps,
+        || pf.next(),
+        |_| {},
+    )?;
+    let eval_pf = mad_data(task, session.batch, session.seq, seed + 1);
+    let stats = evaluator::eval_batches(&session, eval_batches, || eval_pf.next())?;
+    Ok(stats.accuracy())
+}
+
+// ------------------------------------------------------------------
+// §3/§6 — integrator error analysis (pure Rust, no artifacts needed)
+// ------------------------------------------------------------------
+
+/// Max |out - exact| over a sequence, for one gate at one stiffness level.
+///
+/// Stiffness x = beta*lambda is controlled through the key scale: keys are
+/// N(0, sigma^2 I) with sigma chosen so E[lambda] * beta ~= x.
+pub fn integrator_error(gate: Gate, stiffness: f64, l: usize, d: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let beta = 0.9f32;
+    let sigma = ((stiffness / beta as f64) / d as f64).sqrt() as f32;
+    let q = Tensor::from_vec(&[l, d], rng.normal_vec(l * d, 0.0, 1.0));
+    let k = Tensor::from_vec(&[l, d], rng.normal_vec(l * d, 0.0, sigma));
+    let v = Tensor::from_vec(&[l, d], rng.normal_vec(l * d, 0.0, 1.0));
+    let betas = vec![beta; l];
+    let (out, _) = sequential_delta(gate, &q, &k, &v, &betas);
+    let (exact, _) = sequential_delta(Gate::Efla, &q, &k, &v, &betas);
+    out.max_abs_diff(&exact) as f64
+}
+
+/// Verify chunkwise == sequential for a gate (consistency metric used by
+/// the kernel bench to demonstrate the parallel form is error-free too).
+pub fn chunkwise_consistency(gate: Gate, l: usize, d: usize, chunk: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let q = Tensor::from_vec(&[l, d], rng.normal_vec(l * d, 0.0, 1.0));
+    let k = Tensor::from_vec(&[l, d], rng.normal_vec(l * d, 0.0, 0.7));
+    let v = Tensor::from_vec(&[l, d], rng.normal_vec(l * d, 0.0, 1.0));
+    let betas: Vec<f32> = (0..l).map(|_| rng.f32()).collect();
+    let (o1, _) = sequential_delta(gate, &q, &k, &v, &betas);
+    let (o2, _) = chunkwise_delta(gate, &q, &k, &v, &betas, chunk);
+    o1.max_abs_diff(&o2) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_increases_with_stiffness_and_decreases_with_order() {
+        // the paper's central numerical claim, on the pure-Rust substrate.
+        // d=16 concentrates lambda so the per-token stiffness stays in the
+        // regime where higher order => lower truncation error (for very
+        // large beta*lambda the RK polynomials blow up in their own way —
+        // that's exactly the paper's instability argument, tested elsewhere).
+        let e_euler_lo = integrator_error(Gate::Euler, 0.4, 64, 16, 1);
+        let e_euler_hi = integrator_error(Gate::Euler, 1.2, 64, 16, 1);
+        assert!(e_euler_hi > e_euler_lo, "{e_euler_hi} <= {e_euler_lo}");
+        let e_rk2 = integrator_error(Gate::Rk(2), 1.2, 64, 16, 1);
+        let e_rk4 = integrator_error(Gate::Rk(4), 1.2, 64, 16, 1);
+        assert!(e_rk2 < e_euler_hi, "rk2 {e_rk2} vs euler {e_euler_hi}");
+        assert!(e_rk4 < e_rk2, "rk4 {e_rk4} vs rk2 {e_rk2}");
+        let e_exact = integrator_error(Gate::Efla, 1.2, 64, 16, 1);
+        assert!(e_exact == 0.0);
+    }
+
+    #[test]
+    fn chunkwise_is_consistent_for_all_gates() {
+        for gate in [Gate::Euler, Gate::Rk(2), Gate::Rk(4), Gate::Efla] {
+            let err = chunkwise_consistency(gate, 48, 8, 16, 3);
+            assert!(err < 5e-4, "{gate:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn corruption_grid_shapes() {
+        let g = corruption_grid();
+        assert_eq!(g.len(), 3);
+        for (_, sweep) in g {
+            assert_eq!(sweep.len(), 6);
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Layer-3 coordinator: the part of the system that owns the run.
+//!
+//! * [`config`]      — typed experiment/run configuration (JSON + CLI).
+//! * [`schedule`]    — LR schedules (cosine + warmup, paper Appendix A).
+//! * [`session`]     — a model bound to its artifacts: parameter/optimizer
+//!   state threaded through the PJRT step executable.
+//! * [`trainer`]     — training loops (LM, classifier) with metrics,
+//!   checkpointing and prefetched data.
+//! * [`evaluator`]   — perplexity + downstream-probe + MAD accuracy evals.
+//! * [`server`]      — slot-based continuously-batched decode service on the
+//!   O(1)-state recurrent path (the serving win linear attention buys).
+//! * [`checkpoint`]  — binary param/opt-state snapshots.
+//! * [`experiments`] — the registry mapping paper tables/figures to runs.
+
+pub mod checkpoint;
+pub mod config;
+pub mod evaluator;
+pub mod experiments;
+pub mod schedule;
+pub mod server;
+pub mod session;
+pub mod trainer;

@@ -1,0 +1,79 @@
+//! Learning-rate schedules. The authoritative schedule lives here (L3 owns
+//! time); the HLO step graph takes `lr` as a scalar input each step.
+//!
+//! Paper Appendix A: AdamW, peak 3e-4, cosine decay to 3e-5 with linear
+//! warmup (1B tokens for the 340M run — we scale warmup to our step count).
+
+/// A learning-rate schedule.
+#[derive(Clone, Copy, Debug)]
+pub enum Schedule {
+    Constant { lr: f64 },
+    /// Linear warmup to `peak`, cosine decay to `floor` at `total`.
+    CosineWarmup { peak: f64, floor: f64, warmup: u64, total: u64 },
+}
+
+impl Schedule {
+    /// Paper-style default scaled to `total` steps (10% warmup).
+    pub fn paper_default(peak: f64, total: u64) -> Schedule {
+        Schedule::CosineWarmup {
+            peak,
+            floor: peak / 10.0,
+            warmup: (total / 10).max(1),
+            total,
+        }
+    }
+
+    /// LR at 1-based step `t`.
+    pub fn lr(&self, t: u64) -> f64 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::CosineWarmup { peak, floor, warmup, total } => {
+                let t = t as f64;
+                let (warmup, total) = (warmup as f64, total as f64);
+                if t < warmup {
+                    return peak * t / warmup.max(1.0);
+                }
+                let prog = ((t - warmup) / (total - warmup).max(1.0)).min(1.0);
+                floor + 0.5 * (peak - floor) * (1.0 + (std::f64::consts::PI * prog).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 1e-3 };
+        assert_eq!(s.lr(1), 1e-3);
+        assert_eq!(s.lr(1000), 1e-3);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::CosineWarmup { peak: 1.0, floor: 0.1, warmup: 100, total: 1000 };
+        assert!((s.lr(50) - 0.5).abs() < 1e-9);
+        assert!((s.lr(100) - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = Schedule::CosineWarmup { peak: 1.0, floor: 0.1, warmup: 10, total: 100 };
+        assert!((s.lr(100) - 0.1).abs() < 1e-6);
+        assert!(s.lr(55) < s.lr(20));
+        assert!(s.lr(2000) >= 0.1 - 1e-9); // clamps past total
+    }
+
+    #[test]
+    fn monotone_decay_after_peak() {
+        let s = Schedule::paper_default(3e-4, 500);
+        let mut last = f64::INFINITY;
+        for t in (51..=500).step_by(10) {
+            let lr = s.lr(t);
+            assert!(lr <= last + 1e-12);
+            last = lr;
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Batched generation server on the O(1)-state recurrent decode path.
+//!
+//! The serving win of (error-free) linear attention: no KV cache, just a
+//! fixed-size per-sequence state (conv caches + S per layer). This module
+//! implements a vLLM-style *continuously batched* decode loop over the
+//! fixed-B decode artifact:
+//!
+//! * B slots, each holding one request's recurrent state rows;
+//! * every engine step executes ONE decode for all B slots;
+//! * slots still consuming their prompt feed the next prompt token
+//!   (piggy-backed prefill — exact, since slot states are independent);
+//! * generating slots sample from the returned logits;
+//! * finished slots are immediately refilled from the queue (continuous
+//!   batching), their state rows zeroed in place.
+//!
+//! State lives host-side between steps (row surgery is trivial there); the
+//! decode executable is the only compute.
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::session::Session;
+use crate::runtime::{Executable, HostValue, Runtime};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// 0.0 = greedy; otherwise softmax temperature sampling.
+    pub temperature: f32,
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Engine steps this request occupied a slot (prompt + decode).
+    pub steps: usize,
+}
+
+#[derive(Clone, Debug)]
+struct Slot {
+    id: u64,
+    prompt: Vec<i32>,
+    consumed: usize,
+    generated: Vec<i32>,
+    max_new: usize,
+    temperature: f32,
+    steps: usize,
+}
+
+/// Engine statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    pub engine_steps: u64,
+    pub tokens_processed: u64,
+    pub completed: u64,
+    pub wall_secs: f64,
+}
+
+impl ServerStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.tokens_processed as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The batched decode engine.
+pub struct Server<'a> {
+    session: &'a Session,
+    decode: std::rc::Rc<Executable>,
+    /// Host-side recurrent state, one HostValue per state tensor (B, ...).
+    state: Vec<HostValue>,
+    slots: Vec<Option<Slot>>,
+    queue: VecDeque<GenRequest>,
+    results: Vec<GenResult>,
+    rng: Rng,
+    batch: usize,
+    vocab: usize,
+    pub stats: ServerStats,
+}
+
+impl<'a> Server<'a> {
+    /// Build from a trained session + its decode artifact.
+    pub fn new(rt: &Runtime, session: &'a Session, seed: u64) -> Result<Self> {
+        let name = format!("{}_decode", session.family());
+        let decode = rt.load(&name)?;
+        let spec = decode.spec();
+        let batch = spec
+            .inputs
+            .last()
+            .map(|t| t.shape.first().copied().unwrap_or(0))
+            .unwrap_or(0);
+        if batch == 0 {
+            bail!("{name}: cannot infer decode batch");
+        }
+        let vocab = spec.outputs[0].shape.last().copied().unwrap_or(0);
+        // State inputs sit between params and the trailing token input.
+        let n_state = spec.state_names.len();
+        let state_specs =
+            &spec.inputs[spec.inputs.len() - 1 - n_state..spec.inputs.len() - 1];
+        let state: Vec<HostValue> =
+            state_specs.iter().map(HostValue::zeros_like_spec).collect();
+        Ok(Server {
+            session,
+            decode,
+            state,
+            slots: vec![None; batch],
+            queue: VecDeque::new(),
+            results: Vec::new(),
+            rng: Rng::new(seed),
+            batch,
+            vocab,
+            stats: ServerStats::default(),
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&mut self, req: GenRequest) {
+        assert!(!req.prompt.is_empty(), "empty prompt");
+        self.queue.push_back(req);
+    }
+
+    /// Zero all state rows for slot `s`.
+    fn clear_slot_state(&mut self, s: usize) {
+        for hv in &mut self.state {
+            if let HostValue::F32(t) = hv {
+                let row = t.len() / self.batch;
+                t.data_mut()[s * row..(s + 1) * row].iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+    }
+
+    /// Admit queued requests into free slots.
+    fn admit(&mut self) {
+        for s in 0..self.batch {
+            if self.slots[s].is_none() {
+                if let Some(req) = self.queue.pop_front() {
+                    self.clear_slot_state(s);
+                    self.slots[s] = Some(Slot {
+                        id: req.id,
+                        prompt: req.prompt,
+                        consumed: 0,
+                        generated: Vec::new(),
+                        max_new: req.max_new,
+                        temperature: req.temperature,
+                        steps: 0,
+                    });
+                }
+            }
+        }
+    }
+
+    fn sample(rng: &mut Rng, logits: &[f32], temperature: f32) -> i32 {
+        if temperature <= 0.0 {
+            return logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0);
+        }
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f64> =
+            logits.iter().map(|&l| (((l - mx) / temperature) as f64).exp()).collect();
+        rng.categorical(&weights) as i32
+    }
+
+    /// One engine step: feed every active slot one token, collect outputs.
+    /// Returns the number of active slots processed.
+    pub fn engine_step(&mut self) -> Result<usize> {
+        self.admit();
+        let active: Vec<usize> =
+            (0..self.batch).filter(|&s| self.slots[s].is_some()).collect();
+        if active.is_empty() {
+            return Ok(0);
+        }
+
+        // Build the per-slot input token.
+        let mut tokens = vec![0i32; self.batch];
+        for &s in &active {
+            let slot = self.slots[s].as_ref().unwrap();
+            tokens[s] = if slot.consumed < slot.prompt.len() {
+                slot.prompt[slot.consumed]
+            } else {
+                *slot.generated.last().expect("generating slot has a last token")
+            };
+        }
+
+        // Execute decode: params ++ state ++ token.
+        let mut extra: Vec<xla::Literal> =
+            self.state.iter().map(|hv| hv.to_literal()).collect::<Result<_>>()?;
+        extra.push(HostValue::i32(&[self.batch], tokens).to_literal()?);
+        let outs = self.session.run_aux(&self.decode, &extra)?;
+        let spec = self.decode.spec();
+        let logits = HostValue::from_literal(&outs[0], &spec.outputs[0])?
+            .into_f32()
+            .map_err(|e| anyhow!("logits: {e}"))?;
+        // Refresh state from outputs [1..].
+        for (i, lit) in outs.iter().enumerate().skip(1) {
+            self.state[i - 1] = HostValue::from_literal(lit, &spec.outputs[i])?;
+        }
+
+        // Advance slots.
+        self.stats.engine_steps += 1;
+        self.stats.tokens_processed += active.len() as u64;
+        for &s in &active {
+            let slot = self.slots[s].as_mut().unwrap();
+            slot.steps += 1;
+            if slot.consumed < slot.prompt.len() {
+                slot.consumed += 1;
+                // When the whole prompt is consumed, the logits at its last
+                // token give the first generated token.
+                if slot.consumed == slot.prompt.len() {
+                    let row = &logits.data()[s * self.vocab..(s + 1) * self.vocab];
+                    let t = Self::sample(&mut self.rng, row, slot.temperature);
+                    slot.generated.push(t);
+                }
+            } else {
+                let row = &logits.data()[s * self.vocab..(s + 1) * self.vocab];
+                let t = Self::sample(&mut self.rng, row, slot.temperature);
+                slot.generated.push(t);
+            }
+            if slot.generated.len() >= slot.max_new {
+                let done = self.slots[s].take().unwrap();
+                self.results.push(GenResult {
+                    id: done.id,
+                    tokens: done.generated,
+                    steps: done.steps,
+                });
+                self.stats.completed += 1;
+            }
+        }
+        Ok(active.len())
+    }
+
+    /// Run until queue + slots drain; returns all results (by request id).
+    pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
+        let t0 = std::time::Instant::now();
+        loop {
+            let n = self.engine_step()?;
+            if n == 0 && self.queue.is_empty() {
+                break;
+            }
+        }
+        self.stats.wall_secs += t0.elapsed().as_secs_f64();
+        let mut out = std::mem::take(&mut self.results);
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+}
+
+/// Decode state tensors are (B, ...) rows — helper for tests.
+pub fn state_rows(t: &Tensor, batch: usize) -> usize {
+    t.len() / batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Rng::new(1);
+        let logits = vec![0.1f32, 3.0, -1.0, 2.9];
+        assert_eq!(Server::sample(&mut rng, &logits, 0.0), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_respects_distribution() {
+        let mut rng = Rng::new(2);
+        let logits = vec![0.0f32, 10.0];
+        let hits = (0..100)
+            .filter(|_| Server::sample(&mut rng, &logits, 1.0) == 1)
+            .count();
+        assert!(hits > 95, "peaked logits should dominate, got {hits}");
+    }
+}

@@ -1,0 +1,303 @@
+//! Training loops: LM / MAD / classifier over a [`Session`].
+//!
+//! The trainer owns the schedule, the data prefetcher, metrics history and
+//! checkpointing; the math lives entirely inside the AOT step executable.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::checkpoint;
+use crate::coordinator::config::{RunConfig, Task};
+use crate::coordinator::schedule::Schedule;
+use crate::coordinator::session::Session;
+use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::data::loader::{Prefetcher, TokenStream};
+use crate::data::mad::{MadGen, MadTask};
+use crate::data::mnist::{Corruption, Smnist};
+use crate::data::tokenizer::Bpe;
+use crate::runtime::{HostValue, Runtime};
+use crate::util::json::Json;
+use crate::util::logging::Meter;
+use crate::util::rng::Rng;
+
+/// One recorded point of the training curve.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub step: u64,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub lr: f64,
+}
+
+/// Full training record returned to the caller (and dumped as JSON).
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub curve: Vec<CurvePoint>,
+    pub evals: Vec<(u64, f32)>, // (step, eval metric: LM ppl / clf acc)
+    pub tokens_per_step: usize,
+    pub wall_secs: f64,
+}
+
+impl History {
+    pub fn final_loss(&self) -> f32 {
+        self.curve.last().map(|p| p.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Mean loss over the last `n` points (smoother than final_loss).
+    pub fn tail_loss(&self, n: usize) -> f32 {
+        if self.curve.is_empty() {
+            return f32::NAN;
+        }
+        let k = n.min(self.curve.len());
+        let s: f32 = self.curve[self.curve.len() - k..].iter().map(|p| p.loss).sum();
+        s / k as f32
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "curve",
+                Json::Arr(
+                    self.curve
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("step", Json::Num(p.step as f64)),
+                                ("loss", Json::Num(p.loss as f64)),
+                                ("grad_norm", Json::Num(p.grad_norm as f64)),
+                                ("lr", Json::Num(p.lr)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "evals",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|&(s, m)| Json::arr_f64(&[s as f64, m as f64]))
+                        .collect(),
+                ),
+            ),
+            ("tokens_per_step", Json::Num(self.tokens_per_step as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+        ])
+    }
+}
+
+/// A batch for the two data slots of the step graph.
+pub type DataBatch = (HostValue, HostValue);
+
+/// Train an LM (or MAD) session from a token/target batch source.
+pub fn train_lm<F>(
+    session: &mut Session,
+    schedule: Schedule,
+    steps: u64,
+    mut next_batch: F,
+    mut on_step: impl FnMut(&CurvePoint),
+) -> Result<History>
+where
+    F: FnMut() -> DataBatch,
+{
+    let t0 = std::time::Instant::now();
+    let mut hist = History {
+        tokens_per_step: session.batch * session.seq,
+        ..Default::default()
+    };
+    let mut meter = Meter::new(Some(steps));
+    for _ in 0..steps {
+        let (tokens, targets) = next_batch();
+        let lr = schedule.lr(session.steps_done() + 1);
+        let metrics =
+            session.step([tokens.to_literal()?, targets.to_literal()?], lr as f32)?;
+        let point = CurvePoint {
+            step: session.steps_done(),
+            loss: metrics.loss,
+            grad_norm: metrics.grad_norm,
+            lr,
+        };
+        hist.curve.push(point);
+        meter.add(1);
+        if point.step % 25 == 0 || point.step == steps {
+            log::info!(
+                "[{}] {} | loss {:.4} | gnorm {:.3} | lr {:.2e}",
+                session.family(),
+                meter.line("step"),
+                point.loss,
+                point.grad_norm,
+                point.lr
+            );
+        }
+        on_step(&point);
+    }
+    hist.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(hist)
+}
+
+/// Build the LM data pipeline for a config: corpus -> BPE -> token stream
+/// -> prefetching batcher. Returns (prefetcher, tokenizer).
+pub fn lm_data(cfg: &RunConfig, batch: usize, seq: usize) -> Result<(Prefetcher<(HostValue, HostValue)>, Bpe)> {
+    let vocab = vocab_for_preset(&cfg.preset);
+    let mut corpus = Corpus::new(cfg.seed, CorpusConfig::default());
+    let sample = corpus.text(cfg.corpus_bytes.min(300_000));
+    let bpe = if vocab > 256 { Bpe::train(&sample, vocab) } else { Bpe::bytes_only() };
+    let text = if cfg.corpus_bytes > sample.len() {
+        let mut t = sample;
+        t.push_str(&corpus.text(cfg.corpus_bytes - t.len()));
+        t
+    } else {
+        sample
+    };
+    let ids: Vec<i32> = bpe.encode_cached(&text).iter().map(|&x| x as i32).collect();
+    log::info!(
+        "corpus: {} bytes -> {} tokens (vocab {})",
+        text.len(),
+        ids.len(),
+        bpe.vocab_size()
+    );
+    let mut stream = TokenStream::new(ids);
+    let pf = Prefetcher::spawn(4, move || {
+        let (t, y) = stream.lm_batch(batch, seq);
+        (
+            HostValue::i32(&[batch, seq], t),
+            HostValue::i32(&[batch, seq], y),
+        )
+    });
+    Ok((pf, bpe))
+}
+
+/// Vocab sizes matching `python/compile/model.py` PRESETS.
+pub fn vocab_for_preset(preset: &str) -> usize {
+    match preset {
+        "tiny" => 256,
+        "mini" => 1024,
+        "small" => 2048,
+        "medium" => 4096,
+        "100m" => 8192,
+        "mad" => 64,
+        _ => 256,
+    }
+}
+
+/// Build a MAD data prefetcher for one task.
+pub fn mad_data(task: MadTask, batch: usize, seq: usize, seed: u64) -> Prefetcher<(HostValue, HostValue)> {
+    let mut g = MadGen::new(task, seq, seed);
+    Prefetcher::spawn(4, move || {
+        let (t, y) = g.batch(batch);
+        (
+            HostValue::i32(&[batch, seq], t),
+            HostValue::i32(&[batch, seq], y),
+        )
+    })
+}
+
+/// Build a classifier (sMNIST) prefetcher with a train-time corruption.
+pub fn clf_data(
+    batch: usize,
+    seed: u64,
+    corruption: Corruption,
+) -> Prefetcher<(HostValue, HostValue)> {
+    let mut gen = Smnist::new(seed);
+    let mut rng = Rng::new(seed ^ 0xC0_4415);
+    Prefetcher::spawn(4, move || {
+        let (mut px, ls) = gen.batch(batch);
+        for row in px.chunks_mut(crate::data::mnist::SEQ) {
+            corruption.apply(row, &mut rng);
+        }
+        (
+            HostValue::F32(crate::tensor::Tensor::from_vec(
+                &[batch, crate::data::mnist::SEQ],
+                px,
+            )),
+            HostValue::i32(&[batch], ls),
+        )
+    })
+}
+
+/// End-to-end run driver used by the launcher binary: builds the session and
+/// pipeline for `cfg`, trains, evaluates, writes history + checkpoints.
+pub fn run(rt: &Runtime, cfg: &RunConfig) -> Result<History> {
+    let family = cfg.family();
+    let mut session = Session::init(rt, &family, cfg.seed as u32)?;
+    log::info!(
+        "session {family}: {} param tensors, {:.2}M elements, batch {} x seq {}",
+        session.n_params_tensors(),
+        session.param_elems() as f64 / 1e6,
+        session.batch,
+        session.seq
+    );
+    let schedule = Schedule::paper_default(cfg.peak_lr, cfg.steps);
+    let (batch, seq) = (session.batch, session.seq);
+
+    enum Source {
+        Pf(Prefetcher<(HostValue, HostValue)>),
+    }
+    let source = match cfg.task {
+        Task::Lm => Source::Pf(lm_data(cfg, batch, seq)?.0),
+        Task::Mad => Source::Pf(mad_data(MadTask::InContextRecall, batch, seq, cfg.seed)),
+        Task::Classifier => Source::Pf(clf_data(batch, cfg.seed, Corruption::None)),
+    };
+    let Source::Pf(pf) = source;
+
+    let ckpt_dir: PathBuf = cfg.out_dir.join(&family);
+    let ckpt_every = cfg.ckpt_every;
+    let mut hist = train_lm(
+        &mut session,
+        schedule,
+        cfg.steps,
+        || pf.next(),
+        |_| {},
+    )?;
+
+    if ckpt_every > 0 || cfg.steps > 0 {
+        let tensors = session.export_state()?;
+        checkpoint::save(&ckpt_dir.join("final.ckpt"), session.steps_done(), &tensors)?;
+        log::info!("checkpoint: {}", ckpt_dir.join("final.ckpt").display());
+    }
+
+    // Final eval: LM perplexity on held-out stream / clf accuracy.
+    if let Task::Lm = cfg.task {
+        let eval_cfg = RunConfig { seed: cfg.seed + 1, ..cfg.clone() };
+        let (eval_pf, _) = lm_data(&eval_cfg, batch, seq)?;
+        let mut loss_sum = 0f64;
+        let mut count = 0f64;
+        for _ in 0..cfg.eval_batches {
+            let (t, y) = eval_pf.next();
+            let outs = session.eval([t.to_literal()?, y.to_literal()?])?;
+            loss_sum += outs[0] as f64;
+            count += outs[1] as f64;
+        }
+        let ppl = (loss_sum / count.max(1.0)).exp();
+        log::info!("eval: ppl {ppl:.2} over {count} tokens");
+        hist.evals.push((session.steps_done(), ppl as f32));
+    }
+
+    std::fs::create_dir_all(&ckpt_dir)?;
+    crate::util::json::write_file(&ckpt_dir.join("history.json"), &hist.to_json())?;
+    Ok(hist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_presets_match_python() {
+        assert_eq!(vocab_for_preset("tiny"), 256);
+        assert_eq!(vocab_for_preset("small"), 2048);
+        assert_eq!(vocab_for_preset("100m"), 8192);
+        assert_eq!(vocab_for_preset("mad"), 64);
+    }
+
+    #[test]
+    fn history_tail_loss() {
+        let mut h = History::default();
+        for i in 0..10 {
+            h.curve.push(CurvePoint { step: i, loss: i as f32, grad_norm: 0.0, lr: 0.0 });
+        }
+        assert!((h.tail_loss(2) - 8.5).abs() < 1e-6);
+        assert_eq!(h.final_loss(), 9.0);
+    }
+}

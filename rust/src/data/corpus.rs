@@ -1,0 +1,220 @@
+//! Synthetic corpus generator — the SlimPajama stand-in (DESIGN.md §5).
+//!
+//! Documents are sequences of template sentences over a synthetic lexicon:
+//!
+//! * word frequencies are Zipfian (`s ~ 1.05`), like natural text;
+//! * sentences follow a small Markov grammar (SVO templates with function
+//!   words), giving local n-gram structure any LM can learn;
+//! * each document introduces `facts` key-value pairs early ("the <attr> of
+//!   <entity> is <value>") and *restates* them later — restatements are only
+//!   predictable by a model that kept the association in memory, which is
+//!   precisely the capability axis EFLA vs DeltaNet differ on (associative
+//!   recall through the delta-rule state).
+//!
+//! The mix of unpredictable filler and predictable long-range restatements
+//! means perplexity differences between token mixers reflect memory
+//! fidelity, mirroring the role SlimPajama plays in the paper (§5.2).
+
+use crate::util::rng::{Rng, ZipfSampler};
+
+/// Corpus generation parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    /// Lexicon sizes per category.
+    pub n_entities: usize,
+    pub n_attributes: usize,
+    pub n_values: usize,
+    pub n_filler: usize,
+    /// Facts introduced (and later restated) per document.
+    pub facts_per_doc: usize,
+    /// Filler sentences between introduction block and restatement block.
+    pub filler_sentences: usize,
+    /// Zipf exponent for filler word frequencies.
+    pub zipf_s: f64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            n_entities: 200,
+            n_attributes: 40,
+            n_values: 300,
+            n_filler: 800,
+            facts_per_doc: 4,
+            filler_sentences: 12,
+            zipf_s: 1.05,
+        }
+    }
+}
+
+/// Seeded document stream.
+pub struct Corpus {
+    cfg: CorpusConfig,
+    rng: Rng,
+    zipf: ZipfSampler,
+    entities: Vec<String>,
+    attributes: Vec<String>,
+    values: Vec<String>,
+    filler: Vec<String>,
+}
+
+/// Deterministic pseudo-word from an index ("lorem"-like, pronounceable).
+fn make_word(idx: usize, prefix: char) -> String {
+    const CONS: &[u8] = b"bcdfghklmnprstvz";
+    const VOW: &[u8] = b"aeiou";
+    let mut w = String::new();
+    w.push(prefix);
+    let mut x = idx + 7;
+    for i in 0..3 {
+        let c = CONS[(x + i * 13) % CONS.len()] as char;
+        let v = VOW[(x / 3 + i * 5) % VOW.len()] as char;
+        w.push(c);
+        w.push(v);
+        x /= 5;
+        if x == 0 && i >= 1 {
+            break;
+        }
+    }
+    w
+}
+
+impl Corpus {
+    pub fn new(seed: u64, cfg: CorpusConfig) -> Self {
+        let rng = Rng::new(seed);
+        let zipf = ZipfSampler::new(cfg.n_filler, cfg.zipf_s);
+        let entities = (0..cfg.n_entities).map(|i| make_word(i, 'e')).collect();
+        let attributes = (0..cfg.n_attributes).map(|i| make_word(i, 'a')).collect();
+        let values = (0..cfg.n_values).map(|i| make_word(i, 'v')).collect();
+        let filler = (0..cfg.n_filler).map(|i| make_word(i, 'w')).collect();
+        Corpus { cfg, rng, zipf, entities, attributes, values, filler }
+    }
+
+    fn filler_sentence(&mut self) -> String {
+        let n = self.rng.range(4, 9);
+        let mut s = String::new();
+        for i in 0..n {
+            if i > 0 {
+                s.push(' ');
+            }
+            let w = self.zipf.sample(&mut self.rng);
+            s.push_str(&self.filler[w]);
+        }
+        s.push('.');
+        s
+    }
+
+    /// Generate one document. Returns (text, facts) where facts are
+    /// (entity, attribute, value) index triples — used by the probe builder.
+    pub fn document(&mut self) -> (String, Vec<(usize, usize, usize)>) {
+        let mut facts = Vec::with_capacity(self.cfg.facts_per_doc);
+        for _ in 0..self.cfg.facts_per_doc {
+            let e = self.rng.range(0, self.entities.len());
+            let a = self.rng.range(0, self.attributes.len());
+            let v = self.rng.range(0, self.values.len());
+            facts.push((e, a, v));
+        }
+
+        let mut text = String::new();
+        // Introduction block.
+        for &(e, a, v) in &facts {
+            text.push_str(&format!(
+                "the {} of {} is {}. ",
+                self.attributes[a], self.entities[e], self.values[v]
+            ));
+        }
+        // Filler block.
+        for _ in 0..self.cfg.filler_sentences {
+            text.push_str(&self.filler_sentence());
+            text.push(' ');
+        }
+        // Restatement block (long-range recall targets), shuffled order.
+        let mut order: Vec<usize> = (0..facts.len()).collect();
+        self.rng.shuffle(&mut order);
+        for &i in &order {
+            let (e, a, v) = facts[i];
+            text.push_str(&format!(
+                "recall the {} of {} is {}. ",
+                self.attributes[a], self.entities[e], self.values[v]
+            ));
+        }
+        text.push('\n');
+        (text, facts)
+    }
+
+    /// Concatenate documents until at least `min_bytes` of text.
+    pub fn text(&mut self, min_bytes: usize) -> String {
+        let mut out = String::with_capacity(min_bytes + 1024);
+        while out.len() < min_bytes {
+            let (doc, _) = self.document();
+            out.push_str(&doc);
+        }
+        out
+    }
+
+    /// Accessors used by the probe builder.
+    pub fn entity(&self, i: usize) -> &str {
+        &self.entities[i]
+    }
+
+    pub fn attribute(&self, i: usize) -> &str {
+        &self.attributes[i]
+    }
+
+    pub fn value(&self, i: usize) -> &str {
+        &self.values[i]
+    }
+
+    pub fn n_values(&self) -> usize {
+        self.values.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Corpus::new(42, CorpusConfig::default());
+        let mut b = Corpus::new(42, CorpusConfig::default());
+        assert_eq!(a.document().0, b.document().0);
+        assert_eq!(a.text(1000), b.text(1000));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Corpus::new(1, CorpusConfig::default());
+        let mut b = Corpus::new(2, CorpusConfig::default());
+        assert_ne!(a.document().0, b.document().0);
+    }
+
+    #[test]
+    fn document_restates_facts() {
+        let mut c = Corpus::new(7, CorpusConfig::default());
+        let (text, facts) = c.document();
+        assert_eq!(facts.len(), 4);
+        for &(e, a, v) in &facts {
+            let intro = format!("the {} of {} is {}.", c.attribute(a), c.entity(e), c.value(v));
+            let recall = format!("recall {intro}");
+            assert!(text.contains(&intro), "missing intro: {intro}");
+            assert!(text.contains(&recall), "missing recall: {recall}");
+        }
+    }
+
+    #[test]
+    fn text_reaches_requested_size() {
+        let mut c = Corpus::new(3, CorpusConfig::default());
+        let t = c.text(10_000);
+        assert!(t.len() >= 10_000);
+        assert!(t.is_ascii());
+    }
+
+    #[test]
+    fn words_are_wordlike() {
+        for i in 0..50 {
+            let w = make_word(i, 'x');
+            assert!(w.len() >= 3 && w.len() <= 9, "{w}");
+            assert!(w.chars().all(|c| c.is_ascii_lowercase()));
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Batch loaders with background prefetch.
+//!
+//! [`TokenStream`] turns corpus text into a ring of token ids and cuts
+//! next-token-prediction batches; [`Prefetcher`] wraps any batch-producing
+//! closure in a worker thread + bounded channel so data generation overlaps
+//! the PJRT step (no tokio in the vendor set — std::thread + mpsc).
+
+use std::sync::mpsc;
+use std::thread;
+
+/// Token ring buffer cutting (tokens, shifted targets) LM batches.
+pub struct TokenStream {
+    ids: Vec<i32>,
+    cursor: usize,
+}
+
+impl TokenStream {
+    pub fn new(ids: Vec<i32>) -> Self {
+        assert!(!ids.is_empty(), "empty token stream");
+        TokenStream { ids, cursor: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Next contiguous window of `n` tokens (wraps around).
+    fn window(&mut self, n: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let take = (n - out.len()).min(self.ids.len() - self.cursor);
+            out.extend_from_slice(&self.ids[self.cursor..self.cursor + take]);
+            self.cursor = (self.cursor + take) % self.ids.len();
+        }
+        out
+    }
+
+    /// An LM batch: tokens (B*L) and next-token targets (B*L, last = -1).
+    pub fn lm_batch(&mut self, batch: usize, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = Vec::with_capacity(batch * seq);
+        let mut tgts = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let w = self.window(seq + 1);
+            toks.extend_from_slice(&w[..seq]);
+            for t in 0..seq {
+                tgts.push(if t + 1 <= seq { w[t + 1] } else { -1 });
+            }
+        }
+        (toks, tgts)
+    }
+}
+
+/// A prefetched batch of any type.
+pub struct Prefetcher<T: Send + 'static> {
+    rx: mpsc::Receiver<T>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> Prefetcher<T> {
+    /// Spawn a worker running `make` forever, keeping up to `depth` batches
+    /// ready. The worker exits when the receiver is dropped.
+    pub fn spawn<F>(depth: usize, mut make: F) -> Self
+    where
+        F: FnMut() -> T + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel(depth);
+        let handle = thread::Builder::new()
+            .name("efla-loader".into())
+            .spawn(move || {
+                loop {
+                    let item = make();
+                    if tx.send(item).is_err() {
+                        break; // consumer gone
+                    }
+                }
+            })
+            .expect("spawn loader thread");
+        Prefetcher { rx, handle: Some(handle) }
+    }
+
+    /// Blocking next batch.
+    pub fn next(&self) -> T {
+        self.rx.recv().expect("loader thread died")
+    }
+}
+
+impl<T: Send + 'static> Drop for Prefetcher<T> {
+    fn drop(&mut self) {
+        // Drain channel so the worker unblocks on send, then join.
+        while self.rx.try_recv().is_ok() {}
+        drop(std::mem::replace(&mut self.rx, mpsc::sync_channel(1).1));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_stream_wraps() {
+        let mut s = TokenStream::new(vec![1, 2, 3]);
+        let w = s.window(7);
+        assert_eq!(w, vec![1, 2, 3, 1, 2, 3, 1]);
+    }
+
+    #[test]
+    fn lm_batch_targets_are_shifted() {
+        let mut s = TokenStream::new((0..100).collect());
+        let (toks, tgts) = s.lm_batch(2, 10);
+        assert_eq!(toks.len(), 20);
+        assert_eq!(tgts.len(), 20);
+        for b in 0..2 {
+            for t in 0..9 {
+                assert_eq!(tgts[b * 10 + t], toks[b * 10 + t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn batches_advance() {
+        let mut s = TokenStream::new((0..1000).collect());
+        let (a, _) = s.lm_batch(1, 8);
+        let (b, _) = s.lm_batch(1, 8);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn prefetcher_delivers_in_order() {
+        let mut n = 0u32;
+        let pf = Prefetcher::spawn(2, move || {
+            n += 1;
+            n
+        });
+        assert_eq!(pf.next(), 1);
+        assert_eq!(pf.next(), 2);
+        assert_eq!(pf.next(), 3);
+    }
+
+    #[test]
+    fn prefetcher_shutdown_clean() {
+        let pf = Prefetcher::spawn(1, || vec![0u8; 1024]);
+        let _ = pf.next();
+        drop(pf); // must not hang
+    }
+}

@@ -1,0 +1,366 @@
+//! MAD benchmark task generators (Table 2; Poli et al. 2024).
+//!
+//! Six synthetic token-manipulation tasks probing architectural
+//! capabilities. Each generator emits `(tokens, targets)` pairs where
+//! `targets[t] = -1` marks positions excluded from the loss (only answer
+//! positions are scored), matching the masked-CE convention of the LM
+//! artifacts.
+//!
+//! Vocabulary layout (vocab = 64 for the `mad` preset):
+//!   0..=7    special tokens (PAD, SEP, QUERY, COPY, NOISE, BOS, EOS, MASK)
+//!   8..=35   "key" alphabet
+//!   36..=63  "value" alphabet
+
+use crate::util::rng::Rng;
+
+pub const PAD: i32 = 0;
+pub const SEP: i32 = 1;
+pub const QUERY: i32 = 2;
+pub const COPY: i32 = 3;
+pub const NOISE: i32 = 4;
+pub const BOS: i32 = 5;
+pub const EOS: i32 = 6;
+pub const MASK: i32 = 7;
+pub const KEY_BASE: i32 = 8;
+pub const N_KEYS: i32 = 28;
+pub const VAL_BASE: i32 = 36;
+pub const N_VALS: i32 = 28;
+pub const VOCAB: usize = 64;
+pub const IGNORE: i32 = -1;
+
+/// The six MAD tasks (paper Table 2 columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MadTask {
+    /// Compress: recall tokens of a sequence after a compression marker.
+    Compress,
+    /// Fuzzy recall: recall value for a key *adjacent* to the queried one.
+    FuzzyRecall,
+    /// In-context recall: classic associative recall over k/v pairs.
+    InContextRecall,
+    /// Memorize: fixed global key->value map (learned in weights).
+    Memorize,
+    /// Noisy recall: associative recall with noise tokens interleaved.
+    NoisyRecall,
+    /// Selective copy: copy only non-noise tokens, in order.
+    SelectiveCopy,
+}
+
+impl MadTask {
+    pub fn all() -> [MadTask; 6] {
+        [
+            MadTask::Compress,
+            MadTask::FuzzyRecall,
+            MadTask::InContextRecall,
+            MadTask::Memorize,
+            MadTask::NoisyRecall,
+            MadTask::SelectiveCopy,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MadTask::Compress => "compress",
+            MadTask::FuzzyRecall => "fuzzy_recall",
+            MadTask::InContextRecall => "in_context_recall",
+            MadTask::Memorize => "memorize",
+            MadTask::NoisyRecall => "noisy_recall",
+            MadTask::SelectiveCopy => "selective_copy",
+        }
+    }
+}
+
+fn key(rng: &mut Rng) -> i32 {
+    KEY_BASE + rng.below(N_KEYS as u64) as i32
+}
+
+fn val(rng: &mut Rng) -> i32 {
+    VAL_BASE + rng.below(N_VALS as u64) as i32
+}
+
+/// The fixed map used by `Memorize` (a function of the seed only).
+pub fn memorize_map(seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed ^ 0x4D454D4F52495A45); // "MEMORIZE"
+    (0..N_KEYS).map(|_| val(&mut rng)).collect()
+}
+
+/// One generated example.
+pub struct MadExample {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+/// Generator producing fixed-length examples for one task.
+pub struct MadGen {
+    pub task: MadTask,
+    pub seq: usize,
+    rng: Rng,
+    memo: Vec<i32>,
+}
+
+impl MadGen {
+    pub fn new(task: MadTask, seq: usize, seed: u64) -> Self {
+        let memo = memorize_map(seed);
+        MadGen { task, seq, rng: Rng::new(seed), memo }
+    }
+
+    /// Generate one example of length exactly `self.seq`.
+    pub fn example(&mut self) -> MadExample {
+        let mut t = vec![PAD; self.seq];
+        let mut y = vec![IGNORE; self.seq];
+        match self.task {
+            MadTask::InContextRecall => self.recall(&mut t, &mut y, 0.0, false),
+            MadTask::NoisyRecall => self.recall(&mut t, &mut y, 0.3, false),
+            MadTask::FuzzyRecall => self.recall(&mut t, &mut y, 0.0, true),
+            MadTask::Memorize => self.memorize(&mut t, &mut y),
+            MadTask::SelectiveCopy => self.selective_copy(&mut t, &mut y),
+            MadTask::Compress => self.compress(&mut t, &mut y),
+        }
+        MadExample { tokens: t, targets: y }
+    }
+
+    /// Associative recall core: emit (k v) pairs (optionally interleaved
+    /// with NOISE), then query a seen key; answer is the value at the next
+    /// position. `fuzzy` queries key+1 (answer = value of the *nearest* key,
+    /// here defined as the value bound to key), probing soft matching.
+    fn recall(&mut self, t: &mut [i32], y: &mut [i32], noise_p: f64, fuzzy: bool) {
+        let seq = self.seq;
+        // Reserve 3 positions for [SEP QUERY-key answer].
+        let budget = seq - 4;
+        let mut pairs: Vec<(i32, i32)> = Vec::new();
+        let mut pos = 0;
+        t[pos] = BOS;
+        pos += 1;
+        while pos + 2 < budget {
+            if noise_p > 0.0 && self.rng.bernoulli(noise_p) {
+                t[pos] = NOISE;
+                pos += 1;
+                continue;
+            }
+            let (k, v) = (key(&mut self.rng), val(&mut self.rng));
+            t[pos] = k;
+            t[pos + 1] = v;
+            pos += 2;
+            pairs.push((k, v));
+        }
+        // Pick a queried pair (last binding wins for duplicate keys).
+        let (qk, qv) = pairs[self.rng.range(0, pairs.len())];
+        let qv = pairs.iter().rev().find(|&&(k, _)| k == qk).map(|&(_, v)| v).unwrap_or(qv);
+        t[pos] = SEP;
+        let asked = if fuzzy {
+            // neighbouring key id (wraps inside the key alphabet)
+            KEY_BASE + ((qk - KEY_BASE + 1) % N_KEYS)
+        } else {
+            qk
+        };
+        t[pos + 1] = QUERY;
+        t[pos + 2] = asked;
+        // Next-token convention: the target sits at the position whose
+        // *input* is the asked key — the model must produce the bound value
+        // before seeing it. The answer token itself is appended as teacher
+        // forcing input only.
+        y[pos + 2] = qv;
+        if pos + 3 < seq {
+            t[pos + 3] = qv;
+        }
+    }
+
+    /// Fixed global map: input is [k] * n queries; output value per key is
+    /// constant across the dataset (must be memorized in the weights).
+    fn memorize(&mut self, t: &mut [i32], y: &mut [i32]) {
+        let seq = self.seq;
+        let mut pos = 0;
+        t[pos] = BOS;
+        pos += 1;
+        while pos + 1 < seq {
+            let kidx = self.rng.below(N_KEYS as u64) as usize;
+            let k = KEY_BASE + kidx as i32;
+            let v = self.memo[kidx];
+            t[pos] = k;
+            t[pos + 1] = v;
+            y[pos] = v; // at the key position, predict the memorized value
+            pos += 2;
+        }
+    }
+
+    /// Copy the non-noise tokens after the COPY marker, in order.
+    fn selective_copy(&mut self, t: &mut [i32], y: &mut [i32]) {
+        let seq = self.seq;
+        let n_content = (seq - 2) / 3; // content, noise, then copy region
+        let mut content = Vec::with_capacity(n_content);
+        let mut pos = 0;
+        t[pos] = BOS;
+        pos += 1;
+        // content interleaved with noise
+        while content.len() < n_content {
+            if self.rng.bernoulli(0.4) {
+                t[pos] = NOISE;
+            } else {
+                let v = val(&mut self.rng);
+                t[pos] = v;
+                content.push(v);
+            }
+            pos += 1;
+        }
+        t[pos] = COPY;
+        for &c in &content {
+            if pos + 1 >= seq {
+                break;
+            }
+            // target at the position BEFORE the copied token appears
+            y[pos] = c;
+            t[pos + 1] = c;
+            pos += 1;
+        }
+    }
+
+    /// Compress: a content block, a MASK block (forcing the state to carry
+    /// the content), then reproduce the content after SEP.
+    fn compress(&mut self, t: &mut [i32], y: &mut [i32]) {
+        let seq = self.seq;
+        let n = (seq - 3) / 3;
+        let content: Vec<i32> = (0..n).map(|_| val(&mut self.rng)).collect();
+        let mut pos = 0;
+        t[pos] = BOS;
+        pos += 1;
+        for &c in &content {
+            t[pos] = c;
+            pos += 1;
+        }
+        for _ in 0..n {
+            t[pos] = MASK;
+            pos += 1;
+        }
+        t[pos] = SEP;
+        for &c in &content {
+            if pos + 1 >= seq {
+                break;
+            }
+            y[pos] = c;
+            t[pos + 1] = c;
+            pos += 1;
+        }
+    }
+
+    /// A batch of examples flattened to (B*seq) token/target vectors.
+    pub fn batch(&mut self, b: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = Vec::with_capacity(b * self.seq);
+        let mut tgts = Vec::with_capacity(b * self.seq);
+        for _ in 0..b {
+            let ex = self.example();
+            toks.extend_from_slice(&ex.tokens);
+            tgts.extend_from_slice(&ex.targets);
+        }
+        (toks, tgts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(task: MadTask) -> MadGen {
+        MadGen::new(task, 128, 42)
+    }
+
+    #[test]
+    fn all_tasks_emit_valid_examples() {
+        for task in MadTask::all() {
+            let mut g = gen(task);
+            for _ in 0..20 {
+                let ex = g.example();
+                assert_eq!(ex.tokens.len(), 128, "{task:?}");
+                assert_eq!(ex.targets.len(), 128);
+                assert!(
+                    ex.tokens.iter().all(|&t| (0..VOCAB as i32).contains(&t)),
+                    "{task:?} token out of vocab"
+                );
+                let scored = ex.targets.iter().filter(|&&t| t >= 0).count();
+                assert!(scored > 0, "{task:?} has no scored positions");
+                // Next-token convention: a scored target at position t must
+                // equal the *following* input token (teacher forcing), never
+                // the token at t itself (that would let the model copy its
+                // own input — the bug this test pins down).
+                for t in 0..ex.tokens.len() {
+                    if ex.targets[t] >= 0 {
+                        if t + 1 < ex.tokens.len() && ex.tokens[t + 1] != PAD {
+                            assert_eq!(
+                                ex.targets[t],
+                                ex.tokens[t + 1],
+                                "{task:?}: target at {t} must be the NEXT input \
+                                 (never the token at t — that would be copyable)"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recall_answer_matches_last_binding() {
+        let mut g = gen(MadTask::InContextRecall);
+        for _ in 0..50 {
+            let ex = g.example();
+            // Find QUERY position, asked key, and answer.
+            let qpos = ex.tokens.iter().position(|&t| t == QUERY).unwrap();
+            let asked = ex.tokens[qpos + 1];
+            let answer = ex.targets[qpos + 1];
+            assert!(answer >= VAL_BASE);
+            // teacher-forced answer token follows the asked key
+            assert_eq!(ex.tokens[qpos + 2], answer);
+            // Scan bindings: last value bound to `asked` must equal answer.
+            let mut last = None;
+            let mut i = 1;
+            while i + 1 < qpos {
+                let (a, b) = (ex.tokens[i], ex.tokens[i + 1]);
+                if a >= KEY_BASE && a < VAL_BASE && b >= VAL_BASE {
+                    if a == asked {
+                        last = Some(b);
+                    }
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            assert_eq!(last, Some(answer));
+        }
+    }
+
+    #[test]
+    fn memorize_map_is_stable() {
+        let m1 = memorize_map(7);
+        let m2 = memorize_map(7);
+        assert_eq!(m1, m2);
+        let mut g = MadGen::new(MadTask::Memorize, 64, 7);
+        let ex = g.example();
+        for i in 1..ex.tokens.len() - 1 {
+            let k = ex.tokens[i];
+            if (KEY_BASE..VAL_BASE).contains(&k) && ex.targets[i + 1] >= 0 {
+                assert_eq!(ex.targets[i + 1], m1[(k - KEY_BASE) as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn selective_copy_preserves_order() {
+        let mut g = gen(MadTask::SelectiveCopy);
+        let ex = g.example();
+        let copy_pos = ex.tokens.iter().position(|&t| t == COPY).unwrap();
+        let content: Vec<i32> = ex.tokens[1..copy_pos]
+            .iter()
+            .copied()
+            .filter(|&t| t >= VAL_BASE)
+            .collect();
+        let copied: Vec<i32> = ex.targets[copy_pos..].iter().copied().filter(|&t| t >= 0).collect();
+        assert!(!copied.is_empty());
+        assert_eq!(&content[..copied.len()], &copied[..]);
+    }
+
+    #[test]
+    fn batches_flatten() {
+        let mut g = gen(MadTask::Compress);
+        let (t, y) = g.batch(4);
+        assert_eq!(t.len(), 4 * 128);
+        assert_eq!(y.len(), 4 * 128);
+    }
+}

@@ -1,0 +1,18 @@
+//! Data pipeline substrates (all synthetic, all seeded — DESIGN.md §5).
+//!
+//! * [`corpus`]    — SlimPajama stand-in: Zipf/Markov template text with
+//!   embedded long-range key-value facts (what the LM experiments measure).
+//! * [`tokenizer`] — byte-level BPE (Mistral-tokenizer stand-in).
+//! * [`mnist`]     — procedural stroke-rendered sMNIST + the Fig-1/Fig-2
+//!   corruption operators (dropout / intensity scaling / additive noise).
+//! * [`mad`]       — the six MAD benchmark tasks (Table 2).
+//! * [`probes`]    — synthetic downstream suites standing in for
+//!   LAMBADA/BoolQ/... (Table 1 accuracy columns).
+//! * [`loader`]    — background-threaded batch prefetcher.
+
+pub mod corpus;
+pub mod loader;
+pub mod mad;
+pub mod mnist;
+pub mod probes;
+pub mod tokenizer;

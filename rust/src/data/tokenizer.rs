@@ -1,0 +1,301 @@
+//! Byte-level BPE tokenizer — the Mistral-tokenizer stand-in (DESIGN.md §5).
+//!
+//! Base vocabulary is the 256 byte values; [`Bpe::train`] greedily merges
+//! the most frequent adjacent pair until the requested vocab size. Encoding
+//! applies merges in rank order (lowest-rank first), exactly like GPT-2/
+//! SentencePiece-BPE. Vocab size must match the artifact's embedding table;
+//! the trained table round-trips through JSON so a tokenizer trained once
+//! is reusable across runs.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// A trained byte-level BPE tokenizer.
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// merge rank: (left, right) -> (rank, new_id); new_id = 256 + rank.
+    merges: HashMap<(u32, u32), (u32, u32)>,
+    /// id -> byte sequence (for decoding).
+    vocab: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    /// Byte-level identity tokenizer (vocab 256, no merges).
+    pub fn bytes_only() -> Self {
+        Bpe { merges: HashMap::new(), vocab: (0..256u32).map(|b| vec![b as u8]).collect() }
+    }
+
+    /// Train on `text` until `vocab_size` tokens exist (>= 256).
+    ///
+    /// Classic word-histogram BPE: the text is pre-tokenized into
+    /// whitespace-inclusive chunks, distinct chunks are counted once, and
+    /// merges operate on the (small) set of distinct chunks weighted by
+    /// count — O(merges * distinct_words), independent of corpus length.
+    pub fn train(text: &str, vocab_size: usize) -> Self {
+        assert!(vocab_size >= 256, "vocab must include all bytes");
+        let mut vocab: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+        let mut merges: HashMap<(u32, u32), (u32, u32)> = HashMap::new();
+
+        // Distinct chunk histogram.
+        let mut hist: HashMap<&str, u64> = HashMap::new();
+        for chunk in split_inclusive_ws(text) {
+            *hist.entry(chunk).or_insert(0) += 1;
+        }
+        let mut words: Vec<(Vec<u32>, u64)> = hist
+            .into_iter()
+            .map(|(w, c)| (w.bytes().map(|b| b as u32).collect(), c))
+            .collect();
+        // Deterministic order regardless of hash iteration.
+        words.sort_unstable();
+
+        while vocab.len() < vocab_size {
+            let mut counts: HashMap<(u32, u32), u64> = HashMap::new();
+            for (ids, c) in &words {
+                for w in ids.windows(2) {
+                    *counts.entry((w[0], w[1])).or_insert(0) += c;
+                }
+            }
+            let best = counts
+                .iter()
+                .max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)))
+                .map(|(&p, &c)| (p, c));
+            let Some((pair, count)) = best else { break };
+            if count < 2 {
+                break; // nothing worth merging
+            }
+            let rank = merges.len() as u32;
+            let new_id = vocab.len() as u32;
+            let mut bytes = vocab[pair.0 as usize].clone();
+            bytes.extend_from_slice(&vocab[pair.1 as usize]);
+            vocab.push(bytes);
+            merges.insert(pair, (rank, new_id));
+
+            for (ids, _) in &mut words {
+                if ids.len() < 2 {
+                    continue;
+                }
+                let mut out = Vec::with_capacity(ids.len());
+                let mut i = 0;
+                while i < ids.len() {
+                    if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                        out.push(new_id);
+                        i += 2;
+                    } else {
+                        out.push(ids[i]);
+                        i += 1;
+                    }
+                }
+                *ids = out;
+            }
+        }
+        Bpe { merges, vocab }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Encode text to token ids.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        if self.merges.is_empty() || ids.len() < 2 {
+            return ids;
+        }
+        // Repeatedly apply the lowest-rank applicable merge (standard BPE).
+        loop {
+            let mut best: Option<(u32, usize)> = None; // (rank, position)
+            for i in 0..ids.len().saturating_sub(1) {
+                if let Some(&(rank, _)) = self.merges.get(&(ids[i], ids[i + 1])) {
+                    if best.map_or(true, |(r, _)| rank < r) {
+                        best = Some((rank, i));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            // Merge ALL occurrences of this pair in one sweep.
+            let pair = self
+                .merges
+                .iter()
+                .find(|(_, &(r, _))| r == rank)
+                .map(|(&p, &(_, id))| (p, id))
+                .expect("rank exists");
+            let ((a, b), new_id) = pair;
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && ids[i] == a && ids[i + 1] == b {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        ids
+    }
+
+    /// Encode long text via a word cache: the text is split into
+    /// whitespace-inclusive chunks (GPT-2-style pre-tokenization) and each
+    /// distinct chunk is BPE-encoded once. Orders of magnitude faster than
+    /// [`encode`] on natural text; merges never cross chunk boundaries,
+    /// which is the standard BPE pre-tokenization contract.
+    pub fn encode_cached(&self, text: &str) -> Vec<u32> {
+        let mut cache: HashMap<&str, Vec<u32>> = HashMap::new();
+        let mut out = Vec::with_capacity(text.len() / 2);
+        for chunk in split_inclusive_ws(text) {
+            let ids = cache.entry(chunk).or_insert_with(|| self.encode(chunk));
+            out.extend_from_slice(ids);
+        }
+        out
+    }
+
+    /// Decode token ids back to text (lossy on invalid UTF-8).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(b) = self.vocab.get(id as usize) {
+                bytes.extend_from_slice(b);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Serialize to JSON (merge list in rank order).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(u32, (u32, u32))> = self
+            .merges
+            .iter()
+            .map(|(&(a, b), &(rank, _))| (rank, (a, b)))
+            .collect();
+        pairs.sort_unstable();
+        Json::obj(vec![
+            (
+                "merges",
+                Json::Arr(
+                    pairs
+                        .into_iter()
+                        .map(|(_, (a, b))| Json::arr_usize(&[a as usize, b as usize]))
+                        .collect(),
+                ),
+            ),
+            ("vocab_size", Json::Num(self.vocab.len() as f64)),
+        ])
+    }
+
+    /// Deserialize from JSON.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let merge_list = j.get("merges").as_arr().ok_or_else(|| anyhow!("missing merges"))?;
+        let mut bpe = Bpe::bytes_only();
+        for (rank, m) in merge_list.iter().enumerate() {
+            let pair = m.usize_array()?;
+            if pair.len() != 2 {
+                return Err(anyhow!("bad merge entry"));
+            }
+            let (a, b) = (pair[0] as u32, pair[1] as u32);
+            let new_id = bpe.vocab.len() as u32;
+            let mut bytes = bpe
+                .vocab
+                .get(a as usize)
+                .ok_or_else(|| anyhow!("merge refers to unknown id {a}"))?
+                .clone();
+            bytes.extend_from_slice(
+                bpe.vocab.get(b as usize).ok_or_else(|| anyhow!("unknown id {b}"))?,
+            );
+            bpe.vocab.push(bytes);
+            bpe.merges.insert((a, b), (rank as u32, new_id));
+        }
+        Ok(bpe)
+    }
+}
+
+/// Split text into chunks, each a word plus its trailing whitespace.
+fn split_inclusive_ws(text: &str) -> Vec<&str> {
+    let bytes = text.as_bytes();
+    let mut chunks = Vec::new();
+    let mut start = 0;
+    let mut i = 0;
+    while i < bytes.len() {
+        // advance through non-ws, then through ws; that's one chunk
+        while i < bytes.len() && !bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        chunks.push(&text[start..i]);
+        start = i;
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ws_partitions() {
+        let t = "ab  cd\ne";
+        let chunks = split_inclusive_ws(t);
+        assert_eq!(chunks.concat(), t);
+        assert_eq!(chunks, vec!["ab  ", "cd\n", "e"]);
+    }
+
+    #[test]
+    fn encode_cached_roundtrips_and_compresses() {
+        let text = "the cat sat. the cat sat. the cat sat on the mat.";
+        let t = Bpe::train(text, 300);
+        let ids = t.encode_cached(text);
+        assert_eq!(t.decode(&ids), text);
+        assert!(ids.len() < text.len());
+    }
+
+    #[test]
+    fn bytes_only_roundtrip() {
+        let t = Bpe::bytes_only();
+        let ids = t.encode("hello é world");
+        assert_eq!(t.decode(&ids), "hello é world");
+        assert_eq!(t.vocab_size(), 256);
+    }
+
+    #[test]
+    fn train_grows_vocab_and_roundtrips() {
+        let text = "the cat sat on the mat. the cat sat on the mat. banana banana banana.";
+        let t = Bpe::train(text, 280);
+        assert!(t.vocab_size() > 256);
+        assert!(t.vocab_size() <= 280);
+        let ids = t.encode(text);
+        assert_eq!(t.decode(&ids), text);
+        // Compression: merged tokens shorten the sequence.
+        assert!(ids.len() < text.len());
+    }
+
+    #[test]
+    fn roundtrips_unseen_text() {
+        let t = Bpe::train("aaa bbb aaa bbb aaa", 262);
+        let unseen = "xyzzy aaa qqq";
+        assert_eq!(t.decode(&t.encode(unseen)), unseen);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_encoding() {
+        let text = "abc abc abc abd abd xyz";
+        let t = Bpe::train(text, 270);
+        let j = t.to_json();
+        let t2 = Bpe::from_json(&j).unwrap();
+        assert_eq!(t.encode(text), t2.encode(text));
+        assert_eq!(t.vocab_size(), t2.vocab_size());
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let text = "deterministic deterministic text text text";
+        let a = Bpe::train(text, 265);
+        let b = Bpe::train(text, 265);
+        assert_eq!(a.encode(text), b.encode(text));
+    }
+}

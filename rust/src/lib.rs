@@ -1,0 +1,24 @@
+//! # EFLA — Error-Free Linear Attention
+//!
+//! Rust coordinator (Layer 3) of the three-layer reproduction of
+//! *"Error-Free Linear Attention is a Free Lunch: Exact Solution from
+//! Continuous-Time Dynamics"* (Lei, Zhang, Poria, 2025).
+//!
+//! Layers:
+//! * **L1** `python/compile/kernels/` — chunkwise generalized delta-rule
+//!   Pallas kernel; the integrator family (DeltaNet/RK-N/EFLA) differs only
+//!   in a scalar gate.
+//! * **L2** `python/compile/` — JAX transformer LM + sMNIST classifier with
+//!   fused AdamW train steps, AOT-lowered to HLO text once.
+//! * **L3** this crate — PJRT runtime, data pipeline, training/eval/serving
+//!   coordinators, experiment harness. Python never runs at runtime.
+//!
+//! Entry points: the `efla` launcher binary (`rust/src/main.rs`), the
+//! examples in `examples/`, and the per-table/figure benches in `benches/`.
+
+pub mod attention;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

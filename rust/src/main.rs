@@ -1,0 +1,179 @@
+//! `efla` — the launcher binary.
+//!
+//! Subcommands:
+//!   train   — train a model per a RunConfig (JSON file + flag overrides)
+//!   eval    — evaluate a checkpoint (ppl + probes)
+//!   serve   — run the batched decode demo on a (briefly trained) model
+//!   info    — list artifacts in the manifest
+//!
+//! Examples:
+//!   efla train --task lm --preset tiny --mixer efla --steps 100
+//!   efla train --config runs/table1_small_efla.json
+//!   efla info
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use efla::coordinator::config::{RunConfig, Task};
+use efla::coordinator::server::{GenRequest, Server};
+use efla::coordinator::session::Session;
+use efla::coordinator::trainer;
+use efla::runtime::Runtime;
+use efla::util::cli::Args;
+use efla::util::logging;
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
+    let result = match cmd {
+        "train" => cmd_train(&rest),
+        "serve" => cmd_serve(&rest),
+        "info" => cmd_info(&rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = result {
+        log::error!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    eprintln!(
+        "efla — Error-Free Linear Attention launcher\n\n\
+         Commands:\n  \
+         train   train a model (see `efla train --help`)\n  \
+         serve   batched decode demo (see `efla serve --help`)\n  \
+         info    list available artifacts\n"
+    );
+}
+
+fn common_args(program: &str, about: &str) -> Args {
+    Args::new(program, about)
+        .opt("config", "", "JSON RunConfig file (flags override)")
+        .opt("task", "lm", "task: lm | classifier | mad")
+        .opt("preset", "tiny", "model preset: tiny | small | mad | 100m")
+        .opt("mixer", "efla", "efla | deltanet | efla_adaptive | efla_loose")
+        .opt("steps", "100", "training steps")
+        .opt("seed", "42", "RNG seed")
+        .opt("peak-lr", "0.0003", "peak learning rate")
+        .opt("eval-batches", "8", "eval batches at the end")
+        .opt("corpus-bytes", "2000000", "synthetic corpus size (LM)")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("out", "runs", "output directory")
+}
+
+fn build_config(p: &efla::util::cli::Parsed) -> Result<RunConfig> {
+    let mut cfg = if p.get("config").is_empty() {
+        RunConfig::default()
+    } else {
+        RunConfig::from_file(Path::new(p.get("config")))?
+    };
+    cfg.task = Task::parse(p.get("task"))?;
+    cfg.preset = p.get("preset").to_string();
+    cfg.mixer = p.get("mixer").to_string();
+    cfg.steps = p.u64("steps");
+    cfg.seed = p.u64("seed");
+    cfg.peak_lr = p.f64("peak-lr");
+    cfg.eval_batches = p.usize("eval-batches");
+    cfg.corpus_bytes = p.usize("corpus-bytes");
+    cfg.artifact_dir = PathBuf::from(p.get("artifacts"));
+    cfg.out_dir = PathBuf::from(p.get("out"));
+    Ok(cfg)
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let p = common_args("efla train", "train a model from AOT artifacts")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let cfg = build_config(&p)?;
+    let rt = Runtime::open(&cfg.artifact_dir)?;
+    let hist = trainer::run(&rt, &cfg)?;
+    log::info!(
+        "done: {} steps, final loss {:.4} ({:.1}s, {:.0} tok/s)",
+        cfg.steps,
+        hist.final_loss(),
+        hist.wall_secs,
+        cfg.steps as f64 * hist.tokens_per_step as f64 / hist.wall_secs.max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let p = common_args("efla serve", "batched decode demo (O(1)-state serving)")
+        .opt("requests", "16", "number of demo requests")
+        .opt("max-new", "32", "tokens to generate per request")
+        .opt("temperature", "0.8", "sampling temperature (0 = greedy)")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let cfg = build_config(&p)?;
+    if cfg.task != Task::Lm {
+        bail!("serve only supports --task lm");
+    }
+    let rt = Runtime::open(&cfg.artifact_dir)?;
+    let family = cfg.family();
+    let mut session = Session::init(&rt, &family, cfg.seed as u32)?;
+
+    // Briefly train so generations aren't pure noise.
+    if cfg.steps > 0 {
+        let (pf, _) = trainer::lm_data(&cfg, session.batch, session.seq)?;
+        let schedule =
+            efla::coordinator::schedule::Schedule::paper_default(cfg.peak_lr, cfg.steps);
+        trainer::train_lm(&mut session, schedule, cfg.steps, || pf.next(), |_| {})?;
+    }
+
+    let mut server = Server::new(&rt, &session, cfg.seed)?;
+    let n_req = p.usize("requests");
+    let max_new = p.usize("max-new");
+    let temp = p.f32("temperature");
+    let mut rng = efla::util::rng::Rng::new(cfg.seed);
+    for id in 0..n_req as u64 {
+        let plen = rng.range(4, 24);
+        let prompt: Vec<i32> = (0..plen)
+            .map(|_| rng.range(97, 123) as i32) // ascii letters for byte-level models
+            .collect();
+        server.submit(GenRequest { id, prompt, max_new, temperature: temp });
+    }
+    let results = server.run_to_completion()?;
+    log::info!(
+        "served {} requests | {} engine steps | {:.1} tok/s (batch {})",
+        results.len(),
+        server.stats.engine_steps,
+        server.stats.tokens_per_sec(),
+        server.batch_size()
+    );
+    for r in results.iter().take(4) {
+        log::info!("req {}: {} new tokens in {} slot-steps", r.id, r.tokens.len(), r.steps);
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let p = Args::new("efla info", "list artifacts")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rt = Runtime::open(Path::new(p.get("artifacts")))?;
+    println!("{:<34} {:>8} {:>6} {:>6}  graph", "artifact", "params", "batch", "seq");
+    for name in rt.manifest().names() {
+        let a = rt.manifest().get(name).unwrap();
+        println!(
+            "{:<34} {:>8} {:>6} {:>6}  {}",
+            name,
+            a.param_elems(),
+            a.batch,
+            a.seq,
+            a.graph
+        );
+    }
+    Ok(())
+}

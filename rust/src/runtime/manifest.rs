@@ -1,0 +1,219 @@
+//! AOT manifest: the contract `python/compile/aot.py` writes and the Rust
+//! runtime honors.  One [`ArtifactSpec`] per lowered graph.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{self, Json};
+
+use super::value::DType;
+
+/// One input or output of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(IoSpec {
+            name: j.str_field("name")?.to_string(),
+            shape: j.get("shape").usize_array()?,
+            dtype: DType::parse(j.str_field("dtype")?)?,
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Static model configuration recorded for LM/classifier artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub chunk: usize,
+}
+
+/// One lowered graph.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub task: String,   // "lm" | "classifier"
+    pub graph: String,  // "init" | "step" | "eval" | "logits_last" | "decode" | "prefill"
+    pub preset: String, // "tiny" | "small" | ...
+    pub mixer: String,  // "efla" | "deltanet" | ...
+    pub batch: usize,
+    pub seq: usize,
+    pub param_names: Vec<String>,
+    pub state_names: Vec<String>,
+    pub model: ModelMeta,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let io = |key: &str| -> Result<Vec<IoSpec>> {
+            j.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow!("artifact missing '{key}'"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect()
+        };
+        let names = |key: &str| -> Vec<String> {
+            j.get(key)
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                .unwrap_or_default()
+        };
+        let cfg = j.get("config");
+        let model = ModelMeta {
+            vocab: cfg.get("vocab").as_usize().unwrap_or(0),
+            d_model: cfg.get("d_model").as_usize().unwrap_or(0),
+            n_layers: cfg.get("n_layers").as_usize().unwrap_or(0),
+            n_heads: cfg.get("n_heads").as_usize().unwrap_or(0),
+            head_dim: cfg.get("head_dim").as_usize().unwrap_or(0),
+            chunk: cfg.get("chunk").as_usize().unwrap_or(0),
+        };
+        Ok(ArtifactSpec {
+            file: j.str_field("file")?.to_string(),
+            task: j.get("task").as_str().unwrap_or("").to_string(),
+            graph: j.get("graph").as_str().unwrap_or("").to_string(),
+            preset: j.get("preset").as_str().unwrap_or("").to_string(),
+            mixer: j.get("mixer").as_str().unwrap_or("").to_string(),
+            batch: j.get("batch").as_usize().unwrap_or(0),
+            seq: j.get("seq").as_usize().unwrap_or(0),
+            param_names: names("param_names"),
+            state_names: names("state_names"),
+            model,
+            inputs: io("inputs")?,
+            outputs: io("outputs")?,
+        })
+    }
+
+    /// Number of model parameters (f32 elements across param inputs).
+    pub fn param_elems(&self) -> usize {
+        let pset: std::collections::HashSet<String> =
+            self.param_names.iter().map(|n| format!("p.{n}")).collect();
+        self.inputs.iter().filter(|i| pset.contains(&i.name)).map(|i| i.elems()).sum()
+    }
+
+    /// Input index of a named input.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .ok_or_else(|| anyhow!("no input named '{name}'"))
+    }
+
+    /// Output index of a named output.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o.name == name)
+            .ok_or_else(|| anyhow!("no output named '{name}'"))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let j = json::read_file(path)?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let arts = j
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in arts {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec::from_json(spec)
+                    .map_err(|e| anyhow!("artifact '{name}': {e}"))?,
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// All artifacts for a (task, preset, mixer) triple.
+    pub fn family(&self, task: &str, preset: &str, mixer: &str) -> Vec<(&str, &ArtifactSpec)> {
+        self.artifacts
+            .iter()
+            .filter(|(_, a)| a.task == task && a.preset == preset && a.mixer == mixer)
+            .map(|(n, a)| (n.as_str(), a))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        json::parse(
+            r#"{
+              "version": 1,
+              "artifacts": {
+                "lm_tiny_efla_step": {
+                  "file": "lm_tiny_efla_step.hlo.txt",
+                  "task": "lm", "graph": "step", "preset": "tiny", "mixer": "efla",
+                  "batch": 4, "seq": 64,
+                  "param_names": ["embed", "norm_f"],
+                  "config": {"vocab": 256, "d_model": 64, "n_layers": 2,
+                             "n_heads": 2, "head_dim": 32, "chunk": 32},
+                  "inputs": [
+                    {"name": "p.embed", "shape": [256, 64], "dtype": "f32"},
+                    {"name": "p.norm_f", "shape": [64], "dtype": "f32"},
+                    {"name": "tokens", "shape": [4, 64], "dtype": "s32"}
+                  ],
+                  "outputs": [
+                    {"name": "loss", "shape": [], "dtype": "f32"}
+                  ]
+                }
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        let a = m.get("lm_tiny_efla_step").unwrap();
+        assert_eq!(a.batch, 4);
+        assert_eq!(a.model.vocab, 256);
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[2].dtype, DType::I32);
+        assert_eq!(a.param_elems(), 256 * 64 + 64);
+        assert_eq!(a.input_index("tokens").unwrap(), 2);
+        assert!(a.input_index("nope").is_err());
+        assert_eq!(m.family("lm", "tiny", "efla").len(), 1);
+        assert!(m.get("missing").is_none());
+    }
+}

@@ -1,0 +1,195 @@
+//! Typed host arrays + conversions to/from `xla::Literal`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::manifest::IoSpec;
+
+/// Element dtypes crossing the runtime boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "s32" | "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// A typed host array (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostValue {
+    F32(Tensor),
+    I32(Vec<usize>, Vec<i32>),
+    U32(Vec<usize>, Vec<u32>),
+}
+
+impl HostValue {
+    pub fn scalar_f32(x: f32) -> Self {
+        HostValue::F32(Tensor::scalar(x))
+    }
+
+    pub fn scalar_u32(x: u32) -> Self {
+        HostValue::U32(vec![], vec![x])
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostValue::I32(vec![], vec![x])
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::I32(shape.to_vec(), data)
+    }
+
+    pub fn zeros_like_spec(spec: &IoSpec) -> Self {
+        let n: usize = spec.shape.iter().product();
+        match spec.dtype {
+            DType::F32 => HostValue::F32(Tensor::zeros(&spec.shape)),
+            DType::I32 => HostValue::I32(spec.shape.clone(), vec![0; n]),
+            DType::U32 => HostValue::U32(spec.shape.clone(), vec![0; n]),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostValue::F32(_) => DType::F32,
+            HostValue::I32(..) => DType::I32,
+            HostValue::U32(..) => DType::U32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => t.shape(),
+            HostValue::I32(s, _) => s,
+            HostValue::U32(s, _) => s,
+        }
+    }
+
+    /// Borrow as f32 tensor (errors on dtype mismatch).
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            other => Err(anyhow!("expected f32 value, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            other => Err(anyhow!("expected f32 value, got {:?}", other.dtype())),
+        }
+    }
+
+    /// Scalar f32 view.
+    pub fn scalar(&self) -> Result<f32> {
+        Ok(self.as_f32()?.item())
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, shape, bytes): (xla::ElementType, &[usize], &[u8]) = match self {
+            HostValue::F32(t) => (xla::ElementType::F32, t.shape(), bytemuck_f32(t.data())),
+            HostValue::I32(s, d) => (xla::ElementType::S32, s, bytemuck_i32(d)),
+            HostValue::U32(s, d) => (xla::ElementType::U32, s, bytemuck_u32(d)),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
+            .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+    }
+
+    /// Read a literal back according to the manifest spec (shape is taken
+    /// from the spec; dtype is checked against the literal's).
+    pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Self> {
+        let n: usize = spec.shape.iter().product();
+        match spec.dtype {
+            DType::F32 => {
+                let v = lit.to_vec::<f32>().map_err(|e| anyhow!("literal->f32: {e:?}"))?;
+                if v.len() != n {
+                    bail!("output '{}': expected {} elems, got {}", spec.name, n, v.len());
+                }
+                Ok(HostValue::F32(Tensor::from_vec(&spec.shape, v)))
+            }
+            DType::I32 => {
+                let v = lit.to_vec::<i32>().map_err(|e| anyhow!("literal->i32: {e:?}"))?;
+                if v.len() != n {
+                    bail!("output '{}': expected {} elems, got {}", spec.name, n, v.len());
+                }
+                Ok(HostValue::I32(spec.shape.clone(), v))
+            }
+            DType::U32 => {
+                let v = lit.to_vec::<u32>().map_err(|e| anyhow!("literal->u32: {e:?}"))?;
+                if v.len() != n {
+                    bail!("output '{}': expected {} elems, got {}", spec.name, n, v.len());
+                }
+                Ok(HostValue::U32(spec.shape.clone(), v))
+            }
+        }
+    }
+}
+
+fn bytemuck_f32(x: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+fn bytemuck_i32(x: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+fn bytemuck_u32(x: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("s32").unwrap(), DType::I32);
+        assert_eq!(DType::parse("u32").unwrap(), DType::U32);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn shapes_and_scalars() {
+        let v = HostValue::scalar_f32(2.5);
+        assert_eq!(v.shape(), &[] as &[usize]);
+        assert!((v.scalar().unwrap() - 2.5).abs() < 1e-6);
+        let t = HostValue::i32(&[2, 2], vec![1, 2, 3, 4]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let v = HostValue::F32(t.clone());
+        let lit = v.to_literal().unwrap();
+        let spec = IoSpec { name: "x".into(), shape: vec![2, 3], dtype: DType::F32 };
+        let back = HostValue::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let v = HostValue::i32(&[4], vec![-1, 0, 7, 42]);
+        let lit = v.to_literal().unwrap();
+        let spec = IoSpec { name: "t".into(), shape: vec![4], dtype: DType::I32 };
+        let back = HostValue::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back, v);
+    }
+}

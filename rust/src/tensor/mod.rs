@@ -1,0 +1,169 @@
+//! Host-side tensor substrate.
+//!
+//! A small dense f32 tensor (row-major, owned storage) used by the data
+//! pipeline, the pure-Rust attention reference, metrics, and the
+//! literal<->host bridge. Not a BLAS replacement — just the operations this
+//! system needs, implemented carefully enough to be property-tested and
+//! fast enough for the reference benches.
+
+mod ops;
+
+pub use ops::*;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Build from data; length must match the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(x: f32) -> Self {
+        Tensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// First element (for scalar outputs).
+    pub fn item(&self) -> f32 {
+        assert!(!self.data.is_empty(), "item() on empty tensor");
+        self.data[0]
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row-major linear index for a multi-index.
+    pub fn index(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut lin = 0;
+        for (i, (&x, &s)) in idx.iter().zip(self.shape.iter()).enumerate() {
+            debug_assert!(x < s, "index {idx:?} out of bounds {:?} at dim {i}", self.shape);
+            lin = lin * s + x;
+        }
+        lin
+    }
+
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.index(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], val: f32) {
+        let i = self.index(idx);
+        self.data[i] = val;
+    }
+
+    /// Immutable view of row `r` of a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        &self.data[r * cols..(r + 1) * cols]
+    }
+
+    /// L2 norm of all elements.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_vec(&[2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.get(&[0, 0]), 0.0);
+        assert_eq!(t.get(&[0, 2]), 2.0);
+        assert_eq!(t.get(&[1, 0]), 3.0);
+        assert_eq!(t.get(&[1, 2]), 5.0);
+        assert_eq!(t.row(1), &[3., 4., 5.]);
+    }
+
+    #[test]
+    fn set_and_reshape() {
+        let mut t = Tensor::zeros(&[2, 2]);
+        t.set(&[1, 1], 7.0);
+        let t = t.reshape(&[4]);
+        assert_eq!(t.get(&[3]), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn norm_and_diff() {
+        let a = Tensor::from_vec(&[2], vec![3.0, 4.0]);
+        let b = Tensor::from_vec(&[2], vec![3.0, 2.0]);
+        assert!((a.norm() - 5.0).abs() < 1e-6);
+        assert!((a.max_abs_diff(&b) - 2.0).abs() < 1e-6);
+    }
+}

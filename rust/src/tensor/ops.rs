@@ -1,0 +1,258 @@
+//! Tensor operations: matmul, transposes, elementwise, reductions, softmax.
+//!
+//! The matmul is a cache-blocked ikj kernel — good enough that the pure-Rust
+//! attention reference (used for property tests, the error-analysis bench
+//! and the CPU serving fallback) is not embarrassingly slow. See
+//! `benches/kernel_throughput.rs` for measured numbers.
+
+use super::Tensor;
+
+/// C = A @ B for 2-D tensors (M,K) x (K,N) -> (M,N).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2, "matmul lhs must be 2-D");
+    assert_eq!(b.ndim(), 2, "matmul rhs must be 2-D");
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    matmul_into(a.data(), b.data(), &mut out, m, k, n);
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// Raw blocked matmul: out[m,n] += a[m,k] * b[k,n] (out must be zeroed).
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let kend = (k0 + BK).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in k0..kend {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// A^T for 2-D tensors.
+pub fn transpose(a: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = a.data()[i * n + j];
+        }
+    }
+    Tensor::from_vec(&[n, m], out)
+}
+
+/// C = A @ B^T : (M,K) x (N,K) -> (M,N). Fast path for row-major operands.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data()[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b.data()[j * k..(j + 1) * k];
+            out[i * n + j] = dot(arow, brow);
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// Dot product with 4-way unrolling.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Elementwise map.
+pub fn map(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::from_vec(a.shape(), a.data().iter().map(|&x| f(x)).collect())
+}
+
+/// Elementwise binary op.
+pub fn zip(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    Tensor::from_vec(
+        a.shape(),
+        a.data().iter().zip(b.data().iter()).map(|(&x, &y)| f(x, y)).collect(),
+    )
+}
+
+/// In-place scale.
+pub fn scale(a: &mut Tensor, s: f32) {
+    for x in a.data_mut() {
+        *x *= s;
+    }
+}
+
+/// Sum of all elements.
+pub fn sum(a: &Tensor) -> f32 {
+    a.data().iter().sum()
+}
+
+/// Mean of all elements.
+pub fn mean(a: &Tensor) -> f32 {
+    if a.is_empty() {
+        0.0
+    } else {
+        sum(a) / a.len() as f32
+    }
+}
+
+/// Row-wise softmax of a 2-D tensor (numerically stable).
+pub fn softmax_rows(a: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = &a.data()[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0;
+        for j in 0..n {
+            let e = (row[j] - mx).exp();
+            out[i * n + j] = e;
+            z += e;
+        }
+        for j in 0..n {
+            out[i * n + j] /= z;
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// argmax over the last axis of a 2-D tensor.
+pub fn argmax_rows(a: &Tensor) -> Vec<usize> {
+    assert_eq!(a.ndim(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    (0..m)
+        .map(|i| {
+            let row = &a.data()[i * n..(i + 1) * n];
+            row.iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// Outer product u v^T -> (len(u), len(v)).
+pub fn outer(u: &[f32], v: &[f32]) -> Tensor {
+    let mut out = Vec::with_capacity(u.len() * v.len());
+    for &ui in u {
+        for &vj in v {
+            out.push(ui * vj);
+        }
+    }
+    Tensor::from_vec(&[u.len(), v.len()], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_rect_matches_naive() {
+        let (m, k, n) = (7, 13, 5);
+        let a = Tensor::from_vec(&[m, k], (0..m * k).map(|i| (i % 11) as f32 - 5.0).collect());
+        let b = Tensor::from_vec(&[k, n], (0..k * n).map(|i| (i % 7) as f32 * 0.5).collect());
+        let c = matmul(&a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.get(&[i, kk]) * b.get(&[kk, j]);
+                }
+                assert!((c.get(&[i, j]) - s).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul_transpose() {
+        let a = Tensor::from_vec(&[3, 4], (0..12).map(|i| i as f32 * 0.1).collect());
+        let b = Tensor::from_vec(&[5, 4], (0..20).map(|i| (i as f32).sin()).collect());
+        let c1 = matmul_nt(&a, &b);
+        let c2 = matmul(&a, &transpose(&b));
+        assert!(c1.max_abs_diff(&c2) < 1e-5);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., -1000., 0., 1000.]);
+        let s = softmax_rows(&a);
+        for i in 0..2 {
+            let rs: f32 = s.row(i).iter().sum();
+            assert!((rs - 1.0).abs() < 1e-5);
+        }
+        assert!(s.get(&[1, 2]) > 0.999); // stable under extreme logits
+    }
+
+    #[test]
+    fn argmax_and_outer() {
+        let a = Tensor::from_vec(&[2, 3], vec![0., 5., 1., 9., 0., 0.]);
+        assert_eq!(argmax_rows(&a), vec![1, 0]);
+        let o = outer(&[1., 2.], &[3., 4.]);
+        assert_eq!(o.data(), &[3., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn dot_unroll_tail() {
+        let a: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..7).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = (0..7).map(|i| (i * i * 2) as f32).sum();
+        assert!((dot(&a, &b) - expect).abs() < 1e-5);
+    }
+}

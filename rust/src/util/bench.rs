@@ -1,0 +1,195 @@
+//! Micro/bench harness (criterion is not in the vendor set).
+//!
+//! [`bench`] runs a closure with warmup + timed iterations and returns
+//! [`Stats`] (mean/p50/p95/min/max). [`Table`] renders aligned text tables —
+//! every `benches/*.rs` target prints the paper's table/figure rows through
+//! it, and writes a machine-readable JSON next to it for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Summary statistics over per-iteration wall times (seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let pct = |p: f64| xs[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            iters: n,
+            mean: xs.iter().sum::<f64>() / n as f64,
+            p50: pct(0.5),
+            p95: pct(0.95),
+            min: xs[0],
+            max: xs[n - 1],
+        }
+    }
+
+    /// Throughput given work-per-iteration.
+    pub fn per_sec(&self, items_per_iter: f64) -> f64 {
+        if self.mean > 0.0 {
+            items_per_iter / self.mean
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.mean)),
+            ("p50_s", Json::Num(self.p50)),
+            ("p95_s", Json::Num(self.p95)),
+            ("min_s", Json::Num(self.min)),
+            ("max_s", Json::Num(self.max)),
+        ])
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Run `f` until `budget_secs` elapses (at least `min_iters`).
+pub fn bench_for<F: FnMut()>(budget_secs: f64, min_iters: usize, mut f: F) -> Stats {
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < budget_secs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// Plain-text aligned table writer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push_str(&format!("{}\n", "-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1))));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Also expose rows as JSON (for bench_output artifacts).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("headers", Json::arr_str(&self.headers)),
+            (
+                "rows",
+                Json::Arr(self.rows.iter().map(|r| Json::arr_str(r)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.iters, 100);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p95 - 95.0).abs() <= 1.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_requested_iters() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "ppl"]);
+        t.row(&["efla".into(), "37.01".into()]);
+        t.row(&["deltanet".into(), "38.09".into()]);
+        let r = t.render();
+        assert!(r.contains("model"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

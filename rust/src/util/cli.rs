@@ -1,0 +1,239 @@
+//! Declarative CLI flag parser (no `clap` in the vendor set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, defaults, and auto-generated `--help`. Used by the `efla`
+//! launcher binary and every example/bench driver.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare an option with a default value.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a required option (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]). Exits on `--help` / error.
+    pub fn parse(self) -> Parsed {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse an explicit argv (testable).
+    pub fn parse_from(mut self, argv: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?
+                    .clone();
+                let val = if opt.is_bool {
+                    match inline_val {
+                        Some(v) => v,
+                        None => "true".to_string(),
+                    }
+                } else {
+                    match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    }
+                };
+                self.values.insert(name, val);
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // defaults + required check
+        for o in &self.opts {
+            if !self.values.contains_key(&o.name) {
+                match &o.default {
+                    Some(d) => {
+                        self.values.insert(o.name.clone(), d.clone());
+                    }
+                    None => return Err(format!("missing required flag --{}\n\n{}", o.name, self.usage())),
+                }
+            }
+        }
+        Ok(Parsed {
+            values: self.values,
+            positionals: self.positionals,
+        })
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let def = match (&o.default, o.is_bool) {
+                (_, true) => " [flag]".to_string(),
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, _) => " [required]".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, def));
+        }
+        s
+    }
+}
+
+/// Parsed argument values with typed getters.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{name}: invalid integer ({e})"))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{name}: invalid integer ({e})"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{name}: invalid number ({e})"))
+    }
+
+    pub fn f32(&self, name: &str) -> f32 {
+        self.f64(name) as f32
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), "true" | "1" | "yes")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = Args::new("t", "test")
+            .opt("steps", "100", "steps")
+            .opt("lr", "0.001", "lr")
+            .flag("verbose", "verbose")
+            .parse_from(&argv(&["--steps", "5", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.usize("steps"), 5);
+        assert!((p.f64("lr") - 0.001).abs() < 1e-12);
+        assert!(p.bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positional() {
+        let p = Args::new("t", "test")
+            .opt("mode", "a", "mode")
+            .parse_from(&argv(&["--mode=b", "input.txt"]))
+            .unwrap();
+        assert_eq!(p.get("mode"), "b");
+        assert_eq!(p.positionals, vec!["input.txt"]);
+    }
+
+    #[test]
+    fn required_missing_errors() {
+        let r = Args::new("t", "test")
+            .req("model", "model name")
+            .parse_from(&argv(&[]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let r = Args::new("t", "test").parse_from(&argv(&["--nope"]));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Leveled logging + training progress meters (no external logger backend).
+//!
+//! A tiny `log`-crate backend writing to stderr with wall-clock timestamps,
+//! plus [`Meter`] — a windowed throughput/ETA tracker the trainer and server
+//! use for progress lines.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+static INIT: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        eprintln!("[{t:9.3}s {:5}] {}", record.level(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the stderr logger. Level from `EFLA_LOG` (error..trace), default info.
+pub fn init() {
+    if INIT.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("EFLA_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = Box::leak(Box::new(StderrLogger { start: Instant::now() }));
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+/// Windowed progress meter: tracks items/sec over a sliding window and ETA.
+pub struct Meter {
+    start: Instant,
+    window: Vec<(f64, u64)>, // (t, cumulative_items)
+    total: Option<u64>,
+    done: u64,
+    window_secs: f64,
+}
+
+impl Meter {
+    pub fn new(total: Option<u64>) -> Self {
+        Meter {
+            start: Instant::now(),
+            window: Vec::new(),
+            total,
+            done: 0,
+            window_secs: 30.0,
+        }
+    }
+
+    /// Record `n` more completed items.
+    pub fn add(&mut self, n: u64) {
+        self.done += n;
+        let t = self.start.elapsed().as_secs_f64();
+        self.window.push((t, self.done));
+        let cutoff = t - self.window_secs;
+        self.window.retain(|&(tt, _)| tt >= cutoff);
+    }
+
+    pub fn done(&self) -> u64 {
+        self.done
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Items/sec over the sliding window (falls back to lifetime rate).
+    pub fn rate(&self) -> f64 {
+        if self.window.len() >= 2 {
+            let (t0, c0) = self.window[0];
+            let (t1, c1) = self.window[self.window.len() - 1];
+            if t1 > t0 {
+                return (c1 - c0) as f64 / (t1 - t0);
+            }
+        }
+        let e = self.elapsed_secs();
+        if e > 0.0 {
+            self.done as f64 / e
+        } else {
+            0.0
+        }
+    }
+
+    /// Seconds remaining, if a total was given.
+    pub fn eta_secs(&self) -> Option<f64> {
+        let total = self.total?;
+        let r = self.rate();
+        if r <= 0.0 || self.done >= total {
+            return None;
+        }
+        Some((total - self.done) as f64 / r)
+    }
+
+    /// One-line status, e.g. `step 120/500 | 3.2/s | eta 118s`.
+    pub fn line(&self, unit: &str) -> String {
+        let mut s = match self.total {
+            Some(t) => format!("{} {}/{}", unit, self.done, t),
+            None => format!("{} {}", unit, self.done),
+        };
+        s.push_str(&format!(" | {:.2}/s", self.rate()));
+        if let Some(eta) = self.eta_secs() {
+            s.push_str(&format!(" | eta {eta:.0}s"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_counts_and_rate() {
+        let mut m = Meter::new(Some(10));
+        m.add(3);
+        m.add(2);
+        assert_eq!(m.done(), 5);
+        assert!(m.rate() >= 0.0);
+        let line = m.line("step");
+        assert!(line.contains("step 5/10"), "{line}");
+    }
+
+    #[test]
+    fn eta_none_when_complete() {
+        let mut m = Meter::new(Some(2));
+        m.add(2);
+        assert!(m.eta_secs().is_none());
+    }
+
+    #[test]
+    fn init_idempotent() {
+        init();
+        init();
+        log::info!("logging smoke");
+    }
+}

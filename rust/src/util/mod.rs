@@ -1,0 +1,7 @@
+//! Shared substrates: RNG, JSON, CLI parsing, logging, bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;

@@ -1,0 +1,110 @@
+//! Perf probes (run manually: `cargo test --release --test perf_probe -- --ignored --nocapture`).
+//!
+//! Produces the §Perf before/after numbers in EXPERIMENTS.md:
+//!   * tokenizer: naive stream encode vs word-cached encode;
+//!   * BPE training throughput (word-histogram algorithm);
+//!   * data pipeline: inline batch generation vs prefetched;
+//!   * PJRT step breakdown: literal build vs execute+decompose.
+
+use std::time::Instant;
+
+use efla::coordinator::config::RunConfig;
+use efla::coordinator::session::Session;
+use efla::data::corpus::{Corpus, CorpusConfig};
+use efla::data::loader::{Prefetcher, TokenStream};
+use efla::data::tokenizer::Bpe;
+use efla::runtime::{HostValue, Runtime};
+
+fn secs<F: FnMut()>(mut f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+#[test]
+#[ignore]
+fn perf_tokenizer_encode_paths() {
+    let mut corpus = Corpus::new(1, CorpusConfig::default());
+    let text = corpus.text(1_000_000);
+    let t_train = secs(|| {
+        std::hint::black_box(Bpe::train(&text[..300_000], 1024));
+    });
+    let bpe = Bpe::train(&text[..300_000], 1024);
+    let mut n1 = 0;
+    let t_naive = secs(|| {
+        n1 = bpe.encode(&text[..100_000]).len();
+    });
+    let mut n2 = 0;
+    let t_cached = secs(|| {
+        n2 = bpe.encode_cached(&text).len();
+    });
+    println!("BPE train(300KB -> 1024 vocab): {t_train:.2}s");
+    println!("encode naive     (100KB): {t_naive:.3}s  ({:.0} KB/s)", 100.0 / t_naive);
+    println!("encode cached    (1MB):   {t_cached:.3}s ({:.0} KB/s)", 1000.0 / t_cached);
+    println!("tokens: naive/100KB={n1} cached/1MB={n2}");
+}
+
+#[test]
+#[ignore]
+fn perf_prefetch_overlap() {
+    let mut corpus = Corpus::new(2, CorpusConfig::default());
+    let text = corpus.text(2_000_000);
+    let ids: Vec<i32> = text.bytes().map(|b| b as i32).collect();
+    let mut stream = TokenStream::new(ids.clone());
+    let t_inline = secs(|| {
+        for _ in 0..50 {
+            std::hint::black_box(stream.lm_batch(8, 256));
+        }
+    });
+    let mut stream2 = TokenStream::new(ids);
+    let pf = Prefetcher::spawn(4, move || stream2.lm_batch(8, 256));
+    let _ = pf.next(); // warm
+    let t_pf = secs(|| {
+        for _ in 0..50 {
+            std::hint::black_box(pf.next());
+        }
+    });
+    println!("batch gen inline: {:.3}ms/batch", t_inline * 20.0);
+    println!("batch via prefetcher (consumer view): {:.3}ms/batch", t_pf * 20.0);
+}
+
+#[test]
+#[ignore]
+fn perf_step_breakdown() {
+    let rt = Runtime::open(std::path::Path::new("artifacts")).unwrap();
+    let mut session = Session::init(&rt, "lm_tiny_efla", 42).unwrap();
+    let cfg = RunConfig { corpus_bytes: 200_000, ..Default::default() };
+    let (pf, _) = efla::coordinator::trainer::lm_data(&cfg, session.batch, session.seq).unwrap();
+
+    // warm the executable
+    let (t, y) = pf.next();
+    session.step([t.to_literal().unwrap(), y.to_literal().unwrap()], 1e-3).unwrap();
+
+    let iters = 20;
+    let mut t_data = 0.0;
+    let mut t_lit = 0.0;
+    let mut t_exec = 0.0;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let (t, y) = pf.next();
+        t_data += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let lits = [t.to_literal().unwrap(), y.to_literal().unwrap()];
+        t_lit += t1.elapsed().as_secs_f64();
+        let t2 = Instant::now();
+        session.step(lits, 1e-3).unwrap();
+        t_exec += t2.elapsed().as_secs_f64();
+    }
+    let n = iters as f64;
+    println!(
+        "tiny step breakdown: data {:.2}ms | literal build {:.3}ms | step(exec+state roundtrip) {:.2}ms",
+        t_data / n * 1e3,
+        t_lit / n * 1e3,
+        t_exec / n * 1e3
+    );
+    let p = session.param_elems();
+    println!(
+        "state traffic per step: 3 x {:.2}MB params x 2 directions inside step()",
+        p as f64 * 4.0 / 1e6
+    );
+}

@@ -1,0 +1,232 @@
+//! Property tests over the pure-Rust attention substrate.
+//!
+//! No proptest crate in the vendor set, so properties are swept over many
+//! seeded random cases (shapes, chunk sizes, gate kinds) with shrinking
+//! replaced by printing the failing case parameters.
+
+use efla::attention::{
+    alpha_efla, alpha_rk, chunkwise_delta, gates, sequential_delta, Gate,
+};
+use efla::tensor::Tensor;
+use efla::util::rng::Rng;
+
+fn rand_t(rng: &mut Rng, shape: &[usize], sigma: f32) -> Tensor {
+    Tensor::from_vec(shape, rng.normal_vec(shape.iter().product(), 0.0, sigma))
+}
+
+const SEED_BASE: u64 = 0x5EED_BA5E;
+
+#[test]
+fn prop_chunkwise_equals_sequential_any_shape() {
+    for case in 0..40u64 {
+        let mut rng = Rng::new(SEED_BASE + case);
+        let l = rng.range(1, 80);
+        let dk = [2, 3, 4, 8, 16][rng.range(0, 5)];
+        let dv = [2, 3, 4, 8, 16][rng.range(0, 5)];
+        let chunk = [1, 2, 3, 7, 16, 64][rng.range(0, 6)];
+        let q = rand_t(&mut rng, &[l, dk], 1.0);
+        let k = rand_t(&mut rng, &[l, dk], 0.6);
+        let v = rand_t(&mut rng, &[l, dv], 1.0);
+        let beta: Vec<f32> = (0..l).map(|_| rng.f32()).collect();
+        let (o1, s1) = sequential_delta(Gate::Efla, &q, &k, &v, &beta);
+        let (o2, s2) = chunkwise_delta(Gate::Efla, &q, &k, &v, &beta, chunk);
+        let (od, sd) = (o1.max_abs_diff(&o2), s1.max_abs_diff(&s2));
+        assert!(
+            od < 5e-4 && sd < 5e-4,
+            "case {case}: l={l} dk={dk} dv={dv} chunk={chunk} od={od} sd={sd}"
+        );
+    }
+}
+
+#[test]
+fn prop_efla_state_norm_bounded_by_value_energy() {
+    // EFLA's transition is a contraction along k: ||S|| stays O(sum ||v||).
+    for case in 0..25u64 {
+        let mut rng = Rng::new(SEED_BASE + 100 + case);
+        let l = rng.range(8, 96);
+        let d = [4, 8, 16][rng.range(0, 3)];
+        let scale = 0.2 + 6.0 * rng.f32(); // include very stiff regimes
+        let q = rand_t(&mut rng, &[l, d], 1.0);
+        let k = rand_t(&mut rng, &[l, d], scale);
+        let v = rand_t(&mut rng, &[l, d], 1.0);
+        let beta: Vec<f32> = (0..l).map(|_| rng.f32()).collect();
+        let (_, s) = sequential_delta(Gate::Efla, &q, &k, &v, &beta);
+        let v_energy: f32 = (0..l).map(|t| {
+            v.row(t).iter().map(|x| x * x).sum::<f32>().sqrt()
+        }).sum();
+        assert!(
+            s.norm().is_finite() && s.norm() <= v_energy + 1.0,
+            "case {case}: scale={scale} ||S||={} v_energy={v_energy}",
+            s.norm()
+        );
+    }
+}
+
+#[test]
+fn prop_transition_eigenvalue_contracts_for_efla_only() {
+    for case in 0..200u64 {
+        let mut rng = Rng::new(SEED_BASE + 200 + case);
+        let beta = 4.0 * rng.f32();
+        let lam = (10f32).powf(-4.0 + 8.0 * rng.f32());
+        let ev = gates::transition_eigenvalue(Gate::Efla, beta, lam);
+        assert!(
+            (0.0..=1.0 + 1e-5).contains(&ev),
+            "case {case}: beta={beta} lam={lam} ev={ev}"
+        );
+        // Euler escapes (-1,1) whenever beta*lambda > 2:
+        if beta * lam > 2.0 {
+            let ev_euler = gates::transition_eigenvalue(Gate::Euler, beta, lam);
+            assert!(ev_euler < -1.0, "case {case}: euler ev {ev_euler}");
+        }
+    }
+}
+
+#[test]
+fn prop_alpha_orders_sandwich_exact() {
+    // For 0 < x < 1 the truncations alternate around the exact gate:
+    // alpha_1 >= alpha_3 >= ... >= alpha_inf >= ... >= alpha_4 >= alpha_2.
+    for case in 0..200u64 {
+        let mut rng = Rng::new(SEED_BASE + 300 + case);
+        let beta = 0.05 + 0.9 * rng.f32();
+        let lam = 0.05 + 0.9 * rng.f32() / beta; // keep x = beta*lam in (0,1)
+        let exact = alpha_efla(beta, lam);
+        let a1 = alpha_rk(beta, lam, 1);
+        let a2 = alpha_rk(beta, lam, 2);
+        let a3 = alpha_rk(beta, lam, 3);
+        let a4 = alpha_rk(beta, lam, 4);
+        let eps = 1e-5;
+        assert!(a1 >= exact - eps, "case {case}");
+        assert!(a3 >= exact - eps, "case {case}");
+        assert!(a2 <= exact + eps, "case {case}");
+        assert!(a4 <= exact + eps, "case {case}");
+        assert!(a1 >= a3 - eps && a2 <= a4 + eps, "case {case}");
+    }
+}
+
+#[test]
+fn prop_permuting_heads_is_permuting_outputs() {
+    // Heads are independent: running two heads separately == concatenated.
+    for case in 0..10u64 {
+        let mut rng = Rng::new(SEED_BASE + 400 + case);
+        let (l, d) = (rng.range(4, 40), 8);
+        let mk = |rng: &mut Rng| rand_t(rng, &[l, d], 0.8);
+        let (qa, ka, va) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let (qb, kb, vb) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let beta: Vec<f32> = (0..l).map(|_| rng.f32()).collect();
+        let (oa, _) = chunkwise_delta(Gate::Efla, &qa, &ka, &va, &beta, 16);
+        let (ob, _) = chunkwise_delta(Gate::Efla, &qb, &kb, &vb, &beta, 16);
+        // re-run in the other order; results must be identical (no hidden state)
+        let (ob2, _) = chunkwise_delta(Gate::Efla, &qb, &kb, &vb, &beta, 16);
+        let (oa2, _) = chunkwise_delta(Gate::Efla, &qa, &ka, &va, &beta, 16);
+        assert_eq!(oa, oa2, "case {case}: not deterministic");
+        assert_eq!(ob, ob2, "case {case}");
+    }
+}
+
+#[test]
+fn prop_masked_no_op_tokens() {
+    // beta = 0 tokens must not change the state or contribute output.
+    for case in 0..20u64 {
+        let mut rng = Rng::new(SEED_BASE + 500 + case);
+        let (l, d) = (rng.range(6, 50), 8);
+        let q = rand_t(&mut rng, &[l, d], 1.0);
+        let k = rand_t(&mut rng, &[l, d], 0.7);
+        let v = rand_t(&mut rng, &[l, d], 1.0);
+        let mut beta: Vec<f32> = (0..l).map(|_| rng.f32()).collect();
+        // zero out a random suffix
+        let cut = rng.range(1, l + 1);
+        for b in beta[..].iter_mut().skip(cut) {
+            *b = 0.0;
+        }
+        let (_, s_full) = sequential_delta(Gate::Efla, &q, &k, &v, &beta);
+        let (_, s_cut) = sequential_delta(
+            Gate::Efla,
+            &rand_slice(&q, cut),
+            &rand_slice(&k, cut),
+            &rand_slice(&v, cut),
+            &beta[..cut],
+        );
+        assert!(
+            s_full.max_abs_diff(&s_cut) < 1e-6,
+            "case {case}: zero-beta suffix changed the state"
+        );
+    }
+}
+
+fn rand_slice(t: &Tensor, n: usize) -> Tensor {
+    let cols = t.shape()[1];
+    Tensor::from_vec(&[n, cols], t.data()[..n * cols].to_vec())
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    use efla::util::json::{parse, Json};
+    for case in 0..50u64 {
+        let mut rng = Rng::new(SEED_BASE + 600 + case);
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, back, "case {case}");
+        let pretty = v.to_string_pretty();
+        assert_eq!(parse(&pretty).unwrap(), v, "case {case} pretty");
+    }
+
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.normal() * 1e3).round() / 16.0),
+            3 => {
+                let n = rng.range(0, 8);
+                Json::Str((0..n).map(|_| ['a', '"', '\\', 'é', '\n', 'z'][rng.range(0, 6)]).collect())
+            }
+            4 => Json::Arr((0..rng.range(0, 4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.range(0, 4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+}
+
+#[test]
+fn prop_tokenizer_roundtrips_arbitrary_bytes() {
+    use efla::data::tokenizer::Bpe;
+    let corpus = "the quick brown fox jumps over the lazy dog. the quick brown fox again.";
+    let bpe = Bpe::train(corpus, 300);
+    for case in 0..30u64 {
+        let mut rng = Rng::new(SEED_BASE + 700 + case);
+        let n = rng.range(0, 200);
+        let text: String = (0..n)
+            .map(|_| {
+                let c = rng.range(32, 127) as u8 as char;
+                c
+            })
+            .collect();
+        assert_eq!(bpe.decode(&bpe.encode(&text)), text, "case {case}");
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_tensors() {
+    use efla::coordinator::checkpoint;
+    let dir = std::env::temp_dir().join(format!("efla_prop_ckpt_{}", std::process::id()));
+    for case in 0..10u64 {
+        let mut rng = Rng::new(SEED_BASE + 800 + case);
+        let n = rng.range(1, 6);
+        let tensors: Vec<Tensor> = (0..n)
+            .map(|_| {
+                let dims = rng.range(0, 3);
+                let shape: Vec<usize> = (0..dims).map(|_| rng.range(1, 8)).collect();
+                rand_t(&mut rng, &shape, 10.0)
+            })
+            .collect();
+        let path = dir.join(format!("c{case}.ckpt"));
+        checkpoint::save(&path, case, &tensors).unwrap();
+        let (step, back) = checkpoint::load(&path).unwrap();
+        assert_eq!(step, case);
+        assert_eq!(tensors, back, "case {case}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
