@@ -13,7 +13,7 @@
 //! of 32 per point).
 
 use efla::coordinator::experiments::{robustness_run, RobustnessResult};
-use efla::runtime::Runtime;
+use efla::runtime::open_backend;
 use efla::util::bench::Table;
 use efla::util::json::{self, Json};
 
@@ -57,10 +57,10 @@ fn main() {
     efla::util::logging::init();
     let steps = env_u64("EFLA_F1_STEPS", 24);
     let eval_batches = env_u64("EFLA_F1_EVAL", 2) as usize;
-    let rt = Runtime::open(std::path::Path::new("artifacts")).expect("open artifacts");
+    let backend = open_backend(std::path::Path::new("artifacts")).expect("open backend");
     for m in ["efla", "deltanet"] {
-        if !rt.has(&format!("clf_{m}_step")) {
-            eprintln!("missing clf_{m}_* artifacts — run `make artifacts` (core set)");
+        if !backend.has_family(&format!("clf_{m}")) {
+            eprintln!("backend cannot build clf_{m}");
             std::process::exit(1);
         }
     }
@@ -70,7 +70,7 @@ fn main() {
     for &lr in &lrs {
         for mixer in ["deltanet", "efla"] {
             log::info!("training clf_{mixer} at lr={lr:.0e} for {steps} steps");
-            let r = robustness_run(&rt, mixer, lr, steps, eval_batches, 42).expect("run");
+            let r = robustness_run(backend.as_ref(), mixer, lr, steps, eval_batches, 42).expect("run");
             results.push(r);
         }
     }

@@ -12,7 +12,7 @@
 //! Env knobs: EFLA_F2_STEPS (default 60), EFLA_F2_EVAL (default 2).
 
 use efla::coordinator::experiments::robustness_run;
-use efla::runtime::Runtime;
+use efla::runtime::open_backend;
 use efla::util::bench::Table;
 use efla::util::json::{self, Json};
 
@@ -24,9 +24,9 @@ fn main() {
     efla::util::logging::init();
     let steps = env_u64("EFLA_F2_STEPS", 24);
     let eval_batches = env_u64("EFLA_F2_EVAL", 2) as usize;
-    let rt = Runtime::open(std::path::Path::new("artifacts")).expect("open artifacts");
-    if !rt.has("clf_efla_step") {
-        eprintln!("missing clf_efla_* artifacts — run `make artifacts` (core set)");
+    let backend = open_backend(std::path::Path::new("artifacts")).expect("open backend");
+    if !backend.has_family("clf_efla") {
+        eprintln!("backend cannot build clf_efla");
         std::process::exit(1);
     }
 
@@ -34,7 +34,7 @@ fn main() {
     let mut results = Vec::new();
     for &lr in &lrs {
         log::info!("training clf_efla at lr={lr:.0e} for {steps} steps");
-        results.push(robustness_run(&rt, "efla", lr, steps, eval_batches, 42).expect("run"));
+        results.push(robustness_run(backend.as_ref(), "efla", lr, steps, eval_batches, 42).expect("run"));
     }
 
     println!("\n## Figure 2 (scaled): EFLA, lr sweep, {steps} steps\n");

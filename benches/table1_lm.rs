@@ -17,7 +17,7 @@
 //!                   3e-4 default — both get the same budget here)
 
 use efla::coordinator::experiments::lm_run;
-use efla::runtime::Runtime;
+use efla::runtime::open_backend;
 use efla::util::bench::Table;
 use efla::util::json::{self, Json};
 
@@ -34,14 +34,14 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1e-3);
-    let rt = Runtime::open(std::path::Path::new("artifacts")).expect("open artifacts");
+    let backend = open_backend(std::path::Path::new("artifacts")).expect("open backend");
 
     let mixers: Vec<&str> = ["deltanet", "efla", "efla_adaptive", "efla_loose"]
         .into_iter()
-        .filter(|m| rt.has(&format!("lm_{preset}_{m}_step")))
+        .filter(|m| backend.has_family(&format!("lm_{preset}_{m}")))
         .collect();
     if mixers.is_empty() {
-        eprintln!("no lm_{preset}_* artifacts — run `make artifacts` (core set)");
+        eprintln!("backend cannot build any lm_{preset}_* family (unknown preset?)");
         std::process::exit(1);
     }
 
@@ -53,7 +53,7 @@ fn main() {
         "model", "train loss", "ppl (down)", "final_word", "multi_choice", "bool_query", "avg acc (up)", "secs",
     ]);
     for mixer in &mixers {
-        let row = lm_run(&rt, &preset, mixer, steps, eval_batches, 42, peak_lr).expect("lm_run");
+        let row = lm_run(backend.as_ref(), &preset, mixer, steps, eval_batches, 42, peak_lr).expect("lm_run");
         let acc: Vec<f64> = row.probe_acc.iter().map(|(_, a)| *a).collect();
         let avg = acc.iter().sum::<f64>() / acc.len().max(1) as f64;
         t.row(&[

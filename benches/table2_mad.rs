@@ -11,7 +11,7 @@
 
 use efla::coordinator::experiments::mad_run;
 use efla::data::mad::MadTask;
-use efla::runtime::Runtime;
+use efla::runtime::open_backend;
 use efla::util::bench::Table;
 use efla::util::json::{self, Json};
 
@@ -23,10 +23,10 @@ fn main() {
     efla::util::logging::init();
     let steps = env_u64("EFLA_T2_STEPS", 16);
     let eval_batches = env_u64("EFLA_T2_EVAL", 4) as usize;
-    let rt = Runtime::open(std::path::Path::new("artifacts")).expect("open artifacts");
+    let backend = open_backend(std::path::Path::new("artifacts")).expect("open backend");
     for m in ["efla", "deltanet"] {
-        if !rt.has(&format!("lm_mad_{m}_step")) {
-            eprintln!("missing lm_mad_{m}_* artifacts — run `make artifacts` (core set)");
+        if !backend.has_family(&format!("lm_mad_{m}")) {
+            eprintln!("backend cannot build lm_mad_{m}");
             std::process::exit(1);
         }
     }
@@ -39,7 +39,7 @@ fn main() {
     for mixer in ["deltanet", "efla"] {
         let mut accs = Vec::new();
         for task in MadTask::all() {
-            let acc = mad_run(&rt, mixer, task, steps, eval_batches, 42).expect("mad_run");
+            let acc = mad_run(backend.as_ref(), mixer, task, steps, eval_batches, 42).expect("mad_run");
             accs.push(acc);
         }
         let avg = accs.iter().sum::<f64>() / accs.len() as f64;

@@ -6,7 +6,7 @@
 use anyhow::Result;
 use efla::coordinator::experiments::mad_run;
 use efla::data::mad::MadTask;
-use efla::runtime::Runtime;
+use efla::runtime::open_backend;
 use efla::util::bench::Table;
 use efla::util::cli::Args;
 
@@ -27,25 +27,25 @@ fn main() -> Result<()> {
         .opt("tasks", "all", "comma list or 'all'")
         .opt("seed", "42", "seed")
         .parse();
-    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    let backend = open_backend(std::path::Path::new("artifacts"))?;
     for m in ["efla", "deltanet"] {
-        if !rt.has(&format!("lm_mad_{m}_step")) {
-            anyhow::bail!("MAD artifacts missing — run `make artifacts` (core set)");
+        if !backend.has_family(&format!("lm_mad_{m}")) {
+            anyhow::bail!("backend cannot build lm_mad_{m}");
         }
     }
-    let tasks = parse_tasks(p.get("tasks"));
+    let tasks = parse_tasks(p.get("tasks")?);
     if tasks.is_empty() {
-        anyhow::bail!("no valid tasks in --tasks {:?}", p.get("tasks"));
+        anyhow::bail!("no valid tasks in --tasks {:?}", p.get("tasks")?);
     }
 
-    let steps = p.u64("steps");
-    let eval_batches = p.usize("eval-batches");
-    let seed = p.u64("seed");
+    let steps = p.u64("steps")?;
+    let eval_batches = p.usize("eval-batches")?;
+    let seed = p.u64("seed")?;
 
     let mut t = Table::new(&["task", "deltanet", "efla", "gap"]);
     for task in &tasks {
-        let a_d = mad_run(&rt, "deltanet", *task, steps, eval_batches, seed)?;
-        let a_e = mad_run(&rt, "efla", *task, steps, eval_batches, seed)?;
+        let a_d = mad_run(backend.as_ref(), "deltanet", *task, steps, eval_batches, seed)?;
+        let a_e = mad_run(backend.as_ref(), "efla", *task, steps, eval_batches, seed)?;
         t.row(&[
             task.name().to_string(),
             format!("{a_d:.3}"),

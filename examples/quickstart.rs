@@ -1,7 +1,8 @@
 //! Quickstart: the whole three-layer stack in one minute.
 //!
-//! 1. open the AOT artifact directory (built once by `make artifacts`);
-//! 2. initialize a tiny EFLA language model *inside XLA* (seeded init graph);
+//! 1. open the best available execution backend (pure-Rust CPU by default,
+//!    PJRT over AOT artifacts with `--features xla`);
+//! 2. initialize a tiny EFLA language model (seeded init);
 //! 3. train a few steps on synthetic text — fused fwd+bwd+AdamW per step;
 //! 4. evaluate perplexity;
 //! 5. generate a few tokens through the O(1)-state decode path.
@@ -14,17 +15,17 @@ use efla::coordinator::schedule::Schedule;
 use efla::coordinator::server::{GenRequest, Server};
 use efla::coordinator::session::Session;
 use efla::coordinator::trainer;
-use efla::runtime::Runtime;
+use efla::runtime::open_backend;
 
 fn main() -> Result<()> {
     efla::util::logging::init();
 
-    // 1. the runtime: HLO-text artifacts -> PJRT CPU executables
-    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
-    println!("artifacts available: {}", rt.manifest().names().len());
+    // 1. the execution backend (CPU fallback needs no artifacts)
+    let backend = open_backend(std::path::Path::new("artifacts"))?;
+    println!("backend: {} ({} families)", backend.name(), backend.describe().len());
 
-    // 2. a model session: params + AdamW state live as XLA literals
-    let mut session = Session::init(&rt, "lm_tiny_efla", 42)?;
+    // 2. a model session: params + AdamW state live backend-side
+    let mut session = Session::init(backend.as_ref(), "lm_tiny_efla", 42)?;
     println!(
         "model: {} tensors / {:.2}M params, batch {} x seq {}",
         session.n_params_tensors(),
@@ -56,7 +57,7 @@ fn main() -> Result<()> {
     println!("held-out ppl: {:.2} (byte-level)", stats.ppl());
 
     // 5. batched generation through the recurrent decode path
-    let mut server = Server::new(&rt, &session, 7)?;
+    let mut server = Server::new(&session, 7)?;
     for id in 0..4 {
         server.submit(GenRequest {
             id,

@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 use efla::coordinator::experiments::{corruption_grid, robustness_run};
-use efla::runtime::Runtime;
+use efla::runtime::open_backend;
 use efla::util::bench::Table;
 use efla::util::cli::Args;
 
@@ -17,19 +17,19 @@ fn main() -> Result<()> {
         .opt("lr", "0.003", "learning rate (paper: 3e-3 for the strong row)")
         .opt("eval-batches", "2", "eval batches (x32 examples) per point")
         .parse();
-    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    let backend = open_backend(std::path::Path::new("artifacts"))?;
     for m in ["efla", "deltanet"] {
-        if !rt.has(&format!("clf_{m}_step")) {
-            anyhow::bail!("classifier artifacts missing — run `make artifacts` (core set)");
+        if !backend.has_family(&format!("clf_{m}")) {
+            anyhow::bail!("backend cannot build clf_{m}");
         }
     }
 
-    let steps = p.u64("steps");
-    let lr = p.f64("lr");
-    let eval_batches = p.usize("eval-batches");
+    let steps = p.u64("steps")?;
+    let lr = p.f64("lr")?;
+    let eval_batches = p.usize("eval-batches")?;
 
-    let efla_r = robustness_run(&rt, "efla", lr, steps, eval_batches, 42)?;
-    let delta_r = robustness_run(&rt, "deltanet", lr, steps, eval_batches, 42)?;
+    let efla_r = robustness_run(backend.as_ref(), "efla", lr, steps, eval_batches, 42)?;
+    let delta_r = robustness_run(backend.as_ref(), "deltanet", lr, steps, eval_batches, 42)?;
 
     println!("\nclean accuracy: efla {:.3} | deltanet {:.3}\n", efla_r.clean_acc, delta_r.clean_acc);
     for (label, grid) in corruption_grid() {

@@ -14,7 +14,7 @@ use efla::coordinator::schedule::Schedule;
 use efla::coordinator::server::{GenRequest, Server};
 use efla::coordinator::session::Session;
 use efla::coordinator::trainer;
-use efla::runtime::Runtime;
+use efla::runtime::open_backend;
 use efla::util::bench::{fmt_secs, Stats};
 use efla::util::cli::Args;
 use efla::util::rng::Rng;
@@ -28,10 +28,10 @@ fn main() -> Result<()> {
         .opt("temperature", "0.8", "sampling temperature")
         .opt("seed", "42", "seed")
         .parse();
-    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
-    let mut session = Session::init(&rt, "lm_tiny_efla", p.u64("seed") as u32)?;
+    let backend = open_backend(std::path::Path::new("artifacts"))?;
+    let mut session = Session::init(backend.as_ref(), "lm_tiny_efla", p.u64("seed")? as u32)?;
 
-    let cfg = RunConfig { steps: p.u64("train-steps"), corpus_bytes: 300_000, ..Default::default() };
+    let cfg = RunConfig { steps: p.u64("train-steps")?, corpus_bytes: 300_000, ..Default::default() };
     if cfg.steps > 0 {
         let (data, _) = trainer::lm_data(&cfg, session.batch, session.seq)?;
         trainer::train_lm(
@@ -43,10 +43,10 @@ fn main() -> Result<()> {
         )?;
     }
 
-    let mut server = Server::new(&rt, &session, p.u64("seed"))?;
-    let mut rng = Rng::new(p.u64("seed") ^ 0x5EED);
-    let n = p.usize("requests");
-    let max_new = p.usize("max-new");
+    let mut server = Server::new(&session, p.u64("seed")?)?;
+    let mut rng = Rng::new(p.u64("seed")? ^ 0x5EED);
+    let n = p.usize("requests")?;
+    let max_new = p.usize("max-new")?;
     let corpus_words = ["the", "naba", "of", "recall", "is", "vora", "wimu"];
     for id in 0..n as u64 {
         let mut prompt_text = String::new();
@@ -58,7 +58,7 @@ fn main() -> Result<()> {
             id,
             prompt: prompt_text.bytes().map(|b| b as i32).collect(),
             max_new,
-            temperature: p.f32("temperature"),
+            temperature: p.f32("temperature")?,
         });
     }
 

@@ -21,7 +21,7 @@ use efla::coordinator::evaluator;
 use efla::coordinator::schedule::Schedule;
 use efla::coordinator::session::Session;
 use efla::coordinator::trainer;
-use efla::runtime::Runtime;
+use efla::runtime::open_backend;
 use efla::util::cli::Args;
 use efla::util::json::{self, Json};
 
@@ -41,27 +41,24 @@ fn main() -> Result<()> {
 
     let cfg = RunConfig {
         task: Task::Lm,
-        preset: p.get("preset").into(),
-        mixer: p.get("mixer").into(),
-        steps: p.u64("steps"),
-        seed: p.u64("seed"),
-        peak_lr: p.f64("peak-lr"),
-        corpus_bytes: p.usize("corpus-bytes"),
-        eval_batches: p.usize("eval-batches"),
-        out_dir: p.get("out").into(),
+        preset: p.get("preset")?.into(),
+        mixer: p.get("mixer")?.into(),
+        steps: p.u64("steps")?,
+        seed: p.u64("seed")?,
+        peak_lr: p.f64("peak-lr")?,
+        corpus_bytes: p.usize("corpus-bytes")?,
+        eval_batches: p.usize("eval-batches")?,
+        out_dir: p.get("out")?.into(),
         ..Default::default()
     };
 
-    let rt = Runtime::open(&cfg.artifact_dir)?;
+    let backend = open_backend(&cfg.artifact_dir)?;
     let family = cfg.family();
-    if !rt.has(&format!("{family}_step")) {
-        anyhow::bail!(
-            "artifact {family}_step missing — run `make artifacts`{}",
-            if cfg.preset == "100m" { " and `make artifacts-full`" } else { "" }
-        );
+    if !backend.has_family(&family) {
+        anyhow::bail!("backend {} cannot build {family}", backend.name());
     }
 
-    let mut session = Session::init(&rt, &family, cfg.seed as u32)?;
+    let mut session = Session::init(backend.as_ref(), &family, cfg.seed as u32)?;
     log::info!(
         "{} | {:.1}M params | batch {} x seq {} = {} tok/step",
         family,
@@ -96,7 +93,7 @@ fn main() -> Result<()> {
     );
 
     let mut probe_json = Vec::new();
-    if p.bool("probes") {
+    if p.bool("probes")? {
         for (name, acc) in evaluator::probe_suite(&session, &bpe, cfg.seed + 77, 24)? {
             log::info!("probe {name}: {acc:.3}");
             probe_json.push(Json::obj(vec![

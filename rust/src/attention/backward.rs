@@ -1,0 +1,273 @@
+//! Reverse-mode gradients through the sequential generalized delta rule.
+//!
+//! The CPU training backend backpropagates through the recurrence
+//!
+//! ```text
+//! u_t = v_t - S_{t-1}^T k_t
+//! S_t = S_{t-1} + alpha_t k_t u_t^T
+//! o_t = S_t^T q_t
+//! ```
+//!
+//! by recomputing the forward state trajectory (S_0..S_L) for one head and
+//! then running the adjoint recurrence backwards with the running state
+//! cotangent G = dL/dS_t:
+//!
+//! ```text
+//! dq_t      = S_t do_t
+//! G        += q_t do_t^T                       (o_t contribution)
+//! dalpha_t  = k_t^T G u_t
+//! du_t      = alpha_t G^T k_t
+//! dk_t      = alpha_t G u_t - S_{t-1} du_t
+//! dv_t      = du_t
+//! G        -= k_t du_t^T                       (u_t's S_{t-1} dependence)
+//! ```
+//!
+//! Memory is O(L * Dk * Dv) transient per head — the caller loops over
+//! (batch, head) pairs so the peak is one head's trajectory, not the whole
+//! batch (the checkpointing trade the classifier's L=784 sequences need).
+
+use crate::tensor::Tensor;
+
+/// Gradients of the alpha-form sequential delta rule.
+///
+/// q, k: (L, Dk); v: (L, Dv); alpha: len L; dout: (L, Dv) = dL/do.
+/// Returns (dq (L,Dk), dk (L,Dk), dv (L,Dv), dalpha (len L)).
+pub fn delta_bptt(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    alpha: &[f32],
+    dout: &Tensor,
+) -> (Tensor, Tensor, Tensor, Vec<f32>) {
+    let l = q.shape()[0];
+    let dk = q.shape()[1];
+    let dv = v.shape()[1];
+    assert_eq!(k.shape(), &[l, dk]);
+    assert_eq!(v.shape(), &[l, dv]);
+    assert_eq!(dout.shape(), &[l, dv]);
+    assert_eq!(alpha.len(), l);
+
+    // Forward recompute: states[t] = S_t (flat dk*dv), u[t] = v_t - S_{t-1}^T k_t.
+    let mut states: Vec<Vec<f32>> = Vec::with_capacity(l + 1);
+    states.push(vec![0.0f32; dk * dv]);
+    let mut us: Vec<Vec<f32>> = Vec::with_capacity(l);
+    for t in 0..l {
+        let kt = k.row(t);
+        let vt = v.row(t);
+        let s_prev = &states[t];
+        let mut u = vt.to_vec();
+        for (i, &ki) in kt.iter().enumerate() {
+            if ki == 0.0 {
+                continue;
+            }
+            let srow = &s_prev[i * dv..(i + 1) * dv];
+            for (uj, &sj) in u.iter_mut().zip(srow.iter()) {
+                *uj -= ki * sj;
+            }
+        }
+        let mut s_new = s_prev.clone();
+        let a = alpha[t];
+        for (i, &ki) in kt.iter().enumerate() {
+            let aki = a * ki;
+            if aki == 0.0 {
+                continue;
+            }
+            let srow = &mut s_new[i * dv..(i + 1) * dv];
+            for (sj, &uj) in srow.iter_mut().zip(u.iter()) {
+                *sj += aki * uj;
+            }
+        }
+        states.push(s_new);
+        us.push(u);
+    }
+
+    // Backward sweep.
+    let mut dq = vec![0.0f32; l * dk];
+    let mut dkk = vec![0.0f32; l * dk];
+    let mut dvv = vec![0.0f32; l * dv];
+    let mut dalpha = vec![0.0f32; l];
+    let mut g = vec![0.0f32; dk * dv]; // dL/dS carried backwards
+    let mut gk = vec![0.0f32; dv]; // scratch: G^T k
+    for t in (0..l).rev() {
+        let qt = q.row(t);
+        let kt = k.row(t);
+        let dot = dout.row(t);
+        let s_t = &states[t + 1];
+        let s_prev = &states[t];
+        let u = &us[t];
+        let a = alpha[t];
+
+        // dq_t = S_t do_t ;  G += q_t do_t^T
+        {
+            let dqr = &mut dq[t * dk..(t + 1) * dk];
+            for i in 0..dk {
+                let srow = &s_t[i * dv..(i + 1) * dv];
+                let mut acc = 0.0f32;
+                for (sj, dj) in srow.iter().zip(dot.iter()) {
+                    acc += sj * dj;
+                }
+                dqr[i] = acc;
+                let qi = qt[i];
+                if qi != 0.0 {
+                    let grow = &mut g[i * dv..(i + 1) * dv];
+                    for (gj, dj) in grow.iter_mut().zip(dot.iter()) {
+                        *gj += qi * dj;
+                    }
+                }
+            }
+        }
+
+        // gk = G^T k_t ;  dalpha_t = gk . u_t ;  du_t = alpha_t gk
+        gk.iter_mut().for_each(|x| *x = 0.0);
+        for (i, &ki) in kt.iter().enumerate() {
+            if ki == 0.0 {
+                continue;
+            }
+            let grow = &g[i * dv..(i + 1) * dv];
+            for (gkj, &gj) in gk.iter_mut().zip(grow.iter()) {
+                *gkj += ki * gj;
+            }
+        }
+        let mut da = 0.0f32;
+        for (gkj, uj) in gk.iter().zip(u.iter()) {
+            da += gkj * uj;
+        }
+        dalpha[t] = da;
+
+        // dk_t = alpha_t G u_t - S_{t-1} du_t   (du_t = alpha_t gk)
+        // dv_t = du_t ;  G -= k_t du_t^T
+        {
+            let dkr = &mut dkk[t * dk..(t + 1) * dk];
+            for i in 0..dk {
+                let grow = &g[i * dv..(i + 1) * dv];
+                let sprow = &s_prev[i * dv..(i + 1) * dv];
+                let mut gu = 0.0f32;
+                let mut sdu = 0.0f32;
+                for j in 0..dv {
+                    gu += grow[j] * u[j];
+                    sdu += sprow[j] * gk[j];
+                }
+                dkr[i] = a * gu - a * sdu;
+            }
+            let dvr = &mut dvv[t * dv..(t + 1) * dv];
+            for (dvj, &gkj) in dvr.iter_mut().zip(gk.iter()) {
+                *dvj = a * gkj;
+            }
+            for (i, &ki) in kt.iter().enumerate() {
+                let c = a * ki;
+                if c == 0.0 {
+                    continue;
+                }
+                let grow = &mut g[i * dv..(i + 1) * dv];
+                for (gj, &gkj) in grow.iter_mut().zip(gk.iter()) {
+                    *gj -= c * gkj;
+                }
+            }
+        }
+    }
+
+    (
+        Tensor::from_vec(&[l, dk], dq),
+        Tensor::from_vec(&[l, dk], dkk),
+        Tensor::from_vec(&[l, dv], dvv),
+        dalpha,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::sequential::sequential_delta_alpha;
+    use crate::util::rng::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: &[usize], sigma: f32) -> Tensor {
+        Tensor::from_vec(shape, rng.normal_vec(shape.iter().product(), 0.0, sigma))
+    }
+
+    /// Scalar loss: sum(out * w) for a fixed random weight tensor, so
+    /// dL/dout = w exactly and finite differences are cheap.
+    fn loss(q: &Tensor, k: &Tensor, v: &Tensor, alpha: &[f32], w: &Tensor) -> f64 {
+        let (out, _) = sequential_delta_alpha(q, k, v, alpha);
+        out.data()
+            .iter()
+            .zip(w.data().iter())
+            .map(|(&o, &ww)| o as f64 * ww as f64)
+            .sum()
+    }
+
+    fn perturbed(t: &Tensor, idx: usize, h: f32) -> Tensor {
+        let mut d = t.data().to_vec();
+        d[idx] += h;
+        Tensor::from_vec(t.shape(), d)
+    }
+
+    #[test]
+    fn bptt_matches_finite_differences() {
+        let mut rng = Rng::new(0xB7);
+        let (l, dk, dv) = (7, 4, 3);
+        let q = rand_t(&mut rng, &[l, dk], 1.0);
+        let k = rand_t(&mut rng, &[l, dk], 0.7);
+        let v = rand_t(&mut rng, &[l, dv], 1.0);
+        // Gate-mapped alphas keep the recurrence contractive, so the f32
+        // forward stays O(1) and finite differences stay clean.
+        let alpha: Vec<f32> = (0..l)
+            .map(|t| {
+                let lam: f32 = k.row(t).iter().map(|x| x * x).sum();
+                crate::attention::gates::alpha_efla(0.1 + 0.8 * rng.f32(), lam)
+            })
+            .collect();
+        let w = rand_t(&mut rng, &[l, dv], 1.0);
+
+        let (dq, dk_, dv_, dalpha) = delta_bptt(&q, &k, &v, &alpha, &w);
+
+        let h = 1e-3f32;
+        let check = |analytic: f32, fd: f64, what: &str| {
+            let tol = 1e-2 * (1.0 + fd.abs());
+            assert!(
+                (analytic as f64 - fd).abs() < tol,
+                "{what}: analytic {analytic} vs fd {fd}"
+            );
+        };
+        for idx in 0..l * dk {
+            let fd = (loss(&perturbed(&q, idx, h), &k, &v, &alpha, &w)
+                - loss(&perturbed(&q, idx, -h), &k, &v, &alpha, &w))
+                / (2.0 * h as f64);
+            check(dq.data()[idx], fd, "dq");
+            let fd = (loss(&q, &perturbed(&k, idx, h), &v, &alpha, &w)
+                - loss(&q, &perturbed(&k, idx, -h), &v, &alpha, &w))
+                / (2.0 * h as f64);
+            check(dk_.data()[idx], fd, "dk");
+        }
+        for idx in 0..l * dv {
+            let fd = (loss(&q, &k, &perturbed(&v, idx, h), &alpha, &w)
+                - loss(&q, &k, &perturbed(&v, idx, -h), &alpha, &w))
+                / (2.0 * h as f64);
+            check(dv_.data()[idx], fd, "dv");
+        }
+        for t in 0..l {
+            let mut ap = alpha.clone();
+            ap[t] += h;
+            let mut am = alpha.clone();
+            am[t] -= h;
+            let fd = (loss(&q, &k, &v, &ap, &w) - loss(&q, &k, &v, &am, &w)) / (2.0 * h as f64);
+            check(dalpha[t], fd, "dalpha");
+        }
+    }
+
+    #[test]
+    fn zero_alpha_passes_no_gradient_to_kv() {
+        // With alpha = 0 the state never updates: dk = dv = 0, dq = 0
+        // (S stays zero), and dalpha reflects the would-be first write.
+        let mut rng = Rng::new(3);
+        let (l, d) = (5, 3);
+        let q = rand_t(&mut rng, &[l, d], 1.0);
+        let k = rand_t(&mut rng, &[l, d], 1.0);
+        let v = rand_t(&mut rng, &[l, d], 1.0);
+        let dout = rand_t(&mut rng, &[l, d], 1.0);
+        let alpha = vec![0.0f32; l];
+        let (dq, dk_, dv_, _) = delta_bptt(&q, &k, &v, &alpha, &dout);
+        assert!(dq.norm() < 1e-7);
+        assert!(dk_.norm() < 1e-7);
+        assert!(dv_.norm() < 1e-7);
+    }
+}

@@ -15,8 +15,13 @@
 //! (O(C^2) dot products) instead of the kernel's MXU-friendly nilpotent
 //! doubling — on a scalar CPU the substitution is cheaper. Equality of the
 //! two is exactly what the golden-vector test pins.
+//!
+//! All hot loops operate on flat row slices (`copy_from_slice` + fused
+//! `axpy` / blocked matmuls) — see `benches/kernel_throughput.rs` for the
+//! measured win over the earlier per-element `get`/`set` form.
 
-use crate::tensor::{matmul, matmul_nt, Tensor};
+use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Tensor};
+use crate::tensor::axpy;
 
 use super::gates::{Gate, EPS_LAMBDA};
 
@@ -32,121 +37,118 @@ pub fn chunkwise_delta(
     beta: &[f32],
     chunk: usize,
 ) -> (Tensor, Tensor) {
-    assert!(chunk >= 1);
     let l = q.shape()[0];
-    let dk = q.shape()[1];
-    let dv = v.shape()[1];
-    assert_eq!(k.shape(), &[l, dk]);
-    assert_eq!(v.shape(), &[l, dv]);
     assert_eq!(beta.len(), l);
 
-    // Precompute per-token alpha.
+    // Resolve the scalar gate per token, then run the alpha form.
     let alpha: Vec<f32> = (0..l)
         .map(|t| {
             let lam: f32 = k.row(t).iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
             gate.alpha(beta[t], lam)
         })
         .collect();
+    chunkwise_delta_alpha(q, k, v, &alpha, chunk)
+}
 
-    let mut s = Tensor::zeros(&[dk, dv]);
+/// [`chunkwise_delta`] with per-token alpha supplied directly — the entry
+/// point the CPU backend's model layer uses (it owns the gate composition:
+/// beta projections, adaptive decay, DeltaNet's normalized keys).
+pub fn chunkwise_delta_alpha(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    alpha: &[f32],
+    chunk: usize,
+) -> (Tensor, Tensor) {
+    assert!(chunk >= 1);
+    let l = q.shape()[0];
+    let dk = q.shape()[1];
+    let dv = v.shape()[1];
+    assert_eq!(k.shape(), &[l, dk]);
+    assert_eq!(v.shape(), &[l, dv]);
+    assert_eq!(alpha.len(), l);
+
+    let mut s = vec![0.0f32; dk * dv];
     let mut out = vec![0.0f32; l * dv];
 
     let mut c0 = 0;
     while c0 < l {
         let c = chunk.min(l - c0);
-        // Chunk views.
-        let qc = slice_rows(q, c0, c);
-        let kc = slice_rows(k, c0, c);
-        let vc = slice_rows(v, c0, c);
+        // Chunk row slices straight out of the row-major tensors.
+        let qc = &q.data()[c0 * dk..(c0 + c) * dk];
+        let kc = &k.data()[c0 * dk..(c0 + c) * dk];
+        let vc = &v.data()[c0 * dv..(c0 + c) * dv];
         let ac = &alpha[c0..c0 + c];
 
-        // A = strict_tril(diag(a) K K^T)
-        let kk = matmul_nt(&kc, &kc); // (C, C)
+        // kk = K K^T (C, C); only the strict lower triangle is consumed.
+        let mut kk = vec![0.0f32; c * c];
+        matmul_nt_into(kc, kc, &mut kk, c, dk, c);
 
         // Solve (I + A) X = diag(a) [K | V] by forward substitution, rows
         // in order: X[r] = a_r*rhs[r] - sum_{i<r} A[r,i] X[i].
-        let mut w = Tensor::zeros(&[c, dk]);
-        let mut u = Tensor::zeros(&[c, dv]);
+        let mut w = vec![0.0f32; c * dk];
+        let mut u = vec![0.0f32; c * dv];
         for r in 0..c {
             let ar = ac[r];
-            // start with a_r * k_r / a_r * v_r
-            for j in 0..dk {
-                w.set(&[r, j], ar * kc.get(&[r, j]));
+            let (w_done, w_rest) = w.split_at_mut(r * dk);
+            let wr = &mut w_rest[..dk];
+            wr.copy_from_slice(&kc[r * dk..(r + 1) * dk]);
+            for x in wr.iter_mut() {
+                *x *= ar;
             }
-            for j in 0..dv {
-                u.set(&[r, j], ar * vc.get(&[r, j]));
+            let (u_done, u_rest) = u.split_at_mut(r * dv);
+            let ur = &mut u_rest[..dv];
+            ur.copy_from_slice(&vc[r * dv..(r + 1) * dv]);
+            for x in ur.iter_mut() {
+                *x *= ar;
             }
-            for i in 0..r {
-                let aij = ar * kk.get(&[r, i]); // diag(a) row-scales KK^T
+            let kkr = &kk[r * c..r * c + r];
+            for (i, &kki) in kkr.iter().enumerate() {
+                let aij = ar * kki; // diag(a) row-scales KK^T
                 if aij == 0.0 {
                     continue;
                 }
-                for j in 0..dk {
-                    let val = w.get(&[r, j]) - aij * w.get(&[i, j]);
-                    w.set(&[r, j], val);
-                }
-                for j in 0..dv {
-                    let val = u.get(&[r, j]) - aij * u.get(&[i, j]);
-                    u.set(&[r, j], val);
-                }
+                axpy(-aij, &w_done[i * dk..(i + 1) * dk], wr);
+                axpy(-aij, &u_done[i * dv..(i + 1) * dv], ur);
             }
         }
 
         // delta = U - W S  (C, Dv)
-        let ws = matmul(&w, &s);
-        let mut delta = u.clone();
-        for (d, w_) in delta.data_mut().iter_mut().zip(ws.data().iter()) {
+        let mut ws = vec![0.0f32; c * dv];
+        matmul_into(&w, &s, &mut ws, c, dk, dv);
+        let mut delta = u;
+        for (d, w_) in delta.iter_mut().zip(ws.iter()) {
             *d -= w_;
         }
 
-        // O = Q S + tril(Q K^T) delta
-        let qs = matmul(&qc, &s); // (C, Dv)
-        let qk = matmul_nt(&qc, &kc); // (C, C)
+        // O = Q S + tril(Q K^T) delta, written straight into the output rows.
+        let mut qk = vec![0.0f32; c * c];
+        matmul_nt_into(qc, kc, &mut qk, c, dk, c);
+        let oc = &mut out[c0 * dv..(c0 + c) * dv];
+        matmul_into(qc, &s, oc, c, dk, dv);
         for r in 0..c {
-            let orow = &mut out[(c0 + r) * dv..(c0 + r + 1) * dv];
-            for j in 0..dv {
-                orow[j] = qs.get(&[r, j]);
-            }
-            for i in 0..=r {
-                let g = qk.get(&[r, i]);
+            let orow = &mut oc[r * dv..(r + 1) * dv];
+            for (i, &g) in qk[r * c..r * c + r + 1].iter().enumerate() {
                 if g == 0.0 {
                     continue;
                 }
-                for j in 0..dv {
-                    orow[j] += g * delta.get(&[i, j]);
-                }
+                axpy(g, &delta[i * dv..(i + 1) * dv], orow);
             }
         }
 
-        // S' = S + K^T delta
-        for i in 0..c {
-            for a_ in 0..dk {
-                let kia = kc.get(&[i, a_]);
-                if kia == 0.0 {
-                    continue;
-                }
-                for j in 0..dv {
-                    let val = s.get(&[a_, j]) + kia * delta.get(&[i, j]);
-                    s.set(&[a_, j], val);
-                }
-            }
-        }
+        // S' = S + K^T delta (fused rank-C update)
+        matmul_tn_into(kc, &delta, &mut s, c, dk, dv);
 
         c0 += c;
     }
 
-    (Tensor::from_vec(&[l, dv], out), s)
-}
-
-fn slice_rows(t: &Tensor, start: usize, n: usize) -> Tensor {
-    let cols = t.shape()[1];
-    Tensor::from_vec(&[n, cols], t.data()[start * cols..(start + n) * cols].to_vec())
+    (Tensor::from_vec(&[l, dv], out), Tensor::from_vec(&[dk, dv], s))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::sequential::sequential_delta;
+    use crate::attention::sequential::{sequential_delta, sequential_delta_alpha};
     use crate::util::rng::Rng;
 
     fn rand_t(rng: &mut Rng, shape: &[usize], sigma: f32) -> Tensor {
@@ -193,6 +195,32 @@ mod tests {
         check_matches_sequential(Gate::Efla, 7, 4, 16, 14); // single short chunk
     }
 
+    /// Per-token alpha through the exact gate: keeps alpha * ||k||^2 inside
+    /// the contraction region so float noise between the two forms cannot be
+    /// amplified by a divergent trajectory.
+    fn stable_alpha(rng: &mut Rng, k: &Tensor) -> Vec<f32> {
+        (0..k.shape()[0])
+            .map(|t| {
+                let lam: f32 = k.row(t).iter().map(|x| x * x).sum();
+                crate::attention::gates::alpha_efla(rng.f32(), lam)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn alpha_form_matches_sequential_alpha_form() {
+        let mut rng = Rng::new(21);
+        let (l, dk, dv) = (40, 8, 6);
+        let q = rand_t(&mut rng, &[l, dk], 1.0);
+        let k = rand_t(&mut rng, &[l, dk], 0.7);
+        let v = rand_t(&mut rng, &[l, dv], 1.0);
+        let alpha = stable_alpha(&mut rng, &k);
+        let (o1, s1) = sequential_delta_alpha(&q, &k, &v, &alpha);
+        let (o2, s2) = chunkwise_delta_alpha(&q, &k, &v, &alpha, 16);
+        assert!(o1.max_abs_diff(&o2) < 2e-4);
+        assert!(s1.max_abs_diff(&s2) < 2e-4);
+    }
+
     #[test]
     fn chunk_size_invariance() {
         let mut rng = Rng::new(15);
@@ -207,5 +235,20 @@ mod tests {
             assert!(o1.max_abs_diff(&o2) < 2e-4, "chunk {c}");
             assert!(s1.max_abs_diff(&s2) < 2e-4, "chunk {c}");
         }
+    }
+
+    #[test]
+    fn rectangular_dk_dv() {
+        // Dk != Dv exercises every stride in the flat-slice loops.
+        let mut rng = Rng::new(16);
+        let (l, dk, dv) = (33, 5, 9);
+        let q = rand_t(&mut rng, &[l, dk], 1.0);
+        let k = rand_t(&mut rng, &[l, dk], 0.7);
+        let v = rand_t(&mut rng, &[l, dv], 1.0);
+        let alpha = stable_alpha(&mut rng, &k);
+        let (o1, s1) = sequential_delta_alpha(&q, &k, &v, &alpha);
+        let (o2, s2) = chunkwise_delta_alpha(&q, &k, &v, &alpha, 8);
+        assert!(o1.max_abs_diff(&o2) < 5e-4);
+        assert!(s1.max_abs_diff(&s2) < 5e-4);
     }
 }

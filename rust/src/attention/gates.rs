@@ -74,6 +74,28 @@ pub fn alpha_efla(beta: f32, lambda: f32) -> f32 {
     (-(-x).exp_m1() / lam) as f32
 }
 
+/// Value + partial derivatives of the EFLA gate:
+/// `(alpha, d alpha / d beta, d alpha / d lambda)`.
+///
+/// Needed by the CPU backend's backward pass. Computed in f64; the
+/// `d alpha / d lambda` formula `(beta e^{-x} - alpha) / lambda` cancels
+/// catastrophically as `x = beta*lambda -> 0`, so a series expansion
+/// (`-beta^2/2 + beta^2 x/3 + O(x^2)`) takes over below x = 1e-4.
+pub fn alpha_efla_grad(beta: f32, lambda: f32) -> (f32, f32, f32) {
+    let lam = lambda.max(EPS_LAMBDA) as f64;
+    let b = beta as f64;
+    let x = b * lam;
+    let e = (-x).exp();
+    let alpha = -(-x).exp_m1() / lam;
+    let da_db = e;
+    let da_dl = if x < 1e-4 {
+        b * b * (-0.5 + x / 3.0)
+    } else {
+        (b * e - alpha) / lam
+    };
+    (alpha as f32, da_db as f32, da_dl as f32)
+}
+
 /// Transition eigenvalue along k: 1 - alpha*lambda. For EFLA this equals
 /// e^{-beta*lambda} exactly (paper §6: spectral gate / memory dominance).
 pub fn transition_eigenvalue(gate: Gate, beta: f32, lambda: f32) -> f32 {
@@ -147,6 +169,34 @@ mod tests {
         // the instability EFLA fixes: |1 - beta*lambda| > 1 for beta*lambda > 2
         let ev = transition_eigenvalue(Gate::Euler, 1.0, 3.0);
         assert!(ev < -1.0);
+    }
+
+    #[test]
+    fn efla_grad_matches_finite_differences() {
+        let fd = |beta: f64, lam: f64| {
+            let h = 1e-6;
+            let f = |b: f64, l: f64| -(-b * l).exp_m1() / l;
+            (
+                (f(beta + h, lam) - f(beta - h, lam)) / (2.0 * h),
+                (f(beta, lam + h) - f(beta, lam - h)) / (2.0 * h),
+            )
+        };
+        for (beta, lam) in [(0.3f32, 0.5f32), (0.9, 2.0), (0.1, 8.0), (0.7, 1e-3)] {
+            let (a, dab, dal) = alpha_efla_grad(beta, lam);
+            assert!((a - alpha_efla(beta, lam)).abs() < 1e-6);
+            let (fdb, fdl) = fd(beta as f64, lam as f64);
+            assert!((dab as f64 - fdb).abs() < 1e-4, "beta={beta} lam={lam}");
+            assert!((dal as f64 - fdl).abs() < 1e-4 * (1.0 + fdl.abs()), "beta={beta} lam={lam}");
+        }
+    }
+
+    #[test]
+    fn efla_grad_series_branch_is_smooth() {
+        // values just above and below the series switchover must agree
+        let beta = 0.8f32;
+        let (_, _, lo) = alpha_efla_grad(beta, 0.9e-4 / 0.8);
+        let (_, _, hi) = alpha_efla_grad(beta, 1.1e-4 / 0.8);
+        assert!((lo - hi).abs() < 1e-4, "{lo} vs {hi}");
     }
 
     #[test]

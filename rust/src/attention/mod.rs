@@ -8,13 +8,16 @@
 //!  2. *error-analysis substrate*: the integrator sweep behind the paper's
 //!     §3/§6 claims (bench `kernel_throughput`) runs here, where we control
 //!     every flop;
-//!  3. *CPU serving fallback*: the server can decode through
-//!     [`sequential::DeltaState`] when no PJRT executable is loaded.
+//!  3. *CPU execution backend substrate*: the pure-Rust backend
+//!     (`runtime::cpu`) trains and serves through [`chunkwise_delta_alpha`],
+//!     [`sequential::DeltaState`] and the BPTT adjoint in [`backward`].
 
+pub mod backward;
 pub mod chunkwise;
 pub mod gates;
 pub mod sequential;
 
-pub use chunkwise::chunkwise_delta;
-pub use gates::{alpha_efla, alpha_euler, alpha_rk, gate_series, Gate};
-pub use sequential::{sequential_delta, DeltaState};
+pub use backward::delta_bptt;
+pub use chunkwise::{chunkwise_delta, chunkwise_delta_alpha};
+pub use gates::{alpha_efla, alpha_efla_grad, alpha_euler, alpha_rk, gate_series, Gate};
+pub use sequential::{delta_step_alpha, sequential_delta, sequential_delta_alpha, DeltaState};

@@ -50,53 +50,82 @@ impl DeltaState {
     /// Advance one token and write o = S'^T q into `out` (len dv).
     /// Allocation-free.
     pub fn step(&mut self, gate: Gate, q: &[f32], k: &[f32], v: &[f32], beta: f32, out: &mut [f32]) {
-        debug_assert_eq!(q.len(), self.dk);
-        debug_assert_eq!(k.len(), self.dk);
-        debug_assert_eq!(v.len(), self.dv);
-        debug_assert_eq!(out.len(), self.dv);
         let lambda: f32 = k.iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
         let alpha = gate.alpha(beta, lambda);
+        self.step_alpha(q, k, v, alpha, out);
+    }
 
-        // stk = S^T k
-        self.stk.iter_mut().for_each(|x| *x = 0.0);
-        for i in 0..self.dk {
-            let ki = k[i];
-            if ki == 0.0 {
-                continue;
-            }
-            let row = &self.s[i * self.dv..(i + 1) * self.dv];
-            for j in 0..self.dv {
-                self.stk[j] += ki * row[j];
-            }
-        }
-        // S += alpha * k (v - stk)^T
-        for i in 0..self.dk {
-            let aki = alpha * k[i];
-            if aki == 0.0 {
-                continue;
-            }
-            let row = &mut self.s[i * self.dv..(i + 1) * self.dv];
-            for j in 0..self.dv {
-                row[j] += aki * (v[j] - self.stk[j]);
-            }
-        }
-        // o = S'^T q
-        out.iter_mut().for_each(|x| *x = 0.0);
-        for i in 0..self.dk {
-            let qi = q[i];
-            if qi == 0.0 {
-                continue;
-            }
-            let row = &self.s[i * self.dv..(i + 1) * self.dv];
-            for j in 0..self.dv {
-                out[j] += qi * row[j];
-            }
-        }
+    /// [`step`](Self::step) with the scalar gate already resolved to alpha —
+    /// the form the model layer uses (it owns beta/lambda/gate composition).
+    pub fn step_alpha(&mut self, q: &[f32], k: &[f32], v: &[f32], alpha: f32, out: &mut [f32]) {
+        delta_step_alpha(&mut self.s, q, k, v, alpha, out, &mut self.stk, self.dk, self.dv);
     }
 
     /// Frobenius norm of the state (used by the stability experiments).
     pub fn norm(&self) -> f32 {
         self.s.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+/// One generalized delta-rule token update on a raw row-major state slice
+/// `s` (Dk x Dv): `u = v - S^T k; S += alpha k u^T; out = S'^T q`.
+///
+/// Shared by [`DeltaState`] and the CPU backend's decode path so the two
+/// never drift numerically. `stk` is caller-provided scratch of length
+/// `dv` (keeps the token hot loop allocation-free).
+#[allow(clippy::too_many_arguments)]
+pub fn delta_step_alpha(
+    s: &mut [f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    alpha: f32,
+    out: &mut [f32],
+    stk: &mut [f32],
+    dk: usize,
+    dv: usize,
+) {
+    debug_assert_eq!(s.len(), dk * dv);
+    debug_assert_eq!(q.len(), dk);
+    debug_assert_eq!(k.len(), dk);
+    debug_assert_eq!(v.len(), dv);
+    debug_assert_eq!(out.len(), dv);
+    debug_assert_eq!(stk.len(), dv);
+
+    // stk = S^T k
+    stk.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..dk {
+        let ki = k[i];
+        if ki == 0.0 {
+            continue;
+        }
+        let row = &s[i * dv..(i + 1) * dv];
+        for j in 0..dv {
+            stk[j] += ki * row[j];
+        }
+    }
+    // S += alpha * k (v - stk)^T
+    for i in 0..dk {
+        let aki = alpha * k[i];
+        if aki == 0.0 {
+            continue;
+        }
+        let row = &mut s[i * dv..(i + 1) * dv];
+        for j in 0..dv {
+            row[j] += aki * (v[j] - stk[j]);
+        }
+    }
+    // o = S'^T q
+    out.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..dk {
+        let qi = q[i];
+        if qi == 0.0 {
+            continue;
+        }
+        let row = &s[i * dv..(i + 1) * dv];
+        for j in 0..dv {
+            out[j] += qi * row[j];
+        }
     }
 }
 
@@ -122,6 +151,33 @@ pub fn sequential_delta(
     for t in 0..l {
         let (qr, kr, vr) = (q.row(t), k.row(t), v.row(t));
         st.step(gate, qr, kr, vr, beta[t], &mut out[t * dv..(t + 1) * dv]);
+    }
+    (
+        Tensor::from_vec(&[l, dv], out),
+        Tensor::from_vec(&[dk, dv], st.state().to_vec()),
+    )
+}
+
+/// [`sequential_delta`] with per-token alpha supplied directly (the model
+/// layer resolves gate/beta/lambda itself).
+pub fn sequential_delta_alpha(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    alpha: &[f32],
+) -> (Tensor, Tensor) {
+    assert_eq!(q.ndim(), 2);
+    let l = q.shape()[0];
+    let dk = q.shape()[1];
+    let dv = v.shape()[1];
+    assert_eq!(k.shape(), &[l, dk]);
+    assert_eq!(v.shape(), &[l, dv]);
+    assert_eq!(alpha.len(), l);
+
+    let mut st = DeltaState::new(dk, dv);
+    let mut out = vec![0.0f32; l * dv];
+    for t in 0..l {
+        st.step_alpha(q.row(t), k.row(t), v.row(t), alpha[t], &mut out[t * dv..(t + 1) * dv]);
     }
     (
         Tensor::from_vec(&[l, dv], out),

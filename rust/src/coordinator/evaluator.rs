@@ -46,7 +46,7 @@ where
     let mut stats = EvalStats::default();
     for _ in 0..n_batches {
         let (t, y) = next();
-        let outs = session.eval([t.to_literal()?, y.to_literal()?])?;
+        let outs = session.eval([t, y])?;
         stats.add_lm(&outs);
     }
     Ok(stats)
@@ -80,7 +80,7 @@ fn pack_items(items: &[ProbeItem], batch: usize, seq: usize) -> Vec<(HostValue, 
 pub fn probe_accuracy(session: &Session, items: &[ProbeItem]) -> Result<EvalStats> {
     let mut stats = EvalStats::default();
     for (t, y) in pack_items(items, session.batch, session.seq) {
-        let outs = session.eval([t.to_literal()?, y.to_literal()?])?;
+        let outs = session.eval([t, y])?;
         stats.add_lm(&outs);
     }
     Ok(stats)
@@ -100,8 +100,8 @@ pub fn multichoice_accuracy(session: &Session, items: &[ProbeItem]) -> Result<f6
         toks.resize(batch * seq, 0);
         tgts.resize(batch * seq, -1);
         let outs = session.eval([
-            HostValue::i32(&[batch, seq], toks).to_literal()?,
-            HostValue::i32(&[batch, seq], tgts).to_literal()?,
+            HostValue::i32(&[batch, seq], toks),
+            HostValue::i32(&[batch, seq], tgts),
         ])?;
         let mean_loss = outs[0] as f64 / (outs[1] as f64).max(1.0);
         scored.push((item.group, item.is_correct, mean_loss));

@@ -22,7 +22,7 @@ use crate::coordinator::session::Session;
 use crate::coordinator::trainer::{self, clf_data, lm_data, mad_data};
 use crate::data::mad::MadTask;
 use crate::data::mnist::{Corruption, Smnist, SEQ};
-use crate::runtime::{HostValue, Runtime};
+use crate::runtime::{Backend, HostValue};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -48,8 +48,8 @@ pub fn clf_accuracy_under(
             corruption.apply(row, &mut rng);
         }
         let outs = session.eval([
-            HostValue::F32(Tensor::from_vec(&[batch, SEQ], px)).to_literal()?,
-            HostValue::i32(&[batch], ls).to_literal()?,
+            HostValue::F32(Tensor::from_vec(&[batch, SEQ], px)),
+            HostValue::i32(&[batch], ls),
         ])?;
         correct += outs[1] as f64;
         total += batch as f64;
@@ -106,7 +106,7 @@ fn corruption_param(c: Corruption) -> f64 {
 
 /// Train one classifier and sweep all corruptions (one Fig-1 cell row).
 pub fn robustness_run(
-    rt: &Runtime,
+    backend: &dyn Backend,
     mixer: &str,
     lr: f64,
     steps: u64,
@@ -114,7 +114,7 @@ pub fn robustness_run(
     seed: u64,
 ) -> Result<RobustnessResult> {
     let family = format!("clf_{mixer}");
-    let mut session = Session::init(rt, &family, seed as u32)?;
+    let mut session = Session::init(backend, &family, seed as u32)?;
     let pf = clf_data(session.batch, seed, Corruption::None);
     let mut curve = Vec::new();
     trainer::train_lm(
@@ -157,7 +157,7 @@ pub struct LmRow {
 /// Train one LM variant and evaluate ppl + probes (one Table-1 row).
 #[allow(clippy::too_many_arguments)]
 pub fn lm_run(
-    rt: &Runtime,
+    backend: &dyn Backend,
     preset: &str,
     mixer: &str,
     steps: u64,
@@ -175,7 +175,7 @@ pub fn lm_run(
         ..RunConfig::default()
     };
     let family = cfg.family();
-    let mut session = Session::init(rt, &family, seed as u32)?;
+    let mut session = Session::init(backend, &family, seed as u32)?;
     let (pf, bpe) = lm_data(&cfg, session.batch, session.seq)?;
     let schedule = Schedule::paper_default(cfg.peak_lr, steps);
     let hist = trainer::train_lm(&mut session, schedule, steps, || pf.next(), |_| {})?;
@@ -203,7 +203,7 @@ pub fn lm_run(
 
 /// Accuracy per MAD task for one mixer.
 pub fn mad_run(
-    rt: &Runtime,
+    backend: &dyn Backend,
     mixer: &str,
     task: MadTask,
     steps: u64,
@@ -211,7 +211,7 @@ pub fn mad_run(
     seed: u64,
 ) -> Result<f64> {
     let family = format!("lm_mad_{mixer}");
-    let mut session = Session::init(rt, &family, seed as u32)?;
+    let mut session = Session::init(backend, &family, seed as u32)?;
     let pf = mad_data(task, session.batch, session.seq, seed);
     trainer::train_lm(
         &mut session,

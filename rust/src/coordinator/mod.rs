@@ -2,8 +2,8 @@
 //!
 //! * [`config`]      — typed experiment/run configuration (JSON + CLI).
 //! * [`schedule`]    — LR schedules (cosine + warmup, paper Appendix A).
-//! * [`session`]     — a model bound to its artifacts: parameter/optimizer
-//!   state threaded through the PJRT step executable.
+//! * [`session`]     — a model bound to an execution backend (pure-Rust CPU
+//!   or PJRT via the `xla` feature) through `runtime::Backend`.
 //! * [`trainer`]     — training loops (LM, classifier) with metrics,
 //!   checkpointing and prefetched data.
 //! * [`evaluator`]   — perplexity + downstream-probe + MAD accuracy evals.

@@ -3,7 +3,7 @@
 //! The serving win of (error-free) linear attention: no KV cache, just a
 //! fixed-size per-sequence state (conv caches + S per layer). This module
 //! implements a vLLM-style *continuously batched* decode loop over the
-//! fixed-B decode artifact:
+//! fixed-B decode path of any backend:
 //!
 //! * B slots, each holding one request's recurrent state rows;
 //! * every engine step executes ONE decode for all B slots;
@@ -14,14 +14,14 @@
 //!   batching), their state rows zeroed in place.
 //!
 //! State lives host-side between steps (row surgery is trivial there); the
-//! decode executable is the only compute.
+//! backend's [`Session::decode`] is the only compute.
 
 use std::collections::VecDeque;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::coordinator::session::Session;
-use crate::runtime::{Executable, HostValue, Runtime};
+use crate::runtime::HostValue;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -77,7 +77,6 @@ impl ServerStats {
 /// The batched decode engine.
 pub struct Server<'a> {
     session: &'a Session,
-    decode: std::rc::Rc<Executable>,
     /// Host-side recurrent state, one HostValue per state tensor (B, ...).
     state: Vec<HostValue>,
     slots: Vec<Option<Slot>>,
@@ -90,29 +89,16 @@ pub struct Server<'a> {
 }
 
 impl<'a> Server<'a> {
-    /// Build from a trained session + its decode artifact.
-    pub fn new(rt: &Runtime, session: &'a Session, seed: u64) -> Result<Self> {
-        let name = format!("{}_decode", session.family());
-        let decode = rt.load(&name)?;
-        let spec = decode.spec();
-        let batch = spec
-            .inputs
-            .last()
-            .map(|t| t.shape.first().copied().unwrap_or(0))
-            .unwrap_or(0);
+    /// Build from a trained session with a decode path.
+    pub fn new(session: &'a Session, seed: u64) -> Result<Self> {
+        let batch = session.decode_batch()?;
         if batch == 0 {
-            bail!("{name}: cannot infer decode batch");
+            bail!("{}: zero decode batch", session.family());
         }
-        let vocab = spec.outputs[0].shape.last().copied().unwrap_or(0);
-        // State inputs sit between params and the trailing token input.
-        let n_state = spec.state_names.len();
-        let state_specs =
-            &spec.inputs[spec.inputs.len() - 1 - n_state..spec.inputs.len() - 1];
-        let state: Vec<HostValue> =
-            state_specs.iter().map(HostValue::zeros_like_spec).collect();
+        let vocab = session.vocab()?;
+        let state = session.decode_state()?;
         Ok(Server {
             session,
-            decode,
             state,
             slots: vec![None; batch],
             queue: VecDeque::new(),
@@ -200,19 +186,9 @@ impl<'a> Server<'a> {
             };
         }
 
-        // Execute decode: params ++ state ++ token.
-        let mut extra: Vec<xla::Literal> =
-            self.state.iter().map(|hv| hv.to_literal()).collect::<Result<_>>()?;
-        extra.push(HostValue::i32(&[self.batch], tokens).to_literal()?);
-        let outs = self.session.run_aux(&self.decode, &extra)?;
-        let spec = self.decode.spec();
-        let logits = HostValue::from_literal(&outs[0], &spec.outputs[0])?
-            .into_f32()
-            .map_err(|e| anyhow!("logits: {e}"))?;
-        // Refresh state from outputs [1..].
-        for (i, lit) in outs.iter().enumerate().skip(1) {
-            self.state[i - 1] = HostValue::from_literal(lit, &spec.outputs[i])?;
-        }
+        // Execute one batched decode over the host-resident state.
+        let (logits, new_state) = self.session.decode(&self.state, &tokens)?;
+        self.state = new_state;
 
         // Advance slots.
         self.stats.engine_steps += 1;
@@ -287,5 +263,29 @@ mod tests {
             .filter(|_| Server::sample(&mut rng, &logits, 1.0) == 1)
             .count();
         assert!(hits > 95, "peaked logits should dominate, got {hits}");
+    }
+
+    #[test]
+    fn server_serves_on_the_cpu_backend() {
+        use crate::runtime::CpuBackend;
+        let backend = CpuBackend::new();
+        let session =
+            crate::coordinator::session::Session::init(&backend, "lm_tiny_efla", 5).unwrap();
+        let mut server = Server::new(&session, 99).unwrap();
+        let mut rng = Rng::new(1);
+        // more requests than slots: exercises continuous batching
+        let n_req = server.batch_size() as u64 + 2;
+        for id in 0..n_req {
+            let prompt: Vec<i32> =
+                (0..rng.range(3, 8)).map(|_| rng.below(256) as i32).collect();
+            server.submit(GenRequest { id, prompt, max_new: 3, temperature: 0.0 });
+        }
+        let results = server.run_to_completion().unwrap();
+        assert_eq!(results.len(), n_req as usize);
+        for r in &results {
+            assert_eq!(r.tokens.len(), 3);
+            assert!(r.tokens.iter().all(|&t| (0..256).contains(&t)));
+        }
+        assert_eq!(server.stats.completed, n_req);
     }
 }

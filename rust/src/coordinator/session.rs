@@ -1,218 +1,98 @@
-//! A model session: parameters + optimizer state threaded through the AOT
-//! step executable as raw literals (never converted to host vectors on the
-//! hot path).
+//! A model session: thin, backend-agnostic wrapper over
+//! [`crate::runtime::ModelSession`].
+//!
+//! The coordinator (trainer / evaluator / server / experiments) only ever
+//! sees this type; whether the math runs through the pure-Rust CPU backend
+//! or a PJRT executable is decided once, when the backend is opened.
 
-use std::rc::Rc;
+use anyhow::Result;
 
-use anyhow::{anyhow, bail, Result};
-
-use crate::runtime::{Executable, HostValue, Runtime};
+use crate::runtime::{Backend, HostValue, ModelSession};
 use crate::tensor::Tensor;
 
-/// Scalar training metrics returned by one step.
-#[derive(Clone, Copy, Debug)]
-pub struct StepMetrics {
-    pub loss: f32,
-    pub grad_norm: f32,
-}
+pub use crate::runtime::StepMetrics;
 
-/// Parameters + AdamW moments bound to step/eval executables.
+/// Parameters + optimizer state bound to a backend's step/eval/decode.
 pub struct Session {
-    family: String,
-    step_exe: Rc<Executable>,
-    eval_exe: Option<Rc<Executable>>,
-    /// Flattened params, then m, then v — exactly the step graph's prefix.
-    params: Vec<xla::Literal>,
-    m: Vec<xla::Literal>,
-    v: Vec<xla::Literal>,
-    n_params: usize,
-    step_count: u64,
+    inner: Box<dyn ModelSession>,
     pub batch: usize,
     pub seq: usize,
 }
 
 impl Session {
-    /// Initialize from artifacts: runs `<family>_init` with `seed`.
-    pub fn init(rt: &Runtime, family: &str, seed: u32) -> Result<Self> {
-        let init_exe = rt.load(&format!("{family}_init"))?;
-        let step_exe = rt.load(&format!("{family}_step"))?;
-        let eval_exe = match rt.has(&format!("{family}_eval")) {
-            true => Some(rt.load(&format!("{family}_eval"))?),
-            false => None,
-        };
-        let seed_lit = HostValue::scalar_u32(seed).to_literal()?;
-        let params = init_exe.run_raw(&[seed_lit])?;
-        let n_params = params.len();
-
-        // Zero AdamW moments shaped like the step graph's m./v. inputs.
-        let spec = step_exe.spec();
-        let expected = 3 * n_params + 4;
-        if spec.inputs.len() != expected {
-            bail!(
-                "{family}_step: expected {expected} inputs (3x{n_params} state + step/tokens/targets/lr), manifest has {}",
-                spec.inputs.len()
-            );
-        }
-        let zeros = |range: std::ops::Range<usize>| -> Result<Vec<xla::Literal>> {
-            range
-                .map(|i| HostValue::zeros_like_spec(&spec.inputs[i]).to_literal())
-                .collect()
-        };
-        let m = zeros(n_params..2 * n_params)?;
-        let v = zeros(2 * n_params..3 * n_params)?;
-
-        Ok(Session {
-            family: family.to_string(),
-            batch: spec.batch,
-            seq: spec.seq,
-            step_exe,
-            eval_exe,
-            params,
-            m,
-            v,
-            n_params,
-            step_count: 0,
-        })
+    /// Initialize a family (e.g. `lm_tiny_efla`) on a backend with `seed`.
+    pub fn init(backend: &dyn Backend, family: &str, seed: u32) -> Result<Self> {
+        let inner = backend.open_session(family, seed)?;
+        Ok(Session { batch: inner.batch(), seq: inner.seq(), inner })
     }
 
     pub fn family(&self) -> &str {
-        &self.family
+        self.inner.family()
     }
 
     pub fn steps_done(&self) -> u64 {
-        self.step_count
+        self.inner.steps_done()
     }
 
     pub fn n_params_tensors(&self) -> usize {
-        self.n_params
+        self.inner.n_param_tensors()
     }
 
-    /// Total parameter element count (from the manifest).
+    /// Total parameter element count.
     pub fn param_elems(&self) -> usize {
-        self.step_exe.spec().param_elems()
+        self.inner.param_elems()
     }
 
-    /// One optimizer step. `data` are the two data literals of the step
-    /// graph (tokens/targets for LM+MAD, pixels/labels for the classifier).
-    pub fn step(&mut self, data: [xla::Literal; 2], lr: f32) -> Result<StepMetrics> {
-        self.step_count += 1;
-        let mut inputs: Vec<&xla::Literal> =
-            Vec::with_capacity(3 * self.n_params + 4);
-        inputs.extend(self.params.iter());
-        inputs.extend(self.m.iter());
-        inputs.extend(self.v.iter());
-        let step_lit = HostValue::scalar_f32(self.step_count as f32).to_literal()?;
-        let lr_lit = HostValue::scalar_f32(lr).to_literal()?;
+    /// One optimizer step. `data` are the two data slots of the step graph
+    /// (tokens/targets for LM+MAD, pixels/labels for the classifier).
+    pub fn step(&mut self, data: [HostValue; 2], lr: f32) -> Result<StepMetrics> {
         let [d0, d1] = &data;
-        inputs.push(&step_lit);
-        inputs.push(d0);
-        inputs.push(d1);
-        inputs.push(&lr_lit);
-
-        // Borrow-based execute avoids cloning literals.
-        let outs = self.step_exe.run_raw_borrowed(&inputs)?;
-        let n = self.n_params;
-        if outs.len() != 3 * n + 2 {
-            bail!("step returned {} outputs, expected {}", outs.len(), 3 * n + 2);
-        }
-        let mut it = outs.into_iter();
-        self.params = (&mut it).take(n).collect();
-        self.m = (&mut it).take(n).collect();
-        self.v = (&mut it).take(n).collect();
-        let loss = it
-            .next()
-            .ok_or_else(|| anyhow!("missing loss"))?
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow!("loss: {e:?}"))?;
-        let gnorm = it
-            .next()
-            .ok_or_else(|| anyhow!("missing gnorm"))?
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow!("gnorm: {e:?}"))?;
-        Ok(StepMetrics { loss, grad_norm: gnorm })
+        self.inner.step(d0, d1, lr)
     }
 
     /// Run the eval graph on one batch; returns the raw scalar outputs
     /// (LM: loss_sum/count/correct; classifier: loss_sum/correct).
-    pub fn eval(&self, data: [xla::Literal; 2]) -> Result<Vec<f32>> {
-        let exe = self
-            .eval_exe
-            .as_ref()
-            .ok_or_else(|| anyhow!("{}: no eval artifact", self.family))?;
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.n_params + 2);
-        inputs.extend(self.params.iter());
+    pub fn eval(&self, data: [HostValue; 2]) -> Result<Vec<f32>> {
         let [d0, d1] = &data;
-        inputs.push(d0);
-        inputs.push(d1);
-        let outs = exe.run_raw_borrowed(&inputs)?;
-        outs.into_iter()
-            .map(|l| l.get_first_element::<f32>().map_err(|e| anyhow!("eval out: {e:?}")))
-            .collect()
-    }
-
-    /// Run an auxiliary graph of this family (e.g. `logits_last`, `prefill`)
-    /// with the current params followed by `extra` inputs.
-    pub fn run_aux(
-        &self,
-        exe: &Executable,
-        extra: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let mut inputs: Vec<&xla::Literal> =
-            Vec::with_capacity(self.n_params + extra.len());
-        inputs.extend(self.params.iter());
-        inputs.extend(extra.iter());
-        exe.run_raw_borrowed(&inputs)
+        self.inner.eval(d0, d1)
     }
 
     /// Export parameters to host tensors (checkpointing / inspection).
     pub fn export_params(&self) -> Result<Vec<Tensor>> {
-        let spec = self.step_exe.spec();
-        self.params
-            .iter()
-            .enumerate()
-            .map(|(i, lit)| {
-                Ok(HostValue::from_literal(lit, &spec.inputs[i])?
-                    .into_f32()
-                    .expect("params are f32"))
-            })
-            .collect()
+        self.inner.export_params()
     }
 
     /// Export full optimizer state (params, m, v) for checkpointing.
     pub fn export_state(&self) -> Result<Vec<Tensor>> {
-        let spec = self.step_exe.spec();
-        let mut out = Vec::with_capacity(3 * self.n_params);
-        for (off, group) in [(0usize, &self.params), (self.n_params, &self.m), (2 * self.n_params, &self.v)]
-        {
-            for (i, lit) in group.iter().enumerate() {
-                out.push(
-                    HostValue::from_literal(lit, &spec.inputs[off + i])?
-                        .into_f32()
-                        .expect("state is f32"),
-                );
-            }
-        }
-        Ok(out)
+        self.inner.export_state()
     }
 
-    /// Restore state exported by [`export_state`] (sets step counter too).
+    /// Restore state exported by [`export_state`](Self::export_state).
     pub fn import_state(&mut self, tensors: &[Tensor], step_count: u64) -> Result<()> {
-        if tensors.len() != 3 * self.n_params {
-            bail!(
-                "checkpoint has {} tensors, session needs {}",
-                tensors.len(),
-                3 * self.n_params
-            );
-        }
-        let lits: Vec<xla::Literal> = tensors
-            .iter()
-            .map(|t| HostValue::F32(t.clone()).to_literal())
-            .collect::<Result<_>>()?;
-        let mut it = lits.into_iter();
-        self.params = (&mut it).take(self.n_params).collect();
-        self.m = (&mut it).take(self.n_params).collect();
-        self.v = (&mut it).take(self.n_params).collect();
-        self.step_count = step_count;
-        Ok(())
+        self.inner.import_state(tensors, step_count)
+    }
+
+    // ---- recurrent decode (serving) path -----------------------------
+
+    pub fn decode_batch(&self) -> Result<usize> {
+        self.inner.decode_batch()
+    }
+
+    pub fn vocab(&self) -> Result<usize> {
+        self.inner.vocab()
+    }
+
+    /// Zeroed per-slot recurrent state.
+    pub fn decode_state(&self) -> Result<Vec<HostValue>> {
+        self.inner.decode_state()
+    }
+
+    /// One batched decode step: logits (decode_batch, vocab) + new state.
+    pub fn decode(
+        &self,
+        state: &[HostValue],
+        tokens: &[i32],
+    ) -> Result<(Tensor, Vec<HostValue>)> {
+        self.inner.decode(state, tokens)
     }
 }

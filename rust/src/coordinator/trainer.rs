@@ -16,7 +16,7 @@ use crate::data::loader::{Prefetcher, TokenStream};
 use crate::data::mad::{MadGen, MadTask};
 use crate::data::mnist::{Corruption, Smnist};
 use crate::data::tokenizer::Bpe;
-use crate::runtime::{HostValue, Runtime};
+use crate::runtime::{Backend, HostValue};
 use crate::util::json::Json;
 use crate::util::logging::Meter;
 use crate::util::rng::Rng;
@@ -110,8 +110,7 @@ where
     for _ in 0..steps {
         let (tokens, targets) = next_batch();
         let lr = schedule.lr(session.steps_done() + 1);
-        let metrics =
-            session.step([tokens.to_literal()?, targets.to_literal()?], lr as f32)?;
+        let metrics = session.step([tokens, targets], lr as f32)?;
         let point = CurvePoint {
             step: session.steps_done(),
             loss: metrics.loss,
@@ -218,9 +217,9 @@ pub fn clf_data(
 
 /// End-to-end run driver used by the launcher binary: builds the session and
 /// pipeline for `cfg`, trains, evaluates, writes history + checkpoints.
-pub fn run(rt: &Runtime, cfg: &RunConfig) -> Result<History> {
+pub fn run(backend: &dyn Backend, cfg: &RunConfig) -> Result<History> {
     let family = cfg.family();
-    let mut session = Session::init(rt, &family, cfg.seed as u32)?;
+    let mut session = Session::init(backend, &family, cfg.seed as u32)?;
     log::info!(
         "session {family}: {} param tensors, {:.2}M elements, batch {} x seq {}",
         session.n_params_tensors(),
@@ -265,7 +264,7 @@ pub fn run(rt: &Runtime, cfg: &RunConfig) -> Result<History> {
         let mut count = 0f64;
         for _ in 0..cfg.eval_batches {
             let (t, y) = eval_pf.next();
-            let outs = session.eval([t.to_literal()?, y.to_literal()?])?;
+            let outs = session.eval([t, y])?;
             loss_sum += outs[0] as f64;
             count += outs[1] as f64;
         }

@@ -15,10 +15,25 @@
 //! * [`corrupt_scale`]     — OOD intensity scaling by a factor;
 //! * [`corrupt_noise`]     — additive Gaussian noise, sigma-parameterized.
 
+use std::fmt;
+
 use crate::util::rng::Rng;
 
 pub const SIDE: usize = 28;
 pub const SEQ: usize = SIDE * SIDE;
+
+/// Typed error for a label outside 0..=9 — surfaced (instead of a panic)
+/// so a corrupt data file cannot abort a training run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DigitOutOfRange(pub u8);
+
+impl fmt::Display for DigitOutOfRange {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "digit {} out of range (expected 0..=9)", self.0)
+    }
+}
+
+impl std::error::Error for DigitOutOfRange {}
 
 /// One rendered example.
 #[derive(Clone, Debug)]
@@ -29,11 +44,11 @@ pub struct Example {
 }
 
 /// Digit skeletons on a [0,1]^2 canvas: list of polylines.
-fn skeleton(digit: u8) -> Vec<Vec<(f32, f32)>> {
+fn skeleton(digit: u8) -> Result<Vec<Vec<(f32, f32)>>, DigitOutOfRange> {
     // Key anchor points (x right, y down), seven-segment-ish with curves
     // approximated by extra vertices.
     let p = |x: f32, y: f32| (x, y);
-    match digit {
+    Ok(match digit {
         0 => vec![vec![
             p(0.5, 0.12), p(0.78, 0.3), p(0.78, 0.7), p(0.5, 0.88),
             p(0.22, 0.7), p(0.22, 0.3), p(0.5, 0.12),
@@ -67,8 +82,8 @@ fn skeleton(digit: u8) -> Vec<Vec<(f32, f32)>> {
             p(0.7, 0.45), p(0.3, 0.45), p(0.28, 0.2), p(0.55, 0.12),
             p(0.72, 0.25), p(0.7, 0.45), p(0.62, 0.88),
         ]],
-        _ => panic!("digit out of range"),
-    }
+        other => return Err(DigitOutOfRange(other)),
+    })
 }
 
 /// Procedural sMNIST generator.
@@ -84,12 +99,18 @@ impl Smnist {
     /// Render one random example.
     pub fn sample(&mut self) -> Example {
         let label = self.rng.below(10) as u8;
-        let pixels = self.render(label);
+        let pixels = self
+            .render(label)
+            .expect("labels drawn below 10 are always renderable");
         Example { pixels, label }
     }
 
     /// Render a specific digit with randomized style.
-    pub fn render(&mut self, digit: u8) -> Vec<f32> {
+    ///
+    /// Errors (instead of panicking) on a digit outside 0..=9, so callers
+    /// feeding labels from external files can reject bad records cleanly.
+    pub fn render(&mut self, digit: u8) -> Result<Vec<f32>, DigitOutOfRange> {
+        let strokes = skeleton(digit)?;
         let rng = &mut self.rng;
         // Per-sample style jitter.
         let scale = 0.85 + 0.25 * rng.f32();
@@ -102,7 +123,7 @@ impl Smnist {
         let intensity = 0.85 + 0.15 * rng.f32();
 
         let mut img = vec![0.0f32; SEQ];
-        for line in skeleton(digit) {
+        for line in strokes {
             // Transform vertices.
             let pts: Vec<(f32, f32)> = line
                 .iter()
@@ -142,7 +163,7 @@ impl Smnist {
                 }
             }
         }
-        img
+        Ok(img)
     }
 
     /// A batch of (pixels, labels), flattened pixels row-major (B, 784).
@@ -223,10 +244,20 @@ mod tests {
     use super::*;
 
     #[test]
+    fn render_rejects_out_of_range_digits() {
+        let mut g = Smnist::new(9);
+        for bad in [10u8, 11, 255] {
+            assert_eq!(g.render(bad).unwrap_err(), DigitOutOfRange(bad));
+        }
+        let msg = format!("{}", DigitOutOfRange(12));
+        assert!(msg.contains("12"), "{msg}");
+    }
+
+    #[test]
     fn renders_all_digits_nonempty() {
         let mut g = Smnist::new(1);
         for d in 0..10u8 {
-            let img = g.render(d);
+            let img = g.render(d).unwrap();
             let on = img.iter().filter(|&&x| x > 0.2).count();
             assert!(on > 20, "digit {d} has only {on} lit pixels");
             assert!(on < SEQ / 2, "digit {d} fills {on} pixels — too dense");
@@ -241,7 +272,7 @@ mod tests {
         let mean_img = |g: &mut Smnist, d: u8| {
             let mut acc = vec![0.0f32; SEQ];
             for _ in 0..20 {
-                for (a, p) in acc.iter_mut().zip(g.render(d)) {
+                for (a, p) in acc.iter_mut().zip(g.render(d).unwrap()) {
                     *a += p / 20.0;
                 }
             }

@@ -9,12 +9,62 @@
 //!   Pallas kernel; the integrator family (DeltaNet/RK-N/EFLA) differs only
 //!   in a scalar gate.
 //! * **L2** `python/compile/` — JAX transformer LM + sMNIST classifier with
-//!   fused AdamW train steps, AOT-lowered to HLO text once.
-//! * **L3** this crate — PJRT runtime, data pipeline, training/eval/serving
-//!   coordinators, experiment harness. Python never runs at runtime.
+//!   fused AdamW train steps, AOT-lowered to HLO text once (only needed for
+//!   the optional PJRT backend).
+//! * **L3** this crate — execution backends, data pipeline,
+//!   training/eval/serving coordinators, experiment harness. Python never
+//!   runs at runtime.
 //!
-//! Entry points: the `efla` launcher binary (`rust/src/main.rs`), the
-//! examples in `examples/`, and the per-table/figure benches in `benches/`.
+//! ## Workspace layout
+//!
+//! The Cargo workspace lives at the repository root; this package is
+//! `rust/` with the library (`efla`), the `efla` launcher binary
+//! (`rust/src/main.rs`), the examples under `../examples/`, and the
+//! per-table/figure benches under `../benches/` (all wired as explicit
+//! `[[example]]`/`[[bench]]` targets in `rust/Cargo.toml`).
+//!
+//! ## Execution backends
+//!
+//! Everything above [`runtime`] is written against the
+//! [`runtime::Backend`] / [`runtime::ModelSession`] traits:
+//!
+//! * **CPU backend** ([`runtime::CpuBackend`]) — always available, pure
+//!   Rust: model forward/backward (hand-written reverse mode through the
+//!   delta-rule recurrence), AdamW, eval statistics and the O(1)-state
+//!   decode, all on top of [`tensor`] + [`attention`]. Needs no artifacts:
+//!   families like `lm_tiny_efla` are built from their names using the same
+//!   preset table `python/compile/model.py` uses.
+//! * **PJRT backend** (`runtime::pjrt`, feature `xla`, off by default) —
+//!   executes the AOT HLO-text artifacts through a vendored `xla` crate.
+//!   With the feature disabled the PJRT code is compiled out entirely;
+//!   enabling it requires adding the vendored crate as a path dependency.
+//!
+//! [`runtime::open_backend`] picks PJRT when the feature is on and
+//! artifacts are present, else the CPU backend.
+//!
+//! ## Verify
+//!
+//! The tier-1 check is, from the repository root:
+//!
+//! ```text
+//! cargo build --release && cargo test -q
+//! ```
+//!
+//! which uses default features (CPU backend only — no `xla` crate, no
+//! artifacts required). An end-to-end run:
+//!
+//! ```text
+//! cargo run --release -- train --task lm --preset tiny --mixer efla --steps 20
+//! ```
+//!
+//! Entry points: the `efla` launcher binary, the examples in `examples/`,
+//! and the per-table/figure benches in `benches/`.
+
+// Numeric kernel code: index loops over flat row-major buffers are the
+// idiom here (clearer next to the math, and often borrow-friendlier than
+// iterator chains).
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
 
 pub mod attention;
 pub mod coordinator;

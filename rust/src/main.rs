@@ -2,14 +2,19 @@
 //!
 //! Subcommands:
 //!   train   — train a model per a RunConfig (JSON file + flag overrides)
-//!   eval    — evaluate a checkpoint (ppl + probes)
 //!   serve   — run the batched decode demo on a (briefly trained) model
-//!   info    — list artifacts in the manifest
+//!   info    — list model families the active backend can build
+//!
+//! The execution backend is chosen automatically: PJRT when built with
+//! `--features xla` and an artifact directory is present, else the
+//! always-available pure-Rust CPU backend.
 //!
 //! Examples:
 //!   efla train --task lm --preset tiny --mixer efla --steps 100
 //!   efla train --config runs/table1_small_efla.json
 //!   efla info
+//!
+//! Exit codes: 0 ok, 1 runtime failure, 2 command-line usage error.
 
 use std::path::{Path, PathBuf};
 
@@ -19,8 +24,8 @@ use efla::coordinator::config::{RunConfig, Task};
 use efla::coordinator::server::{GenRequest, Server};
 use efla::coordinator::session::Session;
 use efla::coordinator::trainer;
-use efla::runtime::Runtime;
-use efla::util::cli::Args;
+use efla::runtime::open_backend;
+use efla::util::cli::{Args, CliError};
 use efla::util::logging;
 
 fn main() {
@@ -38,11 +43,22 @@ fn main() {
         }
         other => {
             print_help();
-            Err(anyhow::anyhow!("unknown command '{other}'"))
+            Err(CliError::new(format!("unknown command '{other}'")).into())
         }
     };
     if let Err(e) = result {
-        log::error!("{e:#}");
+        // --help requests print to stdout and succeed; usage errors get a
+        // clean one-liner and exit code 2 (no backtrace); runtime failures
+        // render the full anyhow chain and exit 1.
+        if let Some(cli) = e.downcast_ref::<CliError>() {
+            if cli.is_help {
+                println!("{cli}");
+                std::process::exit(0);
+            }
+            eprintln!("{cli}");
+            std::process::exit(2);
+        }
+        eprintln!("error: {e:#}");
         std::process::exit(1);
     }
 }
@@ -53,7 +69,7 @@ fn print_help() {
          Commands:\n  \
          train   train a model (see `efla train --help`)\n  \
          serve   batched decode demo (see `efla serve --help`)\n  \
-         info    list available artifacts\n"
+         info    list model families the backend can build\n"
     );
 }
 
@@ -68,36 +84,35 @@ fn common_args(program: &str, about: &str) -> Args {
         .opt("peak-lr", "0.0003", "peak learning rate")
         .opt("eval-batches", "8", "eval batches at the end")
         .opt("corpus-bytes", "2000000", "synthetic corpus size (LM)")
-        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("artifacts", "artifacts", "artifact directory (PJRT backend)")
         .opt("out", "runs", "output directory")
 }
 
 fn build_config(p: &efla::util::cli::Parsed) -> Result<RunConfig> {
-    let mut cfg = if p.get("config").is_empty() {
+    let mut cfg = if p.get("config")?.is_empty() {
         RunConfig::default()
     } else {
-        RunConfig::from_file(Path::new(p.get("config")))?
+        RunConfig::from_file(Path::new(p.get("config")?))?
     };
-    cfg.task = Task::parse(p.get("task"))?;
-    cfg.preset = p.get("preset").to_string();
-    cfg.mixer = p.get("mixer").to_string();
-    cfg.steps = p.u64("steps");
-    cfg.seed = p.u64("seed");
-    cfg.peak_lr = p.f64("peak-lr");
-    cfg.eval_batches = p.usize("eval-batches");
-    cfg.corpus_bytes = p.usize("corpus-bytes");
-    cfg.artifact_dir = PathBuf::from(p.get("artifacts"));
-    cfg.out_dir = PathBuf::from(p.get("out"));
+    cfg.task = Task::parse(p.get("task")?).map_err(|e| CliError::new(e.to_string()))?;
+    cfg.preset = p.get("preset")?.to_string();
+    cfg.mixer = p.get("mixer")?.to_string();
+    cfg.steps = p.u64("steps")?;
+    cfg.seed = p.u64("seed")?;
+    cfg.peak_lr = p.f64("peak-lr")?;
+    cfg.eval_batches = p.usize("eval-batches")?;
+    cfg.corpus_bytes = p.usize("corpus-bytes")?;
+    cfg.artifact_dir = PathBuf::from(p.get("artifacts")?);
+    cfg.out_dir = PathBuf::from(p.get("out")?);
     Ok(cfg)
 }
 
 fn cmd_train(argv: &[String]) -> Result<()> {
-    let p = common_args("efla train", "train a model from AOT artifacts")
-        .parse_from(argv)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let p = common_args("efla train", "train a model").parse_from(argv)?;
     let cfg = build_config(&p)?;
-    let rt = Runtime::open(&cfg.artifact_dir)?;
-    let hist = trainer::run(&rt, &cfg)?;
+    let backend = open_backend(&cfg.artifact_dir)?;
+    log::info!("backend: {}", backend.name());
+    let hist = trainer::run(backend.as_ref(), &cfg)?;
     log::info!(
         "done: {} steps, final loss {:.4} ({:.1}s, {:.0} tok/s)",
         cfg.steps,
@@ -113,15 +128,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("requests", "16", "number of demo requests")
         .opt("max-new", "32", "tokens to generate per request")
         .opt("temperature", "0.8", "sampling temperature (0 = greedy)")
-        .parse_from(argv)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .parse_from(argv)?;
     let cfg = build_config(&p)?;
     if cfg.task != Task::Lm {
         bail!("serve only supports --task lm");
     }
-    let rt = Runtime::open(&cfg.artifact_dir)?;
+    let backend = open_backend(&cfg.artifact_dir)?;
+    log::info!("backend: {}", backend.name());
     let family = cfg.family();
-    let mut session = Session::init(&rt, &family, cfg.seed as u32)?;
+    let mut session = Session::init(backend.as_ref(), &family, cfg.seed as u32)?;
 
     // Briefly train so generations aren't pure noise.
     if cfg.steps > 0 {
@@ -131,10 +146,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         trainer::train_lm(&mut session, schedule, cfg.steps, || pf.next(), |_| {})?;
     }
 
-    let mut server = Server::new(&rt, &session, cfg.seed)?;
-    let n_req = p.usize("requests");
-    let max_new = p.usize("max-new");
-    let temp = p.f32("temperature");
+    let mut server = Server::new(&session, cfg.seed)?;
+    let n_req = p.usize("requests")?;
+    let max_new = p.usize("max-new")?;
+    let temp = p.f32("temperature")?;
     let mut rng = efla::util::rng::Rng::new(cfg.seed);
     for id in 0..n_req as u64 {
         let plen = rng.range(4, 24);
@@ -158,22 +173,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_info(argv: &[String]) -> Result<()> {
-    let p = Args::new("efla info", "list artifacts")
-        .opt("artifacts", "artifacts", "artifact directory")
-        .parse_from(argv)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let rt = Runtime::open(Path::new(p.get("artifacts")))?;
-    println!("{:<34} {:>8} {:>6} {:>6}  graph", "artifact", "params", "batch", "seq");
-    for name in rt.manifest().names() {
-        let a = rt.manifest().get(name).unwrap();
-        println!(
-            "{:<34} {:>8} {:>6} {:>6}  {}",
-            name,
-            a.param_elems(),
-            a.batch,
-            a.seq,
-            a.graph
-        );
+    let p = Args::new("efla info", "list model families")
+        .opt("artifacts", "artifacts", "artifact directory (PJRT backend)")
+        .parse_from(argv)?;
+    let backend = open_backend(Path::new(p.get("artifacts")?))?;
+    println!("backend: {}", backend.name());
+    for line in backend.describe() {
+        println!("{line}");
     }
     Ok(())
 }

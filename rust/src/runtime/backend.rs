@@ -1,0 +1,103 @@
+//! The execution-backend abstraction.
+//!
+//! The EFLA/DeltaNet math is backend-agnostic, so the coordinator is too:
+//! everything above this layer (trainer, evaluator, server, experiments,
+//! the `efla` binary) talks to a [`Backend`] that opens [`ModelSession`]s
+//! for artifact *families* (`lm_tiny_efla`, `clf_deltanet`, ...), and a
+//! session exposes the five operations the system needs:
+//!
+//! * `step`  — one fused fwd+bwd+AdamW optimizer step;
+//! * `eval`  — forward-only loss/accuracy statistics;
+//! * `decode` — one-token recurrent decode over host-resident state
+//!   (the O(1)-state serving path);
+//! * `export_state` / `import_state` — checkpointing.
+//!
+//! Implementations:
+//! * [`crate::runtime::cpu::CpuBackend`] — always available, pure Rust on
+//!   top of `tensor::` + `attention::`;
+//! * `crate::runtime::pjrt::Runtime` — PJRT/XLA over AOT HLO-text
+//!   artifacts, behind the off-by-default `xla` feature.
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+use super::value::HostValue;
+
+/// Scalar training metrics returned by one optimizer step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub grad_norm: f32,
+}
+
+/// An execution backend: a factory of model sessions.
+pub trait Backend {
+    /// Short backend name for logs ("cpu", "pjrt").
+    fn name(&self) -> &str;
+
+    /// True if this backend can build the family (e.g. `lm_tiny_efla`).
+    fn has_family(&self, family: &str) -> bool;
+
+    /// Human-readable list of available families / artifacts (`efla info`).
+    fn describe(&self) -> Vec<String>;
+
+    /// Initialize a model session (seeded parameter init).
+    fn open_session(&self, family: &str, seed: u32) -> Result<Box<dyn ModelSession>>;
+}
+
+/// A model bound to a backend: parameters + optimizer state + the graphs.
+pub trait ModelSession {
+    fn family(&self) -> &str;
+
+    /// Training batch dimensions.
+    fn batch(&self) -> usize;
+    fn seq(&self) -> usize;
+
+    fn n_param_tensors(&self) -> usize;
+
+    /// Total parameter element count.
+    fn param_elems(&self) -> usize;
+
+    fn steps_done(&self) -> u64;
+
+    /// One optimizer step. `d0`/`d1` are the two data slots of the step
+    /// graph (tokens/targets for LM+MAD, pixels/labels for the classifier).
+    fn step(&mut self, d0: &HostValue, d1: &HostValue, lr: f32) -> Result<StepMetrics>;
+
+    /// Forward-only eval statistics on one batch: LM returns
+    /// `[loss_sum, token_count, correct]`, the classifier
+    /// `[loss_sum, correct]`.
+    fn eval(&self, d0: &HostValue, d1: &HostValue) -> Result<Vec<f32>>;
+
+    /// Export parameters to host tensors (inspection).
+    fn export_params(&self) -> Result<Vec<Tensor>>;
+
+    /// Export full optimizer state (params, m, v) for checkpointing.
+    fn export_state(&self) -> Result<Vec<Tensor>>;
+
+    /// Restore state exported by `export_state` (sets step counter too).
+    fn import_state(&mut self, tensors: &[Tensor], step: u64) -> Result<()>;
+
+    // ---- recurrent decode (serving) path -----------------------------
+
+    /// Decode slot count (fixed batch of the decode graph).
+    fn decode_batch(&self) -> Result<usize>;
+
+    /// Vocabulary size of the decode logits.
+    fn vocab(&self) -> Result<usize>;
+
+    /// Zeroed per-slot recurrent state (one `HostValue` per state tensor,
+    /// each shaped `(decode_batch, ...)` so slot rows can be cleared
+    /// host-side between requests).
+    fn decode_state(&self) -> Result<Vec<HostValue>>;
+
+    /// One batched decode step: feed one token per slot, return logits
+    /// `(decode_batch, vocab)` and the advanced state (same shapes as
+    /// `state`).
+    fn decode(
+        &self,
+        state: &[HostValue],
+        tokens: &[i32],
+    ) -> Result<(Tensor, Vec<HostValue>)>;
+}

@@ -1,0 +1,227 @@
+//! CPU-backend model configurations: artifact-family name -> architecture.
+//!
+//! Mirrors `python/compile/model.py` PRESETS (+ the "mad" preset that
+//! `aot.py` registers) and `python/compile/classifier.py` ClassifierConfig,
+//! including the batch/seq pairs `aot.py` bakes into each artifact family —
+//! so a family trains with the same shapes on either backend.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Short-conv kernel size (paper Appendix A).
+pub const CONV_K: usize = 4;
+
+/// Classifier output classes.
+pub const N_CLASSES: usize = 10;
+
+/// Token-mixer variant (paper §5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mixer {
+    /// Unnormalized keys, exact gate alpha = (1 - e^{-beta*lam}) / lam.
+    Efla,
+    /// L2-normalized q/k, alpha = beta = sigmoid(w_b x) (Euler gate).
+    DeltaNet,
+    /// EFLA with learnable per-head decay: beta~ = softplus(a) * beta.
+    EflaAdaptive,
+    /// EFLA with beta = softplus(w_b x) instead of sigmoid.
+    EflaLoose,
+}
+
+impl Mixer {
+    pub fn parse(s: &str) -> Result<Mixer> {
+        Ok(match s {
+            "efla" => Mixer::Efla,
+            "deltanet" => Mixer::DeltaNet,
+            "efla_adaptive" => Mixer::EflaAdaptive,
+            "efla_loose" => Mixer::EflaLoose,
+            other => bail!("unknown mixer '{other}' (efla|deltanet|efla_adaptive|efla_loose)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Mixer::Efla => "efla",
+            Mixer::DeltaNet => "deltanet",
+            Mixer::EflaAdaptive => "efla_adaptive",
+            Mixer::EflaLoose => "efla_loose",
+        }
+    }
+
+    pub const ALL: [Mixer; 4] =
+        [Mixer::Efla, Mixer::DeltaNet, Mixer::EflaAdaptive, Mixer::EflaLoose];
+}
+
+/// Which head the model carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CpuTask {
+    /// Next-token LM (also used by the MAD suite).
+    Lm,
+    /// sMNIST pixel-sequence classifier (Fig. 1 / Fig. 2).
+    Classifier,
+}
+
+/// Full static architecture + batch shape for one artifact family.
+#[derive(Clone, Debug)]
+pub struct CpuModelCfg {
+    pub task: CpuTask,
+    pub mixer: Mixer,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub mlp_mult: usize,
+    pub chunk: usize,
+    pub norm_eps: f32,
+    pub batch: usize,
+    pub seq: usize,
+    pub decode_batch: usize,
+}
+
+impl CpuModelCfg {
+    /// q/k/v projection width (n_heads * head_dim).
+    pub fn inner(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// SwiGLU hidden width.
+    pub fn mlp_width(&self) -> usize {
+        self.mlp_mult * self.d_model
+    }
+}
+
+/// (name, vocab, d_model, n_layers, n_heads, head_dim, chunk, batch, seq,
+/// decode_batch) — mirrors model.py PRESETS + aot.py batch shapes.
+const LM_PRESETS: [(&str, usize, usize, usize, usize, usize, usize, usize, usize, usize); 6] = [
+    ("tiny", 256, 64, 2, 2, 32, 32, 4, 64, 4),
+    ("mini", 1024, 192, 4, 3, 64, 32, 8, 128, 4),
+    ("small", 2048, 320, 6, 5, 64, 64, 4, 256, 8),
+    ("medium", 4096, 512, 8, 8, 64, 64, 4, 256, 4),
+    ("100m", 8192, 768, 10, 6, 128, 64, 2, 512, 4),
+    ("mad", 64, 128, 2, 2, 64, 32, 16, 128, 4),
+];
+
+/// LM preset names the CPU backend knows.
+pub fn lm_presets() -> Vec<&'static str> {
+    LM_PRESETS.iter().map(|p| p.0).collect()
+}
+
+fn lm_config(preset: &str, mixer: Mixer) -> Result<CpuModelCfg> {
+    let p = LM_PRESETS
+        .iter()
+        .find(|p| p.0 == preset)
+        .ok_or_else(|| anyhow!("unknown LM preset '{preset}'"))?;
+    Ok(CpuModelCfg {
+        task: CpuTask::Lm,
+        mixer,
+        vocab: p.1,
+        d_model: p.2,
+        n_layers: p.3,
+        n_heads: p.4,
+        head_dim: p.5,
+        mlp_mult: 4,
+        chunk: p.6,
+        norm_eps: 1e-6,
+        batch: p.7,
+        seq: p.8,
+        decode_batch: p.9,
+    })
+}
+
+fn clf_config(mixer: Mixer) -> CpuModelCfg {
+    CpuModelCfg {
+        task: CpuTask::Classifier,
+        mixer,
+        vocab: N_CLASSES, // head width; the input is embedded linearly
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        head_dim: 32,
+        mlp_mult: 4,
+        chunk: 56, // 784 = 14 * 56; avoids padding the full sequence
+        norm_eps: 1e-6,
+        batch: 16,
+        seq: 784,
+        decode_batch: 0, // no recurrent decode graph for the classifier
+    }
+}
+
+/// Resolve an artifact family name (`lm_tiny_efla`, `lm_mad_deltanet`,
+/// `clf_efla`, ...) to its CPU model configuration.
+pub fn family_config(family: &str) -> Result<CpuModelCfg> {
+    if let Some(mixer) = family.strip_prefix("clf_") {
+        return Ok(clf_config(Mixer::parse(mixer)?));
+    }
+    if let Some(rest) = family.strip_prefix("lm_") {
+        let (preset, mixer) = rest
+            .split_once('_')
+            .ok_or_else(|| anyhow!("malformed LM family '{family}' (want lm_<preset>_<mixer>)"))?;
+        return lm_config(preset, Mixer::parse(mixer)?);
+    }
+    bail!("unknown family '{family}' (want lm_<preset>_<mixer> or clf_<mixer>)")
+}
+
+/// Every family the CPU backend can build (for `efla info`).
+pub fn known_families() -> Vec<String> {
+    let mut out = Vec::new();
+    for p in LM_PRESETS.iter() {
+        for m in Mixer::ALL {
+            out.push(format!("lm_{}_{}", p.0, m.name()));
+        }
+    }
+    for m in Mixer::ALL {
+        out.push(format!("clf_{}", m.name()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_known_families() {
+        for f in known_families() {
+            let cfg = family_config(&f).unwrap_or_else(|e| panic!("{f}: {e}"));
+            assert!(cfg.d_model > 0);
+        }
+    }
+
+    #[test]
+    fn tiny_matches_python_preset() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        assert_eq!(cfg.vocab, 256);
+        assert_eq!(cfg.d_model, 64);
+        assert_eq!(cfg.n_layers, 2);
+        assert_eq!(cfg.n_heads, 2);
+        assert_eq!(cfg.head_dim, 32);
+        assert_eq!(cfg.batch, 4);
+        assert_eq!(cfg.seq, 64);
+        assert_eq!(cfg.inner(), 64);
+        assert_eq!(cfg.mixer, Mixer::Efla);
+    }
+
+    #[test]
+    fn underscored_mixer_names_parse() {
+        let cfg = family_config("lm_tiny_efla_adaptive").unwrap();
+        assert_eq!(cfg.mixer, Mixer::EflaAdaptive);
+        let cfg = family_config("lm_mad_efla_loose").unwrap();
+        assert_eq!(cfg.mixer, Mixer::EflaLoose);
+        assert_eq!(cfg.vocab, 64);
+    }
+
+    #[test]
+    fn classifier_family() {
+        let cfg = family_config("clf_deltanet").unwrap();
+        assert_eq!(cfg.task, CpuTask::Classifier);
+        assert_eq!(cfg.seq, 784);
+        assert_eq!(cfg.batch, 16);
+    }
+
+    #[test]
+    fn bad_families_rejected() {
+        assert!(family_config("lm_tiny").is_err());
+        assert!(family_config("lm_huge_efla").is_err());
+        assert!(family_config("clf_rwkv").is_err());
+        assert!(family_config("diffusion").is_err());
+    }
+}

@@ -1,0 +1,350 @@
+//! The pure-Rust CPU execution backend.
+//!
+//! Always available (no external runtime, no AOT artifacts): the model
+//! forward/backward, AdamW, eval statistics and the O(1)-state decode are
+//! implemented directly on `tensor::` + `attention::` (chunkwise delta
+//! kernel forward, [`crate::attention::delta_bptt`] backward). Families are
+//! resolved from their names (`lm_<preset>_<mixer>`, `clf_<mixer>`) using
+//! the same preset table `python/compile/model.py` bakes into artifacts, so
+//! CPU sessions train with the same shapes the PJRT backend would.
+
+pub mod config;
+pub mod model;
+pub mod params;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::backend::{Backend, ModelSession, StepMetrics};
+use super::value::HostValue;
+
+use config::{family_config, known_families, CpuModelCfg, CpuTask};
+use model::{clf_loss, decode_state_shapes, lm_decode, lm_loss};
+use params::{adamw_update, ParamSet};
+
+/// The always-available pure-Rust backend.
+#[derive(Debug, Default)]
+pub struct CpuBackend;
+
+impl CpuBackend {
+    pub fn new() -> Self {
+        CpuBackend
+    }
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &str {
+        "cpu"
+    }
+
+    fn has_family(&self, family: &str) -> bool {
+        family_config(family).is_ok()
+    }
+
+    fn describe(&self) -> Vec<String> {
+        known_families()
+    }
+
+    fn open_session(&self, family: &str, seed: u32) -> Result<Box<dyn ModelSession>> {
+        let cfg = family_config(family)?;
+        Ok(Box::new(CpuSession::init(family, cfg, seed)))
+    }
+}
+
+/// Parameters + AdamW moments, resident as host tensors.
+pub struct CpuSession {
+    family: String,
+    cfg: CpuModelCfg,
+    params: ParamSet,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    step_count: u64,
+}
+
+impl CpuSession {
+    pub fn init(family: &str, cfg: CpuModelCfg, seed: u32) -> CpuSession {
+        let params = ParamSet::init(&cfg, seed);
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        CpuSession { family: family.to_string(), cfg, params, m, v, step_count: 0 }
+    }
+
+    /// Unpack (d0, d1) for the LM tasks: tokens + targets, both (B, L) i32.
+    fn lm_batch<'a>(&self, d0: &'a HostValue, d1: &'a HostValue) -> Result<(&'a [i32], &'a [i32])> {
+        let (s0, tokens) = d0.as_i32()?;
+        let (s1, targets) = d1.as_i32()?;
+        let want = [self.cfg.batch, self.cfg.seq];
+        if s0 != want || s1 != want {
+            bail!(
+                "{}: batch shapes {:?}/{:?}, expected {:?}",
+                self.family,
+                s0,
+                s1,
+                want
+            );
+        }
+        Ok((tokens, targets))
+    }
+
+    /// Unpack (d0, d1) for the classifier: pixels (B, 784) f32 + labels (B,).
+    fn clf_batch<'a>(&self, d0: &'a HostValue, d1: &'a HostValue) -> Result<(&'a [f32], &'a [i32])> {
+        let pixels = d0.as_f32()?;
+        if pixels.shape() != [self.cfg.batch, self.cfg.seq] {
+            bail!(
+                "{}: pixel shape {:?}, expected {:?}",
+                self.family,
+                pixels.shape(),
+                [self.cfg.batch, self.cfg.seq]
+            );
+        }
+        let (s1, labels) = d1.as_i32()?;
+        if s1 != [self.cfg.batch] {
+            bail!("{}: label shape {:?}, expected [{}]", self.family, s1, self.cfg.batch);
+        }
+        Ok((pixels.data(), labels))
+    }
+}
+
+impl ModelSession for CpuSession {
+    fn family(&self) -> &str {
+        &self.family
+    }
+
+    fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.cfg.seq
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        self.params.len()
+    }
+
+    fn param_elems(&self) -> usize {
+        self.params.elems()
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step_count
+    }
+
+    fn step(&mut self, d0: &HostValue, d1: &HostValue, lr: f32) -> Result<StepMetrics> {
+        let mut grads = self.params.zeros_like();
+        let stats = match self.cfg.task {
+            CpuTask::Lm => {
+                let (tokens, targets) = self.lm_batch(d0, d1)?;
+                lm_loss(
+                    &self.cfg,
+                    &self.params,
+                    tokens,
+                    targets,
+                    self.cfg.batch,
+                    self.cfg.seq,
+                    Some(&mut grads),
+                )?
+            }
+            CpuTask::Classifier => {
+                let (pixels, labels) = self.clf_batch(d0, d1)?;
+                clf_loss(
+                    &self.cfg,
+                    &self.params,
+                    pixels,
+                    labels,
+                    self.cfg.batch,
+                    Some(&mut grads),
+                )?
+            }
+        };
+        self.step_count += 1;
+        let gnorm = adamw_update(
+            &mut self.params,
+            &grads,
+            &mut self.m,
+            &mut self.v,
+            self.step_count,
+            lr,
+        );
+        Ok(StepMetrics { loss: stats.loss_mean, grad_norm: gnorm })
+    }
+
+    fn eval(&self, d0: &HostValue, d1: &HostValue) -> Result<Vec<f32>> {
+        match self.cfg.task {
+            CpuTask::Lm => {
+                let (tokens, targets) = self.lm_batch(d0, d1)?;
+                let s = lm_loss(
+                    &self.cfg,
+                    &self.params,
+                    tokens,
+                    targets,
+                    self.cfg.batch,
+                    self.cfg.seq,
+                    None,
+                )?;
+                Ok(vec![s.loss_sum, s.count, s.correct])
+            }
+            CpuTask::Classifier => {
+                let (pixels, labels) = self.clf_batch(d0, d1)?;
+                let s = clf_loss(&self.cfg, &self.params, pixels, labels, self.cfg.batch, None)?;
+                Ok(vec![s.loss_sum, s.correct])
+            }
+        }
+    }
+
+    fn export_params(&self) -> Result<Vec<Tensor>> {
+        Ok(self.params.tensors().to_vec())
+    }
+
+    fn export_state(&self) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(3 * self.params.len());
+        out.extend(self.params.tensors().iter().cloned());
+        out.extend(self.m.iter().cloned());
+        out.extend(self.v.iter().cloned());
+        Ok(out)
+    }
+
+    fn import_state(&mut self, tensors: &[Tensor], step: u64) -> Result<()> {
+        let n = self.params.len();
+        if tensors.len() != 3 * n {
+            bail!("checkpoint has {} tensors, session needs {}", tensors.len(), 3 * n);
+        }
+        self.params.set_all(&tensors[..n])?;
+        for (dst, src) in self.m.iter_mut().zip(tensors[n..2 * n].iter()) {
+            if dst.shape() != src.shape() {
+                bail!("optimizer m shape mismatch: {:?} vs {:?}", src.shape(), dst.shape());
+            }
+            *dst = src.clone();
+        }
+        for (dst, src) in self.v.iter_mut().zip(tensors[2 * n..].iter()) {
+            if dst.shape() != src.shape() {
+                bail!("optimizer v shape mismatch: {:?} vs {:?}", src.shape(), dst.shape());
+            }
+            *dst = src.clone();
+        }
+        self.step_count = step;
+        Ok(())
+    }
+
+    fn decode_batch(&self) -> Result<usize> {
+        if self.cfg.task != CpuTask::Lm {
+            bail!("{}: decode is only available for LM families", self.family);
+        }
+        Ok(self.cfg.decode_batch)
+    }
+
+    fn vocab(&self) -> Result<usize> {
+        if self.cfg.task != CpuTask::Lm {
+            bail!("{}: vocab is only defined for LM families", self.family);
+        }
+        Ok(self.cfg.vocab)
+    }
+
+    fn decode_state(&self) -> Result<Vec<HostValue>> {
+        self.decode_batch()?; // validates the task
+        Ok(decode_state_shapes(&self.cfg)
+            .into_iter()
+            .map(|shape| HostValue::F32(Tensor::zeros(&shape)))
+            .collect())
+    }
+
+    fn decode(
+        &self,
+        state: &[HostValue],
+        tokens: &[i32],
+    ) -> Result<(Tensor, Vec<HostValue>)> {
+        let shapes = decode_state_shapes(&self.cfg);
+        if state.len() != shapes.len() {
+            bail!(
+                "{}: decode expects {} state tensors, got {}",
+                self.family,
+                shapes.len(),
+                state.len()
+            );
+        }
+        // Borrow the state tensors directly — no copy on the decode hot path.
+        let flat: Vec<&[f32]> = state
+            .iter()
+            .enumerate()
+            .map(|(i, hv)| {
+                let t = hv
+                    .as_f32()
+                    .map_err(|e| anyhow!("state tensor {i}: {e}"))?;
+                if t.shape() != shapes[i].as_slice() {
+                    bail!("state tensor {i}: shape {:?}, expected {:?}", t.shape(), shapes[i]);
+                }
+                Ok(t.data())
+            })
+            .collect::<Result<_>>()?;
+        let (logits, new_flat) = lm_decode(&self.cfg, &self.params, &flat, tokens)?;
+        let new_state = new_flat
+            .into_iter()
+            .zip(shapes.iter())
+            .map(|(data, shape)| HostValue::F32(Tensor::from_vec(shape, data)))
+            .collect();
+        Ok((logits, new_state))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_trains_on_a_fixed_batch() {
+        let backend = CpuBackend::new();
+        let mut session = backend.open_session("lm_tiny_efla", 42).unwrap();
+        assert_eq!(session.batch(), 4);
+        assert_eq!(session.seq(), 64);
+        let rows = session.batch() * session.seq();
+        let tokens =
+            HostValue::i32(&[session.batch(), session.seq()], (0..rows).map(|i| (i % 251) as i32).collect());
+        let targets =
+            HostValue::i32(&[session.batch(), session.seq()], (0..rows).map(|i| ((i + 1) % 251) as i32).collect());
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..8 {
+            let m = session.step(&tokens, &targets, 3e-3).unwrap();
+            assert!(m.loss.is_finite());
+            assert!(m.grad_norm.is_finite() && m.grad_norm > 0.0);
+            first.get_or_insert(m.loss);
+            last = m.loss;
+        }
+        let first = first.unwrap();
+        assert!(last < first, "loss must drop on a fixed batch: {first} -> {last}");
+        assert_eq!(session.steps_done(), 8);
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_training() {
+        let backend = CpuBackend::new();
+        let mut a = backend.open_session("lm_tiny_efla", 1).unwrap();
+        let state = a.export_state().unwrap();
+        assert_eq!(state.len(), 3 * a.n_param_tensors());
+        let mut b = backend.open_session("lm_tiny_efla", 2).unwrap();
+        b.import_state(&state, 5).unwrap();
+        assert_eq!(b.steps_done(), 5);
+        let pa = a.export_params().unwrap();
+        let pb = b.export_params().unwrap();
+        for (x, y) in pa.iter().zip(pb.iter()) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn unknown_family_is_rejected() {
+        let backend = CpuBackend::new();
+        assert!(backend.open_session("lm_nope_efla", 1).is_err());
+        assert!(!backend.has_family("lm_nope_efla"));
+        assert!(backend.has_family("lm_mad_deltanet"));
+    }
+
+    #[test]
+    fn classifier_has_no_decode() {
+        let backend = CpuBackend::new();
+        let s = backend.open_session("clf_efla", 1).unwrap();
+        assert!(s.decode_batch().is_err());
+        assert!(s.decode_state().is_err());
+    }
+}

@@ -1,0 +1,302 @@
+//! Flat, deterministically-ordered parameter set + the AdamW mirror.
+//!
+//! Parameter names/shapes/init kinds mirror `python/compile/model.py::
+//! _param_specs` (LM) and `python/compile/classifier.py::_param_specs`
+//! (classifier) so checkpoints and manifests stay cross-referenceable. The
+//! optimizer mirrors `python/compile/train.py::adamw_update` exactly:
+//! global-norm clip, bias correction, decoupled weight decay on matrices.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::config::{CpuModelCfg, CpuTask, CONV_K, N_CLASSES};
+
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.95;
+pub const ADAM_EPS: f32 = 1e-8;
+pub const WEIGHT_DECAY: f32 = 0.1; // paper Appendix A
+pub const GRAD_CLIP: f32 = 1.0; // paper Appendix A
+
+/// How a parameter is initialized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum InitKind {
+    /// N(0, 1) * fan_in^-0.5 (fan_in = shape[0]).
+    Normal,
+    /// Near-identity causal conv: 0.02 * N(0,1), last tap += 1.
+    Conv,
+    Ones,
+    Zeros,
+}
+
+fn param_specs(cfg: &CpuModelCfg) -> Vec<(String, Vec<usize>, InitKind)> {
+    let d = cfg.d_model;
+    let inner = cfg.inner();
+    let h = cfg.n_heads;
+    let mut specs = Vec::new();
+    match cfg.task {
+        CpuTask::Lm => {
+            specs.push(("embed".to_string(), vec![cfg.vocab, d], InitKind::Normal));
+        }
+        CpuTask::Classifier => {
+            specs.push(("pix_w".to_string(), vec![1, d], InitKind::Normal));
+            specs.push(("pix_b".to_string(), vec![d], InitKind::Zeros));
+        }
+    }
+    for i in 0..cfg.n_layers {
+        let p = format!("layer{i}.");
+        specs.push((format!("{p}norm_attn"), vec![d], InitKind::Ones));
+        specs.push((format!("{p}wq"), vec![d, inner], InitKind::Normal));
+        specs.push((format!("{p}wk"), vec![d, inner], InitKind::Normal));
+        specs.push((format!("{p}wv"), vec![d, inner], InitKind::Normal));
+        specs.push((format!("{p}conv_q"), vec![CONV_K, inner], InitKind::Conv));
+        specs.push((format!("{p}conv_k"), vec![CONV_K, inner], InitKind::Conv));
+        specs.push((format!("{p}conv_v"), vec![CONV_K, inner], InitKind::Conv));
+        specs.push((format!("{p}w_beta"), vec![d, h], InitKind::Normal));
+        specs.push((format!("{p}adecay"), vec![h], InitKind::Zeros));
+        specs.push((format!("{p}norm_out"), vec![cfg.head_dim], InitKind::Ones));
+        specs.push((format!("{p}wo"), vec![inner, d], InitKind::Normal));
+        specs.push((format!("{p}norm_mlp"), vec![d], InitKind::Ones));
+        specs.push((format!("{p}w_gate"), vec![d, cfg.mlp_width()], InitKind::Normal));
+        specs.push((format!("{p}w_up"), vec![d, cfg.mlp_width()], InitKind::Normal));
+        specs.push((format!("{p}w_down"), vec![cfg.mlp_width(), d], InitKind::Normal));
+    }
+    specs.push(("norm_f".to_string(), vec![d], InitKind::Ones));
+    if cfg.task == CpuTask::Classifier {
+        specs.push(("head_w".to_string(), vec![d, N_CLASSES], InitKind::Normal));
+        specs.push(("head_b".to_string(), vec![N_CLASSES], InitKind::Zeros));
+    }
+    specs
+}
+
+/// Flat named parameter set in spec order.
+pub struct ParamSet {
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamSet {
+    /// Seeded deterministic init.
+    pub fn init(cfg: &CpuModelCfg, seed: u32) -> ParamSet {
+        let specs = param_specs(cfg);
+        let mut rng = Rng::new(0xEF1A_0000_0000_0000 ^ seed as u64);
+        let mut names = Vec::with_capacity(specs.len());
+        let mut tensors = Vec::with_capacity(specs.len());
+        let mut index = HashMap::new();
+        for (name, shape, kind) in specs {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = match kind {
+                InitKind::Normal => {
+                    let scale = (shape[0] as f32).powf(-0.5);
+                    rng.normal_vec(n, 0.0, scale)
+                }
+                InitKind::Conv => {
+                    let mut w = rng.normal_vec(n, 0.0, 0.02);
+                    // last tap ~ identity
+                    let cols = shape[1];
+                    for x in w[n - cols..].iter_mut() {
+                        *x += 1.0;
+                    }
+                    w
+                }
+                InitKind::Ones => vec![1.0; n],
+                InitKind::Zeros => vec![0.0; n],
+            };
+            index.insert(name.clone(), tensors.len());
+            names.push(name);
+            tensors.push(Tensor::from_vec(&shape, data));
+        }
+        ParamSet { names, tensors, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total f32 element count.
+    pub fn elems(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn tensor(&self, i: usize) -> &Tensor {
+        &self.tensors[i]
+    }
+
+    pub fn tensor_mut(&mut self, i: usize) -> &mut Tensor {
+        &mut self.tensors[i]
+    }
+
+    /// Index of a named parameter (panics on unknown internal name).
+    pub fn idx(&self, name: &str) -> usize {
+        *self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("internal: unknown parameter '{name}'"))
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.tensors[self.idx(name)]
+    }
+
+    /// Zero tensors shaped like every parameter (gradient / moment buffers).
+    pub fn zeros_like(&self) -> Vec<Tensor> {
+        self.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect()
+    }
+
+    /// Replace all tensors (shape-checked, checkpoint restore).
+    pub fn set_all(&mut self, tensors: &[Tensor]) -> Result<()> {
+        if tensors.len() != self.tensors.len() {
+            bail!("expected {} parameter tensors, got {}", self.tensors.len(), tensors.len());
+        }
+        for (i, t) in tensors.iter().enumerate() {
+            if t.shape() != self.tensors[i].shape() {
+                bail!(
+                    "parameter '{}': shape {:?} != expected {:?}",
+                    self.names[i],
+                    t.shape(),
+                    self.tensors[i].shape()
+                );
+            }
+        }
+        self.tensors = tensors.to_vec();
+        Ok(())
+    }
+}
+
+/// AdamW with bias correction + decoupled weight decay + global-norm clip
+/// (exact mirror of `python/compile/train.py::adamw_update`).
+///
+/// `step` is the 1-based step counter. Returns the pre-clip gradient norm.
+pub fn adamw_update(
+    params: &mut ParamSet,
+    grads: &[Tensor],
+    m: &mut [Tensor],
+    v: &mut [Tensor],
+    step: u64,
+    lr: f32,
+) -> f32 {
+    debug_assert_eq!(grads.len(), params.len());
+    debug_assert_eq!(m.len(), params.len());
+    debug_assert_eq!(v.len(), params.len());
+    let mut sq = 0f64;
+    for g in grads {
+        for &x in g.data() {
+            sq += (x as f64) * (x as f64);
+        }
+    }
+    let gnorm = sq.sqrt() as f32;
+    let scale = (GRAD_CLIP / gnorm.max(1e-12)).min(1.0);
+    let stepf = step as f64;
+    let bc1 = (1.0 - (ADAM_B1 as f64).powf(stepf)) as f32;
+    let bc2 = (1.0 - (ADAM_B2 as f64).powf(stepf)) as f32;
+    for i in 0..grads.len() {
+        let decay = params.tensor(i).ndim() >= 2;
+        let g = grads[i].data();
+        let mi = m[i].data_mut();
+        let vi = v[i].data_mut();
+        let p = params.tensor_mut(i).data_mut();
+        for j in 0..p.len() {
+            let gj = g[j] * scale;
+            let mj = ADAM_B1 * mi[j] + (1.0 - ADAM_B1) * gj;
+            let vj = ADAM_B2 * vi[j] + (1.0 - ADAM_B2) * gj * gj;
+            mi[j] = mj;
+            vi[j] = vj;
+            let mut update = (mj / bc1) / ((vj / bc2).sqrt() + ADAM_EPS);
+            if decay {
+                update += WEIGHT_DECAY * p[j];
+            }
+            p[j] -= lr * update;
+        }
+    }
+    gnorm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::cpu::config::family_config;
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let a = ParamSet::init(&cfg, 7);
+        let b = ParamSet::init(&cfg, 7);
+        let c = ParamSet::init(&cfg, 8);
+        for i in 0..a.len() {
+            assert_eq!(a.tensor(i), b.tensor(i), "{}", a.names()[i]);
+        }
+        let diff = (0..a.len()).any(|i| a.tensor(i) != c.tensor(i));
+        assert!(diff, "different seeds must differ");
+    }
+
+    #[test]
+    fn spec_names_mirror_python_layout() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let p = ParamSet::init(&cfg, 1);
+        assert_eq!(p.names()[0], "embed");
+        assert_eq!(p.names().last().unwrap(), "norm_f");
+        assert_eq!(p.get("layer0.wq").shape(), &[64, 64]);
+        assert_eq!(p.get("layer1.w_down").shape(), &[256, 64]);
+        assert_eq!(p.get("layer0.conv_q").shape(), &[CONV_K, 64]);
+        assert_eq!(p.get("layer0.w_beta").shape(), &[64, 2]);
+        // near-identity conv init: mean of last tap ~ 1
+        let conv = p.get("layer0.conv_q");
+        let cols = conv.shape()[1];
+        let last = &conv.data()[(CONV_K - 1) * cols..];
+        let mean: f32 = last.iter().sum::<f32>() / cols as f32;
+        assert!((mean - 1.0).abs() < 0.05, "conv last tap mean {mean}");
+    }
+
+    #[test]
+    fn classifier_has_head_params() {
+        let cfg = family_config("clf_efla").unwrap();
+        let p = ParamSet::init(&cfg, 1);
+        assert_eq!(p.get("pix_w").shape(), &[1, 64]);
+        assert_eq!(p.get("head_w").shape(), &[64, N_CLASSES]);
+        assert_eq!(p.get("head_b").shape(), &[N_CLASSES]);
+    }
+
+    #[test]
+    fn adamw_descends_a_quadratic() {
+        // minimize f(p) = 0.5 * ||p||^2 with grads = p: must shrink.
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let mut params = ParamSet::init(&cfg, 3);
+        let mut m = params.zeros_like();
+        let mut v = params.zeros_like();
+        let norm0: f32 = params.tensors().iter().map(|t| t.norm().powi(2)).sum::<f32>().sqrt();
+        for step in 1..=20u64 {
+            let grads: Vec<Tensor> = params.tensors().to_vec();
+            let gnorm = adamw_update(&mut params, &grads, &mut m, &mut v, step, 1e-2);
+            assert!(gnorm.is_finite() && gnorm > 0.0);
+        }
+        let norm1: f32 = params.tensors().iter().map(|t| t.norm().powi(2)).sum::<f32>().sqrt();
+        assert!(norm1 < norm0, "{norm1} >= {norm0}");
+    }
+
+    #[test]
+    fn set_all_rejects_shape_mismatch() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let mut p = ParamSet::init(&cfg, 1);
+        let mut ts = p.tensors().to_vec();
+        ts[0] = Tensor::zeros(&[1, 1]);
+        assert!(p.set_all(&ts).is_err());
+        let good = ParamSet::init(&cfg, 2).tensors().to_vec();
+        p.set_all(&good).unwrap();
+    }
+}

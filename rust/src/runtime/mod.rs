@@ -1,196 +1,64 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Execution runtime: the [`Backend`] abstraction and its implementations.
 //!
-//! The only bridge between the Rust coordinator and the compute graphs that
-//! Python lowered at build time.  Flow per artifact:
-//!
-//!   artifacts/<name>.hlo.txt --HloModuleProto::from_text_file-->
-//!   XlaComputation --PjRtClient::compile--> PjRtLoadedExecutable
-//!
-//! plus `artifacts/manifest.json` describing every input/output (name,
-//! shape, dtype) in the flat order both sides agree on.  Executables are
-//! cached per name; [`Executable::run`] validates shapes, executes, and
-//! decomposes the tuple result back into typed host values.
-//!
-//! HLO *text* (not serialized protos) is load-bearing: jax >= 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see DESIGN.md + /opt/xla-example/README.md).
+//! * [`backend`] — the `Backend` / `ModelSession` traits every coordinator
+//!   component is written against.
+//! * [`cpu`]     — the always-available pure-Rust backend (forward/backward,
+//!   AdamW, eval, O(1)-state decode on top of `tensor::` + `attention::`).
+//! * `pjrt`      — the PJRT/XLA backend over AOT HLO-text artifacts, behind
+//!   the off-by-default `xla` feature (needs a vendored `xla` crate).
+//! * [`manifest`] / [`value`] — the typed host-array + artifact-manifest
+//!   contract shared by both backends.
 
+pub mod backend;
+pub mod cpu;
 mod manifest;
 mod value;
 
-pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+#[cfg(feature = "xla")]
+pub mod pjrt;
+
+pub use backend::{Backend, ModelSession, StepMetrics};
+pub use cpu::CpuBackend;
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelMeta};
 pub use value::{DType, HostValue};
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-use std::time::Instant;
+#[cfg(feature = "xla")]
+pub use pjrt::{Executable, Runtime};
 
-use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
 
-/// Lazily-compiling executable registry over an artifact directory.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
-}
+use anyhow::Result;
 
-impl Runtime {
-    /// Open an artifact directory (must contain `manifest.json`).
-    pub fn open(dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+/// Open the best available backend for an artifact directory.
+///
+/// With the `xla` feature and a `manifest.json` present, the PJRT backend
+/// is used; otherwise the pure-Rust CPU backend (which needs no artifacts —
+/// families are built from their names).
+pub fn open_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "xla")]
+    {
+        if artifact_dir.join("manifest.json").exists() {
+            return Ok(Box::new(pjrt::Runtime::open(artifact_dir)?));
+        }
         log::info!(
-            "runtime: platform={} devices={} artifacts={}",
-            client.platform_name(),
-            client.device_count(),
-            manifest.names().len()
+            "no PJRT artifacts at {}; falling back to the CPU backend",
+            artifact_dir.display()
         );
-        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: RefCell::new(HashMap::new()) })
     }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn artifact_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// True if the manifest knows this artifact.
-    pub fn has(&self, name: &str) -> bool {
-        self.manifest.get(name).is_some()
-    }
-
-    /// Load + compile (cached).
-    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
-            .clone();
-        let path = self.dir.join(&spec.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        log::info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
-        let e = Rc::new(Executable { name: name.to_string(), spec, exe });
-        self.cache.borrow_mut().insert(name.to_string(), e.clone());
-        Ok(e)
-    }
+    #[cfg(not(feature = "xla"))]
+    let _ = artifact_dir;
+    Ok(Box::new(CpuBackend::new()))
 }
 
-/// A compiled artifact plus its manifest spec.
-pub struct Executable {
-    name: String,
-    spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-impl Executable {
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-
-    pub fn spec(&self) -> &ArtifactSpec {
-        &self.spec
-    }
-
-    /// Execute with host values; returns outputs in manifest order.
-    ///
-    /// Validates input arity/shape/dtype against the manifest before
-    /// touching PJRT so mismatches fail with a useful message instead of an
-    /// XLA shape-check error.
-    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (v, spec) in inputs.iter().zip(self.spec.inputs.iter()) {
-            if v.dtype() != spec.dtype || v.shape() != spec.shape.as_slice() {
-                bail!(
-                    "{}: input '{}' expects {:?}{:?}, got {:?}{:?}",
-                    self.name,
-                    spec.name,
-                    spec.dtype,
-                    spec.shape,
-                    v.dtype(),
-                    v.shape()
-                );
-            }
-        }
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
-        self.run_literals(&literals)
-    }
-
-    /// Execute pre-built literals (hot path: caller reuses literals).
-    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<HostValue>> {
-        let parts = self.run_raw(literals)?;
-        parts
-            .into_iter()
-            .zip(self.spec.outputs.iter())
-            .map(|(lit, spec)| HostValue::from_literal(&lit, spec))
-            .collect()
-    }
-
-    /// Execute and return raw literals in manifest output order.
-    ///
-    /// This is the training hot path: parameters and optimizer state stay as
-    /// `xla::Literal`s across steps and are never converted to host vectors.
-    pub fn run_raw(&self, literals: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let refs: Vec<&xla::Literal> = literals.iter().collect();
-        self.run_raw_borrowed(&refs)
-    }
-
-    /// Borrowed-input variant of [`run_raw`] (avoids cloning literals when
-    /// the caller owns a mixed set of long-lived and per-step inputs).
-    pub fn run_raw_borrowed(&self, literals: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        if literals.len() != self.spec.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                self.spec.inputs.len(),
-                literals.len()
-            );
-        }
-        let bufs = self
-            .exe
-            .execute::<&xla::Literal>(literals)
-            .map_err(|e| anyhow!("{}: execute: {e:?}", self.name))?;
-        let result = bufs
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| anyhow!("{}: empty execution result", self.name))?;
-        let mut tuple = result
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{}: to_literal: {e:?}", self.name))?;
-        let parts = tuple
-            .decompose_tuple()
-            .map_err(|e| anyhow!("{}: decompose: {e:?}", self.name))?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!(
-                "{}: manifest promises {} outputs, executable returned {}",
-                self.name,
-                self.spec.outputs.len(),
-                parts.len()
-            );
-        }
-        Ok(parts)
+    #[test]
+    fn open_backend_falls_back_to_cpu() {
+        let b = open_backend(Path::new("/definitely/not/an/artifact/dir")).unwrap();
+        assert!(b.has_family("lm_tiny_efla"));
+        #[cfg(not(feature = "xla"))]
+        assert_eq!(b.name(), "cpu");
     }
 }

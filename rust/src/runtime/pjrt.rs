@@ -1,0 +1,539 @@
+//! PJRT/XLA backend: load AOT HLO-text artifacts and execute them.
+//!
+//! Compiled only with the off-by-default `xla` feature (requires a vendored
+//! `xla` crate — see README). Flow per artifact:
+//!
+//!   artifacts/<name>.hlo.txt --HloModuleProto::from_text_file-->
+//!   XlaComputation --PjRtClient::compile--> PjRtLoadedExecutable
+//!
+//! plus `artifacts/manifest.json` describing every input/output (name,
+//! shape, dtype) in the flat order both sides agree on.  Executables are
+//! cached per name; [`Executable::run`] validates shapes, executes, and
+//! decomposes the tuple result back into typed host values.
+//!
+//! HLO *text* (not serialized protos) is load-bearing: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md + /opt/xla-example/README.md).
+//!
+//! [`Runtime`] implements [`Backend`], binding each artifact *family* to a
+//! [`PjrtSession`] whose parameters and AdamW moments stay resident as
+//! `xla::Literal`s across steps (never converted to host vectors on the
+//! hot path).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::backend::{Backend, ModelSession, StepMetrics};
+use super::manifest::{ArtifactSpec, IoSpec, Manifest};
+use super::value::{DType, HostValue};
+
+/// HostValue -> literal at the PJRT edge.
+pub fn to_literal(v: &HostValue) -> Result<xla::Literal> {
+    let (ty, shape, bytes): (xla::ElementType, &[usize], &[u8]) = match v {
+        HostValue::F32(t) => (xla::ElementType::F32, t.shape(), bytemuck_f32(t.data())),
+        HostValue::I32(s, d) => (xla::ElementType::S32, s, bytemuck_i32(d)),
+        HostValue::U32(s, d) => (xla::ElementType::U32, s, bytemuck_u32(d)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
+        .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+}
+
+/// Literal -> HostValue according to the manifest spec (shape is taken from
+/// the spec; dtype is checked against the literal's).
+pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<HostValue> {
+    let n: usize = spec.shape.iter().product();
+    match spec.dtype {
+        DType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("literal->f32: {e:?}"))?;
+            if v.len() != n {
+                bail!("output '{}': expected {} elems, got {}", spec.name, n, v.len());
+            }
+            Ok(HostValue::F32(Tensor::from_vec(&spec.shape, v)))
+        }
+        DType::I32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("literal->i32: {e:?}"))?;
+            if v.len() != n {
+                bail!("output '{}': expected {} elems, got {}", spec.name, n, v.len());
+            }
+            Ok(HostValue::I32(spec.shape.clone(), v))
+        }
+        DType::U32 => {
+            let v = lit.to_vec::<u32>().map_err(|e| anyhow!("literal->u32: {e:?}"))?;
+            if v.len() != n {
+                bail!("output '{}': expected {} elems, got {}", spec.name, n, v.len());
+            }
+            Ok(HostValue::U32(spec.shape.clone(), v))
+        }
+    }
+}
+
+fn bytemuck_f32(x: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+fn bytemuck_i32(x: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+fn bytemuck_u32(x: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+
+/// Lazily-compiling executable registry over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        log::info!(
+            "runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.names().len()
+        );
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// True if the manifest knows this artifact.
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.get(name).is_some()
+    }
+
+    /// Load + compile (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        log::info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let e = Rc::new(Executable { name: name.to_string(), spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+impl Backend for Runtime {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn has_family(&self, family: &str) -> bool {
+        self.has(&format!("{family}_step")) && self.has(&format!("{family}_init"))
+    }
+
+    fn describe(&self) -> Vec<String> {
+        self.manifest
+            .names()
+            .into_iter()
+            .map(|n| {
+                let a = self.manifest.get(n).expect("listed artifact");
+                format!(
+                    "{n:<34} params {:>8}  batch {:>4} x seq {:>4}  {}",
+                    a.param_elems(),
+                    a.batch,
+                    a.seq,
+                    a.graph
+                )
+            })
+            .collect()
+    }
+
+    fn open_session(&self, family: &str, seed: u32) -> Result<Box<dyn ModelSession>> {
+        Ok(Box::new(PjrtSession::init(self, family, seed)?))
+    }
+}
+
+/// A compiled artifact plus its manifest spec.
+pub struct Executable {
+    name: String,
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with host values; returns outputs in manifest order.
+    ///
+    /// Validates input arity/shape/dtype against the manifest before
+    /// touching PJRT so mismatches fail with a useful message instead of an
+    /// XLA shape-check error.
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (v, spec) in inputs.iter().zip(self.spec.inputs.iter()) {
+            if v.dtype() != spec.dtype || v.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{}: input '{}' expects {:?}{:?}, got {:?}{:?}",
+                    self.name,
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    v.dtype(),
+                    v.shape()
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute pre-built literals (hot path: caller reuses literals).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<HostValue>> {
+        let parts = self.run_raw(literals)?;
+        parts
+            .into_iter()
+            .zip(self.spec.outputs.iter())
+            .map(|(lit, spec)| from_literal(&lit, spec))
+            .collect()
+    }
+
+    /// Execute and return raw literals in manifest output order.
+    ///
+    /// This is the training hot path: parameters and optimizer state stay as
+    /// `xla::Literal`s across steps and are never converted to host vectors.
+    pub fn run_raw(&self, literals: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_raw_borrowed(&refs)
+    }
+
+    /// Borrowed-input variant of [`run_raw`](Self::run_raw) (avoids cloning
+    /// literals when the caller owns a mixed set of long-lived and per-step
+    /// inputs).
+    pub fn run_raw_borrowed(&self, literals: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if literals.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                literals.len()
+            );
+        }
+        let bufs = self
+            .exe
+            .execute::<&xla::Literal>(literals)
+            .map_err(|e| anyhow!("{}: execute: {e:?}", self.name))?;
+        let result = bufs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{}: empty execution result", self.name))?;
+        let mut tuple = result
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: to_literal: {e:?}", self.name))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("{}: decompose: {e:?}", self.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: manifest promises {} outputs, executable returned {}",
+                self.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+}
+
+/// Parameters + AdamW moments threaded through the AOT step executable as
+/// raw literals.
+pub struct PjrtSession {
+    family: String,
+    step_exe: Rc<Executable>,
+    eval_exe: Option<Rc<Executable>>,
+    decode_exe: Option<Rc<Executable>>,
+    /// Flattened params, then m, then v — exactly the step graph's prefix.
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    n_params: usize,
+    step_count: u64,
+    batch: usize,
+    seq: usize,
+}
+
+impl PjrtSession {
+    /// Initialize from artifacts: runs `<family>_init` with `seed`.
+    pub fn init(rt: &Runtime, family: &str, seed: u32) -> Result<Self> {
+        let init_exe = rt.load(&format!("{family}_init"))?;
+        let step_exe = rt.load(&format!("{family}_step"))?;
+        let eval_exe = match rt.has(&format!("{family}_eval")) {
+            true => Some(rt.load(&format!("{family}_eval"))?),
+            false => None,
+        };
+        let decode_exe = match rt.has(&format!("{family}_decode")) {
+            true => Some(rt.load(&format!("{family}_decode"))?),
+            false => None,
+        };
+        let seed_lit = to_literal(&HostValue::scalar_u32(seed))?;
+        let params = init_exe.run_raw(&[seed_lit])?;
+        let n_params = params.len();
+
+        // Zero AdamW moments shaped like the step graph's m./v. inputs.
+        let spec = step_exe.spec();
+        let expected = 3 * n_params + 4;
+        if spec.inputs.len() != expected {
+            bail!(
+                "{family}_step: expected {expected} inputs (3x{n_params} state + step/tokens/targets/lr), manifest has {}",
+                spec.inputs.len()
+            );
+        }
+        let zeros = |range: std::ops::Range<usize>| -> Result<Vec<xla::Literal>> {
+            range
+                .map(|i| to_literal(&HostValue::zeros_like_spec(&spec.inputs[i])))
+                .collect()
+        };
+        let m = zeros(n_params..2 * n_params)?;
+        let v = zeros(2 * n_params..3 * n_params)?;
+
+        Ok(PjrtSession {
+            family: family.to_string(),
+            batch: spec.batch,
+            seq: spec.seq,
+            step_exe,
+            eval_exe,
+            decode_exe,
+            params,
+            m,
+            v,
+            n_params,
+            step_count: 0,
+        })
+    }
+
+    fn decode_exe(&self) -> Result<&Rc<Executable>> {
+        self.decode_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("{}: no decode artifact", self.family))
+    }
+}
+
+impl ModelSession for PjrtSession {
+    fn family(&self) -> &str {
+        &self.family
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn n_param_tensors(&self) -> usize {
+        self.n_params
+    }
+
+    fn param_elems(&self) -> usize {
+        self.step_exe.spec().param_elems()
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step_count
+    }
+
+    fn step(&mut self, d0: &HostValue, d1: &HostValue, lr: f32) -> Result<StepMetrics> {
+        self.step_count += 1;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * self.n_params + 4);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+        let step_lit = to_literal(&HostValue::scalar_f32(self.step_count as f32))?;
+        let lr_lit = to_literal(&HostValue::scalar_f32(lr))?;
+        let d0_lit = to_literal(d0)?;
+        let d1_lit = to_literal(d1)?;
+        inputs.push(&step_lit);
+        inputs.push(&d0_lit);
+        inputs.push(&d1_lit);
+        inputs.push(&lr_lit);
+
+        // Borrow-based execute avoids cloning literals.
+        let outs = self.step_exe.run_raw_borrowed(&inputs)?;
+        let n = self.n_params;
+        if outs.len() != 3 * n + 2 {
+            bail!("step returned {} outputs, expected {}", outs.len(), 3 * n + 2);
+        }
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(n).collect();
+        self.m = (&mut it).take(n).collect();
+        self.v = (&mut it).take(n).collect();
+        let loss = it
+            .next()
+            .ok_or_else(|| anyhow!("missing loss"))?
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?;
+        let gnorm = it
+            .next()
+            .ok_or_else(|| anyhow!("missing gnorm"))?
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("gnorm: {e:?}"))?;
+        Ok(StepMetrics { loss, grad_norm: gnorm })
+    }
+
+    fn eval(&self, d0: &HostValue, d1: &HostValue) -> Result<Vec<f32>> {
+        let exe = self
+            .eval_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("{}: no eval artifact", self.family))?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.n_params + 2);
+        inputs.extend(self.params.iter());
+        let d0_lit = to_literal(d0)?;
+        let d1_lit = to_literal(d1)?;
+        inputs.push(&d0_lit);
+        inputs.push(&d1_lit);
+        let outs = exe.run_raw_borrowed(&inputs)?;
+        outs.into_iter()
+            .map(|l| l.get_first_element::<f32>().map_err(|e| anyhow!("eval out: {e:?}")))
+            .collect()
+    }
+
+    fn export_params(&self) -> Result<Vec<Tensor>> {
+        let spec = self.step_exe.spec();
+        self.params
+            .iter()
+            .enumerate()
+            .map(|(i, lit)| from_literal(lit, &spec.inputs[i])?.into_f32())
+            .collect()
+    }
+
+    fn export_state(&self) -> Result<Vec<Tensor>> {
+        let spec = self.step_exe.spec();
+        let mut out = Vec::with_capacity(3 * self.n_params);
+        for (off, group) in
+            [(0usize, &self.params), (self.n_params, &self.m), (2 * self.n_params, &self.v)]
+        {
+            for (i, lit) in group.iter().enumerate() {
+                out.push(from_literal(lit, &spec.inputs[off + i])?.into_f32()?);
+            }
+        }
+        Ok(out)
+    }
+
+    fn import_state(&mut self, tensors: &[Tensor], step_count: u64) -> Result<()> {
+        if tensors.len() != 3 * self.n_params {
+            bail!(
+                "checkpoint has {} tensors, session needs {}",
+                tensors.len(),
+                3 * self.n_params
+            );
+        }
+        let lits: Vec<xla::Literal> = tensors
+            .iter()
+            .map(|t| to_literal(&HostValue::F32(t.clone())))
+            .collect::<Result<_>>()?;
+        let mut it = lits.into_iter();
+        self.params = (&mut it).take(self.n_params).collect();
+        self.m = (&mut it).take(self.n_params).collect();
+        self.v = (&mut it).take(self.n_params).collect();
+        self.step_count = step_count;
+        Ok(())
+    }
+
+    fn decode_batch(&self) -> Result<usize> {
+        let spec = self.decode_exe()?.spec();
+        let batch = spec
+            .inputs
+            .last()
+            .map(|t| t.shape.first().copied().unwrap_or(0))
+            .unwrap_or(0);
+        if batch == 0 {
+            bail!("{}_decode: cannot infer decode batch", self.family);
+        }
+        Ok(batch)
+    }
+
+    fn vocab(&self) -> Result<usize> {
+        let spec = self.decode_exe()?.spec();
+        let vocab = spec.outputs[0].shape.last().copied().unwrap_or(0);
+        if vocab == 0 {
+            bail!("{}_decode: cannot infer vocab", self.family);
+        }
+        Ok(vocab)
+    }
+
+    fn decode_state(&self) -> Result<Vec<HostValue>> {
+        let spec = self.decode_exe()?.spec();
+        // State inputs sit between params and the trailing token input.
+        let n_state = spec.state_names.len();
+        let state_specs = &spec.inputs[spec.inputs.len() - 1 - n_state..spec.inputs.len() - 1];
+        Ok(state_specs.iter().map(HostValue::zeros_like_spec).collect())
+    }
+
+    fn decode(
+        &self,
+        state: &[HostValue],
+        tokens: &[i32],
+    ) -> Result<(Tensor, Vec<HostValue>)> {
+        let exe = self.decode_exe()?.clone();
+        let spec = exe.spec();
+        let batch = self.decode_batch()?;
+        if tokens.len() != batch {
+            bail!("{}_decode: expected {batch} tokens, got {}", self.family, tokens.len());
+        }
+        let mut extra: Vec<xla::Literal> =
+            state.iter().map(to_literal).collect::<Result<_>>()?;
+        extra.push(to_literal(&HostValue::i32(&[batch], tokens.to_vec()))?);
+
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.n_params + extra.len());
+        inputs.extend(self.params.iter());
+        inputs.extend(extra.iter());
+        let outs = exe.run_raw_borrowed(&inputs)?;
+
+        let logits = from_literal(&outs[0], &spec.outputs[0])?.into_f32()?;
+        let mut new_state = Vec::with_capacity(outs.len() - 1);
+        for (i, lit) in outs.iter().enumerate().skip(1) {
+            new_state.push(from_literal(lit, &spec.outputs[i])?);
+        }
+        Ok((logits, new_state))
+    }
+}

@@ -1,4 +1,9 @@
-//! Typed host arrays + conversions to/from `xla::Literal`.
+//! Typed host arrays crossing the backend boundary.
+//!
+//! [`HostValue`] is the data currency of the [`super::Backend`] interface:
+//! batches, decode state and scalar knobs all travel as typed host arrays.
+//! The PJRT backend (feature `xla`) converts these to/from `xla::Literal`
+//! at its edge; the CPU backend consumes them directly.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -80,8 +85,25 @@ impl HostValue {
         }
     }
 
+    /// Element count.
+    pub fn elems(&self) -> usize {
+        match self {
+            HostValue::F32(t) => t.len(),
+            HostValue::I32(_, d) => d.len(),
+            HostValue::U32(_, d) => d.len(),
+        }
+    }
+
     /// Borrow as f32 tensor (errors on dtype mismatch).
     pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            other => Err(anyhow!("expected f32 value, got {:?}", other.dtype())),
+        }
+    }
+
+    /// Mutably borrow as f32 tensor (errors on dtype mismatch).
+    pub fn as_f32_mut(&mut self) -> Result<&mut Tensor> {
         match self {
             HostValue::F32(t) => Ok(t),
             other => Err(anyhow!("expected f32 value, got {:?}", other.dtype())),
@@ -95,61 +117,18 @@ impl HostValue {
         }
     }
 
+    /// Borrow as an i32 array: (shape, data).
+    pub fn as_i32(&self) -> Result<(&[usize], &[i32])> {
+        match self {
+            HostValue::I32(s, d) => Ok((s, d)),
+            other => Err(anyhow!("expected i32 value, got {:?}", other.dtype())),
+        }
+    }
+
     /// Scalar f32 view.
     pub fn scalar(&self) -> Result<f32> {
         Ok(self.as_f32()?.item())
     }
-
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let (ty, shape, bytes): (xla::ElementType, &[usize], &[u8]) = match self {
-            HostValue::F32(t) => (xla::ElementType::F32, t.shape(), bytemuck_f32(t.data())),
-            HostValue::I32(s, d) => (xla::ElementType::S32, s, bytemuck_i32(d)),
-            HostValue::U32(s, d) => (xla::ElementType::U32, s, bytemuck_u32(d)),
-        };
-        xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
-            .map_err(|e| anyhow!("literal creation failed: {e:?}"))
-    }
-
-    /// Read a literal back according to the manifest spec (shape is taken
-    /// from the spec; dtype is checked against the literal's).
-    pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Self> {
-        let n: usize = spec.shape.iter().product();
-        match spec.dtype {
-            DType::F32 => {
-                let v = lit.to_vec::<f32>().map_err(|e| anyhow!("literal->f32: {e:?}"))?;
-                if v.len() != n {
-                    bail!("output '{}': expected {} elems, got {}", spec.name, n, v.len());
-                }
-                Ok(HostValue::F32(Tensor::from_vec(&spec.shape, v)))
-            }
-            DType::I32 => {
-                let v = lit.to_vec::<i32>().map_err(|e| anyhow!("literal->i32: {e:?}"))?;
-                if v.len() != n {
-                    bail!("output '{}': expected {} elems, got {}", spec.name, n, v.len());
-                }
-                Ok(HostValue::I32(spec.shape.clone(), v))
-            }
-            DType::U32 => {
-                let v = lit.to_vec::<u32>().map_err(|e| anyhow!("literal->u32: {e:?}"))?;
-                if v.len() != n {
-                    bail!("output '{}': expected {} elems, got {}", spec.name, n, v.len());
-                }
-                Ok(HostValue::U32(spec.shape.clone(), v))
-            }
-        }
-    }
-}
-
-fn bytemuck_f32(x: &[f32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
-}
-
-fn bytemuck_i32(x: &[i32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
-}
-
-fn bytemuck_u32(x: &[u32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
 }
 
 #[cfg(test)]
@@ -171,25 +150,18 @@ mod tests {
         assert!((v.scalar().unwrap() - 2.5).abs() < 1e-6);
         let t = HostValue::i32(&[2, 2], vec![1, 2, 3, 4]);
         assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.elems(), 4);
         assert!(t.as_f32().is_err());
+        let (s, d) = t.as_i32().unwrap();
+        assert_eq!(s, &[2, 2]);
+        assert_eq!(d, &[1, 2, 3, 4]);
     }
 
     #[test]
-    fn literal_roundtrip_f32() {
-        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
-        let v = HostValue::F32(t.clone());
-        let lit = v.to_literal().unwrap();
+    fn zeros_like_spec_shapes() {
         let spec = IoSpec { name: "x".into(), shape: vec![2, 3], dtype: DType::F32 };
-        let back = HostValue::from_literal(&lit, &spec).unwrap();
-        assert_eq!(back.as_f32().unwrap(), &t);
-    }
-
-    #[test]
-    fn literal_roundtrip_i32() {
-        let v = HostValue::i32(&[4], vec![-1, 0, 7, 42]);
-        let lit = v.to_literal().unwrap();
-        let spec = IoSpec { name: "t".into(), shape: vec![4], dtype: DType::I32 };
-        let back = HostValue::from_literal(&lit, &spec).unwrap();
-        assert_eq!(back, v);
+        let v = HostValue::zeros_like_spec(&spec);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.elems(), 6);
     }
 }

@@ -75,6 +75,42 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::from_vec(&[m, n], out)
 }
 
+/// Raw matmul with transposed rhs: out[m,n] += a[m,k] * b[n,k]^T
+/// (out must be zeroed by the caller if a fresh product is wanted).
+pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            orow[j] += dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// Raw matmul with transposed lhs: out[k,n] += a[m,k]^T * b[m,n].
+///
+/// This is the weight-gradient shape (dW = X^T dY): accumulate rank-1
+/// updates row by row so the inner loop is a fused axpy over contiguous
+/// slices.
+pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            axpy(av, brow, &mut out[kk * n..(kk + 1) * n]);
+        }
+    }
+}
+
 /// Dot product with 4-way unrolling.
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -221,6 +257,26 @@ mod tests {
         let c1 = matmul_nt(&a, &b);
         let c2 = matmul(&a, &transpose(&b));
         assert!(c1.max_abs_diff(&c2) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_nt_into_matches_matmul_nt() {
+        let a = Tensor::from_vec(&[3, 4], (0..12).map(|i| i as f32 * 0.3 - 1.0).collect());
+        let b = Tensor::from_vec(&[5, 4], (0..20).map(|i| (i as f32).cos()).collect());
+        let c1 = matmul_nt(&a, &b);
+        let mut out = vec![0.0f32; 3 * 5];
+        matmul_nt_into(a.data(), b.data(), &mut out, 3, 4, 5);
+        assert!(c1.max_abs_diff(&Tensor::from_vec(&[3, 5], out)) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_tn_into_matches_transpose_matmul() {
+        let a = Tensor::from_vec(&[6, 3], (0..18).map(|i| (i as f32).sin()).collect());
+        let b = Tensor::from_vec(&[6, 4], (0..24).map(|i| i as f32 * 0.1 - 1.0).collect());
+        let c1 = matmul(&transpose(&a), &b);
+        let mut out = vec![0.0f32; 3 * 4];
+        matmul_tn_into(a.data(), b.data(), &mut out, 6, 3, 4);
+        assert!(c1.max_abs_diff(&Tensor::from_vec(&[3, 4], out)) < 1e-5);
     }
 
     #[test]

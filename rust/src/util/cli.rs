@@ -3,8 +3,40 @@
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
 //! arguments, defaults, and auto-generated `--help`. Used by the `efla`
 //! launcher binary and every example/bench driver.
+//!
+//! Parsing and the typed getters are `Result`-based: a bad flag value
+//! surfaces as a [`CliError`] the caller can render as a clean one-line
+//! message (the `efla` binary exits with code 2, no backtrace).
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A user-facing command-line error (bad flag, bad value, missing flag) —
+/// or an explicit `--help` request (`is_help`), which callers render to
+/// stdout and exit 0 instead of treating as a failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CliError {
+    pub message: String,
+    pub is_help: bool,
+}
+
+impl CliError {
+    pub fn new(message: impl Into<String>) -> Self {
+        CliError { message: message.into(), is_help: false }
+    }
+
+    fn help(message: String) -> Self {
+        CliError { message, is_help: true }
+    }
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// One declared option.
 #[derive(Clone, Debug)]
@@ -67,11 +99,17 @@ impl Args {
         self
     }
 
-    /// Parse `std::env::args()` (skipping argv[0]). Exits on `--help` / error.
+    /// Parse `std::env::args()` (skipping argv[0]). Prints help to stdout
+    /// and exits 0 on `--help`; prints the error and exits 2 otherwise
+    /// (example/bench drivers; the `efla` binary threads the `Result`).
     pub fn parse(self) -> Parsed {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         match self.parse_from(&argv) {
             Ok(p) => p,
+            Err(e) if e.is_help => {
+                println!("{e}");
+                std::process::exit(0);
+            }
             Err(e) => {
                 eprintln!("{e}");
                 std::process::exit(2);
@@ -80,12 +118,12 @@ impl Args {
     }
 
     /// Parse an explicit argv (testable).
-    pub fn parse_from(mut self, argv: &[String]) -> Result<Parsed, String> {
+    pub fn parse_from(mut self, argv: &[String]) -> Result<Parsed, CliError> {
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
             if a == "--help" || a == "-h" {
-                return Err(self.usage());
+                return Err(CliError::help(self.usage()));
             }
             if let Some(stripped) = a.strip_prefix("--") {
                 let (name, inline_val) = match stripped.split_once('=') {
@@ -96,7 +134,9 @@ impl Args {
                     .opts
                     .iter()
                     .find(|o| o.name == name)
-                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?
+                    .ok_or_else(|| {
+                        CliError::new(format!("unknown flag --{name}\n\n{}", self.usage()))
+                    })?
                     .clone();
                 let val = if opt.is_bool {
                     match inline_val {
@@ -110,7 +150,7 @@ impl Args {
                             i += 1;
                             argv.get(i)
                                 .cloned()
-                                .ok_or_else(|| format!("--{name} requires a value"))?
+                                .ok_or_else(|| CliError::new(format!("--{name} requires a value")))?
                         }
                     }
                 };
@@ -127,7 +167,13 @@ impl Args {
                     Some(d) => {
                         self.values.insert(o.name.clone(), d.clone());
                     }
-                    None => return Err(format!("missing required flag --{}\n\n{}", o.name, self.usage())),
+                    None => {
+                        return Err(CliError::new(format!(
+                            "missing required flag --{}\n\n{}",
+                            o.name,
+                            self.usage()
+                        )))
+                    }
                 }
             }
         }
@@ -151,7 +197,7 @@ impl Args {
     }
 }
 
-/// Parsed argument values with typed getters.
+/// Parsed argument values with typed, `Result`-returning getters.
 #[derive(Debug)]
 pub struct Parsed {
     values: BTreeMap<String, String>,
@@ -159,36 +205,37 @@ pub struct Parsed {
 }
 
 impl Parsed {
-    pub fn get(&self, name: &str) -> &str {
+    pub fn get(&self, name: &str) -> Result<&str, CliError> {
         self.values
             .get(name)
-            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+            .map(|s| s.as_str())
+            .ok_or_else(|| CliError::new(format!("flag --{name} not declared")))
     }
 
-    pub fn usize(&self, name: &str) -> usize {
-        self.get(name)
-            .parse()
-            .unwrap_or_else(|e| panic!("--{name}: invalid integer ({e})"))
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.get(name)?;
+        v.parse()
+            .map_err(|e| CliError::new(format!("--{name}: invalid integer '{v}' ({e})")))
     }
 
-    pub fn u64(&self, name: &str) -> u64 {
-        self.get(name)
-            .parse()
-            .unwrap_or_else(|e| panic!("--{name}: invalid integer ({e})"))
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self.get(name)?;
+        v.parse()
+            .map_err(|e| CliError::new(format!("--{name}: invalid integer '{v}' ({e})")))
     }
 
-    pub fn f64(&self, name: &str) -> f64 {
-        self.get(name)
-            .parse()
-            .unwrap_or_else(|e| panic!("--{name}: invalid number ({e})"))
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.get(name)?;
+        v.parse()
+            .map_err(|e| CliError::new(format!("--{name}: invalid number '{v}' ({e})")))
     }
 
-    pub fn f32(&self, name: &str) -> f32 {
-        self.f64(name) as f32
+    pub fn f32(&self, name: &str) -> Result<f32, CliError> {
+        Ok(self.f64(name)? as f32)
     }
 
-    pub fn bool(&self, name: &str) -> bool {
-        matches!(self.get(name), "true" | "1" | "yes")
+    pub fn bool(&self, name: &str) -> Result<bool, CliError> {
+        Ok(matches!(self.get(name)?, "true" | "1" | "yes"))
     }
 }
 
@@ -208,9 +255,9 @@ mod tests {
             .flag("verbose", "verbose")
             .parse_from(&argv(&["--steps", "5", "--verbose"]))
             .unwrap();
-        assert_eq!(p.usize("steps"), 5);
-        assert!((p.f64("lr") - 0.001).abs() < 1e-12);
-        assert!(p.bool("verbose"));
+        assert_eq!(p.usize("steps").unwrap(), 5);
+        assert!((p.f64("lr").unwrap() - 0.001).abs() < 1e-12);
+        assert!(p.bool("verbose").unwrap());
     }
 
     #[test]
@@ -219,7 +266,7 @@ mod tests {
             .opt("mode", "a", "mode")
             .parse_from(&argv(&["--mode=b", "input.txt"]))
             .unwrap();
-        assert_eq!(p.get("mode"), "b");
+        assert_eq!(p.get("mode").unwrap(), "b");
         assert_eq!(p.positionals, vec!["input.txt"]);
     }
 
@@ -235,5 +282,29 @@ mod tests {
     fn unknown_flag_errors() {
         let r = Args::new("t", "test").parse_from(&argv(&["--nope"]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_value_is_an_error_not_a_panic() {
+        let p = Args::new("t", "test")
+            .opt("steps", "100", "steps")
+            .parse_from(&argv(&["--steps", "banana"]))
+            .unwrap();
+        let err = p.usize("steps").unwrap_err();
+        assert!(err.message.contains("--steps"), "{err}");
+        assert!(err.message.contains("banana"), "{err}");
+        assert!(!err.is_help);
+        // undeclared flags error too (no panic path left)
+        assert!(p.get("nope").is_err());
+    }
+
+    #[test]
+    fn help_is_flagged_distinctly() {
+        let err = Args::new("t", "test")
+            .opt("steps", "1", "steps")
+            .parse_from(&argv(&["--help"]))
+            .unwrap_err();
+        assert!(err.is_help);
+        assert!(err.message.contains("--steps"));
     }
 }

@@ -1,8 +1,12 @@
 //! Integration tests over the real PJRT runtime + tiny AOT artifacts.
 //!
-//! These need `make artifacts` to have run (artifacts/ + manifest.json).
-//! Each test opens its own Runtime (PJRT CPU clients are cheap) and uses
-//! the tiny preset so the whole file runs in seconds.
+//! Compiled only with `--features xla` (the PJRT backend needs a vendored
+//! `xla` crate) and need `make artifacts` to have run (artifacts/ +
+//! manifest.json). Each test opens its own Runtime (PJRT CPU clients are
+//! cheap) and uses the tiny preset so the whole file runs in seconds.
+//!
+//! Backend-agnostic coverage (CPU backend) lives in `tests/cpu_backend.rs`.
+#![cfg(feature = "xla")]
 
 use std::path::{Path, PathBuf};
 
@@ -85,9 +89,7 @@ fn training_reduces_loss_on_fixed_batch() {
     let mut first = None;
     let mut last = 0.0;
     for _ in 0..30 {
-        let m = session
-            .step([t.to_literal().unwrap(), y.to_literal().unwrap()], 1e-3)
-            .unwrap();
+        let m = session.step([t.clone(), y.clone()], 1e-3).unwrap();
         first.get_or_insert(m.loss);
         last = m.loss;
         assert!(m.loss.is_finite(), "loss must stay finite");
@@ -107,9 +109,7 @@ fn deltanet_variant_also_trains() {
     let (t, y) = lm_batch(2, session.batch, session.seq, 256);
     let mut losses = Vec::new();
     for _ in 0..10 {
-        let m = session
-            .step([t.to_literal().unwrap(), y.to_literal().unwrap()], 1e-3)
-            .unwrap();
+        let m = session.step([t.clone(), y.clone()], 1e-3).unwrap();
         losses.push(m.loss);
     }
     assert!(losses.last().unwrap() < losses.first().unwrap());
@@ -120,7 +120,7 @@ fn eval_returns_consistent_statistics() {
     let rt = runtime();
     let session = Session::init(&rt, "lm_tiny_efla", 3).unwrap();
     let (t, y) = lm_batch(5, session.batch, session.seq, 256);
-    let outs = session.eval([t.to_literal().unwrap(), y.to_literal().unwrap()]).unwrap();
+    let outs = session.eval([t, y]).unwrap();
     assert_eq!(outs.len(), 3);
     let (loss_sum, count, correct) = (outs[0], outs[1], outs[2]);
     // tiny: batch 4 x seq 64, last target per row = valid (stream targets)
@@ -133,81 +133,20 @@ fn eval_returns_consistent_statistics() {
 }
 
 #[test]
-fn prefill_matches_logits_last() {
-    // The serving path must agree with the training-path forward.
-    let rt = runtime();
-    let session = Session::init(&rt, "lm_tiny_efla", 11).unwrap();
-    let prefill = rt.load("lm_tiny_efla_prefill").unwrap();
-    let logits_last = rt.load("lm_tiny_efla_logits_last").unwrap();
-    let pf_spec = prefill.spec();
-    let (b, lp) = (pf_spec.batch, pf_spec.inputs.last().unwrap().shape[1]);
-
-    let mut rng = Rng::new(9);
-    let toks: Vec<i32> = (0..4 * lp).map(|_| rng.below(256) as i32).collect();
-    // logits_last takes (batch=4, seq=64): pad prompt into the first lp cols
-    let full_seq = logits_last.spec().seq;
-    assert_eq!(b, 4);
-    let pf_out = session
-        .run_aux(&prefill, &[HostValue::i32(&[b, lp], toks.clone()).to_literal().unwrap()])
-        .unwrap();
-    let pf_logits = HostValue::from_literal(&pf_out[0], &pf_spec.outputs[0])
-        .unwrap()
-        .into_f32()
-        .unwrap();
-
-    // Build a full-length batch whose first lp tokens match, rest arbitrary;
-    // causality means logits at position lp-1 depend only on the prefix, but
-    // logits_last reads the LAST position — so instead run prefill length
-    // against decode parity below. Here we check shape/finite only.
-    assert_eq!(pf_logits.shape(), &[b, 256]);
-    assert!(pf_logits.data().iter().all(|x| x.is_finite()));
-    let _ = full_seq;
-}
-
-#[test]
-fn decode_continues_prefill_consistently() {
-    // prefill(prompt) then decode(token) must equal prefill(prompt+token).
+fn decode_state_advances_between_steps() {
     let rt = runtime();
     let session = Session::init(&rt, "lm_tiny_efla", 13).unwrap();
-    let prefill = rt.load("lm_tiny_efla_prefill").unwrap();
-    let decode = rt.load("lm_tiny_efla_decode").unwrap();
-    let spec = prefill.spec();
-    let (b, lp) = (4usize, spec.inputs.last().unwrap().shape[1]);
-
-    let mut rng = Rng::new(21);
-    let prompt: Vec<i32> = (0..b * lp).map(|_| rng.below(256) as i32).collect();
-
-    // Path A: prefill on the first lp-1 tokens... prefill length is fixed,
-    // so instead: prefill(prompt) -> decode(next) vs full forward through
-    // prefill of shifted window is not shape-compatible. We check internal
-    // consistency: decode applied twice from the prefill state changes
-    // logits (state advances) and stays finite.
-    let pf_out = session
-        .run_aux(&prefill, &[HostValue::i32(&[b, lp], prompt).to_literal().unwrap()])
-        .unwrap();
-    let n_state = spec.state_names.len();
-    let state: Vec<xla::Literal> = pf_out.into_iter().skip(1).collect();
-    assert_eq!(state.len(), n_state);
-
-    let tok = HostValue::i32(&[b], vec![65; b]).to_literal().unwrap();
-    let mut extra: Vec<xla::Literal> = state;
-    extra.push(tok);
-    let d1 = session.run_aux(&decode, &extra).unwrap();
-    let d1_logits = HostValue::from_literal(&d1[0], &decode.spec().outputs[0])
-        .unwrap()
-        .into_f32()
-        .unwrap();
-    assert!(d1_logits.data().iter().all(|x| x.is_finite()));
-
+    let b = session.decode_batch().unwrap();
+    let vocab = session.vocab().unwrap();
+    assert!(b > 0 && vocab > 0);
+    let state = session.decode_state().unwrap();
+    let tokens = vec![65i32; b];
+    let (l1, state1) = session.decode(&state, &tokens).unwrap();
+    assert_eq!(l1.shape(), &[b, vocab]);
+    assert!(l1.data().iter().all(|x| x.is_finite()));
     // feed the same token again with the NEW state: logits must differ
-    let mut extra2: Vec<xla::Literal> = d1.into_iter().skip(1).collect();
-    extra2.push(HostValue::i32(&[b], vec![65; b]).to_literal().unwrap());
-    let d2 = session.run_aux(&decode, &extra2).unwrap();
-    let d2_logits = HostValue::from_literal(&d2[0], &decode.spec().outputs[0])
-        .unwrap()
-        .into_f32()
-        .unwrap();
-    assert!(d1_logits.max_abs_diff(&d2_logits) > 1e-6, "state must advance");
+    let (l2, _) = session.decode(&state1, &tokens).unwrap();
+    assert!(l1.max_abs_diff(&l2) > 1e-6, "state must advance");
 }
 
 #[test]
@@ -288,7 +227,7 @@ fn trainer_run_end_to_end_with_checkpoint() {
     let mut s2 = Session::init(&rt, "lm_tiny_efla", 1).unwrap();
     s2.import_state(&tensors, step).unwrap();
     let (t, y) = lm_batch(33, s2.batch, s2.seq, 256);
-    let m = s2.step([t.to_literal().unwrap(), y.to_literal().unwrap()], 1e-4).unwrap();
+    let m = s2.step([t, y], 1e-4).unwrap();
     assert!(m.loss.is_finite());
     assert_eq!(s2.steps_done(), 9);
     std::fs::remove_dir_all(&out).ok();
@@ -298,7 +237,7 @@ fn trainer_run_end_to_end_with_checkpoint() {
 fn server_completes_batched_requests() {
     let rt = runtime();
     let session = Session::init(&rt, "lm_tiny_efla", 5).unwrap();
-    let mut server = Server::new(&rt, &session, 99).unwrap();
+    let mut server = Server::new(&session, 99).unwrap();
     let mut rng = Rng::new(1);
     for id in 0..6u64 {
         // more requests than slots (batch=4): exercises continuous batching
@@ -355,7 +294,7 @@ fn mismatched_input_shape_rejected_before_execution() {
 }
 
 #[test]
-fn hlo_artifacts_exist_and_are_text(){
+fn hlo_artifacts_exist_and_are_text() {
     let dir = artifact_dir();
     for name in ["lm_tiny_efla_step", "lm_tiny_deltanet_init"] {
         let p: &Path = &dir.join(format!("{name}.hlo.txt"));

@@ -4,7 +4,7 @@
 //!   * tokenizer: naive stream encode vs word-cached encode;
 //!   * BPE training throughput (word-histogram algorithm);
 //!   * data pipeline: inline batch generation vs prefetched;
-//!   * PJRT step breakdown: literal build vs execute+decompose.
+//!   * backend step breakdown: data vs step (fwd+bwd+AdamW).
 
 use std::time::Instant;
 
@@ -13,7 +13,7 @@ use efla::coordinator::session::Session;
 use efla::data::corpus::{Corpus, CorpusConfig};
 use efla::data::loader::{Prefetcher, TokenStream};
 use efla::data::tokenizer::Bpe;
-use efla::runtime::{HostValue, Runtime};
+use efla::runtime::open_backend;
 
 fn secs<F: FnMut()>(mut f: F) -> f64 {
     let t0 = Instant::now();
@@ -71,35 +71,31 @@ fn perf_prefetch_overlap() {
 #[test]
 #[ignore]
 fn perf_step_breakdown() {
-    let rt = Runtime::open(std::path::Path::new("artifacts")).unwrap();
-    let mut session = Session::init(&rt, "lm_tiny_efla", 42).unwrap();
+    let backend = open_backend(std::path::Path::new("artifacts")).unwrap();
+    let mut session = Session::init(backend.as_ref(), "lm_tiny_efla", 42).unwrap();
     let cfg = RunConfig { corpus_bytes: 200_000, ..Default::default() };
     let (pf, _) = efla::coordinator::trainer::lm_data(&cfg, session.batch, session.seq).unwrap();
 
-    // warm the executable
+    // warm the step path (PJRT: compiles the executable; CPU: page-in)
     let (t, y) = pf.next();
-    session.step([t.to_literal().unwrap(), y.to_literal().unwrap()], 1e-3).unwrap();
+    session.step([t, y], 1e-3).unwrap();
 
     let iters = 20;
     let mut t_data = 0.0;
-    let mut t_lit = 0.0;
     let mut t_exec = 0.0;
     for _ in 0..iters {
         let t0 = Instant::now();
         let (t, y) = pf.next();
         t_data += t0.elapsed().as_secs_f64();
-        let t1 = Instant::now();
-        let lits = [t.to_literal().unwrap(), y.to_literal().unwrap()];
-        t_lit += t1.elapsed().as_secs_f64();
         let t2 = Instant::now();
-        session.step(lits, 1e-3).unwrap();
+        session.step([t, y], 1e-3).unwrap();
         t_exec += t2.elapsed().as_secs_f64();
     }
     let n = iters as f64;
     println!(
-        "tiny step breakdown: data {:.2}ms | literal build {:.3}ms | step(exec+state roundtrip) {:.2}ms",
+        "tiny step breakdown ({} backend): data {:.2}ms | step(fwd+bwd+adamw) {:.2}ms",
+        backend.name(),
         t_data / n * 1e3,
-        t_lit / n * 1e3,
         t_exec / n * 1e3
     );
     let p = session.param_elems();
