@@ -13,6 +13,10 @@
 
 use efla::attention::{alpha_efla, chunkwise_delta, gates, sequential_delta, Gate};
 use efla::coordinator::experiments::{chunkwise_consistency, integrator_error};
+use efla::runtime::cpu::config::family_config;
+use efla::runtime::cpu::exec::Executor;
+use efla::runtime::cpu::model::lm_loss;
+use efla::runtime::cpu::params::ParamSet;
 use efla::tensor::Tensor;
 use efla::util::bench::{bench, fmt_secs, Table};
 use efla::util::json::{self, Json};
@@ -127,11 +131,78 @@ fn main() {
     println!("(the exact gate is one expm1 per token — negligible next to the d^2 state update)\n");
     report.push(("gate_cost", t.to_json()));
 
+    // ---- 6. model forward thread scaling ---------------------------
+    // Full LM forward through the layered CPU model at 1/2/4/max worker
+    // threads: the (batch x head) chunkwise kernels and the projection
+    // matmuls fan out over the executor, numerics bit-identical.
+    let family = if fast() { "lm_tiny_efla" } else { "lm_mini_efla" };
+    let cfg = family_config(family).unwrap();
+    let params = ParamSet::init(&cfg, 42);
+    let rows = cfg.batch * cfg.seq;
+    let mut rng = Rng::new(11);
+    let toks: Vec<i32> = (0..rows).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+    let tgts: Vec<i32> = (0..rows).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+    let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut counts = vec![1usize, 2, 4];
+    if !counts.contains(&max_threads) {
+        counts.push(max_threads);
+    }
+    counts.sort_unstable();
+    counts.dedup();
+
+    println!(
+        "## Model forward thread scaling ({family}: B={} L={} layers={} heads={}, max={max_threads})\n",
+        cfg.batch, cfg.seq, cfg.n_layers, cfg.n_heads
+    );
+    let iters = if fast() { 3 } else { 8 };
+    let mut t = Table::new(&["threads", "mean", "p95", "tokens/s", "speedup"]);
+    let mut base_mean = 0.0f64;
+    let mut scaling = Vec::new();
+    for &threads in &counts {
+        let exec = Executor::new(threads);
+        let s = bench(1, iters, || {
+            std::hint::black_box(
+                lm_loss(&cfg, &params, &exec, &toks, &tgts, cfg.batch, cfg.seq, None)
+                    .unwrap(),
+            );
+        });
+        if threads == 1 {
+            base_mean = s.mean;
+        }
+        let speedup = base_mean / s.mean.max(1e-12);
+        t.row(&[
+            format!("{threads}"),
+            fmt_secs(s.mean),
+            fmt_secs(s.p95),
+            format!("{:.0}", s.per_sec(rows as f64)),
+            format!("{speedup:.2}x"),
+        ]);
+        scaling.push(Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("mean_secs", Json::Num(s.mean)),
+            ("tokens_per_sec", Json::Num(s.per_sec(rows as f64))),
+            ("speedup_vs_1", Json::Num(speedup)),
+        ]));
+    }
+    println!("{}", t.render());
+    let scaling_json = Json::obj(vec![
+        ("bench", Json::Str("forward_thread_scaling".into())),
+        ("family", Json::Str(family.into())),
+        ("rows", Json::Num(rows as f64)),
+        ("max_parallelism", Json::Num(max_threads as f64)),
+        ("points", Json::Arr(scaling)),
+    ]);
+    // Machine-readable one-liner (seed for BENCH_*.json trajectory tracking).
+    println!("BENCH {}", scaling_json.to_string());
+    report.push(("forward_thread_scaling", scaling_json.clone()));
+
     let out = Json::Obj(
         report.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
     );
     let path = std::path::Path::new("bench_results");
     std::fs::create_dir_all(path).ok();
     json::write_file(&path.join("kernel_throughput.json"), &out).unwrap();
+    json::write_file(&path.join("BENCH_forward_threads.json"), &scaling_json).unwrap();
     println!("json: bench_results/kernel_throughput.json");
+    println!("json: bench_results/BENCH_forward_threads.json");
 }

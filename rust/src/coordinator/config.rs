@@ -53,6 +53,9 @@ pub struct RunConfig {
     pub eval_batches: usize,
     /// Corpus bytes to synthesize for LM runs.
     pub corpus_bytes: usize,
+    /// CPU-backend worker threads (0 = auto: `EFLA_NUM_THREADS` or the
+    /// machine's available parallelism).
+    pub threads: usize,
     pub artifact_dir: PathBuf,
     pub out_dir: PathBuf,
     /// Optional checkpoint interval (0 = none).
@@ -71,6 +74,7 @@ impl Default for RunConfig {
             eval_every: 0,
             eval_batches: 8,
             corpus_bytes: 2_000_000,
+            threads: 0,
             artifact_dir: PathBuf::from("artifacts"),
             out_dir: PathBuf::from("runs"),
             ckpt_every: 0,
@@ -110,6 +114,7 @@ impl RunConfig {
             eval_every: j.get("eval_every").as_usize().unwrap_or(0) as u64,
             eval_batches: j.get("eval_batches").as_usize().unwrap_or(d.eval_batches),
             corpus_bytes: j.get("corpus_bytes").as_usize().unwrap_or(d.corpus_bytes),
+            threads: j.get("threads").as_usize().unwrap_or(d.threads),
             artifact_dir: PathBuf::from(
                 j.get("artifact_dir").as_str().unwrap_or("artifacts"),
             ),
@@ -129,6 +134,7 @@ impl RunConfig {
             ("eval_every", Json::Num(self.eval_every as f64)),
             ("eval_batches", Json::Num(self.eval_batches as f64)),
             ("corpus_bytes", Json::Num(self.corpus_bytes as f64)),
+            ("threads", Json::Num(self.threads as f64)),
             (
                 "artifact_dir",
                 Json::Str(self.artifact_dir.to_string_lossy().into_owned()),
@@ -161,12 +167,14 @@ mod tests {
         c.steps = 777;
         c.mixer = "efla_loose".into();
         c.peak_lr = 1e-3;
+        c.threads = 6;
         let j = c.to_json();
         let c2 = RunConfig::from_json(&j).unwrap();
         assert_eq!(c2.steps, 777);
         assert_eq!(c2.mixer, "efla_loose");
         assert!((c2.peak_lr - 1e-3).abs() < 1e-12);
         assert_eq!(c2.task, Task::Lm);
+        assert_eq!(c2.threads, 6);
     }
 
     #[test]

@@ -62,12 +62,27 @@ pub struct ServerStats {
     pub tokens_processed: u64,
     pub completed: u64,
     pub wall_secs: f64,
+    /// Decode slots of the engine (fixed batch of the decode graph).
+    pub batch: usize,
+    /// Executor worker threads the backend session decodes with.
+    pub threads: usize,
 }
 
 impl ServerStats {
     pub fn tokens_per_sec(&self) -> f64 {
         if self.wall_secs > 0.0 {
             self.tokens_processed as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean per-step slot occupancy in [0, 1] (1.0 = every decode slot —
+    /// and hence every parallel (slot, head) work item — busy each step).
+    pub fn utilization(&self) -> f64 {
+        let cap = (self.engine_steps as f64) * (self.batch as f64);
+        if cap > 0.0 {
+            self.tokens_processed as f64 / cap
         } else {
             0.0
         }
@@ -97,6 +112,8 @@ impl<'a> Server<'a> {
         }
         let vocab = session.vocab()?;
         let state = session.decode_state()?;
+        let stats =
+            ServerStats { batch, threads: session.threads(), ..ServerStats::default() };
         Ok(Server {
             session,
             state,
@@ -106,7 +123,7 @@ impl<'a> Server<'a> {
             rng: Rng::new(seed),
             batch,
             vocab,
-            stats: ServerStats::default(),
+            stats,
         })
     }
 
@@ -186,9 +203,9 @@ impl<'a> Server<'a> {
             };
         }
 
-        // Execute one batched decode over the host-resident state.
-        let (logits, new_state) = self.session.decode(&self.state, &tokens)?;
-        self.state = new_state;
+        // Execute one batched decode over the host-resident state — the
+        // backend advances the slot rows in place (no per-step copy).
+        let logits = self.session.decode(&mut self.state, &tokens)?;
 
         // Advance slots.
         self.stats.engine_steps += 1;
@@ -287,5 +304,11 @@ mod tests {
             assert!(r.tokens.iter().all(|&t| (0..256).contains(&t)));
         }
         assert_eq!(server.stats.completed, n_req);
+        // Utilization telemetry: the queue outnumbers the slots, so most
+        // steps run a full batch.
+        assert_eq!(server.stats.batch, server.batch_size());
+        assert!(server.stats.threads >= 1);
+        let util = server.stats.utilization();
+        assert!(util > 0.5 && util <= 1.0, "slot occupancy {util}");
     }
 }

@@ -34,6 +34,11 @@ impl Session {
         self.inner.steps_done()
     }
 
+    /// Worker threads the backend session's executor uses.
+    pub fn threads(&self) -> usize {
+        self.inner.threads()
+    }
+
     pub fn n_params_tensors(&self) -> usize {
         self.inner.n_param_tensors()
     }
@@ -87,12 +92,9 @@ impl Session {
         self.inner.decode_state()
     }
 
-    /// One batched decode step: logits (decode_batch, vocab) + new state.
-    pub fn decode(
-        &self,
-        state: &[HostValue],
-        tokens: &[i32],
-    ) -> Result<(Tensor, Vec<HostValue>)> {
+    /// One batched decode step: advances `state` in place, returns logits
+    /// (decode_batch, vocab).
+    pub fn decode(&self, state: &mut [HostValue], tokens: &[i32]) -> Result<Tensor> {
         self.inner.decode(state, tokens)
     }
 }

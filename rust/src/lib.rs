@@ -29,11 +29,15 @@
 //! [`runtime::Backend`] / [`runtime::ModelSession`] traits:
 //!
 //! * **CPU backend** ([`runtime::CpuBackend`]) — always available, pure
-//!   Rust: model forward/backward (hand-written reverse mode through the
-//!   delta-rule recurrence), AdamW, eval statistics and the O(1)-state
-//!   decode, all on top of [`tensor`] + [`attention`]. Needs no artifacts:
-//!   families like `lm_tiny_efla` are built from their names using the same
-//!   preset table `python/compile/model.py` uses.
+//!   Rust: a composable layer stack (`runtime/cpu/layers/` with paired
+//!   fwd/bwd tapes over the primitives in `runtime/cpu/ops.rs`), AdamW,
+//!   eval statistics and the O(1)-state in-place decode, all on top of
+//!   [`tensor`] + [`attention`]. The per-(batch, head) kernel work and
+//!   large matmuls fan out over a `std::thread::scope` executor
+//!   (`--threads` / `EFLA_NUM_THREADS`, bit-identical numerics at any
+//!   count). Needs no artifacts: families like `lm_tiny_efla` are built
+//!   from their names using the same preset table
+//!   `python/compile/model.py` uses.
 //! * **PJRT backend** (`runtime::pjrt`, feature `xla`, off by default) —
 //!   executes the AOT HLO-text artifacts through a vendored `xla` crate.
 //!   With the feature disabled the PJRT code is compiled out entirely;

@@ -24,7 +24,7 @@ use efla::coordinator::config::{RunConfig, Task};
 use efla::coordinator::server::{GenRequest, Server};
 use efla::coordinator::session::Session;
 use efla::coordinator::trainer;
-use efla::runtime::open_backend;
+use efla::runtime::{open_backend, open_backend_threads};
 use efla::util::cli::{Args, CliError};
 use efla::util::logging;
 
@@ -84,6 +84,7 @@ fn common_args(program: &str, about: &str) -> Args {
         .opt("peak-lr", "0.0003", "peak learning rate")
         .opt("eval-batches", "8", "eval batches at the end")
         .opt("corpus-bytes", "2000000", "synthetic corpus size (LM)")
+        .opt("threads", "0", "CPU worker threads (0 = auto / EFLA_NUM_THREADS)")
         .opt("artifacts", "artifacts", "artifact directory (PJRT backend)")
         .opt("out", "runs", "output directory")
 }
@@ -102,6 +103,7 @@ fn build_config(p: &efla::util::cli::Parsed) -> Result<RunConfig> {
     cfg.peak_lr = p.f64("peak-lr")?;
     cfg.eval_batches = p.usize("eval-batches")?;
     cfg.corpus_bytes = p.usize("corpus-bytes")?;
+    cfg.threads = p.usize("threads")?;
     cfg.artifact_dir = PathBuf::from(p.get("artifacts")?);
     cfg.out_dir = PathBuf::from(p.get("out")?);
     Ok(cfg)
@@ -110,7 +112,7 @@ fn build_config(p: &efla::util::cli::Parsed) -> Result<RunConfig> {
 fn cmd_train(argv: &[String]) -> Result<()> {
     let p = common_args("efla train", "train a model").parse_from(argv)?;
     let cfg = build_config(&p)?;
-    let backend = open_backend(&cfg.artifact_dir)?;
+    let backend = open_backend_threads(&cfg.artifact_dir, cfg.threads)?;
     log::info!("backend: {}", backend.name());
     let hist = trainer::run(backend.as_ref(), &cfg)?;
     log::info!(
@@ -133,7 +135,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if cfg.task != Task::Lm {
         bail!("serve only supports --task lm");
     }
-    let backend = open_backend(&cfg.artifact_dir)?;
+    let backend = open_backend_threads(&cfg.artifact_dir, cfg.threads)?;
     log::info!("backend: {}", backend.name());
     let family = cfg.family();
     let mut session = Session::init(backend.as_ref(), &family, cfg.seed as u32)?;
@@ -160,11 +162,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     let results = server.run_to_completion()?;
     log::info!(
-        "served {} requests | {} engine steps | {:.1} tok/s (batch {})",
+        "served {} requests | {} engine steps | {:.1} tok/s \
+         (batch {}, {} threads, {:.0}% slot occupancy)",
         results.len(),
         server.stats.engine_steps,
         server.stats.tokens_per_sec(),
-        server.batch_size()
+        server.batch_size(),
+        server.stats.threads,
+        server.stats.utilization() * 100.0
     );
     for r in results.iter().take(4) {
         log::info!("req {}: {} new tokens in {} slot-steps", r.id, r.tokens.len(), r.steps);

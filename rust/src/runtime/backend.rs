@@ -61,6 +61,12 @@ pub trait ModelSession {
 
     fn steps_done(&self) -> u64;
 
+    /// Worker threads the session's executor uses (1 for backends without
+    /// a host-side work-splitter).
+    fn threads(&self) -> usize {
+        1
+    }
+
     /// One optimizer step. `d0`/`d1` are the two data slots of the step
     /// graph (tokens/targets for LM+MAD, pixels/labels for the classifier).
     fn step(&mut self, d0: &HostValue, d1: &HostValue, lr: f32) -> Result<StepMetrics>;
@@ -92,12 +98,8 @@ pub trait ModelSession {
     /// host-side between requests).
     fn decode_state(&self) -> Result<Vec<HostValue>>;
 
-    /// One batched decode step: feed one token per slot, return logits
-    /// `(decode_batch, vocab)` and the advanced state (same shapes as
-    /// `state`).
-    fn decode(
-        &self,
-        state: &[HostValue],
-        tokens: &[i32],
-    ) -> Result<(Tensor, Vec<HostValue>)>;
+    /// One batched decode step: feed one token per slot, advance `state`
+    /// **in place** (shapes are preserved; the serving loop never copies
+    /// state between steps), return logits `(decode_batch, vocab)`.
+    fn decode(&self, state: &mut [HostValue], tokens: &[i32]) -> Result<Tensor>;
 }

@@ -1,0 +1,202 @@
+//! Multi-threaded work-splitter for the CPU backend.
+//!
+//! The EFLA math is embarrassingly parallel across (batch, head) pairs —
+//! the chunkwise kernel, the BPTT recurrence and the decode state update
+//! all touch disjoint state per pair — and the big projection matmuls are
+//! independent per output row. [`Executor`] fans that work out over plain
+//! `std::thread::scope` workers (no dependencies, no persistent pool).
+//!
+//! **Determinism contract:** every parallel shape offered here produces
+//! bit-identical results for any thread count. [`Executor::map`] computes
+//! each task independently and the caller scatters/accumulates results in
+//! task-index order; [`Executor::par_rows`] splits an output buffer into
+//! contiguous row chunks, and each row's computation never depends on
+//! which chunk it landed in. No floating-point reduction ever changes its
+//! association order with the thread count — that property is pinned by
+//! `tests/model_layers.rs`.
+//!
+//! The thread count resolves as: explicit knob (`--threads`) >
+//! `EFLA_NUM_THREADS` > `std::thread::available_parallelism()`.
+
+use std::thread;
+
+/// Environment override for the worker-thread count.
+pub const ENV_THREADS: &str = "EFLA_NUM_THREADS";
+
+/// Scoped-thread work-splitter with a fixed worker count.
+#[derive(Clone, Debug)]
+pub struct Executor {
+    threads: usize,
+}
+
+impl Default for Executor {
+    fn default() -> Self {
+        Executor::new(0)
+    }
+}
+
+impl Executor {
+    /// `threads == 0` means auto: `EFLA_NUM_THREADS` if set (and > 0),
+    /// else the machine's available parallelism.
+    pub fn new(threads: usize) -> Executor {
+        let resolved = if threads == 0 { env_or_auto() } else { threads };
+        Executor { threads: resolved.max(1) }
+    }
+
+    /// Single-threaded executor (reference numerics / tests).
+    pub fn serial() -> Executor {
+        Executor { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), ..., f(n-1)` across the workers and return the results
+    /// in task order. Tasks must be independent; each result is computed
+    /// exactly as it would be serially, so output is thread-count
+    /// invariant.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.threads == 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let workers = self.threads.min(n);
+        let f = &f;
+        let run_stride = move |w: usize| {
+            let mut out = Vec::new();
+            let mut i = w;
+            while i < n {
+                out.push((i, f(i)));
+                i += workers;
+            }
+            out
+        };
+        // Fork-join: spawn workers 1.., run stride 0 on the calling thread.
+        let per_worker: Vec<Vec<(usize, T)>> = thread::scope(|scope| {
+            let handles: Vec<_> =
+                (1..workers).map(|w| scope.spawn(move || run_stride(w))).collect();
+            let mut all = vec![run_stride(0)];
+            all.extend(
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("executor worker panicked")),
+            );
+            all
+        });
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for chunk in per_worker {
+            for (i, v) in chunk {
+                slots[i] = Some(v);
+            }
+        }
+        slots.into_iter().map(|s| s.expect("executor task missing")).collect()
+    }
+
+    /// Split `out` (`rows` equal-width rows) into one contiguous chunk per
+    /// worker and call `f(row_start, row_end, chunk)` on each. Rows must be
+    /// independent (row-parallel matmuls, elementwise maps): per-row
+    /// results never depend on the chunking, so output is thread-count
+    /// invariant.
+    pub fn par_rows<F>(&self, rows: usize, out: &mut [f32], f: F)
+    where
+        F: Fn(usize, usize, &mut [f32]) + Sync,
+    {
+        if rows == 0 {
+            return;
+        }
+        assert_eq!(out.len() % rows, 0, "output length not divisible by rows");
+        let width = out.len() / rows;
+        let workers = self.threads.min(rows);
+        if workers <= 1 {
+            f(0, rows, out);
+            return;
+        }
+        let base = rows / workers;
+        let extra = rows % workers;
+        let f = &f;
+        // Fork-join: spawn all but the last chunk, run the last on the
+        // calling thread while the workers run theirs.
+        thread::scope(|scope| {
+            let mut rest = out;
+            let mut row0 = 0usize;
+            for w in 0..workers - 1 {
+                let nrows = base + usize::from(w < extra);
+                // Move the running slice out before splitting so the tail
+                // can be reassigned while the chunk is lent to the worker.
+                let tmp = rest;
+                let (chunk, tail) = tmp.split_at_mut(nrows * width);
+                rest = tail;
+                let start = row0;
+                scope.spawn(move || f(start, start + nrows, chunk));
+                row0 += nrows;
+            }
+            f(row0, rows, rest);
+        });
+    }
+}
+
+fn env_or_auto() -> usize {
+    match std::env::var(ENV_THREADS) {
+        Ok(v) => v
+            .trim()
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n > 0)
+            .unwrap_or_else(auto_threads),
+        Err(_) => auto_threads(),
+    }
+}
+
+fn auto_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_returns_results_in_task_order() {
+        for threads in [1, 2, 4, 7] {
+            let ex = Executor::new(threads);
+            let out = ex.map(23, |i| i * i);
+            let expect: Vec<usize> = (0..23).map(|i| i * i).collect();
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let ex = Executor::new(4);
+        assert!(ex.map(0, |i| i).is_empty());
+        assert_eq!(ex.map(1, |i| i + 41), vec![41]);
+    }
+
+    #[test]
+    fn par_rows_covers_every_row_exactly_once() {
+        for threads in [1, 2, 3, 8] {
+            let ex = Executor::new(threads);
+            let (rows, width) = (11, 5);
+            let mut out = vec![0.0f32; rows * width];
+            ex.par_rows(rows, &mut out, |r0, r1, chunk| {
+                assert_eq!(chunk.len(), (r1 - r0) * width);
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x += (r0 * width + i) as f32;
+                }
+            });
+            let expect: Vec<f32> = (0..rows * width).map(|i| i as f32).collect();
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zero_knob_resolves_to_at_least_one_thread() {
+        assert!(Executor::new(0).threads() >= 1);
+        assert_eq!(Executor::serial().threads(), 1);
+        assert_eq!(Executor::new(3).threads(), 3);
+    }
+}

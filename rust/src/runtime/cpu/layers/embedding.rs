@@ -1,0 +1,167 @@
+//! Input embeddings: token-table lookup (LM) and the linear per-pixel
+//! embedding of the sMNIST classifier. Inputs are integer/scalar streams
+//! rather than f32 activations, so these expose their own paired fwd/bwd
+//! instead of the [`super::Layer`] trait.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::super::params::ParamSet;
+use super::Ctx;
+
+/// Token-id lookup into the (tied) embedding table.
+pub struct TokenEmbedding {
+    embed: usize,
+}
+
+impl TokenEmbedding {
+    pub fn new(params: &ParamSet) -> TokenEmbedding {
+        TokenEmbedding { embed: params.idx("embed") }
+    }
+
+    /// Validating lookup: tokens (B*L,) -> x (B*L, d).
+    pub fn forward(&self, ctx: &Ctx, tokens: &[i32]) -> Result<Vec<f32>> {
+        let d = ctx.cfg.d_model;
+        let vocab = ctx.cfg.vocab;
+        let table = ctx.params.tensor(self.embed).data();
+        let mut x = vec![0.0f32; tokens.len() * d];
+        for (r, &t) in tokens.iter().enumerate() {
+            if t < 0 || t as usize >= vocab {
+                bail!("token id {t} out of range (vocab {vocab})");
+            }
+            let t = t as usize;
+            x[r * d..(r + 1) * d].copy_from_slice(&table[t * d..(t + 1) * d]);
+        }
+        Ok(x)
+    }
+
+    /// Scatter-add dx rows into the embedding gradient.
+    pub fn backward(&self, ctx: &Ctx, tokens: &[i32], dx: &[f32], grads: &mut [Tensor]) {
+        let d = ctx.cfg.d_model;
+        let dembed = grads[self.embed].data_mut();
+        for (r, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            let dr = &dx[r * d..(r + 1) * d];
+            let er = &mut dembed[t * d..(t + 1) * d];
+            for j in 0..d {
+                er[j] += dr[j];
+            }
+        }
+    }
+}
+
+/// Linear pixel embedding: x_r = px_r * pix_w + pix_b.
+pub struct PixelEmbedding {
+    pix_w: usize,
+    pix_b: usize,
+}
+
+impl PixelEmbedding {
+    pub fn new(params: &ParamSet) -> PixelEmbedding {
+        PixelEmbedding { pix_w: params.idx("pix_w"), pix_b: params.idx("pix_b") }
+    }
+
+    /// pixels (B*L,) -> x (B*L, d).
+    pub fn forward(&self, ctx: &Ctx, pixels: &[f32]) -> Vec<f32> {
+        let d = ctx.cfg.d_model;
+        let pw = ctx.params.tensor(self.pix_w).data();
+        let pb = ctx.params.tensor(self.pix_b).data();
+        let mut x = vec![0.0f32; pixels.len() * d];
+        for (r, &px) in pixels.iter().enumerate() {
+            let xr = &mut x[r * d..(r + 1) * d];
+            for j in 0..d {
+                xr[j] = px * pw[j] + pb[j];
+            }
+        }
+        x
+    }
+
+    pub fn backward(&self, ctx: &Ctx, pixels: &[f32], dx: &[f32], grads: &mut [Tensor]) {
+        let d = ctx.cfg.d_model;
+        {
+            let dpw = grads[self.pix_w].data_mut();
+            for (r, &px) in pixels.iter().enumerate() {
+                if px == 0.0 {
+                    continue;
+                }
+                let dr = &dx[r * d..(r + 1) * d];
+                for j in 0..d {
+                    dpw[j] += px * dr[j];
+                }
+            }
+        }
+        let dpb = grads[self.pix_b].data_mut();
+        for r in 0..pixels.len() {
+            let dr = &dx[r * d..(r + 1) * d];
+            for j in 0..d {
+                dpb[j] += dr[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::config::family_config;
+    use super::super::super::exec::Executor;
+    use super::*;
+
+    #[test]
+    fn token_lookup_and_gradient_scatter() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let params = ParamSet::init(&cfg, 2);
+        let exec = Executor::serial();
+        let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b: 1, l: 3 };
+        let layer = TokenEmbedding::new(&params);
+        let tokens = [5i32, 9, 5];
+        let x = layer.forward(&ctx, &tokens).unwrap();
+        let d = cfg.d_model;
+        let table = params.get("embed").data();
+        assert_eq!(&x[0..d], &table[5 * d..6 * d]);
+        assert_eq!(&x[d..2 * d], &table[9 * d..10 * d]);
+
+        let mut grads = params.zeros_like();
+        let dx = vec![1.0f32; 3 * d];
+        layer.backward(&ctx, &tokens, &dx, &mut grads);
+        let ge = grads[params.idx("embed")].data();
+        // token 5 hit twice, token 9 once, everything else untouched
+        assert!((ge[5 * d] - 2.0).abs() < 1e-6);
+        assert!((ge[9 * d] - 1.0).abs() < 1e-6);
+        assert_eq!(ge[0], 0.0);
+    }
+
+    #[test]
+    fn out_of_range_token_rejected() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let params = ParamSet::init(&cfg, 2);
+        let exec = Executor::serial();
+        let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b: 1, l: 1 };
+        let layer = TokenEmbedding::new(&params);
+        assert!(layer.forward(&ctx, &[cfg.vocab as i32]).is_err());
+        assert!(layer.forward(&ctx, &[-1]).is_err());
+    }
+
+    #[test]
+    fn pixel_embedding_is_affine_and_differentiable() {
+        let cfg = family_config("clf_efla").unwrap();
+        let params = ParamSet::init(&cfg, 3);
+        let exec = Executor::serial();
+        let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b: 1, l: 2 };
+        let layer = PixelEmbedding::new(&params);
+        let pixels = [0.5f32, 0.0];
+        let x = layer.forward(&ctx, &pixels);
+        let d = cfg.d_model;
+        let pw = params.get("pix_w").data();
+        let pb = params.get("pix_b").data();
+        for j in 0..d {
+            assert!((x[j] - (0.5 * pw[j] + pb[j])).abs() < 1e-6);
+            assert!((x[d + j] - pb[j]).abs() < 1e-6);
+        }
+        let mut grads = params.zeros_like();
+        let dx = vec![1.0f32; 2 * d];
+        layer.backward(&ctx, &pixels, &dx, &mut grads);
+        assert!((grads[params.idx("pix_w")].data()[0] - 0.5).abs() < 1e-6);
+        assert!((grads[params.idx("pix_b")].data()[0] - 2.0).abs() < 1e-6);
+    }
+}

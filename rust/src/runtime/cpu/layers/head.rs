@@ -1,0 +1,403 @@
+//! Output heads: tied-softmax LM head (masked token-level cross-entropy)
+//! and the pooled linear classifier head (example-level cross-entropy).
+//! Each pairs a stats-producing forward with a gradient-producing backward.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{matmul_nt_into, matmul_tn_into, matmul_vec, Tensor};
+
+use super::super::config::{CpuModelCfg, N_CLASSES};
+use super::super::ops;
+use super::super::params::ParamSet;
+use super::{Ctx, Layer, RmsNorm};
+
+/// Loss statistics of one batch (LM: token-level; classifier: example-level).
+#[derive(Clone, Copy, Debug)]
+pub struct LossStats {
+    pub loss_mean: f32,
+    pub loss_sum: f32,
+    pub count: f32,
+    pub correct: f32,
+}
+
+/// Final RMSNorm + tied-embedding logits + masked cross-entropy.
+pub struct LmHead {
+    norm_f: RmsNorm,
+    embed: usize,
+}
+
+/// Saved: the final-norm tape, the normalized activations, the logits and
+/// the per-row log-sum-exp of the scored rows.
+pub struct LmHeadTape {
+    norm: <RmsNorm as Layer>::Tape,
+    xf: Vec<f32>,
+    logits: Vec<f32>,
+    row_lse: Vec<f32>,
+}
+
+impl LmHead {
+    pub fn new(params: &ParamSet, cfg: &CpuModelCfg) -> LmHead {
+        LmHead { norm_f: RmsNorm::new(params, "norm_f", cfg.d_model), embed: params.idx("embed") }
+    }
+
+    /// Decode path: final norm + tied logits, no loss. x: (B, d).
+    pub fn logits(&self, ctx: &Ctx, x: &[f32]) -> Vec<f32> {
+        let (d, vocab) = (ctx.cfg.d_model, ctx.cfg.vocab);
+        let rows = x.len() / d;
+        let xf = self.norm_f.infer(ctx, x);
+        let mut logits = vec![0.0f32; rows * vocab];
+        ops::matmul_nt_acc(
+            ctx.exec,
+            &xf,
+            ctx.params.tensor(self.embed).data(),
+            &mut logits,
+            rows,
+            d,
+            vocab,
+        );
+        logits
+    }
+
+    /// Masked CE over targets (-1 = ignored). x: (B*L, d).
+    pub fn forward(
+        &self,
+        ctx: &Ctx,
+        x: &[f32],
+        targets: &[i32],
+    ) -> Result<(LossStats, LmHeadTape)> {
+        let (d, vocab, rows) = (ctx.cfg.d_model, ctx.cfg.vocab, ctx.rows());
+        let (xf, norm_tape) = self.norm_f.forward(ctx, x);
+        let mut logits = vec![0.0f32; rows * vocab];
+        ops::matmul_nt_acc(
+            ctx.exec,
+            &xf,
+            ctx.params.tensor(self.embed).data(),
+            &mut logits,
+            rows,
+            d,
+            vocab,
+        );
+
+        let mut loss_sum = 0f64;
+        let mut count = 0f64;
+        let mut correct = 0f64;
+        let mut row_lse = vec![0.0f32; rows];
+        for r in 0..rows {
+            let tgt = targets[r];
+            if tgt < 0 {
+                continue;
+            }
+            let tgt = tgt as usize;
+            if tgt >= vocab {
+                bail!("target id {tgt} out of range (vocab {vocab})");
+            }
+            let lr = &logits[r * vocab..(r + 1) * vocab];
+            let mx = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0f32;
+            let mut argmax = 0usize;
+            let mut best = f32::NEG_INFINITY;
+            for (j, &v) in lr.iter().enumerate() {
+                z += (v - mx).exp();
+                if v > best {
+                    best = v;
+                    argmax = j;
+                }
+            }
+            let lse = mx + z.ln();
+            row_lse[r] = lse;
+            loss_sum += (lse - lr[tgt]) as f64;
+            count += 1.0;
+            if argmax == tgt {
+                correct += 1.0;
+            }
+        }
+        let denom = count.max(1.0);
+        let stats = LossStats {
+            loss_mean: (loss_sum / denom) as f32,
+            loss_sum: loss_sum as f32,
+            count: count as f32,
+            correct: correct as f32,
+        };
+        Ok((stats, LmHeadTape { norm: norm_tape, xf, logits, row_lse }))
+    }
+
+    /// dL/dx of the mean masked CE; accumulates embed + norm_f gradients.
+    pub fn backward(
+        &self,
+        ctx: &Ctx,
+        tape: &LmHeadTape,
+        targets: &[i32],
+        grads: &mut [Tensor],
+    ) -> Vec<f32> {
+        let (d, vocab, rows) = (ctx.cfg.d_model, ctx.cfg.vocab, ctx.rows());
+        let count = targets.iter().filter(|&&t| t >= 0).count() as f64;
+        let inv_count = 1.0 / count.max(1.0) as f32;
+
+        // dlogits = (softmax - onehot) * mask / count.
+        let mut dlogits = vec![0.0f32; rows * vocab];
+        for r in 0..rows {
+            let tgt = targets[r];
+            if tgt < 0 {
+                continue;
+            }
+            let lr = &tape.logits[r * vocab..(r + 1) * vocab];
+            let dlr = &mut dlogits[r * vocab..(r + 1) * vocab];
+            let lse = tape.row_lse[r];
+            for j in 0..vocab {
+                dlr[j] = (lr[j] - lse).exp() * inv_count;
+            }
+            dlr[tgt as usize] -= inv_count;
+        }
+
+        // Tied head: logits = xf @ embed^T.
+        let embed = ctx.params.tensor(self.embed).data();
+        let dxf = ops::matmul(ctx.exec, &dlogits, embed, rows, vocab, d);
+        matmul_tn_into(&dlogits, &tape.xf, grads[self.embed].data_mut(), rows, vocab, d);
+
+        self.norm_f.backward(ctx, &tape.norm, &dxf, grads)
+    }
+}
+
+/// Mean-pool over the sequence + final RMSNorm + linear head + CE.
+pub struct ClfHead {
+    norm_f: RmsNorm,
+    head_w: usize,
+    head_b: usize,
+}
+
+pub struct ClfHeadTape {
+    norm: <RmsNorm as Layer>::Tape,
+    xpn: Vec<f32>,
+    logits: Vec<f32>,
+    row_lse: Vec<f32>,
+}
+
+impl ClfHead {
+    pub fn new(params: &ParamSet, cfg: &CpuModelCfg) -> ClfHead {
+        ClfHead {
+            norm_f: RmsNorm::new(params, "norm_f", cfg.d_model),
+            head_w: params.idx("head_w"),
+            head_b: params.idx("head_b"),
+        }
+    }
+
+    /// x: (B*L, d) final block activations; labels: (B,).
+    pub fn forward(
+        &self,
+        ctx: &Ctx,
+        x: &[f32],
+        labels: &[i32],
+    ) -> Result<(LossStats, ClfHeadTape)> {
+        let (d, b, l) = (ctx.cfg.d_model, ctx.b, ctx.l);
+        for &lb in labels {
+            if lb < 0 || lb as usize >= N_CLASSES {
+                bail!("label {lb} out of range (classes {N_CLASSES})");
+            }
+        }
+
+        // Mean pool over the sequence.
+        let mut xp = vec![0.0f32; b * d];
+        let inv_l = 1.0 / l as f32;
+        for bi in 0..b {
+            let xpr = &mut xp[bi * d..(bi + 1) * d];
+            for t in 0..l {
+                let xr = &x[(bi * l + t) * d..(bi * l + t + 1) * d];
+                for j in 0..d {
+                    xpr[j] += xr[j] * inv_l;
+                }
+            }
+        }
+        let (xpn, norm_tape) = self.norm_f.forward(ctx, &xp);
+        let head_w = ctx.params.tensor(self.head_w).data();
+        let head_b = ctx.params.tensor(self.head_b).data();
+        let mut logits = matmul_vec(&xpn, head_w, b, d, N_CLASSES);
+        for bi in 0..b {
+            for j in 0..N_CLASSES {
+                logits[bi * N_CLASSES + j] += head_b[j];
+            }
+        }
+
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut row_lse = vec![0.0f32; b];
+        for bi in 0..b {
+            let lr = &logits[bi * N_CLASSES..(bi + 1) * N_CLASSES];
+            let mx = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = lr.iter().map(|&v| (v - mx).exp()).sum();
+            let lse = mx + z.ln();
+            row_lse[bi] = lse;
+            let tgt = labels[bi] as usize;
+            loss_sum += (lse - lr[tgt]) as f64;
+            let argmax = lr
+                .iter()
+                .enumerate()
+                .max_by(|a, b_| a.1.partial_cmp(b_.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            if argmax == tgt {
+                correct += 1.0;
+            }
+        }
+        let stats = LossStats {
+            loss_mean: (loss_sum / b as f64) as f32,
+            loss_sum: loss_sum as f32,
+            count: b as f32,
+            correct: correct as f32,
+        };
+        Ok((stats, ClfHeadTape { norm: norm_tape, xpn, logits, row_lse }))
+    }
+
+    /// dL/dx (un-pooled, (B*L, d)); accumulates head + norm_f gradients.
+    pub fn backward(
+        &self,
+        ctx: &Ctx,
+        tape: &ClfHeadTape,
+        labels: &[i32],
+        grads: &mut [Tensor],
+    ) -> Vec<f32> {
+        let (d, b, l) = (ctx.cfg.d_model, ctx.b, ctx.l);
+
+        // dlogits = (softmax - onehot) / B (python: nll.mean()).
+        let inv_b = 1.0 / b as f32;
+        let mut dlogits = vec![0.0f32; b * N_CLASSES];
+        for bi in 0..b {
+            let lr = &tape.logits[bi * N_CLASSES..(bi + 1) * N_CLASSES];
+            let dlr = &mut dlogits[bi * N_CLASSES..(bi + 1) * N_CLASSES];
+            for j in 0..N_CLASSES {
+                dlr[j] = (lr[j] - tape.row_lse[bi]).exp() * inv_b;
+            }
+            dlr[labels[bi] as usize] -= inv_b;
+        }
+
+        matmul_tn_into(&tape.xpn, &dlogits, grads[self.head_w].data_mut(), b, d, N_CLASSES);
+        {
+            let dhb = grads[self.head_b].data_mut();
+            for bi in 0..b {
+                for j in 0..N_CLASSES {
+                    dhb[j] += dlogits[bi * N_CLASSES + j];
+                }
+            }
+        }
+        let head_w = ctx.params.tensor(self.head_w).data();
+        let mut dxpn = vec![0.0f32; b * d];
+        matmul_nt_into(&dlogits, head_w, &mut dxpn, b, N_CLASSES, d);
+        let dxp = self.norm_f.backward(ctx, &tape.norm, &dxpn, grads);
+
+        // Un-pool: every position gets dxp / L.
+        let inv_l = 1.0 / l as f32;
+        let mut dx = vec![0.0f32; b * l * d];
+        for bi in 0..b {
+            let dpr = &dxp[bi * d..(bi + 1) * d];
+            for t in 0..l {
+                let dxr = &mut dx[(bi * l + t) * d..(bi * l + t + 1) * d];
+                for j in 0..d {
+                    dxr[j] = dpr[j] * inv_l;
+                }
+            }
+        }
+        dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::config::family_config;
+    use super::super::super::exec::Executor;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lm_head_loss_near_ln_vocab_and_fd_gradient() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let params = ParamSet::init(&cfg, 21);
+        let exec = Executor::serial();
+        let (b, l) = (1usize, 8usize);
+        let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b, l };
+        let head = LmHead::new(&params, &cfg);
+        let mut rng = Rng::new(50);
+        let x = rng.normal_vec(b * l * cfg.d_model, 0.0, 1.0);
+        let targets: Vec<i32> =
+            (0..b * l).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+
+        let (stats, tape) = head.forward(&ctx, &x, &targets).unwrap();
+        let expect = (cfg.vocab as f32).ln();
+        assert!(
+            (stats.loss_mean - expect).abs() < 2.0,
+            "near-uniform CE: {} vs ln(V) {expect}",
+            stats.loss_mean
+        );
+
+        let mut grads = params.zeros_like();
+        let dx = head.backward(&ctx, &tape, &targets, &mut grads);
+        let loss = |x: &[f32]| -> f64 {
+            head.forward(&ctx, x, &targets).unwrap().0.loss_mean as f64
+        };
+        let h = 1e-2f32;
+        for idx in (0..x.len()).step_by(37) {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let n = (loss(&xp) - loss(&xm)) / (2.0 * h as f64);
+            assert!(
+                (dx[idx] as f64 - n).abs() < 2e-2 * (1.0 + n.abs()),
+                "dx[{idx}]: {} vs {n}",
+                dx[idx]
+            );
+        }
+        assert!(grads[params.idx("embed")].norm() > 0.0, "tied embed gradient");
+    }
+
+    #[test]
+    fn lm_head_masks_ignored_targets() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let params = ParamSet::init(&cfg, 22);
+        let exec = Executor::serial();
+        let (b, l) = (1usize, 4usize);
+        let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b, l };
+        let head = LmHead::new(&params, &cfg);
+        let x = vec![0.1f32; b * l * cfg.d_model];
+        let targets = [3i32, -1, -1, -1];
+        let (stats, _) = head.forward(&ctx, &x, &targets).unwrap();
+        assert_eq!(stats.count as usize, 1);
+        assert!(stats.loss_sum.is_finite());
+    }
+
+    #[test]
+    fn clf_head_fd_gradient_and_label_validation() {
+        let cfg = family_config("clf_efla").unwrap();
+        let params = ParamSet::init(&cfg, 23);
+        let exec = Executor::serial();
+        let (b, l) = (2usize, 4usize); // short sequence is fine for the head
+        let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b, l };
+        let head = ClfHead::new(&params, &cfg);
+        let mut rng = Rng::new(51);
+        let x = rng.normal_vec(b * l * cfg.d_model, 0.0, 1.0);
+        let labels = [3i32, 7];
+
+        assert!(head.forward(&ctx, &x, &[10, 0]).is_err(), "label 10 out of range");
+
+        let (stats, tape) = head.forward(&ctx, &x, &labels).unwrap();
+        assert!(stats.loss_mean.is_finite());
+        let mut grads = params.zeros_like();
+        let dx = head.backward(&ctx, &tape, &labels, &mut grads);
+        let loss = |x: &[f32]| -> f64 {
+            head.forward(&ctx, x, &labels).unwrap().0.loss_mean as f64
+        };
+        let h = 1e-2f32;
+        for idx in (0..x.len()).step_by(41) {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let n = (loss(&xp) - loss(&xm)) / (2.0 * h as f64);
+            assert!(
+                (dx[idx] as f64 - n).abs() < 2e-2 * (1.0 + n.abs()),
+                "dx[{idx}]: {} vs {n}",
+                dx[idx]
+            );
+        }
+        assert!(grads[params.idx("head_w")].norm() > 0.0);
+        assert!(grads[params.idx("head_b")].norm() > 0.0);
+    }
+}

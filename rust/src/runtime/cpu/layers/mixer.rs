@@ -1,0 +1,528 @@
+//! Token-mixer layer: q/k/v projections, depthwise causal conv + SiLU,
+//! per-head scalar gate (EFLA exact / DeltaNet Euler variants), and the
+//! chunkwise delta-rule kernel.
+//!
+//! The kernel work is independent per (batch, head) pair — forward
+//! ([`crate::attention::chunkwise_delta_alpha`]), backward
+//! ([`crate::attention::delta_bptt`], recomputed per pair so peak memory is
+//! one head's state trajectory) and the one-token decode update all fan out
+//! through [`Executor::map`](super::super::exec::Executor::map); results
+//! are scattered back in task order so numerics are thread-count invariant.
+
+use crate::attention::backward::delta_bptt;
+use crate::attention::chunkwise::chunkwise_delta_alpha;
+use crate::attention::gates::{alpha_efla, alpha_efla_grad, EPS_LAMBDA};
+use crate::attention::sequential::delta_step_alpha;
+use crate::tensor::{matmul_tn_into, Tensor};
+
+use super::super::config::{CpuModelCfg, Mixer, CONV_K};
+use super::super::ops;
+use super::super::params::ParamSet;
+use super::{Ctx, Layer, RmsNorm};
+
+pub struct MixerLayer {
+    wq: usize,
+    wk: usize,
+    wv: usize,
+    conv_q: usize,
+    conv_k: usize,
+    conv_v: usize,
+    w_beta: usize,
+    adecay: usize,
+    norm_out: RmsNorm,
+    wo: usize,
+}
+
+/// Saved activations of one mixer forward.
+pub struct MixerTape {
+    /// The (normalized) layer input.
+    x: Vec<f32>,
+    qpre: Vec<f32>,
+    kpre: Vec<f32>,
+    vpre: Vec<f32>,
+    qc: Vec<f32>,
+    kc: Vec<f32>,
+    vc: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// DeltaNet only: normalized q/k and per-head-row sum-squares.
+    qn: Vec<f32>,
+    kn: Vec<f32>,
+    q_ss: Vec<f32>,
+    k_ss: Vec<f32>,
+    b_logits: Vec<f32>,
+    beta_eff: Vec<f32>,
+    alpha: Vec<f32>,
+    lambda: Vec<f32>,
+    norm_out: <RmsNorm as Layer>::Tape,
+    o_norm: Vec<f32>,
+}
+
+/// Gather one (batch, head) pair's (L, Dh) rows out of a (B*L, inner) buffer.
+fn gather_head(src: &[f32], bi: usize, hh: usize, l: usize, inner: usize, dh: usize) -> Tensor {
+    let mut out = vec![0.0f32; l * dh];
+    for t in 0..l {
+        let base = (bi * l + t) * inner + hh * dh;
+        out[t * dh..(t + 1) * dh].copy_from_slice(&src[base..base + dh]);
+    }
+    Tensor::from_vec(&[l, dh], out)
+}
+
+/// Scatter-add the (L, Dh) head rows back into a (B*L, inner) buffer.
+fn scatter_head_add(
+    dst: &mut [f32],
+    src: &[f32],
+    bi: usize,
+    hh: usize,
+    l: usize,
+    inner: usize,
+    dh: usize,
+) {
+    for t in 0..l {
+        let base = (bi * l + t) * inner + hh * dh;
+        for j in 0..dh {
+            dst[base + j] += src[t * dh + j];
+        }
+    }
+}
+
+impl MixerLayer {
+    pub fn new(params: &ParamSet, cfg: &CpuModelCfg, li: usize) -> MixerLayer {
+        let p = |n: &str| format!("layer{li}.{n}");
+        MixerLayer {
+            wq: params.idx(&p("wq")),
+            wk: params.idx(&p("wk")),
+            wv: params.idx(&p("wv")),
+            conv_q: params.idx(&p("conv_q")),
+            conv_k: params.idx(&p("conv_k")),
+            conv_v: params.idx(&p("conv_v")),
+            w_beta: params.idx(&p("w_beta")),
+            adecay: params.idx(&p("adecay")),
+            norm_out: RmsNorm::new(params, &p("norm_out"), cfg.head_dim),
+            wo: params.idx(&p("wo")),
+        }
+    }
+
+    /// Resolve the variant-specific effective step size beta for one token.
+    fn beta_eff(cfg: &CpuModelCfg, adecay: &[f32], z: f32, hh: usize) -> f32 {
+        let mut bv = if cfg.mixer == Mixer::EflaLoose {
+            ops::softplus(z)
+        } else {
+            ops::sigmoid(z)
+        };
+        if cfg.mixer == Mixer::EflaAdaptive {
+            bv *= ops::softplus(adecay[hh]);
+        }
+        bv
+    }
+
+    /// One-token decode: `x` is the normalized (B, d) input; the rolling
+    /// conv caches (B, K-1, inner) and the per-head state (B, H, Dh, Dh)
+    /// are updated in place. Returns the mixed (B, d) output.
+    pub fn decode_step(
+        &self,
+        ctx: &Ctx,
+        x: &[f32],
+        cache_q: &mut [f32],
+        cache_k: &mut [f32],
+        cache_v: &mut [f32],
+        s: &mut [f32],
+    ) -> Vec<f32> {
+        let cfg = ctx.cfg;
+        let (d, inner, h, dh) = (cfg.d_model, cfg.inner(), cfg.n_heads, cfg.head_dim);
+        let b = ctx.b;
+        let p = ctx.params;
+
+        let qt = ops::matmul(ctx.exec, x, p.tensor(self.wq).data(), b, d, inner);
+        let kt = ops::matmul(ctx.exec, x, p.tensor(self.wk).data(), b, d, inner);
+        let vt = ops::matmul(ctx.exec, x, p.tensor(self.wv).data(), b, d, inner);
+        let qc = ops::conv_step(&qt, cache_q, p.tensor(self.conv_q).data(), b, inner, CONV_K);
+        let kc = ops::conv_step(&kt, cache_k, p.tensor(self.conv_k).data(), b, inner, CONV_K);
+        let vc = ops::conv_step(&vt, cache_v, p.tensor(self.conv_v).data(), b, inner, CONV_K);
+        let q = ops::silu_fwd(&qc);
+        let k = ops::silu_fwd(&kc);
+        let v = ops::silu_fwd(&vc);
+
+        let (q_use, k_use) = if cfg.mixer == Mixer::DeltaNet {
+            (ops::l2norm_fwd(&q, dh).0, ops::l2norm_fwd(&k, dh).0)
+        } else {
+            (q.clone(), k.clone())
+        };
+
+        let b_logits = ops::matmul(ctx.exec, x, p.tensor(self.w_beta).data(), b, d, h);
+        let adecay = p.tensor(self.adecay).data();
+
+        // One state update per (batch, head); the slices are disjoint, so
+        // tasks return (o, S') and the scatter below writes them in order.
+        // Per-task work is ~3*dh^2 flops — only fan out when the total
+        // clears the spawn cost (results are identical either way).
+        let tasks = b * h;
+        let fan_out = tasks * dh * dh >= 1 << 20;
+        let s_ref: &[f32] = s;
+        let step = |i: usize| {
+            let (bi, hh) = (i / h, i % h);
+            let bv = Self::beta_eff(cfg, adecay, b_logits[bi * h + hh], hh);
+            let base = bi * inner + hh * dh;
+            let krow = &k_use[base..base + dh];
+            let alpha = if cfg.mixer == Mixer::DeltaNet {
+                bv
+            } else {
+                let lam: f32 = krow.iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
+                alpha_efla(bv, lam)
+            };
+            let srange = (bi * h + hh) * dh * dh..(bi * h + hh + 1) * dh * dh;
+            let mut s_new = s_ref[srange].to_vec();
+            let mut o = vec![0.0f32; dh];
+            let mut stk = vec![0.0f32; dh];
+            delta_step_alpha(
+                &mut s_new,
+                &q_use[base..base + dh],
+                krow,
+                &v[base..base + dh],
+                alpha,
+                &mut o,
+                &mut stk,
+                dh,
+                dh,
+            );
+            (o, s_new)
+        };
+        let updates: Vec<(Vec<f32>, Vec<f32>)> = if fan_out {
+            ctx.exec.map(tasks, step)
+        } else {
+            (0..tasks).map(step).collect()
+        };
+        let mut o_all = vec![0.0f32; b * inner];
+        for (i, (oh, s_new)) in updates.into_iter().enumerate() {
+            let (bi, hh) = (i / h, i % h);
+            let base = bi * inner + hh * dh;
+            o_all[base..base + dh].copy_from_slice(&oh);
+            s[(bi * h + hh) * dh * dh..(bi * h + hh + 1) * dh * dh].copy_from_slice(&s_new);
+        }
+
+        let o_norm = self.norm_out.infer(ctx, &o_all);
+        ops::matmul(ctx.exec, &o_norm, p.tensor(self.wo).data(), b, inner, d)
+    }
+}
+
+impl Layer for MixerLayer {
+    type Tape = MixerTape;
+
+    fn forward(&self, ctx: &Ctx, x: &[f32]) -> (Vec<f32>, MixerTape) {
+        let cfg = ctx.cfg;
+        let (d, inner, h, dh) = (cfg.d_model, cfg.inner(), cfg.n_heads, cfg.head_dim);
+        let (b, l, rows) = (ctx.b, ctx.l, ctx.rows());
+        let p = ctx.params;
+
+        let qpre = ops::matmul(ctx.exec, x, p.tensor(self.wq).data(), rows, d, inner);
+        let kpre = ops::matmul(ctx.exec, x, p.tensor(self.wk).data(), rows, d, inner);
+        let vpre = ops::matmul(ctx.exec, x, p.tensor(self.wv).data(), rows, d, inner);
+        let qc = ops::conv_fwd(&qpre, p.tensor(self.conv_q).data(), b, l, inner, CONV_K);
+        let kc = ops::conv_fwd(&kpre, p.tensor(self.conv_k).data(), b, l, inner, CONV_K);
+        let vc = ops::conv_fwd(&vpre, p.tensor(self.conv_v).data(), b, l, inner, CONV_K);
+        let q = ops::silu_fwd(&qc);
+        let k = ops::silu_fwd(&kc);
+        let v = ops::silu_fwd(&vc);
+
+        // DeltaNet normalizes q/k per head row; (rows, inner) is (rows*h, dh).
+        let (qn, q_ss, kn, k_ss) = if cfg.mixer == Mixer::DeltaNet {
+            let (qn, q_ss) = ops::l2norm_fwd(&q, dh);
+            let (kn, k_ss) = ops::l2norm_fwd(&k, dh);
+            (qn, q_ss, kn, k_ss)
+        } else {
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new())
+        };
+
+        // Per-token scalar gate.
+        let b_logits = ops::matmul(ctx.exec, x, p.tensor(self.w_beta).data(), rows, d, h);
+        let adecay = p.tensor(self.adecay).data();
+        let mut beta_eff = vec![0.0f32; rows * h];
+        for r in 0..rows {
+            for hh in 0..h {
+                beta_eff[r * h + hh] = Self::beta_eff(cfg, adecay, b_logits[r * h + hh], hh);
+            }
+        }
+        let (lambda, alpha) = if cfg.mixer == Mixer::DeltaNet {
+            (Vec::new(), beta_eff.clone())
+        } else {
+            let mut lambda = vec![0.0f32; rows * h];
+            let mut alpha = vec![0.0f32; rows * h];
+            for r in 0..rows {
+                for hh in 0..h {
+                    let krow = &k[r * inner + hh * dh..r * inner + (hh + 1) * dh];
+                    let lam: f32 = krow.iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
+                    lambda[r * h + hh] = lam;
+                    alpha[r * h + hh] = alpha_efla(beta_eff[r * h + hh], lam);
+                }
+            }
+            (lambda, alpha)
+        };
+
+        // Chunkwise delta attention, one task per (batch, head).
+        let q_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &qn } else { &q };
+        let k_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &kn } else { &k };
+        let heads: Vec<Tensor> = ctx.exec.map(b * h, |i| {
+            let (bi, hh) = (i / h, i % h);
+            let qh = gather_head(q_src, bi, hh, l, inner, dh);
+            let kh = gather_head(k_src, bi, hh, l, inner, dh);
+            let vh = gather_head(&v, bi, hh, l, inner, dh);
+            let al: Vec<f32> = (0..l).map(|t| alpha[(bi * l + t) * h + hh]).collect();
+            let (oh, _s) = chunkwise_delta_alpha(&qh, &kh, &vh, &al, cfg.chunk);
+            oh
+        });
+        let mut o_raw = vec![0.0f32; rows * inner];
+        for (i, oh) in heads.iter().enumerate() {
+            scatter_head_add(&mut o_raw, oh.data(), i / h, i % h, l, inner, dh);
+        }
+
+        // Per-head output norm, merge, project.
+        let (o_norm, t_norm_out) = self.norm_out.forward(ctx, &o_raw);
+        let y = ops::matmul(ctx.exec, &o_norm, p.tensor(self.wo).data(), rows, inner, d);
+
+        (
+            y,
+            MixerTape {
+                x: x.to_vec(),
+                qpre,
+                kpre,
+                vpre,
+                qc,
+                kc,
+                vc,
+                q,
+                k,
+                v,
+                qn,
+                kn,
+                q_ss,
+                k_ss,
+                b_logits,
+                beta_eff,
+                alpha,
+                lambda,
+                norm_out: t_norm_out,
+                o_norm,
+            },
+        )
+    }
+
+    fn backward(
+        &self,
+        ctx: &Ctx,
+        tape: &MixerTape,
+        dy: &[f32],
+        grads: &mut [Tensor],
+    ) -> Vec<f32> {
+        let cfg = ctx.cfg;
+        let (d, inner, h, dh) = (cfg.d_model, cfg.inner(), cfg.n_heads, cfg.head_dim);
+        let (b, l, rows) = (ctx.b, ctx.l, ctx.rows());
+        let p = ctx.params;
+
+        // Output projection + per-head norm.
+        matmul_tn_into(&tape.o_norm, dy, grads[self.wo].data_mut(), rows, inner, d);
+        let mut do_norm = vec![0.0f32; rows * inner];
+        ops::matmul_nt_acc(ctx.exec, dy, p.tensor(self.wo).data(), &mut do_norm, rows, d, inner);
+        let do_raw = self.norm_out.backward(ctx, &tape.norm_out, &do_norm, grads);
+
+        // BPTT through the delta recurrence, one task per (batch, head).
+        let q_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &tape.qn } else { &tape.q };
+        let k_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &tape.kn } else { &tape.k };
+        let adjoints: Vec<(Tensor, Tensor, Tensor, Vec<f32>)> = ctx.exec.map(b * h, |i| {
+            let (bi, hh) = (i / h, i % h);
+            let qh = gather_head(q_src, bi, hh, l, inner, dh);
+            let kh = gather_head(k_src, bi, hh, l, inner, dh);
+            let vh = gather_head(&tape.v, bi, hh, l, inner, dh);
+            let doh = gather_head(&do_raw, bi, hh, l, inner, dh);
+            let al: Vec<f32> = (0..l).map(|t| tape.alpha[(bi * l + t) * h + hh]).collect();
+            delta_bptt(&qh, &kh, &vh, &al, &doh)
+        });
+        let mut dq_post = vec![0.0f32; rows * inner];
+        let mut dk_post = vec![0.0f32; rows * inner];
+        let mut dv_post = vec![0.0f32; rows * inner];
+        let mut dalpha = vec![0.0f32; rows * h];
+        for (i, (dqh, dkh, dvh, dal)) in adjoints.iter().enumerate() {
+            let (bi, hh) = (i / h, i % h);
+            scatter_head_add(&mut dq_post, dqh.data(), bi, hh, l, inner, dh);
+            scatter_head_add(&mut dk_post, dkh.data(), bi, hh, l, inner, dh);
+            scatter_head_add(&mut dv_post, dvh.data(), bi, hh, l, inner, dh);
+            for t in 0..l {
+                dalpha[(bi * l + t) * h + hh] += dal[t];
+            }
+        }
+
+        // Gate backward: alpha -> (beta logits, adecay, lambda -> k).
+        let adecay = p.tensor(self.adecay).data().to_vec();
+        let mut db_logits = vec![0.0f32; rows * h];
+        {
+            let dadecay = grads[self.adecay].data_mut();
+            for r in 0..rows {
+                for hh in 0..h {
+                    let da = dalpha[r * h + hh];
+                    let z = tape.b_logits[r * h + hh];
+                    let dbeta_eff = match cfg.mixer {
+                        Mixer::DeltaNet => da,
+                        _ => {
+                            let lam = tape.lambda[r * h + hh];
+                            let be = tape.beta_eff[r * h + hh];
+                            let (_a, da_db, da_dl) = alpha_efla_grad(be, lam);
+                            let dlam = da * da_dl;
+                            if dlam != 0.0 {
+                                let base = r * inner + hh * dh;
+                                for j in 0..dh {
+                                    dk_post[base + j] += dlam * 2.0 * tape.k[base + j];
+                                }
+                            }
+                            da * da_db
+                        }
+                    };
+                    match cfg.mixer {
+                        Mixer::EflaLoose => {
+                            db_logits[r * h + hh] = dbeta_eff * ops::sigmoid(z);
+                        }
+                        Mixer::EflaAdaptive => {
+                            let sp = ops::softplus(adecay[hh]);
+                            let bsig = ops::sigmoid(z);
+                            dadecay[hh] += dbeta_eff * bsig * ops::sigmoid(adecay[hh]);
+                            db_logits[r * h + hh] = dbeta_eff * sp * bsig * (1.0 - bsig);
+                        }
+                        _ => {
+                            let bsig = ops::sigmoid(z);
+                            db_logits[r * h + hh] = dbeta_eff * bsig * (1.0 - bsig);
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut dx = vec![0.0f32; rows * d];
+        ops::matmul_nt_acc(ctx.exec, &db_logits, p.tensor(self.w_beta).data(), &mut dx, rows, h, d);
+        matmul_tn_into(&tape.x, &db_logits, grads[self.w_beta].data_mut(), rows, d, h);
+
+        // DeltaNet: through the q/k L2 normalization.
+        let (dq_silu, dk_silu) = if cfg.mixer == Mixer::DeltaNet {
+            (
+                ops::l2norm_bwd(&tape.q, &tape.q_ss, &dq_post, dh),
+                ops::l2norm_bwd(&tape.k, &tape.k_ss, &dk_post, dh),
+            )
+        } else {
+            (dq_post, dk_post)
+        };
+
+        // SiLU, conv, projections.
+        let dqc = ops::silu_bwd(&tape.qc, &dq_silu);
+        let dkc = ops::silu_bwd(&tape.kc, &dk_silu);
+        let dvc = ops::silu_bwd(&tape.vc, &dv_post);
+        let dqpre = ops::conv_bwd(
+            &tape.qpre,
+            p.tensor(self.conv_q).data(),
+            &dqc,
+            b,
+            l,
+            inner,
+            CONV_K,
+            grads[self.conv_q].data_mut(),
+        );
+        let dkpre = ops::conv_bwd(
+            &tape.kpre,
+            p.tensor(self.conv_k).data(),
+            &dkc,
+            b,
+            l,
+            inner,
+            CONV_K,
+            grads[self.conv_k].data_mut(),
+        );
+        let dvpre = ops::conv_bwd(
+            &tape.vpre,
+            p.tensor(self.conv_v).data(),
+            &dvc,
+            b,
+            l,
+            inner,
+            CONV_K,
+            grads[self.conv_v].data_mut(),
+        );
+        matmul_tn_into(&tape.x, &dqpre, grads[self.wq].data_mut(), rows, d, inner);
+        matmul_tn_into(&tape.x, &dkpre, grads[self.wk].data_mut(), rows, d, inner);
+        matmul_tn_into(&tape.x, &dvpre, grads[self.wv].data_mut(), rows, d, inner);
+        ops::matmul_nt_acc(ctx.exec, &dqpre, p.tensor(self.wq).data(), &mut dx, rows, inner, d);
+        ops::matmul_nt_acc(ctx.exec, &dkpre, p.tensor(self.wk).data(), &mut dx, rows, inner, d);
+        ops::matmul_nt_acc(ctx.exec, &dvpre, p.tensor(self.wv).data(), &mut dx, rows, inner, d);
+        dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::config::family_config;
+    use super::super::super::exec::Executor;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fd_check_family(family: &str, seed: u64) {
+        let cfg = family_config(family).unwrap();
+        let params = ParamSet::init(&cfg, 17);
+        let exec = Executor::serial();
+        let (b, l) = (1usize, 4usize);
+        let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b, l };
+        let layer = MixerLayer::new(&params, &cfg, 0);
+
+        let mut rng = Rng::new(seed);
+        let rows = b * l;
+        let x = rng.normal_vec(rows * cfg.d_model, 0.0, 0.5);
+        let w = rng.normal_vec(rows * cfg.d_model, 0.0, 1.0);
+        let loss = |x: &[f32]| -> f64 {
+            let (y, _) = layer.forward(&ctx, x);
+            y.iter().zip(w.iter()).map(|(&a, &g)| a as f64 * g as f64).sum()
+        };
+
+        let (_, tape) = layer.forward(&ctx, &x);
+        let mut grads = params.zeros_like();
+        let dx = layer.backward(&ctx, &tape, &w, &mut grads);
+
+        let h = 1e-2f32;
+        for idx in (0..x.len()).step_by(29) {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let n = (loss(&xp) - loss(&xm)) / (2.0 * h as f64);
+            assert!(
+                (dx[idx] as f64 - n).abs() < 3e-2 * (1.0 + n.abs()),
+                "{family} dx[{idx}]: {} vs {n}",
+                dx[idx]
+            );
+        }
+        for name in ["layer0.wq", "layer0.wk", "layer0.wv", "layer0.wo", "layer0.w_beta"] {
+            assert!(grads[params.idx(name)].norm() > 0.0, "{family}: {name} gradient must flow");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences_efla() {
+        fd_check_family("lm_tiny_efla", 31);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences_deltanet() {
+        fd_check_family("lm_tiny_deltanet", 32);
+    }
+
+    #[test]
+    fn parallel_forward_matches_serial_bitwise() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let params = ParamSet::init(&cfg, 9);
+        let (b, l) = (cfg.batch, 16usize);
+        let mut rng = Rng::new(40);
+        let x = rng.normal_vec(b * l * cfg.d_model, 0.0, 1.0);
+        let e1 = Executor::serial();
+        let e4 = Executor::new(4);
+        let layer = MixerLayer::new(&params, &cfg, 0);
+        let ctx1 = Ctx { cfg: &cfg, params: &params, exec: &e1, b, l };
+        let ctx4 = Ctx { cfg: &cfg, params: &params, exec: &e4, b, l };
+        let (y1, _) = layer.forward(&ctx1, &x);
+        let (y4, _) = layer.forward(&ctx4, &x);
+        assert_eq!(y1, y4, "mixer forward must be thread-count invariant");
+    }
+}

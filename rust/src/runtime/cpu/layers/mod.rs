@@ -1,0 +1,178 @@
+//! Composable model layers with a saved-activation tape.
+//!
+//! Every block layer implements the uniform [`Layer`] pair:
+//!
+//! ```text
+//! forward(&self, ctx, x)  -> (y, Tape)      // Tape = saved activations
+//! backward(&self, ctx, &Tape, dy, grads) -> dx
+//! ```
+//!
+//! A layer owns nothing but parameter *indices* into the session's
+//! [`ParamSet`] (construction is cheap; `grads` is the parallel gradient
+//! array, indexed identically). Its `Tape` owns every activation the
+//! backward pass replays — including the layer's own input — so the
+//! orchestrator in [`super::model`] only threads residual streams.
+//!
+//! Modules:
+//! * [`embedding`] — token lookup (LM) and linear pixel embedding (sMNIST);
+//! * [`rmsnorm`]   — row-wise RMSNorm (pre-norms and the final norm);
+//! * [`mixer`]     — qkv projections + causal conv + scalar gate + the
+//!   chunkwise delta kernel, (batch × head)-parallel via the executor;
+//! * [`swiglu`]    — the gated MLP;
+//! * [`head`]      — tied-softmax LM head and pooled classifier head
+//!   (cross-entropy forward + backward).
+//!
+//! [`Block`] composes {RMSNorm -> mixer -> residual; RMSNorm -> SwiGLU ->
+//! residual} — the repeating unit of both the LM and the classifier.
+
+pub mod embedding;
+pub mod head;
+pub mod mixer;
+pub mod rmsnorm;
+pub mod swiglu;
+
+pub use embedding::{PixelEmbedding, TokenEmbedding};
+pub use head::{ClfHead, LmHead, LossStats};
+pub use mixer::MixerLayer;
+pub use rmsnorm::RmsNorm;
+pub use swiglu::SwiGlu;
+
+use crate::tensor::Tensor;
+
+use super::config::CpuModelCfg;
+use super::exec::Executor;
+use super::params::ParamSet;
+
+/// Everything a layer needs to run: static config, parameters, the
+/// work-splitting executor and the live batch shape (`l == 1` on the
+/// decode path).
+pub struct Ctx<'a> {
+    pub cfg: &'a CpuModelCfg,
+    pub params: &'a ParamSet,
+    pub exec: &'a Executor,
+    pub b: usize,
+    pub l: usize,
+}
+
+impl Ctx<'_> {
+    /// Token rows in this batch (B * L).
+    pub fn rows(&self) -> usize {
+        self.b * self.l
+    }
+}
+
+/// The uniform forward/backward pair every block layer exposes.
+pub trait Layer {
+    /// Saved activations from `forward`, consumed by `backward`.
+    type Tape;
+
+    /// Compute y from x, saving what the backward pass needs.
+    fn forward(&self, ctx: &Ctx, x: &[f32]) -> (Vec<f32>, Self::Tape);
+
+    /// Propagate dy back to dx, accumulating parameter gradients into
+    /// `grads` (aligned with the [`ParamSet`]).
+    fn backward(&self, ctx: &Ctx, tape: &Self::Tape, dy: &[f32], grads: &mut [Tensor])
+        -> Vec<f32>;
+}
+
+/// One transformer block: pre-norm mixer + residual, pre-norm SwiGLU +
+/// residual.
+pub struct Block {
+    pub norm_attn: RmsNorm,
+    pub mixer: MixerLayer,
+    pub norm_mlp: RmsNorm,
+    pub mlp: SwiGlu,
+}
+
+/// Saved activations of one block (one tape per sub-layer).
+pub struct BlockTape {
+    norm_attn: <RmsNorm as Layer>::Tape,
+    mixer: <MixerLayer as Layer>::Tape,
+    norm_mlp: <RmsNorm as Layer>::Tape,
+    mlp: <SwiGlu as Layer>::Tape,
+}
+
+impl Block {
+    pub fn new(params: &ParamSet, cfg: &CpuModelCfg, li: usize) -> Block {
+        let d = cfg.d_model;
+        Block {
+            norm_attn: RmsNorm::new(params, &format!("layer{li}.norm_attn"), d),
+            mixer: MixerLayer::new(params, cfg, li),
+            norm_mlp: RmsNorm::new(params, &format!("layer{li}.norm_mlp"), d),
+            mlp: SwiGlu::new(params, li),
+        }
+    }
+}
+
+impl Layer for Block {
+    type Tape = BlockTape;
+
+    fn forward(&self, ctx: &Ctx, x: &[f32]) -> (Vec<f32>, BlockTape) {
+        let (h_attn, t_norm_attn) = self.norm_attn.forward(ctx, x);
+        let (attn_out, t_mixer) = self.mixer.forward(ctx, &h_attn);
+        let mut x_mid = x.to_vec();
+        for (xm, a) in x_mid.iter_mut().zip(attn_out.iter()) {
+            *xm += a;
+        }
+        let (h_mlp, t_norm_mlp) = self.norm_mlp.forward(ctx, &x_mid);
+        let (mlp_out, t_mlp) = self.mlp.forward(ctx, &h_mlp);
+        let mut x_out = x_mid;
+        for (xo, m) in x_out.iter_mut().zip(mlp_out.iter()) {
+            *xo += m;
+        }
+        (
+            x_out,
+            BlockTape { norm_attn: t_norm_attn, mixer: t_mixer, norm_mlp: t_norm_mlp, mlp: t_mlp },
+        )
+    }
+
+    fn backward(
+        &self,
+        ctx: &Ctx,
+        tape: &BlockTape,
+        dy: &[f32],
+        grads: &mut [Tensor],
+    ) -> Vec<f32> {
+        // MLP branch: dy flows into both the residual and the MLP input.
+        let dh_mlp = self.mlp.backward(ctx, &tape.mlp, dy, grads);
+        let dmid_norm = self.norm_mlp.backward(ctx, &tape.norm_mlp, &dh_mlp, grads);
+        let mut dx_mid = dy.to_vec();
+        for (a, b) in dx_mid.iter_mut().zip(dmid_norm.iter()) {
+            *a += b;
+        }
+        // Mixer branch.
+        let dh_attn = self.mixer.backward(ctx, &tape.mixer, &dx_mid, grads);
+        let din_norm = self.norm_attn.backward(ctx, &tape.norm_attn, &dh_attn, grads);
+        let mut dx_in = dx_mid;
+        for (a, b) in dx_in.iter_mut().zip(din_norm.iter()) {
+            *a += b;
+        }
+        dx_in
+    }
+}
+
+/// One-token inference step of a block over rolling decode state
+/// (conv caches + per-head S), all updated in place. `ctx.l` must be 1.
+impl Block {
+    pub fn decode_step(
+        &self,
+        ctx: &Ctx,
+        x: &mut [f32],
+        cache_q: &mut [f32],
+        cache_k: &mut [f32],
+        cache_v: &mut [f32],
+        s: &mut [f32],
+    ) {
+        debug_assert_eq!(ctx.l, 1);
+        let h_attn = self.norm_attn.infer(ctx, x);
+        let mixed = self.mixer.decode_step(ctx, &h_attn, cache_q, cache_k, cache_v, s);
+        for (xv, mv) in x.iter_mut().zip(mixed.iter()) {
+            *xv += mv;
+        }
+        let h_mlp = self.norm_mlp.infer(ctx, x);
+        let mlp_out = self.mlp.infer(ctx, &h_mlp);
+        for (xv, mv) in x.iter_mut().zip(mlp_out.iter()) {
+            *xv += mv;
+        }
+    }
+}

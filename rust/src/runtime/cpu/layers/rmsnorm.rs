@@ -1,0 +1,107 @@
+//! Row-wise RMSNorm layer (pre-norms, per-head output norm, final norm).
+
+use crate::tensor::Tensor;
+
+use super::super::ops;
+use super::super::params::ParamSet;
+use super::{Ctx, Layer};
+
+/// RMSNorm over rows of `width` with a learned gain.
+pub struct RmsNorm {
+    gain: usize,
+    width: usize,
+}
+
+/// Saved: the input rows and the per-row inverse RMS.
+pub struct RmsNormTape {
+    x: Vec<f32>,
+    inv: Vec<f32>,
+}
+
+impl RmsNorm {
+    pub fn new(params: &ParamSet, gain_name: &str, width: usize) -> RmsNorm {
+        RmsNorm { gain: params.idx(gain_name), width }
+    }
+
+    /// Forward without a tape (decode / eval-only paths).
+    pub fn infer(&self, ctx: &Ctx, x: &[f32]) -> Vec<f32> {
+        let gain = ctx.params.tensor(self.gain).data();
+        ops::rms_norm_fwd(x, gain, self.width, ctx.cfg.norm_eps).0
+    }
+}
+
+impl Layer for RmsNorm {
+    type Tape = RmsNormTape;
+
+    fn forward(&self, ctx: &Ctx, x: &[f32]) -> (Vec<f32>, RmsNormTape) {
+        let gain = ctx.params.tensor(self.gain).data();
+        let (y, inv) = ops::rms_norm_fwd(x, gain, self.width, ctx.cfg.norm_eps);
+        (y, RmsNormTape { x: x.to_vec(), inv })
+    }
+
+    fn backward(
+        &self,
+        ctx: &Ctx,
+        tape: &RmsNormTape,
+        dy: &[f32],
+        grads: &mut [Tensor],
+    ) -> Vec<f32> {
+        let gain = ctx.params.tensor(self.gain).data();
+        ops::rms_norm_bwd(
+            &tape.x,
+            gain,
+            &tape.inv,
+            dy,
+            self.width,
+            grads[self.gain].data_mut(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::config::family_config;
+    use super::super::super::exec::Executor;
+    use super::super::super::params::ParamSet;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn layer_backward_matches_finite_differences() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let params = ParamSet::init(&cfg, 3);
+        let exec = Executor::serial();
+        let (b, l) = (1usize, 3usize);
+        let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b, l };
+        let layer = RmsNorm::new(&params, "layer0.norm_attn", cfg.d_model);
+
+        let mut rng = Rng::new(11);
+        let x = rng.normal_vec(b * l * cfg.d_model, 0.0, 1.0);
+        let w = rng.normal_vec(b * l * cfg.d_model, 0.0, 1.0); // dL/dy
+        let loss = |x: &[f32]| -> f64 {
+            let (y, _) = layer.forward(&ctx, x);
+            y.iter().zip(w.iter()).map(|(&a, &g)| a as f64 * g as f64).sum()
+        };
+
+        let (_, tape) = layer.forward(&ctx, &x);
+        let mut grads = params.zeros_like();
+        let dx = layer.backward(&ctx, &tape, &w, &mut grads);
+
+        let h = 1e-3f32;
+        for idx in (0..x.len()).step_by(17) {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let n = (loss(&xp) - loss(&xm)) / (2.0 * h as f64);
+            assert!(
+                (dx[idx] as f64 - n).abs() < 1e-2 * (1.0 + n.abs()),
+                "dx[{idx}]: {} vs {n}",
+                dx[idx]
+            );
+        }
+        // Gain gradient flows.
+        let gnorm = grads[params.idx("layer0.norm_attn")].norm();
+        assert!(gnorm > 0.0, "gain gradient must be nonzero");
+    }
+}

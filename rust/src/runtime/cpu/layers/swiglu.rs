@@ -1,0 +1,173 @@
+//! SwiGLU MLP layer: y = (silu(x W_gate) * (x W_up)) W_down.
+
+use crate::tensor::{matmul_tn_into, Tensor};
+
+use super::super::ops;
+use super::super::params::ParamSet;
+use super::{Ctx, Layer};
+
+pub struct SwiGlu {
+    w_gate: usize,
+    w_up: usize,
+    w_down: usize,
+}
+
+/// Saved: the normalized input plus both pre-activation branches
+/// (g = silu(gpre) and gu = g * up are cheap; the backward recomputes them).
+pub struct SwiGluTape {
+    x: Vec<f32>,
+    gpre: Vec<f32>,
+    up: Vec<f32>,
+}
+
+impl SwiGlu {
+    pub fn new(params: &ParamSet, li: usize) -> SwiGlu {
+        SwiGlu {
+            w_gate: params.idx(&format!("layer{li}.w_gate")),
+            w_up: params.idx(&format!("layer{li}.w_up")),
+            w_down: params.idx(&format!("layer{li}.w_down")),
+        }
+    }
+
+    fn project(&self, ctx: &Ctx, x: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (d, f, rows) = (ctx.cfg.d_model, ctx.cfg.mlp_width(), ctx.rows());
+        let gpre = ops::matmul(ctx.exec, x, ctx.params.tensor(self.w_gate).data(), rows, d, f);
+        let up = ops::matmul(ctx.exec, x, ctx.params.tensor(self.w_up).data(), rows, d, f);
+        let mut gu = ops::silu_fwd(&gpre);
+        for (g, u) in gu.iter_mut().zip(up.iter()) {
+            *g *= u;
+        }
+        let y = ops::matmul(ctx.exec, &gu, ctx.params.tensor(self.w_down).data(), rows, f, d);
+        (y, gpre, up)
+    }
+
+    /// Forward without a tape (decode path).
+    pub fn infer(&self, ctx: &Ctx, x: &[f32]) -> Vec<f32> {
+        self.project(ctx, x).0
+    }
+}
+
+impl Layer for SwiGlu {
+    type Tape = SwiGluTape;
+
+    fn forward(&self, ctx: &Ctx, x: &[f32]) -> (Vec<f32>, SwiGluTape) {
+        let (y, gpre, up) = self.project(ctx, x);
+        (y, SwiGluTape { x: x.to_vec(), gpre, up })
+    }
+
+    fn backward(
+        &self,
+        ctx: &Ctx,
+        tape: &SwiGluTape,
+        dy: &[f32],
+        grads: &mut [Tensor],
+    ) -> Vec<f32> {
+        let (d, f, rows) = (ctx.cfg.d_model, ctx.cfg.mlp_width(), ctx.rows());
+        // Recompute the cheap intermediates (g = silu(gpre), gu = g * up).
+        let g = ops::silu_fwd(&tape.gpre);
+        let mut gu = g.clone();
+        for (x, u) in gu.iter_mut().zip(tape.up.iter()) {
+            *x *= u;
+        }
+        matmul_tn_into(&gu, dy, grads[self.w_down].data_mut(), rows, f, d);
+        let mut dgu = vec![0.0f32; rows * f];
+        ops::matmul_nt_acc(
+            ctx.exec,
+            dy,
+            ctx.params.tensor(self.w_down).data(),
+            &mut dgu,
+            rows,
+            d,
+            f,
+        );
+        let mut dgpre = vec![0.0f32; rows * f];
+        let mut dup = vec![0.0f32; rows * f];
+        for i in 0..rows * f {
+            dgpre[i] = dgu[i] * tape.up[i] * ops::silu_grad(tape.gpre[i]);
+            dup[i] = dgu[i] * g[i];
+        }
+        let mut dx = vec![0.0f32; rows * d];
+        ops::matmul_nt_acc(
+            ctx.exec,
+            &dgpre,
+            ctx.params.tensor(self.w_gate).data(),
+            &mut dx,
+            rows,
+            f,
+            d,
+        );
+        ops::matmul_nt_acc(
+            ctx.exec,
+            &dup,
+            ctx.params.tensor(self.w_up).data(),
+            &mut dx,
+            rows,
+            f,
+            d,
+        );
+        matmul_tn_into(&tape.x, &dgpre, grads[self.w_gate].data_mut(), rows, d, f);
+        matmul_tn_into(&tape.x, &dup, grads[self.w_up].data_mut(), rows, d, f);
+        dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::config::family_config;
+    use super::super::super::exec::Executor;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn layer_backward_matches_finite_differences() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let params = ParamSet::init(&cfg, 5);
+        let exec = Executor::serial();
+        let (b, l) = (1usize, 2usize);
+        let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b, l };
+        let layer = SwiGlu::new(&params, 0);
+
+        let mut rng = Rng::new(13);
+        let rows = b * l;
+        let x = rng.normal_vec(rows * cfg.d_model, 0.0, 1.0);
+        let w = rng.normal_vec(rows * cfg.d_model, 0.0, 1.0);
+        let loss = |x: &[f32]| -> f64 {
+            let y = layer.infer(&ctx, x);
+            y.iter().zip(w.iter()).map(|(&a, &g)| a as f64 * g as f64).sum()
+        };
+
+        let (_, tape) = layer.forward(&ctx, &x);
+        let mut grads = params.zeros_like();
+        let dx = layer.backward(&ctx, &tape, &w, &mut grads);
+
+        let h = 1e-2f32;
+        for idx in (0..x.len()).step_by(23) {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let n = (loss(&xp) - loss(&xm)) / (2.0 * h as f64);
+            assert!(
+                (dx[idx] as f64 - n).abs() < 2e-2 * (1.0 + n.abs()),
+                "dx[{idx}]: {} vs {n}",
+                dx[idx]
+            );
+        }
+        for name in ["layer0.w_gate", "layer0.w_up", "layer0.w_down"] {
+            assert!(grads[params.idx(name)].norm() > 0.0, "{name} gradient must flow");
+        }
+    }
+
+    #[test]
+    fn infer_matches_forward() {
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let params = ParamSet::init(&cfg, 6);
+        let exec = Executor::serial();
+        let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b: 2, l: 1 };
+        let layer = SwiGlu::new(&params, 1);
+        let mut rng = Rng::new(14);
+        let x = rng.normal_vec(2 * cfg.d_model, 0.0, 1.0);
+        let (y, _) = layer.forward(&ctx, &x);
+        assert_eq!(y, layer.infer(&ctx, &x));
+    }
+}

@@ -1,15 +1,21 @@
 //! The pure-Rust CPU execution backend.
 //!
-//! Always available (no external runtime, no AOT artifacts): the model
-//! forward/backward, AdamW, eval statistics and the O(1)-state decode are
-//! implemented directly on `tensor::` + `attention::` (chunkwise delta
-//! kernel forward, [`crate::attention::delta_bptt`] backward). Families are
-//! resolved from their names (`lm_<preset>_<mixer>`, `clf_<mixer>`) using
-//! the same preset table `python/compile/model.py` bakes into artifacts, so
-//! CPU sessions train with the same shapes the PJRT backend would.
+//! Always available (no external runtime, no AOT artifacts). The model is
+//! a composable layer stack ([`layers`], built on the fwd/bwd primitive
+//! pairs in [`ops`]) orchestrated by [`model`]; the embarrassingly-parallel
+//! (batch, head) kernel work and the large matmuls fan out over a
+//! [`exec::Executor`] work-splitter (thread count: `--threads` /
+//! `EFLA_NUM_THREADS` / auto, numerics bit-identical at any setting).
+//! Families are resolved from their names (`lm_<preset>_<mixer>`,
+//! `clf_<mixer>`) using the same preset table `python/compile/model.py`
+//! bakes into artifacts, so CPU sessions train with the same shapes the
+//! PJRT backend would.
 
 pub mod config;
+pub mod exec;
+pub mod layers;
 pub mod model;
+pub mod ops;
 pub mod params;
 
 use anyhow::{anyhow, bail, Result};
@@ -20,16 +26,26 @@ use super::backend::{Backend, ModelSession, StepMetrics};
 use super::value::HostValue;
 
 use config::{family_config, known_families, CpuModelCfg, CpuTask};
-use model::{clf_loss, decode_state_shapes, lm_decode, lm_loss};
+use exec::Executor;
+use model::{clf_loss, decode_state_shapes, lm_loss, LmStack};
 use params::{adamw_update, ParamSet};
 
 /// The always-available pure-Rust backend.
 #[derive(Debug, Default)]
-pub struct CpuBackend;
+pub struct CpuBackend {
+    /// Worker threads per session (0 = auto: `EFLA_NUM_THREADS` or the
+    /// machine's available parallelism).
+    threads: usize,
+}
 
 impl CpuBackend {
     pub fn new() -> Self {
-        CpuBackend
+        CpuBackend { threads: 0 }
+    }
+
+    /// Backend with an explicit worker-thread count (0 = auto).
+    pub fn with_threads(threads: usize) -> Self {
+        CpuBackend { threads }
     }
 }
 
@@ -48,7 +64,7 @@ impl Backend for CpuBackend {
 
     fn open_session(&self, family: &str, seed: u32) -> Result<Box<dyn ModelSession>> {
         let cfg = family_config(family)?;
-        Ok(Box::new(CpuSession::init(family, cfg, seed)))
+        Ok(Box::new(CpuSession::init(family, cfg, seed, Executor::new(self.threads))))
     }
 }
 
@@ -57,17 +73,31 @@ pub struct CpuSession {
     family: String,
     cfg: CpuModelCfg,
     params: ParamSet,
+    exec: Executor,
+    /// Prebuilt decode layer stack (LM tasks only) — layers hold only
+    /// parameter indices, so one build serves every decoded token.
+    lm_stack: Option<LmStack>,
     m: Vec<Tensor>,
     v: Vec<Tensor>,
     step_count: u64,
 }
 
 impl CpuSession {
-    pub fn init(family: &str, cfg: CpuModelCfg, seed: u32) -> CpuSession {
+    pub fn init(family: &str, cfg: CpuModelCfg, seed: u32, exec: Executor) -> CpuSession {
         let params = ParamSet::init(&cfg, seed);
         let m = params.zeros_like();
         let v = params.zeros_like();
-        CpuSession { family: family.to_string(), cfg, params, m, v, step_count: 0 }
+        let lm_stack = LmStack::new(&params, &cfg).ok();
+        CpuSession {
+            family: family.to_string(),
+            cfg,
+            params,
+            exec,
+            lm_stack,
+            m,
+            v,
+            step_count: 0,
+        }
     }
 
     /// Unpack (d0, d1) for the LM tasks: tokens + targets, both (B, L) i32.
@@ -131,6 +161,10 @@ impl ModelSession for CpuSession {
         self.step_count
     }
 
+    fn threads(&self) -> usize {
+        self.exec.threads()
+    }
+
     fn step(&mut self, d0: &HostValue, d1: &HostValue, lr: f32) -> Result<StepMetrics> {
         let mut grads = self.params.zeros_like();
         let stats = match self.cfg.task {
@@ -139,6 +173,7 @@ impl ModelSession for CpuSession {
                 lm_loss(
                     &self.cfg,
                     &self.params,
+                    &self.exec,
                     tokens,
                     targets,
                     self.cfg.batch,
@@ -151,6 +186,7 @@ impl ModelSession for CpuSession {
                 clf_loss(
                     &self.cfg,
                     &self.params,
+                    &self.exec,
                     pixels,
                     labels,
                     self.cfg.batch,
@@ -177,6 +213,7 @@ impl ModelSession for CpuSession {
                 let s = lm_loss(
                     &self.cfg,
                     &self.params,
+                    &self.exec,
                     tokens,
                     targets,
                     self.cfg.batch,
@@ -187,7 +224,15 @@ impl ModelSession for CpuSession {
             }
             CpuTask::Classifier => {
                 let (pixels, labels) = self.clf_batch(d0, d1)?;
-                let s = clf_loss(&self.cfg, &self.params, pixels, labels, self.cfg.batch, None)?;
+                let s = clf_loss(
+                    &self.cfg,
+                    &self.params,
+                    &self.exec,
+                    pixels,
+                    labels,
+                    self.cfg.batch,
+                    None,
+                )?;
                 Ok(vec![s.loss_sum, s.correct])
             }
         }
@@ -249,11 +294,11 @@ impl ModelSession for CpuSession {
             .collect())
     }
 
-    fn decode(
-        &self,
-        state: &[HostValue],
-        tokens: &[i32],
-    ) -> Result<(Tensor, Vec<HostValue>)> {
+    fn decode(&self, state: &mut [HostValue], tokens: &[i32]) -> Result<Tensor> {
+        let stack = self
+            .lm_stack
+            .as_ref()
+            .ok_or_else(|| anyhow!("{}: decode is only available for LM families", self.family))?;
         let shapes = decode_state_shapes(&self.cfg);
         if state.len() != shapes.len() {
             bail!(
@@ -263,27 +308,22 @@ impl ModelSession for CpuSession {
                 state.len()
             );
         }
-        // Borrow the state tensors directly — no copy on the decode hot path.
-        let flat: Vec<&[f32]> = state
-            .iter()
+        // Mutably borrow the state tensors directly — decode advances them
+        // in place, so the serving hot path never copies or reallocates.
+        let mut flat: Vec<&mut [f32]> = state
+            .iter_mut()
             .enumerate()
             .map(|(i, hv)| {
                 let t = hv
-                    .as_f32()
+                    .as_f32_mut()
                     .map_err(|e| anyhow!("state tensor {i}: {e}"))?;
                 if t.shape() != shapes[i].as_slice() {
                     bail!("state tensor {i}: shape {:?}, expected {:?}", t.shape(), shapes[i]);
                 }
-                Ok(t.data())
+                Ok(t.data_mut())
             })
             .collect::<Result<_>>()?;
-        let (logits, new_flat) = lm_decode(&self.cfg, &self.params, &flat, tokens)?;
-        let new_state = new_flat
-            .into_iter()
-            .zip(shapes.iter())
-            .map(|(data, shape)| HostValue::F32(Tensor::from_vec(shape, data)))
-            .collect();
-        Ok((logits, new_state))
+        stack.decode(&self.cfg, &self.params, &self.exec, &mut flat, tokens)
     }
 }
 
@@ -346,5 +386,38 @@ mod tests {
         let s = backend.open_session("clf_efla", 1).unwrap();
         assert!(s.decode_batch().is_err());
         assert!(s.decode_state().is_err());
+    }
+
+    #[test]
+    fn explicit_thread_knob_reaches_the_session() {
+        let backend = CpuBackend::with_threads(3);
+        let s = backend.open_session("lm_tiny_efla", 1).unwrap();
+        assert_eq!(s.threads(), 3);
+        let auto = CpuBackend::new().open_session("lm_tiny_efla", 1).unwrap();
+        assert!(auto.threads() >= 1);
+    }
+
+    #[test]
+    fn decode_advances_state_in_place() {
+        let backend = CpuBackend::with_threads(1);
+        let session = backend.open_session("lm_tiny_efla", 7).unwrap();
+        let mut state = session.decode_state().unwrap();
+        let before: Vec<f32> = state
+            .iter()
+            .map(|hv| hv.as_f32().unwrap().data().iter().map(|x| x.abs()).sum::<f32>())
+            .collect();
+        let tokens = vec![65i32; session.decode_batch().unwrap()];
+        let logits1 = session.decode(&mut state, &tokens).unwrap();
+        assert!(logits1.data().iter().all(|x| x.is_finite()));
+        let after: Vec<f32> = state
+            .iter()
+            .map(|hv| hv.as_f32().unwrap().data().iter().map(|x| x.abs()).sum::<f32>())
+            .collect();
+        assert_ne!(before, after, "decode must mutate the state in place");
+        let logits2 = session.decode(&mut state, &tokens).unwrap();
+        assert!(
+            logits1.max_abs_diff(&logits2) > 1e-7,
+            "state must advance between decode steps"
+        );
     }
 }

@@ -1,639 +1,36 @@
-//! Pure-Rust model math: forward, reverse-mode backward, recurrent decode.
+//! Thin orchestrator over the composable layer stack.
+//!
+//! The actual math lives in [`super::layers`] (one module per block layer,
+//! each a paired `forward`/`backward` over a saved-activation tape) built
+//! on the primitives in [`super::ops`]; the embarrassingly-parallel
+//! (batch, head) kernel work and the large matmuls fan out through the
+//! [`super::exec::Executor`]. This module only composes layers into the
+//! three entry points the session needs:
+//!
+//! * [`lm_loss`]  — token embedding -> blocks -> tied-softmax CE head;
+//! * [`clf_loss`] — pixel embedding -> blocks -> pooled classifier head;
+//! * [`LmStack::decode`] — one-token recurrent decode over in-place
+//!   state (the session prebuilds the [`LmStack`] once).
 //!
 //! Architecture mirrors `python/compile/model.py` (LM) and
-//! `python/compile/classifier.py` (sMNIST classifier): each block is
-//! {RMSNorm -> token mixer -> residual; RMSNorm -> SwiGLU MLP -> residual};
-//! the mixer projects q/k/v, applies a depthwise causal conv (K=4) + SiLU,
-//! computes a per-head step size beta, and runs the chunkwise delta-rule
-//! kernel with the variant-specific gate. The backward pass is hand-written
-//! reverse mode; gradients flow through everything including the gate
-//! (alpha's beta- and lambda-partials) and the attention recurrence
-//! ([`crate::attention::delta_bptt`], recomputed per (batch, head) pair so
-//! peak memory is one head's state trajectory).
+//! `python/compile/classifier.py` (sMNIST): each block is {RMSNorm ->
+//! token mixer -> residual; RMSNorm -> SwiGLU -> residual}.
 
 use anyhow::{bail, Result};
 
-use crate::attention::backward::delta_bptt;
-use crate::attention::chunkwise::chunkwise_delta_alpha;
-use crate::attention::gates::{alpha_efla, alpha_efla_grad, EPS_LAMBDA};
-use crate::attention::sequential::delta_step_alpha;
-use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Tensor};
+use crate::tensor::Tensor;
 
-use super::config::{CpuModelCfg, CpuTask, Mixer, CONV_K, N_CLASSES};
+use super::config::{CpuModelCfg, CpuTask, CONV_K};
+use super::exec::Executor;
+use super::layers::{Block, ClfHead, Ctx, Layer, LmHead, PixelEmbedding, TokenEmbedding};
 use super::params::ParamSet;
 
-/// L2-normalize clamp (mirror of kernels/deltanet.py l2_normalize eps).
-const L2_EPS: f32 = 1e-6;
+pub use super::layers::LossStats;
 
-/// Loss statistics of one batch (LM: token-level; classifier: example-level).
-#[derive(Clone, Copy, Debug)]
-pub struct LossStats {
-    pub loss_mean: f32,
-    pub loss_sum: f32,
-    pub count: f32,
-    pub correct: f32,
+/// Build the block stack for a config (cheap: layers hold param indices).
+fn blocks(params: &ParamSet, cfg: &CpuModelCfg) -> Vec<Block> {
+    (0..cfg.n_layers).map(|li| Block::new(params, cfg, li)).collect()
 }
-
-// ----------------------------------------------------------------------
-// Elementwise / normalization primitives
-// ----------------------------------------------------------------------
-
-fn sigmoid(x: f32) -> f32 {
-    1.0 / (1.0 + (-x).exp())
-}
-
-fn softplus(x: f32) -> f32 {
-    if x > 20.0 {
-        x
-    } else if x < -20.0 {
-        x.exp()
-    } else {
-        x.exp().ln_1p()
-    }
-}
-
-fn silu(x: f32) -> f32 {
-    x * sigmoid(x)
-}
-
-/// d silu(x) / dx = s(x) * (1 + x * (1 - s(x)))
-fn silu_grad(x: f32) -> f32 {
-    let s = sigmoid(x);
-    s * (1.0 + x * (1.0 - s))
-}
-
-fn silu_fwd(x: &[f32]) -> Vec<f32> {
-    x.iter().map(|&v| silu(v)).collect()
-}
-
-fn silu_bwd(x: &[f32], dy: &[f32]) -> Vec<f32> {
-    x.iter().zip(dy.iter()).map(|(&v, &d)| d * silu_grad(v)).collect()
-}
-
-/// Row-wise RMSNorm over rows of `width`. Returns (y, inv_rms per row).
-fn rms_norm_fwd(x: &[f32], gain: &[f32], width: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
-    debug_assert_eq!(gain.len(), width);
-    let rows = x.len() / width;
-    let mut y = vec![0.0f32; x.len()];
-    let mut inv = vec![0.0f32; rows];
-    for r in 0..rows {
-        let xr = &x[r * width..(r + 1) * width];
-        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / width as f32;
-        let iv = 1.0 / (ms + eps).sqrt();
-        inv[r] = iv;
-        let yr = &mut y[r * width..(r + 1) * width];
-        for j in 0..width {
-            yr[j] = xr[j] * iv * gain[j];
-        }
-    }
-    (y, inv)
-}
-
-/// RMSNorm backward; accumulates into `dgain`, returns dx.
-fn rms_norm_bwd(
-    x: &[f32],
-    gain: &[f32],
-    inv: &[f32],
-    dy: &[f32],
-    width: usize,
-    dgain: &mut [f32],
-) -> Vec<f32> {
-    let rows = x.len() / width;
-    let mut dx = vec![0.0f32; x.len()];
-    for r in 0..rows {
-        let xr = &x[r * width..(r + 1) * width];
-        let dyr = &dy[r * width..(r + 1) * width];
-        let iv = inv[r];
-        let mut dot = 0.0f32; // sum_i dy_i * gain_i * x_i
-        for j in 0..width {
-            dot += dyr[j] * gain[j] * xr[j];
-        }
-        let c = iv * iv * iv * dot / width as f32;
-        let dxr = &mut dx[r * width..(r + 1) * width];
-        for j in 0..width {
-            dxr[j] = iv * gain[j] * dyr[j] - c * xr[j];
-            dgain[j] += dyr[j] * xr[j] * iv;
-        }
-    }
-    dx
-}
-
-/// Row-wise L2 normalize (clamped-square form). Returns (y, sum-square per
-/// row) — the clamp decision replays in the backward from the stored ss.
-fn l2norm_fwd(x: &[f32], width: usize) -> (Vec<f32>, Vec<f32>) {
-    let rows = x.len() / width;
-    let mut y = vec![0.0f32; x.len()];
-    let mut ss = vec![0.0f32; rows];
-    for r in 0..rows {
-        let xr = &x[r * width..(r + 1) * width];
-        let s: f32 = xr.iter().map(|v| v * v).sum();
-        ss[r] = s;
-        let iv = 1.0 / s.max(L2_EPS * L2_EPS).sqrt();
-        let yr = &mut y[r * width..(r + 1) * width];
-        for j in 0..width {
-            yr[j] = xr[j] * iv;
-        }
-    }
-    (y, ss)
-}
-
-fn l2norm_bwd(x: &[f32], ss: &[f32], dy: &[f32], width: usize) -> Vec<f32> {
-    let rows = x.len() / width;
-    let mut dx = vec![0.0f32; x.len()];
-    for r in 0..rows {
-        let xr = &x[r * width..(r + 1) * width];
-        let dyr = &dy[r * width..(r + 1) * width];
-        let s = ss[r];
-        let clamped = s <= L2_EPS * L2_EPS;
-        let iv = 1.0 / s.max(L2_EPS * L2_EPS).sqrt();
-        let dxr = &mut dx[r * width..(r + 1) * width];
-        if clamped {
-            // r is a constant below the clamp: plain scaling.
-            for j in 0..width {
-                dxr[j] = iv * dyr[j];
-            }
-        } else {
-            let mut dot = 0.0f32;
-            for j in 0..width {
-                dot += xr[j] * dyr[j];
-            }
-            let c = iv * iv * iv * dot;
-            for j in 0..width {
-                dxr[j] = iv * dyr[j] - c * xr[j];
-            }
-        }
-    }
-    dx
-}
-
-/// Depthwise causal conv along the sequence: x (B, L, C), w (K, C).
-/// out[b, t, c] = sum_j w[j, c] * x[b, t - (K-1) + j, c] (zero-padded).
-fn conv_fwd(x: &[f32], w: &[f32], b: usize, l: usize, c: usize, k: usize) -> Vec<f32> {
-    let mut y = vec![0.0f32; x.len()];
-    for bi in 0..b {
-        for t in 0..l {
-            let yr = &mut y[(bi * l + t) * c..(bi * l + t + 1) * c];
-            for j in 0..k {
-                let t0 = (t + j).checked_sub(k - 1);
-                let t0 = match t0 {
-                    Some(v) if v < l => v,
-                    _ => continue,
-                };
-                let wr = &w[j * c..(j + 1) * c];
-                let xr = &x[(bi * l + t0) * c..(bi * l + t0 + 1) * c];
-                for ch in 0..c {
-                    yr[ch] += wr[ch] * xr[ch];
-                }
-            }
-        }
-    }
-    y
-}
-
-/// Conv backward; accumulates into `dw`, returns dx.
-fn conv_bwd(
-    x: &[f32],
-    w: &[f32],
-    dy: &[f32],
-    b: usize,
-    l: usize,
-    c: usize,
-    k: usize,
-    dw: &mut [f32],
-) -> Vec<f32> {
-    let mut dx = vec![0.0f32; x.len()];
-    for bi in 0..b {
-        for t in 0..l {
-            let dyr = &dy[(bi * l + t) * c..(bi * l + t + 1) * c];
-            for j in 0..k {
-                let t0 = match (t + j).checked_sub(k - 1) {
-                    Some(v) if v < l => v,
-                    _ => continue,
-                };
-                let wr = &w[j * c..(j + 1) * c];
-                let xr = &x[(bi * l + t0) * c..(bi * l + t0 + 1) * c];
-                let dwr = &mut dw[j * c..(j + 1) * c];
-                let dxr = &mut dx[(bi * l + t0) * c..(bi * l + t0 + 1) * c];
-                for ch in 0..c {
-                    dwr[ch] += dyr[ch] * xr[ch];
-                    dxr[ch] += wr[ch] * dyr[ch];
-                }
-            }
-        }
-    }
-    dx
-}
-
-/// Fresh m x n product a @ w.
-fn mm(a: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    matmul_into(a, w, &mut out, m, k, n);
-    out
-}
-
-// ----------------------------------------------------------------------
-// Mixer block (shared between LM and classifier)
-// ----------------------------------------------------------------------
-
-/// Activations one block must retain for its backward pass.
-struct BlockCache {
-    h_attn: Vec<f32>,
-    attn_inv: Vec<f32>,
-    qpre: Vec<f32>,
-    kpre: Vec<f32>,
-    vpre: Vec<f32>,
-    qc: Vec<f32>,
-    kc: Vec<f32>,
-    vc: Vec<f32>,
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    /// DeltaNet only: normalized q/k and per-head-row sum-squares.
-    qn: Vec<f32>,
-    kn: Vec<f32>,
-    q_ss: Vec<f32>,
-    k_ss: Vec<f32>,
-    b_logits: Vec<f32>,
-    beta_eff: Vec<f32>,
-    alpha: Vec<f32>,
-    lambda: Vec<f32>,
-    o_raw: Vec<f32>,
-    o_inv: Vec<f32>,
-    o_norm: Vec<f32>,
-    x_mid: Vec<f32>,
-    h_mlp: Vec<f32>,
-    mlp_inv: Vec<f32>,
-    gpre: Vec<f32>,
-    up: Vec<f32>,
-}
-
-/// Gather one (batch, head) pair's (L, Dh) rows out of a (B*L, inner) buffer.
-fn gather_head(src: &[f32], bi: usize, hh: usize, l: usize, inner: usize, dh: usize) -> Tensor {
-    let mut out = vec![0.0f32; l * dh];
-    for t in 0..l {
-        let base = (bi * l + t) * inner + hh * dh;
-        out[t * dh..(t + 1) * dh].copy_from_slice(&src[base..base + dh]);
-    }
-    Tensor::from_vec(&[l, dh], out)
-}
-
-/// Scatter-add the (L, Dh) head rows back into a (B*L, inner) buffer.
-fn scatter_head_add(dst: &mut [f32], src: &[f32], bi: usize, hh: usize, l: usize, inner: usize, dh: usize) {
-    for t in 0..l {
-        let base = (bi * l + t) * inner + hh * dh;
-        for j in 0..dh {
-            dst[base + j] += src[t * dh + j];
-        }
-    }
-}
-
-fn block_forward(
-    cfg: &CpuModelCfg,
-    params: &ParamSet,
-    li: usize,
-    x_in: &[f32],
-    b: usize,
-    l: usize,
-) -> (BlockCache, Vec<f32>) {
-    let d = cfg.d_model;
-    let inner = cfg.inner();
-    let h = cfg.n_heads;
-    let dh = cfg.head_dim;
-    let rows = b * l;
-    let p = |n: &str| format!("layer{li}.{n}");
-
-    let (h_attn, attn_inv) = rms_norm_fwd(x_in, params.get(&p("norm_attn")).data(), d, cfg.norm_eps);
-
-    let qpre = mm(&h_attn, params.get(&p("wq")).data(), rows, d, inner);
-    let kpre = mm(&h_attn, params.get(&p("wk")).data(), rows, d, inner);
-    let vpre = mm(&h_attn, params.get(&p("wv")).data(), rows, d, inner);
-    let qc = conv_fwd(&qpre, params.get(&p("conv_q")).data(), b, l, inner, CONV_K);
-    let kc = conv_fwd(&kpre, params.get(&p("conv_k")).data(), b, l, inner, CONV_K);
-    let vc = conv_fwd(&vpre, params.get(&p("conv_v")).data(), b, l, inner, CONV_K);
-    let q = silu_fwd(&qc);
-    let k = silu_fwd(&kc);
-    let v = silu_fwd(&vc);
-
-    // DeltaNet normalizes q/k per head row; (rows, inner) is (rows*h, dh).
-    let (qn, q_ss, kn, k_ss) = if cfg.mixer == Mixer::DeltaNet {
-        let (qn, q_ss) = l2norm_fwd(&q, dh);
-        let (kn, k_ss) = l2norm_fwd(&k, dh);
-        (qn, q_ss, kn, k_ss)
-    } else {
-        (Vec::new(), Vec::new(), Vec::new(), Vec::new())
-    };
-
-    // Per-token scalar gate.
-    let b_logits = mm(&h_attn, params.get(&p("w_beta")).data(), rows, d, h);
-    let adecay = params.get(&p("adecay")).data();
-    let mut beta_eff = vec![0.0f32; rows * h];
-    for r in 0..rows {
-        for hh in 0..h {
-            let z = b_logits[r * h + hh];
-            let mut bv = if cfg.mixer == Mixer::EflaLoose { softplus(z) } else { sigmoid(z) };
-            if cfg.mixer == Mixer::EflaAdaptive {
-                bv *= softplus(adecay[hh]);
-            }
-            beta_eff[r * h + hh] = bv;
-        }
-    }
-    let (lambda, alpha) = if cfg.mixer == Mixer::DeltaNet {
-        (Vec::new(), beta_eff.clone())
-    } else {
-        let mut lambda = vec![0.0f32; rows * h];
-        let mut alpha = vec![0.0f32; rows * h];
-        for r in 0..rows {
-            for hh in 0..h {
-                let krow = &k[r * inner + hh * dh..r * inner + (hh + 1) * dh];
-                let lam: f32 = krow.iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
-                lambda[r * h + hh] = lam;
-                alpha[r * h + hh] = alpha_efla(beta_eff[r * h + hh], lam);
-            }
-        }
-        (lambda, alpha)
-    };
-
-    // Chunkwise delta attention per (batch, head).
-    let q_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &qn } else { &q };
-    let k_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &kn } else { &k };
-    let mut o_raw = vec![0.0f32; rows * inner];
-    for bi in 0..b {
-        for hh in 0..h {
-            let qh = gather_head(q_src, bi, hh, l, inner, dh);
-            let kh = gather_head(k_src, bi, hh, l, inner, dh);
-            let vh = gather_head(&v, bi, hh, l, inner, dh);
-            let al: Vec<f32> = (0..l).map(|t| alpha[(bi * l + t) * h + hh]).collect();
-            let (oh, _s) = chunkwise_delta_alpha(&qh, &kh, &vh, &al, cfg.chunk);
-            scatter_head_add(&mut o_raw, oh.data(), bi, hh, l, inner, dh);
-        }
-    }
-
-    // Per-head output norm, merge, project.
-    let (o_norm, o_inv) = rms_norm_fwd(&o_raw, params.get(&p("norm_out")).data(), dh, cfg.norm_eps);
-    let mixed = mm(&o_norm, params.get(&p("wo")).data(), rows, inner, d);
-    let mut x_mid = x_in.to_vec();
-    for (xm, mx) in x_mid.iter_mut().zip(mixed.iter()) {
-        *xm += mx;
-    }
-
-    // SwiGLU MLP.
-    let f = cfg.mlp_width();
-    let (h_mlp, mlp_inv) = rms_norm_fwd(&x_mid, params.get(&p("norm_mlp")).data(), d, cfg.norm_eps);
-    let gpre = mm(&h_mlp, params.get(&p("w_gate")).data(), rows, d, f);
-    let up = mm(&h_mlp, params.get(&p("w_up")).data(), rows, d, f);
-    let mut gu = silu_fwd(&gpre);
-    for (g_, u_) in gu.iter_mut().zip(up.iter()) {
-        *g_ *= u_;
-    }
-    let mlp_out = mm(&gu, params.get(&p("w_down")).data(), rows, f, d);
-    let mut x_out = x_mid.clone();
-    for (xo, mo) in x_out.iter_mut().zip(mlp_out.iter()) {
-        *xo += mo;
-    }
-
-    (
-        BlockCache {
-            h_attn,
-            attn_inv,
-            qpre,
-            kpre,
-            vpre,
-            qc,
-            kc,
-            vc,
-            q,
-            k,
-            v,
-            qn,
-            kn,
-            q_ss,
-            k_ss,
-            b_logits,
-            beta_eff,
-            alpha,
-            lambda,
-            o_raw,
-            o_inv,
-            o_norm,
-            x_mid,
-            h_mlp,
-            mlp_inv,
-            gpre,
-            up,
-        },
-        x_out,
-    )
-}
-
-#[allow(clippy::too_many_arguments)]
-fn block_backward(
-    cfg: &CpuModelCfg,
-    params: &ParamSet,
-    li: usize,
-    x_in: &[f32],
-    cache: &BlockCache,
-    dx_out: &[f32],
-    b: usize,
-    l: usize,
-    grads: &mut [Tensor],
-) -> Vec<f32> {
-    let d = cfg.d_model;
-    let inner = cfg.inner();
-    let h = cfg.n_heads;
-    let dh = cfg.head_dim;
-    let f = cfg.mlp_width();
-    let rows = b * l;
-    let p = |n: &str| format!("layer{li}.{n}");
-    let gi = |n: &str| params.idx(&p(n));
-
-    // ---- MLP backward -------------------------------------------------
-    // Recompute the cheap intermediates (g = silu(gpre), gu = g * up).
-    let g = silu_fwd(&cache.gpre);
-    let mut gu = g.clone();
-    for (x_, u_) in gu.iter_mut().zip(cache.up.iter()) {
-        *x_ *= u_;
-    }
-    matmul_tn_into(&gu, dx_out, grads[gi("w_down")].data_mut(), rows, f, d);
-    let mut dgu = vec![0.0f32; rows * f];
-    matmul_nt_into(dx_out, params.get(&p("w_down")).data(), &mut dgu, rows, d, f);
-    let mut dgpre = vec![0.0f32; rows * f];
-    let mut dup = vec![0.0f32; rows * f];
-    for i in 0..rows * f {
-        dgpre[i] = dgu[i] * cache.up[i] * silu_grad(cache.gpre[i]);
-        dup[i] = dgu[i] * g[i];
-    }
-    let mut dh_mlp = vec![0.0f32; rows * d];
-    matmul_nt_into(&dgpre, params.get(&p("w_gate")).data(), &mut dh_mlp, rows, f, d);
-    matmul_nt_into(&dup, params.get(&p("w_up")).data(), &mut dh_mlp, rows, f, d);
-    matmul_tn_into(&cache.h_mlp, &dgpre, grads[gi("w_gate")].data_mut(), rows, d, f);
-    matmul_tn_into(&cache.h_mlp, &dup, grads[gi("w_up")].data_mut(), rows, d, f);
-    let dmid_norm = rms_norm_bwd(
-        &cache.x_mid,
-        params.get(&p("norm_mlp")).data(),
-        &cache.mlp_inv,
-        &dh_mlp,
-        d,
-        grads[gi("norm_mlp")].data_mut(),
-    );
-    let mut dx_mid = dx_out.to_vec();
-    for (a, b_) in dx_mid.iter_mut().zip(dmid_norm.iter()) {
-        *a += b_;
-    }
-
-    // ---- attention backward -------------------------------------------
-    matmul_tn_into(&cache.o_norm, &dx_mid, grads[gi("wo")].data_mut(), rows, inner, d);
-    let mut do_norm = vec![0.0f32; rows * inner];
-    matmul_nt_into(&dx_mid, params.get(&p("wo")).data(), &mut do_norm, rows, d, inner);
-    let do_raw = rms_norm_bwd(
-        &cache.o_raw,
-        params.get(&p("norm_out")).data(),
-        &cache.o_inv,
-        &do_norm,
-        dh,
-        grads[gi("norm_out")].data_mut(),
-    );
-
-    // BPTT through the delta recurrence, one (batch, head) at a time.
-    let q_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &cache.qn } else { &cache.q };
-    let k_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &cache.kn } else { &cache.k };
-    let mut dq_post = vec![0.0f32; rows * inner];
-    let mut dk_post = vec![0.0f32; rows * inner];
-    let mut dv_post = vec![0.0f32; rows * inner];
-    let mut dalpha = vec![0.0f32; rows * h];
-    for bi in 0..b {
-        for hh in 0..h {
-            let qh = gather_head(q_src, bi, hh, l, inner, dh);
-            let kh = gather_head(k_src, bi, hh, l, inner, dh);
-            let vh = gather_head(&cache.v, bi, hh, l, inner, dh);
-            let doh = gather_head(&do_raw, bi, hh, l, inner, dh);
-            let al: Vec<f32> = (0..l).map(|t| cache.alpha[(bi * l + t) * h + hh]).collect();
-            let (dqh, dkh, dvh, dal) = delta_bptt(&qh, &kh, &vh, &al, &doh);
-            scatter_head_add(&mut dq_post, dqh.data(), bi, hh, l, inner, dh);
-            scatter_head_add(&mut dk_post, dkh.data(), bi, hh, l, inner, dh);
-            scatter_head_add(&mut dv_post, dvh.data(), bi, hh, l, inner, dh);
-            for t in 0..l {
-                dalpha[(bi * l + t) * h + hh] += dal[t];
-            }
-        }
-    }
-
-    // Gate backward: alpha -> (beta logits, adecay, lambda -> k).
-    let adecay = params.get(&p("adecay")).data().to_vec();
-    let mut db_logits = vec![0.0f32; rows * h];
-    {
-        let dadecay = grads[gi("adecay")].data_mut();
-        for r in 0..rows {
-            for hh in 0..h {
-                let da = dalpha[r * h + hh];
-                let z = cache.b_logits[r * h + hh];
-                let dbeta_eff = match cfg.mixer {
-                    Mixer::DeltaNet => da,
-                    _ => {
-                        let lam = cache.lambda[r * h + hh];
-                        let be = cache.beta_eff[r * h + hh];
-                        let (_a, da_db, da_dl) = alpha_efla_grad(be, lam);
-                        let dlam = da * da_dl;
-                        if dlam != 0.0 {
-                            let base = r * inner + hh * dh;
-                            for j in 0..dh {
-                                dk_post[base + j] += dlam * 2.0 * cache.k[base + j];
-                            }
-                        }
-                        da * da_db
-                    }
-                };
-                match cfg.mixer {
-                    Mixer::EflaLoose => {
-                        db_logits[r * h + hh] = dbeta_eff * sigmoid(z);
-                    }
-                    Mixer::EflaAdaptive => {
-                        let sp = softplus(adecay[hh]);
-                        let bsig = sigmoid(z);
-                        dadecay[hh] += dbeta_eff * bsig * sigmoid(adecay[hh]);
-                        db_logits[r * h + hh] = dbeta_eff * sp * bsig * (1.0 - bsig);
-                    }
-                    _ => {
-                        let bsig = sigmoid(z);
-                        db_logits[r * h + hh] = dbeta_eff * bsig * (1.0 - bsig);
-                    }
-                }
-            }
-        }
-    }
-
-    let mut dh_attn = vec![0.0f32; rows * d];
-    matmul_nt_into(&db_logits, params.get(&p("w_beta")).data(), &mut dh_attn, rows, h, d);
-    matmul_tn_into(&cache.h_attn, &db_logits, grads[gi("w_beta")].data_mut(), rows, d, h);
-
-    // DeltaNet: through the q/k L2 normalization.
-    let (dq_silu, dk_silu) = if cfg.mixer == Mixer::DeltaNet {
-        (
-            l2norm_bwd(&cache.q, &cache.q_ss, &dq_post, dh),
-            l2norm_bwd(&cache.k, &cache.k_ss, &dk_post, dh),
-        )
-    } else {
-        (dq_post, dk_post)
-    };
-
-    // SiLU, conv, projections.
-    let dqc = silu_bwd(&cache.qc, &dq_silu);
-    let dkc = silu_bwd(&cache.kc, &dk_silu);
-    let dvc = silu_bwd(&cache.vc, &dv_post);
-    let dqpre = conv_bwd(
-        &cache.qpre,
-        params.get(&p("conv_q")).data(),
-        &dqc,
-        b,
-        l,
-        inner,
-        CONV_K,
-        grads[gi("conv_q")].data_mut(),
-    );
-    let dkpre = conv_bwd(
-        &cache.kpre,
-        params.get(&p("conv_k")).data(),
-        &dkc,
-        b,
-        l,
-        inner,
-        CONV_K,
-        grads[gi("conv_k")].data_mut(),
-    );
-    let dvpre = conv_bwd(
-        &cache.vpre,
-        params.get(&p("conv_v")).data(),
-        &dvc,
-        b,
-        l,
-        inner,
-        CONV_K,
-        grads[gi("conv_v")].data_mut(),
-    );
-    matmul_tn_into(&cache.h_attn, &dqpre, grads[gi("wq")].data_mut(), rows, d, inner);
-    matmul_tn_into(&cache.h_attn, &dkpre, grads[gi("wk")].data_mut(), rows, d, inner);
-    matmul_tn_into(&cache.h_attn, &dvpre, grads[gi("wv")].data_mut(), rows, d, inner);
-    matmul_nt_into(&dqpre, params.get(&p("wq")).data(), &mut dh_attn, rows, inner, d);
-    matmul_nt_into(&dkpre, params.get(&p("wk")).data(), &mut dh_attn, rows, inner, d);
-    matmul_nt_into(&dvpre, params.get(&p("wv")).data(), &mut dh_attn, rows, inner, d);
-
-    let din_norm = rms_norm_bwd(
-        x_in,
-        params.get(&p("norm_attn")).data(),
-        &cache.attn_inv,
-        &dh_attn,
-        d,
-        grads[gi("norm_attn")].data_mut(),
-    );
-    let mut dx_in = dx_mid;
-    for (a, b_) in dx_in.iter_mut().zip(din_norm.iter()) {
-        *a += b_;
-    }
-    dx_in
-}
-
-// ----------------------------------------------------------------------
-// LM loss (forward + optional backward)
-// ----------------------------------------------------------------------
 
 /// Full LM forward: masked cross-entropy stats, plus gradients into
 /// `grads` (aligned with the ParamSet) when provided.
@@ -642,324 +39,97 @@ fn block_backward(
 pub fn lm_loss(
     cfg: &CpuModelCfg,
     params: &ParamSet,
+    exec: &Executor,
     tokens: &[i32],
     targets: &[i32],
     b: usize,
     l: usize,
     grads: Option<&mut [Tensor]>,
 ) -> Result<LossStats> {
-    let d = cfg.d_model;
-    let vocab = cfg.vocab;
     let rows = b * l;
     if tokens.len() != rows || targets.len() != rows {
         bail!("lm batch shape mismatch: want {}x{}", b, l);
     }
-    for &t in tokens {
-        if t < 0 || t as usize >= vocab {
-            bail!("token id {t} out of range (vocab {vocab})");
+    // Fail fast on bad targets before the (expensive) forward runs; the
+    // head re-checks as defense in depth.
+    for &t in targets {
+        if t >= cfg.vocab as i32 {
+            bail!("target id {t} out of range (vocab {})", cfg.vocab);
         }
     }
-    let embed = params.get("embed");
+    let ctx = Ctx { cfg, params, exec, b, l };
+    let embed = TokenEmbedding::new(params);
+    let stack = blocks(params, cfg);
+    let head = LmHead::new(params, cfg);
 
-    // Embedding lookup.
-    let mut x = vec![0.0f32; rows * d];
-    for r in 0..rows {
-        let t = tokens[r] as usize;
-        x[r * d..(r + 1) * d].copy_from_slice(&embed.data()[t * d..(t + 1) * d]);
+    let mut x = embed.forward(&ctx, tokens)?;
+    let mut tapes = Vec::with_capacity(stack.len());
+    for blk in &stack {
+        let (y, tape) = blk.forward(&ctx, &x);
+        tapes.push(tape);
+        x = y;
     }
+    let (stats, head_tape) = head.forward(&ctx, &x, targets)?;
 
-    // Blocks.
-    let mut acts: Vec<Vec<f32>> = vec![x];
-    let mut caches: Vec<BlockCache> = Vec::with_capacity(cfg.n_layers);
-    for li in 0..cfg.n_layers {
-        let (cache, x_out) = block_forward(cfg, params, li, acts.last().unwrap(), b, l);
-        caches.push(cache);
-        acts.push(x_out);
-    }
-
-    // Final norm + tied logits.
-    let x_last = acts.last().unwrap();
-    let (xf, f_inv) = rms_norm_fwd(x_last, params.get("norm_f").data(), d, cfg.norm_eps);
-    let mut logits = vec![0.0f32; rows * vocab];
-    matmul_nt_into(&xf, embed.data(), &mut logits, rows, d, vocab);
-
-    // Masked CE statistics.
-    let mut loss_sum = 0f64;
-    let mut count = 0f64;
-    let mut correct = 0f64;
-    let mut row_lse = vec![0.0f32; rows]; // log-sum-exp per scored row
-    for r in 0..rows {
-        let tgt = targets[r];
-        if tgt < 0 {
-            continue;
-        }
-        let tgt = tgt as usize;
-        if tgt >= vocab {
-            bail!("target id {tgt} out of range (vocab {vocab})");
-        }
-        let lr = &logits[r * vocab..(r + 1) * vocab];
-        let mx = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut z = 0f32;
-        let mut argmax = 0usize;
-        let mut best = f32::NEG_INFINITY;
-        for (j, &v) in lr.iter().enumerate() {
-            z += (v - mx).exp();
-            if v > best {
-                best = v;
-                argmax = j;
-            }
-        }
-        let lse = mx + z.ln();
-        row_lse[r] = lse;
-        loss_sum += (lse - lr[tgt]) as f64;
-        count += 1.0;
-        if argmax == tgt {
-            correct += 1.0;
-        }
-    }
-    let denom = count.max(1.0);
-    let stats = LossStats {
-        loss_mean: (loss_sum / denom) as f32,
-        loss_sum: loss_sum as f32,
-        count: count as f32,
-        correct: correct as f32,
-    };
-
-    let grads: &mut [Tensor] = match grads {
+    let grads = match grads {
         Some(g) => g,
         None => return Ok(stats),
     };
-
-    // dlogits = (softmax - onehot) * mask / count.
-    let inv_count = 1.0 / denom as f32;
-    let mut dlogits = vec![0.0f32; rows * vocab];
-    for r in 0..rows {
-        let tgt = targets[r];
-        if tgt < 0 {
-            continue;
-        }
-        let lr = &logits[r * vocab..(r + 1) * vocab];
-        let dlr = &mut dlogits[r * vocab..(r + 1) * vocab];
-        let lse = row_lse[r];
-        for j in 0..vocab {
-            dlr[j] = (lr[j] - lse).exp() * inv_count;
-        }
-        dlr[tgt as usize] -= inv_count;
+    let mut dx = head.backward(&ctx, &head_tape, targets, grads);
+    for (blk, tape) in stack.iter().zip(tapes.iter()).rev() {
+        dx = blk.backward(&ctx, tape, &dx, grads);
     }
-
-    // Tied head: logits = xf @ embed^T.
-    let i_embed = params.idx("embed");
-    let mut dxf = vec![0.0f32; rows * d];
-    matmul_into(&dlogits, embed.data(), &mut dxf, rows, vocab, d);
-    matmul_tn_into(&dlogits, &xf, grads[i_embed].data_mut(), rows, vocab, d);
-
-    let mut dx = rms_norm_bwd(
-        x_last,
-        params.get("norm_f").data(),
-        &f_inv,
-        &dxf,
-        d,
-        grads[params.idx("norm_f")].data_mut(),
-    );
-    for li in (0..cfg.n_layers).rev() {
-        dx = block_backward(cfg, params, li, &acts[li], &caches[li], &dx, b, l, grads);
-    }
-
-    // Embedding lookup backward.
-    {
-        let dembed = grads[i_embed].data_mut();
-        for r in 0..rows {
-            let t = tokens[r] as usize;
-            let dr = &dx[r * d..(r + 1) * d];
-            let er = &mut dembed[t * d..(t + 1) * d];
-            for j in 0..d {
-                er[j] += dr[j];
-            }
-        }
-    }
+    embed.backward(&ctx, tokens, &dx, grads);
     Ok(stats)
 }
-
-// ----------------------------------------------------------------------
-// Classifier loss (forward + optional backward)
-// ----------------------------------------------------------------------
 
 /// sMNIST classifier forward: pixels (B, 784) f32 -> 10-way CE over the
 /// mean-pooled sequence; gradients into `grads` when provided.
 pub fn clf_loss(
     cfg: &CpuModelCfg,
     params: &ParamSet,
+    exec: &Executor,
     pixels: &[f32],
     labels: &[i32],
     b: usize,
     grads: Option<&mut [Tensor]>,
 ) -> Result<LossStats> {
-    let d = cfg.d_model;
     let l = cfg.seq;
-    let rows = b * l;
-    if pixels.len() != rows || labels.len() != b {
+    if pixels.len() != b * l || labels.len() != b {
         bail!("classifier batch shape mismatch: want {}x{}", b, l);
     }
+    // Fail fast on bad labels before the (expensive) forward runs; the
+    // head re-checks as defense in depth.
     for &lb in labels {
-        if lb < 0 || lb as usize >= N_CLASSES {
-            bail!("label {lb} out of range (classes {N_CLASSES})");
+        if lb < 0 || lb as usize >= super::config::N_CLASSES {
+            bail!("label {lb} out of range (classes {})", super::config::N_CLASSES);
         }
     }
+    let ctx = Ctx { cfg, params, exec, b, l };
+    let embed = PixelEmbedding::new(params);
+    let stack = blocks(params, cfg);
+    let head = ClfHead::new(params, cfg);
 
-    // Linear pixel embedding: x = px * pix_w + pix_b.
-    let pix_w = params.get("pix_w");
-    let pix_b = params.get("pix_b");
-    let mut x = vec![0.0f32; rows * d];
-    for r in 0..rows {
-        let px = pixels[r];
-        let xr = &mut x[r * d..(r + 1) * d];
-        for j in 0..d {
-            xr[j] = px * pix_w.data()[j] + pix_b.data()[j];
-        }
+    let mut x = embed.forward(&ctx, pixels);
+    let mut tapes = Vec::with_capacity(stack.len());
+    for blk in &stack {
+        let (y, tape) = blk.forward(&ctx, &x);
+        tapes.push(tape);
+        x = y;
     }
+    let (stats, head_tape) = head.forward(&ctx, &x, labels)?;
 
-    let mut acts: Vec<Vec<f32>> = vec![x];
-    let mut caches: Vec<BlockCache> = Vec::with_capacity(cfg.n_layers);
-    for li in 0..cfg.n_layers {
-        let (cache, x_out) = block_forward(cfg, params, li, acts.last().unwrap(), b, l);
-        caches.push(cache);
-        acts.push(x_out);
-    }
-
-    // Mean pool over the sequence, final norm, linear head.
-    let x_last = acts.last().unwrap();
-    let mut xp = vec![0.0f32; b * d];
-    let inv_l = 1.0 / l as f32;
-    for bi in 0..b {
-        let xpr = &mut xp[bi * d..(bi + 1) * d];
-        for t in 0..l {
-            let xr = &x_last[(bi * l + t) * d..(bi * l + t + 1) * d];
-            for j in 0..d {
-                xpr[j] += xr[j] * inv_l;
-            }
-        }
-    }
-    let (xpn, p_inv) = rms_norm_fwd(&xp, params.get("norm_f").data(), d, cfg.norm_eps);
-    let head_w = params.get("head_w");
-    let head_b = params.get("head_b");
-    let mut logits = vec![0.0f32; b * N_CLASSES];
-    matmul_into(&xpn, head_w.data(), &mut logits, b, d, N_CLASSES);
-    for bi in 0..b {
-        for j in 0..N_CLASSES {
-            logits[bi * N_CLASSES + j] += head_b.data()[j];
-        }
-    }
-
-    let mut loss_sum = 0f64;
-    let mut correct = 0f64;
-    let mut row_lse = vec![0.0f32; b];
-    for bi in 0..b {
-        let lr = &logits[bi * N_CLASSES..(bi + 1) * N_CLASSES];
-        let mx = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let z: f32 = lr.iter().map(|&v| (v - mx).exp()).sum();
-        let lse = mx + z.ln();
-        row_lse[bi] = lse;
-        let tgt = labels[bi] as usize;
-        loss_sum += (lse - lr[tgt]) as f64;
-        let argmax = lr
-            .iter()
-            .enumerate()
-            .max_by(|a, b_| a.1.partial_cmp(b_.1).unwrap())
-            .map(|(j, _)| j)
-            .unwrap_or(0);
-        if argmax == tgt {
-            correct += 1.0;
-        }
-    }
-    let stats = LossStats {
-        loss_mean: (loss_sum / b as f64) as f32,
-        loss_sum: loss_sum as f32,
-        count: b as f32,
-        correct: correct as f32,
-    };
-
-    let grads: &mut [Tensor] = match grads {
+    let grads = match grads {
         Some(g) => g,
         None => return Ok(stats),
     };
-
-    // dlogits = (softmax - onehot) / B  (python: nll.mean()).
-    let inv_b = 1.0 / b as f32;
-    let mut dlogits = vec![0.0f32; b * N_CLASSES];
-    for bi in 0..b {
-        let lr = &logits[bi * N_CLASSES..(bi + 1) * N_CLASSES];
-        let dlr = &mut dlogits[bi * N_CLASSES..(bi + 1) * N_CLASSES];
-        for j in 0..N_CLASSES {
-            dlr[j] = (lr[j] - row_lse[bi]).exp() * inv_b;
-        }
-        dlr[labels[bi] as usize] -= inv_b;
+    let mut dx = head.backward(&ctx, &head_tape, labels, grads);
+    for (blk, tape) in stack.iter().zip(tapes.iter()).rev() {
+        dx = blk.backward(&ctx, tape, &dx, grads);
     }
-
-    // Head backward.
-    matmul_tn_into(&xpn, &dlogits, grads[params.idx("head_w")].data_mut(), b, d, N_CLASSES);
-    {
-        let dhb = grads[params.idx("head_b")].data_mut();
-        for bi in 0..b {
-            for j in 0..N_CLASSES {
-                dhb[j] += dlogits[bi * N_CLASSES + j];
-            }
-        }
-    }
-    let mut dxpn = vec![0.0f32; b * d];
-    matmul_nt_into(&dlogits, head_w.data(), &mut dxpn, b, N_CLASSES, d);
-    let dxp = rms_norm_bwd(
-        &xp,
-        params.get("norm_f").data(),
-        &p_inv,
-        &dxpn,
-        d,
-        grads[params.idx("norm_f")].data_mut(),
-    );
-
-    // Un-pool: every position gets dxp / L.
-    let mut dx = vec![0.0f32; rows * d];
-    for bi in 0..b {
-        let dpr = &dxp[bi * d..(bi + 1) * d];
-        for t in 0..l {
-            let dxr = &mut dx[(bi * l + t) * d..(bi * l + t + 1) * d];
-            for j in 0..d {
-                dxr[j] = dpr[j] * inv_l;
-            }
-        }
-    }
-    for li in (0..cfg.n_layers).rev() {
-        dx = block_backward(cfg, params, li, &acts[li], &caches[li], &dx, b, l, grads);
-    }
-
-    // Pixel embedding backward.
-    {
-        let dpw = grads[params.idx("pix_w")].data_mut();
-        for r in 0..rows {
-            let px = pixels[r];
-            if px == 0.0 {
-                continue;
-            }
-            let dr = &dx[r * d..(r + 1) * d];
-            for j in 0..d {
-                dpw[j] += px * dr[j];
-            }
-        }
-    }
-    {
-        let dpb = grads[params.idx("pix_b")].data_mut();
-        for r in 0..rows {
-            let dr = &dx[r * d..(r + 1) * d];
-            for j in 0..d {
-                dpb[j] += dr[j];
-            }
-        }
-    }
+    embed.backward(&ctx, pixels, &dx, grads);
     Ok(stats)
 }
-
-// ----------------------------------------------------------------------
-// Recurrent decode (O(1)-state serving path)
-// ----------------------------------------------------------------------
 
 /// Per-layer recurrent state shapes, in order:
 /// cache_q, cache_k, cache_v (B, K-1, inner), s (B, H, Dk, Dv).
@@ -975,261 +145,63 @@ pub fn decode_state_shapes(cfg: &CpuModelCfg) -> Vec<Vec<usize>> {
     out
 }
 
-/// One-token batched decode. `state` borrows the flat f32 tensors in
-/// [`decode_state_shapes`] order (the caller keeps them host-resident —
-/// no copy on the serving hot path); returns (logits (B, vocab), new state).
-pub fn lm_decode(
-    cfg: &CpuModelCfg,
-    params: &ParamSet,
-    state: &[&[f32]],
-    tokens: &[i32],
-) -> Result<(Tensor, Vec<Vec<f32>>)> {
-    if cfg.task != CpuTask::Lm {
-        bail!("decode is only available for LM families");
-    }
-    let b = cfg.decode_batch;
-    let d = cfg.d_model;
-    let inner = cfg.inner();
-    let h = cfg.n_heads;
-    let dh = cfg.head_dim;
-    let vocab = cfg.vocab;
-    if tokens.len() != b {
-        bail!("decode expects {b} tokens, got {}", tokens.len());
-    }
-    if state.len() != 4 * cfg.n_layers {
-        bail!("decode expects {} state tensors, got {}", 4 * cfg.n_layers, state.len());
-    }
-    for &t in tokens {
-        if t < 0 || t as usize >= vocab {
-            bail!("token id {t} out of range (vocab {vocab})");
-        }
-    }
-
-    let embed = params.get("embed");
-    let mut x = vec![0.0f32; b * d];
-    for bi in 0..b {
-        let t = tokens[bi] as usize;
-        x[bi * d..(bi + 1) * d].copy_from_slice(&embed.data()[t * d..(t + 1) * d]);
-    }
-
-    let mut new_state: Vec<Vec<f32>> = Vec::with_capacity(state.len());
-    for li in 0..cfg.n_layers {
-        let p = |n: &str| format!("layer{li}.{n}");
-        let (hx, _) = rms_norm_fwd(&x, params.get(&p("norm_attn")).data(), d, cfg.norm_eps);
-
-        let qt = mm(&hx, params.get(&p("wq")).data(), b, d, inner);
-        let kt = mm(&hx, params.get(&p("wk")).data(), b, d, inner);
-        let vt = mm(&hx, params.get(&p("wv")).data(), b, d, inner);
-
-        // Single-token causal conv over the (K-1)-deep caches.
-        let conv1 = |pre: &[f32], cache: &[f32], w: &[f32]| -> (Vec<f32>, Vec<f32>) {
-            let kk = CONV_K;
-            let mut out = vec![0.0f32; b * inner];
-            let mut nc = vec![0.0f32; b * (kk - 1) * inner];
-            for bi in 0..b {
-                let crow = &cache[bi * (kk - 1) * inner..(bi + 1) * (kk - 1) * inner];
-                let prow = &pre[bi * inner..(bi + 1) * inner];
-                let orow = &mut out[bi * inner..(bi + 1) * inner];
-                for j in 0..kk - 1 {
-                    let wr = &w[j * inner..(j + 1) * inner];
-                    let xr = &crow[j * inner..(j + 1) * inner];
-                    for c in 0..inner {
-                        orow[c] += wr[c] * xr[c];
-                    }
-                }
-                let wlast = &w[(kk - 1) * inner..kk * inner];
-                for c in 0..inner {
-                    orow[c] += wlast[c] * prow[c];
-                }
-                // shift cache left, append the fresh pre-conv projection
-                let ncrow = &mut nc[bi * (kk - 1) * inner..(bi + 1) * (kk - 1) * inner];
-                ncrow[..(kk - 2) * inner].copy_from_slice(&crow[inner..(kk - 1) * inner]);
-                ncrow[(kk - 2) * inner..].copy_from_slice(prow);
-            }
-            (out, nc)
-        };
-        let si = 4 * li;
-        let (qc, ncq) = conv1(&qt, state[si], params.get(&p("conv_q")).data());
-        let (kc, nck) = conv1(&kt, state[si + 1], params.get(&p("conv_k")).data());
-        let (vc, ncv) = conv1(&vt, state[si + 2], params.get(&p("conv_v")).data());
-        let q = silu_fwd(&qc);
-        let k = silu_fwd(&kc);
-        let v = silu_fwd(&vc);
-
-        let (q_use, k_use) = if cfg.mixer == Mixer::DeltaNet {
-            (l2norm_fwd(&q, dh).0, l2norm_fwd(&k, dh).0)
-        } else {
-            (q.clone(), k.clone())
-        };
-
-        let b_logits = mm(&hx, params.get(&p("w_beta")).data(), b, d, h);
-        let adecay = params.get(&p("adecay")).data();
-
-        let mut s_new = state[si + 3].to_vec();
-        let mut o = vec![0.0f32; b * inner];
-        let mut stk = vec![0.0f32; dh]; // shared scratch for the state updates
-        for bi in 0..b {
-            for hh in 0..h {
-                let z = b_logits[bi * h + hh];
-                let mut bv =
-                    if cfg.mixer == Mixer::EflaLoose { softplus(z) } else { sigmoid(z) };
-                if cfg.mixer == Mixer::EflaAdaptive {
-                    bv *= softplus(adecay[hh]);
-                }
-                let base = bi * inner + hh * dh;
-                let krow = &k_use[base..base + dh];
-                let alpha = if cfg.mixer == Mixer::DeltaNet {
-                    bv
-                } else {
-                    let lam: f32 =
-                        krow.iter().map(|x_| x_ * x_).sum::<f32>().max(EPS_LAMBDA);
-                    alpha_efla(bv, lam)
-                };
-                let srange = ((bi * h) + hh) * dh * dh..((bi * h) + hh + 1) * dh * dh;
-                delta_step_alpha(
-                    &mut s_new[srange],
-                    &q_use[base..base + dh],
-                    krow,
-                    &v[base..base + dh],
-                    alpha,
-                    &mut o[base..base + dh],
-                    &mut stk,
-                    dh,
-                    dh,
-                );
-            }
-        }
-
-        let (o_norm, _) = rms_norm_fwd(&o, params.get(&p("norm_out")).data(), dh, cfg.norm_eps);
-        let mixed = mm(&o_norm, params.get(&p("wo")).data(), b, inner, d);
-        for (xv, mv) in x.iter_mut().zip(mixed.iter()) {
-            *xv += mv;
-        }
-
-        let f = cfg.mlp_width();
-        let (hm, _) = rms_norm_fwd(&x, params.get(&p("norm_mlp")).data(), d, cfg.norm_eps);
-        let gpre = mm(&hm, params.get(&p("w_gate")).data(), b, d, f);
-        let up = mm(&hm, params.get(&p("w_up")).data(), b, d, f);
-        let mut gu = silu_fwd(&gpre);
-        for (g_, u_) in gu.iter_mut().zip(up.iter()) {
-            *g_ *= u_;
-        }
-        let mlp_out = mm(&gu, params.get(&p("w_down")).data(), b, f, d);
-        for (xv, mv) in x.iter_mut().zip(mlp_out.iter()) {
-            *xv += mv;
-        }
-
-        new_state.push(ncq);
-        new_state.push(nck);
-        new_state.push(ncv);
-        new_state.push(s_new);
-    }
-
-    let (xn, _) = rms_norm_fwd(&x, params.get("norm_f").data(), d, cfg.norm_eps);
-    let mut logits = vec![0.0f32; b * vocab];
-    matmul_nt_into(&xn, embed.data(), &mut logits, b, d, vocab);
-    Ok((Tensor::from_vec(&[b, vocab], logits), new_state))
+/// Prebuilt LM layer stack for the decode hot path. Layers hold only
+/// `ParamSet` indices, so a session builds this once and reuses it for
+/// every decoded token instead of re-resolving parameter names per step.
+pub struct LmStack {
+    embed: TokenEmbedding,
+    blocks: Vec<Block>,
+    head: LmHead,
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::runtime::cpu::config::family_config;
-    use crate::util::rng::Rng;
-
-    fn tiny() -> (CpuModelCfg, ParamSet) {
-        let cfg = family_config("lm_tiny_efla").unwrap();
-        let params = ParamSet::init(&cfg, 42);
-        (cfg, params)
+impl LmStack {
+    pub fn new(params: &ParamSet, cfg: &CpuModelCfg) -> Result<LmStack> {
+        if cfg.task != CpuTask::Lm {
+            bail!("decode is only available for LM families");
+        }
+        Ok(LmStack {
+            embed: TokenEmbedding::new(params),
+            blocks: blocks(params, cfg),
+            head: LmHead::new(params, cfg),
+        })
     }
 
-    fn lm_batch(cfg: &CpuModelCfg, seed: u64) -> (Vec<i32>, Vec<i32>) {
-        let mut rng = Rng::new(seed);
-        let rows = cfg.batch * cfg.seq;
-        let toks: Vec<i32> = (0..rows).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
-        let tgts: Vec<i32> = (0..rows).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
-        (toks, tgts)
-    }
-
-    #[test]
-    fn lm_forward_loss_near_uniform_at_init() {
-        let (cfg, params) = tiny();
-        let (toks, tgts) = lm_batch(&cfg, 1);
-        let stats =
-            lm_loss(&cfg, &params, &toks, &tgts, cfg.batch, cfg.seq, None).unwrap();
-        assert!(stats.loss_mean.is_finite());
-        // Untrained model on uniform random targets: mean CE near ln(vocab).
-        let expect = (cfg.vocab as f32).ln();
-        assert!(
-            (stats.loss_mean - expect).abs() < 1.5,
-            "loss {} vs ln(V) {expect}",
-            stats.loss_mean
-        );
-        assert_eq!(stats.count as usize, cfg.batch * cfg.seq);
-    }
-
-    #[test]
-    fn lm_gradients_are_finite_and_nonzero() {
-        for family in ["lm_tiny_efla", "lm_tiny_deltanet", "lm_tiny_efla_adaptive", "lm_tiny_efla_loose"] {
-            let cfg = family_config(family).unwrap();
-            let params = ParamSet::init(&cfg, 7);
-            let (toks, tgts) = lm_batch(&cfg, 2);
-            let mut grads = params.zeros_like();
-            lm_loss(&cfg, &params, &toks, &tgts, cfg.batch, cfg.seq, Some(&mut grads))
-                .unwrap();
-            let mut total = 0f64;
-            for (g, name) in grads.iter().zip(params.names()) {
-                for &x in g.data() {
-                    assert!(x.is_finite(), "{family}: non-finite grad in {name}");
-                }
-                total += g.data().iter().map(|&x| (x as f64).abs()).sum::<f64>();
+    /// One-token batched decode. `state` borrows the flat f32 tensors in
+    /// [`decode_state_shapes`] order and advances them **in place** (the
+    /// caller keeps them host-resident — no copy, no reallocation on the
+    /// serving hot path); returns logits (B, vocab).
+    pub fn decode(
+        &self,
+        cfg: &CpuModelCfg,
+        params: &ParamSet,
+        exec: &Executor,
+        state: &mut [&mut [f32]],
+        tokens: &[i32],
+    ) -> Result<Tensor> {
+        let b = cfg.decode_batch;
+        if tokens.len() != b {
+            bail!("decode expects {b} tokens, got {}", tokens.len());
+        }
+        if state.len() != 4 * cfg.n_layers {
+            bail!("decode expects {} state tensors, got {}", 4 * cfg.n_layers, state.len());
+        }
+        let cache_len = b * (CONV_K - 1) * cfg.inner();
+        let s_len = b * cfg.n_heads * cfg.head_dim * cfg.head_dim;
+        for (i, t) in state.iter().enumerate() {
+            let want = if i % 4 == 3 { s_len } else { cache_len };
+            if t.len() != want {
+                bail!("state tensor {i}: {} elements, expected {want}", t.len());
             }
-            assert!(total > 0.0, "{family}: all-zero gradients");
-            // embedding (tied head) must receive gradient
-            let ge = &grads[params.idx("embed")];
-            assert!(ge.norm() > 0.0, "{family}: embed grad zero");
         }
-    }
 
-    #[test]
-    fn masked_targets_are_ignored() {
-        let (cfg, params) = tiny();
-        let (toks, mut tgts) = lm_batch(&cfg, 3);
-        for t in tgts.iter_mut().skip(1) {
-            *t = -1;
+        let ctx = Ctx { cfg, params, exec, b, l: 1 };
+        let mut x = self.embed.forward(&ctx, tokens)?;
+        for (blk, chunk) in self.blocks.iter().zip(state.chunks_mut(4)) {
+            let [cq, ck, cv, s] = chunk else { unreachable!("state is chunked by 4") };
+            blk.decode_step(&ctx, &mut x, cq, ck, cv, s);
         }
-        let stats =
-            lm_loss(&cfg, &params, &toks, &tgts, cfg.batch, cfg.seq, None).unwrap();
-        assert_eq!(stats.count as usize, 1);
-        assert!(stats.loss_sum.is_finite());
-    }
-
-    #[test]
-    fn out_of_range_tokens_rejected() {
-        let (cfg, params) = tiny();
-        let (mut toks, tgts) = lm_batch(&cfg, 4);
-        toks[0] = cfg.vocab as i32;
-        assert!(lm_loss(&cfg, &params, &toks, &tgts, cfg.batch, cfg.seq, None).is_err());
-    }
-
-    #[test]
-    fn decode_state_advances_and_logits_finite() {
-        let (cfg, params) = tiny();
-        let shapes = decode_state_shapes(&cfg);
-        let zeros: Vec<Vec<f32>> = shapes
-            .iter()
-            .map(|s| vec![0.0f32; s.iter().product()])
-            .collect();
-        let state: Vec<&[f32]> = zeros.iter().map(|v| v.as_slice()).collect();
-        let tokens = vec![65i32; cfg.decode_batch];
-        let (logits1, state1) = lm_decode(&cfg, &params, &state, &tokens).unwrap();
-        assert_eq!(logits1.shape(), &[cfg.decode_batch, cfg.vocab]);
-        assert!(logits1.data().iter().all(|x| x.is_finite()));
-        let state1_refs: Vec<&[f32]> = state1.iter().map(|v| v.as_slice()).collect();
-        let (logits2, _) = lm_decode(&cfg, &params, &state1_refs, &tokens).unwrap();
-        assert!(
-            logits1.max_abs_diff(&logits2) > 1e-7,
-            "state must advance between decode steps"
-        );
+        let logits = self.head.logits(&ctx, &x);
+        Ok(Tensor::from_vec(&[b, cfg.vocab], logits))
     }
 }
+

@@ -1,0 +1,448 @@
+//! Elementwise / normalization / convolution primitives for the CPU model
+//! layers, each with a paired forward and backward.
+//!
+//! Every layer in [`super::layers`] is built from these plus the matmul
+//! primitives in [`crate::tensor`] (one set of matmul kernels shared with
+//! the attention kernels — no private duplicates). The executor-aware
+//! wrappers ([`matmul`], [`matmul_nt_acc`]) split large products into
+//! row-parallel chunks; small products run inline so the decode hot path
+//! never pays thread-spawn overhead. Row splitting never changes a row's
+//! arithmetic, so results are bit-identical for any thread count.
+
+use crate::tensor::{matmul_into, matmul_nt_into};
+
+use super::exec::Executor;
+
+/// L2-normalize clamp (mirror of kernels/deltanet.py l2_normalize eps).
+pub const L2_EPS: f32 = 1e-6;
+
+/// Minimum flop count (m*k*n) before a matmul is worth fanning out.
+const PAR_MIN_FLOPS: usize = 1 << 18;
+
+// ----------------------------------------------------------------------
+// Scalar activations
+// ----------------------------------------------------------------------
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+pub fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else if x < -20.0 {
+        x.exp()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// d silu(x) / dx = s(x) * (1 + x * (1 - s(x)))
+pub fn silu_grad(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+pub fn silu_fwd(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| silu(v)).collect()
+}
+
+pub fn silu_bwd(x: &[f32], dy: &[f32]) -> Vec<f32> {
+    x.iter().zip(dy.iter()).map(|(&v, &d)| d * silu_grad(v)).collect()
+}
+
+// ----------------------------------------------------------------------
+// Normalizations
+// ----------------------------------------------------------------------
+
+/// Row-wise RMSNorm over rows of `width`. Returns (y, inv_rms per row).
+pub fn rms_norm_fwd(x: &[f32], gain: &[f32], width: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(gain.len(), width);
+    let rows = x.len() / width;
+    let mut y = vec![0.0f32; x.len()];
+    let mut inv = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * width..(r + 1) * width];
+        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / width as f32;
+        let iv = 1.0 / (ms + eps).sqrt();
+        inv[r] = iv;
+        let yr = &mut y[r * width..(r + 1) * width];
+        for j in 0..width {
+            yr[j] = xr[j] * iv * gain[j];
+        }
+    }
+    (y, inv)
+}
+
+/// RMSNorm backward; accumulates into `dgain`, returns dx.
+pub fn rms_norm_bwd(
+    x: &[f32],
+    gain: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+    width: usize,
+    dgain: &mut [f32],
+) -> Vec<f32> {
+    let rows = x.len() / width;
+    let mut dx = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * width..(r + 1) * width];
+        let dyr = &dy[r * width..(r + 1) * width];
+        let iv = inv[r];
+        let mut dot = 0.0f32; // sum_i dy_i * gain_i * x_i
+        for j in 0..width {
+            dot += dyr[j] * gain[j] * xr[j];
+        }
+        let c = iv * iv * iv * dot / width as f32;
+        let dxr = &mut dx[r * width..(r + 1) * width];
+        for j in 0..width {
+            dxr[j] = iv * gain[j] * dyr[j] - c * xr[j];
+            dgain[j] += dyr[j] * xr[j] * iv;
+        }
+    }
+    dx
+}
+
+/// Row-wise L2 normalize (clamped-square form). Returns (y, sum-square per
+/// row) — the clamp decision replays in the backward from the stored ss.
+pub fn l2norm_fwd(x: &[f32], width: usize) -> (Vec<f32>, Vec<f32>) {
+    let rows = x.len() / width;
+    let mut y = vec![0.0f32; x.len()];
+    let mut ss = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * width..(r + 1) * width];
+        let s: f32 = xr.iter().map(|v| v * v).sum();
+        ss[r] = s;
+        let iv = 1.0 / s.max(L2_EPS * L2_EPS).sqrt();
+        let yr = &mut y[r * width..(r + 1) * width];
+        for j in 0..width {
+            yr[j] = xr[j] * iv;
+        }
+    }
+    (y, ss)
+}
+
+pub fn l2norm_bwd(x: &[f32], ss: &[f32], dy: &[f32], width: usize) -> Vec<f32> {
+    let rows = x.len() / width;
+    let mut dx = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * width..(r + 1) * width];
+        let dyr = &dy[r * width..(r + 1) * width];
+        let s = ss[r];
+        let clamped = s <= L2_EPS * L2_EPS;
+        let iv = 1.0 / s.max(L2_EPS * L2_EPS).sqrt();
+        let dxr = &mut dx[r * width..(r + 1) * width];
+        if clamped {
+            // r is a constant below the clamp: plain scaling.
+            for j in 0..width {
+                dxr[j] = iv * dyr[j];
+            }
+        } else {
+            let mut dot = 0.0f32;
+            for j in 0..width {
+                dot += xr[j] * dyr[j];
+            }
+            let c = iv * iv * iv * dot;
+            for j in 0..width {
+                dxr[j] = iv * dyr[j] - c * xr[j];
+            }
+        }
+    }
+    dx
+}
+
+// ----------------------------------------------------------------------
+// Depthwise causal conv
+// ----------------------------------------------------------------------
+
+/// Depthwise causal conv along the sequence: x (B, L, C), w (K, C).
+/// out[b, t, c] = sum_j w[j, c] * x[b, t - (K-1) + j, c] (zero-padded).
+pub fn conv_fwd(x: &[f32], w: &[f32], b: usize, l: usize, c: usize, k: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; x.len()];
+    for bi in 0..b {
+        for t in 0..l {
+            let yr = &mut y[(bi * l + t) * c..(bi * l + t + 1) * c];
+            for j in 0..k {
+                let t0 = (t + j).checked_sub(k - 1);
+                let t0 = match t0 {
+                    Some(v) if v < l => v,
+                    _ => continue,
+                };
+                let wr = &w[j * c..(j + 1) * c];
+                let xr = &x[(bi * l + t0) * c..(bi * l + t0 + 1) * c];
+                for ch in 0..c {
+                    yr[ch] += wr[ch] * xr[ch];
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Conv backward; accumulates into `dw`, returns dx.
+pub fn conv_bwd(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    b: usize,
+    l: usize,
+    c: usize,
+    k: usize,
+    dw: &mut [f32],
+) -> Vec<f32> {
+    let mut dx = vec![0.0f32; x.len()];
+    for bi in 0..b {
+        for t in 0..l {
+            let dyr = &dy[(bi * l + t) * c..(bi * l + t + 1) * c];
+            for j in 0..k {
+                let t0 = match (t + j).checked_sub(k - 1) {
+                    Some(v) if v < l => v,
+                    _ => continue,
+                };
+                let wr = &w[j * c..(j + 1) * c];
+                let xr = &x[(bi * l + t0) * c..(bi * l + t0 + 1) * c];
+                let dwr = &mut dw[j * c..(j + 1) * c];
+                let dxr = &mut dx[(bi * l + t0) * c..(bi * l + t0 + 1) * c];
+                for ch in 0..c {
+                    dwr[ch] += dyr[ch] * xr[ch];
+                    dxr[ch] += wr[ch] * dyr[ch];
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Single-token causal conv over a rolling (K-1)-deep cache, cache updated
+/// in place (shift left, append `pre`) — the O(1)-state decode form.
+/// pre: (B, C) fresh pre-conv projection; cache: (B, K-1, C).
+pub fn conv_step(
+    pre: &[f32],
+    cache: &mut [f32],
+    w: &[f32],
+    b: usize,
+    c: usize,
+    k: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(pre.len(), b * c);
+    debug_assert_eq!(cache.len(), b * (k - 1) * c);
+    debug_assert_eq!(w.len(), k * c);
+    let mut out = vec![0.0f32; b * c];
+    for bi in 0..b {
+        let crow = &cache[bi * (k - 1) * c..(bi + 1) * (k - 1) * c];
+        let prow = &pre[bi * c..(bi + 1) * c];
+        let orow = &mut out[bi * c..(bi + 1) * c];
+        for j in 0..k - 1 {
+            let wr = &w[j * c..(j + 1) * c];
+            let xr = &crow[j * c..(j + 1) * c];
+            for ch in 0..c {
+                orow[ch] += wr[ch] * xr[ch];
+            }
+        }
+        let wlast = &w[(k - 1) * c..k * c];
+        for ch in 0..c {
+            orow[ch] += wlast[ch] * prow[ch];
+        }
+    }
+    for bi in 0..b {
+        let crow = &mut cache[bi * (k - 1) * c..(bi + 1) * (k - 1) * c];
+        crow.copy_within(c.., 0);
+        crow[(k - 2) * c..].copy_from_slice(&pre[bi * c..(bi + 1) * c]);
+    }
+    out
+}
+
+// ----------------------------------------------------------------------
+// Executor-aware matmul wrappers
+// ----------------------------------------------------------------------
+
+/// Fresh m x n product a @ b, row-parallel when large enough.
+pub fn matmul(exec: &Executor, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    if m * k * n < PAR_MIN_FLOPS || exec.threads() == 1 {
+        matmul_into(a, b, &mut out, m, k, n);
+    } else {
+        exec.par_rows(m, &mut out, |r0, r1, chunk| {
+            matmul_into(&a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
+        });
+    }
+    out
+}
+
+/// out += a @ b^T, row-parallel when large enough
+/// (out: (m, n) accumulated in place; b: (n, k) row-major).
+pub fn matmul_nt_acc(
+    exec: &Executor,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    if m * k * n < PAR_MIN_FLOPS || exec.threads() == 1 {
+        matmul_nt_into(a, b, out, m, k, n);
+    } else {
+        exec.par_rows(m, out, |r0, r1, chunk| {
+            matmul_nt_into(&a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fd(mut f: impl FnMut(f32) -> f32, x: f32, h: f32) -> f32 {
+        (f(x + h) - f(x - h)) / (2.0 * h)
+    }
+
+    #[test]
+    fn silu_grad_matches_finite_differences() {
+        for x in [-3.0f32, -0.5, 0.0, 0.7, 4.0] {
+            let a = silu_grad(x);
+            let n = fd(silu, x, 1e-3);
+            assert!((a - n).abs() < 1e-3, "x={x}: {a} vs {n}");
+        }
+    }
+
+    #[test]
+    fn rms_norm_bwd_matches_finite_differences() {
+        let mut rng = Rng::new(5);
+        let width = 6;
+        let x = rng.normal_vec(2 * width, 0.0, 1.0);
+        let gain = rng.normal_vec(width, 1.0, 0.2);
+        let w = rng.normal_vec(2 * width, 0.0, 1.0); // dL/dy
+        let loss = |x: &[f32]| -> f64 {
+            let (y, _) = rms_norm_fwd(x, &gain, width, 1e-6);
+            y.iter().zip(w.iter()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
+        let (_, inv) = rms_norm_fwd(&x, &gain, width, 1e-6);
+        let mut dgain = vec![0.0f32; width];
+        let dx = rms_norm_bwd(&x, &gain, &inv, &w, width, &mut dgain);
+        let h = 1e-3f32;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let n = (loss(&xp) - loss(&xm)) / (2.0 * h as f64);
+            assert!((dx[i] as f64 - n).abs() < 1e-2 * (1.0 + n.abs()), "dx[{i}]");
+        }
+    }
+
+    #[test]
+    fn l2norm_bwd_matches_finite_differences() {
+        let mut rng = Rng::new(6);
+        let width = 5;
+        let x = rng.normal_vec(3 * width, 0.0, 1.0);
+        let w = rng.normal_vec(3 * width, 0.0, 1.0);
+        let loss = |x: &[f32]| -> f64 {
+            let (y, _) = l2norm_fwd(x, width);
+            y.iter().zip(w.iter()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
+        let (_, ss) = l2norm_fwd(&x, width);
+        let dx = l2norm_bwd(&x, &ss, &w, width);
+        let h = 1e-3f32;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let n = (loss(&xp) - loss(&xm)) / (2.0 * h as f64);
+            assert!((dx[i] as f64 - n).abs() < 1e-2 * (1.0 + n.abs()), "dx[{i}]");
+        }
+    }
+
+    #[test]
+    fn conv_bwd_matches_finite_differences() {
+        let mut rng = Rng::new(7);
+        let (b, l, c, k) = (2, 5, 3, 4);
+        let x = rng.normal_vec(b * l * c, 0.0, 1.0);
+        let wk = rng.normal_vec(k * c, 0.0, 0.5);
+        let dy = rng.normal_vec(b * l * c, 0.0, 1.0);
+        let loss = |x: &[f32], wk: &[f32]| -> f64 {
+            conv_fwd(x, wk, b, l, c, k)
+                .iter()
+                .zip(dy.iter())
+                .map(|(&a, &g)| a as f64 * g as f64)
+                .sum()
+        };
+        let mut dw = vec![0.0f32; k * c];
+        let dx = conv_bwd(&x, &wk, &dy, b, l, c, k, &mut dw);
+        let h = 1e-3f32;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let n = (loss(&xp, &wk) - loss(&xm, &wk)) / (2.0 * h as f64);
+            assert!((dx[i] as f64 - n).abs() < 1e-2 * (1.0 + n.abs()), "dx[{i}]");
+        }
+        for i in 0..wk.len() {
+            let mut wp = wk.clone();
+            wp[i] += h;
+            let mut wm = wk.clone();
+            wm[i] -= h;
+            let n = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * h as f64);
+            assert!((dw[i] as f64 - n).abs() < 1e-2 * (1.0 + n.abs()), "dw[{i}]");
+        }
+    }
+
+    #[test]
+    fn conv_step_matches_full_conv_tail() {
+        // Streaming the sequence token by token through conv_step must
+        // reproduce conv_fwd exactly.
+        let mut rng = Rng::new(8);
+        let (b, l, c, k) = (2, 7, 3, 4);
+        let x = rng.normal_vec(b * l * c, 0.0, 1.0);
+        let wk = rng.normal_vec(k * c, 0.0, 0.5);
+        let full = conv_fwd(&x, &wk, b, l, c, k);
+        let mut cache = vec![0.0f32; b * (k - 1) * c];
+        for t in 0..l {
+            let mut pre = vec![0.0f32; b * c];
+            for bi in 0..b {
+                pre[bi * c..(bi + 1) * c]
+                    .copy_from_slice(&x[(bi * l + t) * c..(bi * l + t + 1) * c]);
+            }
+            let out = conv_step(&pre, &mut cache, &wk, b, c, k);
+            for bi in 0..b {
+                let want = &full[(bi * l + t) * c..(bi * l + t + 1) * c];
+                let got = &out[bi * c..(bi + 1) * c];
+                for (a, e) in got.iter().zip(want.iter()) {
+                    assert!((a - e).abs() < 1e-5, "t={t} bi={bi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(9);
+        // Big enough to clear PAR_MIN_FLOPS: 128 * 64 * 64 = 512k flops.
+        let (m, k, n) = (128, 64, 64);
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let serial = matmul(&Executor::serial(), &a, &b, m, k, n);
+        for threads in [2, 3, 4] {
+            let par = matmul(&Executor::new(threads), &a, &b, m, k, n);
+            assert_eq!(serial, par, "threads={threads}");
+        }
+        let bt = rng.normal_vec(n * k, 0.0, 1.0);
+        let mut out1 = rng.normal_vec(m * n, 0.0, 0.1);
+        let mut out4 = out1.clone();
+        matmul_nt_acc(&Executor::serial(), &a, &bt, &mut out1, m, k, n);
+        matmul_nt_acc(&Executor::new(4), &a, &bt, &mut out4, m, k, n);
+        assert_eq!(out1, out4);
+    }
+}

@@ -33,8 +33,16 @@ use anyhow::Result;
 ///
 /// With the `xla` feature and a `manifest.json` present, the PJRT backend
 /// is used; otherwise the pure-Rust CPU backend (which needs no artifacts —
-/// families are built from their names).
+/// families are built from their names). The CPU executor resolves its
+/// thread count from `EFLA_NUM_THREADS` / the machine; use
+/// [`open_backend_threads`] to pin it explicitly.
 pub fn open_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    open_backend_threads(artifact_dir, 0)
+}
+
+/// [`open_backend`] with an explicit CPU worker-thread count
+/// (0 = auto: `EFLA_NUM_THREADS` if set, else available parallelism).
+pub fn open_backend_threads(artifact_dir: &Path, threads: usize) -> Result<Box<dyn Backend>> {
     #[cfg(feature = "xla")]
     {
         if artifact_dir.join("manifest.json").exists() {
@@ -47,7 +55,7 @@ pub fn open_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
     }
     #[cfg(not(feature = "xla"))]
     let _ = artifact_dir;
-    Ok(Box::new(CpuBackend::new()))
+    Ok(Box::new(CpuBackend::with_threads(threads)))
 }
 
 #[cfg(test)]

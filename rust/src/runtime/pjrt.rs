@@ -508,11 +508,7 @@ impl ModelSession for PjrtSession {
         Ok(state_specs.iter().map(HostValue::zeros_like_spec).collect())
     }
 
-    fn decode(
-        &self,
-        state: &[HostValue],
-        tokens: &[i32],
-    ) -> Result<(Tensor, Vec<HostValue>)> {
+    fn decode(&self, state: &mut [HostValue], tokens: &[i32]) -> Result<Tensor> {
         let exe = self.decode_exe()?.clone();
         let spec = exe.spec();
         let batch = self.decode_batch()?;
@@ -529,11 +525,25 @@ impl ModelSession for PjrtSession {
         inputs.extend(extra.iter());
         let outs = exe.run_raw_borrowed(&inputs)?;
 
-        let logits = from_literal(&outs[0], &spec.outputs[0])?.into_f32()?;
-        let mut new_state = Vec::with_capacity(outs.len() - 1);
-        for (i, lit) in outs.iter().enumerate().skip(1) {
-            new_state.push(from_literal(lit, &spec.outputs[i])?);
+        if outs.len() != state.len() + 1 {
+            bail!(
+                "{}_decode: graph returned {} outputs, expected logits + {} state tensors",
+                self.family,
+                outs.len(),
+                state.len()
+            );
         }
-        Ok((logits, new_state))
+        let logits = from_literal(&outs[0], &spec.outputs[0])?.into_f32()?;
+        // The PJRT graph returns fresh state tensors. Convert them all
+        // before touching the caller's slots, so a mid-conversion failure
+        // never leaves the live decode state half old / half new.
+        let mut fresh = Vec::with_capacity(state.len());
+        for (i, lit) in outs.iter().enumerate().skip(1) {
+            fresh.push(from_literal(lit, &spec.outputs[i])?);
+        }
+        for (slot, value) in state.iter_mut().zip(fresh) {
+            *slot = value;
+        }
+        Ok(logits)
     }
 }

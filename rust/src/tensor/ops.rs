@@ -44,6 +44,16 @@ pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n:
     }
 }
 
+/// Fresh `m x n` product `a @ b` on raw row-major slices, returned as an
+/// owned buffer. The single fresh-matmul helper shared by the CPU model
+/// layers and the attention kernels (callers that want accumulation use
+/// [`matmul_into`] / [`matmul_nt_into`] / [`matmul_tn_into`] directly).
+pub fn matmul_vec(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_into(a, b, &mut out, m, k, n);
+    out
+}
+
 /// A^T for 2-D tensors.
 pub fn transpose(a: &Tensor) -> Tensor {
     assert_eq!(a.ndim(), 2);
@@ -248,6 +258,15 @@ mod tests {
                 assert!((c.get(&[i, j]) - s).abs() < 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn matmul_vec_matches_matmul() {
+        let a = Tensor::from_vec(&[3, 4], (0..12).map(|i| i as f32 * 0.2 - 1.0).collect());
+        let b = Tensor::from_vec(&[4, 5], (0..20).map(|i| (i as f32).sin()).collect());
+        let c1 = matmul(&a, &b);
+        let c2 = matmul_vec(a.data(), b.data(), 3, 4, 5);
+        assert_eq!(c1.data(), c2.as_slice());
     }
 
     #[test]

@@ -103,19 +103,19 @@ fn backend_roundtrips_hostvalue_shapes() {
     }
 
     // Decode-state round-trip: every state tensor keeps its shape through
-    // a decode call, and logits have the advertised (batch, vocab) shape.
+    // an in-place decode call, and logits have the advertised
+    // (batch, vocab) shape.
     let b = session.decode_batch().unwrap();
     let vocab = session.vocab().unwrap();
-    let state = session.decode_state().unwrap();
+    let mut state = session.decode_state().unwrap();
     let shapes: Vec<Vec<usize>> = state.iter().map(|hv| hv.shape().to_vec()).collect();
     for s in &shapes {
         assert_eq!(s[0], b, "state tensors are (decode_batch, ...) rows");
     }
     let tokens = vec![7i32; b];
-    let (logits, new_state) = session.decode(&state, &tokens).unwrap();
+    let logits = session.decode(&mut state, &tokens).unwrap();
     assert_eq!(logits.shape(), &[b, vocab]);
-    assert_eq!(new_state.len(), state.len());
-    for (hv, s) in new_state.iter().zip(shapes.iter()) {
+    for (hv, s) in state.iter().zip(shapes.iter()) {
         assert_eq!(hv.shape(), s.as_slice(), "decode must preserve state shapes");
     }
 }
@@ -178,9 +178,9 @@ fn mad_family_builds_and_decodes() {
     assert_eq!(session.batch, 16);
     assert_eq!(session.seq, 128);
     assert_eq!(session.vocab().unwrap(), 64);
-    let state = session.decode_state().unwrap();
+    let mut state = session.decode_state().unwrap();
     let tokens = vec![1i32; session.decode_batch().unwrap()];
-    let (logits, _) = session.decode(&state, &tokens).unwrap();
+    let logits = session.decode(&mut state, &tokens).unwrap();
     assert_eq!(logits.shape()[1], 64);
     assert!(logits.data().iter().all(|x| x.is_finite()));
 }

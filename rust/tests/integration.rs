@@ -139,13 +139,13 @@ fn decode_state_advances_between_steps() {
     let b = session.decode_batch().unwrap();
     let vocab = session.vocab().unwrap();
     assert!(b > 0 && vocab > 0);
-    let state = session.decode_state().unwrap();
+    let mut state = session.decode_state().unwrap();
     let tokens = vec![65i32; b];
-    let (l1, state1) = session.decode(&state, &tokens).unwrap();
+    let l1 = session.decode(&mut state, &tokens).unwrap();
     assert_eq!(l1.shape(), &[b, vocab]);
     assert!(l1.data().iter().all(|x| x.is_finite()));
-    // feed the same token again with the NEW state: logits must differ
-    let (l2, _) = session.decode(&state1, &tokens).unwrap();
+    // feed the same token again with the advanced state: logits must differ
+    let l2 = session.decode(&mut state, &tokens).unwrap();
     assert!(l1.max_abs_diff(&l2) > 1e-6, "state must advance");
 }
 

@@ -1,0 +1,175 @@
+//! Layered-model integration tests: orchestrator behavior (ported from the
+//! old monolithic `model.rs` unit tests) plus the executor determinism
+//! contract — the multi-threaded (batch × head) executor must produce
+//! bit-identical losses, gradients and decode trajectories to `threads=1`.
+
+use efla::runtime::cpu::config::family_config;
+use efla::runtime::cpu::exec::Executor;
+use efla::runtime::cpu::model::{clf_loss, lm_loss};
+use efla::runtime::cpu::params::ParamSet;
+use efla::runtime::{Backend, CpuBackend, ModelSession as _};
+use efla::util::rng::Rng;
+
+fn lm_batch(vocab: usize, rows: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let toks: Vec<i32> = (0..rows).map(|_| rng.below(vocab as u64) as i32).collect();
+    let tgts: Vec<i32> = (0..rows).map(|_| rng.below(vocab as u64) as i32).collect();
+    (toks, tgts)
+}
+
+#[test]
+fn multithreaded_lm_grads_bit_identical_to_serial() {
+    let families =
+        ["lm_tiny_efla", "lm_tiny_deltanet", "lm_tiny_efla_adaptive", "lm_tiny_efla_loose"];
+    for family in families {
+        let cfg = family_config(family).unwrap();
+        let params = ParamSet::init(&cfg, 7);
+        let (b, l) = (2usize, 16usize);
+        let (toks, tgts) = lm_batch(cfg.vocab, b * l, 2);
+
+        let e1 = Executor::serial();
+        let mut g1 = params.zeros_like();
+        let s1 = lm_loss(&cfg, &params, &e1, &toks, &tgts, b, l, Some(&mut g1)).unwrap();
+
+        for threads in [2usize, 4] {
+            let en = Executor::new(threads);
+            let mut gn = params.zeros_like();
+            let sn = lm_loss(&cfg, &params, &en, &toks, &tgts, b, l, Some(&mut gn)).unwrap();
+            assert_eq!(
+                s1.loss_mean.to_bits(),
+                sn.loss_mean.to_bits(),
+                "{family}: loss differs at {threads} threads"
+            );
+            for (i, (a, c)) in g1.iter().zip(gn.iter()).enumerate() {
+                assert_eq!(
+                    a.data(),
+                    c.data(),
+                    "{family}: grad tensor {} ({}) differs at {threads} threads",
+                    i,
+                    params.names()[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multithreaded_clf_grads_bit_identical_to_serial() {
+    let cfg = family_config("clf_efla").unwrap();
+    let params = ParamSet::init(&cfg, 11);
+    let b = 2usize;
+    let mut rng = Rng::new(5);
+    let pixels: Vec<f32> = (0..b * cfg.seq).map(|_| rng.f32()).collect();
+    let labels = vec![3i32, 8];
+
+    let e1 = Executor::serial();
+    let mut g1 = params.zeros_like();
+    let s1 = clf_loss(&cfg, &params, &e1, &pixels, &labels, b, Some(&mut g1)).unwrap();
+
+    let e4 = Executor::new(4);
+    let mut g4 = params.zeros_like();
+    let s4 = clf_loss(&cfg, &params, &e4, &pixels, &labels, b, Some(&mut g4)).unwrap();
+
+    assert_eq!(s1.loss_mean.to_bits(), s4.loss_mean.to_bits());
+    for (a, c) in g1.iter().zip(g4.iter()) {
+        assert_eq!(a.data(), c.data());
+    }
+}
+
+#[test]
+fn multithreaded_decode_bit_identical_to_serial() {
+    let b1 = CpuBackend::with_threads(1);
+    let b4 = CpuBackend::with_threads(4);
+    let s1 = b1.open_session("lm_tiny_efla", 9).unwrap();
+    let s4 = b4.open_session("lm_tiny_efla", 9).unwrap();
+    assert_eq!(s1.threads(), 1);
+    assert_eq!(s4.threads(), 4);
+
+    let mut st1 = s1.decode_state().unwrap();
+    let mut st4 = s4.decode_state().unwrap();
+    let batch = s1.decode_batch().unwrap();
+    for step in 0..4 {
+        let tokens = vec![(40 + step) as i32; batch];
+        let l1 = s1.decode(&mut st1, &tokens).unwrap();
+        let l4 = s4.decode(&mut st4, &tokens).unwrap();
+        assert_eq!(l1.data(), l4.data(), "decode logits differ at step {step}");
+        for (a, c) in st1.iter().zip(st4.iter()) {
+            assert_eq!(
+                a.as_f32().unwrap().data(),
+                c.as_f32().unwrap().data(),
+                "decode state differs at step {step}"
+            );
+        }
+    }
+}
+
+#[test]
+fn lm_forward_loss_near_uniform_at_init() {
+    let cfg = family_config("lm_tiny_efla").unwrap();
+    let params = ParamSet::init(&cfg, 42);
+    let exec = Executor::new(0);
+    let (toks, tgts) = lm_batch(cfg.vocab, cfg.batch * cfg.seq, 1);
+    let stats =
+        lm_loss(&cfg, &params, &exec, &toks, &tgts, cfg.batch, cfg.seq, None).unwrap();
+    assert!(stats.loss_mean.is_finite());
+    // Untrained model on uniform random targets: mean CE near ln(vocab).
+    let expect = (cfg.vocab as f32).ln();
+    assert!(
+        (stats.loss_mean - expect).abs() < 1.5,
+        "loss {} vs ln(V) {expect}",
+        stats.loss_mean
+    );
+    assert_eq!(stats.count as usize, cfg.batch * cfg.seq);
+}
+
+#[test]
+fn lm_gradients_are_finite_and_nonzero() {
+    let families =
+        ["lm_tiny_efla", "lm_tiny_deltanet", "lm_tiny_efla_adaptive", "lm_tiny_efla_loose"];
+    for family in families {
+        let cfg = family_config(family).unwrap();
+        let params = ParamSet::init(&cfg, 7);
+        let exec = Executor::new(0);
+        let (b, l) = (2usize, 24usize);
+        let (toks, tgts) = lm_batch(cfg.vocab, b * l, 2);
+        let mut grads = params.zeros_like();
+        lm_loss(&cfg, &params, &exec, &toks, &tgts, b, l, Some(&mut grads)).unwrap();
+        let mut total = 0f64;
+        for (g, name) in grads.iter().zip(params.names()) {
+            for &x in g.data() {
+                assert!(x.is_finite(), "{family}: non-finite grad in {name}");
+            }
+            total += g.data().iter().map(|&x| (x as f64).abs()).sum::<f64>();
+        }
+        assert!(total > 0.0, "{family}: all-zero gradients");
+        // embedding (tied head) must receive gradient
+        let ge = &grads[params.idx("embed")];
+        assert!(ge.norm() > 0.0, "{family}: embed grad zero");
+    }
+}
+
+#[test]
+fn masked_targets_are_ignored() {
+    let cfg = family_config("lm_tiny_efla").unwrap();
+    let params = ParamSet::init(&cfg, 42);
+    let exec = Executor::new(0);
+    let (b, l) = (1usize, 8usize);
+    let (toks, mut tgts) = lm_batch(cfg.vocab, b * l, 3);
+    for t in tgts.iter_mut().skip(1) {
+        *t = -1;
+    }
+    let stats = lm_loss(&cfg, &params, &exec, &toks, &tgts, b, l, None).unwrap();
+    assert_eq!(stats.count as usize, 1);
+    assert!(stats.loss_sum.is_finite());
+}
+
+#[test]
+fn out_of_range_tokens_rejected() {
+    let cfg = family_config("lm_tiny_efla").unwrap();
+    let params = ParamSet::init(&cfg, 42);
+    let exec = Executor::new(0);
+    let (b, l) = (1usize, 4usize);
+    let (mut toks, tgts) = lm_batch(cfg.vocab, b * l, 4);
+    toks[0] = cfg.vocab as i32;
+    assert!(lm_loss(&cfg, &params, &exec, &toks, &tgts, b, l, None).is_err());
+}
