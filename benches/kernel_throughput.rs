@@ -1,15 +1,21 @@
 //! Bench: kernel-level analysis (paper §3 + §6).
 //!
 //! Regenerates, on the pure-Rust recurrence substrate:
+//!   0. GEMM GFLOP/s — scalar tier vs the dispatched AVX2+FMA microkernel
+//!      at 64/256/512 cubes (the perf-trajectory anchor; writes the
+//!      root-level BENCH_kernel_gemm.json);
 //!   1. the integrator error sweep — |out - exact| vs stiffness beta*lambda
 //!      for Euler / RK-2 / RK-4 / EFLA (the paper's core numerical claim);
 //!   2. transition-eigenvalue table (spectral gate, paper Eq. 33);
 //!   3. sequential vs chunkwise throughput across chunk sizes (the
 //!      hardware-efficiency argument for the chunkwise form);
 //!   4. chunkwise consistency errors (parallel form == sequential form);
-//!   5. the exact gate's cost relative to Euler's (EFLA's only overhead).
+//!   5. the exact gate's cost relative to Euler's (EFLA's only overhead);
+//!   6. model forward thread scaling (writes the root-level
+//!      BENCH_forward_threads.json).
 //!
-//! Env knobs: EFLA_BENCH_FAST=1 shrinks everything (CI smoke).
+//! Env knobs: EFLA_BENCH_FAST=1 shrinks everything (CI smoke);
+//! EFLA_FORCE_SCALAR=1 pins the matmul dispatcher to the scalar tier.
 
 use efla::attention::{alpha_efla, chunkwise_delta, gates, sequential_delta, Gate};
 use efla::coordinator::experiments::{chunkwise_consistency, integrator_error};
@@ -17,7 +23,7 @@ use efla::runtime::cpu::config::family_config;
 use efla::runtime::cpu::exec::Executor;
 use efla::runtime::cpu::model::lm_loss;
 use efla::runtime::cpu::params::ParamSet;
-use efla::tensor::Tensor;
+use efla::tensor::{gemm, matmul_into, Tensor};
 use efla::util::bench::{bench, fmt_secs, Table};
 use efla::util::json::{self, Json};
 use efla::util::rng::Rng;
@@ -29,6 +35,59 @@ fn fast() -> bool {
 fn main() {
     let (l, d) = if fast() { (128, 16) } else { (512, 32) };
     let mut report = Vec::new();
+
+    // ---- 0. GEMM GFLOP/s: scalar tier vs dispatched SIMD ------------
+    let kernel = gemm::active_kernel();
+    println!("## GEMM single-thread GFLOP/s (dispatched kernel: {kernel:?})\n");
+    let gemm_iters = if fast() { 2 } else { 6 };
+    let mut t = Table::new(&["size", "scalar GFLOP/s", "dispatched GFLOP/s", "speedup"]);
+    let mut gemm_points = Vec::new();
+    for &s in &[64usize, 256, 512] {
+        let mut rng = Rng::new(s as u64);
+        let a = rng.normal_vec(s * s, 0.0, 0.1);
+        let b = rng.normal_vec(s * s, 0.0, 0.1);
+        let mut out = vec![0.0f32; s * s];
+        let flops = 2.0 * (s as f64).powi(3);
+        let st_scalar = bench(1, gemm_iters, || {
+            out.iter_mut().for_each(|x| *x = 0.0);
+            gemm::scalar::matmul_into(&a, &b, &mut out, s, s, s);
+            std::hint::black_box(&out);
+        });
+        let st_simd = bench(1, gemm_iters, || {
+            out.iter_mut().for_each(|x| *x = 0.0);
+            matmul_into(&a, &b, &mut out, s, s, s);
+            std::hint::black_box(&out);
+        });
+        let g_scalar = flops / st_scalar.mean.max(1e-12) / 1e9;
+        let g_simd = flops / st_simd.mean.max(1e-12) / 1e9;
+        let speedup = st_scalar.mean / st_simd.mean.max(1e-12);
+        t.row(&[
+            format!("{s}x{s}x{s}"),
+            format!("{g_scalar:.2}"),
+            format!("{g_simd:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        gemm_points.push(Json::obj(vec![
+            ("size", Json::Num(s as f64)),
+            ("scalar_gflops", Json::Num(g_scalar)),
+            ("dispatched_gflops", Json::Num(g_simd)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    println!("{}", t.render());
+    let gemm_json = Json::obj(vec![
+        ("bench", Json::Str("gemm_gflops".into())),
+        ("kernel", Json::Str(format!("{kernel:?}"))),
+        ("points", Json::Arr(gemm_points)),
+    ]);
+    // Machine-readable one-liner + root-level trajectory file. Fast mode
+    // (CI smoke) must not overwrite the committed trajectory with
+    // throwaway low-iteration numbers.
+    println!("BENCH {}", gemm_json.to_string());
+    if !fast() {
+        json::write_file(std::path::Path::new("BENCH_kernel_gemm.json"), &gemm_json).unwrap();
+    }
+    report.push(("gemm_gflops", gemm_json));
 
     // ---- 1. error vs stiffness ------------------------------------
     println!("## Integrator error vs stiffness (L={l}, d={d}, max |out - exact|)\n");
@@ -187,14 +246,21 @@ fn main() {
     println!("{}", t.render());
     let scaling_json = Json::obj(vec![
         ("bench", Json::Str("forward_thread_scaling".into())),
+        ("kernel", Json::Str(format!("{:?}", gemm::active_kernel()))),
         ("family", Json::Str(family.into())),
         ("rows", Json::Num(rows as f64)),
         ("max_parallelism", Json::Num(max_threads as f64)),
         ("points", Json::Arr(scaling)),
     ]);
-    // Machine-readable one-liner (seed for BENCH_*.json trajectory tracking).
+    // Machine-readable one-liner + root-level trajectory file (committed
+    // across PRs so the perf trajectory is tracked; fast mode must not
+    // overwrite it with throwaway numbers).
     println!("BENCH {}", scaling_json.to_string());
-    report.push(("forward_thread_scaling", scaling_json.clone()));
+    if !fast() {
+        json::write_file(std::path::Path::new("BENCH_forward_threads.json"), &scaling_json)
+            .unwrap();
+    }
+    report.push(("forward_thread_scaling", scaling_json));
 
     let out = Json::Obj(
         report.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
@@ -202,7 +268,11 @@ fn main() {
     let path = std::path::Path::new("bench_results");
     std::fs::create_dir_all(path).ok();
     json::write_file(&path.join("kernel_throughput.json"), &out).unwrap();
-    json::write_file(&path.join("BENCH_forward_threads.json"), &scaling_json).unwrap();
+    if fast() {
+        println!("fast mode: root-level BENCH_*.json left untouched");
+    } else {
+        println!("json: BENCH_kernel_gemm.json");
+        println!("json: BENCH_forward_threads.json");
+    }
     println!("json: bench_results/kernel_throughput.json");
-    println!("json: bench_results/BENCH_forward_threads.json");
 }

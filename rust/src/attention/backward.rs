@@ -25,8 +25,11 @@
 //! Memory is O(L * Dk * Dv) transient per head — the caller loops over
 //! (batch, head) pairs so the peak is one head's trajectory, not the whole
 //! batch (the checkpointing trade the classifier's L=784 sequences need).
+//! The core is [`delta_bptt_into`]: raw slices in, gradients written in
+//! place, the trajectory buffers drawn from a caller-owned [`Scratch`]
+//! arena, and every inner loop a SIMD-dispatched `dot`/`axpy`.
 
-use crate::tensor::Tensor;
+use crate::tensor::{axpy, dot, Scratch, Tensor};
 
 /// Gradients of the alpha-form sequential delta rule.
 ///
@@ -47,131 +50,144 @@ pub fn delta_bptt(
     assert_eq!(dout.shape(), &[l, dv]);
     assert_eq!(alpha.len(), l);
 
-    // Forward recompute: states[t] = S_t (flat dk*dv), u[t] = v_t - S_{t-1}^T k_t.
-    let mut states: Vec<Vec<f32>> = Vec::with_capacity(l + 1);
-    states.push(vec![0.0f32; dk * dv]);
-    let mut us: Vec<Vec<f32>> = Vec::with_capacity(l);
-    for t in 0..l {
-        let kt = k.row(t);
-        let vt = v.row(t);
-        let s_prev = &states[t];
-        let mut u = vt.to_vec();
-        for (i, &ki) in kt.iter().enumerate() {
-            if ki == 0.0 {
-                continue;
-            }
-            let srow = &s_prev[i * dv..(i + 1) * dv];
-            for (uj, &sj) in u.iter_mut().zip(srow.iter()) {
-                *uj -= ki * sj;
-            }
-        }
-        let mut s_new = s_prev.clone();
-        let a = alpha[t];
-        for (i, &ki) in kt.iter().enumerate() {
-            let aki = a * ki;
-            if aki == 0.0 {
-                continue;
-            }
-            let srow = &mut s_new[i * dv..(i + 1) * dv];
-            for (sj, &uj) in srow.iter_mut().zip(u.iter()) {
-                *sj += aki * uj;
-            }
-        }
-        states.push(s_new);
-        us.push(u);
-    }
-
-    // Backward sweep.
     let mut dq = vec![0.0f32; l * dk];
     let mut dkk = vec![0.0f32; l * dk];
     let mut dvv = vec![0.0f32; l * dv];
     let mut dalpha = vec![0.0f32; l];
-    let mut g = vec![0.0f32; dk * dv]; // dL/dS carried backwards
-    let mut gk = vec![0.0f32; dv]; // scratch: G^T k
-    for t in (0..l).rev() {
-        let qt = q.row(t);
-        let kt = k.row(t);
-        let dot = dout.row(t);
-        let s_t = &states[t + 1];
-        let s_prev = &states[t];
-        let u = &us[t];
-        let a = alpha[t];
-
-        // dq_t = S_t do_t ;  G += q_t do_t^T
-        {
-            let dqr = &mut dq[t * dk..(t + 1) * dk];
-            for i in 0..dk {
-                let srow = &s_t[i * dv..(i + 1) * dv];
-                let mut acc = 0.0f32;
-                for (sj, dj) in srow.iter().zip(dot.iter()) {
-                    acc += sj * dj;
-                }
-                dqr[i] = acc;
-                let qi = qt[i];
-                if qi != 0.0 {
-                    let grow = &mut g[i * dv..(i + 1) * dv];
-                    for (gj, dj) in grow.iter_mut().zip(dot.iter()) {
-                        *gj += qi * dj;
-                    }
-                }
-            }
-        }
-
-        // gk = G^T k_t ;  dalpha_t = gk . u_t ;  du_t = alpha_t gk
-        gk.iter_mut().for_each(|x| *x = 0.0);
-        for (i, &ki) in kt.iter().enumerate() {
-            if ki == 0.0 {
-                continue;
-            }
-            let grow = &g[i * dv..(i + 1) * dv];
-            for (gkj, &gj) in gk.iter_mut().zip(grow.iter()) {
-                *gkj += ki * gj;
-            }
-        }
-        let mut da = 0.0f32;
-        for (gkj, uj) in gk.iter().zip(u.iter()) {
-            da += gkj * uj;
-        }
-        dalpha[t] = da;
-
-        // dk_t = alpha_t G u_t - S_{t-1} du_t   (du_t = alpha_t gk)
-        // dv_t = du_t ;  G -= k_t du_t^T
-        {
-            let dkr = &mut dkk[t * dk..(t + 1) * dk];
-            for i in 0..dk {
-                let grow = &g[i * dv..(i + 1) * dv];
-                let sprow = &s_prev[i * dv..(i + 1) * dv];
-                let mut gu = 0.0f32;
-                let mut sdu = 0.0f32;
-                for j in 0..dv {
-                    gu += grow[j] * u[j];
-                    sdu += sprow[j] * gk[j];
-                }
-                dkr[i] = a * gu - a * sdu;
-            }
-            let dvr = &mut dvv[t * dv..(t + 1) * dv];
-            for (dvj, &gkj) in dvr.iter_mut().zip(gk.iter()) {
-                *dvj = a * gkj;
-            }
-            for (i, &ki) in kt.iter().enumerate() {
-                let c = a * ki;
-                if c == 0.0 {
-                    continue;
-                }
-                let grow = &mut g[i * dv..(i + 1) * dv];
-                for (gj, &gkj) in grow.iter_mut().zip(gk.iter()) {
-                    *gj -= c * gkj;
-                }
-            }
-        }
-    }
-
+    let mut scratch = Scratch::new();
+    delta_bptt_into(
+        q.data(),
+        k.data(),
+        v.data(),
+        alpha,
+        dout.data(),
+        dk,
+        dv,
+        &mut dq,
+        &mut dkk,
+        &mut dvv,
+        &mut dalpha,
+        &mut scratch,
+    );
     (
         Tensor::from_vec(&[l, dk], dq),
         Tensor::from_vec(&[l, dk], dkk),
         Tensor::from_vec(&[l, dv], dvv),
         dalpha,
     )
+}
+
+/// Allocation-free core of [`delta_bptt`] on raw row-major slices. The
+/// gradient outputs are overwritten (`dq`/`dkk`: (L, Dk); `dvv`: (L, Dv);
+/// `dalpha`: len L); the recomputed state trajectory, u-sequence and
+/// adjoint carriers come from `scratch` and go back before returning.
+pub fn delta_bptt_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    alpha: &[f32],
+    dout: &[f32],
+    dk: usize,
+    dv: usize,
+    dq: &mut [f32],
+    dkk: &mut [f32],
+    dvv: &mut [f32],
+    dalpha: &mut [f32],
+    scratch: &mut Scratch,
+) {
+    let l = alpha.len();
+    debug_assert_eq!(q.len(), l * dk);
+    debug_assert_eq!(k.len(), l * dk);
+    debug_assert_eq!(v.len(), l * dv);
+    debug_assert_eq!(dout.len(), l * dv);
+    debug_assert_eq!(dq.len(), l * dk);
+    debug_assert_eq!(dkk.len(), l * dk);
+    debug_assert_eq!(dvv.len(), l * dv);
+    debug_assert_eq!(dalpha.len(), l);
+    let sd = dk * dv;
+
+    // Forward recompute: states[t*sd..] = S_t (S_0 = 0 from the zeroed
+    // take), us[t*dv..] = u_t = v_t - S_{t-1}^T k_t.
+    let mut states = scratch.take((l + 1) * sd);
+    let mut us = scratch.take(l * dv);
+    for t in 0..l {
+        let kt = &k[t * dk..(t + 1) * dk];
+        let (done, rest) = states.split_at_mut((t + 1) * sd);
+        let s_prev = &done[t * sd..];
+        let s_new = &mut rest[..sd];
+        s_new.copy_from_slice(s_prev);
+        let u = &mut us[t * dv..(t + 1) * dv];
+        u.copy_from_slice(&v[t * dv..(t + 1) * dv]);
+        for (i, &ki) in kt.iter().enumerate() {
+            if ki != 0.0 {
+                axpy(-ki, &s_prev[i * dv..(i + 1) * dv], u);
+            }
+        }
+        let a = alpha[t];
+        for (i, &ki) in kt.iter().enumerate() {
+            let aki = a * ki;
+            if aki != 0.0 {
+                axpy(aki, u, &mut s_new[i * dv..(i + 1) * dv]);
+            }
+        }
+    }
+
+    // Backward sweep with the running cotangent G = dL/dS_t.
+    let mut g = scratch.take(sd);
+    let mut gk = scratch.take(dv);
+    for t in (0..l).rev() {
+        let qt = &q[t * dk..(t + 1) * dk];
+        let kt = &k[t * dk..(t + 1) * dk];
+        let dot_r = &dout[t * dv..(t + 1) * dv];
+        let s_t = &states[(t + 1) * sd..(t + 2) * sd];
+        let s_prev = &states[t * sd..(t + 1) * sd];
+        let u = &us[t * dv..(t + 1) * dv];
+        let a = alpha[t];
+
+        // dq_t = S_t do_t ;  G += q_t do_t^T
+        let dqr = &mut dq[t * dk..(t + 1) * dk];
+        for i in 0..dk {
+            dqr[i] = dot(&s_t[i * dv..(i + 1) * dv], dot_r);
+            let qi = qt[i];
+            if qi != 0.0 {
+                axpy(qi, dot_r, &mut g[i * dv..(i + 1) * dv]);
+            }
+        }
+
+        // gk = G^T k_t ;  dalpha_t = gk . u_t ;  du_t = alpha_t gk
+        gk.iter_mut().for_each(|x| *x = 0.0);
+        for (i, &ki) in kt.iter().enumerate() {
+            if ki != 0.0 {
+                axpy(ki, &g[i * dv..(i + 1) * dv], &mut gk);
+            }
+        }
+        dalpha[t] = dot(&gk, u);
+
+        // dk_t = alpha_t (G u_t - S_{t-1} du_t/alpha_t) ; dv_t = alpha_t gk
+        let dkr = &mut dkk[t * dk..(t + 1) * dk];
+        for i in 0..dk {
+            let gu = dot(&g[i * dv..(i + 1) * dv], u);
+            let sdu = dot(&s_prev[i * dv..(i + 1) * dv], &gk);
+            dkr[i] = a * gu - a * sdu;
+        }
+        let dvr = &mut dvv[t * dv..(t + 1) * dv];
+        for (dvj, &gkj) in dvr.iter_mut().zip(gk.iter()) {
+            *dvj = a * gkj;
+        }
+
+        // G -= k_t du_t^T
+        for (i, &ki) in kt.iter().enumerate() {
+            let c = a * ki;
+            if c != 0.0 {
+                axpy(-c, &gk, &mut g[i * dv..(i + 1) * dv]);
+            }
+        }
+    }
+
+    scratch.put(states);
+    scratch.put(us);
+    scratch.put(g);
+    scratch.put(gk);
 }
 
 #[cfg(test)]
@@ -269,5 +285,43 @@ mod tests {
         assert!(dq.norm() < 1e-7);
         assert!(dk_.norm() < 1e-7);
         assert!(dv_.norm() < 1e-7);
+    }
+
+    #[test]
+    fn into_form_with_reused_scratch_matches_wrapper() {
+        let mut rng = Rng::new(0xC4);
+        let (l, dk, dv) = (9, 5, 4);
+        let q = rand_t(&mut rng, &[l, dk], 1.0);
+        let k = rand_t(&mut rng, &[l, dk], 0.7);
+        let v = rand_t(&mut rng, &[l, dv], 1.0);
+        let dout = rand_t(&mut rng, &[l, dv], 1.0);
+        let alpha: Vec<f32> = (0..l).map(|_| 0.2 + 0.1 * rng.f32()).collect();
+        let (dq_ref, dk_ref, dv_ref, da_ref) = delta_bptt(&q, &k, &v, &alpha, &dout);
+
+        let mut scratch = Scratch::new();
+        for _ in 0..2 {
+            let mut dq = vec![1.0f32; l * dk]; // dirty outputs must be overwritten
+            let mut dkk = vec![1.0f32; l * dk];
+            let mut dvv = vec![1.0f32; l * dv];
+            let mut dalpha = vec![1.0f32; l];
+            delta_bptt_into(
+                q.data(),
+                k.data(),
+                v.data(),
+                &alpha,
+                dout.data(),
+                dk,
+                dv,
+                &mut dq,
+                &mut dkk,
+                &mut dvv,
+                &mut dalpha,
+                &mut scratch,
+            );
+            assert_eq!(dq.as_slice(), dq_ref.data());
+            assert_eq!(dkk.as_slice(), dk_ref.data());
+            assert_eq!(dvv.as_slice(), dv_ref.data());
+            assert_eq!(dalpha, da_ref);
+        }
     }
 }

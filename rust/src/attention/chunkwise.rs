@@ -17,11 +17,14 @@
 //! two is exactly what the golden-vector test pins.
 //!
 //! All hot loops operate on flat row slices (`copy_from_slice` + fused
-//! `axpy` / blocked matmuls) — see `benches/kernel_throughput.rs` for the
-//! measured win over the earlier per-element `get`/`set` form.
+//! `axpy` / SIMD-dispatched matmuls) — see `benches/kernel_throughput.rs`
+//! for the measured win over the earlier per-element `get`/`set` form. The
+//! core is [`chunkwise_delta_alpha_into`]: raw slices in, output and state
+//! written in place, every per-chunk temporary drawn from a caller-owned
+//! [`Scratch`] arena so the chunk loop allocates nothing in steady state.
 
-use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Tensor};
 use crate::tensor::axpy;
+use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Scratch, Tensor};
 
 use super::gates::{Gate, EPS_LAMBDA};
 
@@ -60,7 +63,6 @@ pub fn chunkwise_delta_alpha(
     alpha: &[f32],
     chunk: usize,
 ) -> (Tensor, Tensor) {
-    assert!(chunk >= 1);
     let l = q.shape()[0];
     let dk = q.shape()[1];
     let dv = v.shape()[1];
@@ -70,24 +72,65 @@ pub fn chunkwise_delta_alpha(
 
     let mut s = vec![0.0f32; dk * dv];
     let mut out = vec![0.0f32; l * dv];
+    let mut scratch = Scratch::new();
+    chunkwise_delta_alpha_into(
+        q.data(),
+        k.data(),
+        v.data(),
+        alpha,
+        dk,
+        dv,
+        chunk,
+        &mut out,
+        &mut s,
+        &mut scratch,
+    );
+    (Tensor::from_vec(&[l, dv], out), Tensor::from_vec(&[dk, dv], s))
+}
+
+/// Allocation-free core of [`chunkwise_delta_alpha`] on raw row-major
+/// slices. `out` (L, Dv) must be zeroed; `s` (Dk, Dv) is the running state
+/// — zeros for a fresh sequence — updated in place, so callers can stream
+/// chunked segments through one state. Per-chunk temporaries (`kk`, `w`,
+/// `u`, `ws`, `qk`) come from `scratch` and go back each chunk: steady
+/// state allocates nothing.
+pub fn chunkwise_delta_alpha_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    alpha: &[f32],
+    dk: usize,
+    dv: usize,
+    chunk: usize,
+    out: &mut [f32],
+    s: &mut [f32],
+    scratch: &mut Scratch,
+) {
+    assert!(chunk >= 1);
+    let l = alpha.len();
+    debug_assert_eq!(q.len(), l * dk);
+    debug_assert_eq!(k.len(), l * dk);
+    debug_assert_eq!(v.len(), l * dv);
+    debug_assert_eq!(out.len(), l * dv);
+    debug_assert_eq!(s.len(), dk * dv);
 
     let mut c0 = 0;
     while c0 < l {
         let c = chunk.min(l - c0);
-        // Chunk row slices straight out of the row-major tensors.
-        let qc = &q.data()[c0 * dk..(c0 + c) * dk];
-        let kc = &k.data()[c0 * dk..(c0 + c) * dk];
-        let vc = &v.data()[c0 * dv..(c0 + c) * dv];
+        // Chunk row slices straight out of the row-major buffers.
+        let qc = &q[c0 * dk..(c0 + c) * dk];
+        let kc = &k[c0 * dk..(c0 + c) * dk];
+        let vc = &v[c0 * dv..(c0 + c) * dv];
         let ac = &alpha[c0..c0 + c];
 
         // kk = K K^T (C, C); only the strict lower triangle is consumed.
-        let mut kk = vec![0.0f32; c * c];
+        let mut kk = scratch.take(c * c);
         matmul_nt_into(kc, kc, &mut kk, c, dk, c);
 
         // Solve (I + A) X = diag(a) [K | V] by forward substitution, rows
         // in order: X[r] = a_r*rhs[r] - sum_{i<r} A[r,i] X[i].
-        let mut w = vec![0.0f32; c * dk];
-        let mut u = vec![0.0f32; c * dv];
+        let mut w = scratch.take(c * dk);
+        let mut u = scratch.take(c * dv);
         for r in 0..c {
             let ar = ac[r];
             let (w_done, w_rest) = w.split_at_mut(r * dk);
@@ -113,19 +156,19 @@ pub fn chunkwise_delta_alpha(
             }
         }
 
-        // delta = U - W S  (C, Dv)
-        let mut ws = vec![0.0f32; c * dv];
-        matmul_into(&w, &s, &mut ws, c, dk, dv);
+        // delta = U - W S  (C, Dv), computed in place in u.
+        let mut ws = scratch.take(c * dv);
+        matmul_into(&w, s, &mut ws, c, dk, dv);
         let mut delta = u;
         for (d, w_) in delta.iter_mut().zip(ws.iter()) {
             *d -= w_;
         }
 
         // O = Q S + tril(Q K^T) delta, written straight into the output rows.
-        let mut qk = vec![0.0f32; c * c];
+        let mut qk = scratch.take(c * c);
         matmul_nt_into(qc, kc, &mut qk, c, dk, c);
         let oc = &mut out[c0 * dv..(c0 + c) * dv];
-        matmul_into(qc, &s, oc, c, dk, dv);
+        matmul_into(qc, s, oc, c, dk, dv);
         for r in 0..c {
             let orow = &mut oc[r * dv..(r + 1) * dv];
             for (i, &g) in qk[r * c..r * c + r + 1].iter().enumerate() {
@@ -137,12 +180,16 @@ pub fn chunkwise_delta_alpha(
         }
 
         // S' = S + K^T delta (fused rank-C update)
-        matmul_tn_into(kc, &delta, &mut s, c, dk, dv);
+        matmul_tn_into(kc, &delta, s, c, dk, dv);
+
+        scratch.put(kk);
+        scratch.put(w);
+        scratch.put(delta);
+        scratch.put(ws);
+        scratch.put(qk);
 
         c0 += c;
     }
-
-    (Tensor::from_vec(&[l, dv], out), Tensor::from_vec(&[dk, dv], s))
 }
 
 #[cfg(test)]
@@ -235,6 +282,73 @@ mod tests {
             assert!(o1.max_abs_diff(&o2) < 2e-4, "chunk {c}");
             assert!(s1.max_abs_diff(&s2) < 2e-4, "chunk {c}");
         }
+    }
+
+    #[test]
+    fn into_form_with_reused_scratch_matches_wrapper() {
+        // A dirty, reused arena must not leak state between calls, and the
+        // in-place state lets a split sequence stream through two calls.
+        let mut rng = Rng::new(33);
+        let (l, dk, dv) = (24, 6, 10);
+        let q = rand_t(&mut rng, &[l, dk], 1.0);
+        let k = rand_t(&mut rng, &[l, dk], 0.7);
+        let v = rand_t(&mut rng, &[l, dv], 1.0);
+        let alpha = stable_alpha(&mut rng, &k);
+        let (o_ref, s_ref) = chunkwise_delta_alpha(&q, &k, &v, &alpha, 8);
+
+        let mut scratch = crate::tensor::Scratch::new();
+        for _ in 0..2 {
+            let mut out = vec![0.0f32; l * dv];
+            let mut s = vec![0.0f32; dk * dv];
+            chunkwise_delta_alpha_into(
+                q.data(),
+                k.data(),
+                v.data(),
+                &alpha,
+                dk,
+                dv,
+                8,
+                &mut out,
+                &mut s,
+                &mut scratch,
+            );
+            assert_eq!(out.as_slice(), o_ref.data());
+            assert_eq!(s.as_slice(), s_ref.data());
+        }
+
+        // Stream the same sequence as two segments through one state. The
+        // split sits on a chunk boundary so the chunk partition (and hence
+        // the float rounding) is identical to the one-shot run.
+        let half = 16;
+        let mut out = vec![0.0f32; l * dv];
+        let mut s = vec![0.0f32; dk * dv];
+        let (o1, o2) = out.split_at_mut(half * dv);
+        chunkwise_delta_alpha_into(
+            &q.data()[..half * dk],
+            &k.data()[..half * dk],
+            &v.data()[..half * dv],
+            &alpha[..half],
+            dk,
+            dv,
+            8,
+            o1,
+            &mut s,
+            &mut scratch,
+        );
+        chunkwise_delta_alpha_into(
+            &q.data()[half * dk..],
+            &k.data()[half * dk..],
+            &v.data()[half * dv..],
+            &alpha[half..],
+            dk,
+            dv,
+            8,
+            o2,
+            &mut s,
+            &mut scratch,
+        );
+        assert_eq!(out.as_slice(), o_ref.data());
+        assert_eq!(s.as_slice(), s_ref.data());
     }
 
     #[test]

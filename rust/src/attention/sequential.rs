@@ -11,7 +11,7 @@
 //! serving fallback and the error-analysis bench; [`sequential_delta`] is
 //! the batch convenience wrapper the tests use.
 
-use crate::tensor::Tensor;
+use crate::tensor::{axpy, Scratch, Tensor};
 
 use super::gates::{Gate, EPS_LAMBDA};
 
@@ -92,28 +92,26 @@ pub fn delta_step_alpha(
     debug_assert_eq!(out.len(), dv);
     debug_assert_eq!(stk.len(), dv);
 
-    // stk = S^T k
+    // stk = S^T k (row-level zero-skips stay: they gate whole vector ops,
+    // the SIMD-dispatched axpy inside is branch-free).
     stk.iter_mut().for_each(|x| *x = 0.0);
     for i in 0..dk {
         let ki = k[i];
         if ki == 0.0 {
             continue;
         }
-        let row = &s[i * dv..(i + 1) * dv];
-        for j in 0..dv {
-            stk[j] += ki * row[j];
-        }
+        axpy(ki, &s[i * dv..(i + 1) * dv], stk);
     }
-    // S += alpha * k (v - stk)^T
+    // stk := u = v - S^T k, then S += alpha * k u^T as row axpys.
+    for (uj, &vj) in stk.iter_mut().zip(v.iter()) {
+        *uj = vj - *uj;
+    }
     for i in 0..dk {
         let aki = alpha * k[i];
         if aki == 0.0 {
             continue;
         }
-        let row = &mut s[i * dv..(i + 1) * dv];
-        for j in 0..dv {
-            row[j] += aki * (v[j] - stk[j]);
-        }
+        axpy(aki, stk, &mut s[i * dv..(i + 1) * dv]);
     }
     // o = S'^T q
     out.iter_mut().for_each(|x| *x = 0.0);
@@ -122,10 +120,7 @@ pub fn delta_step_alpha(
         if qi == 0.0 {
             continue;
         }
-        let row = &s[i * dv..(i + 1) * dv];
-        for j in 0..dv {
-            out[j] += qi * row[j];
-        }
+        axpy(qi, &s[i * dv..(i + 1) * dv], out);
     }
 }
 
@@ -174,15 +169,59 @@ pub fn sequential_delta_alpha(
     assert_eq!(v.shape(), &[l, dv]);
     assert_eq!(alpha.len(), l);
 
-    let mut st = DeltaState::new(dk, dv);
     let mut out = vec![0.0f32; l * dv];
+    let mut s = vec![0.0f32; dk * dv];
+    let mut scratch = Scratch::new();
+    sequential_delta_alpha_into(
+        q.data(),
+        k.data(),
+        v.data(),
+        alpha,
+        dk,
+        dv,
+        &mut out,
+        &mut s,
+        &mut scratch,
+    );
+    (Tensor::from_vec(&[l, dv], out), Tensor::from_vec(&[dk, dv], s))
+}
+
+/// Allocation-free core of [`sequential_delta_alpha`] on raw row-major
+/// slices: `out` (L, Dv) is overwritten token by token, `s` (Dk, Dv) is
+/// the running state — zeros for a fresh sequence — advanced in place.
+/// The per-token scratch vector comes from `scratch`.
+pub fn sequential_delta_alpha_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    alpha: &[f32],
+    dk: usize,
+    dv: usize,
+    out: &mut [f32],
+    s: &mut [f32],
+    scratch: &mut Scratch,
+) {
+    let l = alpha.len();
+    debug_assert_eq!(q.len(), l * dk);
+    debug_assert_eq!(k.len(), l * dk);
+    debug_assert_eq!(v.len(), l * dv);
+    debug_assert_eq!(out.len(), l * dv);
+    debug_assert_eq!(s.len(), dk * dv);
+    let mut stk = scratch.take(dv);
     for t in 0..l {
-        st.step_alpha(q.row(t), k.row(t), v.row(t), alpha[t], &mut out[t * dv..(t + 1) * dv]);
+        delta_step_alpha(
+            s,
+            &q[t * dk..(t + 1) * dk],
+            &k[t * dk..(t + 1) * dk],
+            &v[t * dv..(t + 1) * dv],
+            alpha[t],
+            &mut out[t * dv..(t + 1) * dv],
+            &mut stk,
+            dk,
+            dv,
+        );
     }
-    (
-        Tensor::from_vec(&[l, dv], out),
-        Tensor::from_vec(&[dk, dv], st.state().to_vec()),
-    )
+    scratch.put(stk);
 }
 
 #[cfg(test)]

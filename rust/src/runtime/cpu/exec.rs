@@ -15,18 +15,33 @@
 //! association order with the thread count — that property is pinned by
 //! `tests/model_layers.rs`.
 //!
+//! **Scratch arenas:** the executor owns one [`Scratch`] buffer pool per
+//! worker (`arenas[w]`), never shared between concurrently running
+//! workers. The `*_scratch` variants hand worker `w` exclusive access to
+//! arena `w` for the duration of its chunk, so hot-loop temporaries reuse
+//! the same allocations across calls (the pools live as long as the
+//! executor — sessions hold one executor for their lifetime). Scratch
+//! never influences results: every buffer is re-zeroed when taken. If an
+//! arena is unexpectedly busy (nested scratch call), a transient pool is
+//! used instead — always correct, just not pooled.
+//!
 //! The thread count resolves as: explicit knob (`--threads`) >
 //! `EFLA_NUM_THREADS` > `std::thread::available_parallelism()`.
 
+use std::sync::{Arc, Mutex};
 use std::thread;
+
+use crate::tensor::Scratch;
 
 /// Environment override for the worker-thread count.
 pub const ENV_THREADS: &str = "EFLA_NUM_THREADS";
 
-/// Scoped-thread work-splitter with a fixed worker count.
+/// Scoped-thread work-splitter with a fixed worker count and one scratch
+/// arena per worker.
 #[derive(Clone, Debug)]
 pub struct Executor {
     threads: usize,
+    arenas: Arc<Vec<Mutex<Scratch>>>,
 }
 
 impl Default for Executor {
@@ -39,17 +54,51 @@ impl Executor {
     /// `threads == 0` means auto: `EFLA_NUM_THREADS` if set (and > 0),
     /// else the machine's available parallelism.
     pub fn new(threads: usize) -> Executor {
-        let resolved = if threads == 0 { env_or_auto() } else { threads };
-        Executor { threads: resolved.max(1) }
+        let resolved = if threads == 0 { env_or_auto() } else { threads }.max(1);
+        let arenas = (0..resolved).map(|_| Mutex::new(Scratch::new())).collect();
+        Executor { threads: resolved, arenas: Arc::new(arenas) }
     }
 
     /// Single-threaded executor (reference numerics / tests).
     pub fn serial() -> Executor {
-        Executor { threads: 1 }
+        Executor::new(1)
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Run `f` with exclusive access to worker `w`'s arena. Falls back to
+    /// a transient pool when the arena is already held (nested call) —
+    /// results are identical either way, only reuse is lost.
+    fn with_arena<R>(&self, w: usize, f: impl FnOnce(&mut Scratch) -> R) -> R {
+        match self.arenas[w].try_lock() {
+            Ok(mut guard) => f(&mut guard),
+            Err(_) => f(&mut Scratch::new()),
+        }
+    }
+
+    /// Orchestrator-side scratch access (arena 0): for serial hot paths
+    /// that want pooled buffers without a parallel shape.
+    pub fn scratch<R>(&self, f: impl FnOnce(&mut Scratch) -> R) -> R {
+        self.with_arena(0, f)
+    }
+
+    /// Check out a zeroed pooled buffer from arena 0 (orchestrator-thread
+    /// helper; pair with [`Executor::put`]). Allocates a fresh buffer if
+    /// the arena is busy.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        match self.arenas[0].try_lock() {
+            Ok(mut guard) => guard.take(len),
+            Err(_) => vec![0.0; len],
+        }
+    }
+
+    /// Return a buffer taken with [`Executor::take`] to arena 0's pool.
+    pub fn put(&self, buf: Vec<f32>) {
+        if let Ok(mut guard) = self.arenas[0].try_lock() {
+            guard.put(buf);
+        }
     }
 
     /// Run `f(0), ..., f(n-1)` across the workers and return the results
@@ -61,19 +110,33 @@ impl Executor {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        self.map_scratch(n, |i, _| f(i))
+    }
+
+    /// [`Executor::map`] with per-worker scratch: worker `w` runs its
+    /// whole task stride with exclusive access to arena `w`. Tasks must
+    /// not let scratch contents influence results (buffers are zeroed on
+    /// take, so this holds by construction).
+    pub fn map_scratch<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut Scratch) -> T + Sync,
+    {
         if self.threads == 1 || n <= 1 {
-            return (0..n).map(f).collect();
+            return self.with_arena(0, |sc| (0..n).map(|i| f(i, sc)).collect());
         }
         let workers = self.threads.min(n);
         let f = &f;
         let run_stride = move |w: usize| {
-            let mut out = Vec::new();
-            let mut i = w;
-            while i < n {
-                out.push((i, f(i)));
-                i += workers;
-            }
-            out
+            self.with_arena(w, |sc| {
+                let mut out = Vec::new();
+                let mut i = w;
+                while i < n {
+                    out.push((i, f(i, sc)));
+                    i += workers;
+                }
+                out
+            })
         };
         // Fork-join: spawn workers 1.., run stride 0 on the calling thread.
         let per_worker: Vec<Vec<(usize, T)>> = thread::scope(|scope| {
@@ -105,6 +168,14 @@ impl Executor {
     where
         F: Fn(usize, usize, &mut [f32]) + Sync,
     {
+        self.par_rows_scratch(rows, out, |r0, r1, chunk, _| f(r0, r1, chunk));
+    }
+
+    /// [`Executor::par_rows`] with per-worker scratch.
+    pub fn par_rows_scratch<F>(&self, rows: usize, out: &mut [f32], f: F)
+    where
+        F: Fn(usize, usize, &mut [f32], &mut Scratch) + Sync,
+    {
         if rows == 0 {
             return;
         }
@@ -112,7 +183,7 @@ impl Executor {
         let width = out.len() / rows;
         let workers = self.threads.min(rows);
         if workers <= 1 {
-            f(0, rows, out);
+            self.with_arena(0, |sc| f(0, rows, out, sc));
             return;
         }
         let base = rows / workers;
@@ -131,10 +202,55 @@ impl Executor {
                 let (chunk, tail) = tmp.split_at_mut(nrows * width);
                 rest = tail;
                 let start = row0;
-                scope.spawn(move || f(start, start + nrows, chunk));
+                scope.spawn(move || self.with_arena(w, |sc| f(start, start + nrows, chunk, sc)));
                 row0 += nrows;
             }
-            f(row0, rows, rest);
+            self.with_arena(workers - 1, |sc| f(row0, rows, rest, sc));
+        });
+    }
+
+    /// Two-buffer variant of [`Executor::par_rows_scratch`]: both `a` and
+    /// `b` are split by the **same** row partition (widths may differ), so
+    /// a task can update paired per-row state — e.g. the decode path's
+    /// per-head state matrix alongside its output rows — in place.
+    pub fn par_rows2_scratch<F>(&self, rows: usize, a: &mut [f32], b: &mut [f32], f: F)
+    where
+        F: Fn(usize, usize, &mut [f32], &mut [f32], &mut Scratch) + Sync,
+    {
+        if rows == 0 {
+            return;
+        }
+        assert_eq!(a.len() % rows, 0, "buffer a length not divisible by rows");
+        assert_eq!(b.len() % rows, 0, "buffer b length not divisible by rows");
+        let wa = a.len() / rows;
+        let wb = b.len() / rows;
+        let workers = self.threads.min(rows);
+        if workers <= 1 {
+            self.with_arena(0, |sc| f(0, rows, a, b, sc));
+            return;
+        }
+        let base = rows / workers;
+        let extra = rows % workers;
+        let f = &f;
+        thread::scope(|scope| {
+            let mut rest_a = a;
+            let mut rest_b = b;
+            let mut row0 = 0usize;
+            for w in 0..workers - 1 {
+                let nrows = base + usize::from(w < extra);
+                let tmp_a = rest_a;
+                let (ca, ta) = tmp_a.split_at_mut(nrows * wa);
+                rest_a = ta;
+                let tmp_b = rest_b;
+                let (cb, tb) = tmp_b.split_at_mut(nrows * wb);
+                rest_b = tb;
+                let start = row0;
+                scope.spawn(move || {
+                    self.with_arena(w, |sc| f(start, start + nrows, ca, cb, sc))
+                });
+                row0 += nrows;
+            }
+            self.with_arena(workers - 1, |sc| f(row0, rows, rest_a, rest_b, sc));
         });
     }
 }
@@ -198,5 +314,62 @@ mod tests {
         assert!(Executor::new(0).threads() >= 1);
         assert_eq!(Executor::serial().threads(), 1);
         assert_eq!(Executor::new(3).threads(), 3);
+    }
+
+    #[test]
+    fn map_scratch_buffers_are_zeroed_and_ordered() {
+        for threads in [1, 3, 5] {
+            let ex = Executor::new(threads);
+            let out = ex.map_scratch(17, |i, sc| {
+                let mut buf = sc.take(8);
+                assert!(buf.iter().all(|&x| x == 0.0), "dirty scratch buffer");
+                buf.iter_mut().for_each(|x| *x = i as f32); // dirty it for the next take
+                let tag = buf[0];
+                sc.put(buf);
+                tag
+            });
+            let expect: Vec<f32> = (0..17).map(|i| i as f32).collect();
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_rows2_partitions_both_buffers_consistently() {
+        for threads in [1, 2, 4, 9] {
+            let ex = Executor::new(threads);
+            let (rows, wa, wb) = (13, 3, 7);
+            let mut a = vec![0.0f32; rows * wa];
+            let mut b = vec![0.0f32; rows * wb];
+            ex.par_rows2_scratch(rows, &mut a, &mut b, |r0, r1, ca, cb, sc| {
+                assert_eq!(ca.len(), (r1 - r0) * wa);
+                assert_eq!(cb.len(), (r1 - r0) * wb);
+                let tmp = sc.take(1);
+                for (i, x) in ca.iter_mut().enumerate() {
+                    *x = (r0 * wa + i) as f32;
+                }
+                for (i, x) in cb.iter_mut().enumerate() {
+                    *x = (r0 * wb + i) as f32 + 0.5;
+                }
+                sc.put(tmp);
+            });
+            let ea: Vec<f32> = (0..rows * wa).map(|i| i as f32).collect();
+            let eb: Vec<f32> = (0..rows * wb).map(|i| i as f32 + 0.5).collect();
+            assert_eq!(a, ea, "threads={threads}");
+            assert_eq!(b, eb, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn take_put_reuses_the_arena_pool() {
+        let ex = Executor::new(2);
+        let mut buf = ex.take(16);
+        assert_eq!(buf, vec![0.0; 16]);
+        buf.iter_mut().for_each(|x| *x = 3.0);
+        let ptr = buf.as_ptr();
+        ex.put(buf);
+        let again = ex.take(16);
+        assert_eq!(again, vec![0.0; 16]);
+        assert_eq!(again.as_ptr(), ptr, "pooled allocation should be reused");
+        ex.put(again);
     }
 }

@@ -22,10 +22,18 @@ impl TokenEmbedding {
 
     /// Validating lookup: tokens (B*L,) -> x (B*L, d).
     pub fn forward(&self, ctx: &Ctx, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut x = vec![0.0f32; tokens.len() * ctx.cfg.d_model];
+        self.forward_into(ctx, tokens, &mut x)?;
+        Ok(x)
+    }
+
+    /// [`forward`](Self::forward) into a caller-provided buffer
+    /// (overwritten) — the allocation-free decode form.
+    pub fn forward_into(&self, ctx: &Ctx, tokens: &[i32], x: &mut [f32]) -> Result<()> {
         let d = ctx.cfg.d_model;
         let vocab = ctx.cfg.vocab;
         let table = ctx.params.tensor(self.embed).data();
-        let mut x = vec![0.0f32; tokens.len() * d];
+        debug_assert_eq!(x.len(), tokens.len() * d);
         for (r, &t) in tokens.iter().enumerate() {
             if t < 0 || t as usize >= vocab {
                 bail!("token id {t} out of range (vocab {vocab})");
@@ -33,7 +41,7 @@ impl TokenEmbedding {
             let t = t as usize;
             x[r * d..(r + 1) * d].copy_from_slice(&table[t * d..(t + 1) * d]);
         }
-        Ok(x)
+        Ok(())
     }
 
     /// Scatter-add dx rows into the embedding gradient.

@@ -42,20 +42,32 @@ impl LmHead {
 
     /// Decode path: final norm + tied logits, no loss. x: (B, d).
     pub fn logits(&self, ctx: &Ctx, x: &[f32]) -> Vec<f32> {
+        let rows = x.len() / ctx.cfg.d_model;
+        let mut logits = vec![0.0f32; rows * ctx.cfg.vocab];
+        self.logits_into(ctx, x, &mut logits);
+        logits
+    }
+
+    /// [`logits`](Self::logits) into a caller-provided buffer
+    /// (overwritten), the normalized activations drawn from the executor
+    /// arena — the allocation-free serving form.
+    pub fn logits_into(&self, ctx: &Ctx, x: &[f32], logits: &mut [f32]) {
         let (d, vocab) = (ctx.cfg.d_model, ctx.cfg.vocab);
         let rows = x.len() / d;
-        let xf = self.norm_f.infer(ctx, x);
-        let mut logits = vec![0.0f32; rows * vocab];
+        debug_assert_eq!(logits.len(), rows * vocab);
+        let mut xf = ctx.exec.take(x.len());
+        self.norm_f.infer_into(ctx, x, &mut xf);
+        logits.fill(0.0);
         ops::matmul_nt_acc(
             ctx.exec,
             &xf,
             ctx.params.tensor(self.embed).data(),
-            &mut logits,
+            logits,
             rows,
             d,
             vocab,
         );
-        logits
+        ctx.exec.put(xf);
     }
 
     /// Masked CE over targets (-1 = ignored). x: (B*L, d).
@@ -133,8 +145,10 @@ impl LmHead {
         let count = targets.iter().filter(|&&t| t >= 0).count() as f64;
         let inv_count = 1.0 / count.max(1.0) as f32;
 
-        // dlogits = (softmax - onehot) * mask / count.
-        let mut dlogits = vec![0.0f32; rows * vocab];
+        // dlogits = (softmax - onehot) * mask / count; the (rows, vocab)
+        // buffer — the largest single gradient temporary in the model —
+        // comes from the executor arena.
+        let mut dlogits = ctx.exec.take(rows * vocab);
         for r in 0..rows {
             let tgt = targets[r];
             if tgt < 0 {
@@ -151,10 +165,14 @@ impl LmHead {
 
         // Tied head: logits = xf @ embed^T.
         let embed = ctx.params.tensor(self.embed).data();
-        let dxf = ops::matmul(ctx.exec, &dlogits, embed, rows, vocab, d);
+        let mut dxf = ctx.exec.take(rows * d);
+        ops::matmul_acc(ctx.exec, &dlogits, embed, &mut dxf, rows, vocab, d);
         matmul_tn_into(&dlogits, &tape.xf, grads[self.embed].data_mut(), rows, vocab, d);
+        ctx.exec.put(dlogits);
 
-        self.norm_f.backward(ctx, &tape.norm, &dxf, grads)
+        let dx = self.norm_f.backward(ctx, &tape.norm, &dxf, grads);
+        ctx.exec.put(dxf);
+        dx
     }
 }
 
@@ -228,10 +246,12 @@ impl ClfHead {
             row_lse[bi] = lse;
             let tgt = labels[bi] as usize;
             loss_sum += (lse - lr[tgt]) as f64;
+            // total_cmp: a NaN logit (diverged run) must not panic the
+            // eval loop — same total-ordering fallback as tensor::argmax_rows.
             let argmax = lr
                 .iter()
                 .enumerate()
-                .max_by(|a, b_| a.1.partial_cmp(b_.1).unwrap())
+                .max_by(|a, b_| a.1.total_cmp(b_.1))
                 .map(|(j, _)| j)
                 .unwrap_or(0);
             if argmax == tgt {

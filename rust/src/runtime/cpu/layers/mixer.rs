@@ -3,14 +3,18 @@
 //! chunkwise delta-rule kernel.
 //!
 //! The kernel work is independent per (batch, head) pair — forward
-//! ([`crate::attention::chunkwise_delta_alpha`]), backward
-//! ([`crate::attention::delta_bptt`], recomputed per pair so peak memory is
-//! one head's state trajectory) and the one-token decode update all fan out
-//! through [`Executor::map`](super::super::exec::Executor::map); results
-//! are scattered back in task order so numerics are thread-count invariant.
+//! ([`crate::attention::chunkwise_delta_alpha_into`]), backward
+//! ([`crate::attention::delta_bptt_into`], recomputed per pair so peak
+//! memory is one head's state trajectory) and the one-token decode update
+//! all fan out through the scratch-aware executor shapes
+//! ([`Executor::par_rows_scratch`](super::super::exec::Executor::par_rows_scratch),
+//! `map_scratch`, `par_rows2_scratch`); results land in task order so
+//! numerics are thread-count invariant. Per-task gather buffers and every
+//! per-chunk/per-token temporary come from the worker's arena, so the hot
+//! loops are allocation-free in steady state.
 
-use crate::attention::backward::delta_bptt;
-use crate::attention::chunkwise::chunkwise_delta_alpha;
+use crate::attention::backward::delta_bptt_into;
+use crate::attention::chunkwise::chunkwise_delta_alpha_into;
 use crate::attention::gates::{alpha_efla, alpha_efla_grad, EPS_LAMBDA};
 use crate::attention::sequential::delta_step_alpha;
 use crate::tensor::{matmul_tn_into, Tensor};
@@ -59,14 +63,22 @@ pub struct MixerTape {
     o_norm: Vec<f32>,
 }
 
-/// Gather one (batch, head) pair's (L, Dh) rows out of a (B*L, inner) buffer.
-fn gather_head(src: &[f32], bi: usize, hh: usize, l: usize, inner: usize, dh: usize) -> Tensor {
-    let mut out = vec![0.0f32; l * dh];
+/// Gather one (batch, head) pair's (L, Dh) rows out of a (B*L, inner)
+/// buffer into a caller-provided (scratch) buffer of len `l * dh`.
+fn gather_head_into(
+    src: &[f32],
+    bi: usize,
+    hh: usize,
+    l: usize,
+    inner: usize,
+    dh: usize,
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(dst.len(), l * dh);
     for t in 0..l {
         let base = (bi * l + t) * inner + hh * dh;
-        out[t * dh..(t + 1) * dh].copy_from_slice(&src[base..base + dh]);
+        dst[t * dh..(t + 1) * dh].copy_from_slice(&src[base..base + dh]);
     }
-    Tensor::from_vec(&[l, dh], out)
 }
 
 /// Scatter-add the (L, Dh) head rows back into a (B*L, inner) buffer.
@@ -119,7 +131,9 @@ impl MixerLayer {
 
     /// One-token decode: `x` is the normalized (B, d) input; the rolling
     /// conv caches (B, K-1, inner) and the per-head state (B, H, Dh, Dh)
-    /// are updated in place. Returns the mixed (B, d) output.
+    /// are updated in place; the mixed output lands in the **zeroed**
+    /// `out` (B, d). Every temporary comes from the executor arenas, so
+    /// the per-token loop is allocation-free in steady state.
     pub fn decode_step(
         &self,
         ctx: &Ctx,
@@ -128,81 +142,105 @@ impl MixerLayer {
         cache_k: &mut [f32],
         cache_v: &mut [f32],
         s: &mut [f32],
-    ) -> Vec<f32> {
+        out: &mut [f32],
+    ) {
         let cfg = ctx.cfg;
         let (d, inner, h, dh) = (cfg.d_model, cfg.inner(), cfg.n_heads, cfg.head_dim);
         let b = ctx.b;
         let p = ctx.params;
 
-        let qt = ops::matmul(ctx.exec, x, p.tensor(self.wq).data(), b, d, inner);
-        let kt = ops::matmul(ctx.exec, x, p.tensor(self.wk).data(), b, d, inner);
-        let vt = ops::matmul(ctx.exec, x, p.tensor(self.wv).data(), b, d, inner);
-        let qc = ops::conv_step(&qt, cache_q, p.tensor(self.conv_q).data(), b, inner, CONV_K);
-        let kc = ops::conv_step(&kt, cache_k, p.tensor(self.conv_k).data(), b, inner, CONV_K);
-        let vc = ops::conv_step(&vt, cache_v, p.tensor(self.conv_v).data(), b, inner, CONV_K);
-        let q = ops::silu_fwd(&qc);
-        let k = ops::silu_fwd(&kc);
-        let v = ops::silu_fwd(&vc);
+        // Projections + rolling conv + SiLU, all through pooled buffers.
+        let mut qt = ctx.exec.take(b * inner);
+        ops::matmul_acc(ctx.exec, x, p.tensor(self.wq).data(), &mut qt, b, d, inner);
+        let mut kt = ctx.exec.take(b * inner);
+        ops::matmul_acc(ctx.exec, x, p.tensor(self.wk).data(), &mut kt, b, d, inner);
+        let mut vt = ctx.exec.take(b * inner);
+        ops::matmul_acc(ctx.exec, x, p.tensor(self.wv).data(), &mut vt, b, d, inner);
+        let mut qc = ctx.exec.take(b * inner);
+        ops::conv_step_into(&qt, cache_q, p.tensor(self.conv_q).data(), b, inner, CONV_K, &mut qc);
+        let mut kc = ctx.exec.take(b * inner);
+        ops::conv_step_into(&kt, cache_k, p.tensor(self.conv_k).data(), b, inner, CONV_K, &mut kc);
+        let mut vc = ctx.exec.take(b * inner);
+        ops::conv_step_into(&vt, cache_v, p.tensor(self.conv_v).data(), b, inner, CONV_K, &mut vc);
+        ctx.exec.put(qt);
+        ctx.exec.put(kt);
+        ctx.exec.put(vt);
+        ops::silu_inplace(&mut qc);
+        ops::silu_inplace(&mut kc);
+        ops::silu_inplace(&mut vc);
 
-        let (q_use, k_use) = if cfg.mixer == Mixer::DeltaNet {
-            (ops::l2norm_fwd(&q, dh).0, ops::l2norm_fwd(&k, dh).0)
-        } else {
-            (q.clone(), k.clone())
-        };
+        // DeltaNet normalizes q/k per head row.
+        let mut qn = Vec::new();
+        let mut kn = Vec::new();
+        if cfg.mixer == Mixer::DeltaNet {
+            qn = ctx.exec.take(b * inner);
+            ops::l2norm_into(&qc, dh, &mut qn);
+            kn = ctx.exec.take(b * inner);
+            ops::l2norm_into(&kc, dh, &mut kn);
+        }
+        let q_use: &[f32] = if cfg.mixer == Mixer::DeltaNet { &qn } else { &qc };
+        let k_use: &[f32] = if cfg.mixer == Mixer::DeltaNet { &kn } else { &kc };
 
-        let b_logits = ops::matmul(ctx.exec, x, p.tensor(self.w_beta).data(), b, d, h);
+        let mut b_logits = ctx.exec.take(b * h);
+        ops::matmul_acc(ctx.exec, x, p.tensor(self.w_beta).data(), &mut b_logits, b, d, h);
         let adecay = p.tensor(self.adecay).data();
 
-        // One state update per (batch, head); the slices are disjoint, so
-        // tasks return (o, S') and the scatter below writes them in order.
-        // Per-task work is ~3*dh^2 flops — only fan out when the total
-        // clears the spawn cost (results are identical either way).
+        // One state update per (batch, head): both the state (width dh*dh)
+        // and the head outputs (width dh) are contiguous per task in index
+        // order i = bi*h + hh, so par_rows2 updates them in place. Per-task
+        // work is ~3*dh^2 flops — only fan out when the total clears the
+        // spawn cost (results are identical either way).
         let tasks = b * h;
-        let fan_out = tasks * dh * dh >= 1 << 20;
-        let s_ref: &[f32] = s;
-        let step = |i: usize| {
-            let (bi, hh) = (i / h, i % h);
-            let bv = Self::beta_eff(cfg, adecay, b_logits[bi * h + hh], hh);
-            let base = bi * inner + hh * dh;
-            let krow = &k_use[base..base + dh];
-            let alpha = if cfg.mixer == Mixer::DeltaNet {
-                bv
-            } else {
-                let lam: f32 = krow.iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
-                alpha_efla(bv, lam)
-            };
-            let srange = (bi * h + hh) * dh * dh..(bi * h + hh + 1) * dh * dh;
-            let mut s_new = s_ref[srange].to_vec();
-            let mut o = vec![0.0f32; dh];
-            let mut stk = vec![0.0f32; dh];
-            delta_step_alpha(
-                &mut s_new,
-                &q_use[base..base + dh],
-                krow,
-                &v[base..base + dh],
-                alpha,
-                &mut o,
-                &mut stk,
-                dh,
-                dh,
-            );
-            (o, s_new)
+        let mut o_all = ctx.exec.take(b * inner);
+        let fan_out = tasks * dh * dh >= 1 << 20 && ctx.exec.threads() > 1;
+        let step = |r0: usize, r1: usize,
+                    s_chunk: &mut [f32],
+                    o_chunk: &mut [f32],
+                    sc: &mut crate::tensor::Scratch| {
+            let mut stk = sc.take(dh);
+            for i in r0..r1 {
+                let (bi, hh) = (i / h, i % h);
+                let bv = Self::beta_eff(cfg, adecay, b_logits[bi * h + hh], hh);
+                let base = bi * inner + hh * dh;
+                let krow = &k_use[base..base + dh];
+                let alpha = if cfg.mixer == Mixer::DeltaNet {
+                    bv
+                } else {
+                    let lam: f32 = krow.iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
+                    alpha_efla(bv, lam)
+                };
+                let li = i - r0;
+                delta_step_alpha(
+                    &mut s_chunk[li * dh * dh..(li + 1) * dh * dh],
+                    &q_use[base..base + dh],
+                    krow,
+                    &vc[base..base + dh],
+                    alpha,
+                    &mut o_chunk[li * dh..(li + 1) * dh],
+                    &mut stk,
+                    dh,
+                    dh,
+                );
+            }
+            sc.put(stk);
         };
-        let updates: Vec<(Vec<f32>, Vec<f32>)> = if fan_out {
-            ctx.exec.map(tasks, step)
+        if fan_out {
+            ctx.exec.par_rows2_scratch(tasks, s, &mut o_all, step);
         } else {
-            (0..tasks).map(step).collect()
-        };
-        let mut o_all = vec![0.0f32; b * inner];
-        for (i, (oh, s_new)) in updates.into_iter().enumerate() {
-            let (bi, hh) = (i / h, i % h);
-            let base = bi * inner + hh * dh;
-            o_all[base..base + dh].copy_from_slice(&oh);
-            s[(bi * h + hh) * dh * dh..(bi * h + hh + 1) * dh * dh].copy_from_slice(&s_new);
+            ctx.exec.scratch(|sc| step(0, tasks, s, &mut o_all, sc));
         }
+        ctx.exec.put(b_logits);
+        ctx.exec.put(qc);
+        ctx.exec.put(kc);
+        ctx.exec.put(vc);
+        ctx.exec.put(qn);
+        ctx.exec.put(kn);
 
-        let o_norm = self.norm_out.infer(ctx, &o_all);
-        ops::matmul(ctx.exec, &o_norm, p.tensor(self.wo).data(), b, inner, d)
+        let mut o_norm = ctx.exec.take(b * inner);
+        self.norm_out.infer_into(ctx, &o_all, &mut o_norm);
+        ctx.exec.put(o_all);
+        ops::matmul_acc(ctx.exec, &o_norm, p.tensor(self.wo).data(), out, b, inner, d);
+        ctx.exec.put(o_norm);
     }
 }
 
@@ -259,21 +297,41 @@ impl Layer for MixerLayer {
             (lambda, alpha)
         };
 
-        // Chunkwise delta attention, one task per (batch, head).
+        // Chunkwise delta attention: one (batch, head) pair per row of a
+        // (B*H, L*Dh) head-output buffer, gathers and per-chunk scratch
+        // from the worker arena.
         let q_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &qn } else { &q };
         let k_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &kn } else { &k };
-        let heads: Vec<Tensor> = ctx.exec.map(b * h, |i| {
-            let (bi, hh) = (i / h, i % h);
-            let qh = gather_head(q_src, bi, hh, l, inner, dh);
-            let kh = gather_head(k_src, bi, hh, l, inner, dh);
-            let vh = gather_head(&v, bi, hh, l, inner, dh);
-            let al: Vec<f32> = (0..l).map(|t| alpha[(bi * l + t) * h + hh]).collect();
-            let (oh, _s) = chunkwise_delta_alpha(&qh, &kh, &vh, &al, cfg.chunk);
-            oh
+        let width = l * dh;
+        let mut o_heads = vec![0.0f32; b * h * width];
+        ctx.exec.par_rows_scratch(b * h, &mut o_heads, |r0, r1, chunk_out, sc| {
+            for i in r0..r1 {
+                let (bi, hh) = (i / h, i % h);
+                let mut qh = sc.take(width);
+                gather_head_into(q_src, bi, hh, l, inner, dh, &mut qh);
+                let mut kh = sc.take(width);
+                gather_head_into(k_src, bi, hh, l, inner, dh, &mut kh);
+                let mut vh = sc.take(width);
+                gather_head_into(&v, bi, hh, l, inner, dh, &mut vh);
+                let mut al = sc.take(l);
+                for (t, a) in al.iter_mut().enumerate() {
+                    *a = alpha[(bi * l + t) * h + hh];
+                }
+                let mut s_fin = sc.take(dh * dh);
+                let oh = &mut chunk_out[(i - r0) * width..(i - r0 + 1) * width];
+                chunkwise_delta_alpha_into(
+                    &qh, &kh, &vh, &al, dh, dh, cfg.chunk, oh, &mut s_fin, sc,
+                );
+                sc.put(qh);
+                sc.put(kh);
+                sc.put(vh);
+                sc.put(al);
+                sc.put(s_fin);
+            }
         });
         let mut o_raw = vec![0.0f32; rows * inner];
-        for (i, oh) in heads.iter().enumerate() {
-            scatter_head_add(&mut o_raw, oh.data(), i / h, i % h, l, inner, dh);
+        for i in 0..b * h {
+            scatter_head_add(&mut o_raw, &o_heads[i * width..(i + 1) * width], i / h, i % h, l, inner, dh);
         }
 
         // Per-head output norm, merge, project.
@@ -321,31 +379,55 @@ impl Layer for MixerLayer {
 
         // Output projection + per-head norm.
         matmul_tn_into(&tape.o_norm, dy, grads[self.wo].data_mut(), rows, inner, d);
-        let mut do_norm = vec![0.0f32; rows * inner];
+        let mut do_norm = ctx.exec.take(rows * inner);
         ops::matmul_nt_acc(ctx.exec, dy, p.tensor(self.wo).data(), &mut do_norm, rows, d, inner);
         let do_raw = self.norm_out.backward(ctx, &tape.norm_out, &do_norm, grads);
+        ctx.exec.put(do_norm);
 
-        // BPTT through the delta recurrence, one task per (batch, head).
+        // BPTT through the delta recurrence, one task per (batch, head);
+        // gathers and the recomputed state trajectory live in the worker
+        // arena, only the per-head adjoints are returned.
         let q_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &tape.qn } else { &tape.q };
         let k_src: &[f32] = if cfg.mixer == Mixer::DeltaNet { &tape.kn } else { &tape.k };
-        let adjoints: Vec<(Tensor, Tensor, Tensor, Vec<f32>)> = ctx.exec.map(b * h, |i| {
-            let (bi, hh) = (i / h, i % h);
-            let qh = gather_head(q_src, bi, hh, l, inner, dh);
-            let kh = gather_head(k_src, bi, hh, l, inner, dh);
-            let vh = gather_head(&tape.v, bi, hh, l, inner, dh);
-            let doh = gather_head(&do_raw, bi, hh, l, inner, dh);
-            let al: Vec<f32> = (0..l).map(|t| tape.alpha[(bi * l + t) * h + hh]).collect();
-            delta_bptt(&qh, &kh, &vh, &al, &doh)
-        });
+        let width = l * dh;
+        let adjoints: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> =
+            ctx.exec.map_scratch(b * h, |i, sc| {
+                let (bi, hh) = (i / h, i % h);
+                let mut qh = sc.take(width);
+                gather_head_into(q_src, bi, hh, l, inner, dh, &mut qh);
+                let mut kh = sc.take(width);
+                gather_head_into(k_src, bi, hh, l, inner, dh, &mut kh);
+                let mut vh = sc.take(width);
+                gather_head_into(&tape.v, bi, hh, l, inner, dh, &mut vh);
+                let mut doh = sc.take(width);
+                gather_head_into(&do_raw, bi, hh, l, inner, dh, &mut doh);
+                let mut al = sc.take(l);
+                for (t, a) in al.iter_mut().enumerate() {
+                    *a = tape.alpha[(bi * l + t) * h + hh];
+                }
+                let mut dqh = vec![0.0f32; width];
+                let mut dkh = vec![0.0f32; width];
+                let mut dvh = vec![0.0f32; width];
+                let mut dal = vec![0.0f32; l];
+                delta_bptt_into(
+                    &qh, &kh, &vh, &al, &doh, dh, dh, &mut dqh, &mut dkh, &mut dvh, &mut dal, sc,
+                );
+                sc.put(qh);
+                sc.put(kh);
+                sc.put(vh);
+                sc.put(doh);
+                sc.put(al);
+                (dqh, dkh, dvh, dal)
+            });
         let mut dq_post = vec![0.0f32; rows * inner];
         let mut dk_post = vec![0.0f32; rows * inner];
         let mut dv_post = vec![0.0f32; rows * inner];
         let mut dalpha = vec![0.0f32; rows * h];
         for (i, (dqh, dkh, dvh, dal)) in adjoints.iter().enumerate() {
             let (bi, hh) = (i / h, i % h);
-            scatter_head_add(&mut dq_post, dqh.data(), bi, hh, l, inner, dh);
-            scatter_head_add(&mut dk_post, dkh.data(), bi, hh, l, inner, dh);
-            scatter_head_add(&mut dv_post, dvh.data(), bi, hh, l, inner, dh);
+            scatter_head_add(&mut dq_post, dqh, bi, hh, l, inner, dh);
+            scatter_head_add(&mut dk_post, dkh, bi, hh, l, inner, dh);
+            scatter_head_add(&mut dv_post, dvh, bi, hh, l, inner, dh);
             for t in 0..l {
                 dalpha[(bi * l + t) * h + hh] += dal[t];
             }
@@ -524,5 +606,22 @@ mod tests {
         let (y1, _) = layer.forward(&ctx1, &x);
         let (y4, _) = layer.forward(&ctx4, &x);
         assert_eq!(y1, y4, "mixer forward must be thread-count invariant");
+    }
+
+    #[test]
+    fn forward_reuses_executor_arena_without_numeric_drift() {
+        // Two identical forwards through the same executor (dirty arena on
+        // the second pass) must agree bit for bit.
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let params = ParamSet::init(&cfg, 10);
+        let (b, l) = (1usize, 12usize);
+        let mut rng = Rng::new(41);
+        let x = rng.normal_vec(b * l * cfg.d_model, 0.0, 1.0);
+        let exec = Executor::new(2);
+        let layer = MixerLayer::new(&params, &cfg, 0);
+        let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b, l };
+        let (y1, _) = layer.forward(&ctx, &x);
+        let (y2, _) = layer.forward(&ctx, &x);
+        assert_eq!(y1, y2, "dirty arena must not leak into results");
     }
 }

@@ -153,6 +153,8 @@ impl Layer for Block {
 
 /// One-token inference step of a block over rolling decode state
 /// (conv caches + per-head S), all updated in place. `ctx.l` must be 1.
+/// Every temporary comes from the executor arenas: the per-token loop is
+/// allocation-free in steady state.
 impl Block {
     pub fn decode_step(
         &self,
@@ -164,15 +166,21 @@ impl Block {
         s: &mut [f32],
     ) {
         debug_assert_eq!(ctx.l, 1);
-        let h_attn = self.norm_attn.infer(ctx, x);
-        let mixed = self.mixer.decode_step(ctx, &h_attn, cache_q, cache_k, cache_v, s);
-        for (xv, mv) in x.iter_mut().zip(mixed.iter()) {
+        let mut normed = ctx.exec.take(x.len());
+        let mut branch = ctx.exec.take(x.len());
+        self.norm_attn.infer_into(ctx, x, &mut normed);
+        self.mixer.decode_step(ctx, &normed, cache_q, cache_k, cache_v, s, &mut branch);
+        for (xv, mv) in x.iter_mut().zip(branch.iter()) {
             *xv += mv;
         }
-        let h_mlp = self.norm_mlp.infer(ctx, x);
-        let mlp_out = self.mlp.infer(ctx, &h_mlp);
-        for (xv, mv) in x.iter_mut().zip(mlp_out.iter()) {
+        // Both infer_into forms overwrite their target, so `normed` and
+        // `branch` are safely reused for the MLP half.
+        self.norm_mlp.infer_into(ctx, x, &mut normed);
+        self.mlp.infer_into(ctx, &normed, &mut branch);
+        for (xv, mv) in x.iter_mut().zip(branch.iter()) {
             *xv += mv;
         }
+        ctx.exec.put(normed);
+        ctx.exec.put(branch);
     }
 }

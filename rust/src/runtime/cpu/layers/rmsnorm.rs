@@ -28,6 +28,13 @@ impl RmsNorm {
         let gain = ctx.params.tensor(self.gain).data();
         ops::rms_norm_fwd(x, gain, self.width, ctx.cfg.norm_eps).0
     }
+
+    /// [`infer`](Self::infer) into a caller-provided buffer (overwritten)
+    /// — the allocation-free decode form.
+    pub fn infer_into(&self, ctx: &Ctx, x: &[f32], y: &mut [f32]) {
+        let gain = ctx.params.tensor(self.gain).data();
+        ops::rms_norm_into(x, gain, self.width, ctx.cfg.norm_eps, y);
+    }
 }
 
 impl Layer for RmsNorm {

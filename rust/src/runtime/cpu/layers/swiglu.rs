@@ -45,6 +45,27 @@ impl SwiGlu {
     pub fn infer(&self, ctx: &Ctx, x: &[f32]) -> Vec<f32> {
         self.project(ctx, x).0
     }
+
+    /// [`infer`](Self::infer) into a caller-provided buffer, all
+    /// intermediates drawn from the executor arena (the allocation-free
+    /// decode form). `out` is overwritten.
+    pub fn infer_into(&self, ctx: &Ctx, x: &[f32], out: &mut [f32]) {
+        let (d, f, rows) = (ctx.cfg.d_model, ctx.cfg.mlp_width(), ctx.rows());
+        debug_assert_eq!(out.len(), rows * d);
+        let mut gpre = ctx.exec.take(rows * f);
+        ops::matmul_acc(ctx.exec, x, ctx.params.tensor(self.w_gate).data(), &mut gpre, rows, d, f);
+        let mut up = ctx.exec.take(rows * f);
+        ops::matmul_acc(ctx.exec, x, ctx.params.tensor(self.w_up).data(), &mut up, rows, d, f);
+        // gu = silu(gpre) * up, in place in gpre (same expression as the
+        // taped forward, so infer_into stays bit-identical to forward).
+        for (g, u) in gpre.iter_mut().zip(up.iter()) {
+            *g = ops::silu(*g) * *u;
+        }
+        out.fill(0.0);
+        ops::matmul_acc(ctx.exec, &gpre, ctx.params.tensor(self.w_down).data(), out, rows, f, d);
+        ctx.exec.put(gpre);
+        ctx.exec.put(up);
+    }
 }
 
 impl Layer for SwiGlu {
@@ -169,5 +190,12 @@ mod tests {
         let x = rng.normal_vec(2 * cfg.d_model, 0.0, 1.0);
         let (y, _) = layer.forward(&ctx, &x);
         assert_eq!(y, layer.infer(&ctx, &x));
+        // The arena-backed decode form agrees bitwise, even over a dirty
+        // output buffer and a dirty arena (second call).
+        for _ in 0..2 {
+            let mut out = vec![7.0f32; y.len()];
+            layer.infer_into(&ctx, &x, &mut out);
+            assert_eq!(y, out);
+        }
     }
 }

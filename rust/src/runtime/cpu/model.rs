@@ -194,13 +194,21 @@ impl LmStack {
             }
         }
 
+        // The residual stream comes from the executor arena; only the
+        // returned logits tensor is allocated per token.
         let ctx = Ctx { cfg, params, exec, b, l: 1 };
-        let mut x = self.embed.forward(&ctx, tokens)?;
+        let mut x = exec.take(b * cfg.d_model);
+        if let Err(e) = self.embed.forward_into(&ctx, tokens, &mut x) {
+            exec.put(x);
+            return Err(e);
+        }
         for (blk, chunk) in self.blocks.iter().zip(state.chunks_mut(4)) {
             let [cq, ck, cv, s] = chunk else { unreachable!("state is chunked by 4") };
             blk.decode_step(&ctx, &mut x, cq, ck, cv, s);
         }
-        let logits = self.head.logits(&ctx, &x);
+        let mut logits = vec![0.0f32; b * cfg.vocab];
+        self.head.logits_into(&ctx, &x, &mut logits);
+        exec.put(x);
         Ok(Tensor::from_vec(&[b, cfg.vocab], logits))
     }
 }

@@ -9,6 +9,7 @@
 //! never pays thread-spawn overhead. Row splitting never changes a row's
 //! arithmetic, so results are bit-identical for any thread count.
 
+use crate::tensor::gemm;
 use crate::tensor::{matmul_into, matmul_nt_into};
 
 use super::exec::Executor;
@@ -51,6 +52,13 @@ pub fn silu_fwd(x: &[f32]) -> Vec<f32> {
     x.iter().map(|&v| silu(v)).collect()
 }
 
+/// In-place SiLU (decode hot path: no fresh buffer).
+pub fn silu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = silu(*v);
+    }
+}
+
 pub fn silu_bwd(x: &[f32], dy: &[f32]) -> Vec<f32> {
     x.iter().zip(dy.iter()).map(|(&v, &d)| d * silu_grad(v)).collect()
 }
@@ -76,6 +84,23 @@ pub fn rms_norm_fwd(x: &[f32], gain: &[f32], width: usize, eps: f32) -> (Vec<f32
         }
     }
     (y, inv)
+}
+
+/// Tape-free RMSNorm into a caller-provided buffer (decode path:
+/// per-row inverse RMS is not saved). Overwrites `y`.
+pub fn rms_norm_into(x: &[f32], gain: &[f32], width: usize, eps: f32, y: &mut [f32]) {
+    debug_assert_eq!(gain.len(), width);
+    debug_assert_eq!(y.len(), x.len());
+    let rows = x.len() / width;
+    for r in 0..rows {
+        let xr = &x[r * width..(r + 1) * width];
+        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / width as f32;
+        let iv = 1.0 / (ms + eps).sqrt();
+        let yr = &mut y[r * width..(r + 1) * width];
+        for j in 0..width {
+            yr[j] = xr[j] * iv * gain[j];
+        }
+    }
 }
 
 /// RMSNorm backward; accumulates into `dgain`, returns dx.
@@ -124,6 +149,22 @@ pub fn l2norm_fwd(x: &[f32], width: usize) -> (Vec<f32>, Vec<f32>) {
         }
     }
     (y, ss)
+}
+
+/// Tape-free row-wise L2 normalize into a caller-provided buffer (decode
+/// path: the per-row sum-square is not saved). Overwrites `y`.
+pub fn l2norm_into(x: &[f32], width: usize, y: &mut [f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let rows = x.len() / width;
+    for r in 0..rows {
+        let xr = &x[r * width..(r + 1) * width];
+        let s: f32 = xr.iter().map(|v| v * v).sum();
+        let iv = 1.0 / s.max(L2_EPS * L2_EPS).sqrt();
+        let yr = &mut y[r * width..(r + 1) * width];
+        for j in 0..width {
+            yr[j] = xr[j] * iv;
+        }
+    }
 }
 
 pub fn l2norm_bwd(x: &[f32], ss: &[f32], dy: &[f32], width: usize) -> Vec<f32> {
@@ -228,10 +269,26 @@ pub fn conv_step(
     c: usize,
     k: usize,
 ) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * c];
+    conv_step_into(pre, cache, w, b, c, k, &mut out);
+    out
+}
+
+/// [`conv_step`] into a caller-provided **zeroed** output buffer (the
+/// allocation-free decode form).
+pub fn conv_step_into(
+    pre: &[f32],
+    cache: &mut [f32],
+    w: &[f32],
+    b: usize,
+    c: usize,
+    k: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(pre.len(), b * c);
     debug_assert_eq!(cache.len(), b * (k - 1) * c);
     debug_assert_eq!(w.len(), k * c);
-    let mut out = vec![0.0f32; b * c];
+    debug_assert_eq!(out.len(), b * c);
     for bi in 0..b {
         let crow = &cache[bi * (k - 1) * c..(bi + 1) * (k - 1) * c];
         let prow = &pre[bi * c..(bi + 1) * c];
@@ -253,7 +310,6 @@ pub fn conv_step(
         crow.copy_within(c.., 0);
         crow[(k - 2) * c..].copy_from_slice(&pre[bi * c..(bi + 1) * c]);
     }
-    out
 }
 
 // ----------------------------------------------------------------------
@@ -262,17 +318,37 @@ pub fn conv_step(
 
 /// Fresh m x n product a @ b, row-parallel when large enough.
 pub fn matmul(exec: &Executor, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_acc(exec, a, b, &mut out, m, k, n);
+    out
+}
+
+/// out += a @ b, row-parallel when large enough (out: (m, n) accumulated
+/// in place — pass a zeroed buffer, e.g. from the executor arena, for a
+/// fresh product).
+pub fn matmul_acc(
+    exec: &Executor,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
+    debug_assert_eq!(out.len(), m * n);
     if m * k * n < PAR_MIN_FLOPS || exec.threads() == 1 {
-        matmul_into(a, b, &mut out, m, k, n);
+        matmul_into(a, b, out, m, k, n);
     } else {
-        exec.par_rows(m, &mut out, |r0, r1, chunk| {
-            matmul_into(&a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
+        // Pin every row chunk to the kernel class of the full shape:
+        // re-dispatching per chunk would change summation order with the
+        // thread count (chunks can fall under the packing cutoffs).
+        let class = gemm::matmul_class(m, k, n);
+        exec.par_rows(m, out, |r0, r1, chunk| {
+            gemm::matmul_into_class(class, &a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
         });
     }
-    out
 }
 
 /// out += a @ b^T, row-parallel when large enough
@@ -292,8 +368,10 @@ pub fn matmul_nt_acc(
     if m * k * n < PAR_MIN_FLOPS || exec.threads() == 1 {
         matmul_nt_into(a, b, out, m, k, n);
     } else {
+        // Same full-shape class pinning as matmul_acc (see there).
+        let class = gemm::matmul_nt_class(m, k, n);
         exec.par_rows(m, out, |r0, r1, chunk| {
-            matmul_nt_into(&a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
+            gemm::matmul_nt_into_class(class, &a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
         });
     }
 }
@@ -424,6 +502,82 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        let mut rng = Rng::new(12);
+        let width = 6;
+        let x = rng.normal_vec(4 * width, 0.0, 1.0);
+        let gain = rng.normal_vec(width, 1.0, 0.2);
+
+        let (y_ref, _) = rms_norm_fwd(&x, &gain, width, 1e-6);
+        let mut y = vec![7.0f32; x.len()]; // dirty: must be overwritten
+        rms_norm_into(&x, &gain, width, 1e-6, &mut y);
+        assert_eq!(y, y_ref);
+
+        let (l2_ref, _) = l2norm_fwd(&x, width);
+        let mut l2 = vec![7.0f32; x.len()];
+        l2norm_into(&x, width, &mut l2);
+        assert_eq!(l2, l2_ref);
+
+        let z = rng.normal_vec(3 * width, 0.0, 1.0);
+        let mut zi = z.clone();
+        silu_inplace(&mut zi);
+        assert_eq!(zi, silu_fwd(&z));
+    }
+
+    #[test]
+    fn conv_step_into_matches_conv_step() {
+        let mut rng = Rng::new(13);
+        let (b, c, k) = (2, 5, 4);
+        let wk = rng.normal_vec(k * c, 0.0, 0.5);
+        let mut cache1 = rng.normal_vec(b * (k - 1) * c, 0.0, 1.0);
+        let mut cache2 = cache1.clone();
+        let pre = rng.normal_vec(b * c, 0.0, 1.0);
+        let out_ref = conv_step(&pre, &mut cache1, &wk, b, c, k);
+        let mut out = vec![0.0f32; b * c];
+        conv_step_into(&pre, &mut cache2, &wk, b, c, k, &mut out);
+        assert_eq!(out, out_ref);
+        assert_eq!(cache1, cache2);
+    }
+
+    #[test]
+    fn matmul_acc_accumulates_and_matches_matmul() {
+        let mut rng = Rng::new(14);
+        let (m, k, n) = (5, 8, 7);
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let exec = Executor::serial();
+        let fresh = matmul(&exec, &a, &b, m, k, n);
+        let base: Vec<f32> = (0..m * n).map(|i| i as f32 * 0.1).collect();
+        let mut acc = base.clone();
+        matmul_acc(&exec, &a, &b, &mut acc, m, k, n);
+        for i in 0..m * n {
+            assert!((acc[i] - (base[i] + fresh[i])).abs() < 1e-5, "i={i}");
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_bit_identical_even_with_tiny_row_chunks() {
+        // Regression: 48 workers split m=128 into 2-3-row chunks, which
+        // fall under the packed-kernel cutoffs. The kernel class must be
+        // resolved from the full shape, not per chunk, or the summation
+        // order (and hence the bits) would change with the thread count.
+        let mut rng = Rng::new(15);
+        let (m, k, n) = (128, 64, 64); // 512k flops: clears PAR_MIN_FLOPS
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let serial = matmul(&Executor::serial(), &a, &b, m, k, n);
+        let par = matmul(&Executor::new(48), &a, &b, m, k, n);
+        assert_eq!(serial, par);
+
+        let bt = rng.normal_vec(n * k, 0.0, 1.0);
+        let mut out1 = vec![0.0f32; m * n];
+        matmul_nt_acc(&Executor::serial(), &a, &bt, &mut out1, m, k, n);
+        let mut out48 = vec![0.0f32; m * n];
+        matmul_nt_acc(&Executor::new(48), &a, &bt, &mut out48, m, k, n);
+        assert_eq!(out1, out48);
     }
 
     #[test]

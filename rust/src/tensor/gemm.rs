@@ -1,0 +1,1012 @@
+//! Register-blocked GEMM microkernel family with runtime SIMD dispatch.
+//!
+//! Every matmul in the system — the chunkwise attention kernel, the BPTT
+//! backward, and all CPU model layers — funnels through the five raw
+//! primitives exported here:
+//!
+//! * [`matmul_into`]    — `C += A  B`    (A: m×k, B: k×n, C: m×n)
+//! * [`matmul_nt_into`] — `C += A  Bᵀ`   (B stored n×k row-major)
+//! * [`matmul_tn_into`] — `C += Aᵀ B`    (A stored m×k row-major, C: k×n)
+//! * [`dot`] / [`axpy`] — the vector building blocks
+//!
+//! Dispatch tiers, resolved once per process and cached:
+//!
+//! 1. **AVX2+FMA** (x86-64 hosts where `is_x86_feature_detected!` confirms
+//!    both): a packed, register-blocked [`avx2::MR`]×[`avx2::NR`]
+//!    microkernel (6 broadcast rows × 2 ymm columns = 12 in-register
+//!    accumulators) over BLIS-style `MC`/`KC`/`NC` cache blocking, with
+//!    thread-local packing buffers so steady-state calls allocate nothing.
+//!    Shapes too small to amortize packing use unpacked AVX2 `dot`/`axpy`
+//!    loops instead.
+//! 2. **Scalar** (everything else, or `EFLA_FORCE_SCALAR=1`): the portable
+//!    cache-blocked loops in [`scalar`], written branch-free in the inner
+//!    loop so LLVM can autovectorize with baseline features.
+//!
+//! The two tiers agree to float tolerance (FMA contracts one rounding per
+//! multiply-add and the packed kernel re-associates the k-sum), which is
+//! pinned by the parity tests here and in `tests/simd_parity.rs`. Within a
+//! tier, results are bit-identical regardless of thread count — dispatch
+//! never consults the executor.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Env override: set to any non-empty value other than `0` to force the
+/// scalar tier (testing/CI; read once, on first dispatch).
+pub const ENV_FORCE_SCALAR: &str = "EFLA_FORCE_SCALAR";
+
+/// Which kernel tier the dispatcher resolved to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Packed AVX2+FMA microkernel path.
+    Avx2Fma,
+    /// Portable blocked-loop fallback.
+    Scalar,
+}
+
+const K_UNRESOLVED: u8 = 0;
+const K_SCALAR: u8 = 1;
+const K_AVX2: u8 = 2;
+
+static ACTIVE: AtomicU8 = AtomicU8::new(K_UNRESOLVED);
+
+fn detect() -> u8 {
+    if std::env::var(ENV_FORCE_SCALAR).map_or(false, |v| !v.is_empty() && v != "0") {
+        return K_SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return K_AVX2;
+        }
+    }
+    K_SCALAR
+}
+
+/// The kernel tier dispatched on this host (feature detection and the
+/// [`ENV_FORCE_SCALAR`] override are resolved on first use and cached).
+pub fn active_kernel() -> Kernel {
+    match ACTIVE.load(Ordering::Relaxed) {
+        K_SCALAR => Kernel::Scalar,
+        K_AVX2 => Kernel::Avx2Fma,
+        _ => {
+            let k = detect();
+            ACTIVE.store(k, Ordering::Relaxed);
+            if k == K_AVX2 {
+                Kernel::Avx2Fma
+            } else {
+                Kernel::Scalar
+            }
+        }
+    }
+}
+
+/// Test/bench hook: pin the dispatcher to one tier (`None` re-detects on
+/// next use). Requesting [`Kernel::Avx2Fma`] on a host without the
+/// features silently resolves to scalar — forcing an unsupported tier
+/// would be UB. Returns the tier now active. Global state: callers that
+/// flip this concurrently with bit-exactness assertions race themselves,
+/// so keep it to single-test binaries and bench `main`s.
+pub fn force_kernel(k: Option<Kernel>) -> Kernel {
+    let v = match k {
+        None => K_UNRESOLVED,
+        Some(Kernel::Scalar) => K_SCALAR,
+        Some(Kernel::Avx2Fma) => {
+            if detect() == K_AVX2 {
+                K_AVX2
+            } else {
+                K_SCALAR
+            }
+        }
+    };
+    ACTIVE.store(v, Ordering::Relaxed);
+    active_kernel()
+}
+
+// Only consulted from the x86-64 dispatch blocks below.
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+#[inline]
+fn simd_active() -> bool {
+    active_kernel() == Kernel::Avx2Fma
+}
+
+/// Below this flop count (2·m·k·n / 2) the packed kernel's packing passes
+/// and tile traffic dominate; small shapes go through the unpacked paths.
+#[cfg(target_arch = "x86_64")]
+const PACKED_MIN_FLOPS: usize = 1 << 14;
+
+#[cfg(target_arch = "x86_64")]
+fn use_packed(m: usize, k: usize, n: usize) -> bool {
+    m >= 4 && n >= 8 && k >= 8 && m * k * n >= PACKED_MIN_FLOPS
+}
+
+// ----------------------------------------------------------------------
+// Dispatched entry points
+// ----------------------------------------------------------------------
+
+/// out[m,n] += a[m,k] @ b[k,n] (out must be zeroed for a fresh product).
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_active() {
+            if use_packed(m, k, n) {
+                unsafe { avx2::matmul_packed(a, b, out, m, k, n) };
+                return;
+            }
+            if n >= 8 {
+                unsafe { avx2::matmul_small(a, b, out, m, k, n) };
+                return;
+            }
+        }
+    }
+    scalar::matmul_into(a, b, out, m, k, n);
+}
+
+/// out[m,n] += a[m,k] @ b[n,k]^T (transposed rhs, both row-major).
+pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_active() {
+            if use_packed(m, k, n) {
+                unsafe { avx2::matmul_nt_packed(a, b, out, m, k, n) };
+                return;
+            }
+            if k >= 8 {
+                unsafe { avx2::matmul_nt_small(a, b, out, m, k, n) };
+                return;
+            }
+        }
+    }
+    scalar::matmul_nt_into(a, b, out, m, k, n);
+}
+
+/// out[k,n] += a[m,k]^T @ b[m,n] (transposed lhs — the weight-gradient
+/// shape dW = Xᵀ dY).
+pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    #[cfg(target_arch = "x86_64")]
+    {
+        // Packed dims: the product is (k × m)·(m × n), so m is the depth.
+        if simd_active() {
+            if use_packed(k, m, n) {
+                unsafe { avx2::matmul_tn_packed(a, b, out, m, k, n) };
+                return;
+            }
+            if n >= 8 {
+                unsafe { avx2::matmul_tn_small(a, b, out, m, k, n) };
+                return;
+            }
+        }
+    }
+    scalar::matmul_tn_into(a, b, out, m, k, n);
+}
+
+/// Kernel class resolved once per **full** matmul shape. Row-splitting
+/// callers (the executor wrappers) must run every row chunk through the
+/// class of the full shape: within a class, each output row's summation
+/// order is independent of how many rows share the call, so results stay
+/// bit-identical at any thread count — whereas re-dispatching per chunk
+/// would flip classes when the split crosses the packing cutoffs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatmulClass {
+    /// Packed AVX2 microkernel path.
+    Packed,
+    /// Unpacked AVX2 dot/axpy path.
+    Small,
+    /// Portable scalar path.
+    Scalar,
+}
+
+/// The class [`matmul_into`] uses for this shape.
+pub fn matmul_class(m: usize, k: usize, n: usize) -> MatmulClass {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_active() {
+            if use_packed(m, k, n) {
+                return MatmulClass::Packed;
+            }
+            if n >= 8 {
+                return MatmulClass::Small;
+            }
+        }
+    }
+    let _ = (m, k, n);
+    MatmulClass::Scalar
+}
+
+/// [`matmul_into`] pinned to a pre-resolved class (see [`matmul_class`]).
+/// Every class is correct for any shape; the pin only fixes rounding.
+pub fn matmul_into_class(
+    class: MatmulClass,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_active() {
+            match class {
+                MatmulClass::Packed => {
+                    unsafe { avx2::matmul_packed(a, b, out, m, k, n) };
+                    return;
+                }
+                MatmulClass::Small => {
+                    unsafe { avx2::matmul_small(a, b, out, m, k, n) };
+                    return;
+                }
+                MatmulClass::Scalar => {}
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = class;
+    scalar::matmul_into(a, b, out, m, k, n);
+}
+
+/// The class [`matmul_nt_into`] uses for this shape.
+pub fn matmul_nt_class(m: usize, k: usize, n: usize) -> MatmulClass {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_active() {
+            if use_packed(m, k, n) {
+                return MatmulClass::Packed;
+            }
+            if k >= 8 {
+                return MatmulClass::Small;
+            }
+        }
+    }
+    let _ = (m, k, n);
+    MatmulClass::Scalar
+}
+
+/// [`matmul_nt_into`] pinned to a pre-resolved class (see
+/// [`matmul_nt_class`]).
+pub fn matmul_nt_into_class(
+    class: MatmulClass,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_active() {
+            match class {
+                MatmulClass::Packed => {
+                    unsafe { avx2::matmul_nt_packed(a, b, out, m, k, n) };
+                    return;
+                }
+                MatmulClass::Small => {
+                    unsafe { avx2::matmul_nt_small(a, b, out, m, k, n) };
+                    return;
+                }
+                MatmulClass::Scalar => {}
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = class;
+    scalar::matmul_nt_into(a, b, out, m, k, n);
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if a.len() >= 8 && simd_active() {
+            return unsafe { avx2::dot(a, b) };
+        }
+    }
+    scalar::dot(a, b)
+}
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if x.len() >= 8 && simd_active() {
+            unsafe { avx2::axpy(alpha, x, y) };
+            return;
+        }
+    }
+    scalar::axpy(alpha, x, y);
+}
+
+// ----------------------------------------------------------------------
+// Scalar tier
+// ----------------------------------------------------------------------
+
+/// Portable reference kernels: cache-blocked loops with branch-free inner
+/// bodies (no zero-skip — the branch defeats autovectorization and makes
+/// throughput depend on input sparsity). These are also the parity anchor
+/// the SIMD tier is tested against.
+pub mod scalar {
+    /// out[m,n] += a[m,k] @ b[k,n].
+    pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        const BK: usize = 64;
+        for k0 in (0..k).step_by(BK) {
+            let kend = (k0 + BK).min(k);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in k0..kend {
+                    let av = arow[kk];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// out[m,n] += a[m,k] @ b[n,k]^T.
+    pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(out.len(), m * n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += dot(arow, &b[j * k..(j + 1) * k]);
+            }
+        }
+    }
+
+    /// out[k,n] += a[m,k]^T @ b[m,n]: rank-1 row updates so the inner loop
+    /// is a fused axpy over contiguous slices.
+    pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert_eq!(out.len(), k * n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                axpy(av, brow, &mut out[kk * n..(kk + 1) * n]);
+            }
+        }
+    }
+
+    /// Dot product with 4-way unrolling.
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0.0f32; 4];
+        let chunks = a.len() / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            acc[0] += a[i] * b[i];
+            acc[1] += a[i + 1] * b[i + 1];
+            acc[2] += a[i + 2] * b[i + 2];
+            acc[3] += a[i + 3] * b[i + 3];
+        }
+        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+        for i in chunks * 4..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// y += alpha * x
+    pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x.iter()) {
+            *yi += alpha * xi;
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// AVX2+FMA tier
+// ----------------------------------------------------------------------
+
+/// AVX2+FMA kernels. Every function is `unsafe`: the caller must have
+/// confirmed `avx2` and `fma` via runtime detection (the dispatchers
+/// above do; tests must guard explicitly).
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use std::arch::x86_64::*;
+    use std::cell::RefCell;
+
+    /// Microkernel rows (broadcast lanes of A).
+    pub const MR: usize = 6;
+    /// Microkernel columns (two 8-lane ymm vectors of B).
+    pub const NR: usize = 16;
+    // Cache blocking in f32 counts: the packed B block (KC×NC = 256 KiB)
+    // targets L2, each packed A block (MC×KC = 96 KiB) streams through L1
+    // in MR-row strips.
+    const MC: usize = 96; // multiple of MR
+    const KC: usize = 256;
+    const NC: usize = 256; // multiple of NR
+
+    thread_local! {
+        /// Per-thread packing buffers (A panel, B panel): steady-state
+        /// packed GEMM calls allocate nothing.
+        static PACK: RefCell<(Vec<f32>, Vec<f32>)> = const { RefCell::new((Vec::new(), Vec::new())) };
+    }
+
+    /// # Safety
+    /// Requires avx2+fma (runtime-detected).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum8(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Dot product, two 8-lane FMA accumulators.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (runtime-detected); `a.len() == b.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 8)),
+                _mm256_loadu_ps(bp.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum8(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// y += alpha * x, 8 lanes per FMA.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (runtime-detected); `x.len() == y.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let av = _mm256_set1_ps(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let yv = _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(yp.add(i), yv);
+            i += 8;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    // ---------------- unpacked small-shape paths ----------------
+
+    /// ikj loop with vector axpy rows (shapes below the packing cutoff).
+    ///
+    /// # Safety
+    /// Requires avx2+fma (runtime-detected) and the `matmul_into` length
+    /// contract.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_small(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                axpy(av, &b[kk * n..(kk + 1) * n], orow);
+            }
+        }
+    }
+
+    /// Row-dot loop (shapes below the packing cutoff).
+    ///
+    /// # Safety
+    /// Requires avx2+fma (runtime-detected) and the `matmul_nt_into`
+    /// length contract.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_nt_small(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += dot(arow, &b[j * k..(j + 1) * k]);
+            }
+        }
+    }
+
+    /// Rank-1 axpy loop (shapes below the packing cutoff).
+    ///
+    /// # Safety
+    /// Requires avx2+fma (runtime-detected) and the `matmul_tn_into`
+    /// length contract.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_tn_small(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                axpy(av, brow, &mut out[kk * n..(kk + 1) * n]);
+            }
+        }
+    }
+
+    // ---------------- packed microkernel path ----------------
+
+    /// MR×NR register tile: `kc` rank-1 updates from the packed panels.
+    /// `apack` is column-major MR-wide (`apack[p*MR + r]`), `bpack`
+    /// row-major NR-wide (`bpack[p*NR + c]`). 12 ymm accumulators + 2
+    /// B loads + 1 broadcast = 15 of the 16 ymm registers.
+    ///
+    /// # Safety
+    /// Requires avx2+fma; `apack.len() >= kc*MR`, `bpack.len() >= kc*NR`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn microkernel(kc: usize, apack: &[f32], bpack: &[f32], tile: &mut [f32; MR * NR]) {
+        debug_assert!(apack.len() >= kc * MR);
+        debug_assert!(bpack.len() >= kc * NR);
+        let mut ap = apack.as_ptr();
+        let mut bp = bpack.as_ptr();
+        let mut acc = [_mm256_setzero_ps(); 2 * MR];
+        for _ in 0..kc {
+            let b0 = _mm256_loadu_ps(bp);
+            let b1 = _mm256_loadu_ps(bp.add(8));
+            let a0 = _mm256_set1_ps(*ap);
+            acc[0] = _mm256_fmadd_ps(a0, b0, acc[0]);
+            acc[1] = _mm256_fmadd_ps(a0, b1, acc[1]);
+            let a1 = _mm256_set1_ps(*ap.add(1));
+            acc[2] = _mm256_fmadd_ps(a1, b0, acc[2]);
+            acc[3] = _mm256_fmadd_ps(a1, b1, acc[3]);
+            let a2 = _mm256_set1_ps(*ap.add(2));
+            acc[4] = _mm256_fmadd_ps(a2, b0, acc[4]);
+            acc[5] = _mm256_fmadd_ps(a2, b1, acc[5]);
+            let a3 = _mm256_set1_ps(*ap.add(3));
+            acc[6] = _mm256_fmadd_ps(a3, b0, acc[6]);
+            acc[7] = _mm256_fmadd_ps(a3, b1, acc[7]);
+            let a4 = _mm256_set1_ps(*ap.add(4));
+            acc[8] = _mm256_fmadd_ps(a4, b0, acc[8]);
+            acc[9] = _mm256_fmadd_ps(a4, b1, acc[9]);
+            let a5 = _mm256_set1_ps(*ap.add(5));
+            acc[10] = _mm256_fmadd_ps(a5, b0, acc[10]);
+            acc[11] = _mm256_fmadd_ps(a5, b1, acc[11]);
+            ap = ap.add(MR);
+            bp = bp.add(NR);
+        }
+        let tp = tile.as_mut_ptr();
+        for r in 0..MR {
+            _mm256_storeu_ps(tp.add(r * NR), acc[2 * r]);
+            _mm256_storeu_ps(tp.add(r * NR + 8), acc[2 * r + 1]);
+        }
+    }
+
+    /// Pack an `mr`×`kc` strip of op(A) into a column-major MR-wide panel,
+    /// zero-padded to MR rows. `at(r, p)` indexes op(A) in absolute
+    /// operand coordinates.
+    fn pack_a(dst: &mut [f32], mr: usize, kc: usize, at: impl Fn(usize, usize) -> f32) {
+        for p in 0..kc {
+            let drow = &mut dst[p * MR..(p + 1) * MR];
+            for (r, d) in drow.iter_mut().take(mr).enumerate() {
+                *d = at(r, p);
+            }
+            drow[mr..].fill(0.0);
+        }
+    }
+
+    /// Pack a `kc`×`nr` strip of op(B) into a row-major NR-wide panel,
+    /// zero-padded to NR columns. `bt(p, c)` indexes op(B) absolutely.
+    fn pack_b(dst: &mut [f32], nr: usize, kc: usize, bt: impl Fn(usize, usize) -> f32) {
+        for p in 0..kc {
+            let drow = &mut dst[p * NR..(p + 1) * NR];
+            for (c, d) in drow.iter_mut().take(nr).enumerate() {
+                *d = bt(p, c);
+            }
+            drow[nr..].fill(0.0);
+        }
+    }
+
+    /// Packed driver: out(m×n) += opA(m×k) · opB(k×n), with `at(i, p)` /
+    /// `bt(p, j)` indexing the logical operands. Plain (non-annotated)
+    /// generic fn — only the concrete [`microkernel`] carries
+    /// `#[target_feature]`; packing and the tile scatter-add are scalar.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (for the microkernel calls); `out.len() == m*n`;
+    /// `at`/`bt` must be in-bounds for the full logical index ranges.
+    unsafe fn gemm_packed(
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        apack: &mut Vec<f32>,
+        bpack: &mut Vec<f32>,
+        at: impl Fn(usize, usize) -> f32 + Copy,
+        bt: impl Fn(usize, usize) -> f32 + Copy,
+    ) {
+        debug_assert_eq!(out.len(), m * n);
+        apack.resize(MC * KC, 0.0);
+        bpack.resize(KC * NC, 0.0);
+        let mut tile = [0.0f32; MR * NR];
+        let mut p0 = 0usize;
+        while p0 < k {
+            let kc = KC.min(k - p0);
+            let mut j0 = 0usize;
+            while j0 < n {
+                let nc = NC.min(n - j0);
+                let npan = nc.div_ceil(NR);
+                for jp in 0..npan {
+                    let j = j0 + jp * NR;
+                    let nr = NR.min(n - j);
+                    pack_b(&mut bpack[jp * kc * NR..(jp + 1) * kc * NR], nr, kc, |p, c| {
+                        bt(p0 + p, j + c)
+                    });
+                }
+                let mut i0 = 0usize;
+                while i0 < m {
+                    let mc = MC.min(m - i0);
+                    let mpan = mc.div_ceil(MR);
+                    for ip in 0..mpan {
+                        let i = i0 + ip * MR;
+                        let mr = MR.min(m - i);
+                        pack_a(&mut apack[ip * kc * MR..(ip + 1) * kc * MR], mr, kc, |r, p| {
+                            at(i + r, p0 + p)
+                        });
+                    }
+                    for jp in 0..npan {
+                        let j = j0 + jp * NR;
+                        let nr = NR.min(n - j);
+                        let bpan = &bpack[jp * kc * NR..(jp + 1) * kc * NR];
+                        for ip in 0..mpan {
+                            let i = i0 + ip * MR;
+                            let mr = MR.min(m - i);
+                            microkernel(
+                                kc,
+                                &apack[ip * kc * MR..(ip + 1) * kc * MR],
+                                bpan,
+                                &mut tile,
+                            );
+                            for r in 0..mr {
+                                let orow = &mut out[(i + r) * n + j..(i + r) * n + j + nr];
+                                for (o, &t) in orow.iter_mut().zip(tile[r * NR..].iter()) {
+                                    *o += t;
+                                }
+                            }
+                        }
+                    }
+                    i0 += MC;
+                }
+                j0 += NC;
+            }
+            p0 += KC;
+        }
+    }
+
+    /// Packed `out += a @ b`.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (runtime-detected) and the `matmul_into` length
+    /// contract.
+    pub unsafe fn matmul_packed(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        PACK.with(|cell| {
+            let (apack, bpack) = &mut *cell.borrow_mut();
+            // SAFETY: caller guarantees avx2+fma; closures index within the
+            // asserted operand lengths.
+            unsafe {
+                gemm_packed(out, m, k, n, apack, bpack, |i, p| a[i * k + p], |p, j| b[p * n + j]);
+            }
+        });
+    }
+
+    /// Packed `out += a @ b^T` (b stored n×k row-major).
+    ///
+    /// # Safety
+    /// Requires avx2+fma (runtime-detected) and the `matmul_nt_into`
+    /// length contract.
+    pub unsafe fn matmul_nt_packed(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        PACK.with(|cell| {
+            let (apack, bpack) = &mut *cell.borrow_mut();
+            // SAFETY: caller guarantees avx2+fma; closures index within the
+            // asserted operand lengths.
+            unsafe {
+                gemm_packed(out, m, k, n, apack, bpack, |i, p| a[i * k + p], |p, j| b[j * k + p]);
+            }
+        });
+    }
+
+    /// Packed `out += a^T @ b` (a stored m×k row-major, out k×n): the
+    /// logical product is (k×m)·(m×n), so the packed depth is m.
+    ///
+    /// # Safety
+    /// Requires avx2+fma (runtime-detected) and the `matmul_tn_into`
+    /// length contract.
+    pub unsafe fn matmul_tn_packed(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        PACK.with(|cell| {
+            let (apack, bpack) = &mut *cell.borrow_mut();
+            // SAFETY: caller guarantees avx2+fma; closures index within the
+            // asserted operand lengths.
+            unsafe {
+                gemm_packed(out, k, m, n, apack, bpack, |i, p| a[p * k + i], |p, j| b[p * n + j]);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    /// Rectangular sizes chosen to hit full tiles, remainder rows/cols
+    /// (m % 6, n % 16), sub-cutoff small shapes, and >KC depths.
+    const SIZES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 7, 5),
+        (3, 5, 7),
+        (6, 16, 16),
+        (7, 17, 33),
+        (12, 64, 48),
+        (13, 300, 31),
+        (64, 64, 64),
+        (61, 67, 129),
+        (128, 32, 256),
+    ];
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        // Small sigma keeps the reassociation error of deep k-sums well
+        // under the 1e-5 parity tolerance.
+        rng.normal_vec(n, 0.0, 0.05)
+    }
+
+    #[test]
+    fn dispatched_matmul_matches_scalar_all_shapes() {
+        let mut rng = Rng::new(101);
+        for &(m, k, n) in SIZES {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut c_ref = vec![0.0f32; m * n];
+            scalar::matmul_into(&a, &b, &mut c_ref, m, k, n);
+            let mut c = vec![0.0f32; m * n];
+            matmul_into(&a, &b, &mut c, m, k, n);
+            assert!(
+                max_abs_diff(&c_ref, &c) <= 1e-5,
+                "nn {m}x{k}x{n}: diff {}",
+                max_abs_diff(&c_ref, &c)
+            );
+        }
+    }
+
+    #[test]
+    fn dispatched_matmul_nt_matches_scalar_all_shapes() {
+        let mut rng = Rng::new(102);
+        for &(m, k, n) in SIZES {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, n * k);
+            let mut c_ref = vec![0.0f32; m * n];
+            scalar::matmul_nt_into(&a, &b, &mut c_ref, m, k, n);
+            let mut c = vec![0.0f32; m * n];
+            matmul_nt_into(&a, &b, &mut c, m, k, n);
+            assert!(
+                max_abs_diff(&c_ref, &c) <= 1e-5,
+                "nt {m}x{k}x{n}: diff {}",
+                max_abs_diff(&c_ref, &c)
+            );
+        }
+    }
+
+    #[test]
+    fn dispatched_matmul_tn_matches_scalar_all_shapes() {
+        let mut rng = Rng::new(103);
+        for &(m, k, n) in SIZES {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, m * n);
+            let mut c_ref = vec![0.0f32; k * n];
+            scalar::matmul_tn_into(&a, &b, &mut c_ref, m, k, n);
+            let mut c = vec![0.0f32; k * n];
+            matmul_tn_into(&a, &b, &mut c, m, k, n);
+            assert!(
+                max_abs_diff(&c_ref, &c) <= 1e-5,
+                "tn {m}x{k}x{n}: diff {}",
+                max_abs_diff(&c_ref, &c)
+            );
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn packed_avx2_matches_scalar_even_below_cutoff() {
+        if active_kernel() != Kernel::Avx2Fma {
+            return; // no AVX2 on this host (or force-scalar env): nothing to pin
+        }
+        let mut rng = Rng::new(104);
+        for &(m, k, n) in SIZES {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut c_ref = vec![0.0f32; m * n];
+            scalar::matmul_into(&a, &b, &mut c_ref, m, k, n);
+            let mut c = vec![0.0f32; m * n];
+            unsafe { avx2::matmul_packed(&a, &b, &mut c, m, k, n) };
+            assert!(max_abs_diff(&c_ref, &c) <= 1e-5, "packed nn {m}x{k}x{n}");
+
+            let bt = rand_vec(&mut rng, n * k);
+            let mut c_ref = vec![0.0f32; m * n];
+            scalar::matmul_nt_into(&a, &bt, &mut c_ref, m, k, n);
+            let mut c = vec![0.0f32; m * n];
+            unsafe { avx2::matmul_nt_packed(&a, &bt, &mut c, m, k, n) };
+            assert!(max_abs_diff(&c_ref, &c) <= 1e-5, "packed nt {m}x{k}x{n}");
+
+            let bb = rand_vec(&mut rng, m * n);
+            let mut c_ref = vec![0.0f32; k * n];
+            scalar::matmul_tn_into(&a, &bb, &mut c_ref, m, k, n);
+            let mut c = vec![0.0f32; k * n];
+            unsafe { avx2::matmul_tn_packed(&a, &bb, &mut c, m, k, n) };
+            assert!(max_abs_diff(&c_ref, &c) <= 1e-5, "packed tn {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn accumulate_semantics_preserved() {
+        // All entry points are +=: a pre-filled out must keep its base.
+        let mut rng = Rng::new(105);
+        let (m, k, n) = (9, 11, 19);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let base: Vec<f32> = (0..m * n).map(|i| i as f32 * 0.01).collect();
+        let mut c_ref = base.clone();
+        scalar::matmul_into(&a, &b, &mut c_ref, m, k, n);
+        let mut c = base;
+        matmul_into(&a, &b, &mut c, m, k, n);
+        assert!(max_abs_diff(&c_ref, &c) <= 1e-5);
+    }
+
+    #[test]
+    fn dot_and_axpy_match_scalar_with_remainders() {
+        let mut rng = Rng::new(106);
+        for len in [1usize, 3, 7, 8, 9, 15, 16, 17, 31, 40, 127, 256] {
+            let a = rand_vec(&mut rng, len);
+            let b = rand_vec(&mut rng, len);
+            let d_ref = scalar::dot(&a, &b);
+            let d = dot(&a, &b);
+            assert!((d_ref - d).abs() <= 1e-5, "dot len {len}: {d_ref} vs {d}");
+
+            let mut y_ref = b.clone();
+            scalar::axpy(0.37, &a, &mut y_ref);
+            let mut y = b.clone();
+            axpy(0.37, &a, &mut y);
+            assert!(max_abs_diff(&y_ref, &y) <= 1e-5, "axpy len {len}");
+        }
+    }
+
+    #[test]
+    fn dot_unroll_tail() {
+        let a: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..7).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = (0..7).map(|i| (i * i * 2) as f32).sum();
+        assert!((dot(&a, &b) - expect).abs() < 1e-5);
+        assert!((scalar::dot(&a, &b) - expect).abs() < 1e-5);
+    }
+
+    // NOTE: no force_kernel test here on purpose — flipping the global
+    // dispatcher would race the bit-exact assertions of sibling lib tests
+    // running on other harness threads. The force/round-trip behavior is
+    // pinned by tests/force_scalar.rs and tests/grad_check_paths.rs,
+    // which are single-test binaries.
+
+    #[test]
+    fn matmul_class_pins_chunks_to_the_full_shape_kernel() {
+        // Row-split callers run chunks through the full-shape class; a
+        // 2-row chunk under a Packed class must match the full packed run
+        // row for row, bit for bit.
+        let mut rng = Rng::new(107);
+        let (m, k, n) = (64, 64, 64);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let class = matmul_class(m, k, n);
+        let mut full = vec![0.0f32; m * n];
+        matmul_into_class(class, &a, &b, &mut full, m, k, n);
+        let mut chunked = vec![0.0f32; m * n];
+        for r0 in (0..m).step_by(2) {
+            matmul_into_class(
+                class,
+                &a[r0 * k..(r0 + 2) * k],
+                &b,
+                &mut chunked[r0 * n..(r0 + 2) * n],
+                2,
+                k,
+                n,
+            );
+        }
+        assert_eq!(full, chunked, "row arithmetic must be chunk-invariant within a class");
+
+        let bt = rand_vec(&mut rng, n * k);
+        let class = matmul_nt_class(m, k, n);
+        let mut full = vec![0.0f32; m * n];
+        matmul_nt_into_class(class, &a, &bt, &mut full, m, k, n);
+        let mut chunked = vec![0.0f32; m * n];
+        for r0 in (0..m).step_by(2) {
+            matmul_nt_into_class(
+                class,
+                &a[r0 * k..(r0 + 2) * k],
+                &bt,
+                &mut chunked[r0 * n..(r0 + 2) * n],
+                2,
+                k,
+                n,
+            );
+        }
+        assert_eq!(full, chunked);
+    }
+}

@@ -4,11 +4,20 @@
 //! pipeline, the pure-Rust attention reference, metrics, and the
 //! literal<->host bridge. Not a BLAS replacement — just the operations this
 //! system needs, implemented carefully enough to be property-tested and
-//! fast enough for the reference benches.
+//! fast enough for the reference benches. The raw matmul/dot/axpy family
+//! lives in [`gemm`] behind a runtime SIMD dispatcher (AVX2+FMA packed
+//! microkernel with a portable scalar fallback, `EFLA_FORCE_SCALAR=1` to
+//! pin the latter); [`Scratch`] is the reusable-buffer arena the hot
+//! paths thread through to stay allocation-free.
 
+pub mod gemm;
 mod ops;
+mod scratch;
 
+pub use gemm::{active_kernel, axpy, dot, force_kernel, matmul_into, matmul_nt_into,
+    matmul_tn_into, Kernel, ENV_FORCE_SCALAR};
 pub use ops::*;
+pub use scratch::Scratch;
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

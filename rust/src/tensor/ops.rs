@@ -1,10 +1,13 @@
-//! Tensor operations: matmul, transposes, elementwise, reductions, softmax.
+//! Tensor operations: matmul wrappers, transposes, elementwise, reductions,
+//! softmax.
 //!
-//! The matmul is a cache-blocked ikj kernel — good enough that the pure-Rust
-//! attention reference (used for property tests, the error-analysis bench
-//! and the CPU serving fallback) is not embarrassingly slow. See
+//! The raw matmul family (`matmul_into` / `matmul_nt_into` /
+//! `matmul_tn_into` / `dot` / `axpy`) lives in [`super::gemm`] behind a
+//! runtime SIMD dispatcher (AVX2+FMA microkernel → portable scalar); this
+//! module keeps the [`Tensor`]-level conveniences built on top of it. See
 //! `benches/kernel_throughput.rs` for measured numbers.
 
+use super::gemm::{matmul_into, matmul_nt_into};
 use super::Tensor;
 
 /// C = A @ B for 2-D tensors (M,K) x (K,N) -> (M,N).
@@ -19,35 +22,11 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::from_vec(&[m, n], out)
 }
 
-/// Raw blocked matmul: out[m,n] += a[m,k] * b[k,n] (out must be zeroed).
-pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    const BK: usize = 64;
-    for k0 in (0..k).step_by(BK) {
-        let kend = (k0 + BK).min(k);
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for kk in k0..kend {
-                let av = arow[kk];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
-            }
-        }
-    }
-}
-
 /// Fresh `m x n` product `a @ b` on raw row-major slices, returned as an
 /// owned buffer. The single fresh-matmul helper shared by the CPU model
 /// layers and the attention kernels (callers that want accumulation use
-/// [`matmul_into`] / [`matmul_nt_into`] / [`matmul_tn_into`] directly).
+/// [`matmul_into`] / [`super::matmul_nt_into`] / [`super::matmul_tn_into`]
+/// directly).
 pub fn matmul_vec(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
     matmul_into(a, b, &mut out, m, k, n);
@@ -75,77 +54,8 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, k2) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2);
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a.data()[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b.data()[j * k..(j + 1) * k];
-            out[i * n + j] = dot(arow, brow);
-        }
-    }
+    matmul_nt_into(a.data(), b.data(), &mut out, m, k, n);
     Tensor::from_vec(&[m, n], out)
-}
-
-/// Raw matmul with transposed rhs: out[m,n] += a[m,k] * b[n,k]^T
-/// (out must be zeroed by the caller if a fresh product is wanted).
-pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for j in 0..n {
-            orow[j] += dot(arow, &b[j * k..(j + 1) * k]);
-        }
-    }
-}
-
-/// Raw matmul with transposed lhs: out[k,n] += a[m,k]^T * b[m,n].
-///
-/// This is the weight-gradient shape (dW = X^T dY): accumulate rank-1
-/// updates row by row so the inner loop is a fused axpy over contiguous
-/// slices.
-pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    debug_assert_eq!(out.len(), k * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            axpy(av, brow, &mut out[kk * n..(kk + 1) * n]);
-        }
-    }
-}
-
-/// Dot product with 4-way unrolling.
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
-    }
-    s
-}
-
-/// y += alpha * x
-pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * xi;
-    }
 }
 
 /// Elementwise map.
@@ -205,6 +115,10 @@ pub fn softmax_rows(a: &Tensor) -> Tensor {
 }
 
 /// argmax over the last axis of a 2-D tensor.
+///
+/// Uses IEEE total ordering ([`f32::total_cmp`]) so rows containing NaN
+/// never panic: a positive NaN compares greater than every number (its
+/// index is returned), a negative NaN smaller — deterministic either way.
 pub fn argmax_rows(a: &Tensor) -> Vec<usize> {
     assert_eq!(a.ndim(), 2);
     let (m, n) = (a.shape()[0], a.shape()[1]);
@@ -213,7 +127,7 @@ pub fn argmax_rows(a: &Tensor) -> Vec<usize> {
             let row = &a.data()[i * n..(i + 1) * n];
             row.iter()
                 .enumerate()
-                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .max_by(|x, y| x.1.total_cmp(y.1))
                 .map(|(j, _)| j)
                 .unwrap_or(0)
         })
@@ -233,6 +147,7 @@ pub fn outer(u: &[f32], v: &[f32]) -> Tensor {
 
 #[cfg(test)]
 mod tests {
+    use super::super::matmul_tn_into;
     use super::*;
 
     #[test]
@@ -324,10 +239,15 @@ mod tests {
     }
 
     #[test]
-    fn dot_unroll_tail() {
-        let a: Vec<f32> = (0..7).map(|i| i as f32).collect();
-        let b: Vec<f32> = (0..7).map(|i| (i * 2) as f32).collect();
-        let expect: f32 = (0..7).map(|i| (i * i * 2) as f32).sum();
-        assert!((dot(&a, &b) - expect).abs() < 1e-5);
+    fn argmax_rows_with_nan_does_not_panic() {
+        // Regression: the old partial_cmp().unwrap() panicked on NaN rows.
+        let a = Tensor::from_vec(&[3, 3], vec![0., f32::NAN, 1., 2., 0., 1., f32::NAN, 3., 9.]);
+        let idx = argmax_rows(&a);
+        assert_eq!(idx.len(), 3);
+        // Positive NaN is the total-order maximum (above +inf), so rows
+        // containing one pick its index; a NaN-free row behaves classically.
+        assert_eq!(idx[0], 1);
+        assert_eq!(idx[1], 0);
+        assert_eq!(idx[2], 0);
     }
 }

@@ -1,0 +1,97 @@
+//! Reusable f32 buffer pool for allocation-free hot loops.
+//!
+//! [`Scratch`] is a LIFO pool of `Vec<f32>` buffers: [`Scratch::take`]
+//! hands out a zeroed buffer of the requested length (reusing a pooled
+//! allocation when one exists), [`Scratch::put`] returns it. Once every
+//! pooled buffer's capacity has grown to its steady-state maximum, a
+//! take/put cycle performs **no heap allocation** — the chunkwise kernel,
+//! the BPTT sweep and the per-token decode loops all run through one.
+//!
+//! Ownership rule: **one arena per executor worker, never shared.** The
+//! CPU backend's `Executor` owns one `Scratch` per worker thread and
+//! threads it through the `*_scratch` task closures; a buffer taken inside
+//! a task must be put back (or returned as a result) before the task ends.
+//! Because `take` transfers ownership of a plain `Vec<f32>`, holding
+//! several live buffers at once needs no lifetime juggling, and a callee
+//! can keep drawing from the same `&mut Scratch` while earlier buffers are
+//! still out. Forgetting `put` is never unsound — it only costs the pool
+//! a reusable allocation.
+
+/// LIFO pool of reusable zero-initialized f32 buffers.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    pool: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    /// Empty pool (no allocation until the first `take`).
+    pub const fn new() -> Scratch {
+        Scratch { pool: Vec::new() }
+    }
+
+    /// Check out a zeroed buffer of exactly `len` elements. Reuses the
+    /// most recently returned allocation when the pool is non-empty.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.pool.pop().unwrap_or_default();
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.pool.push(buf);
+        }
+    }
+
+    /// Buffers currently parked in the pool (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_returns_zeroed_buffers_and_reuses_capacity() {
+        let mut sc = Scratch::new();
+        let mut a = sc.take(8);
+        assert_eq!(a, vec![0.0; 8]);
+        a.iter_mut().for_each(|x| *x = 7.0);
+        let cap = a.capacity();
+        let ptr = a.as_ptr();
+        sc.put(a);
+        assert_eq!(sc.pooled(), 1);
+
+        // Same allocation comes back, re-zeroed, for a smaller request.
+        let b = sc.take(4);
+        assert_eq!(b, vec![0.0; 4]);
+        assert_eq!(b.capacity(), cap);
+        assert_eq!(b.as_ptr(), ptr);
+        sc.put(b);
+    }
+
+    #[test]
+    fn multiple_buffers_can_be_live_at_once() {
+        let mut sc = Scratch::new();
+        let a = sc.take(3);
+        let b = sc.take(5);
+        assert_eq!(a.len(), 3);
+        assert_eq!(b.len(), 5);
+        sc.put(a);
+        sc.put(b);
+        assert_eq!(sc.pooled(), 2);
+        let c = sc.take(5);
+        assert_eq!(c, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn empty_put_is_dropped() {
+        let mut sc = Scratch::new();
+        sc.put(Vec::new());
+        assert_eq!(sc.pooled(), 0);
+    }
+}

@@ -1,0 +1,58 @@
+//! EFLA_FORCE_SCALAR round-trip: setting the env var before the first
+//! dispatch must pin the whole matmul family to the scalar tier.
+//!
+//! Deliberately a single #[test] in its own binary: the dispatcher caches
+//! the env read on first use, so the variable is set before any dispatched
+//! call in this process, with no sibling tests racing the cache.
+
+use efla::tensor::{
+    active_kernel, axpy, dot, gemm, matmul_into, matmul_nt_into, matmul_tn_into, Kernel,
+    ENV_FORCE_SCALAR,
+};
+use efla::util::rng::Rng;
+
+#[test]
+fn env_override_round_trips_through_the_dispatcher() {
+    std::env::set_var(ENV_FORCE_SCALAR, "1");
+    assert_eq!(
+        active_kernel(),
+        Kernel::Scalar,
+        "{ENV_FORCE_SCALAR}=1 must resolve the dispatcher to the scalar tier"
+    );
+
+    // With the scalar tier forced, dispatched calls are the scalar calls —
+    // bit for bit, not just within tolerance.
+    let mut rng = Rng::new(9001);
+    for &(m, k, n) in &[(5usize, 8usize, 16usize), (61, 67, 33), (128, 256, 64)] {
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let mut c_ref = vec![0.0f32; m * n];
+        gemm::scalar::matmul_into(&a, &b, &mut c_ref, m, k, n);
+        let mut c = vec![0.0f32; m * n];
+        matmul_into(&a, &b, &mut c, m, k, n);
+        assert_eq!(c_ref, c, "nn {m}x{k}x{n} must be bit-identical under force-scalar");
+
+        let bt = rng.normal_vec(n * k, 0.0, 1.0);
+        let mut c_ref = vec![0.0f32; m * n];
+        gemm::scalar::matmul_nt_into(&a, &bt, &mut c_ref, m, k, n);
+        let mut c = vec![0.0f32; m * n];
+        matmul_nt_into(&a, &bt, &mut c, m, k, n);
+        assert_eq!(c_ref, c, "nt {m}x{k}x{n}");
+
+        let bm = rng.normal_vec(m * n, 0.0, 1.0);
+        let mut c_ref = vec![0.0f32; k * n];
+        gemm::scalar::matmul_tn_into(&a, &bm, &mut c_ref, m, k, n);
+        let mut c = vec![0.0f32; k * n];
+        matmul_tn_into(&a, &bm, &mut c, m, k, n);
+        assert_eq!(c_ref, c, "tn {m}x{k}x{n}");
+
+        let x = rng.normal_vec(k, 0.0, 1.0);
+        let y = rng.normal_vec(k, 0.0, 1.0);
+        assert_eq!(dot(&x, &y).to_bits(), gemm::scalar::dot(&x, &y).to_bits());
+        let mut y1 = y.clone();
+        axpy(0.5, &x, &mut y1);
+        let mut y2 = y.clone();
+        gemm::scalar::axpy(0.5, &x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+}

@@ -1,0 +1,94 @@
+//! Finite-difference gradient check of the full LM loss under BOTH matmul
+//! dispatch tiers, plus a tight cross-tier gradient comparison.
+//!
+//! Deliberately a single #[test] in its own binary: it flips the global
+//! `force_kernel` hook, which would race the bit-exactness assertions in
+//! other test binaries if they shared a process.
+
+use efla::runtime::cpu::config::family_config;
+use efla::runtime::cpu::exec::Executor;
+use efla::runtime::cpu::model::lm_loss;
+use efla::runtime::cpu::params::ParamSet;
+use efla::tensor::{gemm, Kernel, Tensor};
+use efla::util::rng::Rng;
+
+/// Analytic gradients for the current dispatch tier.
+fn grads_and_loss(
+    cfg: &efla::runtime::cpu::config::CpuModelCfg,
+    params: &ParamSet,
+    exec: &Executor,
+    toks: &[i32],
+    tgts: &[i32],
+    b: usize,
+    l: usize,
+) -> (Vec<Tensor>, f32) {
+    let mut grads = params.zeros_like();
+    let stats = lm_loss(cfg, params, exec, toks, tgts, b, l, Some(&mut grads)).unwrap();
+    (grads, stats.loss_mean)
+}
+
+#[test]
+fn lm_gradients_match_finite_differences_under_both_tiers() {
+    let cfg = family_config("lm_tiny_efla").unwrap();
+    let (b, l) = (1usize, 6usize);
+    let exec = Executor::serial();
+    let mut rng = Rng::new(77);
+    let toks: Vec<i32> = (0..b * l).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+    let tgts: Vec<i32> = (0..b * l).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+
+    let mut per_tier: Vec<(Kernel, Vec<Tensor>)> = Vec::new();
+    for tier in [Kernel::Scalar, Kernel::Avx2Fma] {
+        if gemm::force_kernel(Some(tier)) != tier {
+            continue; // host has no AVX2+FMA: only the scalar leg runs
+        }
+        let mut params = ParamSet::init(&cfg, 5);
+        let (grads, _) = grads_and_loss(&cfg, &params, &exec, &toks, &tgts, b, l);
+
+        // Central finite differences over scattered entries of the tied
+        // embedding and the first mixer projection; parameters are
+        // perturbed in place and restored exactly from the saved value.
+        let h = 2e-2f32;
+        let mut checked_nonzero = 0usize;
+        for name in ["embed", "layer0.wq"] {
+            let pi = params.idx(name);
+            let n_elems = params.tensor(pi).len();
+            for idx in (0..n_elems).step_by((n_elems / 7).max(1)) {
+                let orig = params.tensor(pi).data()[idx];
+                params.tensor_mut(pi).data_mut()[idx] = orig + h;
+                let lp =
+                    lm_loss(&cfg, &params, &exec, &toks, &tgts, b, l, None).unwrap().loss_mean;
+                params.tensor_mut(pi).data_mut()[idx] = orig - h;
+                let lm =
+                    lm_loss(&cfg, &params, &exec, &toks, &tgts, b, l, None).unwrap().loss_mean;
+                params.tensor_mut(pi).data_mut()[idx] = orig;
+                let fd = (lp as f64 - lm as f64) / (2.0 * h as f64);
+                let analytic = grads[pi].data()[idx] as f64;
+                assert!(
+                    (analytic - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{tier:?} {name}[{idx}]: analytic {analytic} vs fd {fd}"
+                );
+                if analytic.abs() > 1e-4 {
+                    checked_nonzero += 1;
+                }
+            }
+        }
+        assert!(checked_nonzero > 0, "{tier:?}: grad check never saw a nonzero gradient");
+        per_tier.push((tier, grads));
+    }
+    gemm::force_kernel(None);
+
+    // When both tiers ran, their gradients must agree tightly — the SIMD
+    // kernels only re-round, never re-derive.
+    if per_tier.len() == 2 {
+        let (_, ref gs) = per_tier[0];
+        let (_, ref gv) = per_tier[1];
+        for (i, (a, c)) in gs.iter().zip(gv.iter()).enumerate() {
+            let scale = a.data().iter().fold(0.0f32, |m, x| m.max(x.abs())).max(1.0);
+            let diff = a.max_abs_diff(c);
+            assert!(
+                diff <= 1e-3 * scale,
+                "grad tensor {i}: scalar vs simd diff {diff} (scale {scale})"
+            );
+        }
+    }
+}

@@ -103,6 +103,40 @@ fn multithreaded_decode_bit_identical_to_serial() {
     }
 }
 
+/// Model-level finite-difference gradient check under whatever matmul
+/// dispatch tier is active. CI runs the suite both with default dispatch
+/// and with EFLA_FORCE_SCALAR=1, so this check covers the SIMD and scalar
+/// paths (see tests/grad_check_paths.rs for the in-process two-tier run).
+#[test]
+fn lm_gradients_match_finite_differences() {
+    let cfg = family_config("lm_tiny_efla").unwrap();
+    let mut params = ParamSet::init(&cfg, 3);
+    let exec = Executor::serial();
+    let (b, l) = (1usize, 5usize);
+    let (toks, tgts) = lm_batch(cfg.vocab, b * l, 9);
+
+    let mut grads = params.zeros_like();
+    lm_loss(&cfg, &params, &exec, &toks, &tgts, b, l, Some(&mut grads)).unwrap();
+
+    let h = 2e-2f32;
+    let pi = params.idx("embed");
+    let n_elems = params.tensor(pi).len();
+    for idx in (0..n_elems).step_by((n_elems / 9).max(1)) {
+        let orig = params.tensor(pi).data()[idx];
+        params.tensor_mut(pi).data_mut()[idx] = orig + h;
+        let lp = lm_loss(&cfg, &params, &exec, &toks, &tgts, b, l, None).unwrap().loss_mean;
+        params.tensor_mut(pi).data_mut()[idx] = orig - h;
+        let lm = lm_loss(&cfg, &params, &exec, &toks, &tgts, b, l, None).unwrap().loss_mean;
+        params.tensor_mut(pi).data_mut()[idx] = orig;
+        let fd = (lp as f64 - lm as f64) / (2.0 * h as f64);
+        let analytic = grads[pi].data()[idx] as f64;
+        assert!(
+            (analytic - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+            "embed[{idx}]: analytic {analytic} vs fd {fd}"
+        );
+    }
+}
+
 #[test]
 fn lm_forward_loss_near_uniform_at_init() {
     let cfg = family_config("lm_tiny_efla").unwrap();

@@ -1,0 +1,108 @@
+//! SIMD/scalar parity suite over the public tensor API.
+//!
+//! Pins the dispatched matmul family (`matmul_into` / `matmul_nt_into` /
+//! `matmul_tn_into`) plus `dot`/`axpy` against the portable scalar tier on
+//! random rectangular shapes — full tiles, remainder rows/columns, and
+//! depths that cross the packed kernel's KC blocking — at ≤ 1e-5 max abs
+//! diff, and runs the chunkwise-vs-sequential golden comparison under both
+//! explicitly forced tiers.
+//!
+//! These tolerance-based comparisons hold whichever tier the dispatcher
+//! resolves to, so the one test that flips the global `force_kernel` hook
+//! cannot interfere with its siblings.
+
+use efla::attention::{chunkwise_delta, sequential_delta, Gate};
+use efla::tensor::{axpy, dot, gemm, matmul_into, matmul_nt_into, matmul_tn_into, Kernel, Tensor};
+use efla::util::rng::Rng;
+
+/// Full tiles, remainder tiles (m % 6, n % 16), sub-cutoff shapes, and
+/// k > 256 (crosses the packed KC block boundary).
+const SIZES: &[(usize, usize, usize)] = &[
+    (1, 4, 4),
+    (2, 9, 3),
+    (5, 8, 16),
+    (6, 16, 16),
+    (11, 31, 17),
+    (23, 300, 19),
+    (48, 64, 80),
+    (61, 67, 129),
+    (96, 256, 96),
+];
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn matmul_family_matches_scalar_tier() {
+    let mut rng = Rng::new(7001);
+    for &(m, k, n) in SIZES {
+        let a = rng.normal_vec(m * k, 0.0, 0.05);
+        let b = rng.normal_vec(k * n, 0.0, 0.05);
+        let mut c_ref = vec![0.0f32; m * n];
+        gemm::scalar::matmul_into(&a, &b, &mut c_ref, m, k, n);
+        let mut c = vec![0.0f32; m * n];
+        matmul_into(&a, &b, &mut c, m, k, n);
+        assert!(max_abs_diff(&c_ref, &c) <= 1e-5, "nn {m}x{k}x{n}");
+
+        let bt = rng.normal_vec(n * k, 0.0, 0.05);
+        let mut c_ref = vec![0.0f32; m * n];
+        gemm::scalar::matmul_nt_into(&a, &bt, &mut c_ref, m, k, n);
+        let mut c = vec![0.0f32; m * n];
+        matmul_nt_into(&a, &bt, &mut c, m, k, n);
+        assert!(max_abs_diff(&c_ref, &c) <= 1e-5, "nt {m}x{k}x{n}");
+
+        let bm = rng.normal_vec(m * n, 0.0, 0.05);
+        let mut c_ref = vec![0.0f32; k * n];
+        gemm::scalar::matmul_tn_into(&a, &bm, &mut c_ref, m, k, n);
+        let mut c = vec![0.0f32; k * n];
+        matmul_tn_into(&a, &bm, &mut c, m, k, n);
+        assert!(max_abs_diff(&c_ref, &c) <= 1e-5, "tn {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn dot_axpy_match_scalar_tier() {
+    let mut rng = Rng::new(7002);
+    for len in [1usize, 5, 8, 13, 16, 25, 64, 127, 500] {
+        let a = rng.normal_vec(len, 0.0, 0.05);
+        let b = rng.normal_vec(len, 0.0, 0.05);
+        assert!(
+            (dot(&a, &b) - gemm::scalar::dot(&a, &b)).abs() <= 1e-5,
+            "dot len {len}"
+        );
+        let mut y = b.clone();
+        axpy(-1.3, &a, &mut y);
+        let mut y_ref = b.clone();
+        gemm::scalar::axpy(-1.3, &a, &mut y_ref);
+        assert!(max_abs_diff(&y_ref, &y) <= 1e-5, "axpy len {len}");
+    }
+}
+
+/// The chunkwise-vs-sequential golden comparison must hold at existing
+/// tolerances under both tiers — the arena-backed `_into` kernels and the
+/// SIMD matmuls change rounding, never semantics.
+#[test]
+fn chunkwise_golden_holds_under_both_forced_tiers() {
+    for tier in [Kernel::Scalar, Kernel::Avx2Fma] {
+        let active = gemm::force_kernel(Some(tier));
+        if active != tier {
+            continue; // host has no AVX2+FMA: the SIMD leg is vacuous
+        }
+        let mut rng = Rng::new(7003);
+        let (l, d) = (50, 16);
+        let q = Tensor::from_vec(&[l, d], rng.normal_vec(l * d, 0.0, 1.0));
+        let k = Tensor::from_vec(&[l, d], rng.normal_vec(l * d, 0.0, 0.7));
+        let v = Tensor::from_vec(&[l, d], rng.normal_vec(l * d, 0.0, 1.0));
+        let beta: Vec<f32> = (0..l).map(|_| rng.f32()).collect();
+        let (o_seq, s_seq) = sequential_delta(Gate::Efla, &q, &k, &v, &beta);
+        for chunk in [1usize, 8, 16, 64] {
+            let (o_ch, s_ch) = chunkwise_delta(Gate::Efla, &q, &k, &v, &beta, chunk);
+            let od = o_seq.max_abs_diff(&o_ch);
+            let sd = s_seq.max_abs_diff(&s_ch);
+            assert!(od < 2e-4, "{tier:?} C={chunk}: out diff {od}");
+            assert!(sd < 2e-4, "{tier:?} C={chunk}: state diff {sd}");
+        }
+    }
+    gemm::force_kernel(None); // restore host detection for sibling tests
+}
