@@ -70,7 +70,8 @@ fn main() {
     for &lr in &lrs {
         for mixer in ["deltanet", "efla"] {
             log::info!("training clf_{mixer} at lr={lr:.0e} for {steps} steps");
-            let r = robustness_run(backend.as_ref(), mixer, lr, steps, eval_batches, 42).expect("run");
+            let r = robustness_run(backend.as_ref(), mixer, lr, steps, eval_batches, 42)
+                .expect("run");
             results.push(r);
         }
     }

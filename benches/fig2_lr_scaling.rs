@@ -34,7 +34,9 @@ fn main() {
     let mut results = Vec::new();
     for &lr in &lrs {
         log::info!("training clf_efla at lr={lr:.0e} for {steps} steps");
-        results.push(robustness_run(backend.as_ref(), "efla", lr, steps, eval_batches, 42).expect("run"));
+        results.push(
+            robustness_run(backend.as_ref(), "efla", lr, steps, eval_batches, 42).expect("run"),
+        );
     }
 
     println!("\n## Figure 2 (scaled): EFLA, lr sweep, {steps} steps\n");

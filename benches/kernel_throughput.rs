@@ -12,17 +12,23 @@
 //!   4. chunkwise consistency errors (parallel form == sequential form);
 //!   5. the exact gate's cost relative to Euler's (EFLA's only overhead);
 //!   6. model forward thread scaling (writes the root-level
-//!      BENCH_forward_threads.json).
+//!      BENCH_forward_threads.json);
+//!   7. serving prompt ingestion — chunked parallel prefill vs
+//!      token-at-a-time decode, session- and server-level (writes the
+//!      root-level BENCH_serving.json).
 //!
 //! Env knobs: EFLA_BENCH_FAST=1 shrinks everything (CI smoke);
 //! EFLA_FORCE_SCALAR=1 pins the matmul dispatcher to the scalar tier.
 
 use efla::attention::{alpha_efla, chunkwise_delta, gates, sequential_delta, Gate};
 use efla::coordinator::experiments::{chunkwise_consistency, integrator_error};
+use efla::coordinator::server::{GenRequest, Server, ServerConfig};
+use efla::coordinator::session::Session;
 use efla::runtime::cpu::config::family_config;
 use efla::runtime::cpu::exec::Executor;
 use efla::runtime::cpu::model::lm_loss;
 use efla::runtime::cpu::params::ParamSet;
+use efla::runtime::CpuBackend;
 use efla::tensor::{gemm, matmul_into, Tensor};
 use efla::util::bench::{bench, fmt_secs, Table};
 use efla::util::json::{self, Json};
@@ -262,6 +268,124 @@ fn main() {
     }
     report.push(("forward_thread_scaling", scaling_json));
 
+    // ---- 7. serving: chunked prefill vs token-at-a-time ------------
+    // Prompt-ingestion throughput of the serving engine. Session level:
+    // one slot's prompt through `prefill` in chunks vs one token per
+    // batched `decode` step (the pre-prefill serving behavior, which pays
+    // a full decode batch per prompt token). Server level: end-to-end
+    // tokens/s + mean TTFT of the two scheduler modes on the same request
+    // mix. The two paths produce bit-identical logits and state (pinned
+    // by tests/serving_prefill.rs) — this section measures the speed gap.
+    let backend = CpuBackend::new();
+    let session = Session::init(&backend, "lm_tiny_efla", 42).expect("open serving session");
+    let serve_iters = if fast() { 2 } else { 5 };
+    let plens: &[usize] = if fast() { &[64, 128] } else { &[64, 256, 1024] };
+    let prefill_chunk = 64usize;
+    println!(
+        "## Serving prompt ingestion (lm_tiny_efla, prefill_chunk={prefill_chunk}, \
+         threads={})\n",
+        session.threads()
+    );
+    let vocab = session.vocab().unwrap();
+    let decode_b = session.decode_batch().unwrap();
+    let mut t = Table::new(&["prompt len", "prefill tok/s", "token-at-a-time tok/s", "speedup"]);
+    let mut serve_points = Vec::new();
+    for &plen in plens {
+        let mut rng = Rng::new(plen as u64);
+        let toks: Vec<i32> = (0..plen).map(|_| rng.below(vocab as u64) as i32).collect();
+        let st_prefill = bench(1, serve_iters, || {
+            let mut state = session.decode_state().unwrap();
+            let mut pos = 0;
+            while pos < plen {
+                let end = (pos + prefill_chunk).min(plen);
+                std::hint::black_box(session.prefill(&mut state, 0, &toks[pos..end]).unwrap());
+                pos = end;
+            }
+        });
+        let st_decode = bench(1, serve_iters, || {
+            let mut state = session.decode_state().unwrap();
+            let mut step = vec![0i32; decode_b];
+            for &tk in &toks {
+                step[0] = tk;
+                std::hint::black_box(session.decode(&mut state, &step).unwrap());
+            }
+        });
+        let tps_prefill = st_prefill.per_sec(plen as f64);
+        let tps_decode = st_decode.per_sec(plen as f64);
+        let speedup = st_decode.mean / st_prefill.mean.max(1e-12);
+        t.row(&[
+            format!("{plen}"),
+            format!("{tps_prefill:.0}"),
+            format!("{tps_decode:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        serve_points.push(Json::obj(vec![
+            ("prompt_len", Json::Num(plen as f64)),
+            ("prefill_tokens_per_sec", Json::Num(tps_prefill)),
+            ("token_at_a_time_tokens_per_sec", Json::Num(tps_decode)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    println!("{}", t.render());
+
+    // End-to-end engine comparison on one mixed request batch.
+    let run_server = |chunk: usize| {
+        let cfg = ServerConfig { prefill_chunk: chunk, prefill_token_budget: 256 };
+        let mut server = Server::with_config(&session, 7, cfg).unwrap();
+        let mut rng = Rng::new(9);
+        let n_req = if fast() { 6u64 } else { 12 };
+        let plen = if fast() { 96 } else { 192 };
+        for id in 0..n_req {
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.below(vocab as u64) as i32).collect();
+            server.submit(GenRequest { id, prompt, max_new: 8, temperature: 0.0 });
+        }
+        server.run_to_completion().unwrap();
+        (
+            server.stats.tokens_per_sec(),
+            server.stats.mean_ttft_secs(),
+            server.stats.engine_steps,
+        )
+    };
+    let (tps_chunked, ttft_chunked, steps_chunked) = run_server(prefill_chunk);
+    let (tps_legacy, ttft_legacy, steps_legacy) = run_server(0);
+    let mut t = Table::new(&["engine mode", "tok/s", "mean TTFT", "engine steps"]);
+    t.row(&[
+        format!("chunked prefill C={prefill_chunk}"),
+        format!("{tps_chunked:.0}"),
+        fmt_secs(ttft_chunked),
+        format!("{steps_chunked}"),
+    ]);
+    t.row(&[
+        "token-at-a-time".into(),
+        format!("{tps_legacy:.0}"),
+        fmt_secs(ttft_legacy),
+        format!("{steps_legacy}"),
+    ]);
+    println!("{}", t.render());
+    let serving_json = Json::obj(vec![
+        ("bench", Json::Str("serving_prefill".into())),
+        ("kernel", Json::Str(format!("{:?}", gemm::active_kernel()))),
+        ("family", Json::Str("lm_tiny_efla".into())),
+        ("threads", Json::Num(session.threads() as f64)),
+        ("prefill_chunk", Json::Num(prefill_chunk as f64)),
+        ("points", Json::Arr(serve_points)),
+        (
+            "server",
+            Json::obj(vec![
+                ("chunked_tokens_per_sec", Json::Num(tps_chunked)),
+                ("chunked_mean_ttft_secs", Json::Num(ttft_chunked)),
+                ("legacy_tokens_per_sec", Json::Num(tps_legacy)),
+                ("legacy_mean_ttft_secs", Json::Num(ttft_legacy)),
+            ]),
+        ),
+    ]);
+    println!("BENCH {}", serving_json.to_string());
+    if !fast() {
+        json::write_file(std::path::Path::new("BENCH_serving.json"), &serving_json).unwrap();
+    }
+    report.push(("serving_prefill", serving_json));
+
     let out = Json::Obj(
         report.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
     );
@@ -273,6 +397,7 @@ fn main() {
     } else {
         println!("json: BENCH_kernel_gemm.json");
         println!("json: BENCH_forward_threads.json");
+        println!("json: BENCH_serving.json");
     }
     println!("json: bench_results/kernel_throughput.json");
 }

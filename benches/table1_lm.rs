@@ -50,10 +50,18 @@ fn main() {
     );
     let mut rows = Vec::new();
     let mut t = Table::new(&[
-        "model", "train loss", "ppl (down)", "final_word", "multi_choice", "bool_query", "avg acc (up)", "secs",
+        "model",
+        "train loss",
+        "ppl (down)",
+        "final_word",
+        "multi_choice",
+        "bool_query",
+        "avg acc (up)",
+        "secs",
     ]);
     for mixer in &mixers {
-        let row = lm_run(backend.as_ref(), &preset, mixer, steps, eval_batches, 42, peak_lr).expect("lm_run");
+        let row = lm_run(backend.as_ref(), &preset, mixer, steps, eval_batches, 42, peak_lr)
+            .expect("lm_run");
         let acc: Vec<f64> = row.probe_acc.iter().map(|(_, a)| *a).collect();
         let avg = acc.iter().sum::<f64>() / acc.len().max(1) as f64;
         t.row(&[
@@ -76,7 +84,12 @@ fn main() {
                 Json::Arr(
                     row.probe_acc
                         .iter()
-                        .map(|(n, a)| Json::obj(vec![("name", Json::Str(n.clone())), ("acc", Json::Num(*a))]))
+                        .map(|(n, a)| {
+                            Json::obj(vec![
+                                ("name", Json::Str(n.clone())),
+                                ("acc", Json::Num(*a)),
+                            ])
+                        })
                         .collect(),
                 ),
             ),

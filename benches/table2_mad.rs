@@ -39,7 +39,8 @@ fn main() {
     for mixer in ["deltanet", "efla"] {
         let mut accs = Vec::new();
         for task in MadTask::all() {
-            let acc = mad_run(backend.as_ref(), mixer, task, steps, eval_batches, 42).expect("mad_run");
+            let acc =
+                mad_run(backend.as_ref(), mixer, task, steps, eval_batches, 42).expect("mad_run");
             accs.push(acc);
         }
         let avg = accs.iter().sum::<f64>() / accs.len() as f64;

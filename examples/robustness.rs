@@ -31,7 +31,10 @@ fn main() -> Result<()> {
     let efla_r = robustness_run(backend.as_ref(), "efla", lr, steps, eval_batches, 42)?;
     let delta_r = robustness_run(backend.as_ref(), "deltanet", lr, steps, eval_batches, 42)?;
 
-    println!("\nclean accuracy: efla {:.3} | deltanet {:.3}\n", efla_r.clean_acc, delta_r.clean_acc);
+    println!(
+        "\nclean accuracy: efla {:.3} | deltanet {:.3}\n",
+        efla_r.clean_acc, delta_r.clean_acc
+    );
     for (label, grid) in corruption_grid() {
         let mut t = Table::new(&["corruption", "efla", "deltanet", "gap"]);
         for c in grid {

@@ -1,17 +1,20 @@
-//! Serving demo: continuous batching on the O(1)-state decode path.
+//! Serving demo: chunked parallel prefill + continuous batching on the
+//! O(1)-state decode path.
 //!
 //! Trains a tiny LM briefly (so generations reflect corpus statistics),
-//! then drives the slot-based decode engine with a Poisson-ish arrival
-//! pattern of mixed-length requests, reporting latency percentiles and
-//! engine throughput — the serving scenario the paper's intro motivates
-//! (long-context/RL inference without a KV cache).
+//! then drives the slot-based engine with a Poisson-ish arrival pattern
+//! of mixed-length requests: prompts ingest in parallel chunks
+//! (`--prefill-chunk`), generation runs batched one-token decodes.
+//! Reports latency percentiles, TTFT and engine throughput — the serving
+//! scenario the paper's intro motivates (long-context/RL inference
+//! without a KV cache).
 //!
 //! Run: cargo run --release --example serve -- --requests 24 --max-new 24
 
 use anyhow::Result;
 use efla::coordinator::config::RunConfig;
 use efla::coordinator::schedule::Schedule;
-use efla::coordinator::server::{GenRequest, Server};
+use efla::coordinator::server::{GenRequest, Server, ServerConfig};
 use efla::coordinator::session::Session;
 use efla::coordinator::trainer;
 use efla::runtime::open_backend;
@@ -26,12 +29,15 @@ fn main() -> Result<()> {
         .opt("requests", "24", "demo request count")
         .opt("max-new", "24", "tokens per request")
         .opt("temperature", "0.8", "sampling temperature")
+        .opt("prefill-chunk", "64", "prompt tokens per slot per engine step (0 = token-at-a-time)")
+        .opt("prefill-budget", "256", "max prompt tokens per engine step (0 = unlimited)")
         .opt("seed", "42", "seed")
         .parse();
     let backend = open_backend(std::path::Path::new("artifacts"))?;
     let mut session = Session::init(backend.as_ref(), "lm_tiny_efla", p.u64("seed")? as u32)?;
 
-    let cfg = RunConfig { steps: p.u64("train-steps")?, corpus_bytes: 300_000, ..Default::default() };
+    let cfg =
+        RunConfig { steps: p.u64("train-steps")?, corpus_bytes: 300_000, ..Default::default() };
     if cfg.steps > 0 {
         let (data, _) = trainer::lm_data(&cfg, session.batch, session.seq)?;
         trainer::train_lm(
@@ -43,7 +49,11 @@ fn main() -> Result<()> {
         )?;
     }
 
-    let mut server = Server::new(&session, p.u64("seed")?)?;
+    let server_cfg = ServerConfig {
+        prefill_chunk: p.usize("prefill-chunk")?,
+        prefill_token_budget: p.usize("prefill-budget")?,
+    };
+    let mut server = Server::with_config(&session, p.u64("seed")?, server_cfg)?;
     let mut rng = Rng::new(p.u64("seed")? ^ 0x5EED);
     let n = p.usize("requests")?;
     let max_new = p.usize("max-new")?;
@@ -72,10 +82,17 @@ fn main() -> Result<()> {
     let stats = Stats::from_samples(lat);
     println!("\nrequests: {} | slots: {} | wall {:.2}s", results.len(), server.batch_size(), wall);
     println!(
-        "engine: {} steps | {:.1} tok/s | mean step {}",
+        "engine: {} steps | {:.1} tok/s | mean step {} | prefill_chunk {}",
         server.stats.engine_steps,
         server.stats.tokens_per_sec(),
         fmt_secs(wall / server.stats.engine_steps.max(1) as f64),
+        server.config().prefill_chunk,
+    );
+    println!(
+        "tokens: {} prefill + {} decode | mean TTFT {}",
+        server.stats.prefill_tokens,
+        server.stats.decode_tokens,
+        fmt_secs(server.stats.mean_ttft_secs()),
     );
     println!(
         "slot-steps per request: p50 {:.0} | p95 {:.0} | max {:.0}",

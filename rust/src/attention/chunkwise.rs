@@ -55,7 +55,9 @@ pub fn chunkwise_delta(
 
 /// [`chunkwise_delta`] with per-token alpha supplied directly — the entry
 /// point the CPU backend's model layer uses (it owns the gate composition:
-/// beta projections, adaptive decay, DeltaNet's normalized keys).
+/// beta projections, adaptive decay, DeltaNet's normalized keys). Starts
+/// from S = 0; see [`chunkwise_delta_alpha_seeded`] for an explicit
+/// initial state.
 pub fn chunkwise_delta_alpha(
     q: &Tensor,
     k: &Tensor,
@@ -63,14 +65,33 @@ pub fn chunkwise_delta_alpha(
     alpha: &[f32],
     chunk: usize,
 ) -> (Tensor, Tensor) {
+    let dk = q.shape()[1];
+    let dv = v.shape()[1];
+    chunkwise_delta_alpha_seeded(q, k, v, alpha, chunk, &Tensor::zeros(&[dk, dv]))
+}
+
+/// [`chunkwise_delta_alpha`] seeded from an explicit initial state `s0`
+/// (Dk, Dv) instead of zeros — the prefill form: a serving slot's
+/// recurrent state streams through successive prompt segments, each run
+/// through the parallel chunkwise kernel from wherever the last segment
+/// left off. Returns (out (L, Dv), final state (Dk, Dv)).
+pub fn chunkwise_delta_alpha_seeded(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    alpha: &[f32],
+    chunk: usize,
+    s0: &Tensor,
+) -> (Tensor, Tensor) {
     let l = q.shape()[0];
     let dk = q.shape()[1];
     let dv = v.shape()[1];
     assert_eq!(k.shape(), &[l, dk]);
     assert_eq!(v.shape(), &[l, dv]);
     assert_eq!(alpha.len(), l);
+    assert_eq!(s0.shape(), &[dk, dv]);
 
-    let mut s = vec![0.0f32; dk * dv];
+    let mut s = s0.data().to_vec();
     let mut out = vec![0.0f32; l * dv];
     let mut scratch = Scratch::new();
     chunkwise_delta_alpha_into(
@@ -90,10 +111,18 @@ pub fn chunkwise_delta_alpha(
 
 /// Allocation-free core of [`chunkwise_delta_alpha`] on raw row-major
 /// slices. `out` (L, Dv) must be zeroed; `s` (Dk, Dv) is the running state
-/// — zeros for a fresh sequence — updated in place, so callers can stream
-/// chunked segments through one state. Per-chunk temporaries (`kk`, `w`,
-/// `u`, `ws`, `qk`) come from `scratch` and go back each chunk: steady
-/// state allocates nothing.
+/// — zeros for a fresh sequence, or a seeded state mid-stream — updated in
+/// place, so callers can stream chunked segments through one state (the
+/// serving prefill path enters here with a slot's live state). Per-chunk
+/// temporaries (`kk`, `w`, `u`, `ws`, `qk`) come from `scratch` and go
+/// back each chunk: steady state allocates nothing.
+///
+/// Bit-reproducibility note: the per-token rounding depends on `chunk`
+/// (the WY/UT form re-associates the intra-chunk sums), but for a *fixed*
+/// `chunk` the kernel's arithmetic per token is independent of how the
+/// sequence is split across calls as long as splits land on chunk
+/// boundaries — and with `chunk == 1` it is independent of any split.
+/// The serving paths exploit the latter (see `runtime/cpu/layers/mixer.rs`).
 pub fn chunkwise_delta_alpha_into(
     q: &[f32],
     k: &[f32],
@@ -349,6 +378,83 @@ mod tests {
         );
         assert_eq!(out.as_slice(), o_ref.data());
         assert_eq!(s.as_slice(), s_ref.data());
+    }
+
+    #[test]
+    fn seeded_form_matches_split_run() {
+        // Splitting a sequence on a chunk boundary and seeding the second
+        // call with the first call's final state must reproduce the
+        // one-shot run exactly (same chunk partition => same rounding).
+        let mut rng = Rng::new(44);
+        let (l, dk, dv, chunk) = (32, 6, 10, 8);
+        let q = rand_t(&mut rng, &[l, dk], 1.0);
+        let k = rand_t(&mut rng, &[l, dk], 0.7);
+        let v = rand_t(&mut rng, &[l, dv], 1.0);
+        let alpha = stable_alpha(&mut rng, &k);
+        let (o_ref, s_ref) = chunkwise_delta_alpha(&q, &k, &v, &alpha, chunk);
+
+        let half = 16;
+        let slice = |t: &Tensor, a: usize, b: usize, w: usize| {
+            Tensor::from_vec(&[b - a, w], t.data()[a * w..b * w].to_vec())
+        };
+        let (o1, s1) = chunkwise_delta_alpha(
+            &slice(&q, 0, half, dk),
+            &slice(&k, 0, half, dk),
+            &slice(&v, 0, half, dv),
+            &alpha[..half],
+            chunk,
+        );
+        let (o2, s2) = chunkwise_delta_alpha_seeded(
+            &slice(&q, half, l, dk),
+            &slice(&k, half, l, dk),
+            &slice(&v, half, l, dv),
+            &alpha[half..],
+            chunk,
+            &s1,
+        );
+        assert_eq!(&o_ref.data()[..half * dv], o1.data());
+        assert_eq!(&o_ref.data()[half * dv..], o2.data());
+        assert_eq!(s_ref.data(), s2.data());
+    }
+
+    #[test]
+    fn seeded_chunk1_is_split_invariant() {
+        // With chunk == 1 the kernel's per-token arithmetic is independent
+        // of ANY split of the sequence across seeded calls — the property
+        // the serving prefill path relies on for bit-exact equivalence
+        // with token-at-a-time decoding.
+        let mut rng = Rng::new(45);
+        let (l, dk, dv) = (20, 5, 7);
+        let q = rand_t(&mut rng, &[l, dk], 1.0);
+        let k = rand_t(&mut rng, &[l, dk], 0.7);
+        let v = rand_t(&mut rng, &[l, dv], 1.0);
+        let alpha = stable_alpha(&mut rng, &k);
+        let (o_ref, s_ref) = chunkwise_delta_alpha(&q, &k, &v, &alpha, 1);
+
+        for split in [1usize, 3, 9, 19] {
+            let mut s = Tensor::zeros(&[dk, dv]);
+            let mut out = Vec::new();
+            let mut pos = 0;
+            while pos < l {
+                let end = (pos + split).min(l);
+                let seg = |t: &Tensor, w: usize| {
+                    Tensor::from_vec(&[end - pos, w], t.data()[pos * w..end * w].to_vec())
+                };
+                let (o, s2) = chunkwise_delta_alpha_seeded(
+                    &seg(&q, dk),
+                    &seg(&k, dk),
+                    &seg(&v, dv),
+                    &alpha[pos..end],
+                    1,
+                    &s,
+                );
+                out.extend_from_slice(o.data());
+                s = s2;
+                pos = end;
+            }
+            assert_eq!(out.as_slice(), o_ref.data(), "split {split}");
+            assert_eq!(s.data(), s_ref.data(), "split {split}");
+        }
     }
 
     #[test]

@@ -18,7 +18,10 @@ pub mod gates;
 pub mod sequential;
 
 pub use backward::{delta_bptt, delta_bptt_into};
-pub use chunkwise::{chunkwise_delta, chunkwise_delta_alpha, chunkwise_delta_alpha_into};
+pub use chunkwise::{
+    chunkwise_delta, chunkwise_delta_alpha, chunkwise_delta_alpha_into,
+    chunkwise_delta_alpha_seeded,
+};
 pub use gates::{alpha_efla, alpha_efla_grad, alpha_euler, alpha_rk, gate_series, Gate};
 pub use sequential::{
     delta_step_alpha, sequential_delta, sequential_delta_alpha, sequential_delta_alpha_into,

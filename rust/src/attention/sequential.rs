@@ -49,7 +49,15 @@ impl DeltaState {
 
     /// Advance one token and write o = S'^T q into `out` (len dv).
     /// Allocation-free.
-    pub fn step(&mut self, gate: Gate, q: &[f32], k: &[f32], v: &[f32], beta: f32, out: &mut [f32]) {
+    pub fn step(
+        &mut self,
+        gate: Gate,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        beta: f32,
+        out: &mut [f32],
+    ) {
         let lambda: f32 = k.iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
         let alpha = gate.alpha(beta, lambda);
         self.step_alpha(q, k, v, alpha, out);

@@ -56,6 +56,12 @@ pub struct RunConfig {
     /// CPU-backend worker threads (0 = auto: `EFLA_NUM_THREADS` or the
     /// machine's available parallelism).
     pub threads: usize,
+    /// Serving: prompt tokens one slot ingests per engine step through
+    /// the parallel prefill path (0 = token-at-a-time ingestion).
+    pub prefill_chunk: usize,
+    /// Serving: max total prompt tokens ingested per engine step across
+    /// slots, so decoding slots aren't starved (0 = unlimited).
+    pub prefill_token_budget: usize,
     pub artifact_dir: PathBuf,
     pub out_dir: PathBuf,
     /// Optional checkpoint interval (0 = none).
@@ -75,6 +81,8 @@ impl Default for RunConfig {
             eval_batches: 8,
             corpus_bytes: 2_000_000,
             threads: 0,
+            prefill_chunk: 64,
+            prefill_token_budget: 256,
             artifact_dir: PathBuf::from("artifacts"),
             out_dir: PathBuf::from("runs"),
             ckpt_every: 0,
@@ -115,6 +123,11 @@ impl RunConfig {
             eval_batches: j.get("eval_batches").as_usize().unwrap_or(d.eval_batches),
             corpus_bytes: j.get("corpus_bytes").as_usize().unwrap_or(d.corpus_bytes),
             threads: j.get("threads").as_usize().unwrap_or(d.threads),
+            prefill_chunk: j.get("prefill_chunk").as_usize().unwrap_or(d.prefill_chunk),
+            prefill_token_budget: j
+                .get("prefill_token_budget")
+                .as_usize()
+                .unwrap_or(d.prefill_token_budget),
             artifact_dir: PathBuf::from(
                 j.get("artifact_dir").as_str().unwrap_or("artifacts"),
             ),
@@ -135,6 +148,8 @@ impl RunConfig {
             ("eval_batches", Json::Num(self.eval_batches as f64)),
             ("corpus_bytes", Json::Num(self.corpus_bytes as f64)),
             ("threads", Json::Num(self.threads as f64)),
+            ("prefill_chunk", Json::Num(self.prefill_chunk as f64)),
+            ("prefill_token_budget", Json::Num(self.prefill_token_budget as f64)),
             (
                 "artifact_dir",
                 Json::Str(self.artifact_dir.to_string_lossy().into_owned()),
@@ -175,6 +190,21 @@ mod tests {
         assert!((c2.peak_lr - 1e-3).abs() < 1e-12);
         assert_eq!(c2.task, Task::Lm);
         assert_eq!(c2.threads, 6);
+    }
+
+    #[test]
+    fn prefill_knobs_roundtrip_and_default() {
+        let d = RunConfig::default();
+        assert_eq!(d.prefill_chunk, 64);
+        assert_eq!(d.prefill_token_budget, 256);
+        let c = RunConfig {
+            prefill_chunk: 0,
+            prefill_token_budget: 1024,
+            ..RunConfig::default()
+        };
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.prefill_chunk, 0);
+        assert_eq!(c2.prefill_token_budget, 1024);
     }
 
     #[test]

@@ -1,22 +1,33 @@
-//! Batched generation server on the O(1)-state recurrent decode path.
+//! Batched generation server: chunked parallel prefill + O(1)-state decode.
 //!
 //! The serving win of (error-free) linear attention: no KV cache, just a
 //! fixed-size per-sequence state (conv caches + S per layer). This module
-//! implements a vLLM-style *continuously batched* decode loop over the
-//! fixed-B decode path of any backend:
+//! implements a vLLM-style *continuously batched* engine over the fixed-B
+//! decode path of any backend:
 //!
 //! * B slots, each holding one request's recurrent state rows;
-//! * every engine step executes ONE decode for all B slots;
-//! * slots still consuming their prompt feed the next prompt token
-//!   (piggy-backed prefill — exact, since slot states are independent);
-//! * generating slots sample from the returned logits;
+//! * admitted slots first consume their prompt in chunks of
+//!   [`ServerConfig::prefill_chunk`] tokens per engine step through the
+//!   backend's **prefill** path — the whole chunk runs through the
+//!   parallel forward in one call, seeded from the slot's state (a
+//!   per-step token budget keeps decode-phase slots from starving behind
+//!   long prompts);
+//! * generating slots then advance together through ONE batched decode
+//!   per engine step, sampling from the returned logits;
 //! * finished slots are immediately refilled from the queue (continuous
 //!   batching), their state rows zeroed in place.
 //!
+//! Chunked prefill is a pure throughput optimization: for any prompt and
+//! any `prefill_chunk`, the produced logits and slot state are
+//! bit-identical to the token-at-a-time path (`prefill_chunk = 0`), which
+//! remains available as the fallback for backends without a prefill graph.
+//!
 //! State lives host-side between steps (row surgery is trivial there); the
-//! backend's [`Session::decode`] is the only compute.
+//! backend's [`Session::decode`] / [`Session::prefill`] are the only
+//! compute.
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -24,6 +35,26 @@ use crate::coordinator::session::Session;
 use crate::runtime::HostValue;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// Scheduler knobs of the serving engine.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Max prompt tokens one slot ingests per engine step through the
+    /// parallel prefill path. 0 = token-at-a-time ingestion through the
+    /// decode path (the legacy behavior, and the fallback for backends
+    /// without prefill support).
+    pub prefill_chunk: usize,
+    /// Max total prompt tokens ingested per engine step across all slots,
+    /// so decode-phase slots are not starved behind long prompts.
+    /// 0 = unlimited.
+    pub prefill_token_budget: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { prefill_chunk: 64, prefill_token_budget: 256 }
+    }
+}
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -40,8 +71,10 @@ pub struct GenRequest {
 pub struct GenResult {
     pub id: u64,
     pub tokens: Vec<i32>,
-    /// Engine steps this request occupied a slot (prompt + decode).
+    /// Engine steps this request occupied a slot (prefill calls + decodes).
     pub steps: usize,
+    /// Wall seconds from submission to the first generated token.
+    pub ttft_secs: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -53,19 +86,31 @@ struct Slot {
     max_new: usize,
     temperature: f32,
     steps: usize,
+    submitted: Instant,
+    ttft_secs: f64,
 }
 
 /// Engine statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServerStats {
     pub engine_steps: u64,
+    /// Total tokens processed (prompt + generated).
     pub tokens_processed: u64,
+    /// Prompt tokens ingested (through prefill calls, or through decode
+    /// steps when running token-at-a-time).
+    pub prefill_tokens: u64,
+    /// Generated tokens produced by decode steps.
+    pub decode_tokens: u64,
     pub completed: u64,
     pub wall_secs: f64,
     /// Decode slots of the engine (fixed batch of the decode graph).
     pub batch: usize,
     /// Executor worker threads the backend session decodes with.
     pub threads: usize,
+    /// Sum of per-request time-to-first-token (seconds), over
+    /// `ttft_count` requests that produced a first token so far.
+    pub ttft_sum_secs: f64,
+    pub ttft_count: u64,
 }
 
 impl ServerStats {
@@ -77,8 +122,10 @@ impl ServerStats {
         }
     }
 
-    /// Mean per-step slot occupancy in [0, 1] (1.0 = every decode slot —
-    /// and hence every parallel (slot, head) work item — busy each step).
+    /// Mean tokens per engine step per slot. With token-at-a-time
+    /// ingestion this is the slot occupancy in [0, 1]; with chunked
+    /// prefill a single step can ingest many prompt tokens per slot, so
+    /// values above 1 are exactly the prefill speedup showing up.
     pub fn utilization(&self) -> f64 {
         let cap = (self.engine_steps as f64) * (self.batch as f64);
         if cap > 0.0 {
@@ -87,33 +134,55 @@ impl ServerStats {
             0.0
         }
     }
+
+    /// Mean time-to-first-token over the requests that reached one.
+    pub fn mean_ttft_secs(&self) -> f64 {
+        if self.ttft_count > 0 {
+            self.ttft_sum_secs / self.ttft_count as f64
+        } else {
+            0.0
+        }
+    }
 }
 
-/// The batched decode engine.
+/// The batched prefill + decode engine.
 pub struct Server<'a> {
     session: &'a Session,
     /// Host-side recurrent state, one HostValue per state tensor (B, ...).
     state: Vec<HostValue>,
     slots: Vec<Option<Slot>>,
-    queue: VecDeque<GenRequest>,
+    queue: VecDeque<(GenRequest, Instant)>,
     results: Vec<GenResult>,
     rng: Rng,
     batch: usize,
     vocab: usize,
+    cfg: ServerConfig,
+    /// Round-robin start of the prefill budget scan, so low-index slots
+    /// can't monopolize `prefill_token_budget` across steps.
+    prefill_start: usize,
     pub stats: ServerStats,
 }
 
 impl<'a> Server<'a> {
-    /// Build from a trained session with a decode path.
+    /// Build from a trained session with the default scheduler config
+    /// (chunked prefill when the backend supports it).
     pub fn new(session: &'a Session, seed: u64) -> Result<Self> {
+        Self::with_config(session, seed, ServerConfig::default())
+    }
+
+    /// Build with explicit scheduler knobs. `prefill_chunk` silently drops
+    /// to 0 (token-at-a-time) when the backend has no prefill path.
+    pub fn with_config(session: &'a Session, seed: u64, mut cfg: ServerConfig) -> Result<Self> {
         let batch = session.decode_batch()?;
         if batch == 0 {
             bail!("{}: zero decode batch", session.family());
         }
         let vocab = session.vocab()?;
         let state = session.decode_state()?;
-        let stats =
-            ServerStats { batch, threads: session.threads(), ..ServerStats::default() };
+        if !session.supports_prefill() {
+            cfg.prefill_chunk = 0;
+        }
+        let stats = ServerStats { batch, threads: session.threads(), ..ServerStats::default() };
         Ok(Server {
             session,
             state,
@@ -123,6 +192,8 @@ impl<'a> Server<'a> {
             rng: Rng::new(seed),
             batch,
             vocab,
+            cfg,
+            prefill_start: 0,
             stats,
         })
     }
@@ -131,10 +202,15 @@ impl<'a> Server<'a> {
         self.batch
     }
 
+    /// The scheduler config in effect (after the capability fallback).
+    pub fn config(&self) -> ServerConfig {
+        self.cfg
+    }
+
     /// Enqueue a request.
     pub fn submit(&mut self, req: GenRequest) {
         assert!(!req.prompt.is_empty(), "empty prompt");
-        self.queue.push_back(req);
+        self.queue.push_back((req, Instant::now()));
     }
 
     /// Zero all state rows for slot `s`.
@@ -151,7 +227,7 @@ impl<'a> Server<'a> {
     fn admit(&mut self) {
         for s in 0..self.batch {
             if self.slots[s].is_none() {
-                if let Some(req) = self.queue.pop_front() {
+                if let Some((req, submitted)) = self.queue.pop_front() {
                     self.clear_slot_state(s);
                     self.slots[s] = Some(Slot {
                         id: req.id,
@@ -161,6 +237,8 @@ impl<'a> Server<'a> {
                         max_new: req.max_new,
                         temperature: req.temperature,
                         steps: 0,
+                        submitted,
+                        ttft_secs: 0.0,
                     });
                 }
             }
@@ -169,10 +247,13 @@ impl<'a> Server<'a> {
 
     fn sample(rng: &mut Rng, logits: &[f32], temperature: f32) -> i32 {
         if temperature <= 0.0 {
+            // total_cmp: a NaN logit (diverged run) must not panic the
+            // serving loop — same total-ordering fallback as
+            // tensor::argmax_rows.
             return logits
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i as i32)
                 .unwrap_or(0);
         }
@@ -182,62 +263,140 @@ impl<'a> Server<'a> {
         rng.categorical(&weights) as i32
     }
 
-    /// One engine step: feed every active slot one token, collect outputs.
-    /// Returns the number of active slots processed.
+    /// Move a finished slot's generation into the results.
+    fn finish_slot(&mut self, s: usize) {
+        let done = self.slots[s].take().expect("finishing an occupied slot");
+        self.results.push(GenResult {
+            id: done.id,
+            tokens: done.generated,
+            steps: done.steps,
+            ttft_secs: done.ttft_secs,
+        });
+        self.stats.completed += 1;
+    }
+
+    /// Record a freshly sampled first token's latency on slot `s`.
+    fn record_ttft(stats: &mut ServerStats, slot: &mut Slot) {
+        let ttft = slot.submitted.elapsed().as_secs_f64();
+        slot.ttft_secs = ttft;
+        stats.ttft_sum_secs += ttft;
+        stats.ttft_count += 1;
+    }
+
+    /// One engine step: prefill phase (prompt chunks through the parallel
+    /// path, budget-capped) then decode phase (one batched decode for
+    /// every other occupied slot — generating slots advance one token,
+    /// and budget-starved mid-prompt slots piggyback their next prompt
+    /// token, so every occupied slot makes progress every step). Returns
+    /// the number of tokens processed.
     pub fn engine_step(&mut self) -> Result<usize> {
         self.admit();
+        let mut processed = 0usize;
+        let mut prefilled = vec![false; self.batch];
+
+        // ---- prefill phase: consume prompt chunks -------------------
+        if self.cfg.prefill_chunk > 0 {
+            let mut budget = if self.cfg.prefill_token_budget == 0 {
+                usize::MAX
+            } else {
+                self.cfg.prefill_token_budget
+            };
+            // Round-robin over the slots starting after the last slot the
+            // budget reached, so a saturated engine spreads prompt
+            // ingestion fairly instead of starving high-index slots.
+            let start = self.prefill_start;
+            for off in 0..self.batch {
+                let s = (start + off) % self.batch;
+                if budget == 0 {
+                    break;
+                }
+                let (consumed, pending) = match &self.slots[s] {
+                    Some(slot) if slot.consumed < slot.prompt.len() => {
+                        (slot.consumed, slot.prompt.len() - slot.consumed)
+                    }
+                    _ => continue,
+                };
+                self.prefill_start = (s + 1) % self.batch;
+                let take = self.cfg.prefill_chunk.min(pending).min(budget);
+                let logits = {
+                    let slot = self.slots[s].as_ref().expect("slot checked above");
+                    let chunk = &slot.prompt[consumed..consumed + take];
+                    self.session.prefill(&mut self.state, s, chunk)?
+                };
+                budget -= take;
+                processed += take;
+                self.stats.prefill_tokens += take as u64;
+                prefilled[s] = true;
+                let slot = self.slots[s].as_mut().expect("slot checked above");
+                slot.consumed += take;
+                slot.steps += 1;
+                if slot.consumed == slot.prompt.len() {
+                    // The prompt's last-position logits seed generation.
+                    let t = Self::sample(&mut self.rng, logits.data(), slot.temperature);
+                    slot.generated.push(t);
+                    Self::record_ttft(&mut self.stats, slot);
+                    if slot.generated.len() >= slot.max_new {
+                        self.finish_slot(s);
+                    }
+                }
+            }
+        }
+
+        // ---- decode phase: one batched decode ------------------------
+        // Every occupied slot that didn't prefill this step joins the
+        // batched decode: generating slots feed their last sampled token,
+        // and mid-prompt slots (token-at-a-time mode, or budget-starved
+        // under chunked prefill) piggyback their next prompt token — the
+        // decode graph computes every row of the fixed batch anyway, and
+        // single-token ingestion is bit-identical to a prefill chunk, so
+        // this is progress for free.
         let active: Vec<usize> =
-            (0..self.batch).filter(|&s| self.slots[s].is_some()).collect();
-        if active.is_empty() {
+            (0..self.batch).filter(|&s| !prefilled[s] && self.slots[s].is_some()).collect();
+        if processed == 0 && active.is_empty() {
             return Ok(0);
         }
+        if !active.is_empty() {
+            let mut tokens = vec![0i32; self.batch];
+            for &s in &active {
+                let slot = self.slots[s].as_ref().expect("active slot is occupied");
+                tokens[s] = if slot.consumed < slot.prompt.len() {
+                    slot.prompt[slot.consumed]
+                } else {
+                    *slot.generated.last().expect("generating slot has a last token")
+                };
+            }
+            let logits = self.session.decode(&mut self.state, &tokens)?;
 
-        // Build the per-slot input token.
-        let mut tokens = vec![0i32; self.batch];
-        for &s in &active {
-            let slot = self.slots[s].as_ref().unwrap();
-            tokens[s] = if slot.consumed < slot.prompt.len() {
-                slot.prompt[slot.consumed]
-            } else {
-                *slot.generated.last().expect("generating slot has a last token")
-            };
-        }
-
-        // Execute one batched decode over the host-resident state — the
-        // backend advances the slot rows in place (no per-step copy).
-        let logits = self.session.decode(&mut self.state, &tokens)?;
-
-        // Advance slots.
-        self.stats.engine_steps += 1;
-        self.stats.tokens_processed += active.len() as u64;
-        for &s in &active {
-            let slot = self.slots[s].as_mut().unwrap();
-            slot.steps += 1;
-            if slot.consumed < slot.prompt.len() {
-                slot.consumed += 1;
-                // When the whole prompt is consumed, the logits at its last
-                // token give the first generated token.
-                if slot.consumed == slot.prompt.len() {
+            for &s in &active {
+                let slot = self.slots[s].as_mut().expect("active slot is occupied");
+                slot.steps += 1;
+                if slot.consumed < slot.prompt.len() {
+                    slot.consumed += 1;
+                    self.stats.prefill_tokens += 1;
+                    // When the whole prompt is consumed, the logits at its
+                    // last token give the first generated token.
+                    if slot.consumed == slot.prompt.len() {
+                        let row = &logits.data()[s * self.vocab..(s + 1) * self.vocab];
+                        let t = Self::sample(&mut self.rng, row, slot.temperature);
+                        slot.generated.push(t);
+                        Self::record_ttft(&mut self.stats, slot);
+                    }
+                } else {
                     let row = &logits.data()[s * self.vocab..(s + 1) * self.vocab];
                     let t = Self::sample(&mut self.rng, row, slot.temperature);
                     slot.generated.push(t);
+                    self.stats.decode_tokens += 1;
                 }
-            } else {
-                let row = &logits.data()[s * self.vocab..(s + 1) * self.vocab];
-                let t = Self::sample(&mut self.rng, row, slot.temperature);
-                slot.generated.push(t);
+                if slot.generated.len() >= slot.max_new {
+                    self.finish_slot(s);
+                }
             }
-            if slot.generated.len() >= slot.max_new {
-                let done = self.slots[s].take().unwrap();
-                self.results.push(GenResult {
-                    id: done.id,
-                    tokens: done.generated,
-                    steps: done.steps,
-                });
-                self.stats.completed += 1;
-            }
+            processed += active.len();
         }
-        Ok(active.len())
+
+        self.stats.engine_steps += 1;
+        self.stats.tokens_processed += processed as u64;
+        Ok(processed)
     }
 
     /// Run until queue + slots drain; returns all results (by request id).
@@ -273,6 +432,19 @@ mod tests {
     }
 
     #[test]
+    fn greedy_sampling_survives_nan_logits() {
+        // Regression: the old partial_cmp().unwrap() panicked on NaN
+        // logits (a diverged run would take the whole engine down).
+        let mut rng = Rng::new(1);
+        let logits = vec![0.5f32, f32::NAN, 2.0];
+        let t = Server::sample(&mut rng, &logits, 0.0);
+        assert!((0..3).contains(&t));
+        let all_nan = vec![f32::NAN; 4];
+        let t = Server::sample(&mut rng, &all_nan, 0.0);
+        assert!((0..4).contains(&t));
+    }
+
+    #[test]
     fn temperature_sampling_respects_distribution() {
         let mut rng = Rng::new(2);
         let logits = vec![0.0f32, 10.0];
@@ -282,6 +454,16 @@ mod tests {
         assert!(hits > 95, "peaked logits should dominate, got {hits}");
     }
 
+    fn drive(server: &mut Server<'_>, n_req: u64, seed: u64) -> Vec<GenResult> {
+        let mut rng = Rng::new(seed);
+        for id in 0..n_req {
+            let prompt: Vec<i32> =
+                (0..rng.range(3, 8)).map(|_| rng.below(256) as i32).collect();
+            server.submit(GenRequest { id, prompt, max_new: 3, temperature: 0.0 });
+        }
+        server.run_to_completion().unwrap()
+    }
+
     #[test]
     fn server_serves_on_the_cpu_backend() {
         use crate::runtime::CpuBackend;
@@ -289,26 +471,49 @@ mod tests {
         let session =
             crate::coordinator::session::Session::init(&backend, "lm_tiny_efla", 5).unwrap();
         let mut server = Server::new(&session, 99).unwrap();
-        let mut rng = Rng::new(1);
+        assert!(server.config().prefill_chunk > 0, "CPU backend supports prefill");
         // more requests than slots: exercises continuous batching
         let n_req = server.batch_size() as u64 + 2;
-        for id in 0..n_req {
-            let prompt: Vec<i32> =
-                (0..rng.range(3, 8)).map(|_| rng.below(256) as i32).collect();
-            server.submit(GenRequest { id, prompt, max_new: 3, temperature: 0.0 });
-        }
-        let results = server.run_to_completion().unwrap();
+        let results = drive(&mut server, n_req, 1);
         assert_eq!(results.len(), n_req as usize);
         for r in &results {
             assert_eq!(r.tokens.len(), 3);
             assert!(r.tokens.iter().all(|&t| (0..256).contains(&t)));
+            assert!(r.ttft_secs >= 0.0);
         }
         assert_eq!(server.stats.completed, n_req);
-        // Utilization telemetry: the queue outnumbers the slots, so most
-        // steps run a full batch.
         assert_eq!(server.stats.batch, server.batch_size());
         assert!(server.stats.threads >= 1);
+        // Token accounting: the prefill/decode split covers everything.
+        assert_eq!(
+            server.stats.prefill_tokens + server.stats.decode_tokens,
+            server.stats.tokens_processed
+        );
+        assert_eq!(server.stats.ttft_count, n_req);
+        assert!(server.stats.mean_ttft_secs() >= 0.0);
+        // Chunked prefill ingests several prompt tokens per step, so the
+        // per-step token rate clears what token-at-a-time could reach.
+        let util = server.stats.utilization();
+        assert!(util > 0.5, "tokens per step per slot {util}");
+    }
+
+    #[test]
+    fn token_at_a_time_mode_keeps_slot_occupancy_bounded() {
+        use crate::runtime::CpuBackend;
+        let backend = CpuBackend::new();
+        let session =
+            crate::coordinator::session::Session::init(&backend, "lm_tiny_efla", 5).unwrap();
+        let cfg = ServerConfig { prefill_chunk: 0, prefill_token_budget: 0 };
+        let mut server = Server::with_config(&session, 99, cfg).unwrap();
+        let n_req = server.batch_size() as u64 + 2;
+        let results = drive(&mut server, n_req, 1);
+        assert_eq!(results.len(), n_req as usize);
+        // One token per slot per step: occupancy stays in (0, 1].
         let util = server.stats.utilization();
         assert!(util > 0.5 && util <= 1.0, "slot occupancy {util}");
+        assert_eq!(
+            server.stats.prefill_tokens + server.stats.decode_tokens,
+            server.stats.tokens_processed
+        );
     }
 }

@@ -97,4 +97,18 @@ impl Session {
     pub fn decode(&self, state: &mut [HostValue], tokens: &[i32]) -> Result<Tensor> {
         self.inner.decode(state, tokens)
     }
+
+    /// True when the backend implements the chunked prefill path.
+    pub fn supports_prefill(&self) -> bool {
+        self.inner.supports_prefill()
+    }
+
+    /// Chunked prompt prefill for one slot: runs `tokens` through the
+    /// parallel forward path seeded from (and advancing, in place) that
+    /// slot's state rows; returns the last-position logits (1, vocab).
+    /// Bit-identical to feeding the tokens one per step through
+    /// [`Session::decode`], for any chunking.
+    pub fn prefill(&self, state: &mut [HostValue], slot: usize, tokens: &[i32]) -> Result<Tensor> {
+        self.inner.prefill(state, slot, tokens)
+    }
 }

@@ -137,7 +137,11 @@ where
 
 /// Build the LM data pipeline for a config: corpus -> BPE -> token stream
 /// -> prefetching batcher. Returns (prefetcher, tokenizer).
-pub fn lm_data(cfg: &RunConfig, batch: usize, seq: usize) -> Result<(Prefetcher<(HostValue, HostValue)>, Bpe)> {
+pub fn lm_data(
+    cfg: &RunConfig,
+    batch: usize,
+    seq: usize,
+) -> Result<(Prefetcher<(HostValue, HostValue)>, Bpe)> {
     let vocab = vocab_for_preset(&cfg.preset);
     let mut corpus = Corpus::new(cfg.seed, CorpusConfig::default());
     let sample = corpus.text(cfg.corpus_bytes.min(300_000));
@@ -181,7 +185,12 @@ pub fn vocab_for_preset(preset: &str) -> usize {
 }
 
 /// Build a MAD data prefetcher for one task.
-pub fn mad_data(task: MadTask, batch: usize, seq: usize, seed: u64) -> Prefetcher<(HostValue, HostValue)> {
+pub fn mad_data(
+    task: MadTask,
+    batch: usize,
+    seq: usize,
+    seed: u64,
+) -> Prefetcher<(HostValue, HostValue)> {
     let mut g = MadGen::new(task, seq, seed);
     Prefetcher::spawn(4, move || {
         let (t, y) = g.batch(batch);

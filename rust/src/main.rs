@@ -21,7 +21,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use efla::coordinator::config::{RunConfig, Task};
-use efla::coordinator::server::{GenRequest, Server};
+use efla::coordinator::server::{GenRequest, Server, ServerConfig};
 use efla::coordinator::session::Session;
 use efla::coordinator::trainer;
 use efla::runtime::{open_backend, open_backend_threads};
@@ -85,6 +85,16 @@ fn common_args(program: &str, about: &str) -> Args {
         .opt("eval-batches", "8", "eval batches at the end")
         .opt("corpus-bytes", "2000000", "synthetic corpus size (LM)")
         .opt("threads", "0", "CPU worker threads (0 = auto / EFLA_NUM_THREADS)")
+        .opt(
+            "prefill-chunk",
+            "64",
+            "serve: prompt tokens per slot per engine step (0 = token-at-a-time)",
+        )
+        .opt(
+            "prefill-budget",
+            "256",
+            "serve: max prompt tokens per engine step across slots (0 = unlimited)",
+        )
         .opt("artifacts", "artifacts", "artifact directory (PJRT backend)")
         .opt("out", "runs", "output directory")
 }
@@ -104,6 +114,8 @@ fn build_config(p: &efla::util::cli::Parsed) -> Result<RunConfig> {
     cfg.eval_batches = p.usize("eval-batches")?;
     cfg.corpus_bytes = p.usize("corpus-bytes")?;
     cfg.threads = p.usize("threads")?;
+    cfg.prefill_chunk = p.usize("prefill-chunk")?;
+    cfg.prefill_token_budget = p.usize("prefill-budget")?;
     cfg.artifact_dir = PathBuf::from(p.get("artifacts")?);
     cfg.out_dir = PathBuf::from(p.get("out")?);
     Ok(cfg)
@@ -148,7 +160,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         trainer::train_lm(&mut session, schedule, cfg.steps, || pf.next(), |_| {})?;
     }
 
-    let mut server = Server::new(&session, cfg.seed)?;
+    let server_cfg = ServerConfig {
+        prefill_chunk: cfg.prefill_chunk,
+        prefill_token_budget: cfg.prefill_token_budget,
+    };
+    let mut server = Server::with_config(&session, cfg.seed, server_cfg)?;
     let n_req = p.usize("requests")?;
     let max_new = p.usize("max-new")?;
     let temp = p.f32("temperature")?;
@@ -163,16 +179,29 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let results = server.run_to_completion()?;
     log::info!(
         "served {} requests | {} engine steps | {:.1} tok/s \
-         (batch {}, {} threads, {:.0}% slot occupancy)",
+         (batch {}, {} threads, prefill_chunk {}, {:.2} tok/step/slot)",
         results.len(),
         server.stats.engine_steps,
         server.stats.tokens_per_sec(),
         server.batch_size(),
         server.stats.threads,
-        server.stats.utilization() * 100.0
+        server.config().prefill_chunk,
+        server.stats.utilization()
+    );
+    log::info!(
+        "prompt/generated split: {} prefill + {} decode tokens | mean TTFT {:.1} ms",
+        server.stats.prefill_tokens,
+        server.stats.decode_tokens,
+        server.stats.mean_ttft_secs() * 1e3
     );
     for r in results.iter().take(4) {
-        log::info!("req {}: {} new tokens in {} slot-steps", r.id, r.tokens.len(), r.steps);
+        log::info!(
+            "req {}: {} new tokens in {} slot-steps (ttft {:.1} ms)",
+            r.id,
+            r.tokens.len(),
+            r.steps,
+            r.ttft_secs * 1e3
+        );
     }
     Ok(())
 }

@@ -10,6 +10,8 @@
 //! * `eval`  — forward-only loss/accuracy statistics;
 //! * `decode` — one-token recurrent decode over host-resident state
 //!   (the O(1)-state serving path);
+//! * `prefill` — chunked prompt ingestion for one serving slot through
+//!   the parallel forward path (optional; probed via `supports_prefill`);
 //! * `export_state` / `import_state` — checkpointing.
 //!
 //! Implementations:
@@ -102,4 +104,25 @@ pub trait ModelSession {
     /// **in place** (shapes are preserved; the serving loop never copies
     /// state between steps), return logits `(decode_batch, vocab)`.
     fn decode(&self, state: &mut [HostValue], tokens: &[i32]) -> Result<Tensor>;
+
+    /// True when [`ModelSession::prefill`] is implemented — the serving
+    /// engine falls back to token-at-a-time prompt ingestion otherwise.
+    fn supports_prefill(&self) -> bool {
+        false
+    }
+
+    /// Chunked prompt prefill: run `tokens` (a whole prompt or a chunk of
+    /// it) through the parallel forward path for one `slot`, seeded from
+    /// that slot's rows of `state` (advanced **in place**; all other
+    /// slots' rows are untouched), and return the last-position logits,
+    /// shape `(1, vocab)`.
+    ///
+    /// Contract: for any prompt and any split into prefill calls, the
+    /// final slot state and logits are bit-identical to feeding the same
+    /// tokens one per step through [`ModelSession::decode`] — chunking is
+    /// a pure throughput optimization, never a numerics change.
+    fn prefill(&self, state: &mut [HostValue], slot: usize, tokens: &[i32]) -> Result<Tensor> {
+        let _ = (state, slot, tokens);
+        anyhow::bail!("{}: prefill is not supported by this backend", self.family())
+    }
 }

@@ -50,7 +50,9 @@ impl LmHead {
 
     /// [`logits`](Self::logits) into a caller-provided buffer
     /// (overwritten), the normalized activations drawn from the executor
-    /// arena — the allocation-free serving form.
+    /// arena — the allocation-free serving form. The tied-head matmul is
+    /// row-class pinned so a slot's logits row is bit-identical whether it
+    /// comes from a full decode batch or a single-row prefill call.
     pub fn logits_into(&self, ctx: &Ctx, x: &[f32], logits: &mut [f32]) {
         let (d, vocab) = (ctx.cfg.d_model, ctx.cfg.vocab);
         let rows = x.len() / d;
@@ -58,7 +60,7 @@ impl LmHead {
         let mut xf = ctx.exec.take(x.len());
         self.norm_f.infer_into(ctx, x, &mut xf);
         logits.fill(0.0);
-        ops::matmul_nt_acc(
+        ops::matmul_nt_acc_serving(
             ctx.exec,
             &xf,
             ctx.params.tensor(self.embed).data(),

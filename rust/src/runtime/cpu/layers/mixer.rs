@@ -16,13 +16,21 @@
 use crate::attention::backward::delta_bptt_into;
 use crate::attention::chunkwise::chunkwise_delta_alpha_into;
 use crate::attention::gates::{alpha_efla, alpha_efla_grad, EPS_LAMBDA};
-use crate::attention::sequential::delta_step_alpha;
-use crate::tensor::{matmul_tn_into, Tensor};
+use crate::tensor::{matmul_tn_into, Scratch, Tensor};
 
 use super::super::config::{CpuModelCfg, Mixer, CONV_K};
 use super::super::ops;
 use super::super::params::ParamSet;
 use super::{Ctx, Layer, RmsNorm};
+
+/// Kernel chunk size of the **serving** delta recurrence (decode and
+/// prefill). With C = 1 the chunkwise kernel's per-token arithmetic is
+/// independent of how a prompt is partitioned into prefill calls, so
+/// chunked prefill is bit-identical to token-at-a-time decoding for any
+/// `prefill_chunk` — the serving paths trade the intra-chunk matmul
+/// batching (which re-associates sums) for that reproducibility. Training
+/// keeps the throughput-first WY/UT chunking via `cfg.chunk`.
+const SERVE_KERNEL_CHUNK: usize = 1;
 
 pub struct MixerLayer {
     wq: usize,
@@ -134,6 +142,12 @@ impl MixerLayer {
     /// are updated in place; the mixed output lands in the **zeroed**
     /// `out` (B, d). Every temporary comes from the executor arenas, so
     /// the per-token loop is allocation-free in steady state.
+    ///
+    /// Serving-arithmetic contract: projections go through the row-class
+    /// pinned [`ops::matmul_acc_serving`] and the state update through the
+    /// chunkwise kernel at [`SERVE_KERNEL_CHUNK`], so one decode step is
+    /// bit-identical to a length-1 [`MixerLayer::prefill`] — and a chain
+    /// of decode steps to a prefill over the same tokens.
     pub fn decode_step(
         &self,
         ctx: &Ctx,
@@ -151,11 +165,11 @@ impl MixerLayer {
 
         // Projections + rolling conv + SiLU, all through pooled buffers.
         let mut qt = ctx.exec.take(b * inner);
-        ops::matmul_acc(ctx.exec, x, p.tensor(self.wq).data(), &mut qt, b, d, inner);
+        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wq).data(), &mut qt, b, d, inner);
         let mut kt = ctx.exec.take(b * inner);
-        ops::matmul_acc(ctx.exec, x, p.tensor(self.wk).data(), &mut kt, b, d, inner);
+        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wk).data(), &mut kt, b, d, inner);
         let mut vt = ctx.exec.take(b * inner);
-        ops::matmul_acc(ctx.exec, x, p.tensor(self.wv).data(), &mut vt, b, d, inner);
+        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wv).data(), &mut vt, b, d, inner);
         let mut qc = ctx.exec.take(b * inner);
         ops::conv_step_into(&qt, cache_q, p.tensor(self.conv_q).data(), b, inner, CONV_K, &mut qc);
         let mut kc = ctx.exec.take(b * inner);
@@ -182,7 +196,7 @@ impl MixerLayer {
         let k_use: &[f32] = if cfg.mixer == Mixer::DeltaNet { &kn } else { &kc };
 
         let mut b_logits = ctx.exec.take(b * h);
-        ops::matmul_acc(ctx.exec, x, p.tensor(self.w_beta).data(), &mut b_logits, b, d, h);
+        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.w_beta).data(), &mut b_logits, b, d, h);
         let adecay = p.tensor(self.adecay).data();
 
         // One state update per (batch, head): both the state (width dh*dh)
@@ -193,37 +207,37 @@ impl MixerLayer {
         let tasks = b * h;
         let mut o_all = ctx.exec.take(b * inner);
         let fan_out = tasks * dh * dh >= 1 << 20 && ctx.exec.threads() > 1;
-        let step = |r0: usize, r1: usize,
-                    s_chunk: &mut [f32],
-                    o_chunk: &mut [f32],
-                    sc: &mut crate::tensor::Scratch| {
-            let mut stk = sc.take(dh);
-            for i in r0..r1 {
-                let (bi, hh) = (i / h, i % h);
-                let bv = Self::beta_eff(cfg, adecay, b_logits[bi * h + hh], hh);
-                let base = bi * inner + hh * dh;
-                let krow = &k_use[base..base + dh];
-                let alpha = if cfg.mixer == Mixer::DeltaNet {
-                    bv
-                } else {
-                    let lam: f32 = krow.iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
-                    alpha_efla(bv, lam)
-                };
-                let li = i - r0;
-                delta_step_alpha(
-                    &mut s_chunk[li * dh * dh..(li + 1) * dh * dh],
-                    &q_use[base..base + dh],
-                    krow,
-                    &vc[base..base + dh],
-                    alpha,
-                    &mut o_chunk[li * dh..(li + 1) * dh],
-                    &mut stk,
-                    dh,
-                    dh,
-                );
-            }
-            sc.put(stk);
-        };
+        let step =
+            |r0: usize, r1: usize, s_chunk: &mut [f32], o_chunk: &mut [f32], sc: &mut Scratch| {
+                for i in r0..r1 {
+                    let (bi, hh) = (i / h, i % h);
+                    let bv = Self::beta_eff(cfg, adecay, b_logits[bi * h + hh], hh);
+                    let base = bi * inner + hh * dh;
+                    let krow = &k_use[base..base + dh];
+                    let alpha = if cfg.mixer == Mixer::DeltaNet {
+                        bv
+                    } else {
+                        let lam: f32 = krow.iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
+                        alpha_efla(bv, lam)
+                    };
+                    let li = i - r0;
+                    // L = 1 invocation of the chunkwise kernel: same
+                    // arithmetic as one token of a prefill segment (see
+                    // SERVE_KERNEL_CHUNK).
+                    chunkwise_delta_alpha_into(
+                        &q_use[base..base + dh],
+                        krow,
+                        &vc[base..base + dh],
+                        &[alpha],
+                        dh,
+                        dh,
+                        SERVE_KERNEL_CHUNK,
+                        &mut o_chunk[li * dh..(li + 1) * dh],
+                        &mut s_chunk[li * dh * dh..(li + 1) * dh * dh],
+                        sc,
+                    );
+                }
+            };
         if fan_out {
             ctx.exec.par_rows2_scratch(tasks, s, &mut o_all, step);
         } else {
@@ -239,7 +253,154 @@ impl MixerLayer {
         let mut o_norm = ctx.exec.take(b * inner);
         self.norm_out.infer_into(ctx, &o_all, &mut o_norm);
         ctx.exec.put(o_all);
-        ops::matmul_acc(ctx.exec, &o_norm, p.tensor(self.wo).data(), out, b, inner, d);
+        ops::matmul_acc_serving(ctx.exec, &o_norm, p.tensor(self.wo).data(), out, b, inner, d);
+        ctx.exec.put(o_norm);
+    }
+
+    /// Chunked prefill: run an `ctx.l`-token prompt segment of **one**
+    /// sequence (`ctx.b == 1`) through the full mixer in a single batched
+    /// pass — projections as (L, d) row-class-pinned matmuls, causal conv
+    /// warm-started from (and advancing) the rolling caches, and one
+    /// seeded chunkwise delta run per head, fanned out over the executor.
+    /// The slot's conv caches (K-1, inner) and per-head state (H, Dh, Dh)
+    /// advance in place; the mixed output lands in the **zeroed** `out`
+    /// (L, d).
+    ///
+    /// Bit-identical to `ctx.l` successive [`MixerLayer::decode_step`]
+    /// calls over the same tokens, for any split of the prompt into
+    /// prefill segments: every cross-token reduction either replays the
+    /// rolling-cache arithmetic (conv) or runs the chunkwise kernel at
+    /// [`SERVE_KERNEL_CHUNK`], and every matmul row is pinned to the
+    /// single-row kernel class.
+    pub fn prefill(
+        &self,
+        ctx: &Ctx,
+        x: &[f32],
+        cache_q: &mut [f32],
+        cache_k: &mut [f32],
+        cache_v: &mut [f32],
+        s: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let cfg = ctx.cfg;
+        let (d, inner, h, dh) = (cfg.d_model, cfg.inner(), cfg.n_heads, cfg.head_dim);
+        debug_assert_eq!(ctx.b, 1, "prefill runs one slot at a time");
+        let l = ctx.l;
+        let p = ctx.params;
+
+        // Projections over the whole segment, then the warm-started conv.
+        let mut qt = ctx.exec.take(l * inner);
+        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wq).data(), &mut qt, l, d, inner);
+        let mut kt = ctx.exec.take(l * inner);
+        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wk).data(), &mut kt, l, d, inner);
+        let mut vt = ctx.exec.take(l * inner);
+        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wv).data(), &mut vt, l, d, inner);
+        let mut qc = ctx.exec.take(l * inner);
+        ops::conv_prefill(&qt, cache_q, p.tensor(self.conv_q).data(), l, inner, CONV_K, &mut qc);
+        let mut kc = ctx.exec.take(l * inner);
+        ops::conv_prefill(&kt, cache_k, p.tensor(self.conv_k).data(), l, inner, CONV_K, &mut kc);
+        let mut vc = ctx.exec.take(l * inner);
+        ops::conv_prefill(&vt, cache_v, p.tensor(self.conv_v).data(), l, inner, CONV_K, &mut vc);
+        ctx.exec.put(qt);
+        ctx.exec.put(kt);
+        ctx.exec.put(vt);
+        ops::silu_inplace(&mut qc);
+        ops::silu_inplace(&mut kc);
+        ops::silu_inplace(&mut vc);
+
+        // DeltaNet normalizes q/k per head row.
+        let mut qn = Vec::new();
+        let mut kn = Vec::new();
+        if cfg.mixer == Mixer::DeltaNet {
+            qn = ctx.exec.take(l * inner);
+            ops::l2norm_into(&qc, dh, &mut qn);
+            kn = ctx.exec.take(l * inner);
+            ops::l2norm_into(&kc, dh, &mut kn);
+        }
+        let q_use: &[f32] = if cfg.mixer == Mixer::DeltaNet { &qn } else { &qc };
+        let k_use: &[f32] = if cfg.mixer == Mixer::DeltaNet { &kn } else { &kc };
+
+        // Per-token scalar gate (same expression and summation order as
+        // decode_step resolves per token).
+        let mut b_logits = ctx.exec.take(l * h);
+        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.w_beta).data(), &mut b_logits, l, d, h);
+        let adecay = p.tensor(self.adecay).data();
+        let mut alpha = ctx.exec.take(l * h);
+        for t in 0..l {
+            for hh in 0..h {
+                let bv = Self::beta_eff(cfg, adecay, b_logits[t * h + hh], hh);
+                alpha[t * h + hh] = if cfg.mixer == Mixer::DeltaNet {
+                    bv
+                } else {
+                    let krow = &k_use[t * inner + hh * dh..t * inner + (hh + 1) * dh];
+                    let lam: f32 = krow.iter().map(|x| x * x).sum::<f32>().max(EPS_LAMBDA);
+                    alpha_efla(bv, lam)
+                };
+            }
+        }
+
+        // One seeded chunkwise run per head: the state rows (H, Dh*Dh) and
+        // the head outputs (H, L*Dh) are contiguous per task, so par_rows2
+        // advances the slot state in place, exactly like decode_step.
+        let width = l * dh;
+        let mut o_heads = ctx.exec.take(h * width);
+        {
+            let alpha = &alpha;
+            ctx.exec.par_rows2_scratch(h, s, &mut o_heads, |r0, r1, s_chunk, o_chunk, sc| {
+                for hh in r0..r1 {
+                    let li = hh - r0;
+                    let mut qh = sc.take(width);
+                    gather_head_into(q_use, 0, hh, l, inner, dh, &mut qh);
+                    let mut kh = sc.take(width);
+                    gather_head_into(k_use, 0, hh, l, inner, dh, &mut kh);
+                    let mut vh = sc.take(width);
+                    gather_head_into(&vc, 0, hh, l, inner, dh, &mut vh);
+                    let mut al = sc.take(l);
+                    for (t, a) in al.iter_mut().enumerate() {
+                        *a = alpha[t * h + hh];
+                    }
+                    chunkwise_delta_alpha_into(
+                        &qh,
+                        &kh,
+                        &vh,
+                        &al,
+                        dh,
+                        dh,
+                        SERVE_KERNEL_CHUNK,
+                        &mut o_chunk[li * width..(li + 1) * width],
+                        &mut s_chunk[li * dh * dh..(li + 1) * dh * dh],
+                        sc,
+                    );
+                    sc.put(qh);
+                    sc.put(kh);
+                    sc.put(vh);
+                    sc.put(al);
+                }
+            });
+        }
+        ctx.exec.put(b_logits);
+        ctx.exec.put(alpha);
+        ctx.exec.put(qc);
+        ctx.exec.put(kc);
+        ctx.exec.put(vc);
+        ctx.exec.put(qn);
+        ctx.exec.put(kn);
+
+        // Head-major (H, L, Dh) -> token-major (L, inner): a pure copy, so
+        // the per-token bits match decode_step's direct (B, inner) layout.
+        let mut o_all = ctx.exec.take(l * inner);
+        for hh in 0..h {
+            for t in 0..l {
+                o_all[t * inner + hh * dh..t * inner + (hh + 1) * dh]
+                    .copy_from_slice(&o_heads[hh * width + t * dh..hh * width + (t + 1) * dh]);
+            }
+        }
+        ctx.exec.put(o_heads);
+
+        let mut o_norm = ctx.exec.take(l * inner);
+        self.norm_out.infer_into(ctx, &o_all, &mut o_norm);
+        ctx.exec.put(o_all);
+        ops::matmul_acc_serving(ctx.exec, &o_norm, p.tensor(self.wo).data(), out, l, inner, d);
         ctx.exec.put(o_norm);
     }
 }
@@ -331,7 +492,8 @@ impl Layer for MixerLayer {
         });
         let mut o_raw = vec![0.0f32; rows * inner];
         for i in 0..b * h {
-            scatter_head_add(&mut o_raw, &o_heads[i * width..(i + 1) * width], i / h, i % h, l, inner, dh);
+            let oh = &o_heads[i * width..(i + 1) * width];
+            scatter_head_add(&mut o_raw, oh, i / h, i % h, l, inner, dh);
         }
 
         // Per-head output norm, merge, project.

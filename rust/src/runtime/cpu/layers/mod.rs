@@ -183,4 +183,37 @@ impl Block {
         ctx.exec.put(normed);
         ctx.exec.put(branch);
     }
+
+    /// Chunked-prefill step of a block: the `ctx.l`-token residual stream
+    /// `x` (L, d) of **one** sequence (`ctx.b == 1`) advances through the
+    /// block while the slot's rolling decode state (conv caches + per-head
+    /// S) is consumed and updated in place. Bit-identical to `ctx.l`
+    /// successive [`Block::decode_step`] calls — every sub-layer is either
+    /// row-local or serving-arithmetic pinned (see
+    /// [`MixerLayer::prefill`]).
+    pub fn prefill(
+        &self,
+        ctx: &Ctx,
+        x: &mut [f32],
+        cache_q: &mut [f32],
+        cache_k: &mut [f32],
+        cache_v: &mut [f32],
+        s: &mut [f32],
+    ) {
+        debug_assert_eq!(ctx.b, 1);
+        let mut normed = ctx.exec.take(x.len());
+        let mut branch = ctx.exec.take(x.len());
+        self.norm_attn.infer_into(ctx, x, &mut normed);
+        self.mixer.prefill(ctx, &normed, cache_q, cache_k, cache_v, s, &mut branch);
+        for (xv, mv) in x.iter_mut().zip(branch.iter()) {
+            *xv += mv;
+        }
+        self.norm_mlp.infer_into(ctx, x, &mut normed);
+        self.mlp.infer_into(ctx, &normed, &mut branch);
+        for (xv, mv) in x.iter_mut().zip(branch.iter()) {
+            *xv += mv;
+        }
+        ctx.exec.put(normed);
+        ctx.exec.put(branch);
+    }
 }

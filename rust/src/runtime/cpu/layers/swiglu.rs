@@ -48,21 +48,53 @@ impl SwiGlu {
 
     /// [`infer`](Self::infer) into a caller-provided buffer, all
     /// intermediates drawn from the executor arena (the allocation-free
-    /// decode form). `out` is overwritten.
+    /// serving form — decode and chunked prefill). `out` is overwritten.
+    ///
+    /// Matmuls go through the row-class pinned serving wrappers, so a
+    /// row's bits are independent of how many rows share the call: one
+    /// decode token and the same token inside a prefill chunk agree
+    /// exactly. (For row counts where the training dispatch picks the
+    /// packed kernel this can differ from [`Layer::forward`] in the last
+    /// bits — the serving paths only ever compare against themselves.)
     pub fn infer_into(&self, ctx: &Ctx, x: &[f32], out: &mut [f32]) {
-        let (d, f, rows) = (ctx.cfg.d_model, ctx.cfg.mlp_width(), ctx.rows());
+        let (d, f) = (ctx.cfg.d_model, ctx.cfg.mlp_width());
+        let rows = x.len() / d;
         debug_assert_eq!(out.len(), rows * d);
         let mut gpre = ctx.exec.take(rows * f);
-        ops::matmul_acc(ctx.exec, x, ctx.params.tensor(self.w_gate).data(), &mut gpre, rows, d, f);
+        ops::matmul_acc_serving(
+            ctx.exec,
+            x,
+            ctx.params.tensor(self.w_gate).data(),
+            &mut gpre,
+            rows,
+            d,
+            f,
+        );
         let mut up = ctx.exec.take(rows * f);
-        ops::matmul_acc(ctx.exec, x, ctx.params.tensor(self.w_up).data(), &mut up, rows, d, f);
-        // gu = silu(gpre) * up, in place in gpre (same expression as the
-        // taped forward, so infer_into stays bit-identical to forward).
+        ops::matmul_acc_serving(
+            ctx.exec,
+            x,
+            ctx.params.tensor(self.w_up).data(),
+            &mut up,
+            rows,
+            d,
+            f,
+        );
+        // gu = silu(gpre) * up, in place in gpre (same per-element
+        // expression as the taped forward).
         for (g, u) in gpre.iter_mut().zip(up.iter()) {
             *g = ops::silu(*g) * *u;
         }
         out.fill(0.0);
-        ops::matmul_acc(ctx.exec, &gpre, ctx.params.tensor(self.w_down).data(), out, rows, f, d);
+        ops::matmul_acc_serving(
+            ctx.exec,
+            &gpre,
+            ctx.params.tensor(self.w_down).data(),
+            out,
+            rows,
+            f,
+            d,
+        );
         ctx.exec.put(gpre);
         ctx.exec.put(up);
     }

@@ -118,7 +118,11 @@ impl CpuSession {
     }
 
     /// Unpack (d0, d1) for the classifier: pixels (B, 784) f32 + labels (B,).
-    fn clf_batch<'a>(&self, d0: &'a HostValue, d1: &'a HostValue) -> Result<(&'a [f32], &'a [i32])> {
+    fn clf_batch<'a>(
+        &self,
+        d0: &'a HostValue,
+        d1: &'a HostValue,
+    ) -> Result<(&'a [f32], &'a [i32])> {
         let pixels = d0.as_f32()?;
         if pixels.shape() != [self.cfg.batch, self.cfg.seq] {
             bail!(
@@ -325,6 +329,48 @@ impl ModelSession for CpuSession {
             .collect::<Result<_>>()?;
         stack.decode(&self.cfg, &self.params, &self.exec, &mut flat, tokens)
     }
+
+    fn supports_prefill(&self) -> bool {
+        self.lm_stack.is_some()
+    }
+
+    fn prefill(&self, state: &mut [HostValue], slot: usize, tokens: &[i32]) -> Result<Tensor> {
+        let stack = self
+            .lm_stack
+            .as_ref()
+            .ok_or_else(|| anyhow!("{}: prefill is only available for LM families", self.family))?;
+        let b = self.cfg.decode_batch;
+        if slot >= b {
+            bail!("{}: prefill slot {slot} out of range (decode batch {b})", self.family);
+        }
+        let shapes = decode_state_shapes(&self.cfg);
+        if state.len() != shapes.len() {
+            bail!(
+                "{}: prefill expects {} state tensors, got {}",
+                self.family,
+                shapes.len(),
+                state.len()
+            );
+        }
+        // Slice out the slot's rows of each (decode_batch, ...) tensor —
+        // prefill advances exactly this slot's state in place and never
+        // touches the other rows.
+        let mut flat: Vec<&mut [f32]> = state
+            .iter_mut()
+            .enumerate()
+            .map(|(i, hv)| {
+                let t = hv
+                    .as_f32_mut()
+                    .map_err(|e| anyhow!("state tensor {i}: {e}"))?;
+                if t.shape() != shapes[i].as_slice() {
+                    bail!("state tensor {i}: shape {:?}, expected {:?}", t.shape(), shapes[i]);
+                }
+                let row = t.len() / b;
+                Ok(&mut t.data_mut()[slot * row..(slot + 1) * row])
+            })
+            .collect::<Result<_>>()?;
+        stack.prefill(&self.cfg, &self.params, &self.exec, &mut flat, tokens)
+    }
 }
 
 #[cfg(test)]
@@ -338,10 +384,9 @@ mod tests {
         assert_eq!(session.batch(), 4);
         assert_eq!(session.seq(), 64);
         let rows = session.batch() * session.seq();
-        let tokens =
-            HostValue::i32(&[session.batch(), session.seq()], (0..rows).map(|i| (i % 251) as i32).collect());
-        let targets =
-            HostValue::i32(&[session.batch(), session.seq()], (0..rows).map(|i| ((i + 1) % 251) as i32).collect());
+        let shape = [session.batch(), session.seq()];
+        let tokens = HostValue::i32(&shape, (0..rows).map(|i| (i % 251) as i32).collect());
+        let targets = HostValue::i32(&shape, (0..rows).map(|i| ((i + 1) % 251) as i32).collect());
         let mut first = None;
         let mut last = 0.0;
         for _ in 0..8 {
@@ -395,6 +440,42 @@ mod tests {
         assert_eq!(s.threads(), 3);
         let auto = CpuBackend::new().open_session("lm_tiny_efla", 1).unwrap();
         assert!(auto.threads() >= 1);
+    }
+
+    #[test]
+    fn prefill_capability_and_validation() {
+        let backend = CpuBackend::with_threads(1);
+        let session = backend.open_session("lm_tiny_efla", 5).unwrap();
+        assert!(session.supports_prefill());
+        let mut state = session.decode_state().unwrap();
+        // Slot out of range and empty prompts are rejected cleanly.
+        let b = session.decode_batch().unwrap();
+        assert!(session.prefill(&mut state, b, &[1, 2, 3]).is_err());
+        assert!(session.prefill(&mut state, 0, &[]).is_err());
+        // A valid call returns (1, vocab) logits and only touches the
+        // requested slot's rows.
+        let before: Vec<Vec<f32>> = state
+            .iter()
+            .map(|hv| hv.as_f32().unwrap().data().to_vec())
+            .collect();
+        let logits = session.prefill(&mut state, 1, &[7, 8, 9, 10]).unwrap();
+        assert_eq!(logits.shape(), &[1, session.vocab().unwrap()]);
+        assert!(logits.data().iter().all(|x| x.is_finite()));
+        for (hv, old) in state.iter().zip(before.iter()) {
+            let t = hv.as_f32().unwrap();
+            let row = t.len() / b;
+            for s in 0..b {
+                let same = t.data()[s * row..(s + 1) * row] == old[s * row..(s + 1) * row];
+                if s == 1 {
+                    assert!(!same, "prefilled slot must advance");
+                } else {
+                    assert!(same, "slot {s} must be untouched");
+                }
+            }
+        }
+
+        let clf = backend.open_session("clf_efla", 5).unwrap();
+        assert!(!clf.supports_prefill());
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //! * [`lm_loss`]  — token embedding -> blocks -> tied-softmax CE head;
 //! * [`clf_loss`] — pixel embedding -> blocks -> pooled classifier head;
 //! * [`LmStack::decode`] — one-token recurrent decode over in-place
-//!   state (the session prebuilds the [`LmStack`] once).
+//!   state (the session prebuilds the [`LmStack`] once);
+//! * [`LmStack::prefill`] — chunked prompt prefill for one serving slot,
+//!   bit-identical to the equivalent chain of decode steps.
 //!
 //! Architecture mirrors `python/compile/model.py` (LM) and
 //! `python/compile/classifier.py` (sMNIST): each block is {RMSNorm ->
@@ -210,6 +212,60 @@ impl LmStack {
         self.head.logits_into(&ctx, &x, &mut logits);
         exec.put(x);
         Ok(Tensor::from_vec(&[b, cfg.vocab], logits))
+    }
+
+    /// Chunked prompt prefill for **one** serving slot: run `tokens` (a
+    /// whole prompt or any contiguous chunk of it) through the stack in a
+    /// single batched pass, seeded from the slot's state slices — the
+    /// caller passes the per-slot rows of the [`decode_state_shapes`]
+    /// tensors, in order — which advance in place. Returns the logits of
+    /// the **last** position only, shape (1, vocab).
+    ///
+    /// Bit-exactness contract: for any prompt and any split into prefill
+    /// calls, the resulting logits and final slot state are identical to
+    /// feeding the same tokens one at a time through [`LmStack::decode`]
+    /// (the layers pin their serving arithmetic — see
+    /// `layers/mixer.rs::SERVE_KERNEL_CHUNK`).
+    pub fn prefill(
+        &self,
+        cfg: &CpuModelCfg,
+        params: &ParamSet,
+        exec: &Executor,
+        state: &mut [&mut [f32]],
+        tokens: &[i32],
+    ) -> Result<Tensor> {
+        let l = tokens.len();
+        if l == 0 {
+            bail!("prefill needs at least one token");
+        }
+        if state.len() != 4 * cfg.n_layers {
+            bail!("prefill expects {} state tensors, got {}", 4 * cfg.n_layers, state.len());
+        }
+        let cache_len = (CONV_K - 1) * cfg.inner();
+        let s_len = cfg.n_heads * cfg.head_dim * cfg.head_dim;
+        for (i, t) in state.iter().enumerate() {
+            let want = if i % 4 == 3 { s_len } else { cache_len };
+            if t.len() != want {
+                bail!("slot state tensor {i}: {} elements, expected {want}", t.len());
+            }
+        }
+
+        let ctx = Ctx { cfg, params, exec, b: 1, l };
+        let mut x = exec.take(l * cfg.d_model);
+        if let Err(e) = self.embed.forward_into(&ctx, tokens, &mut x) {
+            exec.put(x);
+            return Err(e);
+        }
+        for (blk, chunk) in self.blocks.iter().zip(state.chunks_mut(4)) {
+            let [cq, ck, cv, s] = chunk else { unreachable!("state is chunked by 4") };
+            blk.prefill(&ctx, &mut x, cq, ck, cv, s);
+        }
+        // Last-position logits only (the head derives its row count from
+        // the activation slice, so this is a single pinned-class row).
+        let mut logits = vec![0.0f32; cfg.vocab];
+        self.head.logits_into(&ctx, &x[(l - 1) * cfg.d_model..], &mut logits);
+        exec.put(x);
+        Ok(Tensor::from_vec(&[1, cfg.vocab], logits))
     }
 }
 

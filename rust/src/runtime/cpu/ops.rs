@@ -258,6 +258,59 @@ pub fn conv_bwd(
     dx
 }
 
+/// Causal conv over an `l`-token segment warm-started from a rolling
+/// (K-1)-deep cache — the chunked-prefill form for a single sequence.
+/// Token `t` sees the last K-1 pre-conv rows: from `cache` for positions
+/// before the segment, from `pre` inside it, with the additions in the
+/// same order as a chain of [`conv_step`] calls, so streaming a prompt
+/// through any mix of prefill segments and single-token steps yields
+/// bit-identical activations. The cache is advanced in place to hold the
+/// segment's last K-1 pre-conv rows. pre: (L, C); cache: (K-1, C);
+/// out: (L, C), **zeroed** by the caller.
+pub fn conv_prefill(
+    pre: &[f32],
+    cache: &mut [f32],
+    w: &[f32],
+    l: usize,
+    c: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(pre.len(), l * c);
+    debug_assert_eq!(cache.len(), (k - 1) * c);
+    debug_assert_eq!(w.len(), k * c);
+    debug_assert_eq!(out.len(), l * c);
+    for t in 0..l {
+        let orow = &mut out[t * c..(t + 1) * c];
+        for j in 0..k - 1 {
+            // History position t - (K-1) + j; negative = initial cache row
+            // t + j (the cache stores the K-1 rows before the segment,
+            // oldest first — exactly conv_step's rolling layout).
+            let xr = match (t + j).checked_sub(k - 1) {
+                Some(h) => &pre[h * c..(h + 1) * c],
+                None => &cache[(t + j) * c..(t + j + 1) * c],
+            };
+            let wr = &w[j * c..(j + 1) * c];
+            for ch in 0..c {
+                orow[ch] += wr[ch] * xr[ch];
+            }
+        }
+        let wlast = &w[(k - 1) * c..k * c];
+        let xr = &pre[t * c..(t + 1) * c];
+        for ch in 0..c {
+            orow[ch] += wlast[ch] * xr[ch];
+        }
+    }
+    // Advance the cache to the segment's trailing K-1 pre-conv rows
+    // (shift-and-append when the segment is shorter than the window).
+    if l >= k - 1 {
+        cache.copy_from_slice(&pre[(l - (k - 1)) * c..l * c]);
+    } else {
+        cache.copy_within(l * c.., 0);
+        cache[(k - 1 - l) * c..].copy_from_slice(pre);
+    }
+}
+
 /// Single-token causal conv over a rolling (K-1)-deep cache, cache updated
 /// in place (shift left, append `pre`) — the O(1)-state decode form.
 /// pre: (B, C) fresh pre-conv projection; cache: (B, K-1, C).
@@ -370,6 +423,63 @@ pub fn matmul_nt_acc(
     } else {
         // Same full-shape class pinning as matmul_acc (see there).
         let class = gemm::matmul_nt_class(m, k, n);
+        exec.par_rows(m, out, |r0, r1, chunk| {
+            gemm::matmul_nt_into_class(class, &a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
+        });
+    }
+}
+
+// ----------------------------------------------------------------------
+// Serving matmuls: row-class-pinned wrappers
+// ----------------------------------------------------------------------
+
+/// out += a @ b with every row's arithmetic pinned to the **single-row**
+/// kernel class: the bits of row r depend only on (k, n) — never on how
+/// many rows share the call, which executor chunk a row lands in, or the
+/// thread count. The serving paths (one-token decode and chunked prefill)
+/// route every projection through this so a token's trajectory is
+/// bit-identical whether it is ingested one at a time inside a decode
+/// batch or as part of a single-slot prompt chunk of any size.
+pub fn matmul_acc_serving(
+    exec: &Executor,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let class = gemm::matmul_class(1, k, n);
+    if m * k * n < PAR_MIN_FLOPS || exec.threads() == 1 {
+        gemm::matmul_into_class(class, a, b, out, m, k, n);
+    } else {
+        exec.par_rows(m, out, |r0, r1, chunk| {
+            gemm::matmul_into_class(class, &a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
+        });
+    }
+}
+
+/// out += a @ b^T with the same single-row class pinning as
+/// [`matmul_acc_serving`] (b: (n, k) row-major).
+pub fn matmul_nt_acc_serving(
+    exec: &Executor,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    let class = gemm::matmul_nt_class(1, k, n);
+    if m * k * n < PAR_MIN_FLOPS || exec.threads() == 1 {
+        gemm::matmul_nt_into_class(class, a, b, out, m, k, n);
+    } else {
         exec.par_rows(m, out, |r0, r1, chunk| {
             gemm::matmul_nt_into_class(class, &a[r0 * k..r1 * k], b, chunk, r1 - r0, k, n);
         });
@@ -540,6 +650,94 @@ mod tests {
         conv_step_into(&pre, &mut cache2, &wk, b, c, k, &mut out);
         assert_eq!(out, out_ref);
         assert_eq!(cache1, cache2);
+    }
+
+    #[test]
+    fn conv_prefill_matches_conv_step_chain_bitwise() {
+        // Any split of a sequence into prefill segments (including
+        // single-token segments == conv_step) must give the same outputs
+        // and the same trailing cache, bit for bit.
+        let mut rng = Rng::new(19);
+        let (l, c, k) = (11, 5, 4);
+        let x = rng.normal_vec(l * c, 0.0, 1.0);
+        let wk = rng.normal_vec(k * c, 0.0, 0.5);
+
+        // Reference: token-by-token conv_step chain (b = 1).
+        let mut cache_ref = vec![0.0f32; (k - 1) * c];
+        let mut out_ref = Vec::new();
+        for t in 0..l {
+            out_ref.extend(conv_step(&x[t * c..(t + 1) * c], &mut cache_ref, &wk, 1, c, k));
+        }
+
+        for split in [1usize, 2, 3, 5, 11] {
+            let mut cache = vec![0.0f32; (k - 1) * c];
+            let mut out = vec![0.0f32; l * c];
+            let mut pos = 0;
+            while pos < l {
+                let end = (pos + split).min(l);
+                conv_prefill(
+                    &x[pos * c..end * c],
+                    &mut cache,
+                    &wk,
+                    end - pos,
+                    c,
+                    k,
+                    &mut out[pos * c..end * c],
+                );
+                pos = end;
+            }
+            assert_eq!(out, out_ref, "split {split}");
+            assert_eq!(cache, cache_ref, "split {split}");
+        }
+    }
+
+    #[test]
+    fn serving_matmul_rows_are_row_count_invariant() {
+        // The whole point of the serving wrappers: row r's bits must not
+        // depend on how many rows share the call (decode batch vs prompt
+        // chunk) or on the thread count.
+        let mut rng = Rng::new(20);
+        // 20*64*256 flops clears PAR_MIN_FLOPS, so threads > 1 exercises
+        // the row-parallel split under the pinned class.
+        let (k, n) = (64, 256);
+        let rows = 20usize;
+        let a = rng.normal_vec(rows * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let bt = rng.normal_vec(n * k, 0.0, 1.0);
+
+        // Reference: every row computed in its own single-row call.
+        let exec1 = Executor::serial();
+        let mut row_by_row = vec![0.0f32; rows * n];
+        let mut row_by_row_nt = vec![0.0f32; rows * n];
+        for r in 0..rows {
+            matmul_acc_serving(
+                &exec1,
+                &a[r * k..(r + 1) * k],
+                &b,
+                &mut row_by_row[r * n..(r + 1) * n],
+                1,
+                k,
+                n,
+            );
+            matmul_nt_acc_serving(
+                &exec1,
+                &a[r * k..(r + 1) * k],
+                &bt,
+                &mut row_by_row_nt[r * n..(r + 1) * n],
+                1,
+                k,
+                n,
+            );
+        }
+        for threads in [1usize, 2, 5] {
+            let exec = Executor::new(threads);
+            let mut full = vec![0.0f32; rows * n];
+            matmul_acc_serving(&exec, &a, &b, &mut full, rows, k, n);
+            assert_eq!(full, row_by_row, "nn threads={threads}");
+            let mut full_nt = vec![0.0f32; rows * n];
+            matmul_nt_acc_serving(&exec, &a, &bt, &mut full_nt, rows, k, n);
+            assert_eq!(full_nt, row_by_row_nt, "nt threads={threads}");
+        }
     }
 
     #[test]

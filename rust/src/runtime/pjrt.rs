@@ -106,7 +106,12 @@ impl Runtime {
             client.device_count(),
             manifest.names().len()
         );
-        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {

@@ -447,7 +447,8 @@ pub mod avx2 {
     thread_local! {
         /// Per-thread packing buffers (A panel, B panel): steady-state
         /// packed GEMM calls allocate nothing.
-        static PACK: RefCell<(Vec<f32>, Vec<f32>)> = const { RefCell::new((Vec::new(), Vec::new())) };
+        static PACK: RefCell<(Vec<f32>, Vec<f32>)> =
+            const { RefCell::new((Vec::new(), Vec::new())) };
     }
 
     /// # Safety
@@ -527,7 +528,14 @@ pub mod avx2 {
     /// Requires avx2+fma (runtime-detected) and the `matmul_into` length
     /// contract.
     #[target_feature(enable = "avx2", enable = "fma")]
-    pub unsafe fn matmul_small(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    pub unsafe fn matmul_small(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
         for i in 0..m {
             let arow = &a[i * k..(i + 1) * k];
             let orow = &mut out[i * n..(i + 1) * n];
@@ -736,7 +744,14 @@ pub mod avx2 {
     /// # Safety
     /// Requires avx2+fma (runtime-detected) and the `matmul_into` length
     /// contract.
-    pub unsafe fn matmul_packed(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    pub unsafe fn matmul_packed(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), k * n);
         PACK.with(|cell| {

@@ -262,7 +262,8 @@ fn write_num(out: &mut String, n: f64) {
     } else if n.is_finite() {
         let _ = write!(out, "{}", n);
     } else {
-        // JSON has no Inf/NaN; emit null (matches python json.dumps default-ish behaviour for our logs)
+        // JSON has no Inf/NaN; emit null (matches python json.dumps
+        // default-ish behaviour for our logs)
         out.push_str("null");
     }
 }

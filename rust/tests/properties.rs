@@ -178,7 +178,8 @@ fn prop_json_roundtrip_random_values() {
             2 => Json::Num((rng.normal() * 1e3).round() / 16.0),
             3 => {
                 let n = rng.range(0, 8);
-                Json::Str((0..n).map(|_| ['a', '"', '\\', 'é', '\n', 'z'][rng.range(0, 6)]).collect())
+                let chars = ['a', '"', '\\', 'é', '\n', 'z'];
+                Json::Str((0..n).map(|_| chars[rng.range(0, 6)]).collect())
             }
             4 => Json::Arr((0..rng.range(0, 4)).map(|_| random_json(rng, depth - 1)).collect()),
             _ => Json::Obj(

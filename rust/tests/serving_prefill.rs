@@ -1,0 +1,197 @@
+//! Prefill/decode equivalence: chunked parallel prefill must be a pure
+//! throughput optimization — for any prompt and any `prefill_chunk`, the
+//! logits and the slot state it produces are **bit-identical** to feeding
+//! the prompt one token at a time through the decode path.
+//!
+//! CI runs this suite under the default environment, `EFLA_NUM_THREADS=1`
+//! and `EFLA_FORCE_SCALAR=1` (the existing matrix legs), so the
+//! equivalence is pinned per kernel tier and per thread count; the
+//! cross-thread-count invariance is additionally pinned in-process below.
+
+use efla::coordinator::server::{GenRequest, Server, ServerConfig};
+use efla::coordinator::session::Session;
+use efla::runtime::{CpuBackend, HostValue};
+use efla::util::rng::Rng;
+
+fn prompt(rng: &mut Rng, len: usize, vocab: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+/// Token-at-a-time reference: feed the prompt through the batched decode
+/// path at `slot` (token 0 in the other slots, exactly like the serving
+/// loop); returns the final state and the last decode's logits row.
+fn decode_reference(
+    session: &Session,
+    slot: usize,
+    tokens: &[i32],
+) -> (Vec<HostValue>, Vec<f32>) {
+    let b = session.decode_batch().unwrap();
+    let vocab = session.vocab().unwrap();
+    let mut state = session.decode_state().unwrap();
+    let mut last = Vec::new();
+    for &t in tokens {
+        let mut step = vec![0i32; b];
+        step[slot] = t;
+        let logits = session.decode(&mut state, &step).unwrap();
+        last = logits.data()[slot * vocab..(slot + 1) * vocab].to_vec();
+    }
+    (state, last)
+}
+
+/// The `slot` rows of every state tensor, flattened for comparison.
+fn slot_rows(state: &[HostValue], batch: usize, slot: usize) -> Vec<Vec<f32>> {
+    state
+        .iter()
+        .map(|hv| {
+            let t = hv.as_f32().unwrap();
+            let row = t.len() / batch;
+            t.data()[slot * row..(slot + 1) * row].to_vec()
+        })
+        .collect()
+}
+
+fn check_family_bitwise(family: &str) {
+    let backend = CpuBackend::new();
+    let session = Session::init(&backend, family, 7).unwrap();
+    let b = session.decode_batch().unwrap();
+    let vocab = session.vocab().unwrap();
+    let slot = 1 % b;
+    let mut rng = Rng::new(71);
+    let toks = prompt(&mut rng, 50, vocab);
+    let (st_ref, logits_ref) = decode_reference(&session, slot, &toks);
+    let rows_ref = slot_rows(&st_ref, b, slot);
+
+    for chunk in [1usize, 7, 16, 50, 64] {
+        let mut state = session.decode_state().unwrap();
+        let mut logits = Vec::new();
+        let mut pos = 0;
+        while pos < toks.len() {
+            let end = (pos + chunk).min(toks.len());
+            logits = session
+                .prefill(&mut state, slot, &toks[pos..end])
+                .unwrap()
+                .data()
+                .to_vec();
+            pos = end;
+        }
+        assert_eq!(
+            logits, logits_ref,
+            "{family}: prefill_chunk={chunk} logits must match token-at-a-time bitwise"
+        );
+        assert_eq!(
+            slot_rows(&state, b, slot),
+            rows_ref,
+            "{family}: prefill_chunk={chunk} slot state must match token-at-a-time bitwise"
+        );
+    }
+}
+
+#[test]
+fn prefill_matches_token_at_a_time_bitwise_efla() {
+    check_family_bitwise("lm_tiny_efla");
+}
+
+#[test]
+fn prefill_matches_token_at_a_time_bitwise_deltanet() {
+    // DeltaNet exercises the l2-normalized q/k path.
+    check_family_bitwise("lm_tiny_deltanet");
+}
+
+#[test]
+fn prefill_matches_token_at_a_time_bitwise_efla_adaptive() {
+    // Adaptive decay exercises the per-head softplus gate composition.
+    check_family_bitwise("lm_tiny_efla_adaptive");
+}
+
+#[test]
+fn prefill_is_thread_count_invariant() {
+    let s1 = Session::init(&CpuBackend::with_threads(1), "lm_tiny_efla", 9).unwrap();
+    let s4 = Session::init(&CpuBackend::with_threads(4), "lm_tiny_efla", 9).unwrap();
+    let vocab = s1.vocab().unwrap();
+    let b = s1.decode_batch().unwrap();
+    let mut rng = Rng::new(5);
+    let toks = prompt(&mut rng, 40, vocab);
+    let mut st1 = s1.decode_state().unwrap();
+    let mut st4 = s4.decode_state().unwrap();
+    let l1 = s1.prefill(&mut st1, 0, &toks).unwrap();
+    let l4 = s4.prefill(&mut st4, 0, &toks).unwrap();
+    assert_eq!(l1.data(), l4.data(), "prefill logits must be thread-count invariant");
+    assert_eq!(slot_rows(&st1, b, 0), slot_rows(&st4, b, 0));
+}
+
+/// Greedy-serve a fixed request mix and return the generated tokens.
+fn serve_greedy(session: &Session, cfg: ServerConfig) -> Vec<Vec<i32>> {
+    let vocab = session.vocab().unwrap();
+    let mut server = Server::with_config(session, 42, cfg).unwrap();
+    let mut rng = Rng::new(33);
+    let n_req = server.batch_size() as u64 + 3;
+    for id in 0..n_req {
+        let len = rng.range(3, 80);
+        server.submit(GenRequest {
+            id,
+            prompt: prompt(&mut rng, len, vocab),
+            max_new: 4,
+            temperature: 0.0,
+        });
+    }
+    let results = server.run_to_completion().unwrap();
+    assert_eq!(results.len(), n_req as usize);
+    // Token accounting invariant holds in every mode.
+    assert_eq!(
+        server.stats.prefill_tokens + server.stats.decode_tokens,
+        server.stats.tokens_processed
+    );
+    results.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn server_chunked_prefill_matches_token_at_a_time() {
+    let backend = CpuBackend::new();
+    let session = Session::init(&backend, "lm_tiny_efla", 11).unwrap();
+    let legacy = serve_greedy(
+        &session,
+        ServerConfig { prefill_chunk: 0, prefill_token_budget: 0 },
+    );
+    for chunk in [1usize, 5, 64] {
+        for budget in [0usize, 32] {
+            let chunked = serve_greedy(
+                &session,
+                ServerConfig { prefill_chunk: chunk, prefill_token_budget: budget },
+            );
+            assert_eq!(
+                chunked, legacy,
+                "prefill_chunk={chunk} budget={budget} must generate identical tokens"
+            );
+        }
+    }
+}
+
+#[test]
+fn server_reports_prefill_decode_split_and_ttft() {
+    let backend = CpuBackend::new();
+    let session = Session::init(&backend, "lm_tiny_efla", 13).unwrap();
+    let vocab = session.vocab().unwrap();
+    let mut server = Server::new(&session, 1).unwrap();
+    let mut rng = Rng::new(2);
+    for id in 0..3u64 {
+        server.submit(GenRequest {
+            id,
+            prompt: prompt(&mut rng, 30, vocab),
+            max_new: 5,
+            temperature: 0.0,
+        });
+    }
+    let results = server.run_to_completion().unwrap();
+    assert_eq!(results.len(), 3);
+    // 3 prompts of 30 tokens through the prefill path, 4 decodes each
+    // (the first generated token rides on the prompt's last logits).
+    assert_eq!(server.stats.prefill_tokens, 90);
+    assert_eq!(server.stats.decode_tokens, 12);
+    assert_eq!(server.stats.tokens_processed, 102);
+    assert_eq!(server.stats.ttft_count, 3);
+    assert!(server.stats.mean_ttft_secs() > 0.0);
+    for r in &results {
+        assert_eq!(r.tokens.len(), 5);
+        assert!(r.ttft_secs > 0.0);
+    }
+}

@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for CI.
+
+Reads the machine-readable ``BENCH {...}`` JSON lines emitted by
+``cargo bench --bench kernel_throughput`` (one JSON object per line on
+stdin or in the file given as argv[1]) and fails the job when a
+performance invariant regresses:
+
+* ``gemm_gflops``      — on an AVX2 host the dispatched GEMM tier must
+  not be slower than the scalar tier at the largest benched size (the
+  whole point of the microkernel); smaller sizes only warn, since
+  fast-mode iteration counts are noisy.
+* ``serving_prefill``  — chunked parallel prefill must ingest prompts
+  strictly faster than token-at-a-time decoding for every benched
+  prompt length >= 64 (the serving acceptance bar).
+
+Exit code 0 = all gates pass, 1 = regression, 2 = malformed input.
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"GATE FAIL: {msg}")
+    sys.exit(1)
+
+
+def warn(msg: str) -> None:
+    print(f"gate warn: {msg}")
+
+
+def gate_gemm(obj: dict) -> None:
+    kernel = obj.get("kernel", "")
+    points = obj.get("points", [])
+    if not points:
+        fail("gemm_gflops: no measurement points")
+    if kernel != "Avx2Fma":
+        warn(f"gemm_gflops: dispatched tier is {kernel!r}, skipping speedup gate")
+        return
+    largest = max(points, key=lambda p: p.get("size", 0))
+    for p in points:
+        size = p.get("size")
+        speedup = p.get("speedup", 0.0)
+        line = f"gemm {size}^3: dispatched/scalar speedup {speedup:.2f}x"
+        if p is largest and speedup < 1.0:
+            fail(f"{line} — dispatched GEMM tier is slower than scalar")
+        if speedup < 1.0:
+            warn(f"{line} (sub-gate size, not fatal)")
+        else:
+            print(f"gate ok: {line}")
+
+
+def gate_serving(obj: dict) -> None:
+    points = obj.get("points", [])
+    if not points:
+        fail("serving_prefill: no measurement points")
+    for p in points:
+        plen = p.get("prompt_len", 0)
+        pre = p.get("prefill_tokens_per_sec", 0.0)
+        tat = p.get("token_at_a_time_tokens_per_sec", 0.0)
+        line = f"serving prompt_len={plen}: prefill {pre:.0f} tok/s vs token-at-a-time {tat:.0f} tok/s"
+        if plen >= 64 and pre <= tat:
+            fail(f"{line} — chunked prefill must be strictly faster")
+        print(f"gate ok: {line}")
+
+
+def main() -> None:
+    src = open(sys.argv[1]) if len(sys.argv) > 1 else sys.stdin
+    seen = set()
+    for raw in src:
+        raw = raw.strip()
+        if not raw:
+            continue
+        if raw.startswith("BENCH "):
+            raw = raw[len("BENCH "):]
+        try:
+            obj = json.loads(raw)
+        except json.JSONDecodeError as e:
+            print(f"malformed BENCH line: {e}: {raw[:120]}")
+            sys.exit(2)
+        name = obj.get("bench")
+        seen.add(name)
+        if name == "gemm_gflops":
+            gate_gemm(obj)
+        elif name == "serving_prefill":
+            gate_serving(obj)
+    for required in ("gemm_gflops", "serving_prefill"):
+        if required not in seen:
+            fail(f"required bench section {required!r} missing from BENCH output")
+    print("all bench gates passed")
+
+
+if __name__ == "__main__":
+    main()
