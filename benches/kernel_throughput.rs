@@ -15,10 +15,18 @@
 //!      BENCH_forward_threads.json);
 //!   7. serving prompt ingestion — chunked parallel prefill vs
 //!      token-at-a-time decode, session- and server-level (writes the
-//!      root-level BENCH_serving.json).
+//!      root-level BENCH_serving.json);
+//!   8. serving continuous batching — staggered arrivals through the
+//!      engine loop vs sequential one-request-at-a-time: aggregate
+//!      tok/s, e2e/queue-wait percentiles (writes the root-level
+//!      BENCH_serving_cb.json).
 //!
 //! Env knobs: EFLA_BENCH_FAST=1 shrinks everything (CI smoke);
 //! EFLA_FORCE_SCALAR=1 pins the matmul dispatcher to the scalar tier.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 use efla::attention::{alpha_efla, chunkwise_delta, gates, sequential_delta, Gate};
 use efla::coordinator::experiments::{chunkwise_consistency, integrator_error};
@@ -29,8 +37,9 @@ use efla::runtime::cpu::exec::Executor;
 use efla::runtime::cpu::model::lm_loss;
 use efla::runtime::cpu::params::ParamSet;
 use efla::runtime::CpuBackend;
+use efla::serve::engine::{run_engine, EngineShared, Event, Submission};
 use efla::tensor::{gemm, matmul_into, Tensor};
-use efla::util::bench::{bench, fmt_secs, Table};
+use efla::util::bench::{bench, fmt_secs, Stats, Table};
 use efla::util::json::{self, Json};
 use efla::util::rng::Rng;
 
@@ -330,7 +339,11 @@ fn main() {
 
     // End-to-end engine comparison on one mixed request batch.
     let run_server = |chunk: usize| {
-        let cfg = ServerConfig { prefill_chunk: chunk, prefill_token_budget: 256 };
+        let cfg = ServerConfig {
+            prefill_chunk: chunk,
+            prefill_token_budget: 256,
+            ..ServerConfig::default()
+        };
         let mut server = Server::with_config(&session, 7, cfg).unwrap();
         let mut rng = Rng::new(9);
         let n_req = if fast() { 6u64 } else { 12 };
@@ -338,7 +351,7 @@ fn main() {
         for id in 0..n_req {
             let prompt: Vec<i32> =
                 (0..plen).map(|_| rng.below(vocab as u64) as i32).collect();
-            server.submit(GenRequest { id, prompt, max_new: 8, temperature: 0.0 });
+            server.submit(GenRequest { id, prompt, max_new: 8, temperature: 0.0 }).unwrap();
         }
         server.run_to_completion().unwrap();
         (
@@ -386,6 +399,126 @@ fn main() {
     }
     report.push(("serving_prefill", serving_json));
 
+    // ---- 8. serving: continuous batching vs sequential -------------
+    // The decode graph computes every row of the fixed batch whether one
+    // or all slots are occupied, so serving requests one at a time wastes
+    // (batch - 1)/batch of every step. Continuous batching fills the
+    // slots from a staggered arrival stream and should win on aggregate
+    // tokens/s by roughly the slot count; CI's bench gate enforces the
+    // direction (scripts/bench_gate.py, section `serving_cb`).
+    let cb_req = if fast() { 8u64 } else { 16 };
+    let cb_plen = if fast() { 48usize } else { 96 };
+    let cb_max_new = if fast() { 8usize } else { 16 };
+    let stagger = Duration::from_millis(2);
+    println!(
+        "## Serving continuous batching ({cb_req} requests, prompt {cb_plen}, \
+         max_new {cb_max_new})\n"
+    );
+    let mk_prompt = |id: u64| -> Vec<i32> {
+        let mut rng = Rng::new(0xCB ^ id);
+        (0..cb_plen).map(|_| rng.below(vocab as u64) as i32).collect()
+    };
+
+    // Sequential baseline: each request occupies the engine alone.
+    let t0 = Instant::now();
+    let mut seq_tokens = 0u64;
+    for id in 0..cb_req {
+        let mut server = Server::with_config(&session, 7, ServerConfig::default()).unwrap();
+        let prompt = mk_prompt(id);
+        let req = GenRequest { id, prompt, max_new: cb_max_new, temperature: 0.0 };
+        server.submit(req).unwrap();
+        server.run_to_completion().unwrap();
+        seq_tokens += server.stats.tokens_processed;
+    }
+    let seq_wall = t0.elapsed().as_secs_f64();
+    let seq_tps = seq_tokens as f64 / seq_wall.max(1e-9);
+
+    // Continuous batching: staggered arrivals through the engine loop.
+    let shared = EngineShared::new(1024);
+    let stop = AtomicBool::new(false);
+    let (cb_tx, cb_rx) = mpsc::sync_channel::<Submission>(64);
+    let t0 = Instant::now();
+    let (cb_stats, cb_results) = std::thread::scope(|s| {
+        let stop = &stop;
+        let submitter = s.spawn(move || {
+            let mut rxs = Vec::new();
+            for id in 0..cb_req {
+                let (ev_tx, ev_rx) = mpsc::channel();
+                let prompt = mk_prompt(id);
+                let req = GenRequest { id, prompt, max_new: cb_max_new, temperature: 0.0 };
+                let sub =
+                    Submission { req, submitted: Instant::now(), stream: false, events: ev_tx };
+                cb_tx.send(sub).unwrap();
+                rxs.push(ev_rx);
+                std::thread::sleep(stagger);
+            }
+            let mut out = Vec::new();
+            for ev_rx in rxs {
+                loop {
+                    match ev_rx.recv().unwrap() {
+                        Event::Done(r) => {
+                            out.push(r);
+                            break;
+                        }
+                        Event::Token(_) => {}
+                        Event::Rejected(e) => panic!("bench request rejected: {e}"),
+                    }
+                }
+            }
+            stop.store(true, Ordering::SeqCst);
+            out
+        });
+        let stats =
+            run_engine(&session, ServerConfig::default(), 7, cb_rx, &shared, stop).unwrap();
+        (stats, submitter.join().expect("submitter thread"))
+    });
+    let cb_wall = t0.elapsed().as_secs_f64();
+    let cb_tps = cb_stats.tokens_processed as f64 / cb_wall.max(1e-9);
+    let cb_speedup = cb_tps / seq_tps.max(1e-9);
+    let e2e_stats = Stats::from_samples(cb_results.iter().map(|r| r.e2e_secs).collect());
+    let qw_stats = Stats::from_samples(cb_results.iter().map(|r| r.queue_wait_secs).collect());
+
+    let mut t = Table::new(&["mode", "tok/s", "p50 e2e", "p95 e2e", "p95 queue wait"]);
+    t.row(&[
+        "continuous batching".into(),
+        format!("{cb_tps:.0}"),
+        fmt_secs(e2e_stats.p50),
+        fmt_secs(e2e_stats.p95),
+        fmt_secs(qw_stats.p95),
+    ]);
+    t.row(&[
+        "sequential (1 req at a time)".into(),
+        format!("{seq_tps:.0}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    println!("{}", t.render());
+    println!("(continuous batching speedup: {cb_speedup:.2}x on aggregate tokens/s)\n");
+    let cb_json = Json::obj(vec![
+        ("bench", Json::Str("serving_cb".into())),
+        ("kernel", Json::Str(format!("{:?}", gemm::active_kernel()))),
+        ("family", Json::Str("lm_tiny_efla".into())),
+        ("threads", Json::Num(session.threads() as f64)),
+        ("requests", Json::Num(cb_req as f64)),
+        ("prompt_len", Json::Num(cb_plen as f64)),
+        ("max_new", Json::Num(cb_max_new as f64)),
+        ("stagger_ms", Json::Num(stagger.as_secs_f64() * 1e3)),
+        ("cb_tokens_per_sec", Json::Num(cb_tps)),
+        ("sequential_tokens_per_sec", Json::Num(seq_tps)),
+        ("speedup", Json::Num(cb_speedup)),
+        ("p50_e2e_ms", Json::Num(e2e_stats.p50 * 1e3)),
+        ("p95_e2e_ms", Json::Num(e2e_stats.p95 * 1e3)),
+        ("p50_queue_wait_ms", Json::Num(qw_stats.p50 * 1e3)),
+        ("p95_queue_wait_ms", Json::Num(qw_stats.p95 * 1e3)),
+        ("mean_ttft_ms", Json::Num(cb_stats.mean_ttft_secs() * 1e3)),
+    ]);
+    println!("BENCH {}", cb_json.to_string());
+    if !fast() {
+        json::write_file(std::path::Path::new("BENCH_serving_cb.json"), &cb_json).unwrap();
+    }
+    report.push(("serving_cb", cb_json));
+
     let out = Json::Obj(
         report.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
     );
@@ -398,6 +531,7 @@ fn main() {
         println!("json: BENCH_kernel_gemm.json");
         println!("json: BENCH_forward_threads.json");
         println!("json: BENCH_serving.json");
+        println!("json: BENCH_serving_cb.json");
     }
     println!("json: bench_results/kernel_throughput.json");
 }

@@ -1,36 +1,39 @@
-//! Serving demo: chunked parallel prefill + continuous batching on the
-//! O(1)-state decode path.
+//! Serving demo: the HTTP front end with continuous batching, driven
+//! end-to-end over a real socket.
 //!
 //! Trains a tiny LM briefly (so generations reflect corpus statistics),
-//! then drives the slot-based engine with a Poisson-ish arrival pattern
-//! of mixed-length requests: prompts ingest in parallel chunks
-//! (`--prefill-chunk`), generation runs batched one-token decodes.
-//! Reports latency percentiles, TTFT and engine throughput — the serving
-//! scenario the paper's intro motivates (long-context/RL inference
-//! without a KV cache).
+//! binds the front end on an OS-assigned port, then fires a mixed client
+//! load at it from plain threads: non-streamed `POST /v1/generate`
+//! requests, one streamed request (chunked transfer, one JSON line per
+//! token), and a `GET /stats` scrape. When the load finishes, the demo
+//! flips the shutdown flag — the same graceful drain SIGTERM triggers —
+//! and prints the engine report.
 //!
 //! Run: cargo run --release --example serve -- --requests 24 --max-new 24
+
+use std::sync::atomic::Ordering;
 
 use anyhow::Result;
 use efla::coordinator::config::RunConfig;
 use efla::coordinator::schedule::Schedule;
-use efla::coordinator::server::{GenRequest, Server, ServerConfig};
+use efla::coordinator::server::ServerConfig;
 use efla::coordinator::session::Session;
 use efla::coordinator::trainer;
 use efla::runtime::open_backend;
-use efla::util::bench::{fmt_secs, Stats};
+use efla::serve::{http, Frontend};
 use efla::util::cli::Args;
 use efla::util::rng::Rng;
 
 fn main() -> Result<()> {
     efla::util::logging::init();
-    let p = Args::new("serve", "batched decode engine demo")
+    let p = Args::new("serve", "HTTP serving engine demo")
         .opt("train-steps", "30", "warmup training steps")
-        .opt("requests", "24", "demo request count")
+        .opt("requests", "24", "client request count")
         .opt("max-new", "24", "tokens per request")
         .opt("temperature", "0.8", "sampling temperature")
         .opt("prefill-chunk", "64", "prompt tokens per slot per engine step (0 = token-at-a-time)")
         .opt("prefill-budget", "256", "max prompt tokens per engine step (0 = unlimited)")
+        .opt("queue-depth", "64", "admission queue bound (full queue answers 429)")
         .opt("seed", "42", "seed")
         .parse();
     let backend = open_backend(std::path::Path::new("artifacts"))?;
@@ -52,59 +55,90 @@ fn main() -> Result<()> {
     let server_cfg = ServerConfig {
         prefill_chunk: p.usize("prefill-chunk")?,
         prefill_token_budget: p.usize("prefill-budget")?,
+        queue_depth: p.usize("queue-depth")?,
+        ..ServerConfig::default()
     };
-    let mut server = Server::with_config(&session, p.u64("seed")?, server_cfg)?;
-    let mut rng = Rng::new(p.u64("seed")? ^ 0x5EED);
+    let frontend = Frontend::bind("127.0.0.1:0")?;
+    let addr = frontend.local_addr()?.to_string();
+    let stop = frontend.shutdown_flag();
+
+    // Client load from a plain thread: the engine needs the main thread
+    // (a Session is not Sync), the clients only need the address.
     let n = p.usize("requests")?;
     let max_new = p.usize("max-new")?;
-    let corpus_words = ["the", "naba", "of", "recall", "is", "vora", "wimu"];
-    for id in 0..n as u64 {
-        let mut prompt_text = String::new();
-        for _ in 0..rng.range(2, 8) {
-            prompt_text.push_str(corpus_words[rng.range(0, corpus_words.len())]);
-            prompt_text.push(' ');
-        }
-        server.submit(GenRequest {
-            id,
-            prompt: prompt_text.bytes().map(|b| b as i32).collect(),
-            max_new,
-            temperature: p.f32("temperature")?,
-        });
-    }
+    let temperature = p.f64("temperature")?;
+    let seed = p.u64("seed")?;
+    let client = std::thread::spawn(move || {
+        let out = client_load(&addr, n, max_new, temperature, seed);
+        // Done: trigger the graceful drain the way SIGTERM would.
+        stop.store(true, Ordering::SeqCst);
+        out
+    });
 
-    let t0 = std::time::Instant::now();
-    let results = server.run_to_completion()?;
-    let wall = t0.elapsed().as_secs_f64();
+    let stats = frontend.run(&session, server_cfg, seed)?;
+    let (ok, rejected, sample) = client.join().expect("client thread");
 
-    // Per-request slot-steps as a latency proxy (every step is one engine
-    // decode; requests arriving when slots are busy queue first).
-    let lat: Vec<f64> = results.iter().map(|r| r.steps as f64).collect();
-    let stats = Stats::from_samples(lat);
-    println!("\nrequests: {} | slots: {} | wall {:.2}s", results.len(), server.batch_size(), wall);
     println!(
-        "engine: {} steps | {:.1} tok/s | mean step {} | prefill_chunk {}",
-        server.stats.engine_steps,
-        server.stats.tokens_per_sec(),
-        fmt_secs(wall / server.stats.engine_steps.max(1) as f64),
-        server.config().prefill_chunk,
+        "\nrequests: {ok} ok, {rejected} rejected (429) | slots: {} | wall {:.2}s",
+        stats.batch, stats.wall_secs
     );
     println!(
-        "tokens: {} prefill + {} decode | mean TTFT {}",
-        server.stats.prefill_tokens,
-        server.stats.decode_tokens,
-        fmt_secs(server.stats.mean_ttft_secs()),
+        "engine: {} steps | {:.1} tok/s | {} prefill + {} decode tokens",
+        stats.engine_steps,
+        stats.tokens_per_sec(),
+        stats.prefill_tokens,
+        stats.decode_tokens
     );
     println!(
-        "slot-steps per request: p50 {:.0} | p95 {:.0} | max {:.0}",
-        stats.p50, stats.p95, stats.max
+        "latency: mean TTFT {:.1} ms | mean queue wait {:.1} ms | mean e2e {:.1} ms",
+        stats.mean_ttft_secs() * 1e3,
+        stats.mean_queue_wait_secs() * 1e3,
+        stats.mean_e2e_secs() * 1e3
     );
-    for r in results.iter().take(3) {
-        let text: String = r
-            .tokens
-            .iter()
-            .map(|&t| if (32..127).contains(&t) { (t as u8) as char } else { '?' })
-            .collect();
-        println!("sample gen[{}]: {text:?}", r.id);
-    }
+    println!("sample gen: {sample:?}");
     Ok(())
+}
+
+/// Fire `n` generate requests (the first one streamed) and scrape
+/// `/stats`; returns (ok, rejected, sample generation).
+fn client_load(
+    addr: &str,
+    n: usize,
+    max_new: usize,
+    temperature: f64,
+    seed: u64,
+) -> (usize, usize, String) {
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let corpus_words = ["the", "naba", "of", "recall", "is", "vora", "wimu"];
+    let mut ok = 0usize;
+    let mut rejected = 0usize;
+    let mut sample = String::new();
+    for i in 0..n {
+        let mut prompt = String::new();
+        for _ in 0..rng.range(2, 8) {
+            prompt.push_str(corpus_words[rng.range(0, corpus_words.len())]);
+            prompt.push(' ');
+        }
+        let stream = i == 0;
+        let body = format!(
+            "{{\"prompt\":{:?},\"max_tokens\":{max_new},\"temperature\":{temperature},\
+             \"stream\":{stream}}}",
+            prompt
+        );
+        match http::request(addr, "POST", "/v1/generate", body.as_bytes()) {
+            Ok(resp) if resp.status == 200 => {
+                ok += 1;
+                if sample.is_empty() {
+                    sample = resp.text().lines().last().unwrap_or("").to_string();
+                }
+            }
+            Ok(resp) if resp.status == 429 => rejected += 1,
+            Ok(resp) => eprintln!("request {i}: unexpected status {}", resp.status),
+            Err(e) => eprintln!("request {i}: {e}"),
+        }
+    }
+    if let Ok(stats) = http::request(addr, "GET", "/stats", b"") {
+        println!("/stats: {}", stats.text());
+    }
+    (ok, rejected, sample)
 }

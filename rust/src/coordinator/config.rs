@@ -62,6 +62,16 @@ pub struct RunConfig {
     /// Serving: max total prompt tokens ingested per engine step across
     /// slots, so decoding slots aren't starved (0 = unlimited).
     pub prefill_token_budget: usize,
+    /// Serving: address the HTTP front end binds (`efla serve --listen`),
+    /// e.g. `127.0.0.1:8080` (`:0` = OS-assigned port). Empty = no
+    /// network front end (the in-process serve demo).
+    pub listen: String,
+    /// Serving: admission-queue bound of the HTTP front end; requests
+    /// beyond slots + this bound are rejected with 429.
+    pub queue_depth: usize,
+    /// Serving: seconds the front end drains in-flight requests after
+    /// SIGTERM/SIGINT before giving up.
+    pub drain_timeout_secs: f64,
     pub artifact_dir: PathBuf,
     pub out_dir: PathBuf,
     /// Optional checkpoint interval (0 = none).
@@ -83,6 +93,9 @@ impl Default for RunConfig {
             threads: 0,
             prefill_chunk: 64,
             prefill_token_budget: 256,
+            listen: String::new(),
+            queue_depth: 64,
+            drain_timeout_secs: 5.0,
             artifact_dir: PathBuf::from("artifacts"),
             out_dir: PathBuf::from("runs"),
             ckpt_every: 0,
@@ -128,6 +141,12 @@ impl RunConfig {
                 .get("prefill_token_budget")
                 .as_usize()
                 .unwrap_or(d.prefill_token_budget),
+            listen: j.get("listen").as_str().unwrap_or(&d.listen).to_string(),
+            queue_depth: j.get("queue_depth").as_usize().unwrap_or(d.queue_depth),
+            drain_timeout_secs: j
+                .get("drain_timeout_secs")
+                .as_f64()
+                .unwrap_or(d.drain_timeout_secs),
             artifact_dir: PathBuf::from(
                 j.get("artifact_dir").as_str().unwrap_or("artifacts"),
             ),
@@ -150,6 +169,9 @@ impl RunConfig {
             ("threads", Json::Num(self.threads as f64)),
             ("prefill_chunk", Json::Num(self.prefill_chunk as f64)),
             ("prefill_token_budget", Json::Num(self.prefill_token_budget as f64)),
+            ("listen", Json::Str(self.listen.clone())),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("drain_timeout_secs", Json::Num(self.drain_timeout_secs)),
             (
                 "artifact_dir",
                 Json::Str(self.artifact_dir.to_string_lossy().into_owned()),
@@ -205,6 +227,24 @@ mod tests {
         let c2 = RunConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2.prefill_chunk, 0);
         assert_eq!(c2.prefill_token_budget, 1024);
+    }
+
+    #[test]
+    fn serve_knobs_roundtrip_and_default() {
+        let d = RunConfig::default();
+        assert_eq!(d.listen, "");
+        assert_eq!(d.queue_depth, 64);
+        assert!((d.drain_timeout_secs - 5.0).abs() < 1e-12);
+        let c = RunConfig {
+            listen: "127.0.0.1:0".into(),
+            queue_depth: 3,
+            drain_timeout_secs: 0.5,
+            ..RunConfig::default()
+        };
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.listen, "127.0.0.1:0");
+        assert_eq!(c2.queue_depth, 3);
+        assert!((c2.drain_timeout_secs - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -26,7 +26,7 @@
 //! backend's [`Session::decode`] / [`Session::prefill`] are the only
 //! compute.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -48,13 +48,58 @@ pub struct ServerConfig {
     /// so decode-phase slots are not starved behind long prompts.
     /// 0 = unlimited.
     pub prefill_token_budget: usize,
+    /// Network front end ([`crate::serve`]): bound of the admission queue
+    /// between connection workers and the engine thread. Requests arriving
+    /// while the queue is full are rejected with HTTP 429. Clamped to >= 1.
+    pub queue_depth: usize,
+    /// Network front end: seconds to wait for in-flight slots (and already
+    /// accepted queued requests) to finish after a shutdown signal before
+    /// giving up on the drain.
+    pub drain_timeout_secs: f64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { prefill_chunk: 64, prefill_token_budget: 256 }
+        ServerConfig {
+            prefill_chunk: 64,
+            prefill_token_budget: 256,
+            queue_depth: 64,
+            drain_timeout_secs: 5.0,
+        }
     }
 }
+
+/// A rejected [`Server::submit`]: the request never entered the queue.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The prompt has no tokens; the engine needs at least one to seed
+    /// generation (the legacy path asserted and took the process down).
+    EmptyPrompt { id: u64 },
+    /// `max_new == 0`: the request could never produce a token and would
+    /// occupy a slot forever (the decode loop only frees slots on
+    /// `generated.len() >= max_new`).
+    ZeroMaxNew { id: u64 },
+    /// The id is already live (queued, in a slot, or finished but not yet
+    /// taken via [`Server::take_results`]). Results are keyed by id, so a
+    /// duplicate would make one of the two generations unaddressable.
+    DuplicateId { id: u64 },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::EmptyPrompt { id } => write!(f, "request {id}: empty prompt"),
+            SubmitError::ZeroMaxNew { id } => {
+                write!(f, "request {id}: max_new must be at least 1")
+            }
+            SubmitError::DuplicateId { id } => {
+                write!(f, "request {id}: id is already queued or in flight")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -75,6 +120,19 @@ pub struct GenResult {
     pub steps: usize,
     /// Wall seconds from submission to the first generated token.
     pub ttft_secs: f64,
+    /// Wall seconds the request waited in the queue before a slot seated it.
+    pub queue_wait_secs: f64,
+    /// Wall seconds from submission to completion.
+    pub e2e_secs: f64,
+}
+
+/// One freshly generated token, in engine-step order. Captured only when
+/// [`Server::enable_events`] was called (the streaming front end drains
+/// them after every step); batch-mode callers pay nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TokenEvent {
+    pub id: u64,
+    pub token: i32,
 }
 
 #[derive(Clone, Debug)]
@@ -88,6 +146,7 @@ struct Slot {
     steps: usize,
     submitted: Instant,
     ttft_secs: f64,
+    queue_wait_secs: f64,
 }
 
 /// Engine statistics.
@@ -111,6 +170,13 @@ pub struct ServerStats {
     /// `ttft_count` requests that produced a first token so far.
     pub ttft_sum_secs: f64,
     pub ttft_count: u64,
+    /// Requests seated into a slot so far.
+    pub admitted: u64,
+    /// Sum of per-request queue wait (submission -> slot), over `admitted`.
+    pub queue_wait_sum_secs: f64,
+    /// Sum of per-request end-to-end latency (submission -> completion),
+    /// over `completed`.
+    pub e2e_sum_secs: f64,
 }
 
 impl ServerStats {
@@ -143,6 +209,24 @@ impl ServerStats {
             0.0
         }
     }
+
+    /// Mean queue wait (submission -> slot) over admitted requests.
+    pub fn mean_queue_wait_secs(&self) -> f64 {
+        if self.admitted > 0 {
+            self.queue_wait_sum_secs / self.admitted as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean end-to-end latency (submission -> completion) over completions.
+    pub fn mean_e2e_secs(&self) -> f64 {
+        if self.completed > 0 {
+            self.e2e_sum_secs / self.completed as f64
+        } else {
+            0.0
+        }
+    }
 }
 
 /// The batched prefill + decode engine.
@@ -160,6 +244,12 @@ pub struct Server<'a> {
     /// Round-robin start of the prefill budget scan, so low-index slots
     /// can't monopolize `prefill_token_budget` across steps.
     prefill_start: usize,
+    /// Ids that are queued, seated, or finished-but-not-taken — the
+    /// duplicate-id guard of [`Server::submit`].
+    live: BTreeSet<u64>,
+    /// Per-token events since the last [`Server::take_events`] drain.
+    events: Vec<TokenEvent>,
+    events_enabled: bool,
     pub stats: ServerStats,
 }
 
@@ -194,6 +284,9 @@ impl<'a> Server<'a> {
             vocab,
             cfg,
             prefill_start: 0,
+            live: BTreeSet::new(),
+            events: Vec::new(),
+            events_enabled: false,
             stats,
         })
     }
@@ -207,10 +300,73 @@ impl<'a> Server<'a> {
         self.cfg
     }
 
-    /// Enqueue a request.
-    pub fn submit(&mut self, req: GenRequest) {
-        assert!(!req.prompt.is_empty(), "empty prompt");
-        self.queue.push_back((req, Instant::now()));
+    /// Enqueue a request, stamped as submitted now.
+    pub fn submit(&mut self, req: GenRequest) -> Result<(), SubmitError> {
+        self.submit_at(req, Instant::now())
+    }
+
+    /// Enqueue a request with an explicit submission timestamp — the
+    /// network front end stamps arrival at the socket, so queue-wait and
+    /// TTFT include the time spent in the admission channel.
+    pub fn submit_at(&mut self, req: GenRequest, submitted: Instant) -> Result<(), SubmitError> {
+        if req.prompt.is_empty() {
+            return Err(SubmitError::EmptyPrompt { id: req.id });
+        }
+        if req.max_new == 0 {
+            return Err(SubmitError::ZeroMaxNew { id: req.id });
+        }
+        if !self.live.insert(req.id) {
+            return Err(SubmitError::DuplicateId { id: req.id });
+        }
+        self.queue.push_back((req, submitted));
+        Ok(())
+    }
+
+    /// Requests waiting in the internal queue (not yet seated in a slot).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Slots currently holding a request.
+    pub fn occupied_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Slots free to seat a queued request at the next engine step.
+    pub fn free_slots(&self) -> usize {
+        self.batch - self.occupied_slots()
+    }
+
+    /// True while any request is queued or in flight.
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.slots.iter().any(|s| s.is_some())
+    }
+
+    /// Turn on per-token event capture ([`Server::take_events`]). Off by
+    /// default so batch-mode callers don't accumulate an unbounded buffer.
+    pub fn enable_events(&mut self) {
+        self.events_enabled = true;
+    }
+
+    /// Drain the per-token events generated since the last call.
+    pub fn take_events(&mut self) -> Vec<TokenEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Drain finished generations (completion order). Frees their ids for
+    /// reuse by future submissions.
+    pub fn take_results(&mut self) -> Vec<GenResult> {
+        let out = std::mem::take(&mut self.results);
+        for r in &out {
+            self.live.remove(&r.id);
+        }
+        out
+    }
+
+    fn push_event(&mut self, id: u64, token: i32) {
+        if self.events_enabled {
+            self.events.push(TokenEvent { id, token });
+        }
     }
 
     /// Zero all state rows for slot `s`.
@@ -229,6 +385,9 @@ impl<'a> Server<'a> {
             if self.slots[s].is_none() {
                 if let Some((req, submitted)) = self.queue.pop_front() {
                     self.clear_slot_state(s);
+                    let queue_wait_secs = submitted.elapsed().as_secs_f64();
+                    self.stats.admitted += 1;
+                    self.stats.queue_wait_sum_secs += queue_wait_secs;
                     self.slots[s] = Some(Slot {
                         id: req.id,
                         prompt: req.prompt,
@@ -239,6 +398,7 @@ impl<'a> Server<'a> {
                         steps: 0,
                         submitted,
                         ttft_secs: 0.0,
+                        queue_wait_secs,
                     });
                 }
             }
@@ -266,13 +426,17 @@ impl<'a> Server<'a> {
     /// Move a finished slot's generation into the results.
     fn finish_slot(&mut self, s: usize) {
         let done = self.slots[s].take().expect("finishing an occupied slot");
+        let e2e_secs = done.submitted.elapsed().as_secs_f64();
+        self.stats.completed += 1;
+        self.stats.e2e_sum_secs += e2e_secs;
         self.results.push(GenResult {
             id: done.id,
             tokens: done.generated,
             steps: done.steps,
             ttft_secs: done.ttft_secs,
+            queue_wait_secs: done.queue_wait_secs,
+            e2e_secs,
         });
-        self.stats.completed += 1;
     }
 
     /// Record a freshly sampled first token's latency on slot `s`.
@@ -335,7 +499,9 @@ impl<'a> Server<'a> {
                     let t = Self::sample(&mut self.rng, logits.data(), slot.temperature);
                     slot.generated.push(t);
                     Self::record_ttft(&mut self.stats, slot);
-                    if slot.generated.len() >= slot.max_new {
+                    let (id, done) = (slot.id, slot.generated.len() >= slot.max_new);
+                    self.push_event(id, t);
+                    if done {
                         self.finish_slot(s);
                     }
                 }
@@ -370,6 +536,7 @@ impl<'a> Server<'a> {
             for &s in &active {
                 let slot = self.slots[s].as_mut().expect("active slot is occupied");
                 slot.steps += 1;
+                let mut emitted = None;
                 if slot.consumed < slot.prompt.len() {
                     slot.consumed += 1;
                     self.stats.prefill_tokens += 1;
@@ -380,14 +547,20 @@ impl<'a> Server<'a> {
                         let t = Self::sample(&mut self.rng, row, slot.temperature);
                         slot.generated.push(t);
                         Self::record_ttft(&mut self.stats, slot);
+                        emitted = Some(t);
                     }
                 } else {
                     let row = &logits.data()[s * self.vocab..(s + 1) * self.vocab];
                     let t = Self::sample(&mut self.rng, row, slot.temperature);
                     slot.generated.push(t);
                     self.stats.decode_tokens += 1;
+                    emitted = Some(t);
                 }
-                if slot.generated.len() >= slot.max_new {
+                let (id, done) = (slot.id, slot.generated.len() >= slot.max_new);
+                if let Some(t) = emitted {
+                    self.push_event(id, t);
+                }
+                if done {
                     self.finish_slot(s);
                 }
             }
@@ -409,7 +582,7 @@ impl<'a> Server<'a> {
             }
         }
         self.stats.wall_secs += t0.elapsed().as_secs_f64();
-        let mut out = std::mem::take(&mut self.results);
+        let mut out = self.take_results();
         out.sort_by_key(|r| r.id);
         Ok(out)
     }
@@ -459,7 +632,7 @@ mod tests {
         for id in 0..n_req {
             let prompt: Vec<i32> =
                 (0..rng.range(3, 8)).map(|_| rng.below(256) as i32).collect();
-            server.submit(GenRequest { id, prompt, max_new: 3, temperature: 0.0 });
+            server.submit(GenRequest { id, prompt, max_new: 3, temperature: 0.0 }).unwrap();
         }
         server.run_to_completion().unwrap()
     }
@@ -503,7 +676,8 @@ mod tests {
         let backend = CpuBackend::new();
         let session =
             crate::coordinator::session::Session::init(&backend, "lm_tiny_efla", 5).unwrap();
-        let cfg = ServerConfig { prefill_chunk: 0, prefill_token_budget: 0 };
+        let cfg =
+            ServerConfig { prefill_chunk: 0, prefill_token_budget: 0, ..ServerConfig::default() };
         let mut server = Server::with_config(&session, 99, cfg).unwrap();
         let n_req = server.batch_size() as u64 + 2;
         let results = drive(&mut server, n_req, 1);
@@ -515,5 +689,119 @@ mod tests {
             server.stats.prefill_tokens + server.stats.decode_tokens,
             server.stats.tokens_processed
         );
+    }
+
+    fn tiny_server(session: &Session) -> Server<'_> {
+        Server::new(session, 3).unwrap()
+    }
+
+    fn tiny_session() -> Session {
+        use crate::runtime::CpuBackend;
+        let backend = CpuBackend::new();
+        Session::init(&backend, "lm_tiny_efla", 5).unwrap()
+    }
+
+    #[test]
+    fn submit_rejects_empty_prompt_and_zero_max_new() {
+        // Regression: an empty prompt used to assert! and take the whole
+        // engine down; max_new == 0 silently occupied a slot forever.
+        let session = tiny_session();
+        let mut server = tiny_server(&session);
+        let err = server
+            .submit(GenRequest { id: 1, prompt: vec![], max_new: 3, temperature: 0.0 })
+            .unwrap_err();
+        assert_eq!(err, SubmitError::EmptyPrompt { id: 1 });
+        let err = server
+            .submit(GenRequest { id: 2, prompt: vec![5], max_new: 0, temperature: 0.0 })
+            .unwrap_err();
+        assert_eq!(err, SubmitError::ZeroMaxNew { id: 2 });
+        // Nothing entered the queue; the ids are free for valid reuse.
+        assert_eq!(server.queue_len(), 0);
+        server
+            .submit(GenRequest { id: 1, prompt: vec![5], max_new: 1, temperature: 0.0 })
+            .unwrap();
+        assert_eq!(server.queue_len(), 1);
+    }
+
+    #[test]
+    fn submit_rejects_duplicate_live_ids() {
+        let session = tiny_session();
+        let mut server = tiny_server(&session);
+        let req = GenRequest { id: 7, prompt: vec![1, 2, 3], max_new: 2, temperature: 0.0 };
+        server.submit(req.clone()).unwrap();
+        // Duplicate while queued.
+        assert_eq!(server.submit(req.clone()).unwrap_err(), SubmitError::DuplicateId { id: 7 });
+        // Still duplicate while finished-but-untaken.
+        while server.has_work() {
+            server.engine_step().unwrap();
+        }
+        assert_eq!(server.submit(req.clone()).unwrap_err(), SubmitError::DuplicateId { id: 7 });
+        // take_results frees the id.
+        let results = server.take_results();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].id, 7);
+        server.submit(req).unwrap();
+    }
+
+    #[test]
+    fn more_requests_than_slots_all_complete_without_stalling() {
+        // Regression guard for the continuous-batching queue: 3x the slot
+        // count must drain through engine_step without run_to_completion.
+        let session = tiny_session();
+        let mut server = tiny_server(&session);
+        let n_req = 3 * server.batch_size() as u64;
+        for id in 0..n_req {
+            server
+                .submit(GenRequest { id, prompt: vec![9, 8, 7], max_new: 2, temperature: 0.0 })
+                .unwrap();
+        }
+        let mut got = Vec::new();
+        let mut steps = 0;
+        while server.has_work() {
+            server.engine_step().unwrap();
+            got.extend(server.take_results());
+            steps += 1;
+            assert!(steps < 10_000, "engine stalled with {} results", got.len());
+        }
+        assert_eq!(got.len(), n_req as usize);
+        assert_eq!(server.stats.admitted, n_req);
+        assert!(server.stats.mean_queue_wait_secs() >= 0.0);
+        assert!(server.stats.mean_e2e_secs() > 0.0);
+        for r in &got {
+            assert!(r.e2e_secs >= r.queue_wait_secs);
+        }
+    }
+
+    #[test]
+    fn token_events_match_results_when_enabled() {
+        let session = tiny_session();
+        let mut server = tiny_server(&session);
+        server.enable_events();
+        for id in 0..2u64 {
+            server
+                .submit(GenRequest { id, prompt: vec![4, 4, 4], max_new: 3, temperature: 0.0 })
+                .unwrap();
+        }
+        let mut by_id: std::collections::BTreeMap<u64, Vec<i32>> = Default::default();
+        while server.has_work() {
+            server.engine_step().unwrap();
+            for ev in server.take_events() {
+                by_id.entry(ev.id).or_default().push(ev.token);
+            }
+        }
+        for r in server.take_results() {
+            assert_eq!(by_id.get(&r.id), Some(&r.tokens), "events must mirror result {}", r.id);
+        }
+    }
+
+    #[test]
+    fn events_are_not_captured_by_default() {
+        let session = tiny_session();
+        let mut server = tiny_server(&session);
+        server
+            .submit(GenRequest { id: 0, prompt: vec![1], max_new: 2, temperature: 0.0 })
+            .unwrap();
+        server.run_to_completion().unwrap();
+        assert!(server.take_events().is_empty());
     }
 }

@@ -74,5 +74,6 @@ pub mod attention;
 pub mod coordinator;
 pub mod data;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

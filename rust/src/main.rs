@@ -95,6 +95,9 @@ fn common_args(program: &str, about: &str) -> Args {
             "256",
             "serve: max prompt tokens per engine step across slots (0 = unlimited)",
         )
+        .opt("listen", "", "serve: HTTP listen address, e.g. 127.0.0.1:8080 (empty = demo mode)")
+        .opt("queue-depth", "64", "serve: admission queue bound (full queue answers 429)")
+        .opt("drain-timeout", "5", "serve: seconds to drain in-flight requests on SIGTERM")
         .opt("artifacts", "artifacts", "artifact directory (PJRT backend)")
         .opt("out", "runs", "output directory")
 }
@@ -116,6 +119,9 @@ fn build_config(p: &efla::util::cli::Parsed) -> Result<RunConfig> {
     cfg.threads = p.usize("threads")?;
     cfg.prefill_chunk = p.usize("prefill-chunk")?;
     cfg.prefill_token_budget = p.usize("prefill-budget")?;
+    cfg.listen = p.get("listen")?.to_string();
+    cfg.queue_depth = p.usize("queue-depth")?;
+    cfg.drain_timeout_secs = p.f64("drain-timeout")?;
     cfg.artifact_dir = PathBuf::from(p.get("artifacts")?);
     cfg.out_dir = PathBuf::from(p.get("out")?);
     Ok(cfg)
@@ -138,10 +144,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    let p = common_args("efla serve", "batched decode demo (O(1)-state serving)")
-        .opt("requests", "16", "number of demo requests")
-        .opt("max-new", "32", "tokens to generate per request")
-        .opt("temperature", "0.8", "sampling temperature (0 = greedy)")
+    let p = common_args("efla serve", "HTTP serving / batched decode demo")
+        .opt("requests", "16", "demo mode: number of demo requests")
+        .opt("max-new", "32", "demo mode: tokens to generate per request")
+        .opt("temperature", "0.8", "demo mode: sampling temperature (0 = greedy)")
         .parse_from(argv)?;
     let cfg = build_config(&p)?;
     if cfg.task != Task::Lm {
@@ -163,7 +169,25 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let server_cfg = ServerConfig {
         prefill_chunk: cfg.prefill_chunk,
         prefill_token_budget: cfg.prefill_token_budget,
+        queue_depth: cfg.queue_depth,
+        drain_timeout_secs: cfg.drain_timeout_secs,
     };
+
+    // --listen <addr>: run the HTTP front end with continuous batching
+    // until SIGTERM/SIGINT, then drain and exit.
+    if !cfg.listen.is_empty() {
+        efla::serve::install_signal_handlers();
+        let frontend = efla::serve::Frontend::bind(&cfg.listen)?;
+        let stats = frontend.run(&session, server_cfg, cfg.seed)?;
+        log::info!(
+            "drained: {} completed | {} engine steps | {:.1} tok/s | mean TTFT {:.1} ms",
+            stats.completed,
+            stats.engine_steps,
+            stats.tokens_per_sec(),
+            stats.mean_ttft_secs() * 1e3
+        );
+        return Ok(());
+    }
     let mut server = Server::with_config(&session, cfg.seed, server_cfg)?;
     let n_req = p.usize("requests")?;
     let max_new = p.usize("max-new")?;
@@ -174,7 +198,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         let prompt: Vec<i32> = (0..plen)
             .map(|_| rng.range(97, 123) as i32) // ascii letters for byte-level models
             .collect();
-        server.submit(GenRequest { id, prompt, max_new, temperature: temp });
+        server.submit(GenRequest { id, prompt, max_new, temperature: temp })?;
     }
     let results = server.run_to_completion()?;
     log::info!(

@@ -1,0 +1,276 @@
+//! The continuous-batching engine loop behind the HTTP front end.
+//!
+//! PR 4's [`Server`] already refills freed slots from its internal queue,
+//! but it only exposed batch semantics: callers submitted everything up
+//! front and `run_to_completion` drained the world. This module turns it
+//! into a *service*: [`run_engine`] owns the `Server` on the calling
+//! thread (a [`Session`] is not `Sync`, so the engine runs wherever the
+//! session lives) and consumes [`Submission`]s from a **bounded**
+//! `sync_channel` — the admission queue. Connection workers `try_send`
+//! into it; a full channel is the 429 backpressure signal. Requests join
+//! slots the moment one frees **mid-flight**, finished generations leave
+//! immediately through their per-request event channel, and the prefill
+//! token budget stays shared with the PR 4 scheduler — decode-phase slots
+//! are never starved behind a new arrival's long prompt.
+//!
+//! Event flow per accepted request:
+//! * [`Event::Token`] for every generated token (streaming responses
+//!   flush each as one HTTP chunk) — only when the submission asked;
+//! * exactly one terminal event: [`Event::Done`] with the full
+//!   [`GenResult`], or [`Event::Rejected`] with the typed
+//!   [`SubmitError`] (duplicate id, empty prompt, zero budget).
+//!
+//! Shutdown: when the flag flips, the engine keeps stepping until every
+//! accepted request has finished (in-flight slots *and* channel-queued
+//! submissions), bounded by [`ServerConfig::drain_timeout_secs`]; workers
+//! whose request is abandoned by the deadline observe a dropped event
+//! channel and answer 503.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::server::{
+    GenRequest, GenResult, Server, ServerConfig, ServerStats, SubmitError,
+};
+use crate::coordinator::session::Session;
+
+/// What a request's event channel can carry.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// One freshly generated token.
+    Token(i32),
+    /// The request finished (terminal).
+    Done(GenResult),
+    /// The engine refused the request (terminal).
+    Rejected(SubmitError),
+}
+
+/// One request travelling from a connection worker to the engine.
+pub struct Submission {
+    pub req: GenRequest,
+    /// Arrival at the socket — queue-wait and TTFT include channel time.
+    pub submitted: Instant,
+    /// Forward per-token [`Event::Token`]s in addition to the terminal
+    /// event (the `"stream": true` path).
+    pub stream: bool,
+    pub events: mpsc::Sender<Event>,
+}
+
+/// p50/p95 summary over the retained latency samples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+}
+
+/// Bounded sample ring (newest-wins once full) for latency percentiles.
+struct Ring {
+    buf: Vec<f64>,
+    next: usize,
+    cap: usize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { buf: Vec::new(), next: 0, cap: cap.max(1) }
+    }
+
+    fn push(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    fn summary(&self) -> LatencySummary {
+        if self.buf.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut xs = self.buf.clone();
+        xs.sort_by(f64::total_cmp);
+        let pick = |p: f64| xs[((p * (xs.len() - 1) as f64).round() as usize).min(xs.len() - 1)];
+        LatencySummary { count: xs.len(), p50_secs: pick(0.5), p95_secs: pick(0.95) }
+    }
+}
+
+/// Counters and latency samples shared between the engine thread, the
+/// connection workers and `GET /stats`.
+pub struct EngineShared {
+    /// Submissions currently sitting in the admission channel. Signed:
+    /// the worker-side increment and engine-side decrement race benignly.
+    queued: AtomicI64,
+    /// Requests accepted into the admission queue so far.
+    pub accepted: AtomicU64,
+    /// Requests bounced with 429 (admission queue full).
+    pub rejected: AtomicU64,
+    server_stats: Mutex<ServerStats>,
+    queue_wait: Mutex<Ring>,
+    e2e: Mutex<Ring>,
+}
+
+impl EngineShared {
+    /// `sample_cap` bounds the per-metric latency rings.
+    pub fn new(sample_cap: usize) -> EngineShared {
+        EngineShared {
+            queued: AtomicI64::new(0),
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            server_stats: Mutex::new(ServerStats::default()),
+            queue_wait: Mutex::new(Ring::new(sample_cap)),
+            e2e: Mutex::new(Ring::new(sample_cap)),
+        }
+    }
+
+    /// Record a successful `try_send` into the admission channel.
+    pub fn note_accepted(&self) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.accepted.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Record a 429 bounce.
+    pub fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn note_popped(&self) {
+        self.queued.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Submissions waiting in the admission channel right now.
+    pub fn queue_depth(&self) -> usize {
+        self.queued.load(Ordering::SeqCst).max(0) as usize
+    }
+
+    /// Latest engine-side [`ServerStats`] snapshot.
+    pub fn server_stats(&self) -> ServerStats {
+        *self.server_stats.lock().expect("server_stats lock")
+    }
+
+    fn set_server_stats(&self, s: ServerStats) {
+        *self.server_stats.lock().expect("server_stats lock") = s;
+    }
+
+    fn record_result(&self, r: &GenResult) {
+        self.queue_wait.lock().expect("queue_wait lock").push(r.queue_wait_secs);
+        self.e2e.lock().expect("e2e lock").push(r.e2e_secs);
+    }
+
+    /// (queue-wait, end-to-end) percentile summaries.
+    pub fn latency_summaries(&self) -> (LatencySummary, LatencySummary) {
+        let qw = self.queue_wait.lock().expect("queue_wait lock").summary();
+        let e2e = self.e2e.lock().expect("e2e lock").summary();
+        (qw, e2e)
+    }
+}
+
+type Sinks = HashMap<u64, (mpsc::Sender<Event>, bool)>;
+
+fn seat(server: &mut Server<'_>, sinks: &mut Sinks, sub: Submission) {
+    let Submission { req, submitted, stream, events } = sub;
+    let id = req.id;
+    match server.submit_at(req, submitted) {
+        Ok(()) => {
+            sinks.insert(id, (events, stream));
+        }
+        Err(e) => {
+            let _ = events.send(Event::Rejected(e));
+        }
+    }
+}
+
+/// Run the continuous-batching engine until shutdown (blocking; the
+/// engine owns the `Server` for the whole run). Returns the final stats.
+pub fn run_engine(
+    session: &Session,
+    cfg: ServerConfig,
+    seed: u64,
+    rx: Receiver<Submission>,
+    shared: &EngineShared,
+    shutdown: &AtomicBool,
+) -> Result<ServerStats> {
+    let mut server = Server::with_config(session, seed, cfg)?;
+    server.enable_events();
+    shared.set_server_stats(server.stats);
+    let mut sinks: Sinks = HashMap::new();
+    let t0 = Instant::now();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        // Admit only what the next step can seat: the bounded channel is
+        // the real queue, so the 429 signal reflects slots + queue_depth.
+        while server.queue_len() < server.free_slots() {
+            match rx.try_recv() {
+                Ok(sub) => {
+                    shared.note_popped();
+                    seat(&mut server, &mut sinks, sub);
+                }
+                Err(_) => break,
+            }
+        }
+        if !server.has_work() {
+            if shutdown.load(Ordering::SeqCst) {
+                // Final sweep: seat anything that slipped into the channel
+                // before the flag flipped, then leave.
+                match rx.try_recv() {
+                    Ok(sub) => {
+                        shared.note_popped();
+                        seat(&mut server, &mut sinks, sub);
+                        continue;
+                    }
+                    Err(_) => break,
+                }
+            }
+            // Idle: park on the channel instead of spinning.
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(sub) => {
+                    shared.note_popped();
+                    seat(&mut server, &mut sinks, sub);
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            continue;
+        }
+        server.engine_step()?;
+        for ev in server.take_events() {
+            if let Some((tx, stream)) = sinks.get(&ev.id) {
+                if *stream {
+                    let _ = tx.send(Event::Token(ev.token));
+                }
+            }
+        }
+        for res in server.take_results() {
+            shared.record_result(&res);
+            if let Some((tx, _)) = sinks.remove(&res.id) {
+                let _ = tx.send(Event::Done(res));
+            }
+        }
+        server.stats.wall_secs = t0.elapsed().as_secs_f64();
+        shared.set_server_stats(server.stats);
+        if shutdown.load(Ordering::SeqCst) {
+            let deadline = *drain_deadline.get_or_insert_with(|| {
+                Instant::now() + Duration::from_secs_f64(cfg.drain_timeout_secs.max(0.0))
+            });
+            if Instant::now() >= deadline {
+                log::warn!(
+                    "drain timeout after {:.1}s: abandoning {} in-flight request(s)",
+                    cfg.drain_timeout_secs,
+                    sinks.len()
+                );
+                break;
+            }
+        }
+    }
+    server.stats.wall_secs = t0.elapsed().as_secs_f64();
+    shared.set_server_stats(server.stats);
+    // Dropping `sinks` (and `rx`) disconnects any abandoned workers —
+    // they observe the closed channel and answer 503.
+    Ok(server.stats)
+}

@@ -1,0 +1,508 @@
+//! Minimal HTTP/1.1 substrate (std-only — no `hyper`/`tiny_http` in the
+//! vendor set).
+//!
+//! Server side: [`read_request`] parses one request from a `BufRead`
+//! (request line, headers, `Content-Length` body with a size cap) with
+//! keep-alive support; [`write_response`] and [`ChunkedWriter`] emit
+//! fixed-length and `Transfer-Encoding: chunked` responses (the token
+//! stream of `POST /v1/generate` with `"stream": true`).
+//!
+//! Client side: [`read_response`] (understands both framings, de-chunks)
+//! and the [`request`] one-shot helper — used by the integration tests,
+//! `examples/serve.rs` and anything else that wants to poke the front end
+//! without an external HTTP client.
+//!
+//! Deliberately small: no TLS, no request pipelining, no chunked *request*
+//! bodies (rejected as unsupported), header names lowercased at parse
+//! time so lookups are case-insensitive per RFC 9110.
+
+use std::io::{self, BufRead, Read, Write};
+
+/// Cap on request-line + header bytes per request.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Default cap on request bodies (the generate endpoint's JSON).
+pub const DEFAULT_MAX_BODY: usize = 1 << 20;
+
+/// A parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    /// Request target as sent (path + optional query).
+    pub target: String,
+    /// `HTTP/1.1` or `HTTP/1.0`.
+    pub version: String,
+    /// Header pairs; names lowercased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Keep the connection open after responding? HTTP/1.1 defaults to
+    /// yes unless `Connection: close`; HTTP/1.0 defaults to no unless
+    /// `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        let conn = self.header("connection").unwrap_or("").to_ascii_lowercase();
+        if self.version == "HTTP/1.0" {
+            conn == "keep-alive"
+        } else {
+            conn != "close"
+        }
+    }
+
+    /// The target's path component (query string stripped).
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or("")
+    }
+}
+
+/// Why a request (or client-side response) could not be parsed.
+#[derive(Debug)]
+pub enum ParseError {
+    /// Clean EOF before the first byte (keep-alive connection ended).
+    Closed,
+    /// Read timeout before the first byte of a new request — the worker
+    /// checks the shutdown flag and retries the read.
+    IdleTimeout,
+    BadRequestLine(String),
+    BadHeader(String),
+    BadContentLength(String),
+    /// Chunked (or other non-identity) request bodies are not accepted.
+    UnsupportedTransferEncoding,
+    HeadTooLarge { limit: usize },
+    BodyTooLarge { len: usize, limit: usize },
+    Io(io::Error),
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::Closed => write!(f, "connection closed"),
+            ParseError::IdleTimeout => write!(f, "idle read timeout"),
+            ParseError::BadRequestLine(l) => write!(f, "malformed request line: {l:?}"),
+            ParseError::BadHeader(l) => write!(f, "malformed header: {l:?}"),
+            ParseError::BadContentLength(v) => write!(f, "invalid content-length: {v:?}"),
+            ParseError::UnsupportedTransferEncoding => {
+                write!(f, "transfer-encoding request bodies are not supported")
+            }
+            ParseError::HeadTooLarge { limit } => {
+                write!(f, "request head exceeds {limit} bytes")
+            }
+            ParseError::BodyTooLarge { len, limit } => {
+                write!(f, "request body of {len} bytes exceeds limit of {limit}")
+            }
+            ParseError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Read one CRLF- (or LF-) terminated line. `read_any` tracks whether any
+/// byte of the current message was consumed, so an idle timeout on a
+/// keep-alive connection is distinguishable from a timeout mid-request.
+fn read_line(
+    r: &mut impl BufRead,
+    read_any: &mut bool,
+    budget: &mut usize,
+) -> Result<String, ParseError> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if line.is_empty() && !*read_any {
+                    return Err(ParseError::Closed);
+                }
+                let e = io::Error::new(io::ErrorKind::UnexpectedEof, "eof mid-request");
+                return Err(ParseError::Io(e));
+            }
+            Ok(_) => {
+                *read_any = true;
+                if *budget == 0 {
+                    return Err(ParseError::HeadTooLarge { limit: MAX_HEAD_BYTES });
+                }
+                *budget -= 1;
+                if byte[0] == b'\n' {
+                    break;
+                }
+                line.push(byte[0]);
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(e.kind()) => {
+                if line.is_empty() && !*read_any {
+                    return Err(ParseError::IdleTimeout);
+                }
+                return Err(ParseError::Io(e));
+            }
+            Err(e) => return Err(ParseError::Io(e)),
+        }
+    }
+    if line.last() == Some(&b'\r') {
+        line.pop();
+    }
+    String::from_utf8(line).map_err(|_| ParseError::BadHeader("non-utf8 bytes".into()))
+}
+
+fn is_timeout(kind: io::ErrorKind) -> bool {
+    matches!(kind, io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+fn find_header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+}
+
+/// Parse one request. Bodies are read only when `Content-Length` is
+/// present and within `max_body`; anything larger is rejected before a
+/// byte of it is read.
+pub fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> Result<Request, ParseError> {
+    let mut read_any = false;
+    let mut budget = MAX_HEAD_BYTES;
+    let line = read_line(r, &mut read_any, &mut budget)?;
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    if parts.len() != 3 || !parts[2].starts_with("HTTP/") {
+        return Err(ParseError::BadRequestLine(line));
+    }
+    let (method, target, version) =
+        (parts[0].to_string(), parts[1].to_string(), parts[2].to_string());
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = read_line(r, &mut read_any, &mut budget)?;
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = match line.split_once(':') {
+            Some((n, v)) if !n.is_empty() && !n.contains(' ') => (n, v),
+            _ => return Err(ParseError::BadHeader(line)),
+        };
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+    if let Some(te) = find_header(&headers, "transfer-encoding") {
+        if !te.eq_ignore_ascii_case("identity") {
+            return Err(ParseError::UnsupportedTransferEncoding);
+        }
+    }
+    let body_len = match find_header(&headers, "content-length") {
+        None => 0,
+        Some(v) => {
+            v.trim().parse::<usize>().map_err(|_| ParseError::BadContentLength(v.into()))?
+        }
+    };
+    if body_len > max_body {
+        return Err(ParseError::BodyTooLarge { len: body_len, limit: max_body });
+    }
+    let mut body = vec![0u8; body_len];
+    r.read_exact(&mut body).map_err(ParseError::Io)?;
+    Ok(Request { method, target, version, headers, body })
+}
+
+/// Canonical reason phrase for the statuses the front end emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a fixed-length response.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        conn
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Incremental `Transfer-Encoding: chunked` response writer. Every
+/// [`ChunkedWriter::chunk`] is flushed immediately — it is the streaming
+/// transport of the generate endpoint, one token per chunk.
+pub struct ChunkedWriter<'a, W: Write> {
+    w: &'a mut W,
+}
+
+impl<'a, W: Write> ChunkedWriter<'a, W> {
+    /// Write the response head and switch the body to chunked framing.
+    pub fn start(
+        w: &'a mut W,
+        status: u16,
+        content_type: &str,
+        keep_alive: bool,
+    ) -> io::Result<Self> {
+        let conn = if keep_alive { "keep-alive" } else { "close" };
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ntransfer-encoding: chunked\r\n\
+             connection: {}\r\n\r\n",
+            status,
+            reason(status),
+            content_type,
+            conn
+        )?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    /// Emit one chunk (empty input is skipped — a zero-length chunk would
+    /// terminate the stream).
+    pub fn chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminate the stream (last-chunk + trailing CRLF).
+    pub fn finish(self) -> io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// A client-side response (tests / examples / smoke drivers).
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    /// De-chunked body.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        find_header(&self.headers, &name.to_ascii_lowercase())
+    }
+
+    /// Body as UTF-8 (lossy).
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Parse a response, de-chunking `Transfer-Encoding: chunked` bodies.
+pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response, ParseError> {
+    let mut read_any = false;
+    let mut budget = MAX_HEAD_BYTES;
+    let line = read_line(r, &mut read_any, &mut budget)?;
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    if parts.len() < 2 || !parts[0].starts_with("HTTP/") {
+        return Err(ParseError::BadRequestLine(line));
+    }
+    let status = parts[1].parse::<u16>().map_err(|_| ParseError::BadRequestLine(line.clone()))?;
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = read_line(r, &mut read_any, &mut budget)?;
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = match line.split_once(':') {
+            Some((n, v)) if !n.is_empty() => (n, v),
+            _ => return Err(ParseError::BadHeader(line)),
+        };
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let chunked = find_header(&headers, "transfer-encoding")
+        .map(|v| v.to_ascii_lowercase().contains("chunked"))
+        .unwrap_or(false);
+    let mut body = Vec::new();
+    let mut cbudget = usize::MAX;
+    if chunked {
+        loop {
+            let size_line = read_line(r, &mut read_any, &mut cbudget)?;
+            let size = usize::from_str_radix(size_line.trim(), 16)
+                .map_err(|_| ParseError::BadContentLength(size_line))?;
+            if size == 0 {
+                // Trailing CRLF after the last-chunk.
+                let _ = read_line(r, &mut read_any, &mut cbudget);
+                break;
+            }
+            let mut chunk = vec![0u8; size];
+            r.read_exact(&mut chunk).map_err(ParseError::Io)?;
+            body.extend_from_slice(&chunk);
+            let mut crlf = [0u8; 2];
+            r.read_exact(&mut crlf).map_err(ParseError::Io)?;
+        }
+    } else if let Some(v) = find_header(&headers, "content-length") {
+        let len =
+            v.trim().parse::<usize>().map_err(|_| ParseError::BadContentLength(v.into()))?;
+        body = vec![0u8; len];
+        r.read_exact(&mut body).map_err(ParseError::Io)?;
+    } else {
+        r.read_to_end(&mut body).map_err(ParseError::Io)?;
+    }
+    Ok(Response { status, headers, body })
+}
+
+/// One-shot client request against `addr` (e.g. `127.0.0.1:8080`).
+pub fn request(addr: &str, method: &str, path: &str, body: &[u8]) -> io::Result<Response> {
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+    write!(
+        stream,
+        "{} {} HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n",
+        method,
+        path,
+        addr,
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    let mut r = std::io::BufReader::new(stream);
+    read_response(&mut r).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(s: &str) -> Result<Request, ParseError> {
+        read_request(&mut Cursor::new(s.as_bytes().to_vec()), DEFAULT_MAX_BODY)
+    }
+
+    #[test]
+    fn parses_get_with_headers() {
+        let req = parse("GET /stats?v=1 HTTP/1.1\r\nHost: x\r\nX-Thing: a b\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.target, "/stats?v=1");
+        assert_eq!(req.path(), "/stats");
+        assert_eq!(req.version, "HTTP/1.1");
+        // Header names are lowercased; lookup is case-insensitive.
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("X-THING"), Some("a b"));
+        assert!(req.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let req = parse("POST /v1/generate HTTP/1.1\r\ncontent-length: 4\r\n\r\nabcd").unwrap();
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn keep_alive_negotiation() {
+        let close = parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!close.keep_alive());
+        let old = parse("GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!old.keep_alive(), "HTTP/1.0 defaults to close");
+        let old_ka = parse("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(old_ka.keep_alive());
+    }
+
+    #[test]
+    fn malformed_request_lines_rejected() {
+        let bads = ["GARBAGE\r\n\r\n", "GET /\r\n\r\n", "GET / HTTP/1.1 X\r\n\r\n"];
+        for bad in bads {
+            match parse(bad) {
+                Err(ParseError::BadRequestLine(_)) => {}
+                other => panic!("{bad:?}: expected BadRequestLine, got {other:?}"),
+            }
+        }
+        // The version token must be HTTP/x.
+        match parse("GET / FTP/1\r\n\r\n") {
+            Err(ParseError::BadRequestLine(_)) => {}
+            other => panic!("expected BadRequestLine, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_headers_rejected() {
+        match parse("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n") {
+            Err(ParseError::BadHeader(_)) => {}
+            other => panic!("expected BadHeader, got {other:?}"),
+        }
+        match parse("GET / HTTP/1.1\r\ncontent-length: two\r\n\r\n") {
+            Err(ParseError::BadContentLength(_)) => {}
+            other => panic!("expected BadContentLength, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_body_rejected_before_reading_it() {
+        let head = "POST / HTTP/1.1\r\ncontent-length: 999999\r\n\r\n";
+        match read_request(&mut Cursor::new(head.as_bytes().to_vec()), 1024) {
+            Err(ParseError::BodyTooLarge { len: 999999, limit: 1024 }) => {}
+            other => panic!("expected BodyTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunked_request_bodies_rejected() {
+        match parse("POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n") {
+            Err(ParseError::UnsupportedTransferEncoding) => {}
+            other => panic!("expected UnsupportedTransferEncoding, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn keep_alive_parses_back_to_back_requests() {
+        let two = "GET /healthz HTTP/1.1\r\n\r\nPOST /x HTTP/1.1\r\ncontent-length: 2\r\n\r\nhi";
+        let mut cur = Cursor::new(two.as_bytes().to_vec());
+        let a = read_request(&mut cur, DEFAULT_MAX_BODY).unwrap();
+        assert_eq!(a.path(), "/healthz");
+        let b = read_request(&mut cur, DEFAULT_MAX_BODY).unwrap();
+        assert_eq!(b.path(), "/x");
+        assert_eq!(b.body, b"hi");
+        // The connection then ends cleanly.
+        match read_request(&mut cur, DEFAULT_MAX_BODY) {
+            Err(ParseError::Closed) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fixed_response_roundtrip() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 429, "application/json", b"{\"error\":\"full\"}", true).unwrap();
+        let resp = read_response(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+        assert_eq!(resp.text(), "{\"error\":\"full\"}");
+    }
+
+    #[test]
+    fn chunked_response_roundtrip() {
+        let mut buf = Vec::new();
+        {
+            let mut cw = ChunkedWriter::start(&mut buf, 200, "application/json", false).unwrap();
+            cw.chunk(b"{\"token\":1}\n").unwrap();
+            cw.chunk(b"").unwrap(); // skipped, must not terminate the stream
+            cw.chunk(b"{\"done\":true}\n").unwrap();
+            cw.finish().unwrap();
+        }
+        let resp = read_response(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.text(), "{\"token\":1}\n{\"done\":true}\n");
+    }
+}

@@ -1,0 +1,517 @@
+//! HTTP serving front end: the network face of the O(1)-state engine.
+//!
+//! The paper's serving argument (and the ROADMAP north star) is that an
+//! EFLA slot costs the same at token 1 and token 100,000 — no KV cache,
+//! just fixed-size recurrent state. This module puts traffic on that
+//! property: a std-only HTTP/1.1 server (no new dependencies —
+//! `std::net::TcpListener` + scoped threads) in front of the
+//! continuously batched engine of [`engine`].
+//!
+//! * [`http`]   — request parsing, fixed and chunked response writers,
+//!   and a tiny client (tests/examples).
+//! * [`engine`] — the continuous-batching loop: bounded admission queue,
+//!   per-request event channels, graceful drain.
+//! * this file  — [`Frontend`]: bind, accept loop, connection workers,
+//!   routing, `/stats` JSON, and SIGINT/SIGTERM handling.
+//!
+//! ## Endpoints
+//!
+//! * `POST /v1/generate` — JSON body with `prompt` (string, byte-level
+//!   tokens) or `tokens` (int array), optional `max_tokens`,
+//!   `temperature`, `id`, `stream`. Non-streamed: one JSON object.
+//!   Streamed: `Transfer-Encoding: chunked`, one JSON line per token,
+//!   then a final line with `"done": true` and the full result.
+//! * `GET /stats`   — engine/queue/latency counters as JSON.
+//! * `GET /healthz` — liveness probe.
+//!
+//! Backpressure: the admission queue holds at most
+//! [`ServerConfig::queue_depth`] waiting requests (decode slots are extra
+//! capacity); beyond that `POST /v1/generate` answers **429** without
+//! touching the engine. Shutdown (SIGTERM/SIGINT or the
+//! [`Frontend::shutdown_flag`]): stop accepting, drain accepted work
+//! within [`ServerConfig::drain_timeout_secs`], then return.
+//!
+//! Threading: a [`crate::coordinator::session::Session`] is not `Sync`,
+//! so [`Frontend::run`] keeps the engine on the calling thread and spawns
+//! the accept loop plus one worker per connection as scoped threads —
+//! when `run` returns, no thread of the front end is left behind.
+
+pub mod engine;
+pub mod http;
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::Scope;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::server::{GenRequest, GenResult, ServerConfig, ServerStats, SubmitError};
+use crate::coordinator::session::Session;
+use crate::util::json::{self, Json};
+
+use engine::{EngineShared, Event, Submission};
+use http::{ChunkedWriter, ParseError, Request};
+
+/// Soft cap on concurrently served connections; beyond it new arrivals
+/// get an immediate 503 instead of a worker thread.
+const MAX_CONNECTIONS: usize = 512;
+
+/// Server-side ceiling on `max_tokens` per request. Slots are only freed
+/// when a generation reaches its budget, so an unbounded client value
+/// could pin a slot (and survive the client's disconnect) indefinitely.
+const MAX_TOKENS_LIMIT: usize = 4096;
+
+/// Auto-assigned request ids start here; client-supplied ids must stay
+/// below it, so the two ranges can never collide — a client that never
+/// sets an id can never be bounced with a spurious duplicate-id 409.
+/// 2^48 keeps every id exactly representable in the JSON f64 substrate.
+const AUTO_ID_BASE: u64 = 1 << 48;
+
+/// Latency samples retained per metric for the `/stats` percentiles.
+const LATENCY_SAMPLES: usize = 4096;
+
+/// Process-wide flag set by SIGINT/SIGTERM once
+/// [`install_signal_handlers`] ran. The accept loop propagates it into
+/// the per-frontend shutdown flag.
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+/// Install SIGINT + SIGTERM handlers that request a graceful drain.
+///
+/// std has no signal API and the vendor set has no `libc`/`ctrlc` crate,
+/// so this binds `signal(2)` from the platform C library directly. The
+/// handler is async-signal-safe: it only stores to an atomic.
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALLED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+        signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+    }
+}
+
+/// Non-unix builds: signals are not wired; use the shutdown flag.
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+/// Shared context of all connection workers.
+struct ConnCtx {
+    engine_tx: mpsc::SyncSender<Submission>,
+    shared: Arc<EngineShared>,
+    shutdown: Arc<AtomicBool>,
+    next_id: AtomicU64,
+    conns: AtomicUsize,
+    slots: usize,
+}
+
+/// A bound-but-not-yet-serving HTTP front end. Two-phase so callers
+/// (tests, the smoke driver) can learn the OS-assigned port of
+/// `127.0.0.1:0` and grab the shutdown flag before the blocking serve
+/// loop starts.
+pub struct Frontend {
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Frontend {
+    /// Bind `listen` (e.g. `127.0.0.1:8080`, or port `0` for an
+    /// OS-assigned port).
+    pub fn bind(listen: &str) -> Result<Frontend> {
+        let listener = TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        Ok(Frontend { listener, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Flag that ends [`Frontend::run`] with a graceful drain. Signals
+    /// set it too (via [`install_signal_handlers`]).
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Serve until shutdown (blocking). The engine runs on the calling
+    /// thread; accept loop and connection workers are scoped threads, so
+    /// everything is joined when this returns.
+    pub fn run(self, session: &Session, cfg: ServerConfig, seed: u64) -> Result<ServerStats> {
+        let queue_depth = cfg.queue_depth.max(1);
+        let slots = session.decode_batch()?;
+        let addr = self.local_addr()?;
+        let (tx, rx) = mpsc::sync_channel::<Submission>(queue_depth);
+        let shared = Arc::new(EngineShared::new(LATENCY_SAMPLES));
+        let ctx = ConnCtx {
+            engine_tx: tx,
+            shared: shared.clone(),
+            shutdown: self.shutdown.clone(),
+            next_id: AtomicU64::new(1),
+            conns: AtomicUsize::new(0),
+            slots,
+        };
+        // Machine-readable readiness line on stdout: scripts/serve_smoke.py
+        // and the integration tests key on it (logs go to stderr).
+        println!("SERVE listening on {addr}");
+        std::io::stdout().flush().ok();
+        log::info!(
+            "serving on http://{addr} ({} slots, queue depth {}, drain timeout {:.1}s)",
+            slots,
+            queue_depth,
+            cfg.drain_timeout_secs
+        );
+        let listener = self.listener;
+        let shutdown = self.shutdown;
+        let stats = std::thread::scope(|s| {
+            let ctx = &ctx;
+            let listener = &listener;
+            s.spawn(move || accept_loop(s, listener, ctx));
+            let stats = engine::run_engine(session, cfg, seed, rx, &shared, &shutdown);
+            // Unblock the accept loop and any keep-alive workers even when
+            // the engine exits on an error.
+            shutdown.store(true, Ordering::SeqCst);
+            stats
+        })?;
+        log::info!(
+            "served {} requests ({} rejected) in {:.1}s",
+            stats.completed,
+            shared.rejected.load(Ordering::SeqCst),
+            stats.wall_secs
+        );
+        Ok(stats)
+    }
+}
+
+fn accept_loop<'scope, 'env>(
+    scope: &'scope Scope<'scope, 'env>,
+    listener: &'scope TcpListener,
+    ctx: &'scope ConnCtx,
+) {
+    loop {
+        if SIGNALLED.load(Ordering::SeqCst) {
+            ctx.shutdown.store(true, Ordering::SeqCst);
+        }
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if ctx.conns.load(Ordering::SeqCst) >= MAX_CONNECTIONS {
+                    let mut stream = stream;
+                    let _ = http::write_response(
+                        &mut stream,
+                        503,
+                        "application/json",
+                        b"{\"error\":\"too many connections\"}",
+                        false,
+                    );
+                    continue;
+                }
+                ctx.conns.fetch_add(1, Ordering::SeqCst);
+                scope.spawn(move || {
+                    handle_conn(stream, ctx);
+                    ctx.conns.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                log::warn!("accept error: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
+    if let Err(e) = serve_conn(stream, ctx) {
+        log::debug!("connection ended: {e:#}");
+    }
+}
+
+fn serve_conn(stream: TcpStream, ctx: &ConnCtx) -> Result<()> {
+    // Accepted sockets may inherit the listener's non-blocking mode on
+    // some platforms; force blocking + timeouts.
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        let req = match http::read_request(&mut reader, http::DEFAULT_MAX_BODY) {
+            Ok(req) => req,
+            Err(ParseError::Closed) => return Ok(()),
+            Err(ParseError::IdleTimeout) => {
+                if ctx.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(ParseError::Io(_)) => return Ok(()),
+            Err(e @ ParseError::BodyTooLarge { .. }) => {
+                respond_error(&mut writer, 413, &e.to_string(), false)?;
+                return Ok(());
+            }
+            Err(e) => {
+                respond_error(&mut writer, 400, &e.to_string(), false)?;
+                return Ok(());
+            }
+        };
+        let keep = req.keep_alive() && !ctx.shutdown.load(Ordering::SeqCst);
+        route(&mut writer, &req, keep, ctx)?;
+        if !keep {
+            return Ok(());
+        }
+    }
+}
+
+fn route(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) -> Result<()> {
+    match (req.method.as_str(), req.path()) {
+        ("GET", "/healthz") => {
+            let body = Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("slots", Json::Num(ctx.slots as f64)),
+            ]);
+            respond_json(w, 200, &body, keep)
+        }
+        ("GET", "/stats") => respond_json(w, 200, &stats_json(ctx), keep),
+        ("POST", "/v1/generate") => handle_generate(w, req, keep, ctx),
+        ("GET" | "HEAD", "/v1/generate") => respond_error(w, 405, "use POST", keep),
+        (m, p) => respond_error(w, 404, &format!("no route {m} {p}"), keep),
+    }
+}
+
+fn respond_json(w: &mut TcpStream, status: u16, body: &Json, keep: bool) -> Result<()> {
+    let text = body.to_string();
+    http::write_response(w, status, "application/json", text.as_bytes(), keep)?;
+    Ok(())
+}
+
+fn respond_error(w: &mut TcpStream, status: u16, msg: &str, keep: bool) -> Result<()> {
+    let body = Json::obj(vec![("error", Json::Str(msg.to_string()))]);
+    respond_json(w, status, &body, keep)
+}
+
+fn respond_submit_error(w: &mut TcpStream, e: &SubmitError, keep: bool) -> Result<()> {
+    let status = match e {
+        SubmitError::DuplicateId { .. } => 409,
+        SubmitError::EmptyPrompt { .. } | SubmitError::ZeroMaxNew { .. } => 400,
+    };
+    respond_error(w, status, &e.to_string(), keep)
+}
+
+/// Byte-level models: render a token as its printable ASCII char.
+fn printable(t: i32) -> char {
+    if (32..127).contains(&t) {
+        (t as u8) as char
+    } else {
+        '?'
+    }
+}
+
+fn result_json(res: &GenResult, done_marker: bool) -> Json {
+    let text: String = res.tokens.iter().map(|&t| printable(t)).collect();
+    let toks = Json::Arr(res.tokens.iter().map(|&t| Json::Num(t as f64)).collect());
+    let mut fields = vec![
+        ("id", Json::Num(res.id as f64)),
+        ("tokens", toks),
+        ("text", Json::Str(text)),
+        ("steps", Json::Num(res.steps as f64)),
+        ("ttft_ms", Json::Num(res.ttft_secs * 1e3)),
+        ("queue_ms", Json::Num(res.queue_wait_secs * 1e3)),
+        ("e2e_ms", Json::Num(res.e2e_secs * 1e3)),
+    ];
+    if done_marker {
+        fields.push(("done", Json::Bool(true)));
+    }
+    Json::obj(fields)
+}
+
+fn stats_json(ctx: &ConnCtx) -> Json {
+    let s = ctx.shared.server_stats();
+    let (qw, e2e) = ctx.shared.latency_summaries();
+    Json::obj(vec![
+        ("slots", Json::Num(ctx.slots as f64)),
+        ("threads", Json::Num(s.threads as f64)),
+        ("queue_depth", Json::Num(ctx.shared.queue_depth() as f64)),
+        ("accepted", Json::Num(ctx.shared.accepted.load(Ordering::SeqCst) as f64)),
+        ("rejected", Json::Num(ctx.shared.rejected.load(Ordering::SeqCst) as f64)),
+        ("admitted", Json::Num(s.admitted as f64)),
+        ("completed", Json::Num(s.completed as f64)),
+        ("engine_steps", Json::Num(s.engine_steps as f64)),
+        ("prefill_tokens", Json::Num(s.prefill_tokens as f64)),
+        ("decode_tokens", Json::Num(s.decode_tokens as f64)),
+        ("tokens_processed", Json::Num(s.tokens_processed as f64)),
+        ("tokens_per_sec", Json::Num(s.tokens_per_sec())),
+        ("utilization", Json::Num(s.utilization())),
+        ("mean_ttft_ms", Json::Num(s.mean_ttft_secs() * 1e3)),
+        ("mean_queue_wait_ms", Json::Num(s.mean_queue_wait_secs() * 1e3)),
+        ("mean_e2e_ms", Json::Num(s.mean_e2e_secs() * 1e3)),
+        ("p50_queue_wait_ms", Json::Num(qw.p50_secs * 1e3)),
+        ("p95_queue_wait_ms", Json::Num(qw.p95_secs * 1e3)),
+        ("p50_e2e_ms", Json::Num(e2e.p50_secs * 1e3)),
+        ("p95_e2e_ms", Json::Num(e2e.p95_secs * 1e3)),
+    ])
+}
+
+/// Parse the generate body into a request; `Err(msg)` maps to a 400.
+fn parse_generate(j: &Json, ctx: &ConnCtx) -> std::result::Result<(GenRequest, bool), String> {
+    let prompt: Vec<i32> = if let Some(s) = j.get("prompt").as_str() {
+        s.bytes().map(|b| b as i32).collect()
+    } else if let Some(arr) = j.get("tokens").as_arr() {
+        let mut toks = Vec::with_capacity(arr.len());
+        for v in arr {
+            match v.as_i64() {
+                Some(x) => toks.push(x as i32),
+                None => return Err("tokens must be an array of integers".into()),
+            }
+        }
+        toks
+    } else {
+        return Err("body needs 'prompt' (string) or 'tokens' (int array)".into());
+    };
+    if prompt.is_empty() {
+        return Err("empty prompt".into());
+    }
+    let max_new = match j.get("max_tokens") {
+        Json::Null => 32,
+        v => v.as_usize().ok_or("max_tokens must be a non-negative integer")?,
+    };
+    if max_new == 0 {
+        return Err("max_tokens must be at least 1".into());
+    }
+    if max_new > MAX_TOKENS_LIMIT {
+        return Err(format!("max_tokens must be at most {MAX_TOKENS_LIMIT}"));
+    }
+    let temperature = j.get("temperature").as_f64().unwrap_or(0.0) as f32;
+    let stream = j.get("stream").as_bool().unwrap_or(false);
+    let id = match j.get("id") {
+        Json::Null => AUTO_ID_BASE + ctx.next_id.fetch_add(1, Ordering::SeqCst),
+        v => {
+            let id = v.as_usize().ok_or("id must be a non-negative integer")? as u64;
+            if id >= AUTO_ID_BASE {
+                return Err(format!("id must be below {AUTO_ID_BASE} (reserved range)"));
+            }
+            id
+        }
+    };
+    Ok((GenRequest { id, prompt, max_new, temperature }, stream))
+}
+
+fn handle_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) -> Result<()> {
+    let submitted = Instant::now();
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(b) => b,
+        Err(_) => return respond_error(w, 400, "body must be UTF-8 JSON", keep),
+    };
+    let j = match json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return respond_error(w, 400, &format!("invalid JSON body: {e}"), keep),
+    };
+    let (gen_req, stream) = match parse_generate(&j, ctx) {
+        Ok(parsed) => parsed,
+        Err(msg) => return respond_error(w, 400, &msg, keep),
+    };
+    if ctx.shutdown.load(Ordering::SeqCst) {
+        return respond_error(w, 503, "shutting down", false);
+    }
+    let (ev_tx, ev_rx) = mpsc::channel::<Event>();
+    let sub = Submission { req: gen_req, submitted, stream, events: ev_tx };
+    match ctx.engine_tx.try_send(sub) {
+        Ok(()) => ctx.shared.note_accepted(),
+        Err(mpsc::TrySendError::Full(_)) => {
+            ctx.shared.note_rejected();
+            return respond_error(w, 429, "admission queue full, retry later", keep);
+        }
+        Err(mpsc::TrySendError::Disconnected(_)) => {
+            return respond_error(w, 503, "engine stopped", false);
+        }
+    }
+    if stream {
+        stream_response(w, &ev_rx, keep)
+    } else {
+        // Ignore Token events (none are sent for stream=false submissions)
+        // and answer with the terminal event.
+        loop {
+            match ev_rx.recv() {
+                Ok(Event::Token(_)) => continue,
+                Ok(Event::Done(res)) => {
+                    return respond_json(w, 200, &result_json(&res, false), keep)
+                }
+                Ok(Event::Rejected(e)) => return respond_submit_error(w, &e, keep),
+                Err(_) => {
+                    return respond_error(w, 503, "request dropped during shutdown", false)
+                }
+            }
+        }
+    }
+}
+
+/// Streamed generate: hold the status line until the first event so a
+/// rejection still gets its real status code, then emit one JSON line
+/// per token and a final `"done": true` line.
+fn stream_response(w: &mut TcpStream, ev_rx: &mpsc::Receiver<Event>, keep: bool) -> Result<()> {
+    let first = match ev_rx.recv() {
+        Ok(ev) => ev,
+        Err(_) => return respond_error(w, 503, "request dropped during shutdown", false),
+    };
+    match first {
+        Event::Rejected(e) => respond_submit_error(w, &e, keep),
+        ev => {
+            let mut cw = ChunkedWriter::start(w, 200, "application/json", keep)?;
+            let mut ev = ev;
+            loop {
+                match ev {
+                    Event::Token(t) => {
+                        let piece = Json::obj(vec![
+                            ("token", Json::Num(t as f64)),
+                            ("text", Json::Str(printable(t).to_string())),
+                        ]);
+                        cw.chunk(format!("{}\n", piece.to_string()).as_bytes())?;
+                    }
+                    Event::Done(res) => {
+                        let fin = result_json(&res, true);
+                        cw.chunk(format!("{}\n", fin.to_string()).as_bytes())?;
+                        cw.finish()?;
+                        return Ok(());
+                    }
+                    Event::Rejected(e) => {
+                        // Mid-stream rejection cannot happen (submit is
+                        // checked before the first token), but terminate
+                        // the stream defensively.
+                        let err = Json::obj(vec![
+                            ("error", Json::Str(e.to_string())),
+                            ("done", Json::Bool(true)),
+                        ]);
+                        cw.chunk(format!("{}\n", err.to_string()).as_bytes())?;
+                        cw.finish()?;
+                        return Ok(());
+                    }
+                }
+                ev = match ev_rx.recv() {
+                    Ok(next) => next,
+                    Err(_) => {
+                        let err = Json::obj(vec![
+                            ("error", Json::Str("request abandoned during shutdown".into())),
+                            ("done", Json::Bool(true)),
+                        ]);
+                        cw.chunk(format!("{}\n", err.to_string()).as_bytes())?;
+                        cw.finish()?;
+                        return Ok(());
+                    }
+                };
+            }
+        }
+    }
+}

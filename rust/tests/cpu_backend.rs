@@ -135,12 +135,9 @@ fn server_decodes_greedily_on_cpu() {
     let session = Session::init(&backend, "lm_tiny_efla", 11).unwrap();
     let mut server = Server::new(&session, 3).unwrap();
     for id in 0..(server.batch_size() as u64 + 1) {
-        server.submit(GenRequest {
-            id,
-            prompt: vec![10, 20, 30],
-            max_new: 4,
-            temperature: 0.0,
-        });
+        server
+            .submit(GenRequest { id, prompt: vec![10, 20, 30], max_new: 4, temperature: 0.0 })
+            .unwrap();
     }
     let results = server.run_to_completion().unwrap();
     assert_eq!(results.len(), server.batch_size() + 1);

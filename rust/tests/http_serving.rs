@@ -1,0 +1,313 @@
+//! End-to-end tests of the HTTP serving front end.
+//!
+//! The load-bearing one is determinism: greedy generations served over
+//! the network through the continuous-batching engine must be
+//! **bit-identical** to the in-process `Server::run_to_completion` path
+//! for the same session and request set — the HTTP layer and the
+//! mid-flight slot churn may never change a token. CI runs this file in
+//! all three matrix legs (default, `EFLA_NUM_THREADS=1`,
+//! `EFLA_FORCE_SCALAR=1`), so the equivalence is pinned per kernel tier
+//! and per thread count.
+//!
+//! The rest covers the service behaviors: 429 backpressure under queue
+//! overflow, graceful drain on shutdown, duplicate-id conflict, the
+//! stats/health endpoints, and request validation.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+
+use efla::coordinator::server::{GenRequest, Server, ServerConfig, ServerStats};
+use efla::coordinator::session::Session;
+use efla::runtime::CpuBackend;
+use efla::serve::{http, Frontend};
+use efla::util::json;
+
+fn tiny_session() -> Session {
+    let backend = CpuBackend::new();
+    Session::init(&backend, "lm_tiny_efla", 7).unwrap()
+}
+
+/// Run the front end on an OS port, hand the client closure the address,
+/// then drain and return (client result, final engine stats).
+fn with_server<F, T>(session: &Session, cfg: ServerConfig, f: F) -> (T, ServerStats)
+where
+    F: FnOnce(&str) -> T + Send,
+    T: Send,
+{
+    let fe = Frontend::bind("127.0.0.1:0").unwrap();
+    let addr = fe.local_addr().unwrap().to_string();
+    let stop = fe.shutdown_flag();
+    std::thread::scope(|s| {
+        let client = s.spawn(move || {
+            // Flip the flag even when a client assertion panics —
+            // otherwise the engine would serve forever and hang the test.
+            struct StopGuard(std::sync::Arc<std::sync::atomic::AtomicBool>);
+            impl Drop for StopGuard {
+                fn drop(&mut self) {
+                    self.0.store(true, Ordering::SeqCst);
+                }
+            }
+            let _guard = StopGuard(stop);
+            f(&addr)
+        });
+        let stats = fe.run(session, cfg, 42).unwrap();
+        (client.join().expect("client thread"), stats)
+    })
+}
+
+fn generate_body(id: u64, prompt: &str, max_tokens: usize, stream: bool) -> String {
+    format!("{{\"id\":{id},\"prompt\":{prompt:?},\"max_tokens\":{max_tokens},\"stream\":{stream}}}")
+}
+
+fn tokens_of(j: &json::Json) -> Vec<i32> {
+    j.get("tokens").as_arr().unwrap().iter().map(|v| v.as_i64().unwrap() as i32).collect()
+}
+
+#[test]
+fn http_path_matches_in_process_engine_bitwise() {
+    let session = tiny_session();
+    let prompts: Vec<String> =
+        (0..6).map(|i| format!("request {i} of the determinism suite")).collect();
+    let max_new = 4usize;
+
+    // HTTP path: request 0 streamed, the rest plain; all greedy.
+    let (http_tokens, stats) = with_server(&session, ServerConfig::default(), |addr| {
+        let mut out: Vec<Vec<i32>> = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let body = generate_body(i as u64 + 1, p, max_new, i == 0);
+            let resp = http::request(addr, "POST", "/v1/generate", body.as_bytes()).unwrap();
+            assert_eq!(resp.status, 200, "request {i}: {}", resp.text());
+            let text = resp.text();
+            let last = text.lines().last().expect("response body");
+            let j = json::parse(last).unwrap();
+            if i == 0 {
+                // Streamed: one JSON line per token plus the final line,
+                // whose token list must match the streamed pieces.
+                let lines: Vec<&str> = text.lines().collect();
+                assert_eq!(lines.len(), max_new + 1, "stream lines: {text}");
+                let streamed: Vec<i32> = lines[..max_new]
+                    .iter()
+                    .map(|l| json::parse(l).unwrap().get("token").as_i64().unwrap() as i32)
+                    .collect();
+                assert_eq!(streamed, tokens_of(&j), "streamed pieces vs final result");
+                assert_eq!(j.get("done").as_bool(), Some(true));
+            }
+            assert_eq!(j.get("id").as_i64(), Some(i as i64 + 1));
+            out.push(tokens_of(&j));
+        }
+        out
+    });
+    assert_eq!(stats.completed, prompts.len() as u64);
+
+    // In-process reference on the very same session (greedy decode is
+    // RNG-free, so engine seeds and scheduling order cannot matter).
+    let mut server = Server::new(&session, 99).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        let prompt: Vec<i32> = p.bytes().map(|b| b as i32).collect();
+        server
+            .submit(GenRequest { id: i as u64, prompt, max_new, temperature: 0.0 })
+            .unwrap();
+    }
+    let reference = server.run_to_completion().unwrap();
+    assert_eq!(reference.len(), prompts.len());
+    for (i, r) in reference.iter().enumerate() {
+        assert_eq!(
+            http_tokens[i], r.tokens,
+            "request {i}: HTTP + continuous batching must be bit-identical to in-process"
+        );
+    }
+}
+
+#[test]
+fn queue_overflow_returns_429_and_service_recovers() {
+    let session = tiny_session();
+    let cfg = ServerConfig { queue_depth: 1, ..ServerConfig::default() };
+    let (statuses, stats) = with_server(&session, cfg, |addr| {
+        // 16 concurrent long generations against 4 slots + 1 queue slot:
+        // the excess must bounce with 429 instead of stalling.
+        let mut statuses: Vec<u16> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..16u64)
+                .map(|i| {
+                    s.spawn(move || {
+                        let body = generate_body(i + 1, "overflow probe", 96, false);
+                        http::request(addr, "POST", "/v1/generate", body.as_bytes())
+                            .unwrap()
+                            .status
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("client")).collect()
+        });
+        // The service must keep serving once the burst drains.
+        let mut recovered = 0u16;
+        for _ in 0..100 {
+            let body = generate_body(999, "recovery probe", 2, false);
+            let resp = http::request(addr, "POST", "/v1/generate", body.as_bytes()).unwrap();
+            recovered = resp.status;
+            if recovered == 200 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        assert_eq!(recovered, 200, "service must recover after the overflow burst");
+        statuses.push(recovered);
+        statuses
+    });
+    let ok = statuses.iter().filter(|&&s| s == 200).count();
+    let busy = statuses.iter().filter(|&&s| s == 429).count();
+    assert!(ok >= 1, "some requests must be served: {statuses:?}");
+    assert!(busy >= 1, "queue_depth=1 under a 16-burst must bounce some: {statuses:?}");
+    assert_eq!(ok + busy, statuses.len(), "only 200/429 expected: {statuses:?}");
+    assert_eq!(stats.completed, ok as u64, "every accepted request completes");
+}
+
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let session = tiny_session();
+    let cfg = ServerConfig { drain_timeout_secs: 60.0, ..ServerConfig::default() };
+    let fe = Frontend::bind("127.0.0.1:0").unwrap();
+    let addr = fe.local_addr().unwrap().to_string();
+    let stop = fe.shutdown_flag();
+    let max_new = 32usize;
+    let (results, stats) = std::thread::scope(|s| {
+        let client = s.spawn(move || {
+            let results: Vec<(u16, usize)> = std::thread::scope(|inner| {
+                let handles: Vec<_> = (0..4u64)
+                    .map(|i| {
+                        let addr = addr.as_str();
+                        inner.spawn(move || {
+                            let body = generate_body(i + 1, "drain probe", max_new, false);
+                            let resp = http::request(addr, "POST", "/v1/generate", body.as_bytes())
+                                .unwrap();
+                            let ntok = match json::parse(&resp.text()) {
+                                Ok(j) => tokens_of(&j).len(),
+                                Err(_) => 0,
+                            };
+                            (resp.status, ntok)
+                        })
+                    })
+                    .collect();
+                // Flip the flag once the requests are surely submitted (and
+                // likely still in flight): accepted work must finish, not
+                // be cut off.
+                std::thread::sleep(std::time::Duration::from_millis(150));
+                stop.store(true, Ordering::SeqCst);
+                handles.into_iter().map(|h| h.join().expect("client")).collect()
+            });
+            results
+        });
+        let stats = fe.run(&session, cfg, 42).unwrap();
+        (client.join().expect("client thread"), stats)
+    });
+    for (i, (status, ntok)) in results.iter().enumerate() {
+        assert_eq!(*status, 200, "request {i} must drain to completion");
+        assert_eq!(*ntok, max_new, "request {i} must keep its full token budget");
+    }
+    assert_eq!(stats.completed, 4);
+}
+
+#[test]
+fn duplicate_live_id_gets_409_over_http() {
+    let session = tiny_session();
+    // The held generation uses the server's full max_tokens budget so it
+    // cannot finish (and free its id) before the duplicate arrives; the
+    // short drain timeout keeps the end-of-test shutdown from replaying
+    // the whole 4096-token budget.
+    let cfg = ServerConfig { drain_timeout_secs: 0.5, ..ServerConfig::default() };
+    let ((), _stats) = with_server(&session, cfg, |addr| {
+        // Open a long streamed generation and read its first token chunk —
+        // proof the id is seated and still generating.
+        let body = generate_body(5, "hold this slot for a while", 4096, true);
+        let mut a = TcpStream::connect(addr).unwrap();
+        write!(
+            a,
+            "POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\
+             connection: close\r\n\r\n",
+            body.len()
+        )
+        .unwrap();
+        a.write_all(body.as_bytes()).unwrap();
+        a.flush().unwrap();
+        let mut ar = BufReader::new(a);
+        let mut line = String::new();
+        ar.read_line(&mut line).unwrap();
+        assert!(line.contains("200"), "stream head: {line:?}");
+        loop {
+            line.clear();
+            ar.read_line(&mut line).unwrap();
+            if line == "\r\n" || line == "\n" {
+                break; // end of headers
+            }
+        }
+        line.clear();
+        ar.read_line(&mut line).unwrap(); // first chunk size
+        assert!(!line.trim().is_empty(), "expected a first token chunk");
+
+        // Same id while live: the typed DuplicateId maps to 409.
+        let dup = generate_body(5, "duplicate", 2, false);
+        let resp = http::request(addr, "POST", "/v1/generate", dup.as_bytes()).unwrap();
+        assert_eq!(resp.status, 409, "{}", resp.text());
+        assert!(resp.text().contains("already queued or in flight"), "{}", resp.text());
+        // Dropping the streamed connection; the engine finishes the slot
+        // on its own and the drain picks it up.
+    });
+}
+
+#[test]
+fn healthz_stats_and_routing() {
+    let session = tiny_session();
+    let ((), _stats) = with_server(&session, ServerConfig::default(), |addr| {
+        let h = http::request(addr, "GET", "/healthz", b"").unwrap();
+        assert_eq!(h.status, 200);
+        let hj = json::parse(&h.text()).unwrap();
+        assert_eq!(hj.get("ok").as_bool(), Some(true));
+        assert!(hj.get("slots").as_usize().unwrap() >= 1);
+
+        let body = generate_body(1, "stats probe", 3, false);
+        let resp = http::request(addr, "POST", "/v1/generate", body.as_bytes()).unwrap();
+        assert_eq!(resp.status, 200);
+
+        let st = http::request(addr, "GET", "/stats", b"").unwrap();
+        assert_eq!(st.status, 200);
+        let sj = json::parse(&st.text()).unwrap();
+        assert!(sj.get("accepted").as_f64().unwrap() >= 1.0);
+        assert!(sj.get("slots").as_usize().unwrap() >= 1);
+        for field in [
+            "rejected",
+            "queue_depth",
+            "tokens_processed",
+            "p95_e2e_ms",
+            "p95_queue_wait_ms",
+            "mean_ttft_ms",
+            "utilization",
+        ] {
+            assert!(sj.get(field).as_f64().is_some(), "stats field {field}: {}", st.text());
+        }
+
+        let missing = http::request(addr, "GET", "/nope", b"").unwrap();
+        assert_eq!(missing.status, 404);
+        let wrong_method = http::request(addr, "GET", "/v1/generate", b"").unwrap();
+        assert_eq!(wrong_method.status, 405);
+    });
+}
+
+#[test]
+fn generate_request_validation() {
+    let session = tiny_session();
+    let ((), _stats) = with_server(&session, ServerConfig::default(), |addr| {
+        let cases: &[(&str, &str)] = &[
+            ("not json at all", "invalid JSON"),
+            ("{}", "'prompt'"),
+            ("{\"prompt\":\"\"}", "empty prompt"),
+            ("{\"prompt\":\"x\",\"max_tokens\":0}", "at least 1"),
+            ("{\"tokens\":[1,\"two\"]}", "array of integers"),
+            ("{\"prompt\":\"x\",\"id\":-3}", "non-negative"),
+        ];
+        for (body, needle) in cases {
+            let resp = http::request(addr, "POST", "/v1/generate", body.as_bytes()).unwrap();
+            assert_eq!(resp.status, 400, "{body}: {}", resp.text());
+            assert!(resp.text().contains(needle), "{body}: {}", resp.text());
+        }
+    });
+}

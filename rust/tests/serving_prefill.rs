@@ -127,12 +127,14 @@ fn serve_greedy(session: &Session, cfg: ServerConfig) -> Vec<Vec<i32>> {
     let n_req = server.batch_size() as u64 + 3;
     for id in 0..n_req {
         let len = rng.range(3, 80);
-        server.submit(GenRequest {
-            id,
-            prompt: prompt(&mut rng, len, vocab),
-            max_new: 4,
-            temperature: 0.0,
-        });
+        server
+            .submit(GenRequest {
+                id,
+                prompt: prompt(&mut rng, len, vocab),
+                max_new: 4,
+                temperature: 0.0,
+            })
+            .unwrap();
     }
     let results = server.run_to_completion().unwrap();
     assert_eq!(results.len(), n_req as usize);
@@ -150,13 +152,17 @@ fn server_chunked_prefill_matches_token_at_a_time() {
     let session = Session::init(&backend, "lm_tiny_efla", 11).unwrap();
     let legacy = serve_greedy(
         &session,
-        ServerConfig { prefill_chunk: 0, prefill_token_budget: 0 },
+        ServerConfig { prefill_chunk: 0, prefill_token_budget: 0, ..ServerConfig::default() },
     );
     for chunk in [1usize, 5, 64] {
         for budget in [0usize, 32] {
             let chunked = serve_greedy(
                 &session,
-                ServerConfig { prefill_chunk: chunk, prefill_token_budget: budget },
+                ServerConfig {
+                    prefill_chunk: chunk,
+                    prefill_token_budget: budget,
+                    ..ServerConfig::default()
+                },
             );
             assert_eq!(
                 chunked, legacy,
@@ -174,12 +180,14 @@ fn server_reports_prefill_decode_split_and_ttft() {
     let mut server = Server::new(&session, 1).unwrap();
     let mut rng = Rng::new(2);
     for id in 0..3u64 {
-        server.submit(GenRequest {
-            id,
-            prompt: prompt(&mut rng, 30, vocab),
-            max_new: 5,
-            temperature: 0.0,
-        });
+        server
+            .submit(GenRequest {
+                id,
+                prompt: prompt(&mut rng, 30, vocab),
+                max_new: 5,
+                temperature: 0.0,
+            })
+            .unwrap();
     }
     let results = server.run_to_completion().unwrap();
     assert_eq!(results.len(), 3);

@@ -13,6 +13,10 @@ performance invariant regresses:
 * ``serving_prefill``  — chunked parallel prefill must ingest prompts
   strictly faster than token-at-a-time decoding for every benched
   prompt length >= 64 (the serving acceptance bar).
+* ``serving_cb``       — continuous batching over staggered arrivals
+  must beat sequential one-request-at-a-time serving on aggregate
+  tokens/s (the decode graph computes every slot row regardless, so
+  a solo request wastes (batch-1)/batch of every step).
 
 Exit code 0 = all gates pass, 1 = regression, 2 = malformed input.
 """
@@ -65,6 +69,17 @@ def gate_serving(obj: dict) -> None:
         print(f"gate ok: {line}")
 
 
+def gate_serving_cb(obj: dict) -> None:
+    cb = obj.get("cb_tokens_per_sec", 0.0)
+    seq = obj.get("sequential_tokens_per_sec", 0.0)
+    if cb <= 0.0 or seq <= 0.0:
+        fail(f"serving_cb: missing throughput measurements (cb={cb}, seq={seq})")
+    line = f"serving_cb: continuous {cb:.0f} tok/s vs sequential {seq:.0f} tok/s"
+    if cb <= seq:
+        fail(f"{line} — continuous batching must beat one-request-at-a-time")
+    print(f"gate ok: {line} ({cb / seq:.2f}x)")
+
+
 def main() -> None:
     src = open(sys.argv[1]) if len(sys.argv) > 1 else sys.stdin
     seen = set()
@@ -85,7 +100,9 @@ def main() -> None:
             gate_gemm(obj)
         elif name == "serving_prefill":
             gate_serving(obj)
-    for required in ("gemm_gflops", "serving_prefill"):
+        elif name == "serving_cb":
+            gate_serving_cb(obj)
+    for required in ("gemm_gflops", "serving_prefill", "serving_cb"):
         if required not in seen:
             fail(f"required bench section {required!r} missing from BENCH output")
     print("all bench gates passed")
