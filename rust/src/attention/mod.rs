@@ -12,6 +12,8 @@
 //!     (`runtime::cpu`) trains and serves through [`chunkwise_delta_alpha`],
 //!     [`sequential::DeltaState`] and the BPTT adjoint in [`backward`].
 
+#![forbid(unsafe_code)]
+
 pub mod backward;
 pub mod chunkwise;
 pub mod gates;

@@ -1,0 +1,42 @@
+//! `efla-lint` CLI: run the repo-native static analysis over the tree.
+//!
+//! Usage: `cargo run --bin efla-lint [-- --root <repo-root>]`. Walks
+//! `rust/src` and `rust/tests`, prints one line per violation, and exits
+//! 0 when clean, 1 on violations, 2 on usage or IO errors.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use efla::lint;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let root = match args.as_slice() {
+        [] => lint::repo_root(),
+        [flag, path] if flag == "--root" => PathBuf::from(path),
+        _ => {
+            eprintln!("usage: efla-lint [--root <repo-root>]");
+            return ExitCode::from(2);
+        }
+    };
+    let files = match lint::collect_tree(&root) {
+        Ok(files) => files,
+        Err(e) => {
+            eprintln!("efla-lint: failed to read tree under {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let violations = lint::lint_sources(&files);
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!("efla-lint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("efla-lint: {} violation(s) in {} files", violations.len(), files.len());
+        ExitCode::FAILURE
+    }
+}

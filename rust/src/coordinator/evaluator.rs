@@ -114,16 +114,26 @@ pub fn multichoice_accuracy(session: &Session, items: &[ProbeItem]) -> Result<f6
         if members.len() < 2 {
             continue;
         }
+        let Some(best) = best_member(&members) else {
+            continue;
+        };
         total += 1;
-        let best = members
-            .iter()
-            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
-            .unwrap();
         if best.1 {
             wins += 1;
         }
     }
     Ok(wins as f64 / total.max(1) as f64)
+}
+
+/// Lowest-loss member of a multi-choice group. A NaN loss (an item whose
+/// eval scored zero tokens) is dropped up front so it can neither win nor
+/// poison the comparison; the survivors are ordered with `total_cmp`.
+fn best_member<'a>(members: &[&'a (usize, bool, f64)]) -> Option<&'a (usize, bool, f64)> {
+    members
+        .iter()
+        .filter(|m| !m.2.is_nan())
+        .min_by(|a, b| a.2.total_cmp(&b.2))
+        .copied()
 }
 
 /// Run the full downstream probe suite (Table 1 accuracy stand-ins).
@@ -159,6 +169,22 @@ mod tests {
         assert!((s.mean_loss() - 1.5).abs() < 1e-9);
         assert!((s.ppl() - 1.5f64.exp()).abs() < 1e-9);
         assert!((s.accuracy() - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_member_ignores_nan_losses() {
+        let a = (0usize, true, f64::NAN);
+        let b = (0usize, false, 0.7);
+        let c = (0usize, true, 0.3);
+        let members = vec![&a, &b, &c];
+        let best = best_member(&members).expect("finite members present");
+        assert!(best.1);
+        assert!((best.2 - 0.3).abs() < 1e-12);
+
+        let x = (0usize, true, f64::NAN);
+        let y = (0usize, false, f64::NAN);
+        let all_nan = vec![&x, &y];
+        assert!(best_member(&all_nan).is_none());
     }
 
     #[test]

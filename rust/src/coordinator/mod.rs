@@ -12,6 +12,8 @@
 //! * [`checkpoint`]  — binary param/opt-state snapshots.
 //! * [`experiments`] — the registry mapping paper tables/figures to runs.
 
+#![forbid(unsafe_code)]
+
 pub mod checkpoint;
 pub mod config;
 pub mod evaluator;

@@ -10,6 +10,8 @@
 //!   LAMBADA/BoolQ/... (Table 1 accuracy columns).
 //! * [`loader`]    — background-threaded batch prefetcher.
 
+#![forbid(unsafe_code)]
+
 pub mod corpus;
 pub mod loader;
 pub mod mad;

@@ -19,7 +19,8 @@
 //!
 //! The Cargo workspace lives at the repository root; this package is
 //! `rust/` with the library (`efla`), the `efla` launcher binary
-//! (`rust/src/main.rs`), the examples under `../examples/`, and the
+//! (`rust/src/main.rs`), the `efla-lint` static-analysis binary
+//! (`rust/src/bin/efla-lint.rs`), the examples under `../examples/`, and the
 //! per-table/figure benches under `../benches/` (all wired as explicit
 //! `[[example]]`/`[[bench]]` targets in `rust/Cargo.toml`).
 //!
@@ -69,10 +70,16 @@
 // iterator chains).
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
+// Unsafe hygiene: inside the few `unsafe fn`s (SIMD kernels in
+// `tensor::gemm`) every unsafe operation must sit in its own scoped
+// `unsafe {}` block with a SAFETY note; `efla-lint` (see [`lint`]) checks
+// the comments and confines `unsafe` to the allowlisted modules.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod attention;
 pub mod coordinator;
 pub mod data;
+pub mod lint;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

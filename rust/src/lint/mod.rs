@@ -1,0 +1,749 @@
+//! `efla-lint`: repo-native static analysis for the EFLA invariants.
+//!
+//! The serving stack's correctness story rests on conventions that `cargo
+//! check` cannot see: every `unsafe` site carries a `SAFETY:` contract,
+//! unsafe stays confined to three audited modules, float orderings are
+//! NaN-total, the decode hot path never touches the allocator, and the
+//! serving path only calls row-class-pinned matmul wrappers. This module
+//! turns those conventions into machine-checked rules over the source tree
+//! (`rust/src` + `rust/tests`), shipped as the `efla-lint` bin target and
+//! exercised by `tests/lint_tool.rs` in the normal test suite.
+//!
+//! Rules:
+//!
+//! * `EFL001 safety-comment` — each line containing the `unsafe` keyword
+//!   must carry or be immediately preceded by a `SAFETY:` comment (the
+//!   `# Safety` doc-section convention on unsafe fns also counts).
+//! * `EFL002 unsafe-allowlist` — `unsafe` may appear only in the
+//!   [`UNSAFE_ALLOWLIST`] modules. No escape hatch.
+//! * `EFL003 forbid-header` — every other module must be covered by a
+//!   `#![forbid(unsafe_code)]` header, its own or an ancestor `mod.rs`'s.
+//!   (A `mod.rs` that declares an allowlisted child is exempt: forbid
+//!   propagates down and can never be re-allowed. EFL002 still covers it.)
+//! * `EFL004 float-ord` — `partial_cmp` is banned: NaN turns it into a
+//!   panic or a logic bug. Use `total_cmp`.
+//! * `EFL005 no-alloc` — functions tagged as allocation-free must not
+//!   contain `Vec::new`, `vec!`, `.to_vec()`, `.clone()` or `Box::new`.
+//! * `EFL006 serving-pin` — `serve/` and `coordinator/server.rs` must not
+//!   call unpinned matmul entry points; only the `*_acc_serving` wrappers
+//!   keep row results bit-identical across batch shapes.
+//!
+//! Directive comments (parsed from comment text only, so rule tokens in
+//! prose or string literals never collide with code):
+//!
+//! * a comment whose text starts with `lint: no-alloc` tags the next `fn`
+//!   item — its whole body becomes an EFL005 region;
+//! * a comment whose text starts with `lint: allow(rule-name)` waives
+//!   `float-ord`, `no-alloc` or `serving-pin` for its own line (trailing
+//!   comment) or for the next code line (standalone comment line).
+//!
+//! The scanner strips comments and string/char literals first (tracking
+//! raw strings, nested block comments, and lifetimes vs char literals), so
+//! fixtures embedded as string literals and rule names in docs are inert.
+
+#![forbid(unsafe_code)]
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Modules permitted to contain `unsafe` (each audited and SAFETY-noted).
+pub const UNSAFE_ALLOWLIST: &[&str] = &[
+    "rust/src/tensor/gemm.rs",
+    "rust/src/serve/mod.rs",
+    "rust/src/runtime/pjrt.rs",
+];
+
+/// Directories under the repo root that the linter walks.
+pub const LINT_ROOTS: &[&str] = &["rust/src", "rust/tests"];
+
+/// Subdirectory holding deliberately-violating fixtures (skipped by walks).
+pub const FIXTURE_DIR: &str = "lint_fixtures";
+
+/// Allocation tokens banned inside no-alloc regions.
+const NO_ALLOC_TOKENS: &[&str] = &["Vec::new", "vec!", ".to_vec(", ".clone(", "Box::new"];
+
+/// Unpinned matmul entry points banned on the serving path.
+const UNPINNED_MATMULS: &[&str] = &[
+    "matmul",
+    "matmul_nt",
+    "matmul_tn",
+    "matmul_into",
+    "matmul_nt_into",
+    "matmul_tn_into",
+    "matmul_acc",
+    "matmul_nt_acc",
+];
+
+/// How far below its tag comment a `fn` item may start.
+const TAG_SCAN_LINES: usize = 32;
+
+/// How far above an `unsafe` line a SAFETY comment may sit, across blank,
+/// attribute, and comment-only lines.
+const SAFETY_SCAN_LINES: usize = 40;
+
+/// The enforced rule set. Ids are stable and used by fixtures and CI logs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    SafetyComment,
+    UnsafeAllowlist,
+    ForbidHeader,
+    FloatOrd,
+    NoAlloc,
+    ServingPin,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::SafetyComment => "EFL001",
+            Rule::UnsafeAllowlist => "EFL002",
+            Rule::ForbidHeader => "EFL003",
+            Rule::FloatOrd => "EFL004",
+            Rule::NoAlloc => "EFL005",
+            Rule::ServingPin => "EFL006",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::SafetyComment => "safety-comment",
+            Rule::UnsafeAllowlist => "unsafe-allowlist",
+            Rule::ForbidHeader => "forbid-header",
+            Rule::FloatOrd => "float-ord",
+            Rule::NoAlloc => "no-alloc",
+            Rule::ServingPin => "serving-pin",
+        }
+    }
+
+    /// Rules that accept an `allow(...)` escape hatch. The unsafe-hygiene
+    /// rules are deliberately absent: they cannot be waived.
+    fn from_name(name: &str) -> Option<Rule> {
+        match name {
+            "float-ord" => Some(Rule::FloatOrd),
+            "no-alloc" => Some(Rule::NoAlloc),
+            "serving-pin" => Some(Rule::ServingPin),
+            _ => None,
+        }
+    }
+}
+
+/// One finding: repo-relative path, 1-based line, rule, human message.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub path: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{} {}] {}",
+            self.path,
+            self.line,
+            self.rule.id(),
+            self.rule.name(),
+            self.msg
+        )
+    }
+}
+
+/// One source line split into executable code and comment text. String and
+/// char literal contents are blanked out of `code`.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+}
+
+#[derive(Clone, Copy)]
+enum Ctx {
+    Code,
+    Block(u32),
+    Str,
+    RawStr(u32),
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn ends_with_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(is_ident_char)
+}
+
+/// Split `src` into per-line code/comment channels.
+pub fn strip_source(src: &str) -> Vec<Line> {
+    let cs: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut ctx = Ctx::Code;
+    let mut line_comment = false;
+    let mut i = 0usize;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            line_comment = false;
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        if line_comment {
+            cur.comment.push(c);
+            i += 1;
+            continue;
+        }
+        match ctx {
+            Ctx::Code => {
+                if c == '/' && cs.get(i + 1) == Some(&'/') {
+                    line_comment = true;
+                    i += 2;
+                    // Fold the doc markers of `///` and `//!` into the opener.
+                    if matches!(cs.get(i), Some(&'/') | Some(&'!')) {
+                        i += 1;
+                    }
+                } else if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    ctx = Ctx::Block(1);
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    ctx = Ctx::Str;
+                    cur.code.push('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !ends_with_ident(&cur.code) {
+                    // Possible raw / byte string literal prefix.
+                    let mut j = i + 1;
+                    let mut raw = c == 'r';
+                    if c == 'b' && cs.get(j) == Some(&'r') {
+                        raw = true;
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    if raw {
+                        while cs.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                    }
+                    if cs.get(j) == Some(&'"') {
+                        ctx = if raw { Ctx::RawStr(hashes) } else { Ctx::Str };
+                        cur.code.push('"');
+                        i = j + 1;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime.
+                    if cs.get(i + 1) == Some(&'\\') {
+                        cur.code.push(' ');
+                        i += 2;
+                        while i < cs.len() && cs[i] != '\'' && cs[i] != '\n' {
+                            i += 1;
+                        }
+                        if cs.get(i) == Some(&'\'') {
+                            i += 1;
+                        }
+                    } else if cs.get(i + 2) == Some(&'\'') && cs.get(i + 1) != Some(&'\'') {
+                        cur.code.push(' ');
+                        i += 3;
+                    } else {
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            Ctx::Block(depth) => {
+                if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    ctx = Ctx::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && cs.get(i + 1) == Some(&'/') {
+                    ctx = if depth == 1 { Ctx::Code } else { Ctx::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            Ctx::Str => {
+                if c == '\\' {
+                    if cs.get(i + 1) == Some(&'\n') {
+                        lines.push(std::mem::take(&mut cur));
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    ctx = Ctx::Code;
+                    cur.code.push('"');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Ctx::RawStr(hashes) => {
+                if c == '"' && (0..hashes as usize).all(|h| cs.get(i + 1 + h) == Some(&'#')) {
+                    ctx = Ctx::Code;
+                    cur.code.push('"');
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Find `needle` in `code` at identifier boundaries: wherever the needle's
+/// own edge is an identifier character, the adjacent source character must
+/// not be one. Returns the byte offset of the first hit.
+pub fn find_token(code: &str, needle: &str) -> Option<usize> {
+    let head_ident = needle.chars().next().is_some_and(is_ident_char);
+    let tail_ident = needle.chars().next_back().is_some_and(is_ident_char);
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(needle) {
+        let at = start + pos;
+        let ok_before = !head_ident
+            || code[..at].chars().next_back().is_none_or(|c| !is_ident_char(c));
+        let ok_after = !tail_ident
+            || code[at + needle.len()..].chars().next().is_none_or(|c| !is_ident_char(c));
+        if ok_before && ok_after {
+            return Some(at);
+        }
+        start = at + needle.len();
+    }
+    None
+}
+
+#[derive(Clone, Debug, Default)]
+struct Marks {
+    safety: bool,
+    tag_no_alloc: bool,
+    allows: Vec<Rule>,
+}
+
+fn parse_marks(comment: &str) -> Marks {
+    let mut m = Marks::default();
+    let text = comment.trim();
+    if text.contains("SAFETY:") || text.contains("# Safety") {
+        m.safety = true;
+    }
+    if let Some(rest) = text.strip_prefix("lint:") {
+        let rest = rest.trim_start();
+        if let Some(args) = rest.strip_prefix("allow(") {
+            if let Some(end) = args.find(')') {
+                for name in args[..end].split(',') {
+                    if let Some(rule) = Rule::from_name(name.trim()) {
+                        m.allows.push(rule);
+                    }
+                }
+            }
+        } else if rest.starts_with("no-alloc") {
+            m.tag_no_alloc = true;
+        }
+    }
+    m
+}
+
+/// Resolve every `lint: no-alloc` tag to the (start, end) line span of the
+/// next `fn` item's body, found by brace tracking over stripped code.
+fn no_alloc_regions(lines: &[Line], marks: &[Marks]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let tags = marks.iter().enumerate().filter(|(_, m)| m.tag_no_alloc).map(|(i, _)| i);
+    for tag in tags {
+        let horizon = lines.len().min(tag + TAG_SCAN_LINES);
+        let Some(f0) = (tag..horizon).find(|&j| find_token(&lines[j].code, "fn").is_some())
+        else {
+            continue;
+        };
+        let mut depth = 0i32;
+        let mut opened = false;
+        let mut end = f0;
+        'body: for (j, line) in lines.iter().enumerate().skip(f0) {
+            for c in line.code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            end = j;
+                            break 'body;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            end = j;
+        }
+        regions.push((f0, end));
+    }
+    regions
+}
+
+/// True when line `i` (containing `unsafe`) has a SAFETY comment on the
+/// line itself or above it, across blank / attribute / comment-only lines.
+fn has_safety_comment(lines: &[Line], marks: &[Marks], i: usize) -> bool {
+    if marks[i].safety {
+        return true;
+    }
+    for j in (i.saturating_sub(SAFETY_SCAN_LINES)..i).rev() {
+        let code = lines[j].code.trim();
+        if !(code.is_empty() || code.starts_with('#')) {
+            return false;
+        }
+        if marks[j].safety {
+            return true;
+        }
+    }
+    false
+}
+
+fn scan_lines(path: &str, lines: &[Line]) -> Vec<Violation> {
+    let marks: Vec<Marks> = lines.iter().map(|l| parse_marks(&l.comment)).collect();
+
+    // Standalone allow-comments apply to the next code line; trailing
+    // allow-comments to their own line.
+    let mut allowed: Vec<Vec<Rule>> = vec![Vec::new(); lines.len()];
+    let mut pending: Vec<Rule> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.code.trim().is_empty() {
+            pending.extend(marks[i].allows.iter().copied());
+        } else {
+            allowed[i] = std::mem::take(&mut pending);
+            allowed[i].extend(marks[i].allows.iter().copied());
+        }
+    }
+
+    let allowlisted = UNSAFE_ALLOWLIST.contains(&path);
+    let serving = path.starts_with("rust/src/serve/") || path == "rust/src/coordinator/server.rs";
+    let regions = no_alloc_regions(lines, &marks);
+
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        let allow = |rule: Rule| allowed[i].contains(&rule);
+        let mut push = |rule: Rule, msg: String| {
+            out.push(Violation { path: path.to_string(), line: i + 1, rule, msg });
+        };
+        if find_token(code, "unsafe").is_some() {
+            if !allowlisted {
+                push(Rule::UnsafeAllowlist, unsafe_allowlist_msg());
+            }
+            if !has_safety_comment(lines, &marks, i) {
+                let msg = "`unsafe` without an immediately preceding SAFETY comment";
+                push(Rule::SafetyComment, msg.to_string());
+            }
+        }
+        if find_token(code, "partial_cmp").is_some() && !allow(Rule::FloatOrd) {
+            let msg = "NaN-unsafe float ordering: use `total_cmp`";
+            push(Rule::FloatOrd, msg.to_string());
+        }
+        if regions.iter().any(|&(a, b)| (a..=b).contains(&i)) && !allow(Rule::NoAlloc) {
+            for tok in NO_ALLOC_TOKENS {
+                if find_token(code, tok).is_some() {
+                    push(Rule::NoAlloc, format!("allocation `{tok}` inside a no-alloc region"));
+                }
+            }
+        }
+        if serving && !allow(Rule::ServingPin) {
+            for tok in UNPINNED_MATMULS {
+                if find_token(code, tok).is_some() {
+                    push(Rule::ServingPin, serving_pin_msg(tok));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn unsafe_allowlist_msg() -> String {
+    format!("`unsafe` outside the allowlisted modules [{}]", UNSAFE_ALLOWLIST.join(", "))
+}
+
+fn serving_pin_msg(tok: &str) -> String {
+    format!("unpinned `{tok}` on the serving path: use the `*_acc_serving` wrappers")
+}
+
+/// Scan a single file for the per-file rules (all but `forbid-header`).
+/// `path` must be repo-relative with `/` separators — it selects the
+/// unsafe-allowlist and serving-path behavior.
+pub fn scan_source(path: &str, src: &str) -> Vec<Violation> {
+    scan_lines(path, &strip_source(src))
+}
+
+fn has_forbid(lines: &[Line]) -> bool {
+    lines.iter().any(|l| l.code.contains("forbid(unsafe_code)"))
+}
+
+fn needs_forbid_header(path: &str) -> bool {
+    if !path.ends_with(".rs") || path == "rust/src/lib.rs" || UNSAFE_ALLOWLIST.contains(&path) {
+        return false;
+    }
+    // A mod.rs that declares an allowlisted child cannot carry the header
+    // itself: forbid propagates down the module tree and, unlike deny, can
+    // never be re-allowed. Those parents stay guarded by EFL002 instead.
+    !UNSAFE_ALLOWLIST.iter().any(|u| match u.rsplit_once('/') {
+        Some((dir, _)) => path == format!("{dir}/mod.rs"),
+        None => false,
+    })
+}
+
+/// Ancestor `mod.rs` files whose `#![forbid(unsafe_code)]` covers `path`
+/// (lint attributes propagate down the module tree).
+fn covering_mods(path: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    if let Some(rest) = path.strip_prefix("rust/src/") {
+        let mut parts: Vec<&str> = rest.split('/').collect();
+        parts.pop();
+        while !parts.is_empty() {
+            out.push(format!("rust/src/{}/mod.rs", parts.join("/")));
+            parts.pop();
+        }
+    }
+    out
+}
+
+/// Lint a whole tree of `(path, source)` pairs, adding the tree-level
+/// `forbid-header` rule on top of the per-file scan.
+pub fn lint_sources(files: &[(String, String)]) -> Vec<Violation> {
+    let stripped: Vec<(&str, Vec<Line>)> =
+        files.iter().map(|(p, s)| (p.as_str(), strip_source(s))).collect();
+    let forbid: BTreeSet<&str> =
+        stripped.iter().filter(|(_, l)| has_forbid(l)).map(|(p, _)| *p).collect();
+    let mut out = Vec::new();
+    for (path, lines) in &stripped {
+        out.extend(scan_lines(path, lines));
+        if needs_forbid_header(path)
+            && !forbid.contains(path)
+            && !covering_mods(path).iter().any(|m| forbid.contains(m.as_str()))
+        {
+            let msg = "module not covered by `#![forbid(unsafe_code)]` (own header or an \
+                       ancestor `mod.rs`)";
+            out.push(Violation {
+                path: (*path).to_string(),
+                line: 1,
+                rule: Rule::ForbidHeader,
+                msg: msg.to_string(),
+            });
+        }
+    }
+    out.sort_by(|a, b| (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule)));
+    out
+}
+
+/// Repository root, resolved from the crate manifest dir at compile time.
+pub fn repo_root() -> PathBuf {
+    match Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+        Some(p) => p.to_path_buf(),
+        None => PathBuf::from("."),
+    }
+}
+
+/// Collect `(repo-relative path, source)` for every `.rs` file under the
+/// lint roots, sorted by path. Fixture directories are skipped.
+pub fn collect_tree(root: &Path) -> io::Result<Vec<(String, String)>> {
+    let mut paths = Vec::new();
+    for sub in LINT_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk(&dir, &mut paths)?;
+        }
+    }
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let rel = p.strip_prefix(root).unwrap_or(&p).to_string_lossy().replace('\\', "/");
+        files.push((rel, fs::read_to_string(&p)?));
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(files)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == FIXTURE_DIR) {
+                continue;
+            }
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        strip_source(src).into_iter().map(|l| l.code).collect()
+    }
+
+    fn rules_of(vs: &[Violation]) -> Vec<Rule> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    const GEMM: &str = "rust/src/tensor/gemm.rs";
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let lines = strip_source("let a = 1; // trailing\n/* one\n two */ let b = 2;\n");
+        assert_eq!(lines[0].code, "let a = 1; ");
+        assert_eq!(lines[0].comment, " trailing");
+        assert_eq!(lines[1].comment, " one");
+        assert_eq!(lines[2].comment, " two ");
+        assert!(lines[2].code.contains("let b = 2;"));
+        assert!(!lines[1].code.contains("one"));
+    }
+
+    #[test]
+    fn strips_nested_block_comments() {
+        let lines = strip_source("/* a /* b */ still comment */ code();\n");
+        assert!(lines[0].code.contains("code();"));
+        assert!(!lines[0].code.contains("still"));
+    }
+
+    #[test]
+    fn strips_strings_and_raw_strings() {
+        let plain = codes("let s = \"contains partial_cmp and more\"; f();\n");
+        assert!(!plain[0].contains("partial_cmp"));
+        assert!(plain[0].contains("f();"));
+        let raw = codes("let s = r#\"quoted \"inner\" text\"#; g();\n");
+        assert!(!raw[0].contains("inner"));
+        assert!(raw[0].contains("g();"));
+        let multi = codes("let s = \"line one\nline two\"; h();\n");
+        assert!(multi[1].contains("h();"));
+        assert!(!multi[0].contains("one"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let lt = codes("fn f<'a>(x: &'a str) {}\n");
+        assert!(lt[0].contains("<'a>"));
+        let quote_char = codes("let c = '\"'; i();\n");
+        assert!(!quote_char[0].contains('"'));
+        assert!(quote_char[0].contains("i();"));
+        let escaped = codes("let c = '\\''; j();\n");
+        assert!(escaped[0].contains("j();"));
+    }
+
+    #[test]
+    fn find_token_respects_boundaries() {
+        assert!(find_token("matmul_acc_serving(x)", "matmul_acc").is_none());
+        assert!(find_token("ops::matmul_acc(x)", "matmul_acc").is_some());
+        assert!(find_token("forbid(unsafe_code)", "unsafe").is_none());
+        assert!(find_token("deny(unsafe_op_in_unsafe_fn)", "unsafe").is_none());
+        assert!(find_token("x.to_vec()", ".to_vec(").is_some());
+        assert!(find_token("my_vec!(1)", "vec!").is_none());
+        assert!(find_token("let v = vec![0; 4];", "vec!").is_some());
+    }
+
+    #[test]
+    fn safety_rule_fires_without_comment_and_clears_with_one() {
+        let ident = "fn f(p: *const f32) -> f32 {\n    unsafe_block_here(p)\n}\n";
+        assert!(scan_source(GEMM, ident).is_empty());
+        let bad = "fn f(p: *const f32) -> f32 {\n    unsafe { *p }\n}\n";
+        assert_eq!(rules_of(&scan_source(GEMM, bad)), vec![Rule::SafetyComment]);
+        let good =
+            "fn f(p: *const f32) -> f32 {\n    // SAFETY: p is valid\n    unsafe { *p }\n}\n";
+        assert!(scan_source(GEMM, good).is_empty());
+        let doc = "/// # Safety\n/// caller checks cpu features\npub fn g() {}\n";
+        assert!(scan_source(GEMM, doc).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_reaches_across_attributes() {
+        let src = "// SAFETY: features checked by caller\n#[inline]\nfn f() { unsafe { g() } }\n";
+        assert!(scan_source(GEMM, src).is_empty());
+        let blocked = "// SAFETY: stale\nlet x = 1;\nfn f() { unsafe { g() } }\n";
+        assert_eq!(rules_of(&scan_source(GEMM, blocked)), vec![Rule::SafetyComment]);
+    }
+
+    #[test]
+    fn allowlist_rule_fires_outside_allowed_modules() {
+        let src = "fn f(p: *const f32) -> f32 {\n    // SAFETY: p is valid\n    unsafe { *p }\n}\n";
+        let vs = scan_source("rust/src/util/math.rs", src);
+        assert_eq!(rules_of(&vs), vec![Rule::UnsafeAllowlist]);
+        assert_eq!(vs[0].line, 3);
+    }
+
+    #[test]
+    fn float_ord_rule_and_escape_hatch() {
+        let bad = "fn f(xs: &mut [f64]) {\n    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let vs = scan_source("rust/src/util/math.rs", bad);
+        assert_eq!(rules_of(&vs), vec![Rule::FloatOrd]);
+        assert_eq!(vs[0].line, 2);
+        let ok = "fn f(xs: &mut [f64]) {\n    // lint: allow(float-ord) -- NaN filtered above\n    \
+                  xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        assert!(scan_source("rust/src/util/math.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn no_alloc_region_tracks_fn_body_and_escape() {
+        let src = "// lint: no-alloc\nfn hot(out: &mut [f32]) {\n    let v = vec![0.0; 4];\n    \
+                   out[0] = v[0];\n}\nfn cold() -> Vec<f32> {\n    vec![1.0]\n}\n";
+        let vs = scan_source("rust/src/runtime/cpu/ops.rs", src);
+        assert_eq!(rules_of(&vs), vec![Rule::NoAlloc]);
+        assert_eq!(vs[0].line, 3);
+        let escaped = "// lint: no-alloc\nfn hot(out: &mut [f32]) {\n    \
+                       let v = vec![0.0; 4]; // lint: allow(no-alloc) -- startup only\n    \
+                       out[0] = v[0];\n}\n";
+        assert!(scan_source("rust/src/runtime/cpu/ops.rs", escaped).is_empty());
+    }
+
+    #[test]
+    fn serving_pin_rule_only_on_serving_paths() {
+        let src = "fn step(a: &[f32], b: &[f32], c: &mut [f32]) {\n    \
+                   ops::matmul_into(a, b, c, 1, 2, 3);\n}\n";
+        assert_eq!(rules_of(&scan_source("rust/src/serve/engine.rs", src)), vec![Rule::ServingPin]);
+        assert_eq!(
+            rules_of(&scan_source("rust/src/coordinator/server.rs", src)),
+            vec![Rule::ServingPin]
+        );
+        assert!(scan_source("rust/src/runtime/cpu/ops.rs", src).is_empty());
+        let pinned = "fn step(e: &Exec, a: &[f32], b: &[f32], c: &mut [f32]) {\n    \
+                      ops::matmul_acc_serving(e, a, b, c, 2, 3);\n}\n";
+        assert!(scan_source("rust/src/serve/engine.rs", pinned).is_empty());
+    }
+
+    #[test]
+    fn forbid_header_rule_covers_by_ancestor_mod() {
+        let bare = vec![("rust/src/data/foo.rs".to_string(), "pub fn x() {}\n".to_string())];
+        assert_eq!(rules_of(&lint_sources(&bare)), vec![Rule::ForbidHeader]);
+        let covered = vec![
+            ("rust/src/data/foo.rs".to_string(), "pub fn x() {}\n".to_string()),
+            (
+                "rust/src/data/mod.rs".to_string(),
+                "#![forbid(unsafe_code)]\npub mod foo;\n".to_string(),
+            ),
+        ];
+        assert!(lint_sources(&covered).is_empty());
+        let own = vec![(
+            "rust/tests/smoke.rs".to_string(),
+            "#![forbid(unsafe_code)]\n#[test]\nfn t() {}\n".to_string(),
+        )];
+        assert!(lint_sources(&own).is_empty());
+    }
+
+    #[test]
+    fn directive_prose_in_docs_is_inert() {
+        let src = "//! Use a comment starting with `lint: no-alloc` to tag a fn.\n\
+                   fn f() -> Vec<f32> {\n    vec![0.0]\n}\n";
+        assert!(scan_source("rust/src/util/math.rs", src).is_empty());
+    }
+}

@@ -16,6 +16,8 @@
 //!
 //! Exit codes: 0 ok, 1 runtime failure, 2 command-line usage error.
 
+#![forbid(unsafe_code)]
+
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};

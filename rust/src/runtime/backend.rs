@@ -20,6 +20,8 @@
 //! * `crate::runtime::pjrt::Runtime` — PJRT/XLA over AOT HLO-text
 //!   artifacts, behind the off-by-default `xla` feature.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::tensor::Tensor;

@@ -29,6 +29,7 @@ impl TokenEmbedding {
 
     /// [`forward`](Self::forward) into a caller-provided buffer
     /// (overwritten) — the allocation-free decode form.
+    // lint: no-alloc -- pure table-lookup into the caller's buffer
     pub fn forward_into(&self, ctx: &Ctx, tokens: &[i32], x: &mut [f32]) -> Result<()> {
         let d = ctx.cfg.d_model;
         let vocab = ctx.cfg.vocab;

@@ -53,6 +53,7 @@ impl LmHead {
     /// arena — the allocation-free serving form. The tied-head matmul is
     /// row-class pinned so a slot's logits row is bit-identical whether it
     /// comes from a full decode batch or a single-row prefill call.
+    // lint: no-alloc -- normalized activations come from the arena
     pub fn logits_into(&self, ctx: &Ctx, x: &[f32], logits: &mut [f32]) {
         let (d, vocab) = (ctx.cfg.d_model, ctx.cfg.vocab);
         let rows = x.len() / d;

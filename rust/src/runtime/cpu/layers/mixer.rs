@@ -148,6 +148,7 @@ impl MixerLayer {
     /// chunkwise kernel at [`SERVE_KERNEL_CHUNK`], so one decode step is
     /// bit-identical to a length-1 [`MixerLayer::prefill`] — and a chain
     /// of decode steps to a prefill over the same tokens.
+    // lint: no-alloc -- per-token decode draws every temporary from arenas
     pub fn decode_step(
         &self,
         ctx: &Ctx,
@@ -184,8 +185,8 @@ impl MixerLayer {
         ops::silu_inplace(&mut vc);
 
         // DeltaNet normalizes q/k per head row.
-        let mut qn = Vec::new();
-        let mut kn = Vec::new();
+        let mut qn = Vec::new(); // lint: allow(no-alloc) -- empty Vec, heap-free
+        let mut kn = Vec::new(); // lint: allow(no-alloc) -- empty Vec, heap-free
         if cfg.mixer == Mixer::DeltaNet {
             qn = ctx.exec.take(b * inner);
             ops::l2norm_into(&qc, dh, &mut qn);
@@ -272,6 +273,7 @@ impl MixerLayer {
     /// rolling-cache arithmetic (conv) or runs the chunkwise kernel at
     /// [`SERVE_KERNEL_CHUNK`], and every matmul row is pinned to the
     /// single-row kernel class.
+    // lint: no-alloc -- prefill segments reuse the same pooled buffers
     pub fn prefill(
         &self,
         ctx: &Ctx,
@@ -309,8 +311,8 @@ impl MixerLayer {
         ops::silu_inplace(&mut vc);
 
         // DeltaNet normalizes q/k per head row.
-        let mut qn = Vec::new();
-        let mut kn = Vec::new();
+        let mut qn = Vec::new(); // lint: allow(no-alloc) -- empty Vec, heap-free
+        let mut kn = Vec::new(); // lint: allow(no-alloc) -- empty Vec, heap-free
         if cfg.mixer == Mixer::DeltaNet {
             qn = ctx.exec.take(l * inner);
             ops::l2norm_into(&qc, dh, &mut qn);

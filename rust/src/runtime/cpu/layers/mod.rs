@@ -156,6 +156,7 @@ impl Layer for Block {
 /// Every temporary comes from the executor arenas: the per-token loop is
 /// allocation-free in steady state.
 impl Block {
+    // lint: no-alloc -- the per-token block step stays on the arenas
     pub fn decode_step(
         &self,
         ctx: &Ctx,
@@ -191,6 +192,7 @@ impl Block {
     /// successive [`Block::decode_step`] calls — every sub-layer is either
     /// row-local or serving-arithmetic pinned (see
     /// [`MixerLayer::prefill`]).
+    // lint: no-alloc -- prefill reuses the decode arena buffers
     pub fn prefill(
         &self,
         ctx: &Ctx,

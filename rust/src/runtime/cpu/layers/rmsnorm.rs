@@ -31,6 +31,7 @@ impl RmsNorm {
 
     /// [`infer`](Self::infer) into a caller-provided buffer (overwritten)
     /// — the allocation-free decode form.
+    // lint: no-alloc -- writes into the caller's buffer only
     pub fn infer_into(&self, ctx: &Ctx, x: &[f32], y: &mut [f32]) {
         let gain = ctx.params.tensor(self.gain).data();
         ops::rms_norm_into(x, gain, self.width, ctx.cfg.norm_eps, y);

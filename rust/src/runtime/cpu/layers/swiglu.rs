@@ -56,6 +56,7 @@ impl SwiGlu {
     /// exactly. (For row counts where the training dispatch picks the
     /// packed kernel this can differ from [`Layer::forward`] in the last
     /// bits — the serving paths only ever compare against themselves.)
+    // lint: no-alloc -- intermediates come from the executor arena
     pub fn infer_into(&self, ctx: &Ctx, x: &[f32], out: &mut [f32]) {
         let (d, f) = (ctx.cfg.d_model, ctx.cfg.mlp_width());
         let rows = x.len() / d;

@@ -11,6 +11,8 @@
 //! bakes into artifacts, so CPU sessions train with the same shapes the
 //! PJRT backend would.
 
+#![forbid(unsafe_code)]
+
 pub mod config;
 pub mod exec;
 pub mod layers;

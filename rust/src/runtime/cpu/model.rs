@@ -172,6 +172,7 @@ impl LmStack {
     /// [`decode_state_shapes`] order and advances them **in place** (the
     /// caller keeps them host-resident — no copy, no reallocation on the
     /// serving hot path); returns logits (B, vocab).
+    // lint: no-alloc -- only the returned logits buffer may allocate
     pub fn decode(
         &self,
         cfg: &CpuModelCfg,
@@ -208,7 +209,7 @@ impl LmStack {
             let [cq, ck, cv, s] = chunk else { unreachable!("state is chunked by 4") };
             blk.decode_step(&ctx, &mut x, cq, ck, cv, s);
         }
-        let mut logits = vec![0.0f32; b * cfg.vocab];
+        let mut logits = vec![0.0f32; b * cfg.vocab]; // lint: allow(no-alloc) -- returned buffer
         self.head.logits_into(&ctx, &x, &mut logits);
         exec.put(x);
         Ok(Tensor::from_vec(&[b, cfg.vocab], logits))
@@ -226,6 +227,7 @@ impl LmStack {
     /// feeding the same tokens one at a time through [`LmStack::decode`]
     /// (the layers pin their serving arithmetic — see
     /// `layers/mixer.rs::SERVE_KERNEL_CHUNK`).
+    // lint: no-alloc -- only the returned logits buffer may allocate
     pub fn prefill(
         &self,
         cfg: &CpuModelCfg,
@@ -262,7 +264,7 @@ impl LmStack {
         }
         // Last-position logits only (the head derives its row count from
         // the activation slice, so this is a single pinned-class row).
-        let mut logits = vec![0.0f32; cfg.vocab];
+        let mut logits = vec![0.0f32; cfg.vocab]; // lint: allow(no-alloc) -- returned buffer
         self.head.logits_into(&ctx, &x[(l - 1) * cfg.d_model..], &mut logits);
         exec.put(x);
         Ok(Tensor::from_vec(&[1, cfg.vocab], logits))

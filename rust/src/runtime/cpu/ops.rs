@@ -440,6 +440,7 @@ pub fn matmul_nt_acc(
 /// route every projection through this so a token's trajectory is
 /// bit-identical whether it is ingested one at a time inside a decode
 /// batch or as part of a single-slot prompt chunk of any size.
+// lint: no-alloc -- the serving matmuls never touch the allocator
 pub fn matmul_acc_serving(
     exec: &Executor,
     a: &[f32],
@@ -464,6 +465,7 @@ pub fn matmul_acc_serving(
 
 /// out += a @ b^T with the same single-row class pinning as
 /// [`matmul_acc_serving`] (b: (n, k) row-major).
+// lint: no-alloc -- the serving matmuls never touch the allocator
 pub fn matmul_nt_acc_serving(
     exec: &Executor,
     a: &[f32],

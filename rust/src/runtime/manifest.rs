@@ -1,6 +1,8 @@
 //! AOT manifest: the contract `python/compile/aot.py` writes and the Rust
 //! runtime honors.  One [`ArtifactSpec`] per lowered graph.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::path::Path;
 

@@ -75,14 +75,18 @@ pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<HostValue> {
 }
 
 fn bytemuck_f32(x: &[f32]) -> &[u8] {
+    // SAFETY: u8 has no alignment or validity requirements; the byte view
+    // covers exactly the 4*len bytes of `x` and inherits its lifetime.
     unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
 }
 
 fn bytemuck_i32(x: &[i32]) -> &[u8] {
+    // SAFETY: as bytemuck_f32 — in-bounds, u8-aligned, borrow-preserving.
     unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
 }
 
 fn bytemuck_u32(x: &[u32]) -> &[u8] {
+    // SAFETY: as bytemuck_f32 — in-bounds, u8-aligned, borrow-preserving.
     unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
 }
 

@@ -5,6 +5,8 @@
 //! The PJRT backend (feature `xla`) converts these to/from `xla::Literal`
 //! at its edge; the CPU backend consumes them directly.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::tensor::Tensor;

@@ -26,6 +26,8 @@
 //! whose request is abandoned by the deadline observe a dropped event
 //! channel and answer 503.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};

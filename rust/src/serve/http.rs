@@ -16,6 +16,8 @@
 //! bodies (rejected as unsupported), header names lowercased at parse
 //! time so lookups are case-insensitive per RFC 9110.
 
+#![forbid(unsafe_code)]
+
 use std::io::{self, BufRead, Read, Write};
 
 /// Cap on request-line + header bytes per request.

@@ -93,6 +93,9 @@ pub fn install_signal_handlers() {
     }
     const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
+    // SAFETY: signal(2) is called with a handler of the matching C ABI
+    // (cast through usize, the declared parameter type); the handler body
+    // only stores to an atomic, which is async-signal-safe.
     unsafe {
         signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
         signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);

@@ -132,10 +132,14 @@ pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n:
     {
         if simd_active() {
             if use_packed(m, k, n) {
+                // SAFETY: simd_active() confirmed avx2+fma on this host;
+                // lengths asserted above.
                 unsafe { avx2::matmul_packed(a, b, out, m, k, n) };
                 return;
             }
             if n >= 8 {
+                // SAFETY: simd_active() confirmed avx2+fma on this host;
+                // lengths asserted above.
                 unsafe { avx2::matmul_small(a, b, out, m, k, n) };
                 return;
             }
@@ -153,10 +157,14 @@ pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize,
     {
         if simd_active() {
             if use_packed(m, k, n) {
+                // SAFETY: simd_active() confirmed avx2+fma on this host;
+                // lengths asserted above.
                 unsafe { avx2::matmul_nt_packed(a, b, out, m, k, n) };
                 return;
             }
             if k >= 8 {
+                // SAFETY: simd_active() confirmed avx2+fma on this host;
+                // lengths asserted above.
                 unsafe { avx2::matmul_nt_small(a, b, out, m, k, n) };
                 return;
             }
@@ -176,10 +184,14 @@ pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize,
         // Packed dims: the product is (k × m)·(m × n), so m is the depth.
         if simd_active() {
             if use_packed(k, m, n) {
+                // SAFETY: simd_active() confirmed avx2+fma on this host;
+                // lengths asserted above.
                 unsafe { avx2::matmul_tn_packed(a, b, out, m, k, n) };
                 return;
             }
             if n >= 8 {
+                // SAFETY: simd_active() confirmed avx2+fma on this host;
+                // lengths asserted above.
                 unsafe { avx2::matmul_tn_small(a, b, out, m, k, n) };
                 return;
             }
@@ -240,10 +252,14 @@ pub fn matmul_into_class(
         if simd_active() {
             match class {
                 MatmulClass::Packed => {
+                    // SAFETY: simd_active() confirmed avx2+fma; lengths
+                    // asserted above.
                     unsafe { avx2::matmul_packed(a, b, out, m, k, n) };
                     return;
                 }
                 MatmulClass::Small => {
+                    // SAFETY: simd_active() confirmed avx2+fma; lengths
+                    // asserted above.
                     unsafe { avx2::matmul_small(a, b, out, m, k, n) };
                     return;
                 }
@@ -292,10 +308,14 @@ pub fn matmul_nt_into_class(
         if simd_active() {
             match class {
                 MatmulClass::Packed => {
+                    // SAFETY: simd_active() confirmed avx2+fma; lengths
+                    // asserted above.
                     unsafe { avx2::matmul_nt_packed(a, b, out, m, k, n) };
                     return;
                 }
                 MatmulClass::Small => {
+                    // SAFETY: simd_active() confirmed avx2+fma; lengths
+                    // asserted above.
                     unsafe { avx2::matmul_nt_small(a, b, out, m, k, n) };
                     return;
                 }
@@ -314,6 +334,8 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
     {
         if a.len() >= 8 && simd_active() {
+            // SAFETY: simd_active() confirmed avx2+fma on this host;
+            // equal lengths asserted above.
             return unsafe { avx2::dot(a, b) };
         }
     }
@@ -326,6 +348,8 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     #[cfg(target_arch = "x86_64")]
     {
         if x.len() >= 8 && simd_active() {
+            // SAFETY: simd_active() confirmed avx2+fma on this host;
+            // equal lengths asserted above.
             unsafe { avx2::axpy(alpha, x, y) };
             return;
         }
@@ -425,9 +449,12 @@ pub mod scalar {
 // AVX2+FMA tier
 // ----------------------------------------------------------------------
 
-/// AVX2+FMA kernels. Every function is `unsafe`: the caller must have
-/// confirmed `avx2` and `fma` via runtime detection (the dispatchers
-/// above do; tests must guard explicitly).
+/// AVX2+FMA kernels. Every public function is `unsafe`: the caller must
+/// have confirmed `avx2` and `fma` via runtime detection (the dispatchers
+/// above do; tests must guard explicitly). Inside them, each unsafe
+/// operation sits in its own scoped `unsafe {}` block with a SAFETY note
+/// (`#![deny(unsafe_op_in_unsafe_fn)]` at the crate root enforces the
+/// scoping; `efla-lint` checks the notes).
 #[cfg(target_arch = "x86_64")]
 pub mod avx2 {
     use std::arch::x86_64::*;
@@ -451,10 +478,11 @@ pub mod avx2 {
             const { RefCell::new((Vec::new(), Vec::new())) };
     }
 
-    /// # Safety
-    /// Requires avx2+fma (runtime-detected).
+    /// Horizontal sum of 8 lanes. Safe `#[target_feature]` fn: it uses
+    /// only value-based intrinsics, and its callers (the kernels below)
+    /// enable the same features, so calling it there needs no `unsafe`.
     #[target_feature(enable = "avx2", enable = "fma")]
-    unsafe fn hsum8(v: __m256) -> f32 {
+    fn hsum8(v: __m256) -> f32 {
         let lo = _mm256_castps256_ps128(v);
         let hi = _mm256_extractf128_ps(v, 1);
         let s = _mm_add_ps(lo, hi);
@@ -477,16 +505,24 @@ pub mod avx2 {
         let mut acc1 = _mm256_setzero_ps();
         let mut i = 0usize;
         while i + 16 <= n {
-            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
-            acc1 = _mm256_fmadd_ps(
-                _mm256_loadu_ps(ap.add(i + 8)),
-                _mm256_loadu_ps(bp.add(i + 8)),
-                acc1,
-            );
+            // SAFETY: i + 16 <= n == a.len() == b.len(), so both 8-lane
+            // loads at i and i + 8 stay in bounds.
+            let (a0, b0, a1, b1) = unsafe {
+                (
+                    _mm256_loadu_ps(ap.add(i)),
+                    _mm256_loadu_ps(bp.add(i)),
+                    _mm256_loadu_ps(ap.add(i + 8)),
+                    _mm256_loadu_ps(bp.add(i + 8)),
+                )
+            };
+            acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+            acc1 = _mm256_fmadd_ps(a1, b1, acc1);
             i += 16;
         }
         if i + 8 <= n {
-            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            // SAFETY: i + 8 <= n, so one 8-lane load per operand fits.
+            let (a0, b0) = unsafe { (_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i))) };
+            acc0 = _mm256_fmadd_ps(a0, b0, acc0);
             i += 8;
         }
         let mut s = hsum8(_mm256_add_ps(acc0, acc1));
@@ -510,8 +546,13 @@ pub mod avx2 {
         let yp = y.as_mut_ptr();
         let mut i = 0usize;
         while i + 8 <= n {
-            let yv = _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
-            _mm256_storeu_ps(yp.add(i), yv);
+            // SAFETY: i + 8 <= n == x.len() == y.len(), so the 8-lane
+            // load/store pair at offset i stays in bounds.
+            unsafe {
+                let xv = _mm256_loadu_ps(xp.add(i));
+                let yv = _mm256_loadu_ps(yp.add(i));
+                _mm256_storeu_ps(yp.add(i), _mm256_fmadd_ps(av, xv, yv));
+            }
             i += 8;
         }
         while i < n {
@@ -540,7 +581,9 @@ pub mod avx2 {
             let arow = &a[i * k..(i + 1) * k];
             let orow = &mut out[i * n..(i + 1) * n];
             for (kk, &av) in arow.iter().enumerate() {
-                axpy(av, &b[kk * n..(kk + 1) * n], orow);
+                // SAFETY: axpy needs avx2+fma, guaranteed by this fn's own
+                // contract; the slice bounds are equal-length rows.
+                unsafe { axpy(av, &b[kk * n..(kk + 1) * n], orow) };
             }
         }
     }
@@ -563,7 +606,9 @@ pub mod avx2 {
             let arow = &a[i * k..(i + 1) * k];
             let orow = &mut out[i * n..(i + 1) * n];
             for j in 0..n {
-                orow[j] += dot(arow, &b[j * k..(j + 1) * k]);
+                // SAFETY: dot needs avx2+fma, guaranteed by this fn's own
+                // contract; both row slices have length k.
+                orow[j] += unsafe { dot(arow, &b[j * k..(j + 1) * k]) };
             }
         }
     }
@@ -586,7 +631,9 @@ pub mod avx2 {
             let arow = &a[i * k..(i + 1) * k];
             let brow = &b[i * n..(i + 1) * n];
             for (kk, &av) in arow.iter().enumerate() {
-                axpy(av, brow, &mut out[kk * n..(kk + 1) * n]);
+                // SAFETY: axpy needs avx2+fma, guaranteed by this fn's own
+                // contract; the slice bounds are equal-length rows.
+                unsafe { axpy(av, brow, &mut out[kk * n..(kk + 1) * n]) };
             }
         }
     }
@@ -608,33 +655,43 @@ pub mod avx2 {
         let mut bp = bpack.as_ptr();
         let mut acc = [_mm256_setzero_ps(); 2 * MR];
         for _ in 0..kc {
-            let b0 = _mm256_loadu_ps(bp);
-            let b1 = _mm256_loadu_ps(bp.add(8));
-            let a0 = _mm256_set1_ps(*ap);
-            acc[0] = _mm256_fmadd_ps(a0, b0, acc[0]);
-            acc[1] = _mm256_fmadd_ps(a0, b1, acc[1]);
-            let a1 = _mm256_set1_ps(*ap.add(1));
-            acc[2] = _mm256_fmadd_ps(a1, b0, acc[2]);
-            acc[3] = _mm256_fmadd_ps(a1, b1, acc[3]);
-            let a2 = _mm256_set1_ps(*ap.add(2));
-            acc[4] = _mm256_fmadd_ps(a2, b0, acc[4]);
-            acc[5] = _mm256_fmadd_ps(a2, b1, acc[5]);
-            let a3 = _mm256_set1_ps(*ap.add(3));
-            acc[6] = _mm256_fmadd_ps(a3, b0, acc[6]);
-            acc[7] = _mm256_fmadd_ps(a3, b1, acc[7]);
-            let a4 = _mm256_set1_ps(*ap.add(4));
-            acc[8] = _mm256_fmadd_ps(a4, b0, acc[8]);
-            acc[9] = _mm256_fmadd_ps(a4, b1, acc[9]);
-            let a5 = _mm256_set1_ps(*ap.add(5));
-            acc[10] = _mm256_fmadd_ps(a5, b0, acc[10]);
-            acc[11] = _mm256_fmadd_ps(a5, b1, acc[11]);
-            ap = ap.add(MR);
-            bp = bp.add(NR);
+            // SAFETY: the length asserts above give apack >= kc*MR and
+            // bpack >= kc*NR floats; ap/bp advance MR/NR per iteration
+            // for kc iterations, so every load and broadcast deref below
+            // stays inside the packed panels.
+            unsafe {
+                let b0 = _mm256_loadu_ps(bp);
+                let b1 = _mm256_loadu_ps(bp.add(8));
+                let a0 = _mm256_set1_ps(*ap);
+                acc[0] = _mm256_fmadd_ps(a0, b0, acc[0]);
+                acc[1] = _mm256_fmadd_ps(a0, b1, acc[1]);
+                let a1 = _mm256_set1_ps(*ap.add(1));
+                acc[2] = _mm256_fmadd_ps(a1, b0, acc[2]);
+                acc[3] = _mm256_fmadd_ps(a1, b1, acc[3]);
+                let a2 = _mm256_set1_ps(*ap.add(2));
+                acc[4] = _mm256_fmadd_ps(a2, b0, acc[4]);
+                acc[5] = _mm256_fmadd_ps(a2, b1, acc[5]);
+                let a3 = _mm256_set1_ps(*ap.add(3));
+                acc[6] = _mm256_fmadd_ps(a3, b0, acc[6]);
+                acc[7] = _mm256_fmadd_ps(a3, b1, acc[7]);
+                let a4 = _mm256_set1_ps(*ap.add(4));
+                acc[8] = _mm256_fmadd_ps(a4, b0, acc[8]);
+                acc[9] = _mm256_fmadd_ps(a4, b1, acc[9]);
+                let a5 = _mm256_set1_ps(*ap.add(5));
+                acc[10] = _mm256_fmadd_ps(a5, b0, acc[10]);
+                acc[11] = _mm256_fmadd_ps(a5, b1, acc[11]);
+                ap = ap.add(MR);
+                bp = bp.add(NR);
+            }
         }
         let tp = tile.as_mut_ptr();
         for r in 0..MR {
-            _mm256_storeu_ps(tp.add(r * NR), acc[2 * r]);
-            _mm256_storeu_ps(tp.add(r * NR + 8), acc[2 * r + 1]);
+            // SAFETY: tile holds MR*NR floats and r < MR, so both 8-lane
+            // stores (at r*NR and r*NR + 8, with NR == 16) fit.
+            unsafe {
+                _mm256_storeu_ps(tp.add(r * NR), acc[2 * r]);
+                _mm256_storeu_ps(tp.add(r * NR + 8), acc[2 * r + 1]);
+            }
         }
     }
 
@@ -717,12 +774,17 @@ pub mod avx2 {
                         for ip in 0..mpan {
                             let i = i0 + ip * MR;
                             let mr = MR.min(m - i);
-                            microkernel(
-                                kc,
-                                &apack[ip * kc * MR..(ip + 1) * kc * MR],
-                                bpan,
-                                &mut tile,
-                            );
+                            // SAFETY: avx2+fma holds per this fn's own
+                            // contract; both panel slices hold exactly
+                            // kc*MR / kc*NR floats.
+                            unsafe {
+                                microkernel(
+                                    kc,
+                                    &apack[ip * kc * MR..(ip + 1) * kc * MR],
+                                    bpan,
+                                    &mut tile,
+                                );
+                            }
                             for r in 0..mr {
                                 let orow = &mut out[(i + r) * n + j..(i + r) * n + j + nr];
                                 for (o, &t) in orow.iter_mut().zip(tile[r * NR..].iter()) {
@@ -913,6 +975,7 @@ mod tests {
             let mut c_ref = vec![0.0f32; m * n];
             scalar::matmul_into(&a, &b, &mut c_ref, m, k, n);
             let mut c = vec![0.0f32; m * n];
+            // SAFETY: the active_kernel() guard above confirmed avx2+fma.
             unsafe { avx2::matmul_packed(&a, &b, &mut c, m, k, n) };
             assert!(max_abs_diff(&c_ref, &c) <= 1e-5, "packed nn {m}x{k}x{n}");
 
@@ -920,6 +983,7 @@ mod tests {
             let mut c_ref = vec![0.0f32; m * n];
             scalar::matmul_nt_into(&a, &bt, &mut c_ref, m, k, n);
             let mut c = vec![0.0f32; m * n];
+            // SAFETY: the active_kernel() guard above confirmed avx2+fma.
             unsafe { avx2::matmul_nt_packed(&a, &bt, &mut c, m, k, n) };
             assert!(max_abs_diff(&c_ref, &c) <= 1e-5, "packed nt {m}x{k}x{n}");
 
@@ -927,6 +991,7 @@ mod tests {
             let mut c_ref = vec![0.0f32; k * n];
             scalar::matmul_tn_into(&a, &bb, &mut c_ref, m, k, n);
             let mut c = vec![0.0f32; k * n];
+            // SAFETY: the active_kernel() guard above confirmed avx2+fma.
             unsafe { avx2::matmul_tn_packed(&a, &bb, &mut c, m, k, n) };
             assert!(max_abs_diff(&c_ref, &c) <= 1e-5, "packed tn {m}x{k}x{n}");
         }

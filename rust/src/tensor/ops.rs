@@ -7,6 +7,8 @@
 //! module keeps the [`Tensor`]-level conveniences built on top of it. See
 //! `benches/kernel_throughput.rs` for measured numbers.
 
+#![forbid(unsafe_code)]
+
 use super::gemm::{matmul_into, matmul_nt_into};
 use super::Tensor;
 

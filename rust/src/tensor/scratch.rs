@@ -17,6 +17,8 @@
 //! still out. Forgetting `put` is never unsound — it only costs the pool
 //! a reusable allocation.
 
+#![forbid(unsafe_code)]
+
 /// LIFO pool of reusable zero-initialized f32 buffers.
 #[derive(Debug, Default)]
 pub struct Scratch {

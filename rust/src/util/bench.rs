@@ -23,7 +23,10 @@ pub struct Stats {
 impl Stats {
     pub fn from_samples(mut xs: Vec<f64>) -> Stats {
         assert!(!xs.is_empty());
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample (e.g. a zero-duration 0/0 rate upstream)
+        // must not panic the sort; positive NaN orders after every finite
+        // value, so min/percentiles stay meaningful.
+        xs.sort_by(|a, b| a.total_cmp(b));
         let n = xs.len();
         let pct = |p: f64| xs[((p * (n - 1) as f64).round() as usize).min(n - 1)];
         Stats {
@@ -166,6 +169,17 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 100.0);
         assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_tolerate_nan_samples() {
+        // Must not panic; f64::NAN is positive, so total_cmp sorts it last
+        // and the finite order statistics survive.
+        let s = Stats::from_samples(vec![0.5, f64::NAN, 1.0]);
+        assert_eq!(s.iters, 3);
+        assert_eq!(s.min, 0.5);
+        assert_eq!(s.p50, 1.0);
+        assert!(s.max.is_nan());
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Shared substrates: RNG, JSON, CLI parsing, logging, bench harness.
 
+#![forbid(unsafe_code)]
+
 pub mod bench;
 pub mod cli;
 pub mod json;

@@ -193,8 +193,10 @@ impl ZipfSampler {
     /// Draw a rank in [0, n).
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
-        // Binary search for first cdf >= u.
-        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        // Binary search for first cdf >= u. `total_cmp` keeps the search
+        // well-defined even if a degenerate build left a NaN in the table
+        // (a 0/0 normalization): NaN never panics the comparator.
+        match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }
@@ -265,6 +267,19 @@ mod tests {
         }
         assert!(counts[0] > counts[10]);
         assert!(counts[0] > counts[49]);
+    }
+
+    #[test]
+    fn zipf_sample_survives_nan_cdf_entries() {
+        // A degenerate normalization (0/0) can leave NaN in the table; the
+        // total_cmp search must stay panic-free and keep ranks in range.
+        let z = ZipfSampler {
+            cdf: vec![0.25, f64::NAN, 1.0],
+        };
+        let mut r = Rng::new(11);
+        for _ in 0..1000 {
+            assert!(z.sample(&mut r) < 3);
+        }
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! checkpoint), loss descent on a fixed batch, Backend/HostValue shape
 //! round-trips, and the decode/serving path.
 
+#![forbid(unsafe_code)]
+
 use efla::coordinator::config::RunConfig;
 use efla::coordinator::server::{GenRequest, Server};
 use efla::coordinator::session::Session;

@@ -5,6 +5,8 @@
 //! the env read on first use, so the variable is set before any dispatched
 //! call in this process, with no sibling tests racing the cache.
 
+#![forbid(unsafe_code)]
+
 use efla::tensor::{
     active_kernel, axpy, dot, gemm, matmul_into, matmul_nt_into, matmul_tn_into, Kernel,
     ENV_FORCE_SCALAR,

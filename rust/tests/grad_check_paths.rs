@@ -5,6 +5,8 @@
 //! `force_kernel` hook, which would race the bit-exactness assertions in
 //! other test binaries if they shared a process.
 
+#![forbid(unsafe_code)]
+
 use efla::runtime::cpu::config::family_config;
 use efla::runtime::cpu::exec::Executor;
 use efla::runtime::cpu::model::lm_loss;

@@ -13,6 +13,8 @@
 //! overflow, graceful drain on shutdown, duplicate-id conflict, the
 //! stats/health endpoints, and request validation.
 
+#![forbid(unsafe_code)]
+
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;

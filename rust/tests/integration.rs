@@ -6,6 +6,8 @@
 //! cheap) and uses the tiny preset so the whole file runs in seconds.
 //!
 //! Backend-agnostic coverage (CPU backend) lives in `tests/cpu_backend.rs`.
+
+#![forbid(unsafe_code)]
 #![cfg(feature = "xla")]
 
 use std::path::{Path, PathBuf};

@@ -1,0 +1,22 @@
+#![forbid(unsafe_code)]
+
+// Fixture: a file every rule accepts — forbid header, total_cmp ordering,
+// a tagged no-alloc fn that stays on caller buffers, and a waived
+// startup-time allocation.
+
+pub fn sort_losses(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+// lint: no-alloc
+pub fn hot_step(out: &mut [f32], x: &[f32]) {
+    for (o, v) in out.iter_mut().zip(x.iter()) {
+        *o = *v * 2.0;
+    }
+}
+
+// lint: no-alloc
+pub fn warm_start(n: usize) -> Vec<f32> {
+    let pool = vec![0.0f32; n]; // lint: allow(no-alloc) -- startup only
+    pool
+}

@@ -1,0 +1,8 @@
+#![forbid(unsafe_code)]
+
+// Fixture: EFL004 float-ord. NaN makes this sort panic; total_cmp is the
+// required spelling.
+
+pub fn sort_losses(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

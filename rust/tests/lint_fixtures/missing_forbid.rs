@@ -1,0 +1,4 @@
+// Fixture: EFL003 forbid-header. No `#![forbid(unsafe_code)]` of its own
+// and (as presented to the linter) no covering ancestor mod.rs.
+
+pub fn noop() {}

@@ -1,0 +1,10 @@
+#![forbid(unsafe_code)]
+
+// Fixture: EFL005 no-alloc. The tagged function allocates a Vec inside
+// its body without an allow escape.
+
+// lint: no-alloc
+pub fn hot_step(out: &mut [f32]) {
+    let tmp = vec![0.0f32; out.len()];
+    out.copy_from_slice(&tmp);
+}

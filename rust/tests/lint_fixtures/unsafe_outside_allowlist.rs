@@ -1,0 +1,8 @@
+// Fixture: EFL002 unsafe-allowlist. The SAFETY comment is present, so
+// scanning this under a non-allowlisted path must yield exactly the
+// allowlist finding — and no escape hatch can waive it.
+
+pub fn read_first(p: *const f32) -> f32 {
+    // SAFETY: the caller promises p points at a live f32.
+    unsafe { *p }
+}

@@ -1,0 +1,6 @@
+// Fixture: EFL001 safety-comment. Scanned as an allowlisted module, so
+// the only finding must be the missing SAFETY comment on the unsafe block.
+
+pub fn read_first(p: *const f32) -> f32 {
+    unsafe { *p }
+}

@@ -1,0 +1,98 @@
+//! Integration tests for the `efla-lint` static-analysis pass.
+//!
+//! Each seeded fixture under `tests/lint_fixtures/` must fail with exactly
+//! its rule id, the clean fixture must pass every rule, and the repository
+//! source tree itself must scan violation-free — the same check the CI
+//! `static-analysis` job runs through the `efla-lint` binary.
+
+#![forbid(unsafe_code)]
+
+use std::fs;
+
+use efla::lint::{self, Rule, Violation};
+
+/// Read a fixture file from `tests/lint_fixtures/`.
+fn fixture(name: &str) -> String {
+    let path = lint::repo_root().join("rust/tests").join(lint::FIXTURE_DIR).join(name);
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+fn rules(vs: &[Violation]) -> Vec<Rule> {
+    vs.iter().map(|v| v.rule).collect()
+}
+
+#[test]
+fn fixture_unsafe_without_safety_fires_efl001() {
+    // Scanned as an allowlisted module so the allowlist rule stays quiet
+    // and the missing SAFETY comment is the only finding.
+    let vs = lint::scan_source("rust/src/tensor/gemm.rs", &fixture("unsafe_without_safety.rs"));
+    assert_eq!(rules(&vs), vec![Rule::SafetyComment]);
+    assert_eq!(vs[0].rule.id(), "EFL001");
+}
+
+#[test]
+fn fixture_unsafe_outside_allowlist_fires_efl002() {
+    let vs = lint::scan_source("rust/src/data/loader.rs", &fixture("unsafe_outside_allowlist.rs"));
+    assert_eq!(rules(&vs), vec![Rule::UnsafeAllowlist]);
+    assert_eq!(vs[0].rule.id(), "EFL002");
+}
+
+#[test]
+fn fixture_missing_forbid_fires_efl003() {
+    // forbid-header is a tree-level rule, so drive it through lint_sources.
+    let files =
+        vec![("rust/src/util/missing_forbid.rs".to_string(), fixture("missing_forbid.rs"))];
+    let vs = lint::lint_sources(&files);
+    assert_eq!(rules(&vs), vec![Rule::ForbidHeader]);
+    assert_eq!(vs[0].rule.id(), "EFL003");
+}
+
+#[test]
+fn fixture_float_partial_cmp_fires_efl004() {
+    let vs = lint::scan_source("rust/src/util/stats.rs", &fixture("float_partial_cmp.rs"));
+    assert_eq!(rules(&vs), vec![Rule::FloatOrd]);
+    assert_eq!(vs[0].rule.id(), "EFL004");
+}
+
+#[test]
+fn fixture_no_alloc_breach_fires_efl005() {
+    let vs = lint::scan_source("rust/src/runtime/cpu/ops.rs", &fixture("no_alloc_breach.rs"));
+    assert_eq!(rules(&vs), vec![Rule::NoAlloc]);
+    assert_eq!(vs[0].rule.id(), "EFL005");
+}
+
+#[test]
+fn fixture_serving_unpinned_matmul_fires_efl006() {
+    let vs = lint::scan_source("rust/src/serve/engine.rs", &fixture("serving_unpinned_matmul.rs"));
+    assert_eq!(rules(&vs), vec![Rule::ServingPin]);
+    assert_eq!(vs[0].rule.id(), "EFL006");
+}
+
+#[test]
+fn fixture_clean_passes_every_rule() {
+    let src = fixture("clean.rs");
+    // Per-file rules under both a serving and a non-serving path.
+    assert!(lint::scan_source("rust/src/serve/engine.rs", &src).is_empty());
+    assert!(lint::scan_source("rust/src/util/stats.rs", &src).is_empty());
+    // Tree-level rule: the file carries its own forbid header.
+    let files = vec![("rust/tests/clean.rs".to_string(), src)];
+    assert!(lint::lint_sources(&files).is_empty());
+}
+
+#[test]
+fn repository_tree_is_lint_clean() {
+    let files = lint::collect_tree(&lint::repo_root()).expect("walk repo tree");
+    assert!(!files.is_empty(), "lint roots must contain sources");
+    let vs = lint::lint_sources(&files);
+    for v in &vs {
+        eprintln!("{v}");
+    }
+    assert!(vs.is_empty(), "{} lint violation(s) in the repository tree", vs.len());
+}
+
+#[test]
+fn fixture_walk_skips_fixture_directory() {
+    // The deliberately-violating fixtures must never reach a tree scan.
+    let files = lint::collect_tree(&lint::repo_root()).expect("walk repo tree");
+    assert!(files.iter().all(|(p, _)| !p.contains(lint::FIXTURE_DIR)));
+}

@@ -3,6 +3,8 @@
 //! contract — the multi-threaded (batch × head) executor must produce
 //! bit-identical losses, gradients and decode trajectories to `threads=1`.
 
+#![forbid(unsafe_code)]
+
 use efla::runtime::cpu::config::family_config;
 use efla::runtime::cpu::exec::Executor;
 use efla::runtime::cpu::model::{clf_loss, lm_loss};

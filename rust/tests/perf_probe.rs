@@ -6,6 +6,8 @@
 //!   * data pipeline: inline batch generation vs prefetched;
 //!   * backend step breakdown: data vs step (fwd+bwd+AdamW).
 
+#![forbid(unsafe_code)]
+
 use std::time::Instant;
 
 use efla::coordinator::config::RunConfig;

@@ -4,6 +4,8 @@
 //! seeded random cases (shapes, chunk sizes, gate kinds) with shrinking
 //! replaced by printing the failing case parameters.
 
+#![forbid(unsafe_code)]
+
 use efla::attention::{
     alpha_efla, alpha_rk, chunkwise_delta, gates, sequential_delta, Gate,
 };

@@ -8,6 +8,8 @@
 //! equivalence is pinned per kernel tier and per thread count; the
 //! cross-thread-count invariance is additionally pinned in-process below.
 
+#![forbid(unsafe_code)]
+
 use efla::coordinator::server::{GenRequest, Server, ServerConfig};
 use efla::coordinator::session::Session;
 use efla::runtime::{CpuBackend, HostValue};

@@ -11,6 +11,8 @@
 //! resolves to, so the one test that flips the global `force_kernel` hook
 //! cannot interfere with its siblings.
 
+#![forbid(unsafe_code)]
+
 use efla::attention::{chunkwise_delta, sequential_delta, Gate};
 use efla::tensor::{axpy, dot, gemm, matmul_into, matmul_nt_into, matmul_tn_into, Kernel, Tensor};
 use efla::util::rng::Rng;
