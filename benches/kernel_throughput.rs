@@ -19,7 +19,11 @@
 //!   8. serving continuous batching — staggered arrivals through the
 //!      engine loop vs sequential one-request-at-a-time: aggregate
 //!      tok/s, e2e/queue-wait percentiles (writes the root-level
-//!      BENCH_serving_cb.json).
+//!      BENCH_serving_cb.json);
+//!   9. serving slot-batched decode — all busy slots' rows through one
+//!      class-pinned packed GEMM vs the retired per-slot single-row
+//!      formulation at 1/4/16/32 busy slots (writes the root-level
+//!      BENCH_serving_batched.json).
 //!
 //! Env knobs: EFLA_BENCH_FAST=1 shrinks everything (CI smoke);
 //! EFLA_FORCE_SCALAR=1 pins the matmul dispatcher to the scalar tier.
@@ -35,6 +39,7 @@ use efla::coordinator::session::Session;
 use efla::runtime::cpu::config::family_config;
 use efla::runtime::cpu::exec::Executor;
 use efla::runtime::cpu::model::lm_loss;
+use efla::runtime::cpu::ops;
 use efla::runtime::cpu::params::ParamSet;
 use efla::runtime::CpuBackend;
 use efla::serve::engine::{run_engine, EngineShared, Event, Submission};
@@ -519,6 +524,89 @@ fn main() {
     }
     report.push(("serving_cb", cb_json));
 
+    // ---- 9. serving: slot-batched decode GEMM vs per-slot GEMV -----
+    // One decode step of the slot-batched serving path: every busy
+    // slot's row through a single class-pinned GEMM, against the
+    // retired per-slot formulation (one single-row call per busy slot,
+    // each re-packing the shared weight panel). Both run the same
+    // wrapper keyed on the slot capacity, so the bits are identical —
+    // this measures the packing/blocking amortization the batched path
+    // buys. CI's bench gate enforces the direction at >= 4 busy slots
+    // (scripts/bench_gate.py, section `serving_batched_decode`).
+    let bd_slots = 32usize;
+    let (bd_d, bd_n) = if fast() { (256usize, 768usize) } else { (512, 1536) };
+    let bd_iters = if fast() { 3 } else { 8 };
+    let bd_exec = Executor::new(1);
+    println!(
+        "## Serving slot-batched decode (max_slots={bd_slots}, d={bd_d}, n={bd_n}, 1 thread)\n"
+    );
+    let mut rng = Rng::new(0xBD);
+    let bd_a = rng.normal_vec(bd_slots * bd_d, 0.0, 0.1);
+    let bd_w = rng.normal_vec(bd_d * bd_n, 0.0, 0.1);
+    let mut bd_out = vec![0.0f32; bd_slots * bd_n];
+    let mut t = Table::new(&["busy slots", "batched tok/s", "per-slot GEMV tok/s", "speedup"]);
+    let mut bd_points = Vec::new();
+    for &busy in &[1usize, 4, 16, 32] {
+        let st_batched = bench(1, bd_iters, || {
+            ops::matmul_acc_serving_batched(
+                &bd_exec,
+                &bd_a[..busy * bd_d],
+                &bd_w,
+                &mut bd_out[..busy * bd_n],
+                busy,
+                bd_d,
+                bd_n,
+                bd_slots,
+            );
+            std::hint::black_box(&bd_out);
+        });
+        let st_gemv = bench(1, bd_iters, || {
+            for r in 0..busy {
+                ops::matmul_acc_serving_batched(
+                    &bd_exec,
+                    &bd_a[r * bd_d..(r + 1) * bd_d],
+                    &bd_w,
+                    &mut bd_out[r * bd_n..(r + 1) * bd_n],
+                    1,
+                    bd_d,
+                    bd_n,
+                    bd_slots,
+                );
+            }
+            std::hint::black_box(&bd_out);
+        });
+        let tps_batched = st_batched.per_sec(busy as f64);
+        let tps_gemv = st_gemv.per_sec(busy as f64);
+        let speedup = st_gemv.mean / st_batched.mean.max(1e-12);
+        t.row(&[
+            format!("{busy}"),
+            format!("{tps_batched:.0}"),
+            format!("{tps_gemv:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        bd_points.push(Json::obj(vec![
+            ("busy", Json::Num(busy as f64)),
+            ("batched_tok_s", Json::Num(tps_batched)),
+            ("gemv_tok_s", Json::Num(tps_gemv)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    println!("{}", t.render());
+    println!("(per-slot GEMV re-packs the weight panel once per busy slot; batched packs once)\n");
+    let bd_json = Json::obj(vec![
+        ("bench", Json::Str("serving_batched_decode".into())),
+        ("kernel", Json::Str(format!("{:?}", gemm::active_kernel()))),
+        ("max_slots", Json::Num(bd_slots as f64)),
+        ("d", Json::Num(bd_d as f64)),
+        ("n", Json::Num(bd_n as f64)),
+        ("points", Json::Arr(bd_points)),
+    ]);
+    println!("BENCH {}", bd_json.to_string());
+    if !fast() {
+        json::write_file(std::path::Path::new("BENCH_serving_batched.json"), &bd_json).unwrap();
+    }
+    report.push(("serving_batched_decode", bd_json));
+
     let out = Json::Obj(
         report.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
     );
@@ -532,6 +620,7 @@ fn main() {
         println!("json: BENCH_forward_threads.json");
         println!("json: BENCH_serving.json");
         println!("json: BENCH_serving_cb.json");
+        println!("json: BENCH_serving_batched.json");
     }
     println!("json: bench_results/kernel_throughput.json");
 }

@@ -12,19 +12,23 @@
 //!   parallel forward in one call, seeded from the slot's state (a
 //!   per-step token budget keeps decode-phase slots from starving behind
 //!   long prompts);
-//! * generating slots then advance together through ONE batched decode
-//!   per engine step, sampling from the returned logits;
+//! * generating slots then advance together through ONE slot-batched
+//!   decode per engine step (`decode_slots` gathers only the busy slots'
+//!   state rows and runs the dense projections as one packed GEMM),
+//!   sampling from the returned logits; backends without batched decode
+//!   fall back to the full fixed-batch `decode`;
 //! * finished slots are immediately refilled from the queue (continuous
 //!   batching), their state rows zeroed in place.
 //!
-//! Chunked prefill is a pure throughput optimization: for any prompt and
-//! any `prefill_chunk`, the produced logits and slot state are
-//! bit-identical to the token-at-a-time path (`prefill_chunk = 0`), which
-//! remains available as the fallback for backends without a prefill graph.
+//! Chunked prefill and slot-batched decode are pure throughput
+//! optimizations: for any prompt, any `prefill_chunk`, and any busy-slot
+//! occupancy, the produced logits and slot state are bit-identical to the
+//! token-at-a-time single-slot path — every serving matmul is pinned to
+//! the kernel class keyed on the slot capacity, never the live row count.
 //!
 //! State lives host-side between steps (row surgery is trivial there); the
-//! backend's [`Session::decode`] / [`Session::prefill`] are the only
-//! compute.
+//! backend's [`Session::decode`] / [`Session::decode_slots`] /
+//! [`Session::prefill`] are the only compute.
 
 use std::collections::{BTreeSet, VecDeque};
 use std::time::Instant;
@@ -508,32 +512,53 @@ impl<'a> Server<'a> {
             }
         }
 
-        // ---- decode phase: one batched decode ------------------------
+        // ---- decode phase: one slot-batched decode -------------------
         // Every occupied slot that didn't prefill this step joins the
         // batched decode: generating slots feed their last sampled token,
         // and mid-prompt slots (token-at-a-time mode, or budget-starved
-        // under chunked prefill) piggyback their next prompt token — the
-        // decode graph computes every row of the fixed batch anyway, and
+        // under chunked prefill) piggyback their next prompt token —
         // single-token ingestion is bit-identical to a prefill chunk, so
-        // this is progress for free.
+        // this is progress for free. Backends with `decode_slots` advance
+        // only the busy slots as one packed GEMM over their gathered
+        // rows; others fall back to the full fixed-batch decode. Either
+        // way a slot's bits are identical at any occupancy, because the
+        // serving matmuls are pinned to the slot-capacity kernel class.
         let active: Vec<usize> =
             (0..self.batch).filter(|&s| !prefilled[s] && self.slots[s].is_some()).collect();
         if processed == 0 && active.is_empty() {
             return Ok(0);
         }
         if !active.is_empty() {
-            let mut tokens = vec![0i32; self.batch];
-            for &s in &active {
-                let slot = self.slots[s].as_ref().expect("active slot is occupied");
-                tokens[s] = if slot.consumed < slot.prompt.len() {
-                    slot.prompt[slot.consumed]
-                } else {
-                    *slot.generated.last().expect("generating slot has a last token")
-                };
-            }
-            let logits = self.session.decode(&mut self.state, &tokens)?;
+            let batched = self.session.supports_batched_decode();
+            let logits = if batched {
+                let mut tokens = vec![0i32; active.len()];
+                for (i, &s) in active.iter().enumerate() {
+                    let slot = self.slots[s].as_ref().expect("active slot is occupied");
+                    tokens[i] = if slot.consumed < slot.prompt.len() {
+                        slot.prompt[slot.consumed]
+                    } else {
+                        *slot.generated.last().expect("generating slot has a last token")
+                    };
+                }
+                self.session.decode_slots(&mut self.state, &active, &tokens)?
+            } else {
+                let mut tokens = vec![0i32; self.batch];
+                for &s in &active {
+                    let slot = self.slots[s].as_ref().expect("active slot is occupied");
+                    tokens[s] = if slot.consumed < slot.prompt.len() {
+                        slot.prompt[slot.consumed]
+                    } else {
+                        *slot.generated.last().expect("generating slot has a last token")
+                    };
+                }
+                self.session.decode(&mut self.state, &tokens)?
+            };
 
-            for &s in &active {
+            for (i, &s) in active.iter().enumerate() {
+                // Batched decode returns one logits row per busy slot
+                // (row i for active[i]); the full-batch fallback returns
+                // a row per slot.
+                let row_idx = if batched { i } else { s };
                 let slot = self.slots[s].as_mut().expect("active slot is occupied");
                 slot.steps += 1;
                 let mut emitted = None;
@@ -543,14 +568,14 @@ impl<'a> Server<'a> {
                     // When the whole prompt is consumed, the logits at its
                     // last token give the first generated token.
                     if slot.consumed == slot.prompt.len() {
-                        let row = &logits.data()[s * self.vocab..(s + 1) * self.vocab];
+                        let row = &logits.data()[row_idx * self.vocab..(row_idx + 1) * self.vocab];
                         let t = Self::sample(&mut self.rng, row, slot.temperature);
                         slot.generated.push(t);
                         Self::record_ttft(&mut self.stats, slot);
                         emitted = Some(t);
                     }
                 } else {
-                    let row = &logits.data()[s * self.vocab..(s + 1) * self.vocab];
+                    let row = &logits.data()[row_idx * self.vocab..(row_idx + 1) * self.vocab];
                     let t = Self::sample(&mut self.rng, row, slot.temperature);
                     slot.generated.push(t);
                     self.stats.decode_tokens += 1;

@@ -98,6 +98,25 @@ impl Session {
         self.inner.decode(state, tokens)
     }
 
+    /// True when the backend implements the slot-batched decode path.
+    pub fn supports_batched_decode(&self) -> bool {
+        self.inner.supports_batched_decode()
+    }
+
+    /// Batched decode over the busy subset of slots: `slots` lists the
+    /// busy slot ids (strictly increasing), `tokens[i]` pairs with
+    /// `slots[i]`; advances only those slots' state rows in place and
+    /// returns logits (slots.len(), vocab), row i for `slots[i]`.
+    /// Bit-identical per slot to [`Session::decode`] at any occupancy.
+    pub fn decode_slots(
+        &self,
+        state: &mut [HostValue],
+        slots: &[usize],
+        tokens: &[i32],
+    ) -> Result<Tensor> {
+        self.inner.decode_slots(state, slots, tokens)
+    }
+
     /// True when the backend implements the chunked prefill path.
     pub fn supports_prefill(&self) -> bool {
         self.inner.supports_prefill()

@@ -4,7 +4,7 @@
 //! check` cannot see: every `unsafe` site carries a `SAFETY:` contract,
 //! unsafe stays confined to three audited modules, float orderings are
 //! NaN-total, the decode hot path never touches the allocator, and the
-//! serving path only calls row-class-pinned matmul wrappers. This module
+//! serving path only calls slot-class-pinned matmul wrappers. This module
 //! turns those conventions into machine-checked rules over the source tree
 //! (`rust/src` + `rust/tests`), shipped as the `efla-lint` bin target and
 //! exercised by `tests/lint_tool.rs` in the normal test suite.
@@ -24,9 +24,11 @@
 //!   panic or a logic bug. Use `total_cmp`.
 //! * `EFL005 no-alloc` — functions tagged as allocation-free must not
 //!   contain `Vec::new`, `vec!`, `.to_vec()`, `.clone()` or `Box::new`.
-//! * `EFL006 serving-pin` — `serve/` and `coordinator/server.rs` must not
-//!   call unpinned matmul entry points; only the `*_acc_serving` wrappers
-//!   keep row results bit-identical across batch shapes.
+//! * `EFL006 serving-pin` — `serve/` and `coordinator/server.rs` may only
+//!   call matmul entry points declared in [`SERVING_MATMUL_ALLOWLIST`]
+//!   (the slot-batched `*_acc_serving_batched` wrappers): any other
+//!   `matmul*` identifier is flagged, so new unpinned entry points are
+//!   caught without updating a ban list.
 //!
 //! Directive comments (parsed from comment text only, so rule tokens in
 //! prose or string literals never collide with code):
@@ -65,17 +67,12 @@ pub const FIXTURE_DIR: &str = "lint_fixtures";
 /// Allocation tokens banned inside no-alloc regions.
 const NO_ALLOC_TOKENS: &[&str] = &["Vec::new", "vec!", ".to_vec(", ".clone(", "Box::new"];
 
-/// Unpinned matmul entry points banned on the serving path.
-const UNPINNED_MATMULS: &[&str] = &[
-    "matmul",
-    "matmul_nt",
-    "matmul_tn",
-    "matmul_into",
-    "matmul_nt_into",
-    "matmul_tn_into",
-    "matmul_acc",
-    "matmul_nt_acc",
-];
+/// The only matmul entry points the serving path may call: the
+/// slot-batched wrappers whose kernel class is keyed on the engine's slot
+/// capacity, so row bits never depend on occupancy or batch shape. Every
+/// other identifier starting with `matmul` is flagged by EFL006.
+pub const SERVING_MATMUL_ALLOWLIST: &[&str] =
+    &["matmul_acc_serving_batched", "matmul_nt_acc_serving_batched"];
 
 /// How far below its tag comment a `fn` item may start.
 const TAG_SCAN_LINES: usize = 32;
@@ -325,6 +322,27 @@ pub fn find_token(code: &str, needle: &str) -> Option<usize> {
     None
 }
 
+/// Find the next full identifier beginning with `matmul` in `code` at or
+/// after byte offset `from`. Returns `(end, ident)` where `end` is the
+/// offset just past the identifier (resume the scan there). Occurrences
+/// embedded in a longer identifier (`my_matmul_helper`) don't count —
+/// only identifiers that *start* with `matmul`.
+fn next_matmul_ident(code: &str, from: usize) -> Option<(usize, &str)> {
+    let mut at = from;
+    while let Some(pos) = code[at..].find("matmul") {
+        let start = at + pos;
+        if code[..start].chars().next_back().is_some_and(is_ident_char) {
+            at = start + "matmul".len();
+            continue;
+        }
+        let tail =
+            code[start..].char_indices().find(|&(_, c)| !is_ident_char(c)).map(|(i, _)| start + i);
+        let end = tail.unwrap_or(code.len());
+        return Some((end, &code[start..end]));
+    }
+    None
+}
+
 #[derive(Clone, Debug, Default)]
 struct Marks {
     safety: bool,
@@ -459,10 +477,12 @@ fn scan_lines(path: &str, lines: &[Line]) -> Vec<Violation> {
             }
         }
         if serving && !allow(Rule::ServingPin) {
-            for tok in UNPINNED_MATMULS {
-                if find_token(code, tok).is_some() {
-                    push(Rule::ServingPin, serving_pin_msg(tok));
+            let mut at = 0usize;
+            while let Some((next, ident)) = next_matmul_ident(code, at) {
+                if !SERVING_MATMUL_ALLOWLIST.contains(&ident) {
+                    push(Rule::ServingPin, serving_pin_msg(ident));
                 }
+                at = next;
             }
         }
     }
@@ -474,7 +494,10 @@ fn unsafe_allowlist_msg() -> String {
 }
 
 fn serving_pin_msg(tok: &str) -> String {
-    format!("unpinned `{tok}` on the serving path: use the `*_acc_serving` wrappers")
+    format!(
+        "unpinned `{tok}` on the serving path: use the slot-batched `*_acc_serving_batched` \
+         wrappers"
+    )
 }
 
 /// Scan a single file for the per-file rules (all but `forbid-header`).
@@ -717,8 +740,41 @@ mod tests {
         );
         assert!(scan_source("rust/src/runtime/cpu/ops.rs", src).is_empty());
         let pinned = "fn step(e: &Exec, a: &[f32], b: &[f32], c: &mut [f32]) {\n    \
-                      ops::matmul_acc_serving(e, a, b, c, 2, 3);\n}\n";
+                      ops::matmul_acc_serving_batched(e, a, b, c, 1, 2, 3, 4);\n}\n";
         assert!(scan_source("rust/src/serve/engine.rs", pinned).is_empty());
+    }
+
+    #[test]
+    fn serving_pin_allowlist_is_exact_not_prefix_based() {
+        // The retired single-row wrapper name is a *prefix* of the batched
+        // one; the allowlist must match whole identifiers, so the old name
+        // fires even though a hardcoded ban list would have missed new
+        // variants.
+        let old = "fn step(e: &Exec, a: &[f32], b: &[f32], c: &mut [f32]) {\n    \
+                   ops::matmul_acc_serving(e, a, b, c, 2, 3);\n}\n";
+        let vs = scan_source("rust/src/serve/engine.rs", old);
+        assert_eq!(rules_of(&vs), vec![Rule::ServingPin]);
+        assert!(vs[0].msg.contains("matmul_acc_serving"), "{}", vs[0].msg);
+        // Any novel matmul identifier is unpinned by default.
+        let novel = "fn step() {\n    ops::matmul_fancy_new_entry(1);\n}\n";
+        assert_eq!(
+            rules_of(&scan_source("rust/src/serve/engine.rs", novel)),
+            vec![Rule::ServingPin]
+        );
+        // ...but identifiers merely *containing* matmul are not matmul
+        // entry points.
+        let contains = "fn step() {\n    let n = 3;\n    drive_my_matmul_helper(n);\n}\n";
+        assert!(scan_source("rust/src/serve/engine.rs", contains).is_empty());
+    }
+
+    #[test]
+    fn next_matmul_ident_finds_whole_identifiers() {
+        let code = "ops::matmul_nt_acc_serving_batched(x); matmul(y); my_matmul_helper(z);";
+        let (end, ident) = next_matmul_ident(code, 0).unwrap();
+        assert_eq!(ident, "matmul_nt_acc_serving_batched");
+        let (end2, ident2) = next_matmul_ident(code, end).unwrap();
+        assert_eq!(ident2, "matmul");
+        assert!(next_matmul_ident(code, end2).is_none());
     }
 
     #[test]

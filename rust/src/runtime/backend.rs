@@ -10,6 +10,8 @@
 //! * `eval`  — forward-only loss/accuracy statistics;
 //! * `decode` — one-token recurrent decode over host-resident state
 //!   (the O(1)-state serving path);
+//! * `decode_slots` — batched decode over the busy subset of serving
+//!   slots in one pass (optional; probed via `supports_batched_decode`);
 //! * `prefill` — chunked prompt ingestion for one serving slot through
 //!   the parallel forward path (optional; probed via `supports_prefill`);
 //! * `export_state` / `import_state` — checkpointing.
@@ -106,6 +108,34 @@ pub trait ModelSession {
     /// **in place** (shapes are preserved; the serving loop never copies
     /// state between steps), return logits `(decode_batch, vocab)`.
     fn decode(&self, state: &mut [HostValue], tokens: &[i32]) -> Result<Tensor>;
+
+    /// True when [`ModelSession::decode_slots`] is implemented — the
+    /// serving engine falls back to full-batch [`ModelSession::decode`]
+    /// otherwise.
+    fn supports_batched_decode(&self) -> bool {
+        false
+    }
+
+    /// Batched decode over the **busy subset** of slots: `slots` lists
+    /// the busy slot ids (strictly increasing, below `decode_batch`) and
+    /// `tokens[i]` is the next token for `slots[i]`. Advances only the
+    /// listed slots' state rows **in place** and returns logits
+    /// `(slots.len(), vocab)`, row i belonging to `slots[i]`.
+    ///
+    /// Contract: slot s's logits and state advance are bit-identical
+    /// whatever subset of slots shares the call — a solo call, any
+    /// partial occupancy, or the full batch (which matches
+    /// [`ModelSession::decode`] exactly). Batching is a pure throughput
+    /// optimization, never a numerics change.
+    fn decode_slots(
+        &self,
+        state: &mut [HostValue],
+        slots: &[usize],
+        tokens: &[i32],
+    ) -> Result<Tensor> {
+        let _ = (state, slots, tokens);
+        anyhow::bail!("{}: batched decode is not supported by this backend", self.family())
+    }
 
     /// True when [`ModelSession::prefill`] is implemented — the serving
     /// engine falls back to token-at-a-time prompt ingestion otherwise.

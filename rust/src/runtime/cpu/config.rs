@@ -87,6 +87,18 @@ impl CpuModelCfg {
     pub fn mlp_width(&self) -> usize {
         self.mlp_mult * self.d_model
     }
+
+    /// Slot capacity that keys the serving kernel class.
+    ///
+    /// Every serving-path matmul (batched decode over the busy slot set,
+    /// single-slot decode, chunked prefill) resolves its kernel class from
+    /// this one number, so a row's bits depend only on `(serve_slots, k, n)`
+    /// — never on occupancy, arrival order, or thread count. Families with
+    /// no recurrent decode graph (`decode_batch == 0`) still get a stable
+    /// key of 1.
+    pub fn serve_slots(&self) -> usize {
+        self.decode_batch.max(1)
+    }
 }
 
 /// (name, vocab, d_model, n_layers, n_heads, head_dim, chunk, batch, seq,

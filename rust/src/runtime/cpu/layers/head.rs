@@ -51,8 +51,9 @@ impl LmHead {
     /// [`logits`](Self::logits) into a caller-provided buffer
     /// (overwritten), the normalized activations drawn from the executor
     /// arena — the allocation-free serving form. The tied-head matmul is
-    /// row-class pinned so a slot's logits row is bit-identical whether it
-    /// comes from a full decode batch or a single-row prefill call.
+    /// pinned to the slot-batched class (keyed on `cfg.serve_slots()`) so
+    /// a slot's logits row is bit-identical whether it comes from a
+    /// batched decode step at any occupancy or a single-row prefill call.
     // lint: no-alloc -- normalized activations come from the arena
     pub fn logits_into(&self, ctx: &Ctx, x: &[f32], logits: &mut [f32]) {
         let (d, vocab) = (ctx.cfg.d_model, ctx.cfg.vocab);
@@ -61,14 +62,16 @@ impl LmHead {
         let mut xf = ctx.exec.take(x.len());
         self.norm_f.infer_into(ctx, x, &mut xf);
         logits.fill(0.0);
-        ops::matmul_nt_acc_serving(
+        let embed = ctx.params.tensor(self.embed);
+        ops::matmul_nt_acc_serving_batched(
             ctx.exec,
             &xf,
-            ctx.params.tensor(self.embed).data(),
+            embed.data(),
             logits,
             rows,
             d,
             vocab,
+            ctx.cfg.serve_slots(),
         );
         ctx.exec.put(xf);
     }

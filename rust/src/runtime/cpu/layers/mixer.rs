@@ -143,11 +143,13 @@ impl MixerLayer {
     /// `out` (B, d). Every temporary comes from the executor arenas, so
     /// the per-token loop is allocation-free in steady state.
     ///
-    /// Serving-arithmetic contract: projections go through the row-class
-    /// pinned [`ops::matmul_acc_serving`] and the state update through the
-    /// chunkwise kernel at [`SERVE_KERNEL_CHUNK`], so one decode step is
-    /// bit-identical to a length-1 [`MixerLayer::prefill`] — and a chain
-    /// of decode steps to a prefill over the same tokens.
+    /// Serving-arithmetic contract: projections go through the slot-batched
+    /// [`ops::matmul_acc_serving_batched`] (class keyed on
+    /// `cfg.serve_slots()`) and the state update through the chunkwise
+    /// kernel at [`SERVE_KERNEL_CHUNK`], so one decode step is
+    /// bit-identical per row at any busy-slot count, to a length-1
+    /// [`MixerLayer::prefill`] — and a chain of decode steps to a prefill
+    /// over the same tokens.
     // lint: no-alloc -- per-token decode draws every temporary from arenas
     pub fn decode_step(
         &self,
@@ -165,12 +167,17 @@ impl MixerLayer {
         let p = ctx.params;
 
         // Projections + rolling conv + SiLU, all through pooled buffers.
+        // One packed (b, d) GEMM per projection covers every busy slot.
+        let slots = cfg.serve_slots();
+        let wq = p.tensor(self.wq);
         let mut qt = ctx.exec.take(b * inner);
-        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wq).data(), &mut qt, b, d, inner);
+        ops::matmul_acc_serving_batched(ctx.exec, x, wq.data(), &mut qt, b, d, inner, slots);
+        let wk = p.tensor(self.wk);
         let mut kt = ctx.exec.take(b * inner);
-        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wk).data(), &mut kt, b, d, inner);
+        ops::matmul_acc_serving_batched(ctx.exec, x, wk.data(), &mut kt, b, d, inner, slots);
+        let wv = p.tensor(self.wv);
         let mut vt = ctx.exec.take(b * inner);
-        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wv).data(), &mut vt, b, d, inner);
+        ops::matmul_acc_serving_batched(ctx.exec, x, wv.data(), &mut vt, b, d, inner, slots);
         let mut qc = ctx.exec.take(b * inner);
         ops::conv_step_into(&qt, cache_q, p.tensor(self.conv_q).data(), b, inner, CONV_K, &mut qc);
         let mut kc = ctx.exec.take(b * inner);
@@ -196,8 +203,9 @@ impl MixerLayer {
         let q_use: &[f32] = if cfg.mixer == Mixer::DeltaNet { &qn } else { &qc };
         let k_use: &[f32] = if cfg.mixer == Mixer::DeltaNet { &kn } else { &kc };
 
+        let wb = p.tensor(self.w_beta);
         let mut b_logits = ctx.exec.take(b * h);
-        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.w_beta).data(), &mut b_logits, b, d, h);
+        ops::matmul_acc_serving_batched(ctx.exec, x, wb.data(), &mut b_logits, b, d, h, slots);
         let adecay = p.tensor(self.adecay).data();
 
         // One state update per (batch, head): both the state (width dh*dh)
@@ -254,13 +262,14 @@ impl MixerLayer {
         let mut o_norm = ctx.exec.take(b * inner);
         self.norm_out.infer_into(ctx, &o_all, &mut o_norm);
         ctx.exec.put(o_all);
-        ops::matmul_acc_serving(ctx.exec, &o_norm, p.tensor(self.wo).data(), out, b, inner, d);
+        let wo = p.tensor(self.wo);
+        ops::matmul_acc_serving_batched(ctx.exec, &o_norm, wo.data(), out, b, inner, d, slots);
         ctx.exec.put(o_norm);
     }
 
     /// Chunked prefill: run an `ctx.l`-token prompt segment of **one**
     /// sequence (`ctx.b == 1`) through the full mixer in a single batched
-    /// pass — projections as (L, d) row-class-pinned matmuls, causal conv
+    /// pass — projections as (L, d) slot-class-pinned matmuls, causal conv
     /// warm-started from (and advancing) the rolling caches, and one
     /// seeded chunkwise delta run per head, fanned out over the executor.
     /// The slot's conv caches (K-1, inner) and per-head state (H, Dh, Dh)
@@ -272,7 +281,7 @@ impl MixerLayer {
     /// prefill segments: every cross-token reduction either replays the
     /// rolling-cache arithmetic (conv) or runs the chunkwise kernel at
     /// [`SERVE_KERNEL_CHUNK`], and every matmul row is pinned to the
-    /// single-row kernel class.
+    /// slot-batched kernel class keyed on `cfg.serve_slots()`.
     // lint: no-alloc -- prefill segments reuse the same pooled buffers
     pub fn prefill(
         &self,
@@ -291,12 +300,16 @@ impl MixerLayer {
         let p = ctx.params;
 
         // Projections over the whole segment, then the warm-started conv.
+        let slots = cfg.serve_slots();
+        let wq = p.tensor(self.wq);
         let mut qt = ctx.exec.take(l * inner);
-        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wq).data(), &mut qt, l, d, inner);
+        ops::matmul_acc_serving_batched(ctx.exec, x, wq.data(), &mut qt, l, d, inner, slots);
+        let wk = p.tensor(self.wk);
         let mut kt = ctx.exec.take(l * inner);
-        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wk).data(), &mut kt, l, d, inner);
+        ops::matmul_acc_serving_batched(ctx.exec, x, wk.data(), &mut kt, l, d, inner, slots);
+        let wv = p.tensor(self.wv);
         let mut vt = ctx.exec.take(l * inner);
-        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.wv).data(), &mut vt, l, d, inner);
+        ops::matmul_acc_serving_batched(ctx.exec, x, wv.data(), &mut vt, l, d, inner, slots);
         let mut qc = ctx.exec.take(l * inner);
         ops::conv_prefill(&qt, cache_q, p.tensor(self.conv_q).data(), l, inner, CONV_K, &mut qc);
         let mut kc = ctx.exec.take(l * inner);
@@ -324,8 +337,9 @@ impl MixerLayer {
 
         // Per-token scalar gate (same expression and summation order as
         // decode_step resolves per token).
+        let wb = p.tensor(self.w_beta);
         let mut b_logits = ctx.exec.take(l * h);
-        ops::matmul_acc_serving(ctx.exec, x, p.tensor(self.w_beta).data(), &mut b_logits, l, d, h);
+        ops::matmul_acc_serving_batched(ctx.exec, x, wb.data(), &mut b_logits, l, d, h, slots);
         let adecay = p.tensor(self.adecay).data();
         let mut alpha = ctx.exec.take(l * h);
         for t in 0..l {
@@ -402,7 +416,8 @@ impl MixerLayer {
         let mut o_norm = ctx.exec.take(l * inner);
         self.norm_out.infer_into(ctx, &o_all, &mut o_norm);
         ctx.exec.put(o_all);
-        ops::matmul_acc_serving(ctx.exec, &o_norm, p.tensor(self.wo).data(), out, l, inner, d);
+        let wo = p.tensor(self.wo);
+        ops::matmul_acc_serving_batched(ctx.exec, &o_norm, wo.data(), out, l, inner, d, slots);
         ctx.exec.put(o_norm);
     }
 }

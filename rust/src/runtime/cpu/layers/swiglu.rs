@@ -50,52 +50,34 @@ impl SwiGlu {
     /// intermediates drawn from the executor arena (the allocation-free
     /// serving form — decode and chunked prefill). `out` is overwritten.
     ///
-    /// Matmuls go through the row-class pinned serving wrappers, so a
-    /// row's bits are independent of how many rows share the call: one
-    /// decode token and the same token inside a prefill chunk agree
-    /// exactly. (For row counts where the training dispatch picks the
-    /// packed kernel this can differ from [`Layer::forward`] in the last
-    /// bits — the serving paths only ever compare against themselves.)
+    /// Matmuls go through the slot-batched serving wrappers (class keyed
+    /// on `cfg.serve_slots()`), so a row's bits are independent of how
+    /// many rows share the call: one decode token, the same token inside
+    /// a batched decode step at any occupancy, and the same token inside
+    /// a prefill chunk all agree exactly. (For row counts where the
+    /// training dispatch picks a different kernel class this can differ
+    /// from [`Layer::forward`] in the last bits — the serving paths only
+    /// ever compare against themselves.)
     // lint: no-alloc -- intermediates come from the executor arena
     pub fn infer_into(&self, ctx: &Ctx, x: &[f32], out: &mut [f32]) {
         let (d, f) = (ctx.cfg.d_model, ctx.cfg.mlp_width());
+        let slots = ctx.cfg.serve_slots();
         let rows = x.len() / d;
         debug_assert_eq!(out.len(), rows * d);
+        let w_gate = ctx.params.tensor(self.w_gate);
         let mut gpre = ctx.exec.take(rows * f);
-        ops::matmul_acc_serving(
-            ctx.exec,
-            x,
-            ctx.params.tensor(self.w_gate).data(),
-            &mut gpre,
-            rows,
-            d,
-            f,
-        );
+        ops::matmul_acc_serving_batched(ctx.exec, x, w_gate.data(), &mut gpre, rows, d, f, slots);
+        let w_up = ctx.params.tensor(self.w_up);
         let mut up = ctx.exec.take(rows * f);
-        ops::matmul_acc_serving(
-            ctx.exec,
-            x,
-            ctx.params.tensor(self.w_up).data(),
-            &mut up,
-            rows,
-            d,
-            f,
-        );
+        ops::matmul_acc_serving_batched(ctx.exec, x, w_up.data(), &mut up, rows, d, f, slots);
         // gu = silu(gpre) * up, in place in gpre (same per-element
         // expression as the taped forward).
         for (g, u) in gpre.iter_mut().zip(up.iter()) {
             *g = ops::silu(*g) * *u;
         }
         out.fill(0.0);
-        ops::matmul_acc_serving(
-            ctx.exec,
-            &gpre,
-            ctx.params.tensor(self.w_down).data(),
-            out,
-            rows,
-            f,
-            d,
-        );
+        let w_down = ctx.params.tensor(self.w_down);
+        ops::matmul_acc_serving_batched(ctx.exec, &gpre, w_down.data(), out, rows, f, d, slots);
         ctx.exec.put(gpre);
         ctx.exec.put(up);
     }
@@ -223,12 +205,42 @@ mod tests {
         let x = rng.normal_vec(2 * cfg.d_model, 0.0, 1.0);
         let (y, _) = layer.forward(&ctx, &x);
         assert_eq!(y, layer.infer(&ctx, &x));
-        // The arena-backed decode form agrees bitwise, even over a dirty
-        // output buffer and a dirty arena (second call).
+        // The arena-backed serving form is pinned to the slot-batched
+        // kernel class (keyed on serve_slots, not the row count), so it
+        // agrees with the training forward only to tolerance — and is
+        // stable over a dirty output buffer and a dirty arena.
+        let mut serve = vec![7.0f32; y.len()];
+        layer.infer_into(&ctx, &x, &mut serve);
+        for (i, (&a, &b)) in y.iter().zip(serve.iter()).enumerate() {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()), "i={i}: {a} vs {b}");
+        }
         for _ in 0..2 {
             let mut out = vec![7.0f32; y.len()];
             layer.infer_into(&ctx, &x, &mut out);
-            assert_eq!(y, out);
+            assert_eq!(serve, out);
+        }
+    }
+
+    #[test]
+    fn infer_into_rows_are_occupancy_invariant() {
+        // The serving contract: a row's bits must not depend on how many
+        // rows share the infer_into call (busy-slot count), because the
+        // kernel class is keyed on cfg.serve_slots().
+        let cfg = family_config("lm_tiny_efla").unwrap();
+        let params = ParamSet::init(&cfg, 6);
+        let exec = Executor::serial();
+        let layer = SwiGlu::new(&params, 0);
+        let mut rng = Rng::new(15);
+        let slots = cfg.serve_slots();
+        let x = rng.normal_vec(slots * cfg.d_model, 0.0, 1.0);
+        let ctx_full = Ctx { cfg: &cfg, params: &params, exec: &exec, b: slots, l: 1 };
+        let mut full = vec![0.0f32; slots * cfg.d_model];
+        layer.infer_into(&ctx_full, &x, &mut full);
+        for busy in 1..=slots {
+            let ctx = Ctx { cfg: &cfg, params: &params, exec: &exec, b: busy, l: 1 };
+            let mut part = vec![0.0f32; busy * cfg.d_model];
+            layer.infer_into(&ctx, &x[..busy * cfg.d_model], &mut part);
+            assert_eq!(part[..], full[..busy * cfg.d_model], "busy={busy}");
         }
     }
 }

@@ -332,6 +332,46 @@ impl ModelSession for CpuSession {
         stack.decode(&self.cfg, &self.params, &self.exec, &mut flat, tokens)
     }
 
+    fn supports_batched_decode(&self) -> bool {
+        self.lm_stack.is_some()
+    }
+
+    fn decode_slots(
+        &self,
+        state: &mut [HostValue],
+        slots: &[usize],
+        tokens: &[i32],
+    ) -> Result<Tensor> {
+        let stack = self.lm_stack.as_ref().ok_or_else(|| {
+            anyhow!("{}: batched decode is only available for LM families", self.family)
+        })?;
+        let shapes = decode_state_shapes(&self.cfg);
+        if state.len() != shapes.len() {
+            bail!(
+                "{}: decode_slots expects {} state tensors, got {}",
+                self.family,
+                shapes.len(),
+                state.len()
+            );
+        }
+        // Same in-place borrow of the full-capacity tensors as decode();
+        // the stack gathers/scatters only the listed slots' rows.
+        let mut flat: Vec<&mut [f32]> = state
+            .iter_mut()
+            .enumerate()
+            .map(|(i, hv)| {
+                let t = hv
+                    .as_f32_mut()
+                    .map_err(|e| anyhow!("state tensor {i}: {e}"))?;
+                if t.shape() != shapes[i].as_slice() {
+                    bail!("state tensor {i}: shape {:?}, expected {:?}", t.shape(), shapes[i]);
+                }
+                Ok(t.data_mut())
+            })
+            .collect::<Result<_>>()?;
+        stack.decode_slots(&self.cfg, &self.params, &self.exec, &mut flat, slots, tokens)
+    }
+
     fn supports_prefill(&self) -> bool {
         self.lm_stack.is_some()
     }

@@ -11,6 +11,10 @@
 //! * [`clf_loss`] — pixel embedding -> blocks -> pooled classifier head;
 //! * [`LmStack::decode`] — one-token recurrent decode over in-place
 //!   state (the session prebuilds the [`LmStack`] once);
+//! * [`LmStack::decode_slots`] — batched decode over the busy subset of
+//!   serving slots: gathers their state rows into contiguous scratch and
+//!   advances them all in one pass, bit-identical per slot to
+//!   [`LmStack::decode`] at any occupancy;
 //! * [`LmStack::prefill`] — chunked prompt prefill for one serving slot,
 //!   bit-identical to the equivalent chain of decode steps.
 //!
@@ -133,6 +137,24 @@ pub fn clf_loss(
     Ok(stats)
 }
 
+/// Copy the `slots`-indexed rows (stride `row`) of `src` into the dense
+/// prefix of `dst` — the slot-gather half of batched decode.
+// lint: no-alloc -- pure slice copies on the decode hot path
+fn gather_rows(src: &[f32], slots: &[usize], row: usize, dst: &mut [f32]) {
+    for (i, &s) in slots.iter().enumerate() {
+        dst[i * row..(i + 1) * row].copy_from_slice(&src[s * row..(s + 1) * row]);
+    }
+}
+
+/// Copy the dense rows of `src` back to their `slots` positions in `dst`
+/// — the scatter half; rows not listed in `slots` are left untouched.
+// lint: no-alloc -- pure slice copies on the decode hot path
+fn scatter_rows(src: &[f32], slots: &[usize], row: usize, dst: &mut [f32]) {
+    for (i, &s) in slots.iter().enumerate() {
+        dst[s * row..(s + 1) * row].copy_from_slice(&src[i * row..(i + 1) * row]);
+    }
+}
+
 /// Per-layer recurrent state shapes, in order:
 /// cache_q, cache_k, cache_v (B, K-1, inner), s (B, H, Dk, Dv).
 pub fn decode_state_shapes(cfg: &CpuModelCfg) -> Vec<Vec<usize>> {
@@ -213,6 +235,95 @@ impl LmStack {
         self.head.logits_into(&ctx, &x, &mut logits);
         exec.put(x);
         Ok(Tensor::from_vec(&[b, cfg.vocab], logits))
+    }
+
+    /// Batched decode over the **busy subset** of serving slots. `state`
+    /// borrows the same full-capacity tensors as [`LmStack::decode`];
+    /// `slots` lists the busy slot ids (strictly increasing, all below
+    /// `cfg.decode_batch`) and `tokens[i]` is the next token for
+    /// `slots[i]`. Each layer gathers the listed slots' state rows into
+    /// contiguous arena scratch, advances all of them in one pass (the
+    /// dense projections run as one packed `(busy, d)` GEMM), and
+    /// scatters the rows back; untouched slots are never read or
+    /// written. Returns logits (busy, vocab), row i belonging to
+    /// `slots[i]`.
+    ///
+    /// Bit-exactness contract: because every serving matmul is pinned to
+    /// the slot-batched kernel class keyed on `cfg.serve_slots()`, slot
+    /// s's logits and state advance are bit-identical whatever subset of
+    /// slots shares the call — one busy slot, any partial occupancy, or
+    /// the full batch (which matches [`LmStack::decode`] exactly).
+    // lint: no-alloc -- only the returned logits buffer may allocate
+    pub fn decode_slots(
+        &self,
+        cfg: &CpuModelCfg,
+        params: &ParamSet,
+        exec: &Executor,
+        state: &mut [&mut [f32]],
+        slots: &[usize],
+        tokens: &[i32],
+    ) -> Result<Tensor> {
+        let cap = cfg.decode_batch;
+        let m = slots.len();
+        if m == 0 || m > cap {
+            bail!("decode_slots expects 1..={cap} busy slots, got {m}");
+        }
+        for w in slots.windows(2) {
+            if w[1] <= w[0] {
+                bail!("decode_slots expects strictly increasing slot ids, got {slots:?}");
+            }
+        }
+        if slots[m - 1] >= cap {
+            bail!("slot id {} out of range (capacity {cap})", slots[m - 1]);
+        }
+        if tokens.len() != m {
+            bail!("decode_slots expects {m} tokens, got {}", tokens.len());
+        }
+        if state.len() != 4 * cfg.n_layers {
+            bail!("decode_slots expects {} state tensors, got {}", 4 * cfg.n_layers, state.len());
+        }
+        let crow = (CONV_K - 1) * cfg.inner();
+        let srow = cfg.n_heads * cfg.head_dim * cfg.head_dim;
+        for (i, t) in state.iter().enumerate() {
+            let want = cap * if i % 4 == 3 { srow } else { crow };
+            if t.len() != want {
+                bail!("state tensor {i}: {} elements, expected {want}", t.len());
+            }
+        }
+
+        let ctx = Ctx { cfg, params, exec, b: m, l: 1 };
+        let mut x = exec.take(m * cfg.d_model);
+        if let Err(e) = self.embed.forward_into(&ctx, tokens, &mut x) {
+            exec.put(x);
+            return Err(e);
+        }
+        // Per-layer slot gather: the busy rows become one contiguous
+        // (m, row) block so decode_step sees exactly the layout a
+        // full-batch decode would, then scatter back in place.
+        let mut gcq = exec.take(m * crow);
+        let mut gck = exec.take(m * crow);
+        let mut gcv = exec.take(m * crow);
+        let mut gs = exec.take(m * srow);
+        for (blk, chunk) in self.blocks.iter().zip(state.chunks_mut(4)) {
+            let [cq, ck, cv, s] = chunk else { unreachable!("state is chunked by 4") };
+            gather_rows(cq, slots, crow, &mut gcq);
+            gather_rows(ck, slots, crow, &mut gck);
+            gather_rows(cv, slots, crow, &mut gcv);
+            gather_rows(s, slots, srow, &mut gs);
+            blk.decode_step(&ctx, &mut x, &mut gcq, &mut gck, &mut gcv, &mut gs);
+            scatter_rows(&gcq, slots, crow, cq);
+            scatter_rows(&gck, slots, crow, ck);
+            scatter_rows(&gcv, slots, crow, cv);
+            scatter_rows(&gs, slots, srow, s);
+        }
+        exec.put(gcq);
+        exec.put(gck);
+        exec.put(gcv);
+        exec.put(gs);
+        let mut logits = vec![0.0f32; m * cfg.vocab]; // lint: allow(no-alloc) -- returned buffer
+        self.head.logits_into(&ctx, &x, &mut logits);
+        exec.put(x);
+        Ok(Tensor::from_vec(&[m, cfg.vocab], logits))
     }
 
     /// Chunked prompt prefill for **one** serving slot: run `tokens` (a

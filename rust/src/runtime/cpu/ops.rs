@@ -430,18 +430,21 @@ pub fn matmul_nt_acc(
 }
 
 // ----------------------------------------------------------------------
-// Serving matmuls: row-class-pinned wrappers
+// Serving matmuls: slot-batched class-pinned wrappers
 // ----------------------------------------------------------------------
 
-/// out += a @ b with every row's arithmetic pinned to the **single-row**
-/// kernel class: the bits of row r depend only on (k, n) — never on how
-/// many rows share the call, which executor chunk a row lands in, or the
-/// thread count. The serving paths (one-token decode and chunked prefill)
-/// route every projection through this so a token's trajectory is
-/// bit-identical whether it is ingested one at a time inside a decode
-/// batch or as part of a single-slot prompt chunk of any size.
+/// out += a @ b with every row's arithmetic pinned to the **slot-batched**
+/// serving kernel class: the class is resolved from `slots`, the engine's
+/// configured slot capacity (`decode_batch`), so the bits of row r depend
+/// only on (slots, k, n) — never on how many busy rows share the call,
+/// which executor chunk a row lands in, or the thread count. The serving
+/// paths (batched decode over the busy slot set, single-slot decode, and
+/// chunked prefill) route every projection through this, so a token's
+/// trajectory is bit-identical whether it is ingested one token at a
+/// time, inside a batched decode step at any occupancy, or as part of a
+/// single-slot prompt chunk of any size.
 // lint: no-alloc -- the serving matmuls never touch the allocator
-pub fn matmul_acc_serving(
+pub fn matmul_acc_serving_batched(
     exec: &Executor,
     a: &[f32],
     b: &[f32],
@@ -449,11 +452,12 @@ pub fn matmul_acc_serving(
     m: usize,
     k: usize,
     n: usize,
+    slots: usize,
 ) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
-    let class = gemm::matmul_class(1, k, n);
+    let class = gemm::serving_class(slots, k, n);
     if m * k * n < PAR_MIN_FLOPS || exec.threads() == 1 {
         gemm::matmul_into_class(class, a, b, out, m, k, n);
     } else {
@@ -463,10 +467,10 @@ pub fn matmul_acc_serving(
     }
 }
 
-/// out += a @ b^T with the same single-row class pinning as
-/// [`matmul_acc_serving`] (b: (n, k) row-major).
+/// out += a @ b^T with the same slot-batched class pinning as
+/// [`matmul_acc_serving_batched`] (b: (n, k) row-major).
 // lint: no-alloc -- the serving matmuls never touch the allocator
-pub fn matmul_nt_acc_serving(
+pub fn matmul_nt_acc_serving_batched(
     exec: &Executor,
     a: &[f32],
     b: &[f32],
@@ -474,11 +478,12 @@ pub fn matmul_nt_acc_serving(
     m: usize,
     k: usize,
     n: usize,
+    slots: usize,
 ) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
-    let class = gemm::matmul_nt_class(1, k, n);
+    let class = gemm::serving_nt_class(slots, k, n);
     if m * k * n < PAR_MIN_FLOPS || exec.threads() == 1 {
         gemm::matmul_nt_into_class(class, a, b, out, m, k, n);
     } else {
@@ -694,25 +699,27 @@ mod tests {
     }
 
     #[test]
-    fn serving_matmul_rows_are_row_count_invariant() {
-        // The whole point of the serving wrappers: row r's bits must not
-        // depend on how many rows share the call (decode batch vs prompt
-        // chunk) or on the thread count.
+    fn serving_matmul_rows_are_occupancy_and_thread_invariant() {
+        // The whole point of the slot-batched serving wrappers: row r's
+        // bits must not depend on how many rows share the call (busy-slot
+        // count vs prompt chunk length) or on the thread count, as long
+        // as the configured slot capacity (`slots`) is the same.
         let mut rng = Rng::new(20);
         // 20*64*256 flops clears PAR_MIN_FLOPS, so threads > 1 exercises
         // the row-parallel split under the pinned class.
         let (k, n) = (64, 256);
-        let rows = 20usize;
-        let a = rng.normal_vec(rows * k, 0.0, 1.0);
+        let slots = 20usize;
+        let a = rng.normal_vec(slots * k, 0.0, 1.0);
         let b = rng.normal_vec(k * n, 0.0, 1.0);
         let bt = rng.normal_vec(n * k, 0.0, 1.0);
 
-        // Reference: every row computed in its own single-row call.
+        // Reference: every row computed in its own single-row call under
+        // the same slot-capacity key.
         let exec1 = Executor::serial();
-        let mut row_by_row = vec![0.0f32; rows * n];
-        let mut row_by_row_nt = vec![0.0f32; rows * n];
-        for r in 0..rows {
-            matmul_acc_serving(
+        let mut row_by_row = vec![0.0f32; slots * n];
+        let mut row_by_row_nt = vec![0.0f32; slots * n];
+        for r in 0..slots {
+            matmul_acc_serving_batched(
                 &exec1,
                 &a[r * k..(r + 1) * k],
                 &b,
@@ -720,8 +727,9 @@ mod tests {
                 1,
                 k,
                 n,
+                slots,
             );
-            matmul_nt_acc_serving(
+            matmul_nt_acc_serving_batched(
                 &exec1,
                 &a[r * k..(r + 1) * k],
                 &bt,
@@ -729,16 +737,34 @@ mod tests {
                 1,
                 k,
                 n,
+                slots,
             );
         }
-        for threads in [1usize, 2, 5] {
-            let exec = Executor::new(threads);
-            let mut full = vec![0.0f32; rows * n];
-            matmul_acc_serving(&exec, &a, &b, &mut full, rows, k, n);
-            assert_eq!(full, row_by_row, "nn threads={threads}");
-            let mut full_nt = vec![0.0f32; rows * n];
-            matmul_nt_acc_serving(&exec, &a, &bt, &mut full_nt, rows, k, n);
-            assert_eq!(full_nt, row_by_row_nt, "nt threads={threads}");
+        // Every partial occupancy (a prefix of the slot block) and the
+        // full batch must reproduce those rows bit-for-bit.
+        for busy in [1usize, 7, slots] {
+            for threads in [1usize, 2, 5] {
+                let exec = Executor::new(threads);
+                let mut full = vec![0.0f32; busy * n];
+                matmul_acc_serving_batched(&exec, &a[..busy * k], &b, &mut full, busy, k, n, slots);
+                assert_eq!(full, row_by_row[..busy * n], "nn busy={busy} threads={threads}");
+                let mut full_nt = vec![0.0f32; busy * n];
+                matmul_nt_acc_serving_batched(
+                    &exec,
+                    &a[..busy * k],
+                    &bt,
+                    &mut full_nt,
+                    busy,
+                    k,
+                    n,
+                    slots,
+                );
+                assert_eq!(
+                    full_nt,
+                    row_by_row_nt[..busy * n],
+                    "nt busy={busy} threads={threads}"
+                );
+            }
         }
     }
 

@@ -11,7 +11,11 @@
 //! slots the moment one frees **mid-flight**, finished generations leave
 //! immediately through their per-request event channel, and the prefill
 //! token budget stays shared with the PR 4 scheduler — decode-phase slots
-//! are never starved behind a new arrival's long prompt.
+//! are never starved behind a new arrival's long prompt. The decode
+//! phase itself runs slot-batched: every busy slot advances through one
+//! packed GEMM per projection (`Session::decode_slots`), with per-slot
+//! bits pinned independent of occupancy, so tokens streamed under any
+//! concurrent load match a solo run of the same request exactly.
 //!
 //! Event flow per accepted request:
 //! * [`Event::Token`] for every generated token (streaming responses

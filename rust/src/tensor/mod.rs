@@ -5,9 +5,10 @@
 //! literal<->host bridge. Not a BLAS replacement — just the operations this
 //! system needs, implemented carefully enough to be property-tested and
 //! fast enough for the reference benches. The raw matmul/dot/axpy family
-//! lives in [`gemm`] behind a runtime SIMD dispatcher (AVX2+FMA packed
-//! microkernel with a portable scalar fallback, `EFLA_FORCE_SCALAR=1` to
-//! pin the latter); [`Scratch`] is the reusable-buffer arena the hot
+//! lives in [`gemm`] behind a runtime SIMD dispatcher (packed AVX-512F /
+//! AVX2+FMA / NEON microkernels with a portable scalar fallback;
+//! `EFLA_FORCE_SCALAR=1` pins the scalar tier, `EFLA_KERNEL=<tier>` pins
+//! a specific one); [`Scratch`] is the reusable-buffer arena the hot
 //! paths thread through to stay allocation-free.
 
 pub mod gemm;
@@ -15,7 +16,7 @@ mod ops;
 mod scratch;
 
 pub use gemm::{active_kernel, axpy, dot, force_kernel, matmul_into, matmul_nt_into,
-    matmul_tn_into, Kernel, ENV_FORCE_SCALAR};
+    matmul_tn_into, Kernel, ENV_FORCE_SCALAR, ENV_KERNEL};
 pub use ops::*;
 pub use scratch::Scratch;
 

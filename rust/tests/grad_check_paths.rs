@@ -1,5 +1,6 @@
-//! Finite-difference gradient check of the full LM loss under BOTH matmul
-//! dispatch tiers, plus a tight cross-tier gradient comparison.
+//! Finite-difference gradient check of the full LM loss under every
+//! matmul dispatch tier the host supports, plus a tight cross-tier
+//! gradient comparison against the scalar leg.
 //!
 //! Deliberately a single #[test] in its own binary: it flips the global
 //! `force_kernel` hook, which would race the bit-exactness assertions in
@@ -30,7 +31,7 @@ fn grads_and_loss(
 }
 
 #[test]
-fn lm_gradients_match_finite_differences_under_both_tiers() {
+fn lm_gradients_match_finite_differences_under_every_tier() {
     let cfg = family_config("lm_tiny_efla").unwrap();
     let (b, l) = (1usize, 6usize);
     let exec = Executor::serial();
@@ -39,9 +40,9 @@ fn lm_gradients_match_finite_differences_under_both_tiers() {
     let tgts: Vec<i32> = (0..b * l).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
 
     let mut per_tier: Vec<(Kernel, Vec<Tensor>)> = Vec::new();
-    for tier in [Kernel::Scalar, Kernel::Avx2Fma] {
+    for tier in [Kernel::Scalar, Kernel::Avx2Fma, Kernel::Avx512, Kernel::Neon] {
         if gemm::force_kernel(Some(tier)) != tier {
-            continue; // host has no AVX2+FMA: only the scalar leg runs
+            continue; // host lacks this tier: its leg never runs
         }
         let mut params = ParamSet::init(&cfg, 5);
         let (grads, _) = grads_and_loss(&cfg, &params, &exec, &toks, &tgts, b, l);
@@ -79,17 +80,17 @@ fn lm_gradients_match_finite_differences_under_both_tiers() {
     }
     gemm::force_kernel(None);
 
-    // When both tiers ran, their gradients must agree tightly — the SIMD
-    // kernels only re-round, never re-derive.
-    if per_tier.len() == 2 {
-        let (_, ref gs) = per_tier[0];
-        let (_, ref gv) = per_tier[1];
+    // Every SIMD tier that ran must agree tightly with the scalar leg —
+    // the SIMD kernels only re-round, never re-derive. (per_tier[0] is
+    // always the scalar leg: forcing Scalar succeeds on every host.)
+    let (_, ref gs) = per_tier[0];
+    for (tier, gv) in per_tier[1..].iter() {
         for (i, (a, c)) in gs.iter().zip(gv.iter()).enumerate() {
             let scale = a.data().iter().fold(0.0f32, |m, x| m.max(x.abs())).max(1.0);
             let diff = a.max_abs_diff(c);
             assert!(
                 diff <= 1e-3 * scale,
-                "grad tensor {i}: scalar vs simd diff {diff} (scale {scale})"
+                "grad tensor {i}: scalar vs {tier:?} diff {diff} (scale {scale})"
             );
         }
     }

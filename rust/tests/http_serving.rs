@@ -9,6 +9,11 @@
 //! `EFLA_FORCE_SCALAR=1`), so the equivalence is pinned per kernel tier
 //! and per thread count.
 //!
+//! With the slot-batched decode path the same contract holds along the
+//! occupancy axis: a greedy request's tokens may not depend on which
+//! other requests share its decode steps, pinned below by serving the
+//! same request alone and among staggered neighbors.
+//!
 //! The rest covers the service behaviors: 429 backpressure under queue
 //! overflow, graceful drain on shutdown, duplicate-id conflict, the
 //! stats/health endpoints, and request validation.
@@ -119,6 +124,45 @@ fn http_path_matches_in_process_engine_bitwise() {
             "request {i}: HTTP + continuous batching must be bit-identical to in-process"
         );
     }
+}
+
+#[test]
+fn request_tokens_are_occupancy_invariant_over_http() {
+    // The slot-batched decode contract observed end-to-end: a greedy
+    // request must generate bit-identical tokens whether it runs alone
+    // or shares every decode step with staggered neighbors.
+    let session = tiny_session();
+    let probe = "occupancy probe request";
+    let max_new = 6usize;
+
+    let (solo, _) = with_server(&session, ServerConfig::default(), |addr| {
+        let body = generate_body(1, probe, max_new, false);
+        let resp = http::request(addr, "POST", "/v1/generate", body.as_bytes()).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.text());
+        tokens_of(&json::parse(&resp.text()).unwrap())
+    });
+
+    // Seat long-running neighbors first, then send the probe, so its
+    // decode steps ride in a partially-occupied slot block.
+    let (shared, stats) = with_server(&session, ServerConfig::default(), |addr| {
+        std::thread::scope(|s| {
+            for i in 0..3u64 {
+                s.spawn(move || {
+                    let body = generate_body(i + 10, "neighbor padding request", 48, false);
+                    let resp = http::request(addr, "POST", "/v1/generate", body.as_bytes())
+                        .unwrap();
+                    assert_eq!(resp.status, 200, "neighbor {i}: {}", resp.text());
+                });
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            let body = generate_body(1, probe, max_new, false);
+            let resp = http::request(addr, "POST", "/v1/generate", body.as_bytes()).unwrap();
+            assert_eq!(resp.status, 200, "{}", resp.text());
+            tokens_of(&json::parse(&resp.text()).unwrap())
+        })
+    });
+    assert_eq!(stats.completed, 4, "probe + 3 neighbors all complete");
+    assert_eq!(shared, solo, "greedy tokens must not depend on slot occupancy");
 }
 
 #[test]

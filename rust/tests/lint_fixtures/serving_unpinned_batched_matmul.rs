@@ -1,0 +1,10 @@
+#![forbid(unsafe_code)]
+
+// Fixture: EFL006 serving-pin, allowlist generalization. The retired
+// single-row wrapper name is a prefix of the batched one; the rule must
+// match whole identifiers against the declared allowlist, so this call
+// fires even though no hardcoded ban list ever named it.
+
+pub fn project(e: &Exec, a: &[f32], b: &[f32], out: &mut [f32]) {
+    ops::matmul_acc_serving(e, a, b, out, 1, 4, 4);
+}

@@ -1,8 +1,9 @@
 #![forbid(unsafe_code)]
 
 // Fixture: EFL006 serving-pin. Scanned under a serve/ path, the direct
-// matmul_into call must be flagged: only the `*_acc_serving` wrappers keep
-// a row's bits independent of the batch shape.
+// matmul_into call must be flagged: only the slot-batched
+// `*_acc_serving_batched` wrappers keep a row's bits independent of the
+// batch shape.
 
 pub fn project(a: &[f32], b: &[f32], out: &mut [f32]) {
     ops::matmul_into(a, b, out, 1, 4, 4);

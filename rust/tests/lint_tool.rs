@@ -69,6 +69,19 @@ fn fixture_serving_unpinned_matmul_fires_efl006() {
 }
 
 #[test]
+fn fixture_serving_unpinned_batched_matmul_fires_efl006() {
+    // The allowlist matches whole identifiers: the retired single-row
+    // wrapper (a prefix of the batched name) must still fire in serve/.
+    let vs = lint::scan_source(
+        "rust/src/serve/engine.rs",
+        &fixture("serving_unpinned_batched_matmul.rs"),
+    );
+    assert_eq!(rules(&vs), vec![Rule::ServingPin]);
+    assert_eq!(vs[0].rule.id(), "EFL006");
+    assert!(vs[0].msg.contains("`matmul_acc_serving`"), "{}", vs[0].msg);
+}
+
+#[test]
 fn fixture_clean_passes_every_rule() {
     let src = fixture("clean.rs");
     // Per-file rules under both a serving and a non-serving path.

@@ -10,6 +10,7 @@
 #![forbid(unsafe_code)]
 
 use efla::attention::{chunkwise_delta, sequential_delta, DeltaState, Gate};
+use efla::tensor::gemm;
 use efla::tensor::{
     active_kernel, axpy, dot, force_kernel, matmul_into, matmul_nt_into, matmul_tn_into, Kernel,
     Scratch, Tensor, ENV_FORCE_SCALAR,
@@ -148,6 +149,71 @@ fn scratch_buffers_come_back_zeroed() {
     // Reused allocation, shorter length: still all zeros.
     let again = sc.take(5);
     assert_eq!(again, vec![0.0f32; 5]);
+}
+
+#[test]
+fn forced_tier_audit_and_batched_class_occupancy_at_tiny_shapes() {
+    // One #[test] on purpose: the tier audit is the only place in this
+    // binary that flips the global `force_kernel` hook away from scalar,
+    // and the occupancy check's bitwise asserts below must never race a
+    // mid-flight tier switch from a sibling test thread.
+    //
+    // Part 1 — drive every SIMD tier's packed and small entry points at
+    // shapes full of remainder tiles (m % MR != 0, n % NR != 0),
+    // comparing against the naive loops at tolerance. Under Miri the
+    // forced tiers resolve to Scalar (feature detection reports the
+    // baseline) and the legs are vacuous; natively this exercises the
+    // packing remainder handling of whichever tiers the host supports.
+    let mut rng = Rng::new(46);
+    for tier in [Kernel::Avx512, Kernel::Avx2Fma, Kernel::Neon] {
+        if force_kernel(Some(tier)) != tier {
+            continue; // tier unsupported here: nothing new to audit
+        }
+        for &(m, k, n) in &[(1usize, 3usize, 2usize), (5, 4, 7), (7, 9, 5)] {
+            let a = rng.normal_vec(m * k, 0.0, 1.0);
+            let b = rng.normal_vec(k * n, 0.0, 1.0);
+            let want = naive_matmul(&a, &b, m, k, n);
+            for class in [gemm::MatmulClass::Packed, gemm::MatmulClass::Small] {
+                let mut out = vec![0.0f32; m * n];
+                gemm::matmul_into_class(class, &a, &b, &mut out, m, k, n);
+                for (i, (x, y)) in out.iter().zip(want.iter()).enumerate() {
+                    assert!((x - y).abs() < 1e-4, "{tier:?} {class:?} {m}x{k}x{n} i={i}");
+                }
+            }
+            let d = dot(&a[..k], &b[..k]);
+            let dref: f32 = a[..k].iter().zip(b[..k].iter()).map(|(x, y)| x * y).sum();
+            assert!((d - dref).abs() < 1e-4, "{tier:?} dot k={k}");
+            let mut y = b[..k].to_vec();
+            axpy(0.5, &a[..k], &mut y);
+            for i in 0..k {
+                assert!((y[i] - (b[i] + 0.5 * a[i])).abs() < 1e-5, "{tier:?} axpy i={i}");
+            }
+        }
+    }
+    pin_scalar(); // back to the tier every other test in this binary expects
+
+    // Part 2 — the slot-batched serving contract at Miri-friendly sizes:
+    // with the class keyed on the slot capacity, any busy prefix of the
+    // slot block reproduces the full batch's rows bit-for-bit.
+    let (slots, k, n) = (4usize, 3, 2);
+    let mut rng = Rng::new(45);
+    let a = rng.normal_vec(slots * k, 0.0, 1.0);
+    let b = rng.normal_vec(k * n, 0.0, 1.0);
+    let bt = rng.normal_vec(n * k, 0.0, 1.0);
+    let class = gemm::serving_class(slots, k, n);
+    let nt_class = gemm::serving_nt_class(slots, k, n);
+    let mut full = vec![0.0f32; slots * n];
+    gemm::matmul_into_class(class, &a, &b, &mut full, slots, k, n);
+    let mut full_nt = vec![0.0f32; slots * n];
+    gemm::matmul_nt_into_class(nt_class, &a, &bt, &mut full_nt, slots, k, n);
+    for busy in 1..=slots {
+        let mut part = vec![0.0f32; busy * n];
+        gemm::matmul_into_class(class, &a[..busy * k], &b, &mut part, busy, k, n);
+        assert_eq!(part[..], full[..busy * n], "nn busy={busy}");
+        let mut part_nt = vec![0.0f32; busy * n];
+        gemm::matmul_nt_into_class(nt_class, &a[..busy * k], &bt, &mut part_nt, busy, k, n);
+        assert_eq!(part_nt[..], full_nt[..busy * n], "nt busy={busy}");
+    }
 }
 
 #[test]

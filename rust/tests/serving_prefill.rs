@@ -3,6 +3,12 @@
 //! logits and the slot state it produces are **bit-identical** to feeding
 //! the prompt one token at a time through the decode path.
 //!
+//! The slot-batched decode entry (`decode_slots`) carries the same
+//! contract along the occupancy axis: with every serving matmul keyed on
+//! the slot capacity, a slot's logits and state rows must not depend on
+//! which other slots decode alongside it. The occupancy matrix below pins
+//! that bit-for-bit across sparse, partial, full, and churning patterns.
+//!
 //! CI runs this suite under the default environment, `EFLA_NUM_THREADS=1`
 //! and `EFLA_FORCE_SCALAR=1` (the existing matrix legs), so the
 //! equivalence is pinned per kernel tier and per thread count; the
@@ -119,6 +125,164 @@ fn prefill_is_thread_count_invariant() {
     let l4 = s4.prefill(&mut st4, 0, &toks).unwrap();
     assert_eq!(l1.data(), l4.data(), "prefill logits must be thread-count invariant");
     assert_eq!(slot_rows(&st1, b, 0), slot_rows(&st4, b, 0));
+
+    // Batched decode over the warmed slot is thread-count invariant too.
+    let all: Vec<usize> = (0..b).collect();
+    let next = vec![3i32; b];
+    let d1 = s1.decode_slots(&mut st1, &all, &next).unwrap();
+    let d4 = s4.decode_slots(&mut st4, &all, &next).unwrap();
+    assert_eq!(d1.data(), d4.data(), "batched decode logits must be thread-count invariant");
+    assert_eq!(st1, st4, "batched decode state must be thread-count invariant");
+}
+
+/// Warm every slot with a distinct prompt through the prefill path;
+/// returns the warmed state and one greedy next token per slot.
+fn warm_state(session: &Session, seed: u64) -> (Vec<HostValue>, Vec<i32>) {
+    let b = session.decode_batch().unwrap();
+    let vocab = session.vocab().unwrap();
+    let mut rng = Rng::new(seed);
+    let mut state = session.decode_state().unwrap();
+    let mut next = vec![0i32; b];
+    for s in 0..b {
+        let toks = prompt(&mut rng, 8 + 3 * s, vocab);
+        let logits = session.prefill(&mut state, s, &toks).unwrap();
+        let row = logits.data();
+        let mut best = 0usize;
+        for j in 1..row.len() {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        next[s] = best as i32;
+    }
+    (state, next)
+}
+
+/// Occupancy matrix: a slot's decode bits must not depend on which other
+/// slots share the step. Every pattern is compared row-for-row against
+/// the slot decoding alone from the same warmed state, and the state
+/// rows of the idle slots must come through untouched.
+fn check_occupancy_matrix(family: &str) {
+    let backend = CpuBackend::new();
+    let session = Session::init(&backend, family, 7).unwrap();
+    assert!(session.supports_batched_decode(), "{family}: LM backends expose batched decode");
+    let b = session.decode_batch().unwrap();
+    let vocab = session.vocab().unwrap();
+    assert!(b >= 4, "{family}: occupancy patterns assume at least 4 slots");
+    let (base, next) = warm_state(&session, 71);
+
+    // Solo references: each slot decoded alone from the warmed state.
+    let mut solo_logits = Vec::new();
+    let mut solo_rows = Vec::new();
+    for s in 0..b {
+        let mut st = base.clone();
+        let l = session.decode_slots(&mut st, &[s], &[next[s]]).unwrap();
+        solo_logits.push(l.data().to_vec());
+        solo_rows.push(slot_rows(&st, b, s));
+    }
+
+    let patterns: &[&[usize]] = &[&[0], &[2], &[0, 3], &[1, 2, 3], &[0, 1, 2, 3]];
+    for pat in patterns {
+        let mut st = base.clone();
+        let toks: Vec<i32> = pat.iter().map(|&s| next[s]).collect();
+        let logits = session.decode_slots(&mut st, pat, &toks).unwrap();
+        for (i, &s) in pat.iter().enumerate() {
+            assert_eq!(
+                &logits.data()[i * vocab..(i + 1) * vocab],
+                &solo_logits[s][..],
+                "{family}: pattern {pat:?} slot {s} logits must match solo decode bitwise"
+            );
+            assert_eq!(
+                slot_rows(&st, b, s),
+                solo_rows[s],
+                "{family}: pattern {pat:?} slot {s} state must match solo decode bitwise"
+            );
+        }
+        for s in (0..b).filter(|s| !pat.contains(s)) {
+            assert_eq!(
+                slot_rows(&st, b, s),
+                slot_rows(&base, b, s),
+                "{family}: pattern {pat:?} idle slot {s} state must be untouched"
+            );
+        }
+    }
+
+    // Full occupancy must also be bit-identical to the legacy dense-batch
+    // decode entry — the batched path is a re-plumbing, not a re-derivation.
+    let all: Vec<usize> = (0..b).collect();
+    let mut st_batched = base.clone();
+    let lb = session.decode_slots(&mut st_batched, &all, &next).unwrap();
+    let mut st_legacy = base.clone();
+    let ll = session.decode(&mut st_legacy, &next).unwrap();
+    assert_eq!(lb.data(), ll.data(), "{family}: full-occupancy logits vs legacy decode");
+    assert_eq!(st_batched, st_legacy, "{family}: full-occupancy state vs legacy decode");
+}
+
+#[test]
+fn batched_decode_is_occupancy_invariant_efla() {
+    check_occupancy_matrix("lm_tiny_efla");
+}
+
+#[test]
+fn batched_decode_is_occupancy_invariant_deltanet() {
+    check_occupancy_matrix("lm_tiny_deltanet");
+}
+
+#[test]
+fn batched_decode_churn_matches_solo_trajectories() {
+    // Slots join and leave mid-stream — the arrival/departure order seen
+    // by a continuous-batching server. Every step a slot participates in
+    // must reproduce its solo trajectory bit-for-bit.
+    let backend = CpuBackend::new();
+    let session = Session::init(&backend, "lm_tiny_efla", 7).unwrap();
+    let b = session.decode_batch().unwrap();
+    let vocab = session.vocab().unwrap();
+    assert!(b >= 4, "churn schedule assumes at least 4 slots");
+    let (base, _) = warm_state(&session, 73);
+    let schedule: &[&[usize]] = &[&[0, 1], &[0, 1, 2], &[1, 2], &[1, 2, 3], &[3], &[0, 3]];
+
+    // Per-slot token sequences, one token per step the slot is active.
+    let mut rng = Rng::new(19);
+    let seq: Vec<Vec<i32>> = (0..b)
+        .map(|s| {
+            let n = schedule.iter().filter(|a| a.contains(&s)).count();
+            prompt(&mut rng, n, vocab)
+        })
+        .collect();
+
+    // Solo trajectories: each slot decoded alone, step by step.
+    let mut solo: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut solo_state: Vec<Vec<Vec<f32>>> = Vec::new();
+    for s in 0..b {
+        let mut st = base.clone();
+        let mut steps = Vec::new();
+        for &t in &seq[s] {
+            let l = session.decode_slots(&mut st, &[s], &[t]).unwrap();
+            steps.push(l.data().to_vec());
+        }
+        solo.push(steps);
+        solo_state.push(slot_rows(&st, b, s));
+    }
+
+    // The same trajectories interleaved through one shared slot block.
+    let mut st = base.clone();
+    let mut used = vec![0usize; b];
+    for active in schedule {
+        let toks: Vec<i32> = active.iter().map(|&s| seq[s][used[s]]).collect();
+        let logits = session.decode_slots(&mut st, active, &toks).unwrap();
+        for (i, &s) in active.iter().enumerate() {
+            assert_eq!(
+                &logits.data()[i * vocab..(i + 1) * vocab],
+                &solo[s][used[s]][..],
+                "slot {s} step {} must match its solo trajectory bitwise",
+                used[s]
+            );
+            used[s] += 1;
+        }
+    }
+    for s in 0..b {
+        assert_eq!(slot_rows(&st, b, s), solo_state[s], "slot {s} final state after churn");
+    }
 }
 
 /// Greedy-serve a fixed request mix and return the generated tokens.

@@ -4,8 +4,8 @@
 //! `matmul_tn_into`) plus `dot`/`axpy` against the portable scalar tier on
 //! random rectangular shapes — full tiles, remainder rows/columns, and
 //! depths that cross the packed kernel's KC blocking — at ≤ 1e-5 max abs
-//! diff, and runs the chunkwise-vs-sequential golden comparison under both
-//! explicitly forced tiers.
+//! diff, and runs the chunkwise-vs-sequential golden comparison under
+//! every explicitly forced tier the host supports.
 //!
 //! These tolerance-based comparisons hold whichever tier the dispatcher
 //! resolves to, so the one test that flips the global `force_kernel` hook
@@ -82,14 +82,14 @@ fn dot_axpy_match_scalar_tier() {
 }
 
 /// The chunkwise-vs-sequential golden comparison must hold at existing
-/// tolerances under both tiers — the arena-backed `_into` kernels and the
+/// tolerances under every tier — the arena-backed `_into` kernels and the
 /// SIMD matmuls change rounding, never semantics.
 #[test]
-fn chunkwise_golden_holds_under_both_forced_tiers() {
-    for tier in [Kernel::Scalar, Kernel::Avx2Fma] {
+fn chunkwise_golden_holds_under_every_forced_tier() {
+    for tier in [Kernel::Scalar, Kernel::Avx2Fma, Kernel::Avx512, Kernel::Neon] {
         let active = gemm::force_kernel(Some(tier));
         if active != tier {
-            continue; // host has no AVX2+FMA: the SIMD leg is vacuous
+            continue; // host lacks this tier: its leg is vacuous
         }
         let mut rng = Rng::new(7003);
         let (l, d) = (50, 16);

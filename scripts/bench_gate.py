@@ -6,10 +6,10 @@ Reads the machine-readable ``BENCH {...}`` JSON lines emitted by
 stdin or in the file given as argv[1]) and fails the job when a
 performance invariant regresses:
 
-* ``gemm_gflops``      — on an AVX2 host the dispatched GEMM tier must
-  not be slower than the scalar tier at the largest benched size (the
-  whole point of the microkernel); smaller sizes only warn, since
-  fast-mode iteration counts are noisy.
+* ``gemm_gflops``      — on a host with a SIMD tier (AVX-512, AVX2+FMA
+  or NEON) the dispatched GEMM must not be slower than the scalar tier
+  at the largest benched size (the whole point of the microkernel);
+  smaller sizes only warn, since fast-mode iteration counts are noisy.
 * ``serving_prefill``  — chunked parallel prefill must ingest prompts
   strictly faster than token-at-a-time decoding for every benched
   prompt length >= 64 (the serving acceptance bar).
@@ -17,6 +17,11 @@ performance invariant regresses:
   must beat sequential one-request-at-a-time serving on aggregate
   tokens/s (the decode graph computes every slot row regardless, so
   a solo request wastes (batch-1)/batch of every step).
+* ``serving_batched_decode`` — the slot-batched decode GEMM must be at
+  least as fast as the per-slot single-row formulation at every point
+  with >= 4 busy slots (the batched path packs the shared weight panel
+  once instead of once per slot); busy=1 only warns, the two calls are
+  the same work there.
 
 Exit code 0 = all gates pass, 1 = regression, 2 = malformed input.
 """
@@ -39,7 +44,7 @@ def gate_gemm(obj: dict) -> None:
     points = obj.get("points", [])
     if not points:
         fail("gemm_gflops: no measurement points")
-    if kernel != "Avx2Fma":
+    if kernel not in ("Avx512", "Avx2Fma", "Neon"):
         warn(f"gemm_gflops: dispatched tier is {kernel!r}, skipping speedup gate")
         return
     largest = max(points, key=lambda p: p.get("size", 0))
@@ -80,6 +85,25 @@ def gate_serving_cb(obj: dict) -> None:
     print(f"gate ok: {line} ({cb / seq:.2f}x)")
 
 
+def gate_serving_batched(obj: dict) -> None:
+    points = obj.get("points", [])
+    if not points:
+        fail("serving_batched_decode: no measurement points")
+    for p in points:
+        busy = p.get("busy", 0)
+        batched = p.get("batched_tok_s", 0.0)
+        gemv = p.get("gemv_tok_s", 0.0)
+        line = f"batched decode busy={busy}: batched {batched:.0f} tok/s vs per-slot GEMV {gemv:.0f} tok/s"
+        if batched <= 0.0 or gemv <= 0.0:
+            fail(f"{line} — missing throughput measurements")
+        if busy >= 4 and batched < gemv:
+            fail(f"{line} — batched GEMM must not lose to per-slot GEMV at >= 4 slots")
+        if batched < gemv:
+            warn(f"{line} (busy=1 is the same work both ways, not fatal)")
+        else:
+            print(f"gate ok: {line}")
+
+
 def main() -> None:
     src = open(sys.argv[1]) if len(sys.argv) > 1 else sys.stdin
     seen = set()
@@ -102,7 +126,9 @@ def main() -> None:
             gate_serving(obj)
         elif name == "serving_cb":
             gate_serving_cb(obj)
-    for required in ("gemm_gflops", "serving_prefill", "serving_cb"):
+        elif name == "serving_batched_decode":
+            gate_serving_batched(obj)
+    for required in ("gemm_gflops", "serving_prefill", "serving_cb", "serving_batched_decode"):
         if required not in seen:
             fail(f"required bench section {required!r} missing from BENCH output")
     print("all bench gates passed")
