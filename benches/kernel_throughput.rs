@@ -18,8 +18,9 @@
 //!      root-level BENCH_serving.json);
 //!   8. serving continuous batching — staggered arrivals through the
 //!      engine loop vs sequential one-request-at-a-time: aggregate
-//!      tok/s, e2e/queue-wait percentiles (writes the root-level
-//!      BENCH_serving_cb.json);
+//!      tok/s, e2e/queue-wait percentiles, plus the replica router
+//!      (1 vs 3 in-process replicas behind `efla route`, bit-identical
+//!      outputs; writes the root-level BENCH_serving_cb.json);
 //!   9. serving slot-batched decode — all busy slots' rows through one
 //!      class-pinned packed GEMM vs the retired per-slot single-row
 //!      formulation at 1/4/16/32 busy slots (writes the root-level
@@ -28,8 +29,8 @@
 //! Env knobs: EFLA_BENCH_FAST=1 shrinks everything (CI smoke);
 //! EFLA_FORCE_SCALAR=1 pins the matmul dispatcher to the scalar tier.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
 use efla::attention::{alpha_efla, chunkwise_delta, gates, sequential_delta, Gate};
@@ -43,6 +44,9 @@ use efla::runtime::cpu::ops;
 use efla::runtime::cpu::params::ParamSet;
 use efla::runtime::CpuBackend;
 use efla::serve::engine::{run_engine, EngineShared, Event, Submission};
+use efla::serve::http;
+use efla::serve::router::{Router, RouterConfig};
+use efla::serve::Frontend;
 use efla::tensor::{gemm, matmul_into, Tensor};
 use efla::util::bench::{bench, fmt_secs, Stats, Table};
 use efla::util::json::{self, Json};
@@ -356,7 +360,8 @@ fn main() {
         for id in 0..n_req {
             let prompt: Vec<i32> =
                 (0..plen).map(|_| rng.below(vocab as u64) as i32).collect();
-            server.submit(GenRequest { id, prompt, max_new: 8, temperature: 0.0 }).unwrap();
+            let req = GenRequest { id, prompt, max_new: 8, temperature: 0.0, deadline: None };
+            server.submit(req).unwrap();
         }
         server.run_to_completion().unwrap();
         (
@@ -430,7 +435,7 @@ fn main() {
     for id in 0..cb_req {
         let mut server = Server::with_config(&session, 7, ServerConfig::default()).unwrap();
         let prompt = mk_prompt(id);
-        let req = GenRequest { id, prompt, max_new: cb_max_new, temperature: 0.0 };
+        let req = GenRequest { id, prompt, max_new: cb_max_new, temperature: 0.0, deadline: None };
         server.submit(req).unwrap();
         server.run_to_completion().unwrap();
         seq_tokens += server.stats.tokens_processed;
@@ -450,7 +455,13 @@ fn main() {
             for id in 0..cb_req {
                 let (ev_tx, ev_rx) = mpsc::channel();
                 let prompt = mk_prompt(id);
-                let req = GenRequest { id, prompt, max_new: cb_max_new, temperature: 0.0 };
+                let req = GenRequest {
+                    id,
+                    prompt,
+                    max_new: cb_max_new,
+                    temperature: 0.0,
+                    deadline: None,
+                };
                 let sub =
                     Submission { req, submitted: Instant::now(), stream: false, events: ev_tx };
                 cb_tx.send(sub).unwrap();
@@ -500,6 +511,127 @@ fn main() {
     ]);
     println!("{}", t.render());
     println!("(continuous batching speedup: {cb_speedup:.2}x on aggregate tokens/s)\n");
+
+    // ---- 8b. serving: router over 1 vs 3 in-process replicas -------
+    // The routing claim on top of continuous batching: a replica holds
+    // no KV cache, so adding one adds its full decode capacity. Route
+    // the same concurrent load through `efla route`-style topologies of
+    // 1 and 3 identically seeded single-thread replicas; the bench gate
+    // (scripts/bench_gate.py, `serving_cb.router`) enforces that the
+    // 3-replica aggregate beats 1 replica, and the greedy outputs are
+    // asserted bit-identical between the two topologies.
+    let rt_requests = if fast() { 9u64 } else { 18 };
+    let rt_plen = if fast() { 24usize } else { 48 };
+    let rt_max_new = if fast() { 6usize } else { 12 };
+    let rt_clients = 6usize;
+    println!(
+        "## Serving router ({rt_requests} requests, {rt_clients} clients, \
+         1 vs 3 single-thread replicas)\n"
+    );
+    let run_router = |n_replicas: usize| -> (f64, Vec<(u64, Vec<i64>)>) {
+        let mut frontends = Vec::new();
+        let mut addrs = Vec::new();
+        let mut rep_flags = Vec::new();
+        for _ in 0..n_replicas {
+            let fe = Frontend::bind("127.0.0.1:0").unwrap();
+            addrs.push(fe.local_addr().unwrap().to_string());
+            rep_flags.push(fe.shutdown_flag());
+            frontends.push(fe);
+        }
+        let rcfg = RouterConfig { health_interval_ms: 50, seed: 7, ..RouterConfig::default() };
+        let router = Router::bind("127.0.0.1:0", addrs, rcfg).unwrap();
+        let raddr = router.local_addr().unwrap().to_string();
+        let router_flag = router.shutdown_flag();
+        std::thread::scope(|s| {
+            for fe in frontends {
+                s.spawn(move || {
+                    let backend = CpuBackend::with_threads(1);
+                    let session = Session::init(&backend, "lm_tiny_efla", 42).unwrap();
+                    fe.run(&session, ServerConfig::default(), 7).unwrap();
+                });
+            }
+            s.spawn(move || router.run().unwrap());
+            // Readiness: every replica must have answered a health probe.
+            loop {
+                if let Ok(resp) = http::request(&raddr, "GET", "/stats", b"") {
+                    let j = json::parse(&resp.text()).unwrap();
+                    let reps = j.get("replicas").as_arr().unwrap_or(&[]);
+                    let live = reps
+                        .iter()
+                        .filter(|r| r.get("probes_ok").as_f64().unwrap_or(0.0) >= 1.0)
+                        .count();
+                    if live == n_replicas {
+                        break;
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            let generate = |id: u64| -> Vec<i64> {
+                let mut rng = Rng::new(0xD00 ^ id);
+                let toks: Vec<String> =
+                    (0..rt_plen).map(|_| rng.below(vocab as u64).to_string()).collect();
+                let body = format!(
+                    "{{\"id\": {id}, \"tokens\": [{}], \"max_tokens\": {rt_max_new}}}",
+                    toks.join(",")
+                );
+                loop {
+                    match http::request(&raddr, "POST", "/v1/generate", body.as_bytes()) {
+                        Ok(resp) if resp.status == 200 => {
+                            let j = json::parse(&resp.text()).unwrap();
+                            let arr = j.get("tokens").as_arr().expect("tokens array");
+                            return arr.iter().map(|t| t.as_i64().unwrap()).collect();
+                        }
+                        // Saturated or still warming up: back off and retry.
+                        Ok(resp) if resp.status == 429 || resp.status == 503 => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        Ok(resp) => panic!("router answered {}: {}", resp.status, resp.text()),
+                        Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                    }
+                }
+            };
+            let t0 = Instant::now();
+            let next = AtomicU64::new(0);
+            let outs: Mutex<Vec<(u64, Vec<i64>)>> = Mutex::new(Vec::new());
+            std::thread::scope(|cs| {
+                for _ in 0..rt_clients {
+                    cs.spawn(|| loop {
+                        let id = next.fetch_add(1, Ordering::SeqCst);
+                        if id >= rt_requests {
+                            break;
+                        }
+                        let toks = generate(id);
+                        outs.lock().unwrap().push((id, toks));
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            router_flag.store(true, Ordering::SeqCst);
+            for f in &rep_flags {
+                f.store(true, Ordering::SeqCst);
+            }
+            let mut outs = outs.into_inner().unwrap();
+            outs.sort();
+            let total: usize = outs.iter().map(|(_, toks)| toks.len()).sum();
+            (total as f64 / wall.max(1e-9), outs)
+        })
+    };
+    let (rt_tps_1, rt_out_1) = run_router(1);
+    let (rt_tps_3, rt_out_3) = run_router(3);
+    assert_eq!(
+        rt_out_1, rt_out_3,
+        "greedy outputs must be bit-identical through 1- and 3-replica topologies"
+    );
+    let mut t = Table::new(&["topology", "aggregate tok/s", "speedup"]);
+    t.row(&["router + 1 replica".into(), format!("{rt_tps_1:.0}"), "1.00x".into()]);
+    t.row(&[
+        "router + 3 replicas".into(),
+        format!("{rt_tps_3:.0}"),
+        format!("{:.2}x", rt_tps_3 / rt_tps_1.max(1e-9)),
+    ]);
+    println!("{}", t.render());
+    println!("(outputs bit-identical across topologies; single-thread replicas)\n");
+
     let cb_json = Json::obj(vec![
         ("bench", Json::Str("serving_cb".into())),
         ("kernel", Json::Str(format!("{:?}", gemm::active_kernel()))),
@@ -517,6 +649,18 @@ fn main() {
         ("p50_queue_wait_ms", Json::Num(qw_stats.p50 * 1e3)),
         ("p95_queue_wait_ms", Json::Num(qw_stats.p95 * 1e3)),
         ("mean_ttft_ms", Json::Num(cb_stats.mean_ttft_secs() * 1e3)),
+        (
+            "router",
+            Json::obj(vec![
+                ("requests", Json::Num(rt_requests as f64)),
+                ("clients", Json::Num(rt_clients as f64)),
+                ("prompt_len", Json::Num(rt_plen as f64)),
+                ("max_new", Json::Num(rt_max_new as f64)),
+                ("replicas_1_tok_s", Json::Num(rt_tps_1)),
+                ("replicas_3_tok_s", Json::Num(rt_tps_3)),
+                ("speedup", Json::Num(rt_tps_3 / rt_tps_1.max(1e-9))),
+            ]),
+        ),
     ]);
     println!("BENCH {}", cb_json.to_string());
     if !fast() {

@@ -64,6 +64,7 @@ fn main() -> Result<()> {
             prompt: "the naba of ".bytes().map(|b| b as i32).collect(),
             max_new: 16,
             temperature: 0.7,
+            deadline: None,
         })?;
     }
     let results = server.run_to_completion()?;

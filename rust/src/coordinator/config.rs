@@ -72,6 +72,21 @@ pub struct RunConfig {
     /// Serving: seconds the front end drains in-flight requests after
     /// SIGTERM/SIGINT before giving up.
     pub drain_timeout_secs: f64,
+    /// Serving: default per-request deadline in ms applied when a request
+    /// carries no `timeout_ms` of its own (0 = none). The engine abandons
+    /// the slot and answers `finish_reason: "timeout"` at the deadline.
+    pub request_timeout_ms: u64,
+    /// Routing (`efla route`): in-process replica count, each an engine
+    /// loop on its own thread with its own identically trained session.
+    pub replicas: usize,
+    /// Routing: comma-separated remote engine addresses
+    /// (`host:port,host:port`). Non-empty ⇒ route to these instead of
+    /// spawning in-process replicas.
+    pub backends: String,
+    /// Fault injection spec (`--fault` / `EFLA_FAULT`): the
+    /// [`crate::serve::fault::FaultSpec`] grammar; for `efla route`, the
+    /// scoped per-replica grammar (`idx:spec;...`). Empty = no faults.
+    pub fault: String,
     pub artifact_dir: PathBuf,
     pub out_dir: PathBuf,
     /// Optional checkpoint interval (0 = none).
@@ -96,6 +111,10 @@ impl Default for RunConfig {
             listen: String::new(),
             queue_depth: 64,
             drain_timeout_secs: 5.0,
+            request_timeout_ms: 0,
+            replicas: 2,
+            backends: String::new(),
+            fault: String::new(),
             artifact_dir: PathBuf::from("artifacts"),
             out_dir: PathBuf::from("runs"),
             ckpt_every: 0,
@@ -147,6 +166,13 @@ impl RunConfig {
                 .get("drain_timeout_secs")
                 .as_f64()
                 .unwrap_or(d.drain_timeout_secs),
+            request_timeout_ms: j
+                .get("request_timeout_ms")
+                .as_usize()
+                .unwrap_or(d.request_timeout_ms as usize) as u64,
+            replicas: j.get("replicas").as_usize().unwrap_or(d.replicas),
+            backends: j.get("backends").as_str().unwrap_or(&d.backends).to_string(),
+            fault: j.get("fault").as_str().unwrap_or(&d.fault).to_string(),
             artifact_dir: PathBuf::from(
                 j.get("artifact_dir").as_str().unwrap_or("artifacts"),
             ),
@@ -172,6 +198,10 @@ impl RunConfig {
             ("listen", Json::Str(self.listen.clone())),
             ("queue_depth", Json::Num(self.queue_depth as f64)),
             ("drain_timeout_secs", Json::Num(self.drain_timeout_secs)),
+            ("request_timeout_ms", Json::Num(self.request_timeout_ms as f64)),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("backends", Json::Str(self.backends.clone())),
+            ("fault", Json::Str(self.fault.clone())),
             (
                 "artifact_dir",
                 Json::Str(self.artifact_dir.to_string_lossy().into_owned()),
@@ -245,6 +275,27 @@ mod tests {
         assert_eq!(c2.listen, "127.0.0.1:0");
         assert_eq!(c2.queue_depth, 3);
         assert!((c2.drain_timeout_secs - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn router_knobs_roundtrip_and_default() {
+        let d = RunConfig::default();
+        assert_eq!(d.request_timeout_ms, 0);
+        assert_eq!(d.replicas, 2);
+        assert_eq!(d.backends, "");
+        assert_eq!(d.fault, "");
+        let c = RunConfig {
+            request_timeout_ms: 1500,
+            replicas: 3,
+            backends: "127.0.0.1:8001,127.0.0.1:8002".into(),
+            fault: "0:stall_ms=100;seed=7".into(),
+            ..RunConfig::default()
+        };
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.request_timeout_ms, 1500);
+        assert_eq!(c2.replicas, 3);
+        assert_eq!(c2.backends, "127.0.0.1:8001,127.0.0.1:8002");
+        assert_eq!(c2.fault, "0:stall_ms=100;seed=7");
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //! [`Session::prefill`] are the only compute.
 
 use std::collections::{BTreeSet, VecDeque};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -60,6 +60,11 @@ pub struct ServerConfig {
     /// accepted queued requests) to finish after a shutdown signal before
     /// giving up on the drain.
     pub drain_timeout_secs: f64,
+    /// Default per-request deadline in milliseconds, applied at
+    /// [`Server::submit_at`] to requests that did not carry their own
+    /// [`GenRequest::deadline`]. 0 = no default deadline (a request
+    /// without one can hold a slot until `max_new` tokens are produced).
+    pub default_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -69,6 +74,7 @@ impl Default for ServerConfig {
             prefill_token_budget: 256,
             queue_depth: 64,
             drain_timeout_secs: 5.0,
+            default_timeout_ms: 0,
         }
     }
 }
@@ -113,6 +119,30 @@ pub struct GenRequest {
     pub max_new: usize,
     /// 0.0 = greedy; otherwise softmax temperature sampling.
     pub temperature: f32,
+    /// Absolute deadline: past this instant the engine stops working on
+    /// the request (whether still queued or holding a slot) and finishes
+    /// it with [`FinishReason::Timeout`] and whatever tokens exist. `None`
+    /// falls back to [`ServerConfig::default_timeout_ms`].
+    pub deadline: Option<Instant>,
+}
+
+/// Why a generation finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Produced its full `max_new` tokens.
+    Length,
+    /// Deadline expired while queued or mid-generation; the result carries
+    /// the tokens produced so far (possibly none).
+    Timeout,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Timeout => "timeout",
+        }
+    }
 }
 
 /// A completed generation.
@@ -128,6 +158,8 @@ pub struct GenResult {
     pub queue_wait_secs: f64,
     /// Wall seconds from submission to completion.
     pub e2e_secs: f64,
+    /// Why the engine released the request.
+    pub finish_reason: FinishReason,
 }
 
 /// One freshly generated token, in engine-step order. Captured only when
@@ -149,6 +181,7 @@ struct Slot {
     temperature: f32,
     steps: usize,
     submitted: Instant,
+    deadline: Option<Instant>,
     ttft_secs: f64,
     queue_wait_secs: f64,
 }
@@ -181,6 +214,9 @@ pub struct ServerStats {
     /// Sum of per-request end-to-end latency (submission -> completion),
     /// over `completed`.
     pub e2e_sum_secs: f64,
+    /// Requests finished with [`FinishReason::Timeout`] (deadline expired
+    /// in the queue or mid-generation). Also counted in `completed`.
+    pub timed_out: u64,
 }
 
 impl ServerStats {
@@ -319,6 +355,10 @@ impl<'a> Server<'a> {
         if req.max_new == 0 {
             return Err(SubmitError::ZeroMaxNew { id: req.id });
         }
+        let mut req = req;
+        if req.deadline.is_none() && self.cfg.default_timeout_ms > 0 {
+            req.deadline = Some(submitted + Duration::from_millis(self.cfg.default_timeout_ms));
+        }
         if !self.live.insert(req.id) {
             return Err(SubmitError::DuplicateId { id: req.id });
         }
@@ -383,28 +423,68 @@ impl<'a> Server<'a> {
         }
     }
 
-    /// Admit queued requests into free slots.
-    fn admit(&mut self) {
+    /// Admit queued requests into free slots. Queued requests whose
+    /// deadline already passed are finished with a timeout result instead
+    /// of wasting a slot on work nobody is waiting for.
+    fn admit(&mut self, now: Instant) {
         for s in 0..self.batch {
-            if self.slots[s].is_none() {
-                if let Some((req, submitted)) = self.queue.pop_front() {
-                    self.clear_slot_state(s);
-                    let queue_wait_secs = submitted.elapsed().as_secs_f64();
-                    self.stats.admitted += 1;
-                    self.stats.queue_wait_sum_secs += queue_wait_secs;
-                    self.slots[s] = Some(Slot {
-                        id: req.id,
-                        prompt: req.prompt,
-                        consumed: 0,
-                        generated: Vec::new(),
-                        max_new: req.max_new,
-                        temperature: req.temperature,
-                        steps: 0,
-                        submitted,
-                        ttft_secs: 0.0,
-                        queue_wait_secs,
-                    });
+            if self.slots[s].is_some() {
+                continue;
+            }
+            while let Some((req, submitted)) = self.queue.pop_front() {
+                if req.deadline.is_some_and(|d| d <= now) {
+                    self.expire_queued(req, submitted, now);
+                    continue;
                 }
+                self.clear_slot_state(s);
+                let queue_wait_secs = (now - submitted).as_secs_f64();
+                self.stats.admitted += 1;
+                self.stats.queue_wait_sum_secs += queue_wait_secs;
+                self.slots[s] = Some(Slot {
+                    id: req.id,
+                    prompt: req.prompt,
+                    consumed: 0,
+                    generated: Vec::new(),
+                    max_new: req.max_new,
+                    temperature: req.temperature,
+                    steps: 0,
+                    submitted,
+                    deadline: req.deadline,
+                    ttft_secs: 0.0,
+                    queue_wait_secs,
+                });
+                break;
+            }
+        }
+    }
+
+    /// Finish a request whose deadline expired before it ever got a slot.
+    fn expire_queued(&mut self, req: GenRequest, submitted: Instant, now: Instant) {
+        let e2e_secs = (now - submitted).as_secs_f64();
+        self.stats.completed += 1;
+        self.stats.timed_out += 1;
+        self.stats.e2e_sum_secs += e2e_secs;
+        self.results.push(GenResult {
+            id: req.id,
+            tokens: Vec::new(),
+            steps: 0,
+            ttft_secs: 0.0,
+            queue_wait_secs: e2e_secs,
+            e2e_secs,
+            finish_reason: FinishReason::Timeout,
+        });
+    }
+
+    /// Finish every occupied slot whose deadline passed, releasing the
+    /// slot with the tokens generated so far.
+    fn expire_slots(&mut self, now: Instant) {
+        for s in 0..self.batch {
+            let expired = matches!(
+                &self.slots[s],
+                Some(slot) if slot.deadline.is_some_and(|d| d <= now)
+            );
+            if expired {
+                self.finish_slot(s, FinishReason::Timeout);
             }
         }
     }
@@ -428,11 +508,14 @@ impl<'a> Server<'a> {
     }
 
     /// Move a finished slot's generation into the results.
-    fn finish_slot(&mut self, s: usize) {
+    fn finish_slot(&mut self, s: usize, finish_reason: FinishReason) {
         let done = self.slots[s].take().expect("finishing an occupied slot");
         let e2e_secs = done.submitted.elapsed().as_secs_f64();
         self.stats.completed += 1;
         self.stats.e2e_sum_secs += e2e_secs;
+        if finish_reason == FinishReason::Timeout {
+            self.stats.timed_out += 1;
+        }
         self.results.push(GenResult {
             id: done.id,
             tokens: done.generated,
@@ -440,6 +523,7 @@ impl<'a> Server<'a> {
             ttft_secs: done.ttft_secs,
             queue_wait_secs: done.queue_wait_secs,
             e2e_secs,
+            finish_reason,
         });
     }
 
@@ -458,7 +542,9 @@ impl<'a> Server<'a> {
     /// token, so every occupied slot makes progress every step). Returns
     /// the number of tokens processed.
     pub fn engine_step(&mut self) -> Result<usize> {
-        self.admit();
+        let now = Instant::now();
+        self.expire_slots(now);
+        self.admit(now);
         let mut processed = 0usize;
         let mut prefilled = vec![false; self.batch];
 
@@ -506,7 +592,7 @@ impl<'a> Server<'a> {
                     let (id, done) = (slot.id, slot.generated.len() >= slot.max_new);
                     self.push_event(id, t);
                     if done {
-                        self.finish_slot(s);
+                        self.finish_slot(s, FinishReason::Length);
                     }
                 }
             }
@@ -586,7 +672,7 @@ impl<'a> Server<'a> {
                     self.push_event(id, t);
                 }
                 if done {
-                    self.finish_slot(s);
+                    self.finish_slot(s, FinishReason::Length);
                 }
             }
             processed += active.len();
@@ -652,12 +738,16 @@ mod tests {
         assert!(hits > 95, "peaked logits should dominate, got {hits}");
     }
 
+    fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
+        GenRequest { id, prompt, max_new, temperature: 0.0, deadline: None }
+    }
+
     fn drive(server: &mut Server<'_>, n_req: u64, seed: u64) -> Vec<GenResult> {
         let mut rng = Rng::new(seed);
         for id in 0..n_req {
             let prompt: Vec<i32> =
                 (0..rng.range(3, 8)).map(|_| rng.below(256) as i32).collect();
-            server.submit(GenRequest { id, prompt, max_new: 3, temperature: 0.0 }).unwrap();
+            server.submit(req(id, prompt, 3)).unwrap();
         }
         server.run_to_completion().unwrap()
     }
@@ -732,19 +822,13 @@ mod tests {
         // engine down; max_new == 0 silently occupied a slot forever.
         let session = tiny_session();
         let mut server = tiny_server(&session);
-        let err = server
-            .submit(GenRequest { id: 1, prompt: vec![], max_new: 3, temperature: 0.0 })
-            .unwrap_err();
+        let err = server.submit(req(1, vec![], 3)).unwrap_err();
         assert_eq!(err, SubmitError::EmptyPrompt { id: 1 });
-        let err = server
-            .submit(GenRequest { id: 2, prompt: vec![5], max_new: 0, temperature: 0.0 })
-            .unwrap_err();
+        let err = server.submit(req(2, vec![5], 0)).unwrap_err();
         assert_eq!(err, SubmitError::ZeroMaxNew { id: 2 });
         // Nothing entered the queue; the ids are free for valid reuse.
         assert_eq!(server.queue_len(), 0);
-        server
-            .submit(GenRequest { id: 1, prompt: vec![5], max_new: 1, temperature: 0.0 })
-            .unwrap();
+        server.submit(req(1, vec![5], 1)).unwrap();
         assert_eq!(server.queue_len(), 1);
     }
 
@@ -752,7 +836,7 @@ mod tests {
     fn submit_rejects_duplicate_live_ids() {
         let session = tiny_session();
         let mut server = tiny_server(&session);
-        let req = GenRequest { id: 7, prompt: vec![1, 2, 3], max_new: 2, temperature: 0.0 };
+        let req = req(7, vec![1, 2, 3], 2);
         server.submit(req.clone()).unwrap();
         // Duplicate while queued.
         assert_eq!(server.submit(req.clone()).unwrap_err(), SubmitError::DuplicateId { id: 7 });
@@ -776,9 +860,7 @@ mod tests {
         let mut server = tiny_server(&session);
         let n_req = 3 * server.batch_size() as u64;
         for id in 0..n_req {
-            server
-                .submit(GenRequest { id, prompt: vec![9, 8, 7], max_new: 2, temperature: 0.0 })
-                .unwrap();
+            server.submit(req(id, vec![9, 8, 7], 2)).unwrap();
         }
         let mut got = Vec::new();
         let mut steps = 0;
@@ -803,9 +885,7 @@ mod tests {
         let mut server = tiny_server(&session);
         server.enable_events();
         for id in 0..2u64 {
-            server
-                .submit(GenRequest { id, prompt: vec![4, 4, 4], max_new: 3, temperature: 0.0 })
-                .unwrap();
+            server.submit(req(id, vec![4, 4, 4], 3)).unwrap();
         }
         let mut by_id: std::collections::BTreeMap<u64, Vec<i32>> = Default::default();
         while server.has_work() {
@@ -823,10 +903,63 @@ mod tests {
     fn events_are_not_captured_by_default() {
         let session = tiny_session();
         let mut server = tiny_server(&session);
-        server
-            .submit(GenRequest { id: 0, prompt: vec![1], max_new: 2, temperature: 0.0 })
-            .unwrap();
+        server.submit(req(0, vec![1], 2)).unwrap();
         server.run_to_completion().unwrap();
         assert!(server.take_events().is_empty());
+    }
+
+    #[test]
+    fn expired_queued_request_times_out_without_taking_a_slot() {
+        let session = tiny_session();
+        let mut server = tiny_server(&session);
+        let mut expired = req(1, vec![1, 2, 3], 4);
+        expired.deadline = Some(Instant::now() - Duration::from_millis(1));
+        server.submit(expired).unwrap();
+        server.submit(req(2, vec![1, 2, 3], 2)).unwrap();
+        let results = server.run_to_completion().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].finish_reason, FinishReason::Timeout);
+        assert!(results[0].tokens.is_empty());
+        assert_eq!(results[1].finish_reason, FinishReason::Length);
+        assert_eq!(results[1].tokens.len(), 2);
+        assert_eq!(server.stats.timed_out, 1);
+        assert_eq!(server.stats.completed, 2);
+        // The expired request never occupied a slot.
+        assert_eq!(server.stats.admitted, 1);
+    }
+
+    #[test]
+    fn mid_generation_deadline_releases_the_slot_with_partial_tokens() {
+        let session = tiny_session();
+        let mut server = tiny_server(&session);
+        let mut r = req(1, vec![1, 2, 3], 1_000_000);
+        r.deadline = Some(Instant::now() + Duration::from_millis(60));
+        server.submit(r).unwrap();
+        let mut steps = 0u64;
+        while server.has_work() {
+            server.engine_step().unwrap();
+            steps += 1;
+            assert!(steps < 10_000_000, "deadline never released the slot");
+        }
+        let results = server.take_results();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].finish_reason, FinishReason::Timeout);
+        // The slot generated for ~60ms before the deadline reaped it —
+        // far short of the absurd max_new.
+        assert!(results[0].tokens.len() < 1_000_000);
+        assert_eq!(server.stats.timed_out, 1);
+        assert_eq!(server.free_slots(), server.batch_size());
+    }
+
+    #[test]
+    fn default_timeout_ms_applies_when_request_has_no_deadline() {
+        let session = tiny_session();
+        let cfg = ServerConfig { default_timeout_ms: 40, ..ServerConfig::default() };
+        let mut server = Server::with_config(&session, 3, cfg).unwrap();
+        server.submit(req(1, vec![1, 2, 3], 1_000_000)).unwrap();
+        let results = server.run_to_completion().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].finish_reason, FinishReason::Timeout);
+        assert_eq!(server.stats.timed_out, 1);
     }
 }

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train   — train a model per a RunConfig (JSON file + flag overrides)
 //!   serve   — run the batched decode demo on a (briefly trained) model
+//!   route   — replica-sharded serving: a health-checked router over N
+//!             in-process replicas (or remote engines via --backends)
 //!   info    — list model families the active backend can build
 //!
 //! The execution backend is chosen automatically: PJRT when built with
@@ -27,6 +29,9 @@ use efla::coordinator::server::{GenRequest, Server, ServerConfig};
 use efla::coordinator::session::Session;
 use efla::coordinator::trainer;
 use efla::runtime::{open_backend, open_backend_threads};
+use efla::serve::fault::FaultSpec;
+use efla::serve::router::{Router, RouterConfig};
+use efla::serve::Frontend;
 use efla::util::cli::{Args, CliError};
 use efla::util::logging;
 
@@ -38,6 +43,7 @@ fn main() {
     let result = match cmd {
         "train" => cmd_train(&rest),
         "serve" => cmd_serve(&rest),
+        "route" => cmd_route(&rest),
         "info" => cmd_info(&rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -71,6 +77,7 @@ fn print_help() {
          Commands:\n  \
          train   train a model (see `efla train --help`)\n  \
          serve   batched decode demo (see `efla serve --help`)\n  \
+         route   replica-sharded router (see `efla route --help`)\n  \
          info    list model families the backend can build\n"
     );
 }
@@ -100,6 +107,14 @@ fn common_args(program: &str, about: &str) -> Args {
         .opt("listen", "", "serve: HTTP listen address, e.g. 127.0.0.1:8080 (empty = demo mode)")
         .opt("queue-depth", "64", "serve: admission queue bound (full queue answers 429)")
         .opt("drain-timeout", "5", "serve: seconds to drain in-flight requests on SIGTERM")
+        .opt(
+            "request-timeout-ms",
+            "0",
+            "serve/route: default per-request deadline in ms (0 = none)",
+        )
+        .opt("replicas", "2", "route: in-process replica count")
+        .opt("backends", "", "route: comma-separated engine addresses (instead of --replicas)")
+        .opt("fault", "", "fault spec (also EFLA_FAULT; route: scoped 'idx:spec;...')")
         .opt("artifacts", "artifacts", "artifact directory (PJRT backend)")
         .opt("out", "runs", "output directory")
 }
@@ -124,6 +139,15 @@ fn build_config(p: &efla::util::cli::Parsed) -> Result<RunConfig> {
     cfg.listen = p.get("listen")?.to_string();
     cfg.queue_depth = p.usize("queue-depth")?;
     cfg.drain_timeout_secs = p.f64("drain-timeout")?;
+    cfg.request_timeout_ms = p.u64("request-timeout-ms")?;
+    cfg.replicas = p.usize("replicas")?;
+    cfg.backends = p.get("backends")?.to_string();
+    cfg.fault = p.get("fault")?.to_string();
+    if cfg.fault.is_empty() {
+        if let Ok(env_spec) = std::env::var("EFLA_FAULT") {
+            cfg.fault = env_spec;
+        }
+    }
     cfg.artifact_dir = PathBuf::from(p.get("artifacts")?);
     cfg.out_dir = PathBuf::from(p.get("out")?);
     Ok(cfg)
@@ -173,6 +197,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         prefill_token_budget: cfg.prefill_token_budget,
         queue_depth: cfg.queue_depth,
         drain_timeout_secs: cfg.drain_timeout_secs,
+        default_timeout_ms: cfg.request_timeout_ms,
     };
 
     // --listen <addr>: run the HTTP front end with continuous batching
@@ -180,6 +205,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if !cfg.listen.is_empty() {
         efla::serve::install_signal_handlers();
         let frontend = efla::serve::Frontend::bind(&cfg.listen)?;
+        if !cfg.fault.is_empty() {
+            let spec = FaultSpec::parse(&cfg.fault).map_err(CliError::new)?;
+            log::warn!("fault injection armed: {spec:?}");
+            frontend.set_fault_spec(spec);
+        }
         let stats = frontend.run(&session, server_cfg, cfg.seed)?;
         log::info!(
             "drained: {} completed | {} engine steps | {:.1} tok/s | mean TTFT {:.1} ms",
@@ -200,7 +230,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         let prompt: Vec<i32> = (0..plen)
             .map(|_| rng.range(97, 123) as i32) // ascii letters for byte-level models
             .collect();
-        server.submit(GenRequest { id, prompt, max_new, temperature: temp })?;
+        server.submit(GenRequest { id, prompt, max_new, temperature: temp, deadline: None })?;
     }
     let results = server.run_to_completion()?;
     log::info!(
@@ -229,6 +259,111 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             r.ttft_secs * 1e3
         );
     }
+    Ok(())
+}
+
+fn cmd_route(argv: &[String]) -> Result<()> {
+    let p = common_args("efla route", "replica-sharded serving router")
+        .opt("health-interval-ms", "200", "route: /healthz probe period per replica, in ms")
+        .opt("max-attempts", "3", "route: max replicas tried per request")
+        .opt("cooldown-ms", "1000", "route: ejection cooldown before a half-open probe, in ms")
+        .parse_from(argv)?;
+    let cfg = build_config(&p)?;
+    if cfg.task != Task::Lm {
+        bail!("route only supports --task lm");
+    }
+    efla::serve::install_signal_handlers();
+    let listen = if cfg.listen.is_empty() { "127.0.0.1:0" } else { cfg.listen.as_str() };
+    let rcfg = RouterConfig {
+        health_interval_ms: p.u64("health-interval-ms")?,
+        max_attempts: p.usize("max-attempts")?,
+        cooldown_ms: p.u64("cooldown-ms")?,
+        default_timeout_ms: cfg.request_timeout_ms,
+        seed: cfg.seed,
+        ..RouterConfig::default()
+    };
+
+    // --backends: pure proxy mode over already-running engines.
+    if !cfg.backends.is_empty() {
+        let backends: Vec<String> = cfg
+            .backends
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if !cfg.fault.is_empty() {
+            bail!("--fault targets in-process replicas; POST /fault to a remote backend instead");
+        }
+        return Router::bind(listen, backends, rcfg)?.run();
+    }
+
+    // In-process replicas: bind every front end first (the router needs
+    // the addresses before the replicas finish training), then train and
+    // serve each on its own thread. The router sheds with 503 until the
+    // first replica starts answering health probes.
+    let n = cfg.replicas.max(1);
+    let faults = FaultSpec::parse_scoped(&cfg.fault, n).map_err(CliError::new)?;
+    let server_cfg = ServerConfig {
+        prefill_chunk: cfg.prefill_chunk,
+        prefill_token_budget: cfg.prefill_token_budget,
+        queue_depth: cfg.queue_depth,
+        drain_timeout_secs: cfg.drain_timeout_secs,
+        default_timeout_ms: cfg.request_timeout_ms,
+    };
+    let mut frontends = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    let mut replica_shutdowns = Vec::with_capacity(n);
+    for spec in faults {
+        let fe = Frontend::bind("127.0.0.1:0")?;
+        if !spec.is_noop() {
+            log::warn!("replica {} fault injection armed: {spec:?}", frontends.len());
+        }
+        fe.set_fault_spec(spec);
+        addrs.push(fe.local_addr()?.to_string());
+        replica_shutdowns.push(fe.shutdown_flag());
+        frontends.push(fe);
+    }
+    let router = Router::bind(listen, addrs, rcfg)?;
+    std::thread::scope(|s| -> Result<()> {
+        for (i, fe) in frontends.into_iter().enumerate() {
+            let cfg = &cfg;
+            s.spawn(move || {
+                if let Err(e) = run_replica(i, fe, cfg, server_cfg) {
+                    log::error!("replica {i} failed: {e:#}");
+                }
+            });
+        }
+        let result = router.run();
+        // The router is down (signal or error): drain the replicas too.
+        for flag in &replica_shutdowns {
+            flag.store(true, std::sync::atomic::Ordering::SeqCst);
+        }
+        result
+    })
+}
+
+/// One in-process replica: its own backend and its own session, trained
+/// identically (same family, seed, steps and threads on every replica ⇒
+/// bit-identical weights), then the blocking serve loop. A `Session` is
+/// not `Sync`, so each replica builds everything on its own thread.
+fn run_replica(
+    i: usize,
+    frontend: Frontend,
+    cfg: &RunConfig,
+    server_cfg: ServerConfig,
+) -> Result<()> {
+    let backend = open_backend_threads(&cfg.artifact_dir, cfg.threads)?;
+    let family = cfg.family();
+    let mut session = Session::init(backend.as_ref(), &family, cfg.seed as u32)?;
+    if cfg.steps > 0 {
+        let (pf, _) = trainer::lm_data(cfg, session.batch, session.seq)?;
+        let schedule =
+            efla::coordinator::schedule::Schedule::paper_default(cfg.peak_lr, cfg.steps);
+        trainer::train_lm(&mut session, schedule, cfg.steps, || pf.next(), |_| {})?;
+    }
+    log::info!("replica {i} ready on {}", frontend.local_addr()?);
+    let stats = frontend.run(&session, server_cfg, cfg.seed)?;
+    log::info!("replica {i} drained: {} completed", stats.completed);
     Ok(())
 }
 

@@ -38,12 +38,15 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::coordinator::server::{
     GenRequest, GenResult, Server, ServerConfig, ServerStats, SubmitError,
 };
 use crate::coordinator::session::Session;
+use crate::serve::fault::FaultInjector;
 
 /// What a request's event channel can carry.
 #[derive(Clone, Debug)]
@@ -120,11 +123,19 @@ pub struct EngineShared {
     server_stats: Mutex<ServerStats>,
     queue_wait: Mutex<Ring>,
     e2e: Mutex<Ring>,
+    /// Fault layer hook of the engine loop (`engine_stall_ms`).
+    fault: Arc<FaultInjector>,
 }
 
 impl EngineShared {
     /// `sample_cap` bounds the per-metric latency rings.
     pub fn new(sample_cap: usize) -> EngineShared {
+        Self::with_fault(sample_cap, Arc::new(FaultInjector::disabled()))
+    }
+
+    /// [`EngineShared::new`] with the front end's fault injector, so the
+    /// engine loop shares the runtime-swappable spec with the workers.
+    pub fn with_fault(sample_cap: usize, fault: Arc<FaultInjector>) -> EngineShared {
         EngineShared {
             queued: AtomicI64::new(0),
             accepted: AtomicU64::new(0),
@@ -132,6 +143,7 @@ impl EngineShared {
             server_stats: Mutex::new(ServerStats::default()),
             queue_wait: Mutex::new(Ring::new(sample_cap)),
             e2e: Mutex::new(Ring::new(sample_cap)),
+            fault,
         }
     }
 
@@ -209,6 +221,9 @@ pub fn run_engine(
     let t0 = Instant::now();
     let mut drain_deadline: Option<Instant> = None;
     loop {
+        // Fault layer: a stalled engine (per-iteration sleep) makes
+        // deadline abandonment and queue backup observable in tests.
+        shared.fault.stall_engine();
         // Admit only what the next step can seat: the bounded channel is
         // the real queue, so the 429 signal reflects slots + queue_depth.
         while server.queue_len() < server.free_slots() {

@@ -1,0 +1,311 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! The chaos harness (`scripts/route_chaos.py`), the router unit tests
+//! and the CI `route-chaos` job all need *reproducible* failures: a
+//! replica that stalls, errors, refuses connections, cuts a token stream
+//! mid-flight, or dies after K requests — on demand and seeded, never
+//! from real flakiness. [`FaultSpec`] is the parsed `--fault` /
+//! `EFLA_FAULT` grammar; [`FaultInjector`] is the shared runtime object
+//! threaded into the HTTP worker path (connection refusal, per-request
+//! stall, injected 500s, stream cuts) and the engine loop (per-step
+//! stall, so deadline abandonment is testable against a slow engine).
+//!
+//! The spec is runtime-swappable through `POST /fault` on a serving
+//! front end, because the chaos script must stall a replica that is
+//! already running — relaunching it would reset the very state (slots,
+//! queue, stats) the experiment is about.
+//!
+//! Grammar: comma-separated `key=value` pairs and bare flags, e.g.
+//! `stall_ms=250,error_rate=0.5,refuse,die_after=20,seed=7`. Keys:
+//!
+//! * `stall_ms=N`          — sleep N ms in the worker before handling
+//!   any parsed request (health probes included — a stalled replica
+//!   must look stalled to the prober);
+//! * `engine_stall_ms=N`   — sleep N ms per engine loop iteration (a
+//!   slow engine: deadlines expire, queues back up);
+//! * `error_rate=P`        — answer `/v1/generate` with an injected 500
+//!   with probability P (seeded RNG, deterministic sequence);
+//! * `refuse`              — drop every accepted connection immediately;
+//! * `die_after=K`         — after K generate requests the replica
+//!   plays dead: every subsequent connection is dropped;
+//! * `cut_stream_after=K`  — abort a streamed response after K token
+//!   chunks without the terminating 0-chunk (the client sees a
+//!   truncated chunked body — the no-retry-after-first-token case);
+//! * `seed=S`              — RNG seed for `error_rate` (default 0).
+
+#![forbid(unsafe_code)]
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// A parsed fault spec. `Default` is the no-op spec (inject nothing).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Worker-side stall before handling each request, in ms.
+    pub stall_ms: u64,
+    /// Engine-side stall per loop iteration, in ms.
+    pub engine_stall_ms: u64,
+    /// Probability of answering a generate with an injected 500.
+    pub error_rate: f64,
+    /// Drop every connection at accept.
+    pub refuse: bool,
+    /// Play dead (drop all connections) after this many generate
+    /// requests. 0 = never.
+    pub die_after: u64,
+    /// Abort a streamed response after this many token chunks. 0 = never.
+    pub cut_stream_after: u64,
+    /// Seed of the `error_rate` RNG.
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// Parse the `--fault` grammar; `Err` carries a message for a 400 or
+    /// CLI error. The empty string parses to the no-op spec.
+    pub fn parse(spec: &str) -> Result<FaultSpec, String> {
+        let mut out = FaultSpec::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = match part.split_once('=') {
+                Some((k, v)) => (k.trim(), Some(v.trim())),
+                None => (part, None),
+            };
+            let parse_u64 = |v: Option<&str>| -> Result<u64, String> {
+                v.ok_or_else(|| format!("fault key '{key}' needs =<int>"))?
+                    .parse::<u64>()
+                    .map_err(|_| format!("fault key '{key}' needs an integer value"))
+            };
+            match key {
+                "stall_ms" => out.stall_ms = parse_u64(value)?,
+                "engine_stall_ms" => out.engine_stall_ms = parse_u64(value)?,
+                "die_after" => out.die_after = parse_u64(value)?,
+                "cut_stream_after" => out.cut_stream_after = parse_u64(value)?,
+                "seed" => out.seed = parse_u64(value)?,
+                "refuse" => out.refuse = true,
+                "error_rate" => {
+                    let v = value.ok_or("fault key 'error_rate' needs =<float>")?;
+                    let p =
+                        v.parse::<f64>().map_err(|_| "error_rate needs a float".to_string())?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("error_rate {p} outside [0, 1]"));
+                    }
+                    out.error_rate = p;
+                }
+                _ => return Err(format!("unknown fault key '{key}'")),
+            }
+        }
+        Ok(out)
+    }
+
+    /// True when the spec injects nothing.
+    pub fn is_noop(&self) -> bool {
+        *self == FaultSpec::default()
+    }
+
+    /// Parse a per-replica fault spec for `efla route --fault` over `n`
+    /// replicas. Semicolon-separated entries; an `idx:spec` entry targets
+    /// one replica, a bare spec applies to every replica. Later entries
+    /// override earlier ones per replica, so
+    /// `"stall_ms=10;0:die_after=5"` stalls all replicas and additionally
+    /// re-specs replica 0 to die after 5 requests.
+    pub fn parse_scoped(spec: &str, n: usize) -> Result<Vec<FaultSpec>, String> {
+        let mut out = vec![FaultSpec::default(); n];
+        for entry in spec.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            match entry.split_once(':') {
+                Some((idx, rest)) => {
+                    let i = idx
+                        .trim()
+                        .parse::<usize>()
+                        .map_err(|_| format!("fault scope '{idx}' is not a replica index"))?;
+                    if i >= n {
+                        return Err(format!("fault scope {i} out of range (have {n} replicas)"));
+                    }
+                    out[i] = FaultSpec::parse(rest)?;
+                }
+                None => {
+                    let parsed = FaultSpec::parse(entry)?;
+                    for slot in &mut out {
+                        *slot = parsed.clone();
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Shared, runtime-swappable fault state of one serving front end.
+pub struct FaultInjector {
+    spec: Mutex<FaultSpec>,
+    rng: Mutex<Rng>,
+    /// Generate requests seen so far (drives `die_after`).
+    generates: AtomicU64,
+    /// Latched by `die_after`; a dead replica drops every connection.
+    dead: AtomicBool,
+}
+
+impl FaultInjector {
+    pub fn new(spec: FaultSpec) -> FaultInjector {
+        let rng = Rng::new(spec.seed);
+        FaultInjector {
+            spec: Mutex::new(spec),
+            rng: Mutex::new(rng),
+            generates: AtomicU64::new(0),
+            dead: AtomicBool::new(false),
+        }
+    }
+
+    /// The no-op injector every front end starts with.
+    pub fn disabled() -> FaultInjector {
+        FaultInjector::new(FaultSpec::default())
+    }
+
+    /// Swap the active spec (the `POST /fault` path). Resets the RNG to
+    /// the new seed and revives a dead replica, so one process can run
+    /// several chaos phases back to back.
+    pub fn set_spec(&self, spec: FaultSpec) {
+        *self.rng.lock().expect("fault rng lock") = Rng::new(spec.seed);
+        self.generates.store(0, Ordering::SeqCst);
+        self.dead.store(false, Ordering::SeqCst);
+        *self.spec.lock().expect("fault spec lock") = spec;
+    }
+
+    /// Snapshot of the active spec.
+    pub fn spec(&self) -> FaultSpec {
+        self.spec.lock().expect("fault spec lock").clone()
+    }
+
+    /// Did `die_after` already trigger?
+    pub fn dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Should this freshly accepted connection be dropped on the floor?
+    pub fn refuse_connection(&self) -> bool {
+        self.dead() || self.spec.lock().expect("fault spec lock").refuse
+    }
+
+    /// Worker-side stall before handling a parsed request.
+    pub fn stall(&self) {
+        let ms = self.spec.lock().expect("fault spec lock").stall_ms;
+        if ms > 0 {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+
+    /// Engine-side stall, once per engine loop iteration.
+    pub fn stall_engine(&self) {
+        let ms = self.spec.lock().expect("fault spec lock").engine_stall_ms;
+        if ms > 0 {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+
+    /// Count one generate request; latch `dead` when `die_after` is
+    /// reached. Returns true when this request should answer an
+    /// injected 500 (`error_rate`).
+    pub fn on_generate(&self) -> bool {
+        let spec = self.spec.lock().expect("fault spec lock").clone();
+        let n = self.generates.fetch_add(1, Ordering::SeqCst) + 1;
+        if spec.die_after > 0 && n >= spec.die_after {
+            self.dead.store(true, Ordering::SeqCst);
+        }
+        spec.error_rate > 0.0
+            && self.rng.lock().expect("fault rng lock").bernoulli(spec.error_rate)
+    }
+
+    /// Abort a streamed response after this many token chunks (0 = never).
+    pub fn cut_stream_after(&self) -> u64 {
+        self.spec.lock().expect("fault spec lock").cut_stream_after
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let spec =
+            FaultSpec::parse("stall_ms=250, error_rate=0.5, refuse, die_after=20, seed=7").unwrap();
+        assert_eq!(spec.stall_ms, 250);
+        assert!((spec.error_rate - 0.5).abs() < 1e-12);
+        assert!(spec.refuse);
+        assert_eq!(spec.die_after, 20);
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.cut_stream_after, 0);
+        assert!(!spec.is_noop());
+    }
+
+    #[test]
+    fn empty_spec_is_noop() {
+        assert!(FaultSpec::parse("").unwrap().is_noop());
+        assert!(FaultSpec::parse("  ").unwrap().is_noop());
+    }
+
+    #[test]
+    fn scoped_specs_target_single_replicas() {
+        let specs = FaultSpec::parse_scoped("stall_ms=10;0:die_after=5", 3).unwrap();
+        assert_eq!(specs[0], FaultSpec::parse("die_after=5").unwrap());
+        assert_eq!(specs[1], FaultSpec::parse("stall_ms=10").unwrap());
+        assert_eq!(specs[2], FaultSpec::parse("stall_ms=10").unwrap());
+        assert!(FaultSpec::parse_scoped("7:refuse", 3).is_err(), "scope out of range");
+        assert!(FaultSpec::parse_scoped("x:refuse", 3).is_err(), "scope not an index");
+        let noop = FaultSpec::parse_scoped("", 2).unwrap();
+        assert!(noop.iter().all(FaultSpec::is_noop));
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(FaultSpec::parse("explode=1").is_err());
+        assert!(FaultSpec::parse("stall_ms").is_err());
+        assert!(FaultSpec::parse("stall_ms=abc").is_err());
+        assert!(FaultSpec::parse("error_rate=1.5").is_err());
+        assert!(FaultSpec::parse("error_rate=-0.1").is_err());
+    }
+
+    #[test]
+    fn die_after_latches_dead_and_set_spec_revives() {
+        let inj = FaultInjector::new(FaultSpec::parse("die_after=3").unwrap());
+        assert!(!inj.dead());
+        inj.on_generate();
+        inj.on_generate();
+        assert!(!inj.dead(), "dies only at the K-th request");
+        inj.on_generate();
+        assert!(inj.dead());
+        assert!(inj.refuse_connection(), "a dead replica refuses connections");
+        inj.set_spec(FaultSpec::default());
+        assert!(!inj.dead(), "set_spec revives the replica");
+        assert!(!inj.refuse_connection());
+    }
+
+    #[test]
+    fn error_rate_is_seeded_and_deterministic() {
+        let run = || -> Vec<bool> {
+            let inj = FaultInjector::new(FaultSpec::parse("error_rate=0.5,seed=42").unwrap());
+            (0..32).map(|_| inj.on_generate()).collect()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed, same injected-error sequence");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "p=0.5 mixes both outcomes");
+    }
+
+    #[test]
+    fn noop_injector_injects_nothing() {
+        let inj = FaultInjector::disabled();
+        assert!(!inj.refuse_connection());
+        assert!(!inj.on_generate());
+        assert_eq!(inj.cut_stream_after(), 0);
+        assert!(!inj.dead());
+    }
+}

@@ -7,10 +7,14 @@
 //! fixed-length and `Transfer-Encoding: chunked` responses (the token
 //! stream of `POST /v1/generate` with `"stream": true`).
 //!
-//! Client side: [`read_response`] (understands both framings, de-chunks)
-//! and the [`request`] one-shot helper — used by the integration tests,
+//! Client side: [`read_response`] (understands both framings, de-chunks),
+//! the [`request`] one-shot helper — used by the integration tests,
 //! `examples/serve.rs` and anything else that wants to poke the front end
-//! without an external HTTP client.
+//! without an external HTTP client — and [`request_streaming`], which
+//! hands back the response head plus a chunk-at-a-time body reader (the
+//! router proxies token streams through it). Both connects and reads are
+//! bounded by [`ClientOpts`] timeouts: health probes against a stalled
+//! replica must fail fast, not hang the prober.
 //!
 //! Deliberately small: no TLS, no request pipelining, no chunked *request*
 //! bodies (rejected as unsupported), header names lowercased at parse
@@ -18,7 +22,9 @@
 
 #![forbid(unsafe_code)]
 
-use std::io::{self, BufRead, Read, Write};
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 /// Cap on request-line + header bytes per request.
 pub const MAX_HEAD_BYTES: usize = 16 * 1024;
@@ -215,7 +221,9 @@ pub fn reason(status: u16) -> &'static str {
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
+        502 => "Bad Gateway",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -228,16 +236,33 @@ pub fn write_response(
     body: &[u8],
     keep_alive: bool,
 ) -> io::Result<()> {
+    write_response_with(w, status, content_type, &[], body, keep_alive)
+}
+
+/// [`write_response`] with extra headers (e.g. `Retry-After` on a shed
+/// 503/429). Header names must be lowercase; values must be CRLF-free.
+pub fn write_response_with(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
     let conn = if keep_alive { "keep-alive" } else { "close" };
     write!(
         w,
-        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
         status,
         reason(status),
         content_type,
         body.len(),
         conn
     )?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
     w.write_all(body)?;
     w.flush()
 }
@@ -364,10 +389,50 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response, ParseError> {
     Ok(Response { status, headers, body })
 }
 
-/// One-shot client request against `addr` (e.g. `127.0.0.1:8080`).
-pub fn request(addr: &str, method: &str, path: &str, body: &[u8]) -> io::Result<Response> {
-    let mut stream = std::net::TcpStream::connect(addr)?;
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+/// Client-side socket timeouts. The old client hardcoded a 120s read
+/// timeout and let connects block indefinitely — a stalled replica would
+/// wedge the router's health prober. Both bounds are now explicit.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientOpts {
+    pub connect_timeout: Duration,
+    pub read_timeout: Duration,
+}
+
+impl Default for ClientOpts {
+    fn default() -> Self {
+        ClientOpts {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Connect with [`ClientOpts::connect_timeout`], trying each resolved
+/// address in turn.
+fn connect(addr: &str, opts: ClientOpts) -> io::Result<TcpStream> {
+    let mut last_err =
+        io::Error::new(io::ErrorKind::InvalidInput, format!("cannot resolve {addr}"));
+    for resolved in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&resolved, opts.connect_timeout) {
+            Ok(stream) => {
+                stream.set_read_timeout(Some(opts.read_timeout))?;
+                stream.set_write_timeout(Some(opts.read_timeout))?;
+                stream.set_nodelay(true).ok();
+                return Ok(stream);
+            }
+            Err(e) => last_err = e,
+        }
+    }
+    Err(last_err)
+}
+
+fn send_request_head(
+    stream: &mut TcpStream,
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> io::Result<()> {
     write!(
         stream,
         "{} {} HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\n\
@@ -378,9 +443,138 @@ pub fn request(addr: &str, method: &str, path: &str, body: &[u8]) -> io::Result<
         body.len()
     )?;
     stream.write_all(body)?;
-    stream.flush()?;
-    let mut r = std::io::BufReader::new(stream);
+    stream.flush()
+}
+
+/// One-shot client request against `addr` (e.g. `127.0.0.1:8080`) with
+/// the default timeouts.
+pub fn request(addr: &str, method: &str, path: &str, body: &[u8]) -> io::Result<Response> {
+    request_with(addr, method, path, body, ClientOpts::default())
+}
+
+/// One-shot client request with explicit connect/read timeouts.
+pub fn request_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    opts: ClientOpts,
+) -> io::Result<Response> {
+    let mut stream = connect(addr, opts)?;
+    send_request_head(&mut stream, addr, method, path, body)?;
+    let mut r = BufReader::new(stream);
     read_response(&mut r).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
+}
+
+/// A response whose body is consumed incrementally — the router's
+/// streaming proxy reads one upstream chunk at a time and forwards it to
+/// its own client without buffering the whole generation.
+pub struct StreamingResponse<R: BufRead> {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    reader: R,
+    chunked: bool,
+    /// Bytes left in a `Content-Length` body (identity framing).
+    remaining: usize,
+    done: bool,
+}
+
+impl<R: BufRead> StreamingResponse<R> {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        find_header(&self.headers, &name.to_ascii_lowercase())
+    }
+
+    /// The next body fragment: one chunk in chunked framing, a bounded
+    /// read otherwise. `Ok(None)` = body complete.
+    pub fn next_chunk(&mut self) -> Result<Option<Vec<u8>>, ParseError> {
+        if self.done {
+            return Ok(None);
+        }
+        if self.chunked {
+            let mut read_any = true;
+            let mut budget = usize::MAX;
+            let size_line = read_line(&mut self.reader, &mut read_any, &mut budget)?;
+            let size = usize::from_str_radix(size_line.trim(), 16)
+                .map_err(|_| ParseError::BadContentLength(size_line))?;
+            if size == 0 {
+                let _ = read_line(&mut self.reader, &mut read_any, &mut budget);
+                self.done = true;
+                return Ok(None);
+            }
+            let mut chunk = vec![0u8; size];
+            self.reader.read_exact(&mut chunk).map_err(ParseError::Io)?;
+            let mut crlf = [0u8; 2];
+            self.reader.read_exact(&mut crlf).map_err(ParseError::Io)?;
+            Ok(Some(chunk))
+        } else {
+            let take = self.remaining.min(8 * 1024);
+            if take == 0 {
+                self.done = true;
+                return Ok(None);
+            }
+            let mut buf = vec![0u8; take];
+            self.reader.read_exact(&mut buf).map_err(ParseError::Io)?;
+            self.remaining -= take;
+            Ok(Some(buf))
+        }
+    }
+}
+
+/// Parse a response head and return the body as a [`StreamingResponse`].
+/// Bodies without `Content-Length` or chunked framing are treated as
+/// empty (the serving endpoints always frame their bodies).
+pub fn read_response_streaming<R: BufRead>(
+    mut reader: R,
+) -> Result<StreamingResponse<R>, ParseError> {
+    let mut read_any = false;
+    let mut budget = MAX_HEAD_BYTES;
+    let line = read_line(&mut reader, &mut read_any, &mut budget)?;
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    if parts.len() < 2 || !parts[0].starts_with("HTTP/") {
+        return Err(ParseError::BadRequestLine(line));
+    }
+    let status = parts[1].parse::<u16>().map_err(|_| ParseError::BadRequestLine(line.clone()))?;
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = read_line(&mut reader, &mut read_any, &mut budget)?;
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = match line.split_once(':') {
+            Some((n, v)) if !n.is_empty() => (n, v),
+            _ => return Err(ParseError::BadHeader(line)),
+        };
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let chunked = find_header(&headers, "transfer-encoding")
+        .map(|v| v.to_ascii_lowercase().contains("chunked"))
+        .unwrap_or(false);
+    let remaining = if chunked {
+        0
+    } else {
+        match find_header(&headers, "content-length") {
+            Some(v) => {
+                v.trim().parse::<usize>().map_err(|_| ParseError::BadContentLength(v.into()))?
+            }
+            None => 0,
+        }
+    };
+    Ok(StreamingResponse { status, headers, reader, chunked, remaining, done: false })
+}
+
+/// Send a request and hand back the response head plus a chunk-at-a-time
+/// body reader — the transport of the router's streaming proxy.
+pub fn request_streaming(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    opts: ClientOpts,
+) -> io::Result<StreamingResponse<BufReader<TcpStream>>> {
+    let mut stream = connect(addr, opts)?;
+    send_request_head(&mut stream, addr, method, path, body)?;
+    read_response_streaming(BufReader::new(stream))
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
 }
 
 #[cfg(test)]
@@ -506,5 +700,67 @@ mod tests {
         let resp = read_response(&mut Cursor::new(buf)).unwrap();
         assert_eq!(resp.status, 200);
         assert_eq!(resp.text(), "{\"token\":1}\n{\"done\":true}\n");
+    }
+
+    #[test]
+    fn extra_headers_are_emitted_and_parsed_back() {
+        let mut buf = Vec::new();
+        let extra = [("retry-after", "1")];
+        write_response_with(&mut buf, 503, "application/json", &extra, b"{}", false).unwrap();
+        let resp = read_response(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.text(), "{}");
+    }
+
+    #[test]
+    fn gateway_statuses_have_reasons() {
+        assert_eq!(reason(502), "Bad Gateway");
+        assert_eq!(reason(504), "Gateway Timeout");
+    }
+
+    #[test]
+    fn streaming_reader_yields_chunks_one_at_a_time() {
+        let mut buf = Vec::new();
+        {
+            let mut cw = ChunkedWriter::start(&mut buf, 200, "application/json", false).unwrap();
+            cw.chunk(b"{\"token\":1}\n").unwrap();
+            cw.chunk(b"{\"done\":true}\n").unwrap();
+            cw.finish().unwrap();
+        }
+        let mut sr = read_response_streaming(Cursor::new(buf)).unwrap();
+        assert_eq!(sr.status, 200);
+        assert_eq!(sr.header("transfer-encoding"), Some("chunked"));
+        assert_eq!(sr.next_chunk().unwrap().as_deref(), Some(&b"{\"token\":1}\n"[..]));
+        assert_eq!(sr.next_chunk().unwrap().as_deref(), Some(&b"{\"done\":true}\n"[..]));
+        assert!(sr.next_chunk().unwrap().is_none());
+        assert!(sr.next_chunk().unwrap().is_none(), "stays done after the last chunk");
+    }
+
+    #[test]
+    fn streaming_reader_handles_fixed_length_bodies() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 429, "application/json", b"{\"error\":\"full\"}", false).unwrap();
+        let mut sr = read_response_streaming(Cursor::new(buf)).unwrap();
+        assert_eq!(sr.status, 429);
+        let body = sr.next_chunk().unwrap().unwrap();
+        assert_eq!(body, b"{\"error\":\"full\"}");
+        assert!(sr.next_chunk().unwrap().is_none());
+    }
+
+    #[test]
+    fn streaming_reader_surfaces_a_truncated_stream_as_an_error() {
+        // A dangling chunked body (no terminating 0-chunk) must surface
+        // as Io, not silently end — the proxy relays it as a mid-stream
+        // upstream failure.
+        let mut buf = Vec::new();
+        {
+            let mut cw = ChunkedWriter::start(&mut buf, 200, "application/json", false).unwrap();
+            cw.chunk(b"{\"token\":1}\n").unwrap();
+            // no finish(): the upstream died mid-stream
+        }
+        let mut sr = read_response_streaming(Cursor::new(buf)).unwrap();
+        assert_eq!(sr.next_chunk().unwrap().as_deref(), Some(&b"{\"token\":1}\n"[..]));
+        assert!(sr.next_chunk().is_err(), "truncated stream must error");
     }
 }

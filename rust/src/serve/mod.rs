@@ -22,13 +22,19 @@
 //!   Streamed: `Transfer-Encoding: chunked`, one JSON line per token,
 //!   then a final line with `"done": true` and the full result.
 //! * `GET /stats`   — engine/queue/latency counters as JSON.
-//! * `GET /healthz` — liveness probe.
+//! * `GET /healthz` — readiness probe: 200 while admitting, **503** with
+//!   `"status": "draining"` once shutdown began and `"saturated"` while
+//!   the admission queue is full — the router stops routing to a replica
+//!   that cannot admit work.
+//! * `POST /fault`  — swap the fault-injection spec of a running front
+//!   end (body: the [`fault::FaultSpec`] grammar; chaos harness only).
 //!
 //! Backpressure: the admission queue holds at most
 //! [`ServerConfig::queue_depth`] waiting requests (decode slots are extra
 //! capacity); beyond that `POST /v1/generate` answers **429** without
 //! touching the engine. Shutdown (SIGTERM/SIGINT or the
-//! [`Frontend::shutdown_flag`]): stop accepting, drain accepted work
+//! [`Frontend::shutdown_flag`]): keep accepting (so probes observe the
+//! draining status), answer new generates 503, drain accepted work
 //! within [`ServerConfig::drain_timeout_secs`], then return.
 //!
 //! Threading: a [`crate::coordinator::session::Session`] is not `Sync`,
@@ -37,7 +43,9 @@
 //! when `run` returns, no thread of the front end is left behind.
 
 pub mod engine;
+pub mod fault;
 pub mod http;
+pub mod router;
 
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -53,6 +61,7 @@ use crate::coordinator::session::Session;
 use crate::util::json::{self, Json};
 
 use engine::{EngineShared, Event, Submission};
+use fault::{FaultInjector, FaultSpec};
 use http::{ChunkedWriter, ParseError, Request};
 
 /// Soft cap on concurrently served connections; beyond it new arrivals
@@ -111,9 +120,14 @@ struct ConnCtx {
     engine_tx: mpsc::SyncSender<Submission>,
     shared: Arc<EngineShared>,
     shutdown: Arc<AtomicBool>,
+    /// Set after the engine loop returned: the accept loop (which keeps
+    /// serving probes through the drain) exits on it.
+    engine_done: Arc<AtomicBool>,
+    fault: Arc<FaultInjector>,
     next_id: AtomicU64,
     conns: AtomicUsize,
     slots: usize,
+    queue_depth: usize,
 }
 
 /// A bound-but-not-yet-serving HTTP front end. Two-phase so callers
@@ -123,6 +137,7 @@ struct ConnCtx {
 pub struct Frontend {
     listener: TcpListener,
     shutdown: Arc<AtomicBool>,
+    fault: Arc<FaultInjector>,
 }
 
 impl Frontend {
@@ -131,7 +146,11 @@ impl Frontend {
     pub fn bind(listen: &str) -> Result<Frontend> {
         let listener = TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
         listener.set_nonblocking(true).context("listener nonblocking")?;
-        Ok(Frontend { listener, shutdown: Arc::new(AtomicBool::new(false)) })
+        Ok(Frontend {
+            listener,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            fault: Arc::new(FaultInjector::disabled()),
+        })
     }
 
     /// The bound address (resolves port 0).
@@ -145,6 +164,17 @@ impl Frontend {
         self.shutdown.clone()
     }
 
+    /// Arm the fault-injection layer (the `--fault` / `EFLA_FAULT` spec;
+    /// also swappable at runtime through `POST /fault`).
+    pub fn set_fault_spec(&self, spec: FaultSpec) {
+        self.fault.set_spec(spec);
+    }
+
+    /// Handle to the fault layer (tests drive it directly).
+    pub fn fault_injector(&self) -> Arc<FaultInjector> {
+        self.fault.clone()
+    }
+
     /// Serve until shutdown (blocking). The engine runs on the calling
     /// thread; accept loop and connection workers are scoped threads, so
     /// everything is joined when this returns.
@@ -153,14 +183,18 @@ impl Frontend {
         let slots = session.decode_batch()?;
         let addr = self.local_addr()?;
         let (tx, rx) = mpsc::sync_channel::<Submission>(queue_depth);
-        let shared = Arc::new(EngineShared::new(LATENCY_SAMPLES));
+        let shared = Arc::new(EngineShared::with_fault(LATENCY_SAMPLES, self.fault.clone()));
+        let engine_done = Arc::new(AtomicBool::new(false));
         let ctx = ConnCtx {
             engine_tx: tx,
             shared: shared.clone(),
             shutdown: self.shutdown.clone(),
+            engine_done: engine_done.clone(),
+            fault: self.fault.clone(),
             next_id: AtomicU64::new(1),
             conns: AtomicUsize::new(0),
             slots,
+            queue_depth,
         };
         // Machine-readable readiness line on stdout: scripts/serve_smoke.py
         // and the integration tests key on it (logs go to stderr).
@@ -180,8 +214,10 @@ impl Frontend {
             s.spawn(move || accept_loop(s, listener, ctx));
             let stats = engine::run_engine(session, cfg, seed, rx, &shared, &shutdown);
             // Unblock the accept loop and any keep-alive workers even when
-            // the engine exits on an error.
+            // the engine exits on an error. The accept loop serves probes
+            // (healthz = draining) until the engine is done, then exits.
             shutdown.store(true, Ordering::SeqCst);
+            engine_done.store(true, Ordering::SeqCst);
             stats
         })?;
         log::info!(
@@ -203,7 +239,9 @@ fn accept_loop<'scope, 'env>(
         if SIGNALLED.load(Ordering::SeqCst) {
             ctx.shutdown.store(true, Ordering::SeqCst);
         }
-        if ctx.shutdown.load(Ordering::SeqCst) {
+        // Keep accepting through the drain — probes must observe the
+        // draining healthz status — and exit once the engine returned.
+        if ctx.engine_done.load(Ordering::SeqCst) {
             return;
         }
         match listener.accept() {
@@ -243,6 +281,11 @@ fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
 }
 
 fn serve_conn(stream: TcpStream, ctx: &ConnCtx) -> Result<()> {
+    // Fault layer: a refusing (or dead) replica drops the socket before
+    // reading a byte — the client sees a reset/closed connection.
+    if ctx.fault.refuse_connection() {
+        return Ok(());
+    }
     // Accepted sockets may inherit the listener's non-blocking mode on
     // some platforms; force blocking + timeouts.
     stream.set_nonblocking(false)?;
@@ -271,6 +314,9 @@ fn serve_conn(stream: TcpStream, ctx: &ConnCtx) -> Result<()> {
                 return Ok(());
             }
         };
+        // Fault layer: stall every parsed request (healthz included — a
+        // stalled replica must look stalled to the health prober).
+        ctx.fault.stall();
         let keep = req.keep_alive() && !ctx.shutdown.load(Ordering::SeqCst);
         route(&mut writer, &req, keep, ctx)?;
         if !keep {
@@ -279,17 +325,46 @@ fn serve_conn(stream: TcpStream, ctx: &ConnCtx) -> Result<()> {
     }
 }
 
+/// The `/healthz` body: `ok` plus a `status` of `"ok"`, `"draining"`
+/// (shutdown began) or `"saturated"` (admission queue full). The latter
+/// two answer 503 so a router health check stops routing here.
+fn healthz(w: &mut TcpStream, keep: bool, ctx: &ConnCtx) -> Result<()> {
+    let (status, ok, state) = if ctx.shutdown.load(Ordering::SeqCst) {
+        (503, false, "draining")
+    } else if ctx.shared.queue_depth() >= ctx.queue_depth {
+        (503, false, "saturated")
+    } else {
+        (200, true, "ok")
+    };
+    let body = Json::obj(vec![
+        ("ok", Json::Bool(ok)),
+        ("status", Json::Str(state.to_string())),
+        ("slots", Json::Num(ctx.slots as f64)),
+    ]);
+    respond_json(w, status, &body, keep)
+}
+
+fn handle_set_fault(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) -> Result<()> {
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(b) => b,
+        Err(_) => return respond_error(w, 400, "fault spec must be UTF-8", keep),
+    };
+    match FaultSpec::parse(body.trim()) {
+        Ok(spec) => {
+            log::warn!("fault spec set to {spec:?}");
+            ctx.fault.set_spec(spec);
+            respond_json(w, 200, &Json::obj(vec![("ok", Json::Bool(true))]), keep)
+        }
+        Err(msg) => respond_error(w, 400, &msg, keep),
+    }
+}
+
 fn route(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) -> Result<()> {
     match (req.method.as_str(), req.path()) {
-        ("GET", "/healthz") => {
-            let body = Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("slots", Json::Num(ctx.slots as f64)),
-            ]);
-            respond_json(w, 200, &body, keep)
-        }
+        ("GET", "/healthz") => healthz(w, keep, ctx),
         ("GET", "/stats") => respond_json(w, 200, &stats_json(ctx), keep),
         ("POST", "/v1/generate") => handle_generate(w, req, keep, ctx),
+        ("POST", "/fault") => handle_set_fault(w, req, keep, ctx),
         ("GET" | "HEAD", "/v1/generate") => respond_error(w, 405, "use POST", keep),
         (m, p) => respond_error(w, 404, &format!("no route {m} {p}"), keep),
     }
@@ -331,6 +406,7 @@ fn result_json(res: &GenResult, done_marker: bool) -> Json {
         ("tokens", toks),
         ("text", Json::Str(text)),
         ("steps", Json::Num(res.steps as f64)),
+        ("finish_reason", Json::Str(res.finish_reason.as_str().to_string())),
         ("ttft_ms", Json::Num(res.ttft_secs * 1e3)),
         ("queue_ms", Json::Num(res.queue_wait_secs * 1e3)),
         ("e2e_ms", Json::Num(res.e2e_secs * 1e3)),
@@ -352,6 +428,8 @@ fn stats_json(ctx: &ConnCtx) -> Json {
         ("rejected", Json::Num(ctx.shared.rejected.load(Ordering::SeqCst) as f64)),
         ("admitted", Json::Num(s.admitted as f64)),
         ("completed", Json::Num(s.completed as f64)),
+        ("timed_out", Json::Num(s.timed_out as f64)),
+        ("draining", Json::Bool(ctx.shutdown.load(Ordering::SeqCst))),
         ("engine_steps", Json::Num(s.engine_steps as f64)),
         ("prefill_tokens", Json::Num(s.prefill_tokens as f64)),
         ("decode_tokens", Json::Num(s.decode_tokens as f64)),
@@ -368,8 +446,17 @@ fn stats_json(ctx: &ConnCtx) -> Json {
     ])
 }
 
+/// A parsed `POST /v1/generate` body.
+struct ParsedGenerate {
+    req: GenRequest,
+    stream: bool,
+    /// Client deadline budget (`timeout_ms`), turned into an absolute
+    /// [`GenRequest::deadline`] against the arrival timestamp.
+    timeout_ms: Option<u64>,
+}
+
 /// Parse the generate body into a request; `Err(msg)` maps to a 400.
-fn parse_generate(j: &Json, ctx: &ConnCtx) -> std::result::Result<(GenRequest, bool), String> {
+fn parse_generate(j: &Json, ctx: &ConnCtx) -> std::result::Result<ParsedGenerate, String> {
     let prompt: Vec<i32> = if let Some(s) = j.get("prompt").as_str() {
         s.bytes().map(|b| b as i32).collect()
     } else if let Some(arr) = j.get("tokens").as_arr() {
@@ -399,6 +486,16 @@ fn parse_generate(j: &Json, ctx: &ConnCtx) -> std::result::Result<(GenRequest, b
     }
     let temperature = j.get("temperature").as_f64().unwrap_or(0.0) as f32;
     let stream = j.get("stream").as_bool().unwrap_or(false);
+    let timeout_ms = match j.get("timeout_ms") {
+        Json::Null => None,
+        v => {
+            let ms = v.as_usize().ok_or("timeout_ms must be a non-negative integer")? as u64;
+            if ms == 0 {
+                return Err("timeout_ms must be at least 1".into());
+            }
+            Some(ms)
+        }
+    };
     let id = match j.get("id") {
         Json::Null => AUTO_ID_BASE + ctx.next_id.fetch_add(1, Ordering::SeqCst),
         v => {
@@ -409,7 +506,8 @@ fn parse_generate(j: &Json, ctx: &ConnCtx) -> std::result::Result<(GenRequest, b
             id
         }
     };
-    Ok((GenRequest { id, prompt, max_new, temperature }, stream))
+    let req = GenRequest { id, prompt, max_new, temperature, deadline: None };
+    Ok(ParsedGenerate { req, stream, timeout_ms })
 }
 
 fn handle_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) -> Result<()> {
@@ -422,15 +520,23 @@ fn handle_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) 
         Ok(j) => j,
         Err(e) => return respond_error(w, 400, &format!("invalid JSON body: {e}"), keep),
     };
-    let (gen_req, stream) = match parse_generate(&j, ctx) {
+    let parsed = match parse_generate(&j, ctx) {
         Ok(parsed) => parsed,
         Err(msg) => return respond_error(w, 400, &msg, keep),
     };
+    let ParsedGenerate { mut req, stream, timeout_ms } = parsed;
+    if let Some(ms) = timeout_ms {
+        req.deadline = Some(submitted + Duration::from_millis(ms));
+    }
+    // Fault layer: count the request toward die_after; maybe inject a 500.
+    if ctx.fault.on_generate() {
+        return respond_error(w, 500, "injected fault", keep);
+    }
     if ctx.shutdown.load(Ordering::SeqCst) {
         return respond_error(w, 503, "shutting down", false);
     }
     let (ev_tx, ev_rx) = mpsc::channel::<Event>();
-    let sub = Submission { req: gen_req, submitted, stream, events: ev_tx };
+    let sub = Submission { req, submitted, stream, events: ev_tx };
     match ctx.engine_tx.try_send(sub) {
         Ok(()) => ctx.shared.note_accepted(),
         Err(mpsc::TrySendError::Full(_)) => {
@@ -442,7 +548,7 @@ fn handle_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) 
         }
     }
     if stream {
-        stream_response(w, &ev_rx, keep)
+        stream_response(w, &ev_rx, keep, ctx)
     } else {
         // Ignore Token events (none are sent for stream=false submissions)
         // and answer with the terminal event.
@@ -464,7 +570,14 @@ fn handle_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) 
 /// Streamed generate: hold the status line until the first event so a
 /// rejection still gets its real status code, then emit one JSON line
 /// per token and a final `"done": true` line.
-fn stream_response(w: &mut TcpStream, ev_rx: &mpsc::Receiver<Event>, keep: bool) -> Result<()> {
+fn stream_response(
+    w: &mut TcpStream,
+    ev_rx: &mpsc::Receiver<Event>,
+    keep: bool,
+    ctx: &ConnCtx,
+) -> Result<()> {
+    let cut_after = ctx.fault.cut_stream_after();
+    let mut sent_chunks = 0u64;
     let first = match ev_rx.recv() {
         Ok(ev) => ev,
         Err(_) => return respond_error(w, 503, "request dropped during shutdown", false),
@@ -482,6 +595,15 @@ fn stream_response(w: &mut TcpStream, ev_rx: &mpsc::Receiver<Event>, keep: bool)
                             ("text", Json::Str(printable(t).to_string())),
                         ]);
                         cw.chunk(format!("{}\n", piece.to_string()).as_bytes())?;
+                        sent_chunks += 1;
+                        if cut_after > 0 && sent_chunks >= cut_after {
+                            // Fault layer: abandon the chunked body with
+                            // no terminating 0-chunk and drop the
+                            // connection — the client sees a truncated
+                            // stream (tokens already on the wire, so a
+                            // router must NOT retry this request).
+                            anyhow::bail!("fault: stream cut after {cut_after} chunk(s)");
+                        }
                     }
                     Event::Done(res) => {
                         let fin = result_json(&res, true);

@@ -1,0 +1,961 @@
+//! `efla route`: a replica-sharded front end over N serving engines.
+//!
+//! The paper's O(1)-state property makes failover cheap: a replica holds
+//! no KV cache, so losing one loses at most the requests it was actively
+//! generating — the router's job is to make even those invisible where
+//! possible. This module schedules `POST /v1/generate` across replicas
+//! (in-process [`super::Frontend`]s on their own threads, or remote
+//! engines reached through [`super::http`]) with:
+//!
+//! * **least-loaded scheduling** — the routable replica with the fewest
+//!   router-side in-flight requests wins;
+//! * **health checking** — a prober polls every replica's `/healthz` on
+//!   an interval (and caches its `/stats` for aggregation); passive
+//!   request outcomes feed the same circuit breaker;
+//! * **a circuit breaker per replica** — `Healthy → Suspect → Ejected →
+//!   HalfOpen` ([`Breaker`]): consecutive failures suspect then eject,
+//!   a cooldown later one probe request may pass through, its outcome
+//!   closes or re-opens the circuit;
+//! * **retry with jittered exponential backoff** — connect failures,
+//!   read timeouts, 429s and 5xx failover to a *different* replica
+//!   (each replica is tried at most once per request, so a retry can
+//!   never bounce off its own duplicate id); a request whose stream
+//!   already emitted a token to the client is NEVER retried — the
+//!   stream is terminated with an error line instead;
+//! * **end-to-end deadlines** — the client's `timeout_ms` bounds the
+//!   whole retry budget; the body is forwarded verbatim, so the replica
+//!   engine also abandons its slot at the same deadline;
+//! * **graceful degradation** — when every replica is saturated or
+//!   ejected the router sheds with `503` + `Retry-After` instead of
+//!   queueing unboundedly, and `/stats` + `/healthz` keep answering
+//!   throughout (per-replica breakdown included).
+//!
+//! The router holds no model state of its own: it is std-only plumbing
+//! over the existing HTTP substrate, and greedy outputs proxied through
+//! it are bit-identical to hitting a replica directly.
+
+#![forbid(unsafe_code)]
+
+use std::collections::BTreeSet;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::Scope;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+use super::http::{self, ChunkedWriter, ClientOpts, ParseError, Request};
+use super::{respond_error, respond_json, SIGNALLED};
+
+/// Soft cap on concurrently served router connections.
+const MAX_CONNECTIONS: usize = 512;
+
+/// Router knobs. Defaults are tuned for LAN-local replicas.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Health probe period per replica, in ms.
+    pub health_interval_ms: u64,
+    /// Read/connect timeout of one health probe, in ms — a stalled
+    /// replica must fail the probe fast.
+    pub health_timeout_ms: u64,
+    /// Connect timeout of a proxied request, in ms.
+    pub connect_timeout_ms: u64,
+    /// Read timeout of a proxied request, in ms (per read; a healthy
+    /// token stream resets it chunk by chunk).
+    pub read_timeout_ms: u64,
+    /// Deadline applied to requests without their own `timeout_ms`.
+    /// 0 = none.
+    pub default_timeout_ms: u64,
+    /// Max replicas tried per request (connect failure / 429 / 5xx each
+    /// consume one attempt). Clamped to the replica count.
+    pub max_attempts: usize,
+    /// Backoff before retry k is `min(cap, base << k)` ms, jittered to
+    /// [1/2, 1) of itself.
+    pub backoff_base_ms: u64,
+    pub backoff_cap_ms: u64,
+    /// Consecutive failures before a replica turns Suspect / Ejected.
+    pub suspect_after: u32,
+    pub eject_after: u32,
+    /// Ejection cooldown before a half-open probe is allowed, in ms.
+    pub cooldown_ms: u64,
+    /// Seed of the backoff-jitter RNG.
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            health_interval_ms: 200,
+            health_timeout_ms: 500,
+            connect_timeout_ms: 1_000,
+            read_timeout_ms: 120_000,
+            default_timeout_ms: 0,
+            max_attempts: 3,
+            backoff_base_ms: 25,
+            backoff_cap_ms: 1_000,
+            suspect_after: 1,
+            eject_after: 3,
+            cooldown_ms: 1_000,
+            seed: 0,
+        }
+    }
+}
+
+/// Circuit-breaker states of one replica.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CircuitState {
+    /// Routable; no recent failures.
+    Healthy,
+    /// Routable, but accumulating consecutive failures.
+    Suspect,
+    /// Not routable; waiting out the cooldown.
+    Ejected,
+    /// Cooldown expired: exactly one probe request may pass through.
+    HalfOpen,
+}
+
+impl CircuitState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CircuitState::Healthy => "healthy",
+            CircuitState::Suspect => "suspect",
+            CircuitState::Ejected => "ejected",
+            CircuitState::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// Per-replica circuit breaker. Pure and time-explicit (every transition
+/// takes `now`), so the state machine is unit-testable without sleeping.
+#[derive(Clone, Debug)]
+pub struct Breaker {
+    suspect_after: u32,
+    eject_after: u32,
+    cooldown: Duration,
+    state: CircuitState,
+    /// Consecutive failures since the last success.
+    failures: u32,
+    ejected_at: Option<Instant>,
+    /// A half-open probe is in flight; further traffic stays blocked
+    /// until its outcome lands.
+    probing: bool,
+}
+
+impl Breaker {
+    pub fn new(suspect_after: u32, eject_after: u32, cooldown: Duration) -> Breaker {
+        Breaker {
+            suspect_after: suspect_after.max(1),
+            eject_after: eject_after.max(1),
+            cooldown,
+            state: CircuitState::Healthy,
+            failures: 0,
+            ejected_at: None,
+            probing: false,
+        }
+    }
+
+    pub fn state(&self) -> CircuitState {
+        self.state
+    }
+
+    /// Routable without a probe? (Healthy or Suspect.)
+    pub fn routable(&self) -> bool {
+        matches!(self.state, CircuitState::Healthy | CircuitState::Suspect)
+    }
+
+    /// A request or health probe against the replica succeeded: close
+    /// the circuit.
+    pub fn on_success(&mut self) {
+        self.state = CircuitState::Healthy;
+        self.failures = 0;
+        self.ejected_at = None;
+        self.probing = false;
+    }
+
+    /// A request or health probe failed. Returns true when this failure
+    /// newly ejected the replica (for the ejection counter).
+    pub fn on_failure(&mut self, now: Instant) -> bool {
+        self.failures = self.failures.saturating_add(1);
+        self.probing = false;
+        match self.state {
+            CircuitState::HalfOpen => {
+                // The probe failed: straight back to Ejected, cooldown
+                // restarts from now.
+                self.state = CircuitState::Ejected;
+                self.ejected_at = Some(now);
+                true
+            }
+            CircuitState::Healthy | CircuitState::Suspect => {
+                if self.failures >= self.eject_after {
+                    self.state = CircuitState::Ejected;
+                    self.ejected_at = Some(now);
+                    true
+                } else {
+                    if self.failures >= self.suspect_after {
+                        self.state = CircuitState::Suspect;
+                    }
+                    false
+                }
+            }
+            CircuitState::Ejected => false,
+        }
+    }
+
+    /// May one probe request pass through right now? Transitions
+    /// Ejected → HalfOpen once the cooldown expired and claims the
+    /// single probe slot.
+    pub fn try_probe(&mut self, now: Instant) -> bool {
+        match self.state {
+            CircuitState::Ejected => {
+                let expired = match self.ejected_at {
+                    Some(t) => now.duration_since(t) >= self.cooldown,
+                    None => true,
+                };
+                if expired {
+                    self.state = CircuitState::HalfOpen;
+                    self.probing = true;
+                    true
+                } else {
+                    false
+                }
+            }
+            CircuitState::HalfOpen => {
+                if self.probing {
+                    false
+                } else {
+                    self.probing = true;
+                    true
+                }
+            }
+            // Routable states need no probe slot.
+            CircuitState::Healthy | CircuitState::Suspect => true,
+        }
+    }
+}
+
+/// Jittered exponential backoff before retry `attempt` (0-based):
+/// uniform in [d/2, d) where d = min(cap, base << attempt).
+pub fn backoff_ms(cfg: &RouterConfig, attempt: usize, rng: &mut Rng) -> u64 {
+    let base = cfg.backoff_base_ms.max(1);
+    let mult = 1u64 << attempt.min(16);
+    let d = base.saturating_mul(mult).min(cfg.backoff_cap_ms.max(base));
+    let half = (d / 2).max(1);
+    half + rng.below(half)
+}
+
+/// One upstream replica as the router sees it.
+struct Replica {
+    addr: String,
+    breaker: Mutex<Breaker>,
+    /// Router-side in-flight requests (the least-loaded signal).
+    in_flight: AtomicUsize,
+    probes_ok: AtomicU64,
+    probes_failed: AtomicU64,
+    /// Last successfully fetched upstream `/stats` body, for the
+    /// aggregated view — served even while the replica is ejected.
+    last_stats: Mutex<Option<Json>>,
+}
+
+impl Replica {
+    fn new(addr: String, cfg: &RouterConfig) -> Replica {
+        let cooldown = Duration::from_millis(cfg.cooldown_ms);
+        Replica {
+            addr,
+            breaker: Mutex::new(Breaker::new(cfg.suspect_after, cfg.eject_after, cooldown)),
+            in_flight: AtomicUsize::new(0),
+            probes_ok: AtomicU64::new(0),
+            probes_failed: AtomicU64::new(0),
+            last_stats: Mutex::new(None),
+        }
+    }
+
+    fn breaker(&self) -> std::sync::MutexGuard<'_, Breaker> {
+        self.breaker.lock().expect("breaker lock")
+    }
+}
+
+/// Router-level counters surfaced by `GET /stats`.
+#[derive(Default)]
+struct RouterStats {
+    /// Generate requests received.
+    requests: AtomicU64,
+    /// Generate requests fully answered from a replica (200 or a relayed
+    /// client error).
+    proxied_ok: AtomicU64,
+    /// Failover attempts beyond each request's first try.
+    retries: AtomicU64,
+    /// Requests shed with 503 (+ Retry-After).
+    shed: AtomicU64,
+    /// 502s: every eligible replica failed hard.
+    failed: AtomicU64,
+    /// 504s: retry budget outlived the request deadline.
+    timeouts: AtomicU64,
+    /// Breaker transitions into Ejected.
+    ejections: AtomicU64,
+    /// Upstream attempt failures (connect/read/5xx), pre-retry.
+    upstream_errors: AtomicU64,
+    /// Streams that broke after the first forwarded token (terminated
+    /// with an error line, never retried).
+    streams_broken: AtomicU64,
+}
+
+/// Shared state of the accept loop, workers and prober.
+struct RouterCtx {
+    cfg: RouterConfig,
+    replicas: Vec<Replica>,
+    stats: RouterStats,
+    shutdown: Arc<AtomicBool>,
+    conns: AtomicUsize,
+    rng: Mutex<Rng>,
+}
+
+impl RouterCtx {
+    /// Pick the next replica for a request, excluding already-tried
+    /// ones: least-in-flight among routable replicas first, then a
+    /// half-open probe slot on a cooled-down ejected replica.
+    fn pick(&self, tried: &BTreeSet<usize>, now: Instant) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if tried.contains(&i) || !r.breaker().routable() {
+                continue;
+            }
+            let load = r.in_flight.load(Ordering::SeqCst);
+            let better = match best {
+                None => true,
+                Some((_, best_load)) => load < best_load,
+            };
+            if better {
+                best = Some((i, load));
+            }
+        }
+        if let Some((i, _)) = best {
+            return Some(i);
+        }
+        for (i, r) in self.replicas.iter().enumerate() {
+            if !tried.contains(&i) && r.breaker().try_probe(now) {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    fn note_success(&self, idx: usize) {
+        self.replicas[idx].breaker().on_success();
+    }
+
+    fn note_failure(&self, idx: usize, now: Instant) {
+        if self.replicas[idx].breaker().on_failure(now) {
+            self.stats.ejections.fetch_add(1, Ordering::SeqCst);
+            log::warn!("replica {} ejected", self.replicas[idx].addr);
+        }
+    }
+
+    /// Replicas currently routable (Healthy/Suspect).
+    fn available(&self) -> usize {
+        self.replicas.iter().filter(|r| r.breaker().routable()).count()
+    }
+}
+
+/// A bound-but-not-yet-serving router (two-phase like
+/// [`super::Frontend`]: callers learn the OS-assigned port and grab the
+/// shutdown flag before the blocking serve loop starts).
+pub struct Router {
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+    backends: Vec<String>,
+    cfg: RouterConfig,
+}
+
+impl Router {
+    /// Bind `listen` in front of `backends` (replica addresses).
+    pub fn bind(listen: &str, backends: Vec<String>, cfg: RouterConfig) -> Result<Router> {
+        anyhow::ensure!(!backends.is_empty(), "router needs at least one backend");
+        let listener = TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        Ok(Router { listener, shutdown: Arc::new(AtomicBool::new(false)), backends, cfg })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Serve until shutdown (blocking): accept loop on the calling
+    /// thread, one worker per connection plus the health prober as
+    /// scoped threads — all joined on return.
+    pub fn run(self) -> Result<()> {
+        let addr = self.local_addr()?;
+        let cfg = self.cfg;
+        let ctx = RouterCtx {
+            cfg,
+            replicas: self.backends.iter().map(|b| Replica::new(b.clone(), &cfg)).collect(),
+            stats: RouterStats::default(),
+            shutdown: self.shutdown.clone(),
+            conns: AtomicUsize::new(0),
+            rng: Mutex::new(Rng::new(cfg.seed)),
+        };
+        // Machine-readable readiness line (scripts/route_chaos.py keys
+        // on it; logs go to stderr).
+        println!("ROUTE listening on {addr}");
+        std::io::stdout().flush().ok();
+        log::info!(
+            "routing http://{addr} across {} replica(s): {}",
+            ctx.replicas.len(),
+            self.backends.join(", ")
+        );
+        let listener = self.listener;
+        std::thread::scope(|s| {
+            let ctx = &ctx;
+            s.spawn(move || prober_loop(ctx));
+            accept_loop(s, &listener, ctx);
+        });
+        log::info!(
+            "router served {} request(s): {} ok, {} shed, {} failed, {} retries, {} ejections",
+            ctx.stats.requests.load(Ordering::SeqCst),
+            ctx.stats.proxied_ok.load(Ordering::SeqCst),
+            ctx.stats.shed.load(Ordering::SeqCst),
+            ctx.stats.failed.load(Ordering::SeqCst),
+            ctx.stats.retries.load(Ordering::SeqCst),
+            ctx.stats.ejections.load(Ordering::SeqCst),
+        );
+        Ok(())
+    }
+}
+
+/// Poll every replica's `/healthz` (feeding the breaker) and cache its
+/// `/stats` for the aggregated view.
+fn prober_loop(ctx: &RouterCtx) {
+    let opts = ClientOpts {
+        connect_timeout: Duration::from_millis(ctx.cfg.health_timeout_ms.max(1)),
+        read_timeout: Duration::from_millis(ctx.cfg.health_timeout_ms.max(1)),
+    };
+    while !ctx.shutdown.load(Ordering::SeqCst) {
+        let now = Instant::now();
+        for (i, r) in ctx.replicas.iter().enumerate() {
+            let healthy = match http::request_with(&r.addr, "GET", "/healthz", b"", opts) {
+                Ok(resp) => resp.status == 200,
+                Err(_) => false,
+            };
+            if healthy {
+                r.probes_ok.fetch_add(1, Ordering::SeqCst);
+                ctx.note_success(i);
+                if let Ok(resp) = http::request_with(&r.addr, "GET", "/stats", b"", opts) {
+                    if resp.status == 200 {
+                        if let Ok(j) = json::parse(&resp.text()) {
+                            *r.last_stats.lock().expect("last_stats lock") = Some(j);
+                        }
+                    }
+                }
+            } else {
+                r.probes_failed.fetch_add(1, Ordering::SeqCst);
+                ctx.note_failure(i, now);
+            }
+        }
+        // Sleep in small steps so shutdown is observed promptly.
+        let mut left = ctx.cfg.health_interval_ms.max(10);
+        while left > 0 && !ctx.shutdown.load(Ordering::SeqCst) {
+            let step = left.min(20);
+            std::thread::sleep(Duration::from_millis(step));
+            left -= step;
+        }
+    }
+}
+
+fn accept_loop<'scope, 'env>(
+    scope: &'scope Scope<'scope, 'env>,
+    listener: &'scope TcpListener,
+    ctx: &'scope RouterCtx,
+) {
+    loop {
+        if SIGNALLED.load(Ordering::SeqCst) {
+            ctx.shutdown.store(true, Ordering::SeqCst);
+        }
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if ctx.conns.load(Ordering::SeqCst) >= MAX_CONNECTIONS {
+                    let mut stream = stream;
+                    let _ = http::write_response(
+                        &mut stream,
+                        503,
+                        "application/json",
+                        b"{\"error\":\"too many connections\"}",
+                        false,
+                    );
+                    continue;
+                }
+                ctx.conns.fetch_add(1, Ordering::SeqCst);
+                scope.spawn(move || {
+                    if let Err(e) = serve_conn(stream, ctx) {
+                        log::debug!("router connection ended: {e:#}");
+                    }
+                    ctx.conns.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                log::warn!("router accept error: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn serve_conn(stream: TcpStream, ctx: &RouterCtx) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        let req = match http::read_request(&mut reader, http::DEFAULT_MAX_BODY) {
+            Ok(req) => req,
+            Err(ParseError::Closed) => return Ok(()),
+            Err(ParseError::IdleTimeout) => {
+                if ctx.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(ParseError::Io(_)) => return Ok(()),
+            Err(e @ ParseError::BodyTooLarge { .. }) => {
+                respond_error(&mut writer, 413, &e.to_string(), false)?;
+                return Ok(());
+            }
+            Err(e) => {
+                respond_error(&mut writer, 400, &e.to_string(), false)?;
+                return Ok(());
+            }
+        };
+        let keep = req.keep_alive() && !ctx.shutdown.load(Ordering::SeqCst);
+        route(&mut writer, &req, keep, ctx)?;
+        if !keep {
+            return Ok(());
+        }
+    }
+}
+
+fn route(w: &mut TcpStream, req: &Request, keep: bool, ctx: &RouterCtx) -> Result<()> {
+    match (req.method.as_str(), req.path()) {
+        ("GET", "/healthz") => healthz(w, keep, ctx),
+        ("GET", "/stats") => respond_json(w, 200, &stats_json(ctx), keep),
+        ("POST", "/v1/generate") => proxy_generate(w, req, keep, ctx),
+        ("GET" | "HEAD", "/v1/generate") => respond_error(w, 405, "use POST", keep),
+        (m, p) => respond_error(w, 404, &format!("no route {m} {p}"), keep),
+    }
+}
+
+fn healthz(w: &mut TcpStream, keep: bool, ctx: &RouterCtx) -> Result<()> {
+    let draining = ctx.shutdown.load(Ordering::SeqCst);
+    let (status, ok, state) = if draining { (503, false, "draining") } else { (200, true, "ok") };
+    let body = Json::obj(vec![
+        ("ok", Json::Bool(ok)),
+        ("status", Json::Str(state.to_string())),
+        ("replicas", Json::Num(ctx.replicas.len() as f64)),
+        ("available", Json::Num(ctx.available() as f64)),
+    ]);
+    respond_json(w, status, &body, keep)
+}
+
+fn stats_json(ctx: &RouterCtx) -> Json {
+    let mut per_replica = Vec::new();
+    let mut agg_completed = 0.0;
+    let mut agg_tokens = 0.0;
+    let mut agg_tok_s = 0.0;
+    for r in &ctx.replicas {
+        let state = r.breaker().state();
+        let cached = r.last_stats.lock().expect("last_stats lock").clone();
+        if let Some(js) = &cached {
+            agg_completed += js.get("completed").as_f64().unwrap_or(0.0);
+            agg_tokens += js.get("tokens_processed").as_f64().unwrap_or(0.0);
+            agg_tok_s += js.get("tokens_per_sec").as_f64().unwrap_or(0.0);
+        }
+        per_replica.push(Json::obj(vec![
+            ("addr", Json::Str(r.addr.clone())),
+            ("state", Json::Str(state.as_str().to_string())),
+            ("in_flight", Json::Num(r.in_flight.load(Ordering::SeqCst) as f64)),
+            ("probes_ok", Json::Num(r.probes_ok.load(Ordering::SeqCst) as f64)),
+            ("probes_failed", Json::Num(r.probes_failed.load(Ordering::SeqCst) as f64)),
+            ("stats", cached.unwrap_or(Json::Null)),
+        ]));
+    }
+    let s = &ctx.stats;
+    Json::obj(vec![
+        ("replicas", Json::Arr(per_replica)),
+        ("available", Json::Num(ctx.available() as f64)),
+        ("requests", Json::Num(s.requests.load(Ordering::SeqCst) as f64)),
+        ("proxied_ok", Json::Num(s.proxied_ok.load(Ordering::SeqCst) as f64)),
+        ("retries", Json::Num(s.retries.load(Ordering::SeqCst) as f64)),
+        ("shed", Json::Num(s.shed.load(Ordering::SeqCst) as f64)),
+        ("failed", Json::Num(s.failed.load(Ordering::SeqCst) as f64)),
+        ("timeouts", Json::Num(s.timeouts.load(Ordering::SeqCst) as f64)),
+        ("ejections", Json::Num(s.ejections.load(Ordering::SeqCst) as f64)),
+        ("upstream_errors", Json::Num(s.upstream_errors.load(Ordering::SeqCst) as f64)),
+        ("streams_broken", Json::Num(s.streams_broken.load(Ordering::SeqCst) as f64)),
+        (
+            "aggregate",
+            Json::obj(vec![
+                ("completed", Json::Num(agg_completed)),
+                ("tokens_processed", Json::Num(agg_tokens)),
+                ("tokens_per_sec", Json::Num(agg_tok_s)),
+            ]),
+        ),
+    ])
+}
+
+/// Outcome of one upstream attempt.
+enum Attempt {
+    /// The response was fully relayed to the client; the request is done.
+    Done,
+    /// Retryable upstream status (429 / 5xx); nothing was written to
+    /// the client.
+    Retryable(u16),
+    /// Transport failure (connect / read / parse) with nothing written
+    /// to the client.
+    Failed(String),
+    /// The stream broke after at least one forwarded token; the client
+    /// response was terminated with an error line. Terminal: never retry.
+    Broken,
+}
+
+fn shed(w: &mut TcpStream, ctx: &RouterCtx, keep: bool, why: &str) -> Result<()> {
+    ctx.stats.shed.fetch_add(1, Ordering::SeqCst);
+    let body = Json::obj(vec![("error", Json::Str(why.to_string()))]).to_string();
+    http::write_response_with(
+        w,
+        503,
+        "application/json",
+        &[("retry-after", "1")],
+        body.as_bytes(),
+        keep,
+    )?;
+    Ok(())
+}
+
+fn proxy_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &RouterCtx) -> Result<()> {
+    let arrived = Instant::now();
+    ctx.stats.requests.fetch_add(1, Ordering::SeqCst);
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(b) => b,
+        Err(_) => return respond_error(w, 400, "body must be UTF-8 JSON", keep),
+    };
+    let j = match json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return respond_error(w, 400, &format!("invalid JSON body: {e}"), keep),
+    };
+    let stream = j.get("stream").as_bool().unwrap_or(false);
+    let timeout_ms = match j.get("timeout_ms") {
+        Json::Null => {
+            if ctx.cfg.default_timeout_ms > 0 {
+                Some(ctx.cfg.default_timeout_ms)
+            } else {
+                None
+            }
+        }
+        v => match v.as_usize() {
+            Some(ms) if ms > 0 => Some(ms as u64),
+            _ => return respond_error(w, 400, "timeout_ms must be a positive integer", keep),
+        },
+    };
+    let deadline = timeout_ms.map(|ms| arrived + Duration::from_millis(ms));
+
+    let mut tried: BTreeSet<usize> = BTreeSet::new();
+    let max_attempts = ctx.cfg.max_attempts.clamp(1, ctx.replicas.len());
+    let mut attempts = 0usize;
+    let mut saw_hard_failure = false;
+    let mut last_error = String::new();
+    loop {
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            ctx.stats.timeouts.fetch_add(1, Ordering::SeqCst);
+            return respond_error(w, 504, "deadline exceeded before a replica answered", keep);
+        }
+        if attempts >= max_attempts {
+            break;
+        }
+        let now = Instant::now();
+        let Some(idx) = ctx.pick(&tried, now) else { break };
+        tried.insert(idx);
+        if attempts > 0 {
+            ctx.stats.retries.fetch_add(1, Ordering::SeqCst);
+            let ms = {
+                let mut rng = ctx.rng.lock().expect("rng lock");
+                backoff_ms(&ctx.cfg, attempts - 1, &mut rng)
+            };
+            let mut wait = Duration::from_millis(ms);
+            if let Some(d) = deadline {
+                wait = wait.min(d.saturating_duration_since(Instant::now()));
+            }
+            std::thread::sleep(wait);
+        }
+        attempts += 1;
+        let replica = &ctx.replicas[idx];
+        replica.in_flight.fetch_add(1, Ordering::SeqCst);
+        let outcome = forward(w, &replica.addr, &req.body, stream, deadline, keep, ctx);
+        replica.in_flight.fetch_sub(1, Ordering::SeqCst);
+        match outcome? {
+            Attempt::Done => {
+                ctx.note_success(idx);
+                ctx.stats.proxied_ok.fetch_add(1, Ordering::SeqCst);
+                return Ok(());
+            }
+            Attempt::Retryable(status) => {
+                if status == 429 {
+                    // A full admission queue means the replica is alive —
+                    // don't trip its breaker, just go elsewhere.
+                    ctx.note_success(idx);
+                } else {
+                    saw_hard_failure = true;
+                    ctx.stats.upstream_errors.fetch_add(1, Ordering::SeqCst);
+                    ctx.note_failure(idx, Instant::now());
+                }
+                last_error = format!("replica {} answered {status}", replica.addr);
+            }
+            Attempt::Failed(e) => {
+                saw_hard_failure = true;
+                ctx.stats.upstream_errors.fetch_add(1, Ordering::SeqCst);
+                ctx.note_failure(idx, Instant::now());
+                last_error = format!("replica {}: {e}", replica.addr);
+            }
+            Attempt::Broken => {
+                ctx.stats.streams_broken.fetch_add(1, Ordering::SeqCst);
+                ctx.note_failure(idx, Instant::now());
+                // Tokens already reached the client: terminal by design.
+                return Ok(());
+            }
+        }
+    }
+    if saw_hard_failure {
+        ctx.stats.failed.fetch_add(1, Ordering::SeqCst);
+        respond_error(w, 502, &format!("all replicas failed ({last_error})"), keep)
+    } else {
+        // Everything routable was saturated (429s) or no replica was
+        // routable at all: shed politely.
+        shed(w, ctx, keep, "all replicas saturated or ejected, retry later")
+    }
+}
+
+/// Run one upstream attempt and relay the outcome. Never writes a byte
+/// to the client before the upstream outcome is known (non-streaming) or
+/// the first token chunk arrived (streaming) — everything before that
+/// point stays retryable.
+fn forward(
+    w: &mut TcpStream,
+    addr: &str,
+    body: &[u8],
+    stream: bool,
+    deadline: Option<Instant>,
+    keep: bool,
+    ctx: &RouterCtx,
+) -> Result<Attempt> {
+    let mut read_timeout = Duration::from_millis(ctx.cfg.read_timeout_ms.max(1));
+    if let Some(d) = deadline {
+        let left = d.saturating_duration_since(Instant::now());
+        // The engine answers a timed-out request itself (finish_reason
+        // "timeout"); pad the socket bound so that answer can arrive
+        // before the router's own 504 path cuts the connection.
+        read_timeout = read_timeout.min(left + Duration::from_millis(250)).max(MIN_READ_TIMEOUT);
+    }
+    let opts = ClientOpts {
+        connect_timeout: Duration::from_millis(ctx.cfg.connect_timeout_ms.max(1)),
+        read_timeout,
+    };
+    if !stream {
+        return match http::request_with(addr, "POST", "/v1/generate", body, opts) {
+            Err(e) => Ok(Attempt::Failed(e.to_string())),
+            Ok(resp) => match resp.status {
+                429 => Ok(Attempt::Retryable(429)),
+                s if s >= 500 => Ok(Attempt::Retryable(s)),
+                s => {
+                    // 200 or a client error (400/404/409/413): relay
+                    // verbatim — retrying a client error elsewhere
+                    // cannot change the answer.
+                    http::write_response(w, s, "application/json", &resp.body, keep)?;
+                    Ok(Attempt::Done)
+                }
+            },
+        };
+    }
+    let mut sr = match http::request_streaming(addr, "POST", "/v1/generate", body, opts) {
+        Ok(sr) => sr,
+        Err(e) => return Ok(Attempt::Failed(e.to_string())),
+    };
+    if sr.status != 200 {
+        // Error statuses arrive with fixed-length bodies; drain and
+        // relay or retry with the non-streaming rules.
+        let mut full = Vec::new();
+        loop {
+            match sr.next_chunk() {
+                Ok(Some(chunk)) => full.extend_from_slice(&chunk),
+                Ok(None) => break,
+                Err(e) => return Ok(Attempt::Failed(e.to_string())),
+            }
+        }
+        return match sr.status {
+            429 => Ok(Attempt::Retryable(429)),
+            s if s >= 500 => Ok(Attempt::Retryable(s)),
+            s => {
+                http::write_response(w, s, "application/json", &full, keep)?;
+                Ok(Attempt::Done)
+            }
+        };
+    }
+    // Hold the client's response head until the first upstream token
+    // chunk is in hand: a failure before it stays retryable, a failure
+    // after it is terminal.
+    let first = match sr.next_chunk() {
+        Ok(Some(chunk)) => chunk,
+        Ok(None) => return Ok(Attempt::Failed("empty upstream stream".into())),
+        Err(e) => return Ok(Attempt::Failed(e.to_string())),
+    };
+    let mut cw = ChunkedWriter::start(w, 200, "application/json", keep)?;
+    cw.chunk(&first)?;
+    loop {
+        match sr.next_chunk() {
+            Ok(Some(chunk)) => cw.chunk(&chunk)?,
+            Ok(None) => {
+                cw.finish()?;
+                return Ok(Attempt::Done);
+            }
+            Err(e) => {
+                // Mid-stream upstream failure with tokens already on the
+                // wire: terminate the client stream cleanly (error line +
+                // proper chunked framing), never retry.
+                let err = Json::obj(vec![
+                    ("error", Json::Str(format!("upstream stream broke: {e}"))),
+                    ("done", Json::Bool(true)),
+                ]);
+                cw.chunk(format!("{}\n", err.to_string()).as_bytes())?;
+                cw.finish()?;
+                return Ok(Attempt::Broken);
+            }
+        }
+    }
+}
+
+/// Floor of the per-attempt socket read timeout.
+const MIN_READ_TIMEOUT: Duration = Duration::from_millis(50);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker() -> Breaker {
+        Breaker::new(1, 3, Duration::from_millis(100))
+    }
+
+    #[test]
+    fn breaker_walks_healthy_suspect_ejected() {
+        let t0 = Instant::now();
+        let mut b = breaker();
+        assert_eq!(b.state(), CircuitState::Healthy);
+        assert!(b.routable());
+        assert!(!b.on_failure(t0), "first failure suspects, not ejects");
+        assert_eq!(b.state(), CircuitState::Suspect);
+        assert!(b.routable(), "suspect replicas still take traffic");
+        assert!(!b.on_failure(t0));
+        assert!(b.on_failure(t0), "third consecutive failure ejects");
+        assert_eq!(b.state(), CircuitState::Ejected);
+        assert!(!b.routable());
+    }
+
+    #[test]
+    fn breaker_success_closes_from_any_state() {
+        let t0 = Instant::now();
+        let mut b = breaker();
+        b.on_failure(t0);
+        b.on_failure(t0);
+        b.on_success();
+        assert_eq!(b.state(), CircuitState::Healthy);
+        // The failure streak is reset too: two more failures only
+        // suspect again.
+        b.on_failure(t0);
+        assert!(!b.on_failure(t0));
+        assert_eq!(b.state(), CircuitState::Suspect);
+    }
+
+    #[test]
+    fn breaker_half_open_admits_exactly_one_probe() {
+        let t0 = Instant::now();
+        let mut b = breaker();
+        for _ in 0..3 {
+            b.on_failure(t0);
+        }
+        assert_eq!(b.state(), CircuitState::Ejected);
+        // Cooldown not expired: no probe.
+        assert!(!b.try_probe(t0 + Duration::from_millis(50)));
+        assert_eq!(b.state(), CircuitState::Ejected);
+        // Cooldown expired: exactly one probe passes.
+        let t1 = t0 + Duration::from_millis(150);
+        assert!(b.try_probe(t1));
+        assert_eq!(b.state(), CircuitState::HalfOpen);
+        assert!(!b.try_probe(t1), "second concurrent probe is blocked");
+        // Probe success closes the circuit.
+        b.on_success();
+        assert_eq!(b.state(), CircuitState::Healthy);
+    }
+
+    #[test]
+    fn breaker_failed_probe_reejects_with_fresh_cooldown() {
+        let t0 = Instant::now();
+        let mut b = breaker();
+        for _ in 0..3 {
+            b.on_failure(t0);
+        }
+        let t1 = t0 + Duration::from_millis(150);
+        assert!(b.try_probe(t1));
+        assert!(b.on_failure(t1), "a failed probe is a fresh ejection");
+        assert_eq!(b.state(), CircuitState::Ejected);
+        // The cooldown restarts at t1, so t1+50ms is still closed...
+        assert!(!b.try_probe(t1 + Duration::from_millis(50)));
+        // ...and t1+150ms admits the next probe.
+        assert!(b.try_probe(t1 + Duration::from_millis(150)));
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_respects_the_cap() {
+        let cfg = RouterConfig {
+            backoff_base_ms: 16,
+            backoff_cap_ms: 200,
+            ..RouterConfig::default()
+        };
+        let mut rng = Rng::new(7);
+        for attempt in 0..10 {
+            let d = (16u64 << attempt).min(200);
+            let ms = backoff_ms(&cfg, attempt, &mut rng);
+            assert!(
+                ms >= (d / 2).max(1) && ms < d.max(2),
+                "attempt {attempt}: backoff {ms}ms outside [{}, {})",
+                (d / 2).max(1),
+                d
+            );
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed() {
+        let cfg = RouterConfig::default();
+        let run = |seed: u64| -> Vec<u64> {
+            let mut rng = Rng::new(seed);
+            (0..8).map(|a| backoff_ms(&cfg, a, &mut rng)).collect()
+        };
+        assert_eq!(run(3), run(3));
+    }
+
+    #[test]
+    fn router_rejects_an_empty_backend_list() {
+        assert!(Router::bind("127.0.0.1:0", Vec::new(), RouterConfig::default()).is_err());
+    }
+}

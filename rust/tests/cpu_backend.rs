@@ -138,7 +138,13 @@ fn server_decodes_greedily_on_cpu() {
     let mut server = Server::new(&session, 3).unwrap();
     for id in 0..(server.batch_size() as u64 + 1) {
         server
-            .submit(GenRequest { id, prompt: vec![10, 20, 30], max_new: 4, temperature: 0.0 })
+            .submit(GenRequest {
+                id,
+                prompt: vec![10, 20, 30],
+                max_new: 4,
+                temperature: 0.0,
+                deadline: None,
+            })
             .unwrap();
     }
     let results = server.run_to_completion().unwrap();

@@ -113,7 +113,7 @@ fn http_path_matches_in_process_engine_bitwise() {
     for (i, p) in prompts.iter().enumerate() {
         let prompt: Vec<i32> = p.bytes().map(|b| b as i32).collect();
         server
-            .submit(GenRequest { id: i as u64, prompt, max_new, temperature: 0.0 })
+            .submit(GenRequest { id: i as u64, prompt, max_new, temperature: 0.0, deadline: None })
             .unwrap();
     }
     let reference = server.run_to_completion().unwrap();
@@ -335,6 +335,136 @@ fn healthz_stats_and_routing() {
         assert_eq!(missing.status, 404);
         let wrong_method = http::request(addr, "GET", "/v1/generate", b"").unwrap();
         assert_eq!(wrong_method.status, 405);
+    });
+}
+
+#[test]
+fn request_deadline_expires_with_timeout_finish_reason() {
+    // Satellite of the deadline plumbing: `timeout_ms` in the body turns
+    // into an engine-side deadline — a stalled engine must hand the slot
+    // back at the deadline with finish_reason "timeout" and the partial
+    // tokens, and count the request in the `timed_out` stat.
+    let session = tiny_session();
+    let ((), stats) = with_server(&session, ServerConfig::default(), |addr| {
+        let armed = http::request(addr, "POST", "/fault", b"engine_stall_ms=100").unwrap();
+        assert_eq!(armed.status, 200, "{}", armed.text());
+        let body = "{\"id\":1,\"prompt\":\"deadline probe\",\"max_tokens\":1000,\
+                    \"timeout_ms\":250}";
+        let resp = http::request(addr, "POST", "/v1/generate", body.as_bytes()).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.text());
+        let j = json::parse(&resp.text()).unwrap();
+        assert_eq!(j.get("finish_reason").as_str(), Some("timeout"), "{}", resp.text());
+        assert!(
+            tokens_of(&j).len() < 1000,
+            "the slot must be abandoned long before max_tokens: {}",
+            resp.text()
+        );
+        let st = http::request(addr, "GET", "/stats", b"").unwrap();
+        let sj = json::parse(&st.text()).unwrap();
+        assert!(sj.get("timed_out").as_f64().unwrap() >= 1.0, "{}", st.text());
+        // Disarm so the shutdown drain runs at full speed.
+        let disarmed = http::request(addr, "POST", "/fault", b"").unwrap();
+        assert_eq!(disarmed.status, 200);
+    });
+    assert!(stats.timed_out >= 1);
+}
+
+#[test]
+fn healthz_reports_draining_and_streams_drain_to_completion() {
+    // Two lifecycle contracts at once: during shutdown /healthz answers
+    // 503 "draining" (so a router health check stops routing here), and
+    // a streaming request that was in flight when the flag flipped keeps
+    // its full token budget — no truncated chunked body.
+    let session = tiny_session();
+    let cfg = ServerConfig { drain_timeout_secs: 60.0, ..ServerConfig::default() };
+    let fe = Frontend::bind("127.0.0.1:0").unwrap();
+    let addr = fe.local_addr().unwrap().to_string();
+    let stop = fe.shutdown_flag();
+    let max_new = 24usize;
+    let ((status, lines), stats) = std::thread::scope(|s| {
+        let client = s.spawn(move || {
+            // Slow the engine so the generation outlives the drain flip.
+            let armed = http::request(&addr, "POST", "/fault", b"engine_stall_ms=30").unwrap();
+            assert_eq!(armed.status, 200, "{}", armed.text());
+            let streamer = s.spawn({
+                let addr = addr.clone();
+                move || {
+                    let body = generate_body(1, "drain stream probe", max_new, true);
+                    let resp =
+                        http::request(&addr, "POST", "/v1/generate", body.as_bytes()).unwrap();
+                    let lines: Vec<String> = resp.text().lines().map(String::from).collect();
+                    (resp.status, lines)
+                }
+            });
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            stop.store(true, Ordering::SeqCst);
+            // The front end keeps serving probes through the drain and
+            // reports itself as draining.
+            let h = http::request(&addr, "GET", "/healthz", b"").unwrap();
+            assert_eq!(h.status, 503, "{}", h.text());
+            let hj = json::parse(&h.text()).unwrap();
+            assert_eq!(hj.get("status").as_str(), Some("draining"));
+            assert_eq!(hj.get("ok").as_bool(), Some(false));
+            streamer.join().expect("streaming client")
+        });
+        let stats = fe.run(&session, cfg, 42).unwrap();
+        (client.join().expect("client thread"), stats)
+    });
+    assert_eq!(status, 200);
+    assert_eq!(lines.len(), max_new + 1, "token lines + final line: {lines:?}");
+    let last = json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(last.get("done").as_bool(), Some(true), "stream must terminate cleanly");
+    assert_eq!(tokens_of(&last).len(), max_new, "drained stream keeps its budget");
+    assert_eq!(last.get("finish_reason").as_str(), Some("length"));
+    assert_eq!(stats.completed, 1);
+}
+
+#[test]
+fn healthz_reports_saturated_while_the_queue_is_full() {
+    let session = tiny_session();
+    let cfg = ServerConfig { queue_depth: 1, ..ServerConfig::default() };
+    let ((), _stats) = with_server(&session, cfg, |addr| {
+        // Stall the engine, then bury it: slots + the 1-deep queue fill
+        // up and stay full long enough to observe the saturated probe.
+        let armed = http::request(addr, "POST", "/fault", b"engine_stall_ms=200").unwrap();
+        assert_eq!(armed.status, 200, "{}", armed.text());
+        std::thread::scope(|s| {
+            for i in 0..8u64 {
+                s.spawn(move || {
+                    let body = generate_body(i + 1, "saturation probe", 2, false);
+                    let resp =
+                        http::request(addr, "POST", "/v1/generate", body.as_bytes()).unwrap();
+                    assert!(
+                        resp.status == 200 || resp.status == 429,
+                        "request {i}: {}",
+                        resp.text()
+                    );
+                });
+            }
+            let mut saw_saturated = false;
+            for _ in 0..300 {
+                let h = http::request(addr, "GET", "/healthz", b"").unwrap();
+                let hj = json::parse(&h.text()).unwrap();
+                if h.status == 503 && hj.get("status").as_str() == Some("saturated") {
+                    assert_eq!(hj.get("ok").as_bool(), Some(false));
+                    saw_saturated = true;
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            assert!(saw_saturated, "healthz never reported saturation under a full queue");
+        });
+        let disarmed = http::request(addr, "POST", "/fault", b"").unwrap();
+        assert_eq!(disarmed.status, 200);
+        // Once the burst drains the probe goes back to 200 "ok".
+        for _ in 0..300 {
+            let h = http::request(addr, "GET", "/healthz", b"").unwrap();
+            if h.status == 200 {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        panic!("healthz never recovered to 200 after the queue drained");
     });
 }
 

@@ -1,0 +1,376 @@
+//! Integration tests of the replica-sharded router (`efla route`).
+//!
+//! Each test stands up real in-process replicas — one serving front end
+//! per thread, each owning its own single-thread CPU session — behind a
+//! [`Router`], and drives faults through the replicas' deterministic
+//! [`FaultInjector`] handles. The contracts pinned here:
+//!
+//! * proxying is invisible: greedy tokens through the router are
+//!   bit-identical to hitting a replica directly;
+//! * injected 500s fail over to another replica without a client-visible
+//!   error;
+//! * when every replica is down the router sheds with 503 + Retry-After
+//!   instead of hanging, and its own /healthz + /stats keep answering;
+//! * a stream that broke after the first forwarded token is terminated
+//!   with an error line and NEVER retried;
+//! * a request deadline bounds the whole retry budget (504), and the
+//!   service recovers once the fault clears;
+//! * an ejected replica is re-admitted by the health prober after the
+//!   fault clears.
+
+#![forbid(unsafe_code)]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use efla::coordinator::server::ServerConfig;
+use efla::coordinator::session::Session;
+use efla::runtime::CpuBackend;
+use efla::serve::fault::{FaultInjector, FaultSpec};
+use efla::serve::router::{Router, RouterConfig};
+use efla::serve::{http, Frontend};
+use efla::util::json::{self, Json};
+
+/// A running router + replica topology, addressed by the client closure.
+struct Cluster {
+    router: String,
+    replicas: Vec<String>,
+    faults: Vec<Arc<FaultInjector>>,
+}
+
+/// Bind `n` replicas and a router over them, run everything on scoped
+/// threads, wait until the prober saw every replica healthy, then hand
+/// the cluster to the client closure. All loops stop when the closure
+/// returns (or panics).
+fn with_cluster<F, T>(n: usize, cfg: RouterConfig, f: F) -> T
+where
+    F: FnOnce(&Cluster) -> T,
+{
+    let mut frontends = Vec::new();
+    let mut addrs = Vec::new();
+    let mut flags = Vec::new();
+    let mut faults = Vec::new();
+    for _ in 0..n {
+        let fe = Frontend::bind("127.0.0.1:0").unwrap();
+        addrs.push(fe.local_addr().unwrap().to_string());
+        flags.push(fe.shutdown_flag());
+        faults.push(fe.fault_injector());
+        frontends.push(fe);
+    }
+    let router = Router::bind("127.0.0.1:0", addrs.clone(), cfg).unwrap();
+    let raddr = router.local_addr().unwrap().to_string();
+    flags.push(router.shutdown_flag());
+    std::thread::scope(|s| {
+        for fe in frontends {
+            s.spawn(move || {
+                let backend = CpuBackend::with_threads(1);
+                let session = Session::init(&backend, "lm_tiny_efla", 7).unwrap();
+                fe.run(&session, ServerConfig::default(), 42).unwrap();
+            });
+        }
+        s.spawn(move || router.run().unwrap());
+        // Stop every serve loop even when a client assertion panics —
+        // otherwise the scope would join forever.
+        struct StopGuard(Vec<Arc<AtomicBool>>);
+        impl Drop for StopGuard {
+            fn drop(&mut self) {
+                for f in &self.0 {
+                    f.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+        let _guard = StopGuard(flags);
+        let cluster = Cluster { router: raddr, replicas: addrs, faults };
+        wait_until_probed(&cluster.router, n);
+        f(&cluster)
+    })
+}
+
+/// Poll the router's /stats until all `n` replicas answered at least one
+/// health probe (so requests cannot race the first probe cycle).
+fn wait_until_probed(router: &str, n: usize) {
+    let t0 = Instant::now();
+    loop {
+        if let Ok(resp) = http::request(router, "GET", "/stats", b"") {
+            let j = json::parse(&resp.text()).unwrap();
+            let live = j
+                .get("replicas")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter(|r| r.get("probes_ok").as_f64().unwrap_or(0.0) >= 1.0)
+                .count();
+            if live == n {
+                return;
+            }
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "replicas never became healthy");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Poll the router's /stats until replica `idx` reports breaker `state`.
+fn wait_for_state(router: &str, idx: usize, state: &str) {
+    let t0 = Instant::now();
+    loop {
+        let resp = http::request(router, "GET", "/stats", b"").unwrap();
+        let j = json::parse(&resp.text()).unwrap();
+        let got = j.get("replicas").as_arr().unwrap()[idx]
+            .get("state")
+            .as_str()
+            .unwrap()
+            .to_string();
+        if got == state {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "replica {idx} never reached {state:?} (at {got:?})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Fast knobs so breaker transitions happen in test time, not wall time.
+fn fast_cfg() -> RouterConfig {
+    RouterConfig {
+        health_interval_ms: 25,
+        health_timeout_ms: 250,
+        backoff_base_ms: 5,
+        backoff_cap_ms: 40,
+        cooldown_ms: 200,
+        seed: 3,
+        ..RouterConfig::default()
+    }
+}
+
+fn gen_body(id: u64, max_tokens: usize, stream: bool, extra: &str) -> String {
+    format!(
+        "{{\"id\":{id},\"tokens\":[5,6,7,8],\"max_tokens\":{max_tokens},\
+         \"stream\":{stream}{extra}}}"
+    )
+}
+
+fn tokens_of(j: &Json) -> Vec<i64> {
+    j.get("tokens").as_arr().unwrap().iter().map(|v| v.as_i64().unwrap()).collect()
+}
+
+fn router_stats(router: &str) -> Json {
+    let resp = http::request(router, "GET", "/stats", b"").unwrap();
+    assert_eq!(resp.status, 200);
+    json::parse(&resp.text()).unwrap()
+}
+
+#[test]
+fn router_proxies_bit_identically_to_a_direct_replica() {
+    with_cluster(2, fast_cfg(), |c| {
+        let direct = http::request(
+            &c.replicas[0],
+            "POST",
+            "/v1/generate",
+            gen_body(1, 5, false, "").as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(direct.status, 200, "{}", direct.text());
+        let direct_toks = tokens_of(&json::parse(&direct.text()).unwrap());
+
+        // The same prompt through the router, repeatedly: every answer
+        // must be bit-identical to the direct hit (the router adds no
+        // model state of its own, and the replicas share seed + family).
+        for id in 2..6u64 {
+            let resp = http::request(
+                &c.router,
+                "POST",
+                "/v1/generate",
+                gen_body(id, 5, false, "").as_bytes(),
+            )
+            .unwrap();
+            assert_eq!(resp.status, 200, "request {id}: {}", resp.text());
+            let j = json::parse(&resp.text()).unwrap();
+            assert_eq!(j.get("id").as_i64(), Some(id as i64));
+            assert_eq!(tokens_of(&j), direct_toks, "request {id} diverged through the router");
+        }
+
+        let h = http::request(&c.router, "GET", "/healthz", b"").unwrap();
+        assert_eq!(h.status, 200);
+        let hj = json::parse(&h.text()).unwrap();
+        assert_eq!(hj.get("ok").as_bool(), Some(true));
+        assert_eq!(hj.get("replicas").as_usize(), Some(2));
+        assert_eq!(hj.get("available").as_usize(), Some(2));
+
+        let st = router_stats(&c.router);
+        assert!(st.get("requests").as_f64().unwrap() >= 4.0);
+        assert!(st.get("proxied_ok").as_f64().unwrap() >= 4.0);
+        assert_eq!(st.get("failed").as_f64(), Some(0.0));
+        assert_eq!(st.get("shed").as_f64(), Some(0.0));
+        assert!(
+            st.get("aggregate").get("tokens_processed").as_f64().is_some(),
+            "aggregate stats block missing: {st:?}"
+        );
+        // Client errors relay verbatim (retrying elsewhere cannot help).
+        let bad = http::request(&c.router, "POST", "/v1/generate", b"{}").unwrap();
+        assert_eq!(bad.status, 400, "{}", bad.text());
+        let missing = http::request(&c.router, "GET", "/nope", b"").unwrap();
+        assert_eq!(missing.status, 404);
+    });
+}
+
+#[test]
+fn router_fails_over_injected_500s_without_client_errors() {
+    with_cluster(2, fast_cfg(), |c| {
+        // Replica 0 now answers every generate with an injected 500; the
+        // prober still sees its /healthz as fine, so the router keeps
+        // offering it traffic and must fail over per request.
+        c.faults[0].set_spec(FaultSpec::parse("error_rate=1").unwrap());
+        let mut outs = Vec::new();
+        for id in 0..4u64 {
+            let resp = http::request(
+                &c.router,
+                "POST",
+                "/v1/generate",
+                gen_body(id, 4, false, "").as_bytes(),
+            )
+            .unwrap();
+            assert_eq!(resp.status, 200, "request {id} must fail over: {}", resp.text());
+            outs.push(tokens_of(&json::parse(&resp.text()).unwrap()));
+        }
+        for o in &outs[1..] {
+            assert_eq!(o, &outs[0], "failover must not change greedy tokens");
+        }
+        let st = router_stats(&c.router);
+        assert!(st.get("retries").as_f64().unwrap() >= 1.0, "no retry recorded: {st:?}");
+        assert!(st.get("upstream_errors").as_f64().unwrap() >= 1.0);
+        assert_eq!(st.get("failed").as_f64(), Some(0.0), "clients saw no failure: {st:?}");
+    });
+}
+
+#[test]
+fn router_sheds_when_every_replica_is_down() {
+    // One replica, huge cooldown: once ejected nothing is routable and
+    // no half-open probe can sneak the request through.
+    let cfg = RouterConfig { eject_after: 2, cooldown_ms: 60_000, ..fast_cfg() };
+    with_cluster(1, cfg, |c| {
+        c.faults[0].set_spec(FaultSpec::parse("refuse").unwrap());
+        wait_for_state(&c.router, 0, "ejected");
+
+        let h = http::request(&c.router, "GET", "/healthz", b"").unwrap();
+        assert_eq!(h.status, 200, "the router itself stays healthy");
+        let hj = json::parse(&h.text()).unwrap();
+        assert_eq!(hj.get("available").as_usize(), Some(0));
+
+        let resp = http::request(
+            &c.router,
+            "POST",
+            "/v1/generate",
+            gen_body(1, 4, false, "").as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 503, "{}", resp.text());
+        assert_eq!(resp.header("retry-after"), Some("1"), "shed must carry Retry-After");
+        assert!(resp.text().contains("saturated or ejected"), "{}", resp.text());
+        let st = router_stats(&c.router);
+        assert!(st.get("shed").as_f64().unwrap() >= 1.0);
+        assert!(st.get("ejections").as_f64().unwrap() >= 1.0);
+    });
+}
+
+#[test]
+fn router_never_retries_a_stream_broken_after_first_token() {
+    // BOTH replicas cut streams, so a (wrong) retry would be observable
+    // as a second broken stream or a restarted generation.
+    with_cluster(2, fast_cfg(), |c| {
+        for fault in &c.faults {
+            fault.set_spec(FaultSpec::parse("cut_stream_after=2").unwrap());
+        }
+        let resp = http::request(
+            &c.router,
+            "POST",
+            "/v1/generate",
+            gen_body(1, 6, true, "").as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200, "head was committed before the cut: {}", resp.text());
+        let text = resp.text();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 2, "expected token line(s) + error line: {text:?}");
+        let first = json::parse(lines[0]).unwrap();
+        assert!(first.get("token").as_i64().is_some(), "first line is a token: {text:?}");
+        let last = json::parse(lines.last().unwrap()).unwrap();
+        let err = last.get("error").as_str().unwrap_or_default().to_string();
+        assert!(err.contains("upstream stream broke"), "terminating error line: {text:?}");
+        assert_eq!(last.get("done").as_bool(), Some(true));
+
+        let st = router_stats(&c.router);
+        assert_eq!(st.get("streams_broken").as_f64(), Some(1.0), "{st:?}");
+        assert_eq!(st.get("retries").as_f64(), Some(0.0), "broken streams must not retry");
+    });
+}
+
+#[test]
+fn router_answers_504_past_the_deadline_and_recovers() {
+    // eject_after is high so the stalled replica stays routable for the
+    // whole test — the 504 must come from the request deadline, not from
+    // the breaker running out of replicas.
+    let cfg = RouterConfig { eject_after: 50, ..fast_cfg() };
+    with_cluster(1, cfg, |c| {
+        c.faults[0].set_spec(FaultSpec::parse("stall_ms=2000").unwrap());
+        let t0 = Instant::now();
+        let resp = http::request(
+            &c.router,
+            "POST",
+            "/v1/generate",
+            gen_body(1, 4, false, ",\"timeout_ms\":300").as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 504, "{}", resp.text());
+        assert!(resp.text().contains("deadline"), "{}", resp.text());
+        assert!(
+            t0.elapsed() < Duration::from_millis(1900),
+            "504 must beat the 2s replica stall: took {:?}",
+            t0.elapsed()
+        );
+        let st = router_stats(&c.router);
+        assert!(st.get("timeouts").as_f64().unwrap() >= 1.0, "{st:?}");
+
+        // Clear the fault: the same client path must go back to 200.
+        c.faults[0].set_spec(FaultSpec::default());
+        let t0 = Instant::now();
+        loop {
+            let resp = http::request(
+                &c.router,
+                "POST",
+                "/v1/generate",
+                gen_body(2, 4, false, "").as_bytes(),
+            )
+            .unwrap();
+            if resp.status == 200 {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(30), "service never recovered");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    });
+}
+
+#[test]
+fn router_readmits_an_ejected_replica_once_it_heals() {
+    let cfg = RouterConfig { eject_after: 2, ..fast_cfg() };
+    with_cluster(1, cfg, |c| {
+        c.faults[0].set_spec(FaultSpec::parse("refuse").unwrap());
+        wait_for_state(&c.router, 0, "ejected");
+        c.faults[0].set_spec(FaultSpec::default());
+        // The prober's next successful /healthz closes the breaker.
+        wait_for_state(&c.router, 0, "healthy");
+        let resp = http::request(
+            &c.router,
+            "POST",
+            "/v1/generate",
+            gen_body(1, 4, false, "").as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.text());
+        let st = router_stats(&c.router);
+        assert!(st.get("ejections").as_f64().unwrap() >= 1.0, "{st:?}");
+    });
+}

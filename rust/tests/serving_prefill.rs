@@ -299,6 +299,7 @@ fn serve_greedy(session: &Session, cfg: ServerConfig) -> Vec<Vec<i32>> {
                 prompt: prompt(&mut rng, len, vocab),
                 max_new: 4,
                 temperature: 0.0,
+                deadline: None,
             })
             .unwrap();
     }
@@ -352,6 +353,7 @@ fn server_reports_prefill_decode_split_and_ttft() {
                 prompt: prompt(&mut rng, 30, vocab),
                 max_new: 5,
                 temperature: 0.0,
+                deadline: None,
             })
             .unwrap();
     }

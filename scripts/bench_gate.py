@@ -16,7 +16,11 @@ performance invariant regresses:
 * ``serving_cb``       — continuous batching over staggered arrivals
   must beat sequential one-request-at-a-time serving on aggregate
   tokens/s (the decode graph computes every slot row regardless, so
-  a solo request wastes (batch-1)/batch of every step).
+  a solo request wastes (batch-1)/batch of every step). The nested
+  ``router`` object must show 3 single-thread replicas behind
+  ``efla route`` out-serving 1 replica on aggregate tokens/s (the
+  replica-sharding claim: O(1) decode state means capacity scales
+  with replica count).
 * ``serving_batched_decode`` — the slot-batched decode GEMM must be at
   least as fast as the per-slot single-row formulation at every point
   with >= 4 busy slots (the batched path packs the shared weight panel
@@ -83,6 +87,17 @@ def gate_serving_cb(obj: dict) -> None:
     if cb <= seq:
         fail(f"{line} — continuous batching must beat one-request-at-a-time")
     print(f"gate ok: {line} ({cb / seq:.2f}x)")
+    router = obj.get("router")
+    if not isinstance(router, dict):
+        fail("serving_cb: missing nested 'router' measurements")
+    one = router.get("replicas_1_tok_s", 0.0)
+    three = router.get("replicas_3_tok_s", 0.0)
+    if one <= 0.0 or three <= 0.0:
+        fail(f"serving_cb router: missing throughput measurements (1={one}, 3={three})")
+    line = f"serving_cb router: 3 replicas {three:.0f} tok/s vs 1 replica {one:.0f} tok/s"
+    if three <= one:
+        fail(f"{line} — replica sharding must raise aggregate throughput")
+    print(f"gate ok: {line} ({three / one:.2f}x)")
 
 
 def gate_serving_batched(obj: dict) -> None:

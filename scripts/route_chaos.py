@@ -1,0 +1,276 @@
+#!/usr/bin/env python3
+"""Chaos smoke of `efla route` for CI: replica failure must be invisible.
+
+Launches three `efla serve` replicas (untrained, single compute thread,
+so all three hold bit-identical weights) and an `efla route` front end
+over them, then:
+
+1.  records a healthy greedy reference by hitting ONE replica directly —
+    the single-engine ground truth every routed answer must match;
+2.  drives concurrent load through the router while injecting faults into
+    replica 0: first a 2s per-request stall (via its `POST /fault`
+    endpoint — the replica keeps running, its health probes start
+    failing), then SIGKILL mid-run;
+3.  asserts ZERO client-visible failures: every request returns 200 —
+    after client-side retries of the deliberate 503 shed signal — with
+    tokens bit-identical to the reference;
+4.  asserts the router's aggregated `/stats` accounts for the chaos:
+    retries >= 1 (in-flight work on the killed replica failed over),
+    ejections >= 1 (the breaker took replica 0 out), shed == the 503s
+    the clients saw, and failed == timeouts == 0;
+5.  SIGTERMs the router and the surviving replicas and requires exit 0.
+
+Stderr of every process goes to the log file given by ``--log``.
+Exit code 0 = all checks pass.
+
+Reproduce locally:
+    cargo build --release
+    python3 scripts/route_chaos.py --bin target/release/efla
+"""
+
+import argparse
+import http.client
+import json
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+CHECKS = []
+
+
+def check(name, ok, detail=""):
+    CHECKS.append((name, ok))
+    mark = "ok" if ok else "FAIL"
+    print(f"chaos {mark}: {name}" + (f" — {detail}" if detail else ""))
+    if not ok:
+        raise AssertionError(f"{name}: {detail}")
+
+
+def request(addr, method, path, body=None, timeout=30.0):
+    host, port = addr.rsplit(":", 1)
+    conn = http.client.HTTPConnection(host, int(port), timeout=timeout)
+    try:
+        conn.request(method, path, body=body,
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        return resp.status, resp.read().decode("utf-8", "replace")
+    finally:
+        conn.close()
+
+
+def wait_for_line(proc, prefix, deadline_secs, name):
+    """Read a process's stdout on a helper thread until `prefix` appears."""
+    found = {}
+
+    def reader():
+        for line in proc.stdout:
+            line = line.strip()
+            print(f"{name} stdout: {line}")
+            if line.startswith(prefix):
+                found["rest"] = line[len(prefix):]
+                return
+
+    t = threading.Thread(target=reader, daemon=True)
+    t.start()
+    t.join(deadline_secs)
+    if "rest" not in found:
+        if proc.poll() is not None:
+            raise AssertionError(f"{name} exited early: {proc.returncode}")
+        raise AssertionError(f"{name}: no '{prefix}' line in {deadline_secs}s")
+    return found["rest"]
+
+
+def prompt_of(i):
+    # A small rotating prompt set, so the chaos pass replays prompts the
+    # reference pass measured.
+    return f"chaos probe {i % 8} "
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bin", default="target/release/efla")
+    ap.add_argument("--log", default="route_chaos.log")
+    ap.add_argument("--requests", type=int, default=36)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--max-tokens", type=int, default=8)
+    ap.add_argument("--startup-timeout", type=float, default=120.0)
+    args = ap.parse_args()
+
+    log = open(args.log, "w")
+    procs = {}
+    try:
+        run_chaos(args, log, procs)
+    except BaseException:
+        for p in procs.values():
+            if p.poll() is None:
+                p.kill()
+        for p in procs.values():
+            p.wait()
+        log.close()
+        print(f"--- process log ({args.log}) ---")
+        sys.stdout.write(open(args.log).read())
+        raise
+    log.close()
+    print(f"all {len(CHECKS)} chaos checks passed")
+
+
+def run_chaos(args, log, procs):
+    # Untrained + --threads 1: every replica derives bit-identical weights
+    # from the shared family seed, which is what makes cross-replica
+    # greedy determinism checkable at all.
+    replica_addrs = []
+    for i in range(3):
+        cmd = [args.bin, "serve", "--listen", "127.0.0.1:0", "--steps", "0",
+               "--threads", "1", "--queue-depth", "8", "--drain-timeout", "30"]
+        proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, stderr=log,
+                                text=True)
+        procs[f"replica{i}"] = proc
+        addr = wait_for_line(proc, "SERVE listening on ",
+                             args.startup_timeout, f"replica{i}")
+        replica_addrs.append(addr)
+        print(f"replica {i} on {addr}")
+
+    cmd = [args.bin, "route", "--listen", "127.0.0.1:0",
+           "--backends", ",".join(replica_addrs),
+           "--health-interval-ms", "50", "--cooldown-ms", "500"]
+    router = subprocess.Popen(cmd, stdout=subprocess.PIPE, stderr=log,
+                              text=True)
+    procs["router"] = router
+    raddr = wait_for_line(router, "ROUTE listening on ",
+                          args.startup_timeout, "router")
+    print(f"router on {raddr}")
+
+    # Wait until the prober has seen all three replicas.
+    deadline = time.time() + 30
+    while True:
+        status, body = request(raddr, "GET", "/stats")
+        stats = json.loads(body)
+        probed = sum(1 for r in stats["replicas"] if r["probes_ok"] >= 1)
+        if status == 200 and probed == 3:
+            break
+        if time.time() > deadline:
+            raise AssertionError(f"replicas never probed healthy: {body}")
+        time.sleep(0.1)
+    status, body = request(raddr, "GET", "/healthz")
+    health = json.loads(body)
+    check("router healthz", status == 200 and health.get("available") == 3,
+          body)
+
+    # 1. Healthy single-engine reference: greedy tokens per prompt, from
+    # one replica directly (no router in the path).
+    reference = {}
+    for i in range(8):
+        payload = json.dumps({"id": 1000 + i, "prompt": prompt_of(i),
+                              "max_tokens": args.max_tokens})
+        status, body = request(replica_addrs[1], "POST", "/v1/generate",
+                               payload, timeout=60)
+        check(f"reference {i}", status == 200, body[:200])
+        reference[i % 8] = json.loads(body)["tokens"]
+
+    # 2. Concurrent load through the router with a mid-run stall + kill of
+    # replica 0. Clients retry the documented backpressure signals (503
+    # shed / 429) and transient connection errors; anything else is a
+    # client-visible failure and fails the smoke.
+    results = {}
+    shed_seen = [0]
+    lock = threading.Lock()
+    next_id = [0]
+
+    def one_request(rid):
+        payload = json.dumps({"id": rid, "prompt": prompt_of(rid),
+                              "max_tokens": args.max_tokens})
+        for _ in range(200):
+            try:
+                status, body = request(raddr, "POST", "/v1/generate",
+                                       payload, timeout=60)
+            except OSError:
+                time.sleep(0.1)
+                continue
+            if status == 503:
+                with lock:
+                    shed_seen[0] += 1
+                time.sleep(0.2)
+                continue
+            if status == 429:
+                time.sleep(0.2)
+                continue
+            return status, body
+        return None, "retries exhausted"
+
+    def client():
+        while True:
+            with lock:
+                rid = next_id[0]
+                if rid >= args.requests:
+                    return
+                next_id[0] += 1
+            results[rid] = one_request(rid)
+
+    threads = [threading.Thread(target=client) for _ in range(args.clients)]
+    for t in threads:
+        t.start()
+
+    # Let some healthy traffic through, then stall replica 0 (probes start
+    # timing out, in-flight requests hang)...
+    while True:
+        with lock:
+            if next_id[0] >= 6:
+                break
+        time.sleep(0.05)
+    status, body = request(replica_addrs[0], "POST", "/fault",
+                           "stall_ms=2000")
+    check("fault armed on replica 0", status == 200, body)
+    time.sleep(0.7)
+    # ...then kill it outright mid-run.
+    procs["replica0"].kill()
+    print("replica 0 killed")
+    for t in threads:
+        t.join()
+
+    # 3. Zero client-visible failures, bit-identical outputs.
+    for rid in range(args.requests):
+        status, body = results[rid]
+        check(f"request {rid} completes", status == 200, str(body)[:200])
+        tokens = json.loads(body)["tokens"]
+        check(f"request {rid} bit-identical",
+              tokens == reference[rid % 8],
+              f"{tokens} vs reference {reference[rid % 8]}")
+
+    # 4. The router's stats must account for the chaos.
+    deadline = time.time() + 20
+    while True:
+        status, body = request(raddr, "GET", "/stats")
+        stats = json.loads(body)
+        state0 = stats["replicas"][0]["state"]
+        if state0 == "ejected":
+            break
+        if time.time() > deadline:
+            raise AssertionError(f"replica 0 never ejected: {body}")
+        time.sleep(0.1)
+    check("stats: killed replica ejected", True, f"state={state0}")
+    check("stats: retries counted", stats["retries"] >= 1, body[:400])
+    check("stats: ejections counted", stats["ejections"] >= 1, body[:400])
+    check("stats: shed accounting", stats["shed"] == shed_seen[0],
+          f"router shed {stats['shed']} vs client 503s {shed_seen[0]}")
+    check("stats: no hard failures",
+          stats["failed"] == 0 and stats["timeouts"] == 0, body[:400])
+    check("stats: aggregate present",
+          stats["aggregate"]["tokens_processed"] >= 1, body[:400])
+
+    # 5. Clean shutdown: router first, then the surviving replicas.
+    router = procs["router"]
+    router.send_signal(signal.SIGTERM)
+    code = router.wait(timeout=60)
+    check("router exit 0 on SIGTERM", code == 0, f"exit code {code}")
+    for i in (1, 2):
+        p = procs[f"replica{i}"]
+        p.send_signal(signal.SIGTERM)
+        code = p.wait(timeout=60)
+        check(f"replica {i} exit 0 on SIGTERM", code == 0, f"exit {code}")
+    procs["replica0"].wait()
+
+
+if __name__ == "__main__":
+    main()

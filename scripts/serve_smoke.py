@@ -14,8 +14,14 @@ stdlib only:
 4.  greedy determinism: the same prompt twice returns identical tokens;
 5.  queue overflow: a burst beyond slots + ``--queue-depth`` answers 429
     while the rest complete, and the service recovers afterwards;
-6.  SIGTERM: in-flight requests drain to completion and the process
+6.  per-request deadline: a ``timeout_ms`` body field bounds the
+    generation — the engine hands the slot back with finish_reason
+    ``timeout`` and partial tokens instead of running out the budget;
+7.  SIGTERM: in-flight requests drain to completion and the process
     exits 0 within the drain window.
+
+Every client call carries an explicit socket timeout (``--client-timeout``
+for generates), so a hung server fails the smoke instead of hanging CI.
 
 The server's stderr goes to the log file given by ``--log`` (uploaded as
 a CI artifact on failure). Exit code 0 = all checks pass.
@@ -45,8 +51,12 @@ def check(name, ok, detail=""):
         raise AssertionError(f"{name}: {detail}")
 
 
-def post_generate(addr, body, timeout=120):
+CLIENT_TIMEOUT = 120.0
+
+
+def post_generate(addr, body, timeout=None):
     host, port = addr.rsplit(":", 1)
+    timeout = CLIENT_TIMEOUT if timeout is None else timeout
     conn = http.client.HTTPConnection(host, int(port), timeout=timeout)
     try:
         conn.request("POST", "/v1/generate", body=json.dumps(body),
@@ -99,7 +109,11 @@ def main():
     ap.add_argument("--train-steps", type=int, default=5)
     ap.add_argument("--queue-depth", type=int, default=1)
     ap.add_argument("--startup-timeout", type=float, default=300.0)
+    ap.add_argument("--client-timeout", type=float, default=120.0,
+                    help="socket timeout of every generate call, seconds")
     args = ap.parse_args()
+    global CLIENT_TIMEOUT
+    CLIENT_TIMEOUT = args.client_timeout
 
     log = open(args.log, "w")
     cmd = [
@@ -219,7 +233,24 @@ def run_checks(proc, args):
         time.sleep(0.2)
     check("service recovers after overflow", recovered == 200)
 
-    # 6. SIGTERM drains in-flight work and exits cleanly. The two
+    # 6. per-request deadline over the wire: the engine must abandon the
+    # slot at timeout_ms with finish_reason "timeout" and partial tokens,
+    # long before the absurd max_tokens budget would complete.
+    t0 = time.time()
+    status, body = post_generate(
+        addr,
+        {"prompt": "deadline me ", "max_tokens": 4096, "timeout_ms": 300},
+        timeout=30)
+    took = time.time() - t0
+    check("deadline status", status == 200, body[:200])
+    payload = json.loads(body.splitlines()[-1])
+    check("deadline finish reason",
+          payload.get("finish_reason") == "timeout", body[:200])
+    check("deadline beats the budget",
+          len(payload["tokens"]) < 4096 and took < 20.0,
+          f"{len(payload['tokens'])} tokens in {took:.1f}s")
+
+    # 7. SIGTERM drains in-flight work and exits cleanly. The two
     # requests are staggered so both are admitted (queue depth is tiny)
     # before the signal lands.
     inflight = {}
