@@ -24,7 +24,11 @@
 //!   9. serving slot-batched decode — all busy slots' rows through one
 //!      class-pinned packed GEMM vs the retired per-slot single-row
 //!      formulation at 1/4/16/32 busy slots (writes the root-level
-//!      BENCH_serving_batched.json).
+//!      BENCH_serving_batched.json);
+//!  10. serving session state cache — turn-2 TTFT of a cached resume
+//!      (prefill only the new tokens) vs a cold full-transcript replay
+//!      at conversation depths 256/1024/4096, bit-identical outputs
+//!      (writes the root-level BENCH_serving_state_cache.json).
 //!
 //! Env knobs: EFLA_BENCH_FAST=1 shrinks everything (CI smoke);
 //! EFLA_FORCE_SCALAR=1 pins the matmul dispatcher to the scalar tier.
@@ -360,7 +364,14 @@ fn main() {
         for id in 0..n_req {
             let prompt: Vec<i32> =
                 (0..plen).map(|_| rng.below(vocab as u64) as i32).collect();
-            let req = GenRequest { id, prompt, max_new: 8, temperature: 0.0, deadline: None };
+            let req = GenRequest {
+                id,
+                prompt,
+                max_new: 8,
+                temperature: 0.0,
+                deadline: None,
+                session_id: None,
+            };
             server.submit(req).unwrap();
         }
         server.run_to_completion().unwrap();
@@ -435,7 +446,14 @@ fn main() {
     for id in 0..cb_req {
         let mut server = Server::with_config(&session, 7, ServerConfig::default()).unwrap();
         let prompt = mk_prompt(id);
-        let req = GenRequest { id, prompt, max_new: cb_max_new, temperature: 0.0, deadline: None };
+        let req = GenRequest {
+            id,
+            prompt,
+            max_new: cb_max_new,
+            temperature: 0.0,
+            deadline: None,
+            session_id: None,
+        };
         server.submit(req).unwrap();
         server.run_to_completion().unwrap();
         seq_tokens += server.stats.tokens_processed;
@@ -461,6 +479,7 @@ fn main() {
                     max_new: cb_max_new,
                     temperature: 0.0,
                     deadline: None,
+                    session_id: None,
                 };
                 let sub =
                     Submission { req, submitted: Instant::now(), stream: false, events: ev_tx };
@@ -751,6 +770,116 @@ fn main() {
     }
     report.push(("serving_batched_decode", bd_json));
 
+    // ---- 10. serving: session state cache — turn-2 TTFT cached vs cold
+    // A follow-up turn that restores its parked recurrent state prefills
+    // only the new tokens, so its TTFT stays ~flat in conversation
+    // depth; a cold replay re-ingests the whole transcript and grows
+    // linearly. Greedy outputs are asserted bit-identical between the
+    // two paths. CI's bench gate enforces cached < cold at depth >= 1024
+    // plus bounded flatness (scripts/bench_gate.py, section
+    // `serving_state_cache`).
+    let sc_depths: &[usize] = if fast() { &[256, 1024] } else { &[256, 1024, 4096] };
+    let sc_iters = if fast() { 2 } else { 4 };
+    let sc_max_new = 8usize;
+    let sc_new_tokens = 16usize;
+    println!("## Serving session state cache: turn-2 TTFT, cached resume vs cold replay\n");
+    let mut t = Table::new(&["depth", "cached TTFT", "cold TTFT", "speedup"]);
+    let mut sc_points = Vec::new();
+    for &depth in sc_depths {
+        let mut rng = Rng::new(0x5C00 + depth as u64);
+        let t1: Vec<i32> = (0..depth).map(|_| rng.below(vocab as u64) as i32).collect();
+        let extra: Vec<i32> =
+            (0..sc_new_tokens).map(|_| rng.below(vocab as u64) as i32).collect();
+        let sc_cfg =
+            ServerConfig { state_cache_bytes: 64 << 20, ..ServerConfig::default() };
+        let mut cached_ttft = f64::INFINITY;
+        let mut cold_ttft = f64::INFINITY;
+        let mut cached_tokens = Vec::new();
+        let mut cold_tokens = Vec::new();
+        for _ in 0..sc_iters {
+            // Turn 1 parks its state; turn 2 restores and prefills only
+            // the tail. A fresh server per iteration keeps the cache
+            // lookup identical every time (take() consumes the entry).
+            let mut server = Server::with_config(&session, 7, sc_cfg.clone()).unwrap();
+            server
+                .submit(GenRequest {
+                    id: 1,
+                    prompt: t1.clone(),
+                    max_new: sc_max_new,
+                    temperature: 0.0,
+                    deadline: None,
+                    session_id: Some("bench".into()),
+                })
+                .unwrap();
+            let r1 = server.run_to_completion().unwrap().pop().unwrap();
+            let mut t2 = t1.clone();
+            t2.extend_from_slice(&r1.tokens);
+            t2.extend_from_slice(&extra);
+            server
+                .submit(GenRequest {
+                    id: 2,
+                    prompt: t2.clone(),
+                    max_new: sc_max_new,
+                    temperature: 0.0,
+                    deadline: None,
+                    session_id: Some("bench".into()),
+                })
+                .unwrap();
+            let r2 = server.run_to_completion().unwrap().pop().unwrap();
+            assert_eq!(server.stats.cache_hits, 1, "turn 2 must restore from the cache");
+            cached_ttft = cached_ttft.min(r2.ttft_secs);
+            cached_tokens = r2.tokens;
+
+            let mut cold = Server::new(&session, 7).unwrap();
+            cold.submit(GenRequest {
+                id: 3,
+                prompt: t2,
+                max_new: sc_max_new,
+                temperature: 0.0,
+                deadline: None,
+                session_id: None,
+            })
+            .unwrap();
+            let rc = cold.run_to_completion().unwrap().pop().unwrap();
+            cold_ttft = cold_ttft.min(rc.ttft_secs);
+            cold_tokens = rc.tokens;
+        }
+        assert_eq!(
+            cached_tokens, cold_tokens,
+            "cached resume must be bit-identical to cold full replay"
+        );
+        let speedup = cold_ttft / cached_ttft.max(1e-12);
+        t.row(&[
+            format!("{depth}"),
+            format!("{:.2} ms", cached_ttft * 1e3),
+            format!("{:.2} ms", cold_ttft * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        sc_points.push(Json::obj(vec![
+            ("depth", Json::Num(depth as f64)),
+            ("cached_ttft_ms", Json::Num(cached_ttft * 1e3)),
+            ("cold_ttft_ms", Json::Num(cold_ttft * 1e3)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    println!("{}", t.render());
+    println!("(cached resume prefills only the new tokens; outputs bit-identical to replay)\n");
+    let sc_json = Json::obj(vec![
+        ("bench", Json::Str("serving_state_cache".into())),
+        ("kernel", Json::Str(format!("{:?}", gemm::active_kernel()))),
+        ("family", Json::Str("lm_tiny_efla".into())),
+        ("threads", Json::Num(session.threads() as f64)),
+        ("max_new", Json::Num(sc_max_new as f64)),
+        ("new_tokens_per_turn", Json::Num(sc_new_tokens as f64)),
+        ("points", Json::Arr(sc_points)),
+    ]);
+    println!("BENCH {}", sc_json.to_string());
+    if !fast() {
+        json::write_file(std::path::Path::new("BENCH_serving_state_cache.json"), &sc_json)
+            .unwrap();
+    }
+    report.push(("serving_state_cache", sc_json));
+
     let out = Json::Obj(
         report.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
     );
@@ -765,6 +894,7 @@ fn main() {
         println!("json: BENCH_serving.json");
         println!("json: BENCH_serving_cb.json");
         println!("json: BENCH_serving_batched.json");
+        println!("json: BENCH_serving_state_cache.json");
     }
     println!("json: bench_results/kernel_throughput.json");
 }

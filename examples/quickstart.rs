@@ -65,6 +65,7 @@ fn main() -> Result<()> {
             max_new: 16,
             temperature: 0.7,
             deadline: None,
+            session_id: None,
         })?;
     }
     let results = server.run_to_completion()?;

@@ -76,6 +76,12 @@ pub struct RunConfig {
     /// carries no `timeout_ms` of its own (0 = none). The engine abandons
     /// the slot and answers `finish_reason: "timeout"` at the deadline.
     pub request_timeout_ms: u64,
+    /// Serving: byte bound of the per-session recurrent-state cache's
+    /// memory tier (`efla serve --state-cache-bytes`). 0 = disabled.
+    pub state_cache_bytes: usize,
+    /// Serving: spill directory for state-cache evictions
+    /// (`--state-cache-dir`). Empty = evicted session state is dropped.
+    pub state_cache_dir: String,
     /// Routing (`efla route`): in-process replica count, each an engine
     /// loop on its own thread with its own identically trained session.
     pub replicas: usize,
@@ -112,6 +118,8 @@ impl Default for RunConfig {
             queue_depth: 64,
             drain_timeout_secs: 5.0,
             request_timeout_ms: 0,
+            state_cache_bytes: 0,
+            state_cache_dir: String::new(),
             replicas: 2,
             backends: String::new(),
             fault: String::new(),
@@ -170,6 +178,15 @@ impl RunConfig {
                 .get("request_timeout_ms")
                 .as_usize()
                 .unwrap_or(d.request_timeout_ms as usize) as u64,
+            state_cache_bytes: j
+                .get("state_cache_bytes")
+                .as_usize()
+                .unwrap_or(d.state_cache_bytes),
+            state_cache_dir: j
+                .get("state_cache_dir")
+                .as_str()
+                .unwrap_or(&d.state_cache_dir)
+                .to_string(),
             replicas: j.get("replicas").as_usize().unwrap_or(d.replicas),
             backends: j.get("backends").as_str().unwrap_or(&d.backends).to_string(),
             fault: j.get("fault").as_str().unwrap_or(&d.fault).to_string(),
@@ -199,6 +216,8 @@ impl RunConfig {
             ("queue_depth", Json::Num(self.queue_depth as f64)),
             ("drain_timeout_secs", Json::Num(self.drain_timeout_secs)),
             ("request_timeout_ms", Json::Num(self.request_timeout_ms as f64)),
+            ("state_cache_bytes", Json::Num(self.state_cache_bytes as f64)),
+            ("state_cache_dir", Json::Str(self.state_cache_dir.clone())),
             ("replicas", Json::Num(self.replicas as f64)),
             ("backends", Json::Str(self.backends.clone())),
             ("fault", Json::Str(self.fault.clone())),
@@ -296,6 +315,21 @@ mod tests {
         assert_eq!(c2.replicas, 3);
         assert_eq!(c2.backends, "127.0.0.1:8001,127.0.0.1:8002");
         assert_eq!(c2.fault, "0:stall_ms=100;seed=7");
+    }
+
+    #[test]
+    fn state_cache_knobs_roundtrip_and_default() {
+        let d = RunConfig::default();
+        assert_eq!(d.state_cache_bytes, 0);
+        assert_eq!(d.state_cache_dir, "");
+        let c = RunConfig {
+            state_cache_bytes: 8 << 20,
+            state_cache_dir: "/tmp/efla-state".into(),
+            ..RunConfig::default()
+        };
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.state_cache_bytes, 8 << 20);
+        assert_eq!(c2.state_cache_dir, "/tmp/efla-state");
     }
 
     #[test]

@@ -18,7 +18,15 @@
 //!   sampling from the returned logits; backends without batched decode
 //!   fall back to the full fixed-batch `decode`;
 //! * finished slots are immediately refilled from the queue (continuous
-//!   batching), their state rows zeroed in place.
+//!   batching), their state rows zeroed in place;
+//! * with a session state cache armed ([`ServerConfig::state_cache_bytes`]
+//!   + a request `session_id`), a finishing slot's state rows are parked
+//!   in [`crate::serve::state_cache::StateCache`] and a follow-up turn of
+//!   the same session restores them into whatever slot seats it,
+//!   prefilling only the suffix past the cached transcript — bit-identical
+//!   to a cold full-transcript prefill, because the EFLA state is an exact
+//!   pure function of the tokens fed. Two turns of one session are never
+//!   seated concurrently (the snapshot is taken at finish).
 //!
 //! Chunked prefill and slot-batched decode are pure throughput
 //! optimizations: for any prompt, any `prefill_chunk`, and any busy-slot
@@ -37,11 +45,12 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::session::Session;
 use crate::runtime::HostValue;
+use crate::serve::state_cache::{CachedState, StateCache};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Scheduler knobs of the serving engine.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Max prompt tokens one slot ingests per engine step through the
     /// parallel prefill path. 0 = token-at-a-time ingestion through the
@@ -65,6 +74,15 @@ pub struct ServerConfig {
     /// [`GenRequest::deadline`]. 0 = no default deadline (a request
     /// without one can hold a slot until `max_new` tokens are produced).
     pub default_timeout_ms: u64,
+    /// Byte bound of the per-session recurrent-state cache's memory tier
+    /// (`efla serve --state-cache-bytes`). 0 = cache disabled: requests
+    /// with a `session_id` run exactly like requests without one.
+    pub state_cache_bytes: usize,
+    /// Spill directory of the state cache (`--state-cache-dir`): evicted
+    /// entries are written through the checkpoint serialization and
+    /// restored transparently. Empty = evictions drop the state and the
+    /// session falls back to a cold full prefill.
+    pub state_cache_dir: String,
 }
 
 impl Default for ServerConfig {
@@ -75,6 +93,8 @@ impl Default for ServerConfig {
             queue_depth: 64,
             drain_timeout_secs: 5.0,
             default_timeout_ms: 0,
+            state_cache_bytes: 0,
+            state_cache_dir: String::new(),
         }
     }
 }
@@ -124,6 +144,12 @@ pub struct GenRequest {
     /// it with [`FinishReason::Timeout`] and whatever tokens exist. `None`
     /// falls back to [`ServerConfig::default_timeout_ms`].
     pub deadline: Option<Instant>,
+    /// Client conversation key for the session state cache. `Some` opts
+    /// the request in: on completion the slot's recurrent state is parked
+    /// under this key, and a follow-up turn whose prompt extends the
+    /// cached transcript resumes from it instead of re-prefilling the
+    /// whole conversation. `None` never touches the cache.
+    pub session_id: Option<String>,
 }
 
 /// Why a generation finished.
@@ -184,6 +210,7 @@ struct Slot {
     deadline: Option<Instant>,
     ttft_secs: f64,
     queue_wait_secs: f64,
+    session_id: Option<String>,
 }
 
 /// Engine statistics.
@@ -217,6 +244,21 @@ pub struct ServerStats {
     /// Requests finished with [`FinishReason::Timeout`] (deadline expired
     /// in the queue or mid-generation). Also counted in `completed`.
     pub timed_out: u64,
+    /// Session state cache: successful restores (memory or disk tier).
+    pub cache_hits: u64,
+    /// Session state cache: `session_id` lookups that found no usable
+    /// parked state (first turn, evicted, or diverged transcript).
+    pub cache_misses: u64,
+    /// Session state cache: entries evicted from memory at the byte bound.
+    pub cache_evictions: u64,
+    /// Session state cache: evicted entries written to the disk tier.
+    pub cache_spills: u64,
+    /// Session state cache: hits restored from disk (also in `cache_hits`).
+    pub cache_disk_hits: u64,
+    /// Session state cache: entries currently parked in memory.
+    pub cache_entries: usize,
+    /// Session state cache: bytes currently resident in memory.
+    pub cache_bytes: usize,
 }
 
 impl ServerStats {
@@ -290,6 +332,10 @@ pub struct Server<'a> {
     /// Per-token events since the last [`Server::take_events`] drain.
     events: Vec<TokenEvent>,
     events_enabled: bool,
+    /// Parked per-session recurrent state (disabled unless
+    /// [`ServerConfig::state_cache_bytes`] > 0 and the backend has state
+    /// export/import).
+    cache: StateCache,
     pub stats: ServerStats,
 }
 
@@ -312,6 +358,14 @@ impl<'a> Server<'a> {
         if !session.supports_prefill() {
             cfg.prefill_chunk = 0;
         }
+        if cfg.state_cache_bytes > 0 && !session.supports_state_io() {
+            log::warn!(
+                "{}: backend has no slot state export/import; session state cache disabled",
+                session.family()
+            );
+            cfg.state_cache_bytes = 0;
+        }
+        let cache = StateCache::new(cfg.state_cache_bytes, &cfg.state_cache_dir);
         let stats = ServerStats { batch, threads: session.threads(), ..ServerStats::default() };
         Ok(Server {
             session,
@@ -327,6 +381,7 @@ impl<'a> Server<'a> {
             live: BTreeSet::new(),
             events: Vec::new(),
             events_enabled: false,
+            cache,
             stats,
         })
     }
@@ -335,9 +390,9 @@ impl<'a> Server<'a> {
         self.batch
     }
 
-    /// The scheduler config in effect (after the capability fallback).
+    /// The scheduler config in effect (after the capability fallbacks).
     pub fn config(&self) -> ServerConfig {
-        self.cfg
+        self.cfg.clone()
     }
 
     /// Enqueue a request, stamped as submitted now.
@@ -425,37 +480,146 @@ impl<'a> Server<'a> {
 
     /// Admit queued requests into free slots. Queued requests whose
     /// deadline already passed are finished with a timeout result instead
-    /// of wasting a slot on work nobody is waiting for.
+    /// of wasting a slot on work nobody is waiting for, and a request
+    /// whose session already occupies a slot stays queued (per-session
+    /// serialization: its state snapshot only exists once that turn
+    /// finishes), letting later arrivals seat ahead of it.
     fn admit(&mut self, now: Instant) {
         for s in 0..self.batch {
             if self.slots[s].is_some() {
                 continue;
             }
-            while let Some((req, submitted)) = self.queue.pop_front() {
-                if req.deadline.is_some_and(|d| d <= now) {
-                    self.expire_queued(req, submitted, now);
-                    continue;
-                }
-                self.clear_slot_state(s);
-                let queue_wait_secs = (now - submitted).as_secs_f64();
-                self.stats.admitted += 1;
-                self.stats.queue_wait_sum_secs += queue_wait_secs;
-                self.slots[s] = Some(Slot {
-                    id: req.id,
-                    prompt: req.prompt,
-                    consumed: 0,
-                    generated: Vec::new(),
-                    max_new: req.max_new,
-                    temperature: req.temperature,
-                    steps: 0,
-                    submitted,
-                    deadline: req.deadline,
-                    ttft_secs: 0.0,
-                    queue_wait_secs,
-                });
-                break;
+            if !self.seat_from_queue(s, now) {
+                // Nothing seatable; later free slots see the same queue.
+                return;
             }
         }
+    }
+
+    /// Seat the first eligible queued request into free slot `s`,
+    /// expiring dead requests on the way. Returns false when no queued
+    /// request can seat right now.
+    fn seat_from_queue(&mut self, s: usize, now: Instant) -> bool {
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].0.deadline.is_some_and(|d| d <= now) {
+                let (req, submitted) = self.queue.remove(i).expect("index checked");
+                self.expire_queued(req, submitted, now);
+                continue;
+            }
+            if self.session_in_flight(self.queue[i].0.session_id.as_deref()) {
+                i += 1;
+                continue;
+            }
+            let (req, submitted) = self.queue.remove(i).expect("index checked");
+            self.seat(s, req, submitted, now);
+            return true;
+        }
+        false
+    }
+
+    /// True when a turn of `session` currently occupies a slot.
+    fn session_in_flight(&self, session: Option<&str>) -> bool {
+        match session {
+            None => false,
+            Some(sid) => {
+                self.slots.iter().flatten().any(|slot| slot.session_id.as_deref() == Some(sid))
+            }
+        }
+    }
+
+    /// Seat a dequeued request into free slot `s`: restore its session's
+    /// parked state when the cache holds a usable snapshot (prefill then
+    /// starts past the cached transcript), zero the slot's rows otherwise.
+    fn seat(&mut self, s: usize, req: GenRequest, submitted: Instant, now: Instant) {
+        let restored = self.restore_slot_state(s, req.session_id.as_deref(), &req.prompt);
+        if restored == 0 {
+            self.clear_slot_state(s);
+        }
+        let queue_wait_secs = (now - submitted).as_secs_f64();
+        self.stats.admitted += 1;
+        self.stats.queue_wait_sum_secs += queue_wait_secs;
+        self.slots[s] = Some(Slot {
+            id: req.id,
+            prompt: req.prompt,
+            consumed: restored,
+            generated: Vec::new(),
+            max_new: req.max_new,
+            temperature: req.temperature,
+            steps: 0,
+            submitted,
+            deadline: req.deadline,
+            ttft_secs: 0.0,
+            queue_wait_secs,
+            session_id: req.session_id,
+        });
+    }
+
+    /// Try to restore `session`'s parked state into slot `s`; returns how
+    /// many leading prompt tokens the restored state already covers (0 =
+    /// cold start). The restored rows are the exact bits the slot held
+    /// after absorbing the cached transcript, so continuing from them is
+    /// bit-identical to re-prefilling the whole prompt.
+    fn restore_slot_state(&mut self, s: usize, session: Option<&str>, prompt: &[i32]) -> usize {
+        let Some(sid) = session else { return 0 };
+        if !self.cache.enabled() {
+            return 0;
+        }
+        let restored = match self.cache.take(sid, prompt) {
+            None => 0,
+            Some(cached) => match self.session.import_slot_state(&mut self.state, s, &cached.rows)
+            {
+                Ok(()) => cached.transcript.len(),
+                Err(e) => {
+                    log::warn!("session {sid}: state restore failed, cold prefill: {e:#}");
+                    0
+                }
+            },
+        };
+        self.publish_cache_stats();
+        restored
+    }
+
+    /// Park the finishing slot's recurrent state under its session key.
+    /// The cached transcript is exactly the token sequence the state has
+    /// absorbed: the consumed prompt plus every generated token that was
+    /// fed back through decode — the final sampled token never was, so it
+    /// is excluded (the follow-up turn's prompt supplies it).
+    fn snapshot_slot(&mut self, s: usize) {
+        if !self.cache.enabled() {
+            return;
+        }
+        let slot = self.slots[s].as_ref().expect("snapshotting an occupied slot");
+        let Some(sid) = slot.session_id.clone() else { return };
+        let fed_gen = if slot.consumed == slot.prompt.len() {
+            slot.generated.len().saturating_sub(1)
+        } else {
+            0
+        };
+        let mut transcript = Vec::with_capacity(slot.consumed + fed_gen);
+        transcript.extend_from_slice(&slot.prompt[..slot.consumed]);
+        transcript.extend_from_slice(&slot.generated[..fed_gen]);
+        if transcript.is_empty() {
+            return;
+        }
+        match self.session.export_slot_state(&self.state, s) {
+            Ok(rows) => self.cache.insert(&sid, CachedState { transcript, rows }),
+            Err(e) => log::warn!("session {sid}: state snapshot failed: {e:#}"),
+        }
+        self.publish_cache_stats();
+    }
+
+    /// Mirror the cache's counters into [`ServerStats`] (Copy-snapshotted
+    /// by the front end after every engine step).
+    fn publish_cache_stats(&mut self) {
+        let cs = self.cache.stats();
+        self.stats.cache_hits = cs.hits;
+        self.stats.cache_misses = cs.misses;
+        self.stats.cache_evictions = cs.evictions;
+        self.stats.cache_spills = cs.spills;
+        self.stats.cache_disk_hits = cs.disk_hits;
+        self.stats.cache_entries = cs.entries;
+        self.stats.cache_bytes = cs.resident_bytes;
     }
 
     /// Finish a request whose deadline expired before it ever got a slot.
@@ -507,8 +671,11 @@ impl<'a> Server<'a> {
         rng.categorical(&weights) as i32
     }
 
-    /// Move a finished slot's generation into the results.
+    /// Move a finished slot's generation into the results, parking its
+    /// recurrent state in the session cache first (while the slot's rows
+    /// are still intact — the next admit zeroes or overwrites them).
     fn finish_slot(&mut self, s: usize, finish_reason: FinishReason) {
+        self.snapshot_slot(s);
         let done = self.slots[s].take().expect("finishing an occupied slot");
         let e2e_secs = done.submitted.elapsed().as_secs_f64();
         self.stats.completed += 1;
@@ -739,7 +906,7 @@ mod tests {
     }
 
     fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
-        GenRequest { id, prompt, max_new, temperature: 0.0, deadline: None }
+        GenRequest { id, prompt, max_new, temperature: 0.0, deadline: None, session_id: None }
     }
 
     fn drive(server: &mut Server<'_>, n_req: u64, seed: u64) -> Vec<GenResult> {

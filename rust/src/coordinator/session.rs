@@ -130,4 +130,28 @@ impl Session {
     pub fn prefill(&self, state: &mut [HostValue], slot: usize, tokens: &[i32]) -> Result<Tensor> {
         self.inner.prefill(state, slot, tokens)
     }
+
+    /// True when the backend implements per-slot state export/import (the
+    /// serving session state cache requires it).
+    pub fn supports_state_io(&self) -> bool {
+        self.inner.supports_state_io()
+    }
+
+    /// Export one serving slot's recurrent state rows (exact f32 copy,
+    /// one row per decode-state tensor).
+    pub fn export_slot_state(&self, state: &[HostValue], slot: usize) -> Result<Vec<Vec<f32>>> {
+        self.inner.export_slot_state(state, slot)
+    }
+
+    /// Restore rows captured by [`Session::export_slot_state`] into
+    /// `slot` (any slot — state rows are slot-position independent),
+    /// leaving all other slots untouched.
+    pub fn import_slot_state(
+        &self,
+        state: &mut [HostValue],
+        slot: usize,
+        rows: &[Vec<f32>],
+    ) -> Result<()> {
+        self.inner.import_slot_state(state, slot, rows)
+    }
 }

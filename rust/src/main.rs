@@ -112,6 +112,16 @@ fn common_args(program: &str, about: &str) -> Args {
             "0",
             "serve/route: default per-request deadline in ms (0 = none)",
         )
+        .opt(
+            "state-cache-bytes",
+            "0",
+            "serve: byte bound of the per-session recurrent-state cache (0 = disabled)",
+        )
+        .opt(
+            "state-cache-dir",
+            "",
+            "serve: spill directory for evicted session state (empty = drop on evict)",
+        )
         .opt("replicas", "2", "route: in-process replica count")
         .opt("backends", "", "route: comma-separated engine addresses (instead of --replicas)")
         .opt("fault", "", "fault spec (also EFLA_FAULT; route: scoped 'idx:spec;...')")
@@ -140,6 +150,8 @@ fn build_config(p: &efla::util::cli::Parsed) -> Result<RunConfig> {
     cfg.queue_depth = p.usize("queue-depth")?;
     cfg.drain_timeout_secs = p.f64("drain-timeout")?;
     cfg.request_timeout_ms = p.u64("request-timeout-ms")?;
+    cfg.state_cache_bytes = p.usize("state-cache-bytes")?;
+    cfg.state_cache_dir = p.get("state-cache-dir")?.to_string();
     cfg.replicas = p.usize("replicas")?;
     cfg.backends = p.get("backends")?.to_string();
     cfg.fault = p.get("fault")?.to_string();
@@ -198,6 +210,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         queue_depth: cfg.queue_depth,
         drain_timeout_secs: cfg.drain_timeout_secs,
         default_timeout_ms: cfg.request_timeout_ms,
+        state_cache_bytes: cfg.state_cache_bytes,
+        state_cache_dir: cfg.state_cache_dir.clone(),
     };
 
     // --listen <addr>: run the HTTP front end with continuous batching
@@ -230,7 +244,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         let prompt: Vec<i32> = (0..plen)
             .map(|_| rng.range(97, 123) as i32) // ascii letters for byte-level models
             .collect();
-        server.submit(GenRequest { id, prompt, max_new, temperature: temp, deadline: None })?;
+        server.submit(GenRequest {
+            id,
+            prompt,
+            max_new,
+            temperature: temp,
+            deadline: None,
+            session_id: None,
+        })?;
     }
     let results = server.run_to_completion()?;
     log::info!(
@@ -309,6 +330,10 @@ fn cmd_route(argv: &[String]) -> Result<()> {
         queue_depth: cfg.queue_depth,
         drain_timeout_secs: cfg.drain_timeout_secs,
         default_timeout_ms: cfg.request_timeout_ms,
+        // Each replica gets its own independent state cache; session
+        // affinity across replicas is a router concern (see ROADMAP).
+        state_cache_bytes: cfg.state_cache_bytes,
+        state_cache_dir: cfg.state_cache_dir.clone(),
     };
     let mut frontends = Vec::with_capacity(n);
     let mut addrs = Vec::with_capacity(n);
@@ -327,6 +352,7 @@ fn cmd_route(argv: &[String]) -> Result<()> {
     std::thread::scope(|s| -> Result<()> {
         for (i, fe) in frontends.into_iter().enumerate() {
             let cfg = &cfg;
+            let server_cfg = server_cfg.clone();
             s.spawn(move || {
                 if let Err(e) = run_replica(i, fe, cfg, server_cfg) {
                     log::error!("replica {i} failed: {e:#}");

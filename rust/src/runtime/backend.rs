@@ -157,4 +157,36 @@ pub trait ModelSession {
         let _ = (state, slot, tokens);
         anyhow::bail!("{}: prefill is not supported by this backend", self.family())
     }
+
+    /// True when [`ModelSession::export_slot_state`] /
+    /// [`ModelSession::import_slot_state`] are implemented — the serving
+    /// engine disables the session state cache otherwise.
+    fn supports_state_io(&self) -> bool {
+        false
+    }
+
+    /// Export one serving slot's recurrent state: that slot's row of
+    /// every decode-state tensor, in [`ModelSession::decode_state`]
+    /// order, as raw f32 bits. Because the EFLA state is an exact pure
+    /// function of the tokens fed through the slot, the exported rows
+    /// fully determine future decode behavior: importing them into any
+    /// slot reproduces it bit-for-bit.
+    fn export_slot_state(&self, state: &[HostValue], slot: usize) -> Result<Vec<Vec<f32>>> {
+        let _ = (state, slot);
+        anyhow::bail!("{}: slot state export is not supported by this backend", self.family())
+    }
+
+    /// Restore rows captured by [`ModelSession::export_slot_state`] into
+    /// `slot` — any slot, not necessarily the one they came from; state
+    /// rows are slot-position independent. Every other slot's rows are
+    /// left untouched.
+    fn import_slot_state(
+        &self,
+        state: &mut [HostValue],
+        slot: usize,
+        rows: &[Vec<f32>],
+    ) -> Result<()> {
+        let _ = (state, slot, rows);
+        anyhow::bail!("{}: slot state import is not supported by this backend", self.family())
+    }
 }

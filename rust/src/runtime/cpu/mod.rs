@@ -413,6 +413,85 @@ impl ModelSession for CpuSession {
             .collect::<Result<_>>()?;
         stack.prefill(&self.cfg, &self.params, &self.exec, &mut flat, tokens)
     }
+
+    fn supports_state_io(&self) -> bool {
+        self.lm_stack.is_some()
+    }
+
+    fn export_slot_state(&self, state: &[HostValue], slot: usize) -> Result<Vec<Vec<f32>>> {
+        if self.lm_stack.is_none() {
+            bail!("{}: slot state export is only available for LM families", self.family);
+        }
+        let b = self.cfg.decode_batch;
+        if slot >= b {
+            bail!("{}: export slot {slot} out of range (decode batch {b})", self.family);
+        }
+        let shapes = decode_state_shapes(&self.cfg);
+        if state.len() != shapes.len() {
+            bail!(
+                "{}: export expects {} state tensors, got {}",
+                self.family,
+                shapes.len(),
+                state.len()
+            );
+        }
+        // One raw row per state tensor: the exact f32 bits of this slot's
+        // slice of each (decode_batch, ...) tensor.
+        state
+            .iter()
+            .enumerate()
+            .map(|(i, hv)| {
+                let t = hv.as_f32().map_err(|e| anyhow!("state tensor {i}: {e}"))?;
+                if t.shape() != shapes[i].as_slice() {
+                    bail!("state tensor {i}: shape {:?}, expected {:?}", t.shape(), shapes[i]);
+                }
+                let row = t.len() / b;
+                Ok(t.data()[slot * row..(slot + 1) * row].to_vec())
+            })
+            .collect()
+    }
+
+    // The restore side sits on the serving hot path (every cached-session
+    // admit runs it), so it copies into the live state in place.
+    // lint: no-alloc
+    fn import_slot_state(
+        &self,
+        state: &mut [HostValue],
+        slot: usize,
+        rows: &[Vec<f32>],
+    ) -> Result<()> {
+        if self.lm_stack.is_none() {
+            bail!("{}: slot state import is only available for LM families", self.family);
+        }
+        let b = self.cfg.decode_batch;
+        if slot >= b {
+            bail!("{}: import slot {slot} out of range (decode batch {b})", self.family);
+        }
+        let shapes = decode_state_shapes(&self.cfg);
+        if state.len() != shapes.len() {
+            bail!(
+                "{}: import expects {} state tensors, got {}",
+                self.family,
+                shapes.len(),
+                state.len()
+            );
+        }
+        if rows.len() != state.len() {
+            bail!("{}: import expects {} rows, got {}", self.family, state.len(), rows.len());
+        }
+        for (i, hv) in state.iter_mut().enumerate() {
+            let t = hv.as_f32_mut().map_err(|e| anyhow!("state tensor {i}: {e}"))?;
+            if t.shape() != shapes[i].as_slice() {
+                bail!("state tensor {i}: shape {:?}, expected {:?}", t.shape(), shapes[i]);
+            }
+            let row = t.len() / b;
+            if rows[i].len() != row {
+                bail!("state row {i}: {} elements, expected {row}", rows[i].len());
+            }
+            t.data_mut()[slot * row..(slot + 1) * row].copy_from_slice(&rows[i]);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

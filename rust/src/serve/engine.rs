@@ -214,7 +214,7 @@ pub fn run_engine(
     shared: &EngineShared,
     shutdown: &AtomicBool,
 ) -> Result<ServerStats> {
-    let mut server = Server::with_config(session, seed, cfg)?;
+    let mut server = Server::with_config(session, seed, cfg.clone())?;
     server.enable_events();
     shared.set_server_stats(server.stats);
     let mut sinks: Sinks = HashMap::new();

@@ -46,6 +46,7 @@ pub mod engine;
 pub mod fault;
 pub mod http;
 pub mod router;
+pub mod state_cache;
 
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -81,6 +82,11 @@ const AUTO_ID_BASE: u64 = 1 << 48;
 
 /// Latency samples retained per metric for the `/stats` percentiles.
 const LATENCY_SAMPLES: usize = 4096;
+
+/// Ceiling on a client `session_id` key. Keys are stored verbatim in the
+/// state cache (and hashed into spill filenames), so an unbounded key
+/// would let clients inflate the cache's bookkeeping for free.
+const MAX_SESSION_ID_BYTES: usize = 128;
 
 /// Process-wide flag set by SIGINT/SIGTERM once
 /// [`install_signal_handlers`] ran. The accept loop propagates it into
@@ -443,6 +449,18 @@ fn stats_json(ctx: &ConnCtx) -> Json {
         ("p95_queue_wait_ms", Json::Num(qw.p95_secs * 1e3)),
         ("p50_e2e_ms", Json::Num(e2e.p50_secs * 1e3)),
         ("p95_e2e_ms", Json::Num(e2e.p95_secs * 1e3)),
+        (
+            "state_cache",
+            Json::obj(vec![
+                ("hits", Json::Num(s.cache_hits as f64)),
+                ("misses", Json::Num(s.cache_misses as f64)),
+                ("evictions", Json::Num(s.cache_evictions as f64)),
+                ("spills", Json::Num(s.cache_spills as f64)),
+                ("disk_hits", Json::Num(s.cache_disk_hits as f64)),
+                ("entries", Json::Num(s.cache_entries as f64)),
+                ("bytes", Json::Num(s.cache_bytes as f64)),
+            ]),
+        ),
     ])
 }
 
@@ -506,7 +524,28 @@ fn parse_generate(j: &Json, ctx: &ConnCtx) -> std::result::Result<ParsedGenerate
             id
         }
     };
-    let req = GenRequest { id, prompt, max_new, temperature, deadline: None };
+    let session_id = match j.get("session_id") {
+        Json::Null => None,
+        v => {
+            let sid = if let Some(s) = v.as_str() {
+                s.to_string()
+            } else if let Some(n) = v.as_usize() {
+                // Integer keys are accepted and normalized to their
+                // decimal string — "42" and 42 name the same session.
+                n.to_string()
+            } else {
+                return Err("session_id must be a string or non-negative integer".into());
+            };
+            if sid.is_empty() {
+                return Err("session_id must not be empty".into());
+            }
+            if sid.len() > MAX_SESSION_ID_BYTES {
+                return Err(format!("session_id must be at most {MAX_SESSION_ID_BYTES} bytes"));
+            }
+            Some(sid)
+        }
+    };
+    let req = GenRequest { id, prompt, max_new, temperature, deadline: None, session_id };
     Ok(ParsedGenerate { req, stream, timeout_ms })
 }
 

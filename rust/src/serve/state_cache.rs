@@ -1,0 +1,378 @@
+//! Bounded LRU cache of parked per-session recurrent state.
+//!
+//! EFLA's analog of prefix caching. A transformer would need a KV cache
+//! that grows with the conversation; the error-free linear-attention
+//! recurrence compresses a whole transcript into a fixed O(1) state (conv
+//! warm-start windows + S per layer, a few KB per slot), so parking a
+//! finished turn's state and restoring it for the follow-up turn is
+//! nearly free — and, because the exact-solution recurrence is a pure
+//! function of the token sequence fed through it, **bit-exact**: a
+//! restored state replays to exactly the logits a full-transcript prefill
+//! would produce, at any thread count, matmul tier, and slot occupancy.
+//!
+//! Mechanics:
+//! * entries are keyed by the client's `session_id` and hold the exact
+//!   token transcript the state has absorbed plus the raw f32 state rows
+//!   captured by `ModelSession::export_slot_state`;
+//! * the memory tier is bounded by [`StateCache::new`]'s `max_bytes`
+//!   (`efla serve --state-cache-bytes`); crossing the bound evicts the
+//!   least-recently-used entry;
+//! * with a spill directory (`--state-cache-dir`) evicted entries are
+//!   written to disk through the [`crate::coordinator::checkpoint`]
+//!   serialization (magic + JSON header + LE f32 payload) and restored
+//!   transparently on the next lookup; without one they are dropped and
+//!   the session falls back to a cold full prefill;
+//! * a lookup only hits when the cached transcript is a **strict prefix**
+//!   of the new turn's prompt — the engine then restores the rows into a
+//!   free slot (any slot: states are slot-position independent) and
+//!   prefills only the suffix. [`StateCache::take`] removes the entry, so
+//!   a hit hands exclusive ownership of the state to the slot; the
+//!   extended state is re-inserted when the turn finishes.
+//!
+//! This module is pure bookkeeping: no model math, no matmuls. The
+//! engine-side scheduling (per-session serialization, restore-before-
+//! prefill, snapshot-on-finish) lives in [`crate::coordinator::server`].
+
+#![forbid(unsafe_code)]
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::coordinator::checkpoint;
+use crate::tensor::Tensor;
+
+/// One parked session: the tokens its state has absorbed + the raw rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachedState {
+    /// Exact token sequence fed through the recurrence (consumed prompt +
+    /// generated tokens that were fed back; the final sampled token of a
+    /// turn never was, so the follow-up prompt supplies it).
+    pub transcript: Vec<i32>,
+    /// One raw f32 row per decode-state tensor, in `decode_state` order.
+    pub rows: Vec<Vec<f32>>,
+}
+
+impl CachedState {
+    /// Resident bytes of this entry (payload only; bookkeeping excluded).
+    fn bytes(&self) -> usize {
+        let row_elems: usize = self.rows.iter().map(|r| r.len()).sum();
+        4 * (row_elems + self.transcript.len())
+    }
+}
+
+struct Entry {
+    state: CachedState,
+    /// Monotonic LRU clock value of the last insert/lookup touch.
+    last_used: u64,
+    bytes: usize,
+}
+
+/// Counter snapshot mirrored into `ServerStats` / `GET /stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StateCacheStats {
+    /// Successful restores (memory or disk).
+    pub hits: u64,
+    /// Lookups with a `session_id` that found no usable state (absent,
+    /// evicted without spill, or transcript not a prefix of the prompt).
+    pub misses: u64,
+    /// Entries pushed out of the memory tier at the byte bound.
+    pub evictions: u64,
+    /// Evicted entries written to the disk spill tier.
+    pub spills: u64,
+    /// Hits served from the disk tier (also counted in `hits`).
+    pub disk_hits: u64,
+    /// Entries currently resident in memory.
+    pub entries: usize,
+    /// Bytes currently resident in memory.
+    pub resident_bytes: usize,
+}
+
+/// The session state cache. `max_bytes == 0` disables everything: no
+/// lookups, no snapshots, counters never move.
+pub struct StateCache {
+    max_bytes: usize,
+    spill_dir: Option<PathBuf>,
+    entries: HashMap<String, Entry>,
+    /// Sessions whose state lives in a spill file on disk.
+    spilled: HashMap<String, PathBuf>,
+    tick: u64,
+    mem_bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    spills: u64,
+    disk_hits: u64,
+}
+
+impl StateCache {
+    /// `max_bytes` bounds the memory tier (0 = disabled); a non-empty
+    /// `spill_dir` arms the disk tier for evicted entries.
+    pub fn new(max_bytes: usize, spill_dir: &str) -> StateCache {
+        let spill_dir = if spill_dir.is_empty() || max_bytes == 0 {
+            None
+        } else {
+            Some(PathBuf::from(spill_dir))
+        };
+        StateCache {
+            max_bytes,
+            spill_dir,
+            entries: HashMap::new(),
+            spilled: HashMap::new(),
+            tick: 0,
+            mem_bytes: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            spills: 0,
+            disk_hits: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.max_bytes > 0
+    }
+
+    /// Current counters + occupancy.
+    pub fn stats(&self) -> StateCacheStats {
+        StateCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            spills: self.spills,
+            disk_hits: self.disk_hits,
+            entries: self.entries.len(),
+            resident_bytes: self.mem_bytes,
+        }
+    }
+
+    /// Look up `session`'s parked state for a new turn whose full prompt
+    /// is `prompt`. Hits only when the cached transcript is a strict
+    /// prefix of `prompt` (equality would leave the turn nothing to
+    /// prefill and no seeding logits). A hit removes the entry — the
+    /// caller owns the state until it re-inserts the extended snapshot.
+    pub fn take(&mut self, session: &str, prompt: &[i32]) -> Option<CachedState> {
+        if !self.enabled() {
+            return None;
+        }
+        if let Some(entry) = self.entries.get(session) {
+            if is_strict_prefix(&entry.state.transcript, prompt) {
+                let entry = self.entries.remove(session).expect("entry checked above");
+                self.mem_bytes -= entry.bytes;
+                self.hits += 1;
+                return Some(entry.state);
+            }
+            // Present but stale (diverged or replayed conversation): the
+            // state is unusable for this prompt. Leave it; a completed
+            // turn overwrites it.
+            self.misses += 1;
+            return None;
+        }
+        if let Some(path) = self.spilled.get(session).cloned() {
+            match load_spill(&path) {
+                Ok(state) if is_strict_prefix(&state.transcript, prompt) => {
+                    self.spilled.remove(session);
+                    std::fs::remove_file(&path).ok();
+                    self.hits += 1;
+                    self.disk_hits += 1;
+                    return Some(state);
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    log::warn!("state cache: spill read {} failed: {e:#}", path.display());
+                    self.spilled.remove(session);
+                    std::fs::remove_file(&path).ok();
+                }
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Park a finished turn's state under `session`, evicting (and
+    /// spilling, when a directory is armed) least-recently-used entries
+    /// until the memory tier fits the bound again. Replacing a session's
+    /// own previous entry is not an eviction.
+    pub fn insert(&mut self, session: &str, state: CachedState) {
+        if !self.enabled() || state.transcript.is_empty() {
+            return;
+        }
+        if let Some(old) = self.entries.remove(session) {
+            self.mem_bytes -= old.bytes;
+        }
+        if let Some(path) = self.spilled.remove(session) {
+            std::fs::remove_file(&path).ok();
+        }
+        let bytes = state.bytes();
+        if bytes > self.max_bytes {
+            // Never fits in memory: straight to the disk tier (or gone).
+            self.evictions += 1;
+            self.spill(session, &state);
+            return;
+        }
+        self.tick += 1;
+        self.mem_bytes += bytes;
+        self.entries.insert(session.to_string(), Entry { state, last_used: self.tick, bytes });
+        while self.mem_bytes > self.max_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("over the bound implies a resident entry");
+            let entry = self.entries.remove(&victim).expect("victim is resident");
+            self.mem_bytes -= entry.bytes;
+            self.evictions += 1;
+            self.spill(&victim, &entry.state);
+        }
+    }
+
+    /// Write an evicted entry to the disk tier, if one is armed.
+    fn spill(&mut self, session: &str, state: &CachedState) {
+        let Some(dir) = self.spill_dir.clone() else { return };
+        let path = dir.join(format!("{:016x}.state", fnv1a(session.as_bytes())));
+        match save_spill(&path, state) {
+            Ok(()) => {
+                self.spills += 1;
+                self.spilled.insert(session.to_string(), path);
+            }
+            Err(e) => log::warn!("state cache: spill write {} failed: {e:#}", path.display()),
+        }
+    }
+}
+
+/// True when `prefix` is a strict prefix of `seq`.
+fn is_strict_prefix(prefix: &[i32], seq: &[i32]) -> bool {
+    prefix.len() < seq.len() && prefix == &seq[..prefix.len()]
+}
+
+/// FNV-1a 64-bit — stable spill filenames without new dependencies. A
+/// collision merely overwrites another session's spill file; the
+/// transcript prefix check on load rejects the mismatch (cold prefill).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Spill file = checkpoint format: step carries the transcript length,
+/// tensor 0 the transcript (token ids are exact in f32 up to 2^24, far
+/// above any byte-level vocab), tensors 1.. the raw state rows.
+fn save_spill(path: &std::path::Path, state: &CachedState) -> anyhow::Result<()> {
+    let mut tensors = Vec::with_capacity(1 + state.rows.len());
+    let toks: Vec<f32> = state.transcript.iter().map(|&t| t as f32).collect();
+    tensors.push(Tensor::from_vec(&[toks.len()], toks));
+    for row in &state.rows {
+        tensors.push(Tensor::from_vec(&[row.len()], row.clone()));
+    }
+    checkpoint::save(path, state.transcript.len() as u64, &tensors)
+}
+
+fn load_spill(path: &std::path::Path) -> anyhow::Result<CachedState> {
+    let (step, tensors) = checkpoint::load(path)?;
+    let Some((toks, rows)) = tensors.split_first() else {
+        anyhow::bail!("{}: spill file has no tensors", path.display());
+    };
+    if toks.len() != step as usize {
+        anyhow::bail!("{}: transcript length {} != step {step}", path.display(), toks.len());
+    }
+    Ok(CachedState {
+        transcript: toks.data().iter().map(|&x| x as i32).collect(),
+        rows: rows.iter().map(|t| t.data().to_vec()).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(token: i32, elems: usize) -> CachedState {
+        CachedState { transcript: vec![token; 4], rows: vec![vec![token as f32; elems]] }
+    }
+
+    fn spill_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("efla_sc_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn disabled_cache_never_counts() {
+        let mut c = StateCache::new(0, "");
+        assert!(!c.enabled());
+        c.insert("a", entry(1, 8));
+        assert_eq!(c.take("a", &[1, 1, 1, 1, 2]), None);
+        assert_eq!(c.stats(), StateCacheStats::default());
+    }
+
+    #[test]
+    fn strict_prefix_rules_out_equality_and_divergence() {
+        let mut c = StateCache::new(1 << 20, "");
+        c.insert("a", CachedState { transcript: vec![1, 2, 3], rows: vec![vec![0.5; 4]] });
+        // Equal transcript: nothing left to prefill — miss.
+        assert_eq!(c.take("a", &[1, 2, 3]), None);
+        // Diverged transcript: miss, entry retained.
+        assert_eq!(c.take("a", &[1, 9, 3, 4]), None);
+        // Strict prefix: hit, and the hit removes the entry.
+        assert!(c.take("a", &[1, 2, 3, 4]).is_some());
+        assert_eq!(c.take("a", &[1, 2, 3, 4]), None);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 3, 0));
+    }
+
+    #[test]
+    fn lru_evicts_the_oldest_entry_at_the_byte_bound() {
+        // Each entry is 4*(64 + 4) = 272 bytes; bound fits two.
+        let mut c = StateCache::new(600, "");
+        c.insert("a", entry(1, 64));
+        c.insert("b", entry(2, 64));
+        assert_eq!(c.stats().entries, 2);
+        // Re-inserting a session replaces in place: no eviction.
+        c.insert("a", entry(1, 64));
+        assert_eq!(c.stats().evictions, 0);
+        // A third session crosses the bound; "b" is now least recent.
+        c.insert("c", entry(3, 64));
+        let s = c.stats();
+        assert_eq!((s.entries, s.evictions), (2, 1));
+        assert_eq!(c.take("b", &[2, 2, 2, 2, 9]), None, "b was evicted (no spill tier)");
+        assert!(c.take("a", &[1, 1, 1, 1, 9]).is_some());
+        assert!(c.take("c", &[3, 3, 3, 3, 9]).is_some());
+        assert_eq!(c.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn spill_round_trip_restores_identical_payload() {
+        let dir = spill_dir("roundtrip");
+        let mut c = StateCache::new(300, dir.to_str().unwrap());
+        let parked = CachedState {
+            transcript: vec![7, 8, 9, 10],
+            rows: vec![vec![1.5, -2.25, 1e-9], vec![0.0; 5]],
+        };
+        c.insert("a", parked.clone());
+        // "b" evicts "a" to disk.
+        c.insert("b", entry(2, 64));
+        let s = c.stats();
+        assert_eq!((s.evictions, s.spills, s.entries), (1, 1, 1));
+        // Restored bits must be exactly what was parked.
+        let back = c.take("a", &[7, 8, 9, 10, 11]).expect("disk hit");
+        assert_eq!(back, parked);
+        let s = c.stats();
+        assert_eq!((s.hits, s.disk_hits), (1, 1));
+        // The spill file was consumed by the hit.
+        assert_eq!(c.take("a", &[7, 8, 9, 10, 11]), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oversized_entry_spills_straight_to_disk() {
+        let dir = spill_dir("oversize");
+        let mut c = StateCache::new(16, dir.to_str().unwrap());
+        c.insert("big", entry(5, 64));
+        let s = c.stats();
+        assert_eq!((s.entries, s.evictions, s.spills), (0, 1, 1));
+        assert!(c.take("big", &[5, 5, 5, 5, 6]).is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -144,6 +144,7 @@ fn server_decodes_greedily_on_cpu() {
                 max_new: 4,
                 temperature: 0.0,
                 deadline: None,
+                session_id: None,
             })
             .unwrap();
     }

@@ -113,7 +113,14 @@ fn http_path_matches_in_process_engine_bitwise() {
     for (i, p) in prompts.iter().enumerate() {
         let prompt: Vec<i32> = p.bytes().map(|b| b as i32).collect();
         server
-            .submit(GenRequest { id: i as u64, prompt, max_new, temperature: 0.0, deadline: None })
+            .submit(GenRequest {
+                id: i as u64,
+                prompt,
+                max_new,
+                temperature: 0.0,
+                deadline: None,
+                session_id: None,
+            })
             .unwrap();
     }
     let reference = server.run_to_completion().unwrap();

@@ -244,7 +244,14 @@ fn server_completes_batched_requests() {
     for id in 0..6u64 {
         // more requests than slots (batch=4): exercises continuous batching
         let prompt: Vec<i32> = (0..rng.range(3, 10)).map(|_| rng.below(256) as i32).collect();
-        let req = GenRequest { id, prompt, max_new: 5, temperature: 0.0, deadline: None };
+        let req = GenRequest {
+            id,
+            prompt,
+            max_new: 5,
+            temperature: 0.0,
+            deadline: None,
+            session_id: None,
+        };
         server.submit(req).unwrap();
     }
     let results = server.run_to_completion().unwrap();

@@ -1,0 +1,10 @@
+#![forbid(unsafe_code)]
+
+// Fixture: EFL005 breach on the state-cache restore hot path — staging
+// the cached row through a fresh Vec instead of copying in place.
+
+// lint: no-alloc
+pub fn restore_row(dst: &mut [f32], cached: &[f32]) {
+    let staged = cached.to_vec();
+    dst.copy_from_slice(&staged);
+}

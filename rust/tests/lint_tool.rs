@@ -62,6 +62,17 @@ fn fixture_no_alloc_breach_fires_efl005() {
 }
 
 #[test]
+fn fixture_state_cache_restore_alloc_fires_efl005() {
+    // The restore hot path of the session state cache is tagged
+    // `lint: no-alloc` in `runtime/cpu/mod.rs`; this fixture is the same
+    // shape with a staging allocation, and must fire.
+    let vs =
+        lint::scan_source("rust/src/runtime/cpu/mod.rs", &fixture("state_cache_restore_alloc.rs"));
+    assert_eq!(rules(&vs), vec![Rule::NoAlloc]);
+    assert_eq!(vs[0].rule.id(), "EFL005");
+}
+
+#[test]
 fn fixture_serving_unpinned_matmul_fires_efl006() {
     let vs = lint::scan_source("rust/src/serve/engine.rs", &fixture("serving_unpinned_matmul.rs"));
     assert_eq!(rules(&vs), vec![Rule::ServingPin]);

@@ -300,6 +300,7 @@ fn serve_greedy(session: &Session, cfg: ServerConfig) -> Vec<Vec<i32>> {
                 max_new: 4,
                 temperature: 0.0,
                 deadline: None,
+                session_id: None,
             })
             .unwrap();
     }
@@ -354,6 +355,7 @@ fn server_reports_prefill_decode_split_and_ttft() {
                 max_new: 5,
                 temperature: 0.0,
                 deadline: None,
+                session_id: None,
             })
             .unwrap();
     }

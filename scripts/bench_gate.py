@@ -26,6 +26,14 @@ performance invariant regresses:
   with >= 4 busy slots (the batched path packs the shared weight panel
   once instead of once per slot); busy=1 only warns, the two calls are
   the same work there.
+* ``serving_state_cache`` — a turn that resumes from the session state
+  cache prefills only the new tokens, so its TTFT must be strictly
+  below the cold full-transcript replay at every conversation depth
+  >= 1024 (shallow depths only warn: both paths prefill almost the
+  same token count there, and fast-mode timings are noisy). The cached
+  TTFT must also stay ~flat across depths — max/min > 5x fails, since
+  a depth-dependent cached TTFT means the restore path is re-ingesting
+  the transcript it claims to skip.
 
 Exit code 0 = all gates pass, 1 = regression, 2 = malformed input.
 """
@@ -119,6 +127,33 @@ def gate_serving_batched(obj: dict) -> None:
             print(f"gate ok: {line}")
 
 
+def gate_state_cache(obj: dict) -> None:
+    points = obj.get("points", [])
+    if not points:
+        fail("serving_state_cache: no measurement points")
+    cached = []
+    for p in points:
+        depth = p.get("depth", 0)
+        hot = p.get("cached_ttft_ms", 0.0)
+        cold = p.get("cold_ttft_ms", 0.0)
+        line = (f"state cache depth={depth}: cached TTFT {hot:.2f} ms "
+                f"vs cold replay {cold:.2f} ms")
+        if hot <= 0.0 or cold <= 0.0:
+            fail(f"{line} — missing TTFT measurements")
+        cached.append(hot)
+        if depth >= 1024 and hot >= cold:
+            fail(f"{line} — cached resume must beat cold replay at depth >= 1024")
+        if hot >= cold:
+            warn(f"{line} (shallow depth, not fatal)")
+        else:
+            print(f"gate ok: {line} ({cold / hot:.2f}x)")
+    spread = max(cached) / min(cached)
+    line = f"state cache: cached TTFT spread across depths {spread:.2f}x"
+    if spread > 5.0:
+        fail(f"{line} — cached TTFT must stay ~flat in conversation depth")
+    print(f"gate ok: {line}")
+
+
 def main() -> None:
     src = open(sys.argv[1]) if len(sys.argv) > 1 else sys.stdin
     seen = set()
@@ -143,7 +178,10 @@ def main() -> None:
             gate_serving_cb(obj)
         elif name == "serving_batched_decode":
             gate_serving_batched(obj)
-    for required in ("gemm_gflops", "serving_prefill", "serving_cb", "serving_batched_decode"):
+        elif name == "serving_state_cache":
+            gate_state_cache(obj)
+    for required in ("gemm_gflops", "serving_prefill", "serving_cb",
+                     "serving_batched_decode", "serving_state_cache"):
         if required not in seen:
             fail(f"required bench section {required!r} missing from BENCH output")
     print("all bench gates passed")

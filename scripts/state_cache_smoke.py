@@ -1,0 +1,271 @@
+#!/usr/bin/env python3
+"""Multi-turn session-state-cache smoke test of `efla serve` for CI.
+
+Launches the release binary with the recurrent-state session cache
+enabled, drives 3-turn conversations over the wire with the Python
+stdlib only, and pins the PR's contract:
+
+1.  ``GET /stats`` exposes the ``state_cache`` counter object;
+2.  a 3-turn conversation carrying ``session_id`` returns tokens
+    **bit-identical** to replaying each turn's full transcript through a
+    cold prefill (no ``session_id``) on the same server;
+3.  the ``state_cache`` counters are exact for that conversation:
+    1 miss (turn 1 finds an empty cache), 2 hits (turns 2 and 3 restore
+    the parked state), 0 evictions, 0 spills, 1 resident entry;
+4.  a request without ``session_id`` leaves every counter untouched;
+5.  a second server with ``--state-cache-bytes 1`` (no spill dir) evicts
+    every snapshot immediately — both turns fall back to a cold prefill,
+    still bit-identical, with hits 0 / misses 2 / evictions 2;
+6.  both servers exit 0 on SIGTERM.
+
+Counters are read with a short poll: the engine publishes stats after
+the loop iteration that completes a request, so the ``/stats`` snapshot
+can trail the response by one tick.
+
+The servers' stderr goes to the log file given by ``--log`` (uploaded
+as a CI artifact on failure). Exit code 0 = all checks pass.
+
+Reproduce locally:
+    cargo build --release
+    python3 scripts/state_cache_smoke.py --bin target/release/efla
+"""
+
+import argparse
+import http.client
+import json
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+CHECKS = []
+
+
+def check(name, ok, detail=""):
+    CHECKS.append((name, ok))
+    mark = "ok" if ok else "FAIL"
+    print(f"smoke {mark}: {name}" + (f" — {detail}" if detail else ""))
+    if not ok:
+        raise AssertionError(f"{name}: {detail}")
+
+
+CLIENT_TIMEOUT = 120.0
+
+
+def post_generate(addr, body, timeout=None):
+    host, port = addr.rsplit(":", 1)
+    timeout = CLIENT_TIMEOUT if timeout is None else timeout
+    conn = http.client.HTTPConnection(host, int(port), timeout=timeout)
+    try:
+        conn.request("POST", "/v1/generate", body=json.dumps(body),
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        return resp.status, resp.read().decode("utf-8", "replace")
+    finally:
+        conn.close()
+
+
+def get(addr, path, timeout=30):
+    host, port = addr.rsplit(":", 1)
+    conn = http.client.HTTPConnection(host, int(port), timeout=timeout)
+    try:
+        conn.request("GET", path)
+        resp = conn.getresponse()
+        return resp.status, resp.read().decode("utf-8", "replace")
+    finally:
+        conn.close()
+
+
+def wait_for_ready(proc, deadline_secs):
+    """Read stdout (from a helper thread, so the wait really times out)
+    until the readiness line appears."""
+    found = {}
+
+    def reader():
+        for line in proc.stdout:
+            line = line.strip()
+            print(f"server stdout: {line}")
+            if line.startswith("SERVE listening on "):
+                found["addr"] = line[len("SERVE listening on "):]
+                return
+
+    t = threading.Thread(target=reader, daemon=True)
+    t.start()
+    t.join(deadline_secs)
+    if "addr" not in found:
+        if proc.poll() is not None:
+            raise AssertionError(
+                f"server exited early with code {proc.returncode}")
+        raise AssertionError(f"no readiness line within {deadline_secs}s")
+    return found["addr"]
+
+
+def generate_tokens(addr, tokens, max_tokens, session_id=None):
+    """One greedy generate on a token-array prompt; returns the tokens."""
+    body = {"tokens": tokens, "max_tokens": max_tokens, "temperature": 0.0}
+    if session_id is not None:
+        body["session_id"] = session_id
+    for _ in range(120):
+        status, text = post_generate(addr, body)
+        if status != 429:
+            break
+        time.sleep(0.25)
+    if status != 200:
+        raise AssertionError(f"generate failed: {status} {text[:200]}")
+    return json.loads(text.splitlines()[-1])["tokens"]
+
+
+def state_cache_stats(addr):
+    status, body = get(addr, "/stats")
+    if status != 200:
+        raise AssertionError(f"/stats failed: {status} {body[:200]}")
+    return json.loads(body).get("state_cache")
+
+
+def poll_state_cache(addr, pred, deadline_secs=10.0):
+    """The engine publishes stats once per loop tick, so counters can
+    trail the response briefly; poll until `pred` holds or time is up."""
+    last = None
+    end = time.time() + deadline_secs
+    while time.time() < end:
+        last = state_cache_stats(addr)
+        if last is not None and pred(last):
+            return last
+        time.sleep(0.2)
+    return last
+
+
+def launch(args, log, extra_flags):
+    cmd = [
+        args.bin, "serve",
+        "--listen", "127.0.0.1:0",
+        "--steps", str(args.train_steps),
+        "--corpus-bytes", "200000",
+        "--queue-depth", "4",
+        "--drain-timeout", "30",
+    ] + extra_flags
+    print(f"launching: {' '.join(cmd)}")
+    return subprocess.Popen(cmd, stdout=subprocess.PIPE, stderr=log,
+                            text=True)
+
+
+def shutdown(proc, name):
+    proc.send_signal(signal.SIGTERM)
+    code = proc.wait(timeout=60)
+    check(f"{name} clean exit after SIGTERM", code == 0, f"exit code {code}")
+
+
+def run_cached_server(proc, args):
+    addr = wait_for_ready(proc, args.startup_timeout)
+    print(f"cached server ready on {addr}")
+
+    # 1. /stats exposes the state_cache counter object.
+    sc = state_cache_stats(addr)
+    keys = ("hits", "misses", "evictions", "spills", "disk_hits",
+            "entries", "bytes")
+    check("stats has state_cache counters",
+          sc is not None and all(k in sc for k in keys), f"{sc}")
+
+    # 2. 3-turn conversation: each session turn must be bit-identical to
+    # a cold full-transcript replay on the same server. The cold replay
+    # carries no session_id, so it never touches the cache.
+    base = [7, 3, 11, 2, 29, 5, 13, 17, 23, 1, 9, 31, 4, 19, 6, 27,
+            8, 15, 10, 25, 12, 21, 14, 3]
+    extras = [[41, 2, 37], [5, 43, 8, 3], [47, 1]]
+    transcript = list(base)
+    for turn in range(3):
+        cold = generate_tokens(addr, transcript, 8)
+        cached = generate_tokens(addr, transcript, 8, session_id="smoke")
+        check(f"turn {turn + 1} bit-identical to full replay",
+              cached == cold, f"{cached} vs {cold}")
+        transcript = transcript + cached + extras[turn]
+
+    # 3. exact counters for the conversation: turn 1 misses the empty
+    # cache, turns 2 and 3 restore the parked state; a 64 MiB bound on a
+    # few-KB state never evicts or spills.
+    sc = poll_state_cache(
+        addr, lambda s: s["hits"] == 2 and s["entries"] == 1)
+    check("conversation counters exact",
+          sc is not None and (sc["hits"], sc["misses"], sc["evictions"],
+                              sc["spills"]) == (2, 1, 0, 0), f"{sc}")
+    check("one resident session entry",
+          sc["entries"] == 1 and sc["bytes"] > 0, f"{sc}")
+
+    # 4. a sessionless request leaves every counter untouched.
+    before = sc
+    generate_tokens(addr, base, 4)
+    time.sleep(1.0)
+    after = state_cache_stats(addr)
+    check("sessionless request leaves counters untouched",
+          after == before, f"{before} -> {after}")
+
+    shutdown(proc, "cached server")
+
+
+def run_evicting_server(proc, args):
+    addr = wait_for_ready(proc, args.startup_timeout)
+    print(f"evicting server ready on {addr}")
+
+    # 5. a 1-byte bound with no spill dir drops every snapshot: both
+    # turns run cold and must still match the sessionless replay.
+    base = [9, 4, 33, 6, 18, 2, 27, 5, 14, 7, 22, 3, 11, 8, 30, 1]
+    t1_cold = generate_tokens(addr, base, 6)
+    t1 = generate_tokens(addr, base, 6, session_id="evict")
+    check("evicted turn 1 matches replay", t1 == t1_cold, f"{t1}")
+    t2_prompt = base + t1 + [13, 2]
+    t2_cold = generate_tokens(addr, t2_prompt, 6)
+    t2 = generate_tokens(addr, t2_prompt, 6, session_id="evict")
+    check("evicted turn 2 matches replay", t2 == t2_cold, f"{t2}")
+    sc = poll_state_cache(addr, lambda s: s["evictions"] == 2)
+    check("eviction counters exact",
+          sc is not None and (sc["hits"], sc["misses"], sc["evictions"],
+                              sc["entries"]) == (0, 2, 2, 0), f"{sc}")
+
+    shutdown(proc, "evicting server")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bin", default="target/release/efla")
+    ap.add_argument("--log", default="state_cache_smoke.log")
+    ap.add_argument("--train-steps", type=int, default=5)
+    ap.add_argument("--startup-timeout", type=float, default=300.0)
+    ap.add_argument("--client-timeout", type=float, default=120.0,
+                    help="socket timeout of every generate call, seconds")
+    args = ap.parse_args()
+    global CLIENT_TIMEOUT
+    CLIENT_TIMEOUT = args.client_timeout
+
+    spill_dir = tempfile.mkdtemp(prefix="efla_state_cache_smoke_")
+    log = open(args.log, "w")
+    proc = None
+    try:
+        proc = launch(args, log, [
+            "--state-cache-bytes", str(64 << 20),
+            "--state-cache-dir", spill_dir,
+        ])
+        run_cached_server(proc, args)
+
+        log.write("\n--- evicting server (--state-cache-bytes 1) ---\n")
+        log.flush()
+        proc = launch(args, log, ["--state-cache-bytes", "1"])
+        run_evicting_server(proc, args)
+    except BaseException:
+        if proc is not None and proc.poll() is None:
+            proc.kill()
+            proc.wait()
+        log.close()
+        print(f"--- server log ({args.log}) ---")
+        sys.stdout.write(open(args.log).read())
+        raise
+    finally:
+        shutil.rmtree(spill_dir, ignore_errors=True)
+    log.close()
+    print(f"all {len(CHECKS)} smoke checks passed")
+
+
+if __name__ == "__main__":
+    main()
