@@ -28,7 +28,12 @@
 //!  10. serving session state cache — turn-2 TTFT of a cached resume
 //!      (prefill only the new tokens) vs a cold full-transcript replay
 //!      at conversation depths 256/1024/4096, bit-identical outputs
-//!      (writes the root-level BENCH_serving_state_cache.json).
+//!      (writes the root-level BENCH_serving_state_cache.json);
+//!  11. serving session affinity — turn-2 TTFT landing on the replica
+//!      that parked the state (affine) vs a session-blind replica (cold
+//!      replay) vs failover with state migration through the
+//!      `/v1/state/{session}` wire form, bit-identical outputs (writes
+//!      the root-level BENCH_serving_affinity.json).
 //!
 //! Env knobs: EFLA_BENCH_FAST=1 shrinks everything (CI smoke);
 //! EFLA_FORCE_SCALAR=1 pins the matmul dispatcher to the scalar tier.
@@ -50,6 +55,7 @@ use efla::runtime::CpuBackend;
 use efla::serve::engine::{run_engine, EngineShared, Event, Submission};
 use efla::serve::http;
 use efla::serve::router::{Router, RouterConfig};
+use efla::serve::state_cache::CachedState;
 use efla::serve::Frontend;
 use efla::tensor::{gemm, matmul_into, Tensor};
 use efla::util::bench::{bench, fmt_secs, Stats, Table};
@@ -880,6 +886,153 @@ fn main() {
     }
     report.push(("serving_state_cache", sc_json));
 
+    // ---- 11. serving: session affinity — turn-2 TTFT by landing spot
+    // What the router's session-affine scheduling buys at the replica
+    // level: an *affine* turn 2 lands on the replica holding the parked
+    // state (cache hit, prefill only the tail); a *session-blind* pick
+    // lands on a replica that never saw the session (cold
+    // full-transcript prefill); a *failover* turn 2 first migrates the
+    // state through the `/v1/state/{session}` wire form
+    // (`CachedState::to_wire`/`from_wire`) into a fresh replica and then
+    // resumes there. All three paths are asserted bit-identical. CI's
+    // bench gate enforces affine < blind at depth >= 1024
+    // (scripts/bench_gate.py, section `serving_affinity`).
+    let af_depths: &[usize] = if fast() { &[256, 1024] } else { &[256, 1024, 4096] };
+    let af_iters = if fast() { 2 } else { 4 };
+    let af_max_new = 8usize;
+    let af_new_tokens = 16usize;
+    println!("## Serving session affinity: turn-2 TTFT, affine vs blind vs failover\n");
+    let mut t =
+        Table::new(&["depth", "affine TTFT", "blind TTFT", "failover TTFT", "blind/affine"]);
+    let mut af_points = Vec::new();
+    for &depth in af_depths {
+        let mut rng = Rng::new(0xAF00 + depth as u64);
+        let t1: Vec<i32> = (0..depth).map(|_| rng.below(vocab as u64) as i32).collect();
+        let extra: Vec<i32> =
+            (0..af_new_tokens).map(|_| rng.below(vocab as u64) as i32).collect();
+        let af_cfg =
+            ServerConfig { state_cache_bytes: 64 << 20, ..ServerConfig::default() };
+        let mut affine_ttft = f64::INFINITY;
+        let mut blind_ttft = f64::INFINITY;
+        let mut failover_ttft = f64::INFINITY;
+        let mut affine_tokens = Vec::new();
+        let mut blind_tokens = Vec::new();
+        let mut failover_tokens = Vec::new();
+        for _ in 0..af_iters {
+            // Turn 1 on replica A parks the session state.
+            let mut a = Server::with_config(&session, 7, af_cfg.clone()).unwrap();
+            a.submit(GenRequest {
+                id: 1,
+                prompt: t1.clone(),
+                max_new: af_max_new,
+                temperature: 0.0,
+                deadline: None,
+                session_id: Some("bench".into()),
+            })
+            .unwrap();
+            let r1 = a.run_to_completion().unwrap().pop().unwrap();
+            let mut t2 = t1.clone();
+            t2.extend_from_slice(&r1.tokens);
+            t2.extend_from_slice(&extra);
+
+            // Failover: A's parked state crosses to a fresh replica B
+            // through the wire form, then turn 2 resumes on B.
+            let parked =
+                a.state_cache().lock().unwrap().take_any("bench").expect("turn 1 parked");
+            let wire = parked.to_wire();
+            let mut b = Server::with_config(&session, 7, af_cfg.clone()).unwrap();
+            b.state_cache()
+                .lock()
+                .unwrap()
+                .insert("bench", CachedState::from_wire(&wire).unwrap());
+            b.submit(GenRequest {
+                id: 2,
+                prompt: t2.clone(),
+                max_new: af_max_new,
+                temperature: 0.0,
+                deadline: None,
+                session_id: Some("bench".into()),
+            })
+            .unwrap();
+            let rf = b.run_to_completion().unwrap().pop().unwrap();
+            assert_eq!(b.stats.cache_hits, 1, "failover turn 2 must hit the migrated state");
+            failover_ttft = failover_ttft.min(rf.ttft_secs);
+            failover_tokens = rf.tokens;
+
+            // Affine: turn 2 lands back on A. Re-import the identical
+            // wire payload (take_any consumed the original above —
+            // migration copies the serialized entry verbatim).
+            a.state_cache()
+                .lock()
+                .unwrap()
+                .insert("bench", CachedState::from_wire(&wire).unwrap());
+            a.submit(GenRequest {
+                id: 3,
+                prompt: t2.clone(),
+                max_new: af_max_new,
+                temperature: 0.0,
+                deadline: None,
+                session_id: Some("bench".into()),
+            })
+            .unwrap();
+            let r2 = a.run_to_completion().unwrap().pop().unwrap();
+            assert_eq!(a.stats.cache_hits, 1, "affine turn 2 must hit the cache");
+            affine_ttft = affine_ttft.min(r2.ttft_secs);
+            affine_tokens = r2.tokens;
+
+            // Session-blind: turn 2 on a replica that never saw the
+            // session — a cold full-transcript prefill.
+            let mut c = Server::with_config(&session, 7, af_cfg.clone()).unwrap();
+            c.submit(GenRequest {
+                id: 4,
+                prompt: t2,
+                max_new: af_max_new,
+                temperature: 0.0,
+                deadline: None,
+                session_id: Some("bench".into()),
+            })
+            .unwrap();
+            let rb = c.run_to_completion().unwrap().pop().unwrap();
+            assert_eq!(c.stats.cache_hits, 0, "blind turn 2 must miss the cache");
+            blind_ttft = blind_ttft.min(rb.ttft_secs);
+            blind_tokens = rb.tokens;
+        }
+        assert_eq!(affine_tokens, blind_tokens, "affine must match the cold replay");
+        assert_eq!(failover_tokens, blind_tokens, "migrated resume must match the cold replay");
+        let speedup = blind_ttft / affine_ttft.max(1e-12);
+        t.row(&[
+            format!("{depth}"),
+            format!("{:.2} ms", affine_ttft * 1e3),
+            format!("{:.2} ms", blind_ttft * 1e3),
+            format!("{:.2} ms", failover_ttft * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        af_points.push(Json::obj(vec![
+            ("depth", Json::Num(depth as f64)),
+            ("affine_ttft_ms", Json::Num(affine_ttft * 1e3)),
+            ("blind_ttft_ms", Json::Num(blind_ttft * 1e3)),
+            ("failover_ttft_ms", Json::Num(failover_ttft * 1e3)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    println!("{}", t.render());
+    println!("(failover = wire-form state migration + resume; all paths bit-identical)\n");
+    let af_json = Json::obj(vec![
+        ("bench", Json::Str("serving_affinity".into())),
+        ("kernel", Json::Str(format!("{:?}", gemm::active_kernel()))),
+        ("family", Json::Str("lm_tiny_efla".into())),
+        ("threads", Json::Num(session.threads() as f64)),
+        ("max_new", Json::Num(af_max_new as f64)),
+        ("new_tokens_per_turn", Json::Num(af_new_tokens as f64)),
+        ("points", Json::Arr(af_points)),
+    ]);
+    println!("BENCH {}", af_json.to_string());
+    if !fast() {
+        json::write_file(std::path::Path::new("BENCH_serving_affinity.json"), &af_json)
+            .unwrap();
+    }
+    report.push(("serving_affinity", af_json));
+
     let out = Json::Obj(
         report.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
     );
@@ -895,6 +1048,7 @@ fn main() {
         println!("json: BENCH_serving_cb.json");
         println!("json: BENCH_serving_batched.json");
         println!("json: BENCH_serving_state_cache.json");
+        println!("json: BENCH_serving_affinity.json");
     }
     println!("json: bench_results/kernel_throughput.json");
 }

@@ -13,7 +13,11 @@ use anyhow::{anyhow, bail, Result};
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 
-const MAGIC: u32 = 0x45464C41; // "EFLA"
+/// File/wire magic ("EFLA"). Shared with the state-cache wire form
+/// ([`crate::serve::state_cache::CachedState::to_wire`]), which mirrors
+/// this layout into a byte buffer for the `/v1/state/{session}`
+/// transfer endpoints.
+pub const MAGIC: u32 = 0x45464C41;
 
 /// Write a checkpoint.
 pub fn save(path: &Path, step: u64, tensors: &[Tensor]) -> Result<()> {

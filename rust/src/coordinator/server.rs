@@ -39,13 +39,14 @@
 //! [`Session::prefill`] are the only compute.
 
 use std::collections::{BTreeSet, VecDeque};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::session::Session;
 use crate::runtime::HostValue;
-use crate::serve::state_cache::{CachedState, StateCache};
+use crate::serve::state_cache::{CachedState, SharedStateCache, StateCache};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -334,8 +335,10 @@ pub struct Server<'a> {
     events_enabled: bool,
     /// Parked per-session recurrent state (disabled unless
     /// [`ServerConfig::state_cache_bytes`] > 0 and the backend has state
-    /// export/import).
-    cache: StateCache,
+    /// export/import). Shared: the HTTP front end holds the same handle
+    /// for the `/v1/state/{session}` migration endpoints, which only
+    /// ever touch *parked* entries — live slots stay engine-private.
+    cache: SharedStateCache,
     pub stats: ServerStats,
 }
 
@@ -365,7 +368,8 @@ impl<'a> Server<'a> {
             );
             cfg.state_cache_bytes = 0;
         }
-        let cache = StateCache::new(cfg.state_cache_bytes, &cfg.state_cache_dir);
+        let cache =
+            Arc::new(Mutex::new(StateCache::new(cfg.state_cache_bytes, &cfg.state_cache_dir)));
         let stats = ServerStats { batch, threads: session.threads(), ..ServerStats::default() };
         Ok(Server {
             session,
@@ -388,6 +392,17 @@ impl<'a> Server<'a> {
 
     pub fn batch_size(&self) -> usize {
         self.batch
+    }
+
+    /// Shared handle to the session state cache. The network front end
+    /// publishes it ([`crate::serve::engine::EngineShared`]) so the
+    /// `/v1/state/{session}` transfer endpoints can export/import parked
+    /// entries concurrently with the engine loop. Exporting while the
+    /// same session has a turn in flight is safe: a seated turn has
+    /// already *consumed* its entry (`take`), so the cache holds either
+    /// nothing or a stale snapshot a strict-prefix check would reject.
+    pub fn state_cache(&self) -> SharedStateCache {
+        Arc::clone(&self.cache)
     }
 
     /// The scheduler config in effect (after the capability fallbacks).
@@ -562,10 +577,14 @@ impl<'a> Server<'a> {
     /// bit-identical to re-prefilling the whole prompt.
     fn restore_slot_state(&mut self, s: usize, session: Option<&str>, prompt: &[i32]) -> usize {
         let Some(sid) = session else { return 0 };
-        if !self.cache.enabled() {
-            return 0;
-        }
-        let restored = match self.cache.take(sid, prompt) {
+        let cached = {
+            let mut cache = self.cache.lock().expect("state cache lock");
+            if !cache.enabled() {
+                return 0;
+            }
+            cache.take(sid, prompt)
+        };
+        let restored = match cached {
             None => 0,
             Some(cached) => match self.session.import_slot_state(&mut self.state, s, &cached.rows)
             {
@@ -586,7 +605,7 @@ impl<'a> Server<'a> {
     /// fed back through decode — the final sampled token never was, so it
     /// is excluded (the follow-up turn's prompt supplies it).
     fn snapshot_slot(&mut self, s: usize) {
-        if !self.cache.enabled() {
+        if !self.cache.lock().expect("state cache lock").enabled() {
             return;
         }
         let slot = self.slots[s].as_ref().expect("snapshotting an occupied slot");
@@ -603,7 +622,11 @@ impl<'a> Server<'a> {
             return;
         }
         match self.session.export_slot_state(&self.state, s) {
-            Ok(rows) => self.cache.insert(&sid, CachedState { transcript, rows }),
+            Ok(rows) => self
+                .cache
+                .lock()
+                .expect("state cache lock")
+                .insert(&sid, CachedState { transcript, rows }),
             Err(e) => log::warn!("session {sid}: state snapshot failed: {e:#}"),
         }
         self.publish_cache_stats();
@@ -612,7 +635,7 @@ impl<'a> Server<'a> {
     /// Mirror the cache's counters into [`ServerStats`] (Copy-snapshotted
     /// by the front end after every engine step).
     fn publish_cache_stats(&mut self) {
-        let cs = self.cache.stats();
+        let cs = self.cache.lock().expect("state cache lock").stats();
         self.stats.cache_hits = cs.hits;
         self.stats.cache_misses = cs.misses;
         self.stats.cache_evictions = cs.evictions;

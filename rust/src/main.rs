@@ -288,6 +288,8 @@ fn cmd_route(argv: &[String]) -> Result<()> {
         .opt("health-interval-ms", "200", "route: /healthz probe period per replica, in ms")
         .opt("max-attempts", "3", "route: max replicas tried per request")
         .opt("cooldown-ms", "1000", "route: ejection cooldown before a half-open probe, in ms")
+        .opt("affinity", "on", "route: session-affine scheduling, on | off")
+        .opt("migrate", "on", "route: state migration on session failover, on | off")
         .parse_from(argv)?;
     let cfg = build_config(&p)?;
     if cfg.task != Task::Lm {
@@ -301,6 +303,8 @@ fn cmd_route(argv: &[String]) -> Result<()> {
         cooldown_ms: p.u64("cooldown-ms")?,
         default_timeout_ms: cfg.request_timeout_ms,
         seed: cfg.seed,
+        affinity: on_off(p.get("affinity")?, "affinity")?,
+        migrate: on_off(p.get("migrate")?, "migrate")?,
         ..RouterConfig::default()
     };
 
@@ -330,8 +334,9 @@ fn cmd_route(argv: &[String]) -> Result<()> {
         queue_depth: cfg.queue_depth,
         drain_timeout_secs: cfg.drain_timeout_secs,
         default_timeout_ms: cfg.request_timeout_ms,
-        // Each replica gets its own independent state cache; session
-        // affinity across replicas is a router concern (see ROADMAP).
+        // Each replica gets its own independent state cache; the router
+        // keeps sessions pinned to one replica (rendezvous affinity)
+        // and migrates parked state across caches on failover.
         state_cache_bytes: cfg.state_cache_bytes,
         state_cache_dir: cfg.state_cache_dir.clone(),
     };
@@ -366,6 +371,17 @@ fn cmd_route(argv: &[String]) -> Result<()> {
         }
         result
     })
+}
+
+/// Parse an `on | off` CLI toggle.
+fn on_off(v: &str, flag: &str) -> Result<bool> {
+    match v {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => {
+            Err(CliError::new(format!("--{flag} must be 'on' or 'off', got '{other}'")).into())
+        }
+    }
 }
 
 /// One in-process replica: its own backend and its own session, trained

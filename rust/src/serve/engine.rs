@@ -47,6 +47,7 @@ use crate::coordinator::server::{
 };
 use crate::coordinator::session::Session;
 use crate::serve::fault::FaultInjector;
+use crate::serve::state_cache::SharedStateCache;
 
 /// What a request's event channel can carry.
 #[derive(Clone, Debug)]
@@ -125,6 +126,11 @@ pub struct EngineShared {
     e2e: Mutex<Ring>,
     /// Fault layer hook of the engine loop (`engine_stall_ms`).
     fault: Arc<FaultInjector>,
+    /// Shared handle to the engine's session state cache, published by
+    /// [`run_engine`] once the [`Server`] exists. The `/v1/state/{session}`
+    /// transfer endpoints use it to export/import *parked* entries; `None`
+    /// until the engine starts (handlers answer 404 in that window).
+    state_cache: Mutex<Option<SharedStateCache>>,
 }
 
 impl EngineShared {
@@ -144,7 +150,18 @@ impl EngineShared {
             queue_wait: Mutex::new(Ring::new(sample_cap)),
             e2e: Mutex::new(Ring::new(sample_cap)),
             fault,
+            state_cache: Mutex::new(None),
         }
+    }
+
+    /// Publish the engine's state-cache handle for the transfer endpoints.
+    pub fn set_state_cache(&self, cache: SharedStateCache) {
+        *self.state_cache.lock().expect("state_cache lock") = Some(cache);
+    }
+
+    /// The state-cache handle, once [`run_engine`] has published it.
+    pub fn state_cache(&self) -> Option<SharedStateCache> {
+        self.state_cache.lock().expect("state_cache lock").clone()
     }
 
     /// Record a successful `try_send` into the admission channel.
@@ -216,6 +233,7 @@ pub fn run_engine(
 ) -> Result<ServerStats> {
     let mut server = Server::with_config(session, seed, cfg.clone())?;
     server.enable_events();
+    shared.set_state_cache(server.state_cache());
     shared.set_server_stats(server.stats);
     let mut sinks: Sinks = HashMap::new();
     let t0 = Instant::now();

@@ -28,6 +28,19 @@
 //!   that cannot admit work.
 //! * `POST /fault`  — swap the fault-injection spec of a running front
 //!   end (body: the [`fault::FaultSpec`] grammar; chaos harness only).
+//! * `GET`/`PUT /v1/state/{session}` — export / import one *parked*
+//!   state-cache entry as the checkpoint-layout wire form
+//!   ([`state_cache::CachedState::to_wire`]). The router's failover
+//!   migration path; GET consumes the entry (exclusive ownership moves
+//!   with the bytes).
+//!
+//! ## Error envelope (v1)
+//!
+//! Every non-2xx JSON response — engine *and* router — uses one shape:
+//! `{"error": {"code": "<stable_snake_case>", "message": "...",
+//! "retry_after_ms": <int, optional>}}`. [`ErrorCode`] is the single
+//! code → status mapping table both front ends share. `/stats` bodies
+//! carry `"schema_version": 2`.
 //!
 //! Backpressure: the admission queue holds at most
 //! [`ServerConfig::queue_depth`] waiting requests (decode slots are extra
@@ -64,6 +77,146 @@ use crate::util::json::{self, Json};
 use engine::{EngineShared, Event, Submission};
 use fault::{FaultInjector, FaultSpec};
 use http::{ChunkedWriter, ParseError, Request};
+use state_cache::CachedState;
+
+/// `/stats` schema version, bumped whenever a field is renamed or moved.
+/// Present on engine and router stats bodies alike.
+pub const STATS_SCHEMA_VERSION: u64 = 2;
+
+/// Stable error codes of the unified v1 error envelope.
+///
+/// Every non-2xx JSON response from the engine front end *and* the
+/// router renders as `{"error": {"code", "message", "retry_after_ms"?}}`
+/// via [`ErrorCode::envelope`]; this enum is the single code →
+/// HTTP-status mapping table both share, so the two front ends cannot
+/// drift apart. Codes are stable API: clients switch on `code`, never
+/// on `message`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed request (bad JSON, bad field, bad path segment).
+    BadRequest,
+    /// Request body exceeded the configured cap.
+    BodyTooLarge,
+    /// No route for this method + path.
+    NotFound,
+    /// Route exists, method does not.
+    MethodNotAllowed,
+    /// Engine refusal: empty prompt.
+    EmptyPrompt,
+    /// Engine refusal: `max_tokens` of 0.
+    ZeroMaxTokens,
+    /// Engine refusal: a request with this id is already in flight.
+    DuplicateId,
+    /// Admission queue full — retry after backoff.
+    QueueFull,
+    /// Shutdown began; new work is refused while accepted work drains.
+    ShuttingDown,
+    /// The engine loop is gone (post-drain or crashed).
+    EngineStopped,
+    /// Accepted, then abandoned by the drain deadline.
+    RequestDropped,
+    /// Fault-injection layer produced this error (chaos runs only).
+    InjectedFault,
+    /// Connection cap reached; bounced before a worker was spawned.
+    TooManyConnections,
+    /// `GET /v1/state/{session}`: no parked entry for that session.
+    SessionNotFound,
+    /// State transfer endpoints with the cache disabled or not yet up.
+    StateCacheDisabled,
+    /// `PUT /v1/state/{session}`: body failed wire-form validation.
+    InvalidStatePayload,
+    /// `/healthz` during shutdown.
+    Draining,
+    /// `/healthz` while the admission queue is full.
+    Saturated,
+    /// Router: the client's `timeout_ms` budget expired.
+    DeadlineExceeded,
+    /// Router: every routable replica was tried and failed.
+    AllReplicasFailed,
+    /// Router: no routable replica (all ejected or saturated).
+    ReplicasSaturated,
+}
+
+impl ErrorCode {
+    /// The stable snake_case wire code.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::BodyTooLarge => "body_too_large",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::MethodNotAllowed => "method_not_allowed",
+            ErrorCode::EmptyPrompt => "empty_prompt",
+            ErrorCode::ZeroMaxTokens => "zero_max_tokens",
+            ErrorCode::DuplicateId => "duplicate_id",
+            ErrorCode::QueueFull => "queue_full",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::EngineStopped => "engine_stopped",
+            ErrorCode::RequestDropped => "request_dropped",
+            ErrorCode::InjectedFault => "injected_fault",
+            ErrorCode::TooManyConnections => "too_many_connections",
+            ErrorCode::SessionNotFound => "session_not_found",
+            ErrorCode::StateCacheDisabled => "state_cache_disabled",
+            ErrorCode::InvalidStatePayload => "invalid_state_payload",
+            ErrorCode::Draining => "draining",
+            ErrorCode::Saturated => "saturated",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::AllReplicasFailed => "all_replicas_failed",
+            ErrorCode::ReplicasSaturated => "replicas_saturated",
+        }
+    }
+
+    /// The HTTP status this code always ships with.
+    pub fn status(self) -> u16 {
+        match self {
+            ErrorCode::BadRequest
+            | ErrorCode::EmptyPrompt
+            | ErrorCode::ZeroMaxTokens
+            | ErrorCode::InvalidStatePayload => 400,
+            ErrorCode::NotFound
+            | ErrorCode::SessionNotFound
+            | ErrorCode::StateCacheDisabled => 404,
+            ErrorCode::MethodNotAllowed => 405,
+            ErrorCode::DuplicateId => 409,
+            ErrorCode::BodyTooLarge => 413,
+            ErrorCode::QueueFull => 429,
+            ErrorCode::InjectedFault => 500,
+            ErrorCode::AllReplicasFailed => 502,
+            ErrorCode::ShuttingDown
+            | ErrorCode::EngineStopped
+            | ErrorCode::RequestDropped
+            | ErrorCode::TooManyConnections
+            | ErrorCode::Draining
+            | ErrorCode::Saturated
+            | ErrorCode::ReplicasSaturated => 503,
+            ErrorCode::DeadlineExceeded => 504,
+        }
+    }
+
+    /// Retry hint for transient saturation codes.
+    pub fn retry_after_ms(self) -> Option<u64> {
+        match self {
+            ErrorCode::QueueFull | ErrorCode::ReplicasSaturated => Some(1000),
+            _ => None,
+        }
+    }
+
+    /// The inner `{"code", "message", "retry_after_ms"?}` object.
+    pub fn body(self, msg: &str) -> Json {
+        let mut fields = vec![
+            ("code", Json::Str(self.as_str().to_string())),
+            ("message", Json::Str(msg.to_string())),
+        ];
+        if let Some(ms) = self.retry_after_ms() {
+            fields.push(("retry_after_ms", Json::Num(ms as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// The full `{"error": {...}}` envelope object for this code.
+    pub fn envelope(self, msg: &str) -> Json {
+        Json::obj(vec![("error", self.body(msg))])
+    }
+}
 
 /// Soft cap on concurrently served connections; beyond it new arrivals
 /// get an immediate 503 instead of a worker thread.
@@ -258,7 +411,8 @@ fn accept_loop<'scope, 'env>(
                         &mut stream,
                         503,
                         "application/json",
-                        b"{\"error\":\"too many connections\"}",
+                        b"{\"error\":{\"code\":\"too_many_connections\",\
+                          \"message\":\"too many connections\"}}",
                         false,
                     );
                     continue;
@@ -312,11 +466,11 @@ fn serve_conn(stream: TcpStream, ctx: &ConnCtx) -> Result<()> {
             }
             Err(ParseError::Io(_)) => return Ok(()),
             Err(e @ ParseError::BodyTooLarge { .. }) => {
-                respond_error(&mut writer, 413, &e.to_string(), false)?;
+                respond_error(&mut writer, ErrorCode::BodyTooLarge, &e.to_string(), false)?;
                 return Ok(());
             }
             Err(e) => {
-                respond_error(&mut writer, 400, &e.to_string(), false)?;
+                respond_error(&mut writer, ErrorCode::BadRequest, &e.to_string(), false)?;
                 return Ok(());
             }
         };
@@ -333,27 +487,36 @@ fn serve_conn(stream: TcpStream, ctx: &ConnCtx) -> Result<()> {
 
 /// The `/healthz` body: `ok` plus a `status` of `"ok"`, `"draining"`
 /// (shutdown began) or `"saturated"` (admission queue full). The latter
-/// two answer 503 so a router health check stops routing here.
+/// two answer 503 so a router health check stops routing here; their
+/// bodies also carry the v1 error envelope (same `code` as `status`)
+/// alongside the probe fields.
 fn healthz(w: &mut TcpStream, keep: bool, ctx: &ConnCtx) -> Result<()> {
-    let (status, ok, state) = if ctx.shutdown.load(Ordering::SeqCst) {
-        (503, false, "draining")
+    let not_ok = if ctx.shutdown.load(Ordering::SeqCst) {
+        Some(ErrorCode::Draining)
     } else if ctx.shared.queue_depth() >= ctx.queue_depth {
-        (503, false, "saturated")
+        Some(ErrorCode::Saturated)
     } else {
-        (200, true, "ok")
+        None
     };
-    let body = Json::obj(vec![
+    let (status, ok, state) = match not_ok {
+        Some(code) => (code.status(), false, code.as_str()),
+        None => (200, true, "ok"),
+    };
+    let mut fields = vec![
         ("ok", Json::Bool(ok)),
         ("status", Json::Str(state.to_string())),
         ("slots", Json::Num(ctx.slots as f64)),
-    ]);
-    respond_json(w, status, &body, keep)
+    ];
+    if let Some(code) = not_ok {
+        fields.push(("error", code.body(&format!("replica is {state}"))));
+    }
+    respond_json(w, status, &Json::obj(fields), keep)
 }
 
 fn handle_set_fault(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) -> Result<()> {
     let body = match std::str::from_utf8(&req.body) {
         Ok(b) => b,
-        Err(_) => return respond_error(w, 400, "fault spec must be UTF-8", keep),
+        Err(_) => return respond_error(w, ErrorCode::BadRequest, "fault spec must be UTF-8", keep),
     };
     match FaultSpec::parse(body.trim()) {
         Ok(spec) => {
@@ -361,7 +524,68 @@ fn handle_set_fault(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx)
             ctx.fault.set_spec(spec);
             respond_json(w, 200, &Json::obj(vec![("ok", Json::Bool(true))]), keep)
         }
-        Err(msg) => respond_error(w, 400, &msg, keep),
+        Err(msg) => respond_error(w, ErrorCode::BadRequest, &msg, keep),
+    }
+}
+
+/// `GET`/`PUT /v1/state/{session}` — the router's migration transport.
+///
+/// GET exports one *parked* cache entry as the checkpoint-layout wire
+/// form and **consumes** it (exclusive ownership moves with the bytes,
+/// exactly like a seated turn's `take`); PUT validates the wire form and
+/// parks it here. No shutdown gate: a draining replica must keep
+/// exporting so its sessions can move before it exits.
+fn handle_state_transfer(
+    w: &mut TcpStream,
+    req: &Request,
+    keep: bool,
+    ctx: &ConnCtx,
+) -> Result<()> {
+    let session = &req.path()["/v1/state/".len()..];
+    if session.is_empty() {
+        return respond_error(w, ErrorCode::BadRequest, "empty session id", keep);
+    }
+    if session.len() > MAX_SESSION_ID_BYTES {
+        let msg = format!("session id must be at most {MAX_SESSION_ID_BYTES} bytes");
+        return respond_error(w, ErrorCode::BadRequest, &msg, keep);
+    }
+    let Some(cache) = ctx.shared.state_cache() else {
+        // The engine publishes its handle right after it starts; until
+        // then (or with the cache sized 0) there is nothing to transfer.
+        return respond_error(w, ErrorCode::StateCacheDisabled, "state cache not available", keep);
+    };
+    let mut guard = cache.lock().expect("state cache lock");
+    if !guard.enabled() {
+        drop(guard);
+        let msg = "state cache disabled (--state-cache-bytes 0)";
+        return respond_error(w, ErrorCode::StateCacheDisabled, msg, keep);
+    }
+    match req.method.as_str() {
+        "GET" => match guard.take_any(session) {
+            Some(state) => {
+                let body = state.to_wire();
+                drop(guard);
+                http::write_response(w, 200, "application/octet-stream", &body, keep)?;
+                Ok(())
+            }
+            None => {
+                drop(guard);
+                let msg = format!("no parked state for session {session}");
+                respond_error(w, ErrorCode::SessionNotFound, &msg, keep)
+            }
+        },
+        // route() only forwards GET | PUT here.
+        _ => match CachedState::from_wire(&req.body) {
+            Ok(state) => {
+                guard.insert(session, state);
+                drop(guard);
+                respond_json(w, 200, &Json::obj(vec![("ok", Json::Bool(true))]), keep)
+            }
+            Err(e) => {
+                drop(guard);
+                respond_error(w, ErrorCode::InvalidStatePayload, &format!("{e:#}"), keep)
+            }
+        },
     }
 }
 
@@ -371,8 +595,16 @@ fn route(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) -> Result<
         ("GET", "/stats") => respond_json(w, 200, &stats_json(ctx), keep),
         ("POST", "/v1/generate") => handle_generate(w, req, keep, ctx),
         ("POST", "/fault") => handle_set_fault(w, req, keep, ctx),
-        ("GET" | "HEAD", "/v1/generate") => respond_error(w, 405, "use POST", keep),
-        (m, p) => respond_error(w, 404, &format!("no route {m} {p}"), keep),
+        ("GET" | "PUT", p) if p.starts_with("/v1/state/") => {
+            handle_state_transfer(w, req, keep, ctx)
+        }
+        ("GET" | "HEAD", "/v1/generate") => {
+            respond_error(w, ErrorCode::MethodNotAllowed, "use POST", keep)
+        }
+        (m, p) if p.starts_with("/v1/state/") => {
+            respond_error(w, ErrorCode::MethodNotAllowed, &format!("no route {m} {p}"), keep)
+        }
+        (m, p) => respond_error(w, ErrorCode::NotFound, &format!("no route {m} {p}"), keep),
     }
 }
 
@@ -382,17 +614,17 @@ fn respond_json(w: &mut TcpStream, status: u16, body: &Json, keep: bool) -> Resu
     Ok(())
 }
 
-fn respond_error(w: &mut TcpStream, status: u16, msg: &str, keep: bool) -> Result<()> {
-    let body = Json::obj(vec![("error", Json::Str(msg.to_string()))]);
-    respond_json(w, status, &body, keep)
+fn respond_error(w: &mut TcpStream, code: ErrorCode, msg: &str, keep: bool) -> Result<()> {
+    respond_json(w, code.status(), &code.envelope(msg), keep)
 }
 
 fn respond_submit_error(w: &mut TcpStream, e: &SubmitError, keep: bool) -> Result<()> {
-    let status = match e {
-        SubmitError::DuplicateId { .. } => 409,
-        SubmitError::EmptyPrompt { .. } | SubmitError::ZeroMaxNew { .. } => 400,
+    let code = match e {
+        SubmitError::DuplicateId { .. } => ErrorCode::DuplicateId,
+        SubmitError::EmptyPrompt { .. } => ErrorCode::EmptyPrompt,
+        SubmitError::ZeroMaxNew { .. } => ErrorCode::ZeroMaxTokens,
     };
-    respond_error(w, status, &e.to_string(), keep)
+    respond_error(w, code, &e.to_string(), keep)
 }
 
 /// Byte-level models: render a token as its printable ASCII char.
@@ -427,6 +659,7 @@ fn stats_json(ctx: &ConnCtx) -> Json {
     let s = ctx.shared.server_stats();
     let (qw, e2e) = ctx.shared.latency_summaries();
     Json::obj(vec![
+        ("schema_version", Json::Num(STATS_SCHEMA_VERSION as f64)),
         ("slots", Json::Num(ctx.slots as f64)),
         ("threads", Json::Num(s.threads as f64)),
         ("queue_depth", Json::Num(ctx.shared.queue_depth() as f64)),
@@ -553,15 +786,17 @@ fn handle_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) 
     let submitted = Instant::now();
     let body = match std::str::from_utf8(&req.body) {
         Ok(b) => b,
-        Err(_) => return respond_error(w, 400, "body must be UTF-8 JSON", keep),
+        Err(_) => return respond_error(w, ErrorCode::BadRequest, "body must be UTF-8 JSON", keep),
     };
     let j = match json::parse(body) {
         Ok(j) => j,
-        Err(e) => return respond_error(w, 400, &format!("invalid JSON body: {e}"), keep),
+        Err(e) => {
+            return respond_error(w, ErrorCode::BadRequest, &format!("invalid JSON body: {e}"), keep)
+        }
     };
     let parsed = match parse_generate(&j, ctx) {
         Ok(parsed) => parsed,
-        Err(msg) => return respond_error(w, 400, &msg, keep),
+        Err(msg) => return respond_error(w, ErrorCode::BadRequest, &msg, keep),
     };
     let ParsedGenerate { mut req, stream, timeout_ms } = parsed;
     if let Some(ms) = timeout_ms {
@@ -569,10 +804,10 @@ fn handle_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) 
     }
     // Fault layer: count the request toward die_after; maybe inject a 500.
     if ctx.fault.on_generate() {
-        return respond_error(w, 500, "injected fault", keep);
+        return respond_error(w, ErrorCode::InjectedFault, "injected fault", keep);
     }
     if ctx.shutdown.load(Ordering::SeqCst) {
-        return respond_error(w, 503, "shutting down", false);
+        return respond_error(w, ErrorCode::ShuttingDown, "shutting down", false);
     }
     let (ev_tx, ev_rx) = mpsc::channel::<Event>();
     let sub = Submission { req, submitted, stream, events: ev_tx };
@@ -580,10 +815,11 @@ fn handle_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) 
         Ok(()) => ctx.shared.note_accepted(),
         Err(mpsc::TrySendError::Full(_)) => {
             ctx.shared.note_rejected();
-            return respond_error(w, 429, "admission queue full, retry later", keep);
+            let code = ErrorCode::QueueFull;
+            return respond_error(w, code, "admission queue full, retry later", keep);
         }
         Err(mpsc::TrySendError::Disconnected(_)) => {
-            return respond_error(w, 503, "engine stopped", false);
+            return respond_error(w, ErrorCode::EngineStopped, "engine stopped", false);
         }
     }
     if stream {
@@ -599,7 +835,8 @@ fn handle_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &ConnCtx) 
                 }
                 Ok(Event::Rejected(e)) => return respond_submit_error(w, &e, keep),
                 Err(_) => {
-                    return respond_error(w, 503, "request dropped during shutdown", false)
+                    let code = ErrorCode::RequestDropped;
+                    return respond_error(w, code, "request dropped during shutdown", false);
                 }
             }
         }
@@ -619,7 +856,10 @@ fn stream_response(
     let mut sent_chunks = 0u64;
     let first = match ev_rx.recv() {
         Ok(ev) => ev,
-        Err(_) => return respond_error(w, 503, "request dropped during shutdown", false),
+        Err(_) => {
+            let code = ErrorCode::RequestDropped;
+            return respond_error(w, code, "request dropped during shutdown", false);
+        }
     };
     match first {
         Event::Rejected(e) => respond_submit_error(w, &e, keep),

@@ -7,8 +7,18 @@
 //! (in-process [`super::Frontend`]s on their own threads, or remote
 //! engines reached through [`super::http`]) with:
 //!
-//! * **least-loaded scheduling** — the routable replica with the fewest
-//!   router-side in-flight requests wins;
+//! * **session-affine scheduling with state handoff** — a request
+//!   carrying a `session_id` is routed to its rendezvous-hash *home*
+//!   replica ([`rendezvous_pick`], FNV-1a over `session/addr` — the
+//!   same hash the state cache spills under), so multi-turn TTFT stays
+//!   flat under sharding; when the home is ejected the router falls
+//!   back to least-loaded and first tries to **migrate** the parked
+//!   O(d²) state from wherever the session last landed
+//!   (`GET`/`PUT /v1/state/{session}`), with cold prefill as the
+//!   always-correct last resort;
+//! * **least-loaded scheduling** — among session-less requests (or on
+//!   fallback) the routable replica with the fewest router-side
+//!   in-flight requests wins;
 //! * **health checking** — a prober polls every replica's `/healthz` on
 //!   an interval (and caches its `/stats` for aggregation); passive
 //!   request outcomes feed the same circuit breaker;
@@ -36,7 +46,7 @@
 
 #![forbid(unsafe_code)]
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap};
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -50,7 +60,8 @@ use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
 use super::http::{self, ChunkedWriter, ClientOpts, ParseError, Request};
-use super::{respond_error, respond_json, SIGNALLED};
+use super::state_cache::fnv1a;
+use super::{respond_error, respond_json, ErrorCode, SIGNALLED, STATS_SCHEMA_VERSION};
 
 /// Soft cap on concurrently served router connections.
 const MAX_CONNECTIONS: usize = 512;
@@ -85,6 +96,11 @@ pub struct RouterConfig {
     pub cooldown_ms: u64,
     /// Seed of the backoff-jitter RNG.
     pub seed: u64,
+    /// Route sessions to their rendezvous-hash home replica
+    /// (`--affinity on|off`).
+    pub affinity: bool,
+    /// Migrate parked session state on failover (`--migrate on|off`).
+    pub migrate: bool,
 }
 
 impl Default for RouterConfig {
@@ -102,6 +118,8 @@ impl Default for RouterConfig {
             eject_after: 3,
             cooldown_ms: 1_000,
             seed: 0,
+            affinity: true,
+            migrate: true,
         }
     }
 }
@@ -238,6 +256,39 @@ impl Breaker {
     }
 }
 
+/// Rendezvous (highest-random-weight) score of `session` on the replica
+/// at `addr`: FNV-1a over `session/addr` — the same hash
+/// ([`fnv1a`]) the state cache derives spill filenames from, so
+/// session → replica affinity is one naming convention end to end.
+pub fn rendezvous_score(session: &str, addr: &str) -> u64 {
+    let mut bytes = Vec::with_capacity(session.len() + 1 + addr.len());
+    bytes.extend_from_slice(session.as_bytes());
+    bytes.push(b'/');
+    bytes.extend_from_slice(addr.as_bytes());
+    fnv1a(&bytes)
+}
+
+/// The session's *home* replica: argmax of [`rendezvous_score`] over
+/// `addrs`. Strictly-greater comparison means the lowest index wins
+/// ties, so the pick is deterministic. Computed over the FULL replica
+/// set (not just the healthy one): removing or re-adding one replica
+/// only remaps the sessions homed on it, never the rest — the property
+/// that makes affinity survive fleet-size changes.
+pub fn rendezvous_pick(session: &str, addrs: &[impl AsRef<str>]) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (i, addr) in addrs.iter().enumerate() {
+        let score = rendezvous_score(session, addr.as_ref());
+        let better = match best {
+            None => true,
+            Some((_, s)) => score > s,
+        };
+        if better {
+            best = Some((i, score));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
 /// Jittered exponential backoff before retry `attempt` (0-based):
 /// uniform in [d/2, d) where d = min(cap, base << attempt).
 pub fn backoff_ms(cfg: &RouterConfig, attempt: usize, rng: &mut Rng) -> u64 {
@@ -302,6 +353,16 @@ struct RouterStats {
     /// Streams that broke after the first forwarded token (terminated
     /// with an error line, never retried).
     streams_broken: AtomicU64,
+    /// Sessioned requests whose first pick was their rendezvous home.
+    affinity_hits: AtomicU64,
+    /// Sessioned requests whose home was unroutable at first pick —
+    /// routed least-loaded instead.
+    affinity_fallbacks: AtomicU64,
+    /// State migrations that moved a parked session (export + import ok).
+    migrations_ok: AtomicU64,
+    /// State migrations that failed (either leg) — the target replica
+    /// cold-prefilled instead.
+    migrations_failed: AtomicU64,
 }
 
 /// Shared state of the accept loop, workers and prober.
@@ -312,6 +373,12 @@ struct RouterCtx {
     shutdown: Arc<AtomicBool>,
     conns: AtomicUsize,
     rng: Mutex<Rng>,
+    /// Where each session last *landed* (index of the replica that fully
+    /// answered its latest turn) — the migration source on failover,
+    /// which may differ from the rendezvous home after a prior fallback.
+    /// Grows with distinct session ids; entries are a usize each, so
+    /// even millions of sessions stay cheap.
+    sessions: Mutex<HashMap<String, usize>>,
 }
 
 impl RouterCtx {
@@ -401,6 +468,7 @@ impl Router {
             shutdown: self.shutdown.clone(),
             conns: AtomicUsize::new(0),
             rng: Mutex::new(Rng::new(cfg.seed)),
+            sessions: Mutex::new(HashMap::new()),
         };
         // Machine-readable readiness line (scripts/route_chaos.py keys
         // on it; logs go to stderr).
@@ -489,7 +557,8 @@ fn accept_loop<'scope, 'env>(
                         &mut stream,
                         503,
                         "application/json",
-                        b"{\"error\":\"too many connections\"}",
+                        b"{\"error\":{\"code\":\"too_many_connections\",\
+                          \"message\":\"too many connections\"}}",
                         false,
                     );
                     continue;
@@ -532,11 +601,11 @@ fn serve_conn(stream: TcpStream, ctx: &RouterCtx) -> Result<()> {
             }
             Err(ParseError::Io(_)) => return Ok(()),
             Err(e @ ParseError::BodyTooLarge { .. }) => {
-                respond_error(&mut writer, 413, &e.to_string(), false)?;
+                respond_error(&mut writer, ErrorCode::BodyTooLarge, &e.to_string(), false)?;
                 return Ok(());
             }
             Err(e) => {
-                respond_error(&mut writer, 400, &e.to_string(), false)?;
+                respond_error(&mut writer, ErrorCode::BadRequest, &e.to_string(), false)?;
                 return Ok(());
             }
         };
@@ -553,21 +622,26 @@ fn route(w: &mut TcpStream, req: &Request, keep: bool, ctx: &RouterCtx) -> Resul
         ("GET", "/healthz") => healthz(w, keep, ctx),
         ("GET", "/stats") => respond_json(w, 200, &stats_json(ctx), keep),
         ("POST", "/v1/generate") => proxy_generate(w, req, keep, ctx),
-        ("GET" | "HEAD", "/v1/generate") => respond_error(w, 405, "use POST", keep),
-        (m, p) => respond_error(w, 404, &format!("no route {m} {p}"), keep),
+        ("GET" | "HEAD", "/v1/generate") => {
+            respond_error(w, ErrorCode::MethodNotAllowed, "use POST", keep)
+        }
+        (m, p) => respond_error(w, ErrorCode::NotFound, &format!("no route {m} {p}"), keep),
     }
 }
 
 fn healthz(w: &mut TcpStream, keep: bool, ctx: &RouterCtx) -> Result<()> {
     let draining = ctx.shutdown.load(Ordering::SeqCst);
     let (status, ok, state) = if draining { (503, false, "draining") } else { (200, true, "ok") };
-    let body = Json::obj(vec![
+    let mut fields = vec![
         ("ok", Json::Bool(ok)),
         ("status", Json::Str(state.to_string())),
         ("replicas", Json::Num(ctx.replicas.len() as f64)),
         ("available", Json::Num(ctx.available() as f64)),
-    ]);
-    respond_json(w, status, &body, keep)
+    ];
+    if draining {
+        fields.push(("error", ErrorCode::Draining.body("router is draining")));
+    }
+    respond_json(w, status, &Json::obj(fields), keep)
 }
 
 fn stats_json(ctx: &RouterCtx) -> Json {
@@ -594,6 +668,7 @@ fn stats_json(ctx: &RouterCtx) -> Json {
     }
     let s = &ctx.stats;
     Json::obj(vec![
+        ("schema_version", Json::Num(STATS_SCHEMA_VERSION as f64)),
         ("replicas", Json::Arr(per_replica)),
         ("available", Json::Num(ctx.available() as f64)),
         ("requests", Json::Num(s.requests.load(Ordering::SeqCst) as f64)),
@@ -605,6 +680,23 @@ fn stats_json(ctx: &RouterCtx) -> Json {
         ("ejections", Json::Num(s.ejections.load(Ordering::SeqCst) as f64)),
         ("upstream_errors", Json::Num(s.upstream_errors.load(Ordering::SeqCst) as f64)),
         ("streams_broken", Json::Num(s.streams_broken.load(Ordering::SeqCst) as f64)),
+        (
+            "routing",
+            Json::obj(vec![
+                ("affinity", Json::Bool(ctx.cfg.affinity)),
+                ("migrate", Json::Bool(ctx.cfg.migrate)),
+                ("affinity_hits", Json::Num(s.affinity_hits.load(Ordering::SeqCst) as f64)),
+                (
+                    "affinity_fallbacks",
+                    Json::Num(s.affinity_fallbacks.load(Ordering::SeqCst) as f64),
+                ),
+                ("migrations_ok", Json::Num(s.migrations_ok.load(Ordering::SeqCst) as f64)),
+                (
+                    "migrations_failed",
+                    Json::Num(s.migrations_failed.load(Ordering::SeqCst) as f64),
+                ),
+            ]),
+        ),
         (
             "aggregate",
             Json::obj(vec![
@@ -633,7 +725,7 @@ enum Attempt {
 
 fn shed(w: &mut TcpStream, ctx: &RouterCtx, keep: bool, why: &str) -> Result<()> {
     ctx.stats.shed.fetch_add(1, Ordering::SeqCst);
-    let body = Json::obj(vec![("error", Json::Str(why.to_string()))]).to_string();
+    let body = ErrorCode::ReplicasSaturated.envelope(why).to_string();
     http::write_response_with(
         w,
         503,
@@ -645,16 +737,34 @@ fn shed(w: &mut TcpStream, ctx: &RouterCtx, keep: bool, why: &str) -> Result<()>
     Ok(())
 }
 
+/// The request's session key, normalized exactly like the engine does
+/// (integer keys become their decimal string). Malformed values yield
+/// `None` here — the replica relays the authoritative 400.
+fn session_of(j: &Json) -> Option<String> {
+    match j.get("session_id") {
+        Json::Null => None,
+        v => {
+            let sid = v
+                .as_str()
+                .map(str::to_string)
+                .or_else(|| v.as_usize().map(|n| n.to_string()));
+            sid.filter(|s| !s.is_empty())
+        }
+    }
+}
+
 fn proxy_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &RouterCtx) -> Result<()> {
     let arrived = Instant::now();
     ctx.stats.requests.fetch_add(1, Ordering::SeqCst);
     let body = match std::str::from_utf8(&req.body) {
         Ok(b) => b,
-        Err(_) => return respond_error(w, 400, "body must be UTF-8 JSON", keep),
+        Err(_) => return respond_error(w, ErrorCode::BadRequest, "body must be UTF-8 JSON", keep),
     };
     let j = match json::parse(body) {
         Ok(j) => j,
-        Err(e) => return respond_error(w, 400, &format!("invalid JSON body: {e}"), keep),
+        Err(e) => {
+            return respond_error(w, ErrorCode::BadRequest, &format!("invalid JSON body: {e}"), keep)
+        }
     };
     let stream = j.get("stream").as_bool().unwrap_or(false);
     let timeout_ms = match j.get("timeout_ms") {
@@ -667,10 +777,23 @@ fn proxy_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &RouterCtx)
         }
         v => match v.as_usize() {
             Some(ms) if ms > 0 => Some(ms as u64),
-            _ => return respond_error(w, 400, "timeout_ms must be a positive integer", keep),
+            _ => {
+                let msg = "timeout_ms must be a positive integer";
+                return respond_error(w, ErrorCode::BadRequest, msg, keep);
+            }
         },
     };
     let deadline = timeout_ms.map(|ms| arrived + Duration::from_millis(ms));
+    // Home replica of a sessioned request: rendezvous over the FULL
+    // replica set, so the home is stable regardless of current health.
+    let session = session_of(&j);
+    let home = match &session {
+        Some(sid) if ctx.cfg.affinity => {
+            let addrs: Vec<&str> = ctx.replicas.iter().map(|r| r.addr.as_str()).collect();
+            rendezvous_pick(sid, &addrs)
+        }
+        _ => None,
+    };
 
     let mut tried: BTreeSet<usize> = BTreeSet::new();
     let max_attempts = ctx.cfg.max_attempts.clamp(1, ctx.replicas.len());
@@ -680,14 +803,61 @@ fn proxy_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &RouterCtx)
     loop {
         if deadline.is_some_and(|d| Instant::now() >= d) {
             ctx.stats.timeouts.fetch_add(1, Ordering::SeqCst);
-            return respond_error(w, 504, "deadline exceeded before a replica answered", keep);
+            let msg = "deadline exceeded before a replica answered";
+            return respond_error(w, ErrorCode::DeadlineExceeded, msg, keep);
         }
         if attempts >= max_attempts {
             break;
         }
         let now = Instant::now();
-        let Some(idx) = ctx.pick(&tried, now) else { break };
+        // First pick of a sessioned request prefers the rendezvous home;
+        // an unroutable home falls back to least-loaded (counted once —
+        // retries after a failed first attempt are plain failover).
+        let picked = if attempts == 0 {
+            match home {
+                Some(h) if ctx.replicas[h].breaker().routable() => {
+                    ctx.stats.affinity_hits.fetch_add(1, Ordering::SeqCst);
+                    Some(h)
+                }
+                Some(_) => {
+                    let p = ctx.pick(&tried, now);
+                    if p.is_some() {
+                        ctx.stats.affinity_fallbacks.fetch_add(1, Ordering::SeqCst);
+                    }
+                    p
+                }
+                None => ctx.pick(&tried, now),
+            }
+        } else {
+            ctx.pick(&tried, now)
+        };
+        let Some(idx) = picked else { break };
         tried.insert(idx);
+        // State handoff: when the first target differs from wherever the
+        // session last landed (failed-over home, or healing back to it),
+        // move the parked state there before forwarding. At most one
+        // attempt per request; failure just means a cold prefill.
+        if attempts == 0 && ctx.cfg.migrate {
+            if let Some(sid) = &session {
+                let last = ctx.sessions.lock().expect("sessions lock").get(sid).copied();
+                if let Some(from) = last.filter(|&from| from != idx) {
+                    match migrate_state(ctx, sid, from, idx) {
+                        Ok(()) => {
+                            ctx.stats.migrations_ok.fetch_add(1, Ordering::SeqCst);
+                            log::info!(
+                                "session {sid}: state migrated {} -> {}",
+                                ctx.replicas[from].addr,
+                                ctx.replicas[idx].addr
+                            );
+                        }
+                        Err(e) => {
+                            ctx.stats.migrations_failed.fetch_add(1, Ordering::SeqCst);
+                            log::warn!("session {sid}: migration failed ({e}), cold prefill");
+                        }
+                    }
+                }
+            }
+        }
         if attempts > 0 {
             ctx.stats.retries.fetch_add(1, Ordering::SeqCst);
             let ms = {
@@ -709,6 +879,9 @@ fn proxy_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &RouterCtx)
             Attempt::Done => {
                 ctx.note_success(idx);
                 ctx.stats.proxied_ok.fetch_add(1, Ordering::SeqCst);
+                if let Some(sid) = &session {
+                    ctx.sessions.lock().expect("sessions lock").insert(sid.clone(), idx);
+                }
                 return Ok(());
             }
             Attempt::Retryable(status) => {
@@ -739,11 +912,49 @@ fn proxy_generate(w: &mut TcpStream, req: &Request, keep: bool, ctx: &RouterCtx)
     }
     if saw_hard_failure {
         ctx.stats.failed.fetch_add(1, Ordering::SeqCst);
-        respond_error(w, 502, &format!("all replicas failed ({last_error})"), keep)
+        let msg = format!("all replicas failed ({last_error})");
+        respond_error(w, ErrorCode::AllReplicasFailed, &msg, keep)
     } else {
         // Everything routable was saturated (429s) or no replica was
         // routable at all: shed politely.
         shed(w, ctx, keep, "all replicas saturated or ejected, retry later")
+    }
+}
+
+/// Move session `session`'s parked state from replica `from` to `to`:
+/// a consuming `GET /v1/state/{session}` export, then a `PUT` import of
+/// the same bytes. Either leg failing is non-fatal for the request —
+/// the destination cold-prefills the transcript instead, which is
+/// always correct (and the strict-prefix check on the import side makes
+/// a stale snapshot harmless). Exporting is safe even while the session
+/// has a turn in flight on `from`: a seated turn has already consumed
+/// its cache entry, so GET finds nothing and the migration just fails.
+fn migrate_state(
+    ctx: &RouterCtx,
+    session: &str,
+    from: usize,
+    to: usize,
+) -> std::result::Result<(), String> {
+    let opts = ClientOpts {
+        connect_timeout: Duration::from_millis(ctx.cfg.connect_timeout_ms.max(1)),
+        read_timeout: Duration::from_millis(ctx.cfg.read_timeout_ms.max(1)),
+    };
+    let path = format!("/v1/state/{session}");
+    let from_addr = &ctx.replicas[from].addr;
+    let to_addr = &ctx.replicas[to].addr;
+    let exported = match http::request_with(from_addr, "GET", &path, b"", opts) {
+        Err(e) => return Err(format!("export from {from_addr}: {e}")),
+        Ok(resp) if resp.status != 200 => {
+            return Err(format!("export from {from_addr}: status {}", resp.status))
+        }
+        Ok(resp) => resp.body,
+    };
+    match http::request_with(to_addr, "PUT", &path, &exported, opts) {
+        Err(e) => Err(format!("import into {to_addr}: {e}")),
+        Ok(resp) if resp.status != 200 => {
+            Err(format!("import into {to_addr}: status {}", resp.status))
+        }
+        Ok(_) => Ok(()),
     }
 }
 
@@ -957,5 +1168,64 @@ mod tests {
     #[test]
     fn router_rejects_an_empty_backend_list() {
         assert!(Router::bind("127.0.0.1:0", Vec::new(), RouterConfig::default()).is_err());
+    }
+
+    #[test]
+    fn rendezvous_is_deterministic_and_lowest_index_wins_ties() {
+        let addrs = ["127.0.0.1:9001", "127.0.0.1:9002", "127.0.0.1:9003"];
+        for sid in ["alice", "bob", "42", "a-much-longer-session-key"] {
+            let a = rendezvous_pick(sid, &addrs).unwrap();
+            let b = rendezvous_pick(sid, &addrs).unwrap();
+            assert_eq!(a, b, "same session + fleet must pick the same home");
+        }
+        // A duplicated address scores identically; strict-greater argmax
+        // keeps the first occurrence.
+        let dup = ["127.0.0.1:9001", "127.0.0.1:9001"];
+        assert_eq!(rendezvous_pick("alice", &dup), Some(0));
+        let none: [&str; 0] = [];
+        assert_eq!(rendezvous_pick("alice", &none), None);
+    }
+
+    #[test]
+    fn rendezvous_only_remaps_sessions_homed_on_a_removed_replica() {
+        // The HRW property the tentpole leans on: dropping one replica
+        // moves ONLY the sessions homed on it — everyone else keeps
+        // their home (no global remap, unlike `hash % n`).
+        let full = ["127.0.0.1:9001", "127.0.0.1:9002", "127.0.0.1:9003"];
+        let without_last = &full[..2];
+        let mut orphans = [0usize; 2];
+        for i in 0..200 {
+            let sid = format!("session-{i}");
+            let before = rendezvous_pick(&sid, &full).unwrap();
+            let after = rendezvous_pick(&sid, without_last).unwrap();
+            if before < 2 {
+                assert_eq!(after, before, "{sid}: survivor-homed session moved");
+            } else {
+                orphans[after] += 1;
+            }
+        }
+        // Orphaned sessions spread over BOTH survivors (they re-run the
+        // same argmax, minus one candidate), and re-adding the replica
+        // restores every original home — `before` is a pure function of
+        // (session, fleet), which the survivor loop already pinned.
+        assert!(orphans[0] > 0 && orphans[1] > 0, "orphans all piled up: {orphans:?}");
+    }
+
+    #[test]
+    fn rendezvous_spreads_sessions_across_three_replicas() {
+        let addrs = ["127.0.0.1:9001", "127.0.0.1:9002", "127.0.0.1:9003"];
+        let mut counts = [0usize; 3];
+        let n = 3000;
+        for i in 0..n {
+            counts[rendezvous_pick(&format!("session-{i}"), &addrs).unwrap()] += 1;
+        }
+        // Uniform would be 1000 each; allow a generous ±30% band, which
+        // a healthy 64-bit hash passes with enormous margin.
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (n / 3) * 7 / 10 <= c && c <= (n / 3) * 13 / 10,
+                "replica {i} got {c} of {n} sessions: {counts:?}"
+            );
+        }
     }
 }

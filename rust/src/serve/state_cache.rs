@@ -37,9 +37,18 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::checkpoint;
 use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+
+/// Shared handle to one engine's state cache. The engine thread owns the
+/// scheduling (restore/snapshot); the HTTP front end's
+/// `/v1/state/{session}` transfer endpoints take the same handle to
+/// export/import *parked* entries, so a router can migrate a session to
+/// another replica without touching live slots.
+pub type SharedStateCache = Arc<Mutex<StateCache>>;
 
 /// One parked session: the tokens its state has absorbed + the raw rows.
 #[derive(Clone, Debug, PartialEq)]
@@ -57,6 +66,96 @@ impl CachedState {
     fn bytes(&self) -> usize {
         let row_elems: usize = self.rows.iter().map(|r| r.len()).sum();
         4 * (row_elems + self.transcript.len())
+    }
+
+    /// Serialize to the wire form of the `/v1/state/{session}` transfer
+    /// endpoints: the checkpoint layout (magic + u32 header length +
+    /// JSON header + LE f32 payload) written into a byte buffer instead
+    /// of a file. Tensor 0 is the transcript (token ids are exact in
+    /// f32 up to 2^24), tensors 1.. the raw state rows; the header
+    /// `step` carries the transcript length — byte-compatible with the
+    /// spill files, so both sides validate the same way.
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut shapes = Vec::with_capacity(1 + self.rows.len());
+        shapes.push(Json::obj(vec![("shape", Json::arr_usize(&[self.transcript.len()]))]));
+        for row in &self.rows {
+            shapes.push(Json::obj(vec![("shape", Json::arr_usize(&[row.len()]))]));
+        }
+        let header = Json::obj(vec![
+            ("step", Json::Num(self.transcript.len() as f64)),
+            ("tensors", Json::Arr(shapes)),
+        ])
+        .to_string();
+        let mut out = Vec::with_capacity(8 + header.len() + self.bytes());
+        out.extend_from_slice(&checkpoint::MAGIC.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for &t in &self.transcript {
+            out.extend_from_slice(&(t as f32).to_le_bytes());
+        }
+        for row in &self.rows {
+            for &x in row {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse the wire form back. Rejects a bad magic, a malformed
+    /// header, a transcript/step mismatch, and trailing or missing
+    /// payload bytes — an importing replica never trusts the router.
+    /// (A *stale* but well-formed state is caught later by the
+    /// strict-prefix check at lookup time, exactly like a spill file.)
+    pub fn from_wire(bytes: &[u8]) -> anyhow::Result<CachedState> {
+        use anyhow::bail;
+        if bytes.len() < 8 {
+            bail!("state payload too short ({} bytes)", bytes.len());
+        }
+        let magic = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+        if magic != checkpoint::MAGIC {
+            bail!("state payload has a bad magic");
+        }
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let Some(hbuf) = bytes.get(8..8 + hlen) else {
+            bail!("state payload header truncated");
+        };
+        let header = json::parse(std::str::from_utf8(hbuf)?)
+            .map_err(|e| anyhow::anyhow!("state payload header: {e}"))?;
+        let step = header.usize_field("step")?;
+        let specs = header
+            .get("tensors")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("state payload header missing tensors"))?;
+        if specs.is_empty() {
+            bail!("state payload has no tensors");
+        }
+        let mut cursor = 8 + hlen;
+        let mut flats: Vec<Vec<f32>> = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let shape = spec.get("shape").usize_array()?;
+            let n: usize = shape.iter().product();
+            let Some(raw) = bytes.get(cursor..cursor + n * 4) else {
+                bail!("state payload tensor data truncated");
+            };
+            cursor += n * 4;
+            flats.push(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            );
+        }
+        if cursor != bytes.len() {
+            bail!("state payload has {} trailing bytes", bytes.len() - cursor);
+        }
+        let rows = flats.split_off(1);
+        let toks = flats.pop().expect("specs checked non-empty");
+        if toks.len() != step {
+            bail!("state payload transcript length {} != step {step}", toks.len());
+        }
+        Ok(CachedState {
+            transcript: toks.iter().map(|&x| x as i32).collect(),
+            rows,
+        })
     }
 }
 
@@ -188,6 +287,35 @@ impl StateCache {
         None
     }
 
+    /// Remove and return `session`'s parked state regardless of any
+    /// prompt — the export side of the `GET /v1/state/{session}`
+    /// migration endpoint. Consuming (rather than copying) preserves
+    /// the exclusive-ownership invariant of [`StateCache::take`]: after
+    /// a migration exactly one replica holds the session. Deliberately
+    /// counts neither a hit nor a miss — migration is a transport
+    /// event, not a lookup — so the engine's hit/miss counters keep
+    /// meaning "turns that resumed" vs "turns that prefilled cold".
+    pub fn take_any(&mut self, session: &str) -> Option<CachedState> {
+        if !self.enabled() {
+            return None;
+        }
+        if let Some(entry) = self.entries.remove(session) {
+            self.mem_bytes -= entry.bytes;
+            return Some(entry.state);
+        }
+        if let Some(path) = self.spilled.remove(session) {
+            let loaded = load_spill(&path);
+            std::fs::remove_file(&path).ok();
+            match loaded {
+                Ok(state) => return Some(state),
+                Err(e) => {
+                    log::warn!("state cache: spill read {} failed: {e:#}", path.display());
+                }
+            }
+        }
+        None
+    }
+
     /// Park a finished turn's state under `session`, evicting (and
     /// spilling, when a directory is armed) least-recently-used entries
     /// until the memory tier fits the bound again. Replacing a session's
@@ -245,10 +373,14 @@ fn is_strict_prefix(prefix: &[i32], seq: &[i32]) -> bool {
     prefix.len() < seq.len() && prefix == &seq[..prefix.len()]
 }
 
-/// FNV-1a 64-bit — stable spill filenames without new dependencies. A
-/// collision merely overwrites another session's spill file; the
-/// transcript prefix check on load rejects the mismatch (cold prefill).
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a 64-bit — stable spill filenames and the router's rendezvous
+/// hash, without new dependencies. A spill-name collision merely
+/// overwrites another session's spill file; the transcript prefix check
+/// on load rejects the mismatch (cold prefill). The router
+/// ([`crate::serve::router`]) reuses the same function over
+/// `session/addr` pairs so session → replica affinity is one naming
+/// convention end to end.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;
@@ -362,6 +494,52 @@ mod tests {
         assert_eq!((s.hits, s.disk_hits), (1, 1));
         // The spill file was consumed by the hit.
         assert_eq!(c.take("a", &[7, 8, 9, 10, 11]), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wire_round_trip_restores_identical_payload() {
+        let parked = CachedState {
+            transcript: vec![7, 8, 9, 10],
+            rows: vec![vec![1.5, -2.25, 1e-9], vec![0.0; 5]],
+        };
+        let wire = parked.to_wire();
+        let back = CachedState::from_wire(&wire).expect("wire round trip");
+        assert_eq!(back, parked);
+    }
+
+    #[test]
+    fn wire_parse_rejects_malformed_payloads() {
+        let wire = entry(3, 8).to_wire();
+        assert!(CachedState::from_wire(b"").is_err(), "empty");
+        assert!(CachedState::from_wire(b"not a state payload").is_err(), "bad magic");
+        assert!(CachedState::from_wire(&wire[..wire.len() - 1]).is_err(), "truncated");
+        let mut extra = wire.clone();
+        extra.push(0);
+        assert!(CachedState::from_wire(&extra).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn take_any_consumes_without_a_prompt_or_counters() {
+        let mut c = StateCache::new(1 << 20, "");
+        c.insert("a", entry(1, 8));
+        let got = c.take_any("a").expect("resident entry exported");
+        assert_eq!(got, entry(1, 8));
+        // Consumed: a second export finds nothing.
+        assert_eq!(c.take_any("a"), None);
+        // Transport events move no lookup counters.
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
+    }
+
+    #[test]
+    fn take_any_drains_the_spill_tier_too() {
+        let dir = spill_dir("take_any");
+        let mut c = StateCache::new(300, dir.to_str().unwrap());
+        c.insert("a", entry(7, 32));
+        c.insert("b", entry(2, 64)); // evicts "a" to disk
+        assert!(c.take_any("a").is_some(), "spilled entry exported");
+        assert_eq!(c.take_any("a"), None, "spill file consumed");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -16,7 +16,11 @@
 //! * a request deadline bounds the whole retry budget (504), and the
 //!   service recovers once the fault clears;
 //! * an ejected replica is re-admitted by the health prober after the
-//!   fault clears.
+//!   fault clears;
+//! * sessioned requests stick to their rendezvous home replica (cache
+//!   hits on every later turn), fall back when the home is ejected, and
+//!   migrate the parked state to the fallback replica — or cold-prefill
+//!   correctly when the migration source is unreachable.
 
 #![forbid(unsafe_code)]
 
@@ -28,7 +32,7 @@ use efla::coordinator::server::ServerConfig;
 use efla::coordinator::session::Session;
 use efla::runtime::CpuBackend;
 use efla::serve::fault::{FaultInjector, FaultSpec};
-use efla::serve::router::{Router, RouterConfig};
+use efla::serve::router::{rendezvous_pick, Router, RouterConfig};
 use efla::serve::{http, Frontend};
 use efla::util::json::{self, Json};
 
@@ -44,6 +48,15 @@ struct Cluster {
 /// the cluster to the client closure. All loops stop when the closure
 /// returns (or panics).
 fn with_cluster<F, T>(n: usize, cfg: RouterConfig, f: F) -> T
+where
+    F: FnOnce(&Cluster) -> T,
+{
+    with_cluster_cfg(n, cfg, ServerConfig::default(), f)
+}
+
+/// [`with_cluster`] with a custom per-replica [`ServerConfig`] (the
+/// affinity tests arm each replica's session state cache).
+fn with_cluster_cfg<F, T>(n: usize, cfg: RouterConfig, server_cfg: ServerConfig, f: F) -> T
 where
     F: FnOnce(&Cluster) -> T,
 {
@@ -63,10 +76,11 @@ where
     flags.push(router.shutdown_flag());
     std::thread::scope(|s| {
         for fe in frontends {
+            let server_cfg = server_cfg.clone();
             s.spawn(move || {
                 let backend = CpuBackend::with_threads(1);
                 let session = Session::init(&backend, "lm_tiny_efla", 7).unwrap();
-                fe.run(&session, ServerConfig::default(), 42).unwrap();
+                fe.run(&session, server_cfg, 42).unwrap();
             });
         }
         s.spawn(move || router.run().unwrap());
@@ -350,6 +364,174 @@ fn router_answers_504_past_the_deadline_and_recovers() {
             assert!(t0.elapsed() < Duration::from_secs(30), "service never recovered");
             std::thread::sleep(Duration::from_millis(50));
         }
+    });
+}
+
+/// A [`ServerConfig`] with the per-replica session state cache armed.
+fn cached_server_cfg() -> ServerConfig {
+    ServerConfig { state_cache_bytes: 8 << 20, ..ServerConfig::default() }
+}
+
+/// A generate body with an explicit token prompt and a session key.
+fn session_body(id: u64, toks: &[i64], max_tokens: usize, session: Option<&str>) -> String {
+    let list: Vec<String> = toks.iter().map(|t| t.to_string()).collect();
+    let sid = match session {
+        Some(s) => format!(",\"session_id\":\"{s}\""),
+        None => String::new(),
+    };
+    format!("{{\"id\":{id},\"tokens\":[{}],\"max_tokens\":{max_tokens}{sid}}}", list.join(","))
+}
+
+/// POST one turn and return its greedy tokens (asserting 200).
+fn turn(addr: &str, body: &str) -> Vec<i64> {
+    let resp = http::request(addr, "POST", "/v1/generate", body.as_bytes()).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.text());
+    tokens_of(&json::parse(&resp.text()).unwrap())
+}
+
+/// Poll a replica's /stats until its state-cache hit counter reaches
+/// `want` (the engine publishes stats a beat after answering, so an
+/// immediate read can race the snapshot).
+fn wait_for_cache_hits(addr: &str, want: f64) {
+    let t0 = Instant::now();
+    loop {
+        let resp = http::request(addr, "GET", "/stats", b"").unwrap();
+        let j = json::parse(&resp.text()).unwrap();
+        if j.get("state_cache").get("hits").as_f64() == Some(want) {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "cache hits never reached {want}: {}",
+            resp.text()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The `routing` counter block of the router's /stats.
+fn routing_stats(router: &str) -> Json {
+    let st = router_stats(router);
+    assert_eq!(st.get("schema_version").as_usize(), Some(2), "{st:?}");
+    st.get("routing").clone()
+}
+
+#[test]
+fn affinity_routes_a_session_to_its_home_replica() {
+    with_cluster_cfg(3, fast_cfg(), cached_server_cfg(), |c| {
+        let sid = "affine-session";
+        let home = rendezvous_pick(sid, &c.replicas).unwrap();
+
+        // Three turns of one conversation, each prompt extending the
+        // previous transcript (prompt + generated tokens + one new
+        // token), so turns 2 and 3 are state-cache hits *if* they land
+        // on the same replica — which is exactly what affinity buys.
+        let mut prompt = vec![5i64, 6, 7, 8];
+        for turn_no in 0..3u64 {
+            let toks = turn(&c.router, &session_body(10 + turn_no, &prompt, 4, Some(sid)));
+            prompt.extend(toks);
+            prompt.push(9);
+        }
+        wait_for_cache_hits(&c.replicas[home], 2.0);
+
+        let r = routing_stats(&c.router);
+        assert_eq!(r.get("affinity").as_bool(), Some(true));
+        assert_eq!(r.get("affinity_hits").as_f64(), Some(3.0), "{r:?}");
+        assert_eq!(r.get("affinity_fallbacks").as_f64(), Some(0.0), "{r:?}");
+        assert_eq!(r.get("migrations_ok").as_f64(), Some(0.0), "{r:?}");
+        assert_eq!(r.get("migrations_failed").as_f64(), Some(0.0), "{r:?}");
+
+        // The replica's own stats are versioned too, and the two other
+        // replicas never saw the session.
+        let hj = router_stats(&c.replicas[home]);
+        assert_eq!(hj.get("schema_version").as_usize(), Some(2));
+        assert_eq!(hj.get("state_cache").get("misses").as_f64(), Some(1.0), "{hj:?}");
+        for (i, addr) in c.replicas.iter().enumerate() {
+            if i == home {
+                continue;
+            }
+            let j = router_stats(addr);
+            assert_eq!(j.get("completed").as_f64(), Some(0.0), "replica {i} saw traffic");
+        }
+    });
+}
+
+#[test]
+fn ejected_home_falls_back_and_migrates_the_parked_state() {
+    with_cluster_cfg(2, fast_cfg(), cached_server_cfg(), |c| {
+        let sid = "failover-session";
+        let home = rendezvous_pick(sid, &c.replicas).unwrap();
+        let other = 1 - home;
+
+        // Turn 1 lands on the home and parks the session state there.
+        let mut prompt = vec![5i64, 6, 7, 8];
+        let toks = turn(&c.router, &session_body(21, &prompt, 4, Some(sid)));
+        prompt.extend(toks);
+        prompt.push(9);
+
+        // Cold greedy reference for turn 2: same full prompt, no
+        // session, straight to the fallback replica. Greedy decoding is
+        // deterministic, so this is also what "staying put" would have
+        // produced.
+        let reference = turn(&c.replicas[other], &session_body(22, &prompt, 4, None));
+
+        // Stall the home hard enough that health probes (250ms timeout)
+        // fail and eject it — but the replica stays *alive*, so the
+        // consuming state export (120s client timeout) still succeeds.
+        c.faults[home].set_spec(FaultSpec::parse("stall_ms=2000").unwrap());
+        wait_for_state(&c.router, home, "ejected");
+
+        // Turn 2: home unroutable -> fallback, with state handoff.
+        let migrated = turn(&c.router, &session_body(23, &prompt, 4, Some(sid)));
+        assert_eq!(migrated, reference, "migrated turn diverged from cold recompute");
+
+        // The fallback replica answered turn 2 from the *imported*
+        // state: a hit without any prior miss for this session here.
+        wait_for_cache_hits(&c.replicas[other], 1.0);
+        let r = routing_stats(&c.router);
+        assert_eq!(r.get("affinity_hits").as_f64(), Some(1.0), "{r:?}");
+        assert_eq!(r.get("affinity_fallbacks").as_f64(), Some(1.0), "{r:?}");
+        assert_eq!(r.get("migrations_ok").as_f64(), Some(1.0), "{r:?}");
+        assert_eq!(r.get("migrations_failed").as_f64(), Some(0.0), "{r:?}");
+    });
+}
+
+#[test]
+fn failed_migration_falls_back_to_a_correct_cold_prefill() {
+    with_cluster_cfg(2, fast_cfg(), cached_server_cfg(), |c| {
+        let sid = "lost-state-session";
+        let home = rendezvous_pick(sid, &c.replicas).unwrap();
+        let other = 1 - home;
+
+        let mut prompt = vec![5i64, 6, 7, 8];
+        let toks = turn(&c.router, &session_body(31, &prompt, 4, Some(sid)));
+        prompt.extend(toks);
+        prompt.push(9);
+        let reference = turn(&c.replicas[other], &session_body(32, &prompt, 4, None));
+
+        // The home now refuses connections outright: ejected AND
+        // unreachable, so the state export cannot succeed.
+        c.faults[home].set_spec(FaultSpec::parse("refuse").unwrap());
+        wait_for_state(&c.router, home, "ejected");
+
+        let cold = turn(&c.router, &session_body(33, &prompt, 4, Some(sid)));
+        assert_eq!(cold, reference, "cold-prefill fallback must stay correct");
+
+        let r = routing_stats(&c.router);
+        assert_eq!(r.get("migrations_ok").as_f64(), Some(0.0), "{r:?}");
+        assert_eq!(r.get("migrations_failed").as_f64(), Some(1.0), "{r:?}");
+        // The fallback replica cold-prefilled: one miss, no hit. (Poll:
+        // the engine publishes stats a beat after answering.)
+        let t0 = Instant::now();
+        let j = loop {
+            let j = router_stats(&c.replicas[other]);
+            if j.get("state_cache").get("misses").as_f64().unwrap_or(0.0) >= 1.0 {
+                break j;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "miss never recorded: {j:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        assert_eq!(j.get("state_cache").get("hits").as_f64(), Some(0.0), "{j:?}");
     });
 }
 

@@ -34,6 +34,13 @@ performance invariant regresses:
   TTFT must also stay ~flat across depths — max/min > 5x fails, since
   a depth-dependent cached TTFT means the restore path is re-ingesting
   the transcript it claims to skip.
+* ``serving_affinity`` — a turn-2 landing on the replica that parked
+  the session state (affine) must have strictly lower TTFT than a
+  session-blind landing (cold full-transcript replay) at every depth
+  >= 1024 (shallow depths only warn). The failover path — wire-form
+  state migration, then resume — only warns when it loses to blind:
+  correctness is asserted in the bench, and migration cost is bounded
+  by the O(d^2) state size, not the conversation depth.
 
 Exit code 0 = all gates pass, 1 = regression, 2 = malformed input.
 """
@@ -154,6 +161,29 @@ def gate_state_cache(obj: dict) -> None:
     print(f"gate ok: {line}")
 
 
+def gate_serving_affinity(obj: dict) -> None:
+    points = obj.get("points", [])
+    if not points:
+        fail("serving_affinity: no measurement points")
+    for p in points:
+        depth = p.get("depth", 0)
+        affine = p.get("affine_ttft_ms", 0.0)
+        blind = p.get("blind_ttft_ms", 0.0)
+        failover = p.get("failover_ttft_ms", 0.0)
+        line = (f"affinity depth={depth}: affine TTFT {affine:.2f} ms "
+                f"vs blind {blind:.2f} ms vs failover {failover:.2f} ms")
+        if affine <= 0.0 or blind <= 0.0 or failover <= 0.0:
+            fail(f"{line} — missing TTFT measurements")
+        if depth >= 1024 and affine >= blind:
+            fail(f"{line} — affine landing must beat session-blind at depth >= 1024")
+        if affine >= blind:
+            warn(f"{line} (shallow depth, not fatal)")
+        else:
+            print(f"gate ok: {line} ({blind / affine:.2f}x)")
+        if failover >= blind:
+            warn(f"{line} — migration not cheaper than cold replay here (not fatal)")
+
+
 def main() -> None:
     src = open(sys.argv[1]) if len(sys.argv) > 1 else sys.stdin
     seen = set()
@@ -180,8 +210,11 @@ def main() -> None:
             gate_serving_batched(obj)
         elif name == "serving_state_cache":
             gate_state_cache(obj)
+        elif name == "serving_affinity":
+            gate_serving_affinity(obj)
     for required in ("gemm_gflops", "serving_prefill", "serving_cb",
-                     "serving_batched_decode", "serving_state_cache"):
+                     "serving_batched_decode", "serving_state_cache",
+                     "serving_affinity"):
         if required not in seen:
             fail(f"required bench section {required!r} missing from BENCH output")
     print("all bench gates passed")

@@ -18,7 +18,19 @@ over them, then:
     retries >= 1 (in-flight work on the killed replica failed over),
     ejections >= 1 (the breaker took replica 0 out), shed == the 503s
     the clients saw, and failed == timeouts == 0;
-5.  SIGTERMs the router and the surviving replicas and requires exit 0.
+5.  SIGTERMs the router and the surviving replicas and requires exit 0;
+6.  re-launches a cache-armed cluster (``--state-cache-bytes``) and
+    drives 3-turn sessions through the affine router, SIGKILLing the
+    rendezvous home replica mid-conversation: every turn must still
+    answer 200 with tokens bit-identical to a cold single-engine
+    reference, and the router ``/stats`` must account for every
+    affinity hit, fallback and state migration EXACTLY — including one
+    successful migration off a merely *stalled* (ejected but still
+    reachable) replica.
+
+Along the way every non-2xx JSON answer is checked against the unified
+v1 error envelope ``{"error": {"code", "message"[, "retry_after_ms"]}}``
+and both stats surfaces against ``"schema_version": 2``.
 
 Stderr of every process goes to the log file given by ``--log``.
 Exit code 0 = all checks pass.
@@ -88,6 +100,30 @@ def prompt_of(i):
     return f"chaos probe {i % 8} "
 
 
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a(data):
+    """Python mirror of the Rust state cache's FNV-1a (64-bit)."""
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK64
+    return h
+
+
+def rendezvous_home(session, addrs):
+    """Mirror of the router's rendezvous pick: FNV-1a over
+    ``session/addr``, highest score wins, lowest index on ties."""
+    best, best_score = 0, -1
+    for i, addr in enumerate(addrs):
+        score = fnv1a(f"{session}/{addr}".encode())
+        if score > best_score:
+            best, best_score = i, score
+    return best
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--bin", default="target/release/efla")
@@ -102,6 +138,7 @@ def main():
     procs = {}
     try:
         run_chaos(args, log, procs)
+        run_session_phase(args, log, procs)
     except BaseException:
         for p in procs.values():
             if p.poll() is None:
@@ -153,10 +190,22 @@ def run_chaos(args, log, procs):
         if time.time() > deadline:
             raise AssertionError(f"replicas never probed healthy: {body}")
         time.sleep(0.1)
+    check("router stats schema_version", stats.get("schema_version") == 2,
+          body[:400])
     status, body = request(raddr, "GET", "/healthz")
     health = json.loads(body)
     check("router healthz", status == 200 and health.get("available") == 3,
           body)
+    # Unknown routes answer the unified v1 error envelope.
+    status, body = request(raddr, "GET", "/nope")
+    err = json.loads(body).get("error", {})
+    check("router 404 envelope",
+          status == 404 and err.get("code") == "not_found", body[:200])
+    status, body = request(replica_addrs[1], "POST", "/v1/generate",
+                           "not json")
+    err = json.loads(body).get("error", {})
+    check("replica 400 envelope",
+          status == 400 and err.get("code") == "bad_request", body[:200])
 
     # 1. Healthy single-engine reference: greedy tokens per prompt, from
     # one replica directly (no router in the path).
@@ -175,6 +224,7 @@ def run_chaos(args, log, procs):
     # client-visible failure and fails the smoke.
     results = {}
     shed_seen = [0]
+    shed_body = [None]
     lock = threading.Lock()
     next_id = [0]
 
@@ -191,6 +241,7 @@ def run_chaos(args, log, procs):
             if status == 503:
                 with lock:
                     shed_seen[0] += 1
+                    shed_body[0] = body
                 time.sleep(0.2)
                 continue
             if status == 429:
@@ -254,6 +305,12 @@ def run_chaos(args, log, procs):
     check("stats: ejections counted", stats["ejections"] >= 1, body[:400])
     check("stats: shed accounting", stats["shed"] == shed_seen[0],
           f"router shed {stats['shed']} vs client 503s {shed_seen[0]}")
+    if shed_seen[0]:
+        err = json.loads(shed_body[0]).get("error", {})
+        check("shed 503 envelope",
+              err.get("code") == "replicas_saturated"
+              and err.get("retry_after_ms") == 1000,
+              str(shed_body[0])[:200])
     check("stats: no hard failures",
           stats["failed"] == 0 and stats["timeouts"] == 0, body[:400])
     check("stats: aggregate present",
@@ -270,6 +327,181 @@ def run_chaos(args, log, procs):
         code = p.wait(timeout=60)
         check(f"replica {i} exit 0 on SIGTERM", code == 0, f"exit {code}")
     procs["replica0"].wait()
+
+
+def run_session_phase(args, log, procs):
+    """Multi-turn conversations through the session-affine router.
+
+    Kills the rendezvous home replica mid-conversation and requires
+    zero client-visible failures, bit-identical greedy outputs, and
+    EXACT affinity/migration accounting on the router's /stats — then a
+    stall sub-phase where the ejected-but-reachable source replica lets
+    the state migration actually succeed.
+    """
+    replica_addrs = []
+    for i in range(3):
+        cmd = [args.bin, "serve", "--listen", "127.0.0.1:0", "--steps", "0",
+               "--threads", "1", "--queue-depth", "8", "--drain-timeout", "30",
+               "--state-cache-bytes", "8388608"]
+        proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, stderr=log,
+                                text=True)
+        procs[f"s-replica{i}"] = proc
+        addr = wait_for_line(proc, "SERVE listening on ",
+                             args.startup_timeout, f"s-replica{i}")
+        replica_addrs.append(addr)
+        print(f"session replica {i} on {addr}")
+
+    cmd = [args.bin, "route", "--listen", "127.0.0.1:0",
+           "--backends", ",".join(replica_addrs),
+           "--health-interval-ms", "50", "--cooldown-ms", "500"]
+    router = subprocess.Popen(cmd, stdout=subprocess.PIPE, stderr=log,
+                              text=True)
+    procs["s-router"] = router
+    raddr = wait_for_line(router, "ROUTE listening on ",
+                          args.startup_timeout, "s-router")
+    print(f"session router on {raddr}")
+
+    deadline = time.time() + 30
+    while True:
+        status, body = request(raddr, "GET", "/stats")
+        stats = json.loads(body)
+        probed = sum(1 for r in stats["replicas"] if r["probes_ok"] >= 1)
+        if status == 200 and probed == 3:
+            break
+        if time.time() > deadline:
+            raise AssertionError(f"replicas never probed healthy: {body}")
+        time.sleep(0.1)
+
+    def wait_ejected(idx):
+        deadline = time.time() + 20
+        while True:
+            _, body = request(raddr, "GET", "/stats")
+            state = json.loads(body)["replicas"][idx]["state"]
+            if state == "ejected":
+                return
+            if time.time() > deadline:
+                raise AssertionError(f"replica {idx} never ejected: {body}")
+            time.sleep(0.05)
+
+    # Pick sessions by their rendezvous home: two homed on replica 0
+    # (which we will SIGKILL) and one each on the survivors. The Python
+    # mirror MUST agree with the router's Rust hash, or the counters
+    # below drift — that agreement is itself under test.
+    by_home = {0: [], 1: [], 2: []}
+    i = 0
+    while len(by_home[0]) < 2 or not by_home[1] or not by_home[2]:
+        sid = f"chat-{i}"
+        home = rendezvous_home(sid, replica_addrs)
+        want = 2 if home == 0 else 1
+        if len(by_home[home]) < want:
+            by_home[home].append(sid)
+        i += 1
+    sessions = by_home[0] + by_home[1] + by_home[2]
+    prompts = {sid: [ord(c) for c in f"session {sid} "] for sid in sessions}
+    print(f"sessions by home: {by_home}")
+
+    def turn(sid):
+        # Cold single-engine reference first: replica 2 direct, no
+        # session_id, so its cache counters stay untouched.
+        payload = json.dumps({"tokens": prompts[sid], "max_tokens": 6})
+        status, body = request(replica_addrs[2], "POST", "/v1/generate",
+                               payload, timeout=60)
+        check(f"{sid} reference", status == 200, str(body)[:200])
+        ref = json.loads(body)["tokens"]
+        payload = json.dumps({"tokens": prompts[sid], "max_tokens": 6,
+                              "session_id": sid})
+        status, body = request(raddr, "POST", "/v1/generate", payload,
+                               timeout=60)
+        check(f"{sid} turn answers 200", status == 200, str(body)[:200])
+        toks = json.loads(body)["tokens"]
+        check(f"{sid} turn bit-identical", toks == ref,
+              f"{toks} vs reference {ref}")
+        # Extend the transcript past the cached prefix for the next turn.
+        prompts[sid] = prompts[sid] + toks + [9]
+
+    # Turn 1: every session lands on its home (affinity hits only).
+    for sid in sessions:
+        turn(sid)
+
+    procs["s-replica0"].kill()
+    print("session replica 0 killed")
+    wait_ejected(0)
+
+    # Turns 2 and 3: home-0 sessions fall back least-loaded. On turn 2
+    # the router tries to migrate their state off dead replica 0 and
+    # fails (cold prefill instead); on turn 3 they are already parked on
+    # the fallback, so no migration is attempted. Survivor-homed
+    # sessions keep hitting their home.
+    for _ in (2, 3):
+        for sid in sessions:
+            turn(sid)
+
+    n0 = len(by_home[0])
+    n_other = len(sessions) - n0
+    status, body = request(raddr, "GET", "/stats")
+    stats = json.loads(body)
+    routing = stats["routing"]
+    check("session stats schema_version", stats.get("schema_version") == 2,
+          body[:400])
+    check("routing: affinity accounting",
+          routing["affinity_hits"] == len(sessions) + 2 * n_other
+          and routing["affinity_fallbacks"] == 2 * n0,
+          f"want hits={len(sessions) + 2 * n_other} "
+          f"fallbacks={2 * n0}, got {routing}")
+    check("routing: dead-source migrations fail into cold prefill",
+          routing["migrations_ok"] == 0
+          and routing["migrations_failed"] == n0,
+          f"want failed={n0}, got {routing}")
+
+    # Stall sub-phase: eject replica 1 while leaving it reachable — the
+    # fallback for the session homed (and last landed) there must now
+    # MIGRATE its parked state to replica 2 instead of cold-prefilling.
+    status, body = request(replica_addrs[1], "POST", "/fault",
+                           "stall_ms=2000")
+    check("stall armed on session replica 1", status == 200, body)
+    wait_ejected(1)
+    turn(by_home[1][0])
+    status, body = request(raddr, "GET", "/stats")
+    routing = json.loads(body)["routing"]
+    check("routing: stalled-source migration succeeds",
+          routing["migrations_ok"] == 1
+          and routing["migrations_failed"] == n0
+          and routing["affinity_fallbacks"] == 2 * n0 + 1,
+          f"want ok=1 failed={n0}, got {routing}")
+
+    # Replica 2's own cache proves the handoffs: its homed session
+    # missed once (turn 1) then hit twice, and the migrated session hit
+    # once more. Poll — the engine publishes stats a beat after
+    # answering.
+    deadline = time.time() + 20
+    while True:
+        status, body = request(replica_addrs[2], "GET", "/stats")
+        rstats = json.loads(body)
+        if rstats["state_cache"]["hits"] >= 3:
+            break
+        if time.time() > deadline:
+            raise AssertionError(f"cache hits never reached 3: {body}")
+        time.sleep(0.1)
+    check("replica stats schema_version",
+          rstats.get("schema_version") == 2, body[:400])
+    check("replica 2 cache accounting",
+          rstats["state_cache"]["hits"] == 3
+          and rstats["state_cache"]["misses"] == 1,
+          str(rstats["state_cache"]))
+
+    # Clear the stall so replica 1 can drain cleanly, then shut down.
+    status, _ = request(replica_addrs[1], "POST", "/fault", "", timeout=10)
+    check("stall cleared on session replica 1", status == 200)
+    router.send_signal(signal.SIGTERM)
+    code = router.wait(timeout=60)
+    check("session router exit 0 on SIGTERM", code == 0, f"exit {code}")
+    for i in (1, 2):
+        p = procs[f"s-replica{i}"]
+        p.send_signal(signal.SIGTERM)
+        code = p.wait(timeout=60)
+        check(f"session replica {i} exit 0 on SIGTERM", code == 0,
+              f"exit {code}")
+    procs["s-replica0"].wait()
 
 
 if __name__ == "__main__":

@@ -6,7 +6,10 @@ briefly-trained model, reads the ``SERVE listening on <addr>`` readiness
 line from stdout, then drives the whole serving surface with the Python
 stdlib only:
 
-1.  ``GET /healthz`` and ``GET /stats`` are well-formed JSON;
+1.  ``GET /healthz`` and ``GET /stats`` are well-formed JSON (the
+    latter versioned with ``"schema_version": 2``), and non-2xx
+    answers carry the unified v1 error envelope
+    ``{"error": {"code", "message"[, "retry_after_ms"]}}``;
 2.  concurrent non-streamed ``POST /v1/generate`` requests all succeed
     with the requested token counts;
 3.  a streamed request delivers one JSON line per token plus a final
@@ -152,6 +155,20 @@ def run_checks(proc, args):
     stats = json.loads(body)
     slots = int(stats.get("slots", 0))
     check("stats", status == 200 and slots >= 1, body)
+    check("stats schema_version", stats.get("schema_version") == 2,
+          body[:200])
+
+    # 1b. unified v1 error envelope: every non-2xx JSON answer carries
+    # {"error": {"code", "message"[, "retry_after_ms"]}} with a stable
+    # snake_case code.
+    status, body = post_generate(addr, {"max_tokens": 4})
+    err = json.loads(body).get("error", {})
+    check("400 envelope",
+          status == 400 and err.get("code") == "bad_request", body[:200])
+    status, body = get(addr, "/nope")
+    err = json.loads(body).get("error", {})
+    check("404 envelope",
+          status == 404 and err.get("code") == "not_found", body[:200])
 
     # 2. concurrent non-streamed generations. 429 is the documented
     # backpressure signal (the server runs with a tiny --queue-depth), so
@@ -220,6 +237,12 @@ def run_checks(proc, args):
         t.join()
     statuses = [burst_results[i][0] for i in range(burst)]
     check("overflow bursts 429", statuses.count(429) >= 1, f"{statuses}")
+    body429 = next(burst_results[i][1] for i in range(burst)
+                   if burst_results[i][0] == 429)
+    err = json.loads(body429).get("error", {})
+    check("429 envelope queue_full",
+          err.get("code") == "queue_full"
+          and err.get("retry_after_ms") == 1000, body429[:200])
     check("overflow still serves", statuses.count(200) >= 1, f"{statuses}")
     check("overflow only 200/429",
           all(s in (200, 429) for s in statuses), f"{statuses}")
